@@ -1,0 +1,75 @@
+//! ZO optimizer zoo (the Table-2 axis) as a library example: run every
+//! exported zeroth-order variant on one task from one shared init and
+//! rank them. Shows how the step-program registry makes optimizers
+//! pluggable at the coordinator level.
+//!
+//! ```sh
+//! cargo run --release --example zo_variants -- [--task sst2] [--steps N]
+//! ```
+
+use std::path::PathBuf;
+
+use sparse_mezo::config::{presets, TrainConfig};
+use sparse_mezo::coordinator::lora::LoraTrainer;
+use sparse_mezo::coordinator::trainer::Trainer;
+use sparse_mezo::data::tasks;
+use sparse_mezo::runtime::exec::InitExec;
+use sparse_mezo::runtime::Runtime;
+use sparse_mezo::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let task = args.str_or("task", "sst2");
+    let steps = args.usize_or("steps", 800)?;
+
+    let rt = Runtime::new(&PathBuf::from("artifacts"))?;
+    let model = rt.model("llama_tiny")?.clone();
+    let dataset = tasks::generate(&task, 1234)?;
+    let init = InitExec::load(&rt, &model)?;
+    let base = init.run(&rt, (7, 0x1717))?;
+
+    // every ZO step program exported for this model
+    let mut variants = model.step_variants();
+    variants.retain(|v| presets::is_zeroth_order(v) && v != "smezo_pallas");
+    println!("running {} ZO variants on {task} for {steps} steps each\n", variants.len());
+
+    let mut results: Vec<(String, f64, bool, f64)> = Vec::new();
+    for opt in &variants {
+        let mut cfg = TrainConfig::resolve("llama_tiny", &task, opt, None)?;
+        cfg.steps = steps;
+        cfg.eval_every = (steps / 3).max(1);
+        cfg.eval_cap = 150;
+        let r = if opt == "mezo_lora" {
+            let mut t = LoraTrainer::new(&rt, cfg);
+            t.base_params = Some(base.clone());
+            t.run_on(&model, &dataset)?
+        } else {
+            let mut t = Trainer::new(&rt, cfg);
+            t.initial_override = Some(base.clone());
+            t.run_on(&model, &dataset)?
+        };
+        let acc = r.test.map(|t| t.accuracy()).unwrap_or(0.0);
+        println!(
+            "  {:<22} test {:.3}  ({:.3}s/step{})",
+            presets::display_name(opt),
+            acc,
+            r.sec_per_step,
+            if r.diverged { ", DIVERGED" } else { "" }
+        );
+        results.push((opt.clone(), acc, r.diverged, r.sec_per_step));
+    }
+
+    results.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\nranking:");
+    for (i, (opt, acc, div, _)) in results.iter().enumerate() {
+        println!(
+            "  {}. {:<22} {:.3}{}",
+            i + 1,
+            presets::display_name(opt),
+            acc,
+            if *div { " (diverged)" } else { "" }
+        );
+    }
+    Ok(())
+}

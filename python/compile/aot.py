@@ -1,0 +1,222 @@
+"""AOT export: lower every program in the export plan to HLO text.
+
+This is the ONLY place Python runs — `make artifacts` invokes it once; the
+Rust coordinator then loads `artifacts/*.hlo.txt` through PJRT and never
+touches Python again.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published `xla` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model we export:
+    init      (seed u32[2])                          -> state
+    logits    (state, tokens)                        -> f32[B, V]   (last position)
+    thresh    (state, sparsity f32[1])               -> f32[L]
+    step_<opt> (state, tokens, labels, seed, hypers, thresholds) -> state'
+    pretrain  (pt_state, tokens, seed, hypers)       -> pt_state'
+plus `artifacts/manifest.json` describing layouts, shapes and ABI offsets
+for the Rust side (parsed by rust/src/runtime/manifest.rs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optimizers as O
+from .configs import ModelConfig, default_plan, LORA_RANK
+from .layout import build_layout, build_lora_layout, layout_json, n_params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model(cfg: ModelConfig, variants: list[str], out_dir: str, manifest: dict):
+    layout = build_layout(cfg)
+    p = n_params(layout)
+    n_entries = len(layout)
+    b, t, v = cfg.batch, cfg.seq_len, cfg.vocab
+    a = M.n_lora_params(cfg)
+
+    programs = {}
+
+    def emit(name: str, fn, specs):
+        t0 = time.time()
+        # keep_unused=True: the packed ABI passes seed/thresholds to EVERY
+        # step program even when a variant ignores them (fo_adam uses no
+        # seed; mezo ignores thresholds); without it jax prunes the arg and
+        # the Rust call-site buffer count no longer matches.
+        text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+        fname = f"{cfg.name}__{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  {fname:48s} {len(text)/1e6:6.2f} MB  {time.time()-t0:5.1f}s", flush=True)
+        return fname
+
+    # ---- init: params from seed, slots zeroed. One per optimizer slot
+    # size would be wasteful; init emits ONLY the param vector — Rust
+    # assembles [params | zeros(S) | zeros(K)] host-side (one-time cost).
+    def init_fn(seed):
+        return M.init_params(cfg, layout, seed)
+
+    programs["init"] = {
+        "file": emit("init", init_fn, [_spec((2,), jnp.uint32)]),
+        "out_len": p,
+    }
+
+    # LoRA adapter init (A ~ N, B = 0) for lora_fo / mezo_lora.
+    if any(x in variants for x in ("lora_fo", "mezo_lora")):
+        def init_lora_fn(seed):
+            return M.init_lora_params(cfg, seed)
+
+        programs["init_lora"] = {
+            "file": emit("init_lora", init_lora_fn, [_spec((2,), jnp.uint32)]),
+            "out_len": a,
+        }
+
+    # ---- logits at the last position (evaluation / candidate scoring).
+    # Takes the BARE param vector so one program serves every optimizer's
+    # state (Rust passes a slice-view buffer of the params prefix... PJRT
+    # has no view, so Rust re-uploads params for eval batches — still tiny).
+    def logits_fn(params, tokens):
+        out = M.apply(cfg, layout, params, tokens)
+        return out[:, -1, :]
+
+    programs["logits"] = {
+        "file": emit("logits", logits_fn, [_spec((p,), jnp.float32), _spec((b, t), jnp.int32)]),
+    }
+
+    # logits with LoRA adapters applied (eval for lora_fo / mezo_lora).
+    if any(x in variants for x in ("lora_fo", "mezo_lora")):
+        def logits_lora_fn(params, adapters, tokens):
+            out = M.apply(cfg, layout, params, tokens, lora=M.lora_dict(cfg, adapters))
+            return out[:, -1, :]
+
+        programs["logits_lora"] = {
+            "file": emit(
+                "logits_lora",
+                logits_lora_fn,
+                [_spec((p,), jnp.float32), _spec((a,), jnp.float32), _spec((b, t), jnp.int32)],
+            ),
+        }
+
+    # ---- per-entry thresholds (paper §8.2: percentile per layer, fixed
+    # before training).
+    def thresh_fn(params, sparsity):
+        return O.compute_thresholds(layout, params, sparsity[0])
+
+    programs["thresh"] = {
+        "file": emit(
+            "thresh", thresh_fn, [_spec((p,), jnp.float32), _spec((1,), jnp.float32)]
+        ),
+        "out_len": n_entries,
+    }
+
+    # ---- optimizer steps
+    for opt in variants:
+        step, s = O.make_step(opt, cfg, layout, p)
+        state_len = p + s + O.N_METRICS
+        specs = [
+            _spec((state_len,), jnp.float32),
+            _spec((b, t), jnp.int32),
+            _spec((b,), jnp.int32),
+            _spec((2,), jnp.uint32),
+            _spec((O.N_HYPERS,), jnp.float32),
+            _spec((n_entries,), jnp.float32),
+        ]
+        programs[f"step_{opt}"] = {
+            "file": emit(f"step_{opt}", step, specs),
+            "slots": s,
+            "state_len": state_len,
+        }
+
+    # ---- pretraining step (LM loss, Adam)
+    pt_step, pt_s = O.make_pretrain_step(cfg, layout, p)
+    pt_state_len = p + pt_s + O.N_METRICS
+    programs["pretrain"] = {
+        "file": emit(
+            "pretrain",
+            pt_step,
+            [
+                _spec((pt_state_len,), jnp.float32),
+                _spec((b, t), jnp.int32),
+                _spec((2,), jnp.uint32),
+                _spec((O.N_HYPERS,), jnp.float32),
+            ],
+        ),
+        "slots": pt_s,
+        "state_len": pt_state_len,
+    }
+
+    manifest["models"][cfg.name] = {
+        "family": cfg.family,
+        "size": cfg.size,
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "window": cfg.window,
+        "n_params": p,
+        "n_lora_params": a,
+        "lora_rank": LORA_RANK,
+        "n_entries": n_entries,
+        "n_hypers": O.N_HYPERS,
+        "n_metrics": O.N_METRICS,
+        "layout": layout_json(layout),
+        "lora_layout": layout_json(build_lora_layout(cfg)),
+        "programs": programs,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description="AOT-lower Sparse-MeZO programs to HLO text")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--big", action="store_true", help="also export llama_big (~113M, for the e2e example)")
+    ap.add_argument("--no-pallas", action="store_true", help="skip the pallas-kernel step variant")
+    ap.add_argument("--only", default=None, help="comma-separated model names to export (e.g. llama_tiny)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    plan = default_plan(big=args.big, pallas=not args.no_pallas)
+    manifest = {
+        "version": 1,
+        "hyper_names": ["lr", "eps", "sparsity", "mask_seed", "beta1", "beta2", "adam_eps", "wd"],
+        "metric_names": [
+            "l_plus", "l_minus", "proj_grad", "masked_frac",
+            "update_norm_sq", "train_loss", "accept", "reserved",
+        ],
+        "models": {},
+    }
+    t0 = time.time()
+    for name, (cfg, variants) in plan.entries.items():
+        if args.only and name not in args.only.split(","):
+            continue
+        print(f"[aot] exporting {name}  (P will follow)", flush=True)
+        export_model(cfg, variants, args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time()-t0:.1f}s -> {args.out}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

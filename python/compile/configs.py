@@ -1,0 +1,127 @@
+"""Model-family and size presets + the AOT export plan.
+
+Families map the paper's model zoo onto from-scratch architectures
+(DESIGN.md §2):
+
+  llama   — RMSNorm, RoPE, SwiGLU            (LLaMA-7b/30b analog)
+  mistral — RMSNorm, RoPE, SwiGLU, sliding-window attention (Mistral-7B)
+  opt     — LayerNorm, learned positions, ReLU MLP          (OPT-13b)
+
+Sizes reproduce the paper's scale axis at CPU-feasible magnitudes; `big`
+(~113M) exists for the end-to-end example and is only exported with
+--big (it is the "train a ~100M transformer" driver, not a table workload).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    family: str  # llama | mistral | opt
+    size: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    batch: int
+    window: int = 0  # sliding-window size (mistral); 0 = full causal
+
+    @property
+    def name(self) -> str:
+        return f"{self.family}_{self.size}"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+VOCAB = 512  # shared synthetic vocabulary (rust/src/data/vocab.rs mirrors this)
+
+_SIZES = {
+    # size: (n_layers, d_model, n_heads, d_ff, seq_len, batch)
+    "tiny": (2, 64, 4, 128, 32, 16),
+    "small": (4, 128, 8, 256, 32, 16),
+    "med": (6, 256, 8, 512, 64, 16),
+    "big": (12, 768, 12, 3072, 64, 8),
+}
+
+
+def model_config(family: str, size: str) -> ModelConfig:
+    n_layers, d_model, n_heads, d_ff, seq_len, batch = _SIZES[size]
+    window = seq_len // 2 if family == "mistral" else 0
+    return ModelConfig(
+        family=family,
+        size=size,
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        d_ff=d_ff,
+        vocab=VOCAB,
+        seq_len=seq_len,
+        batch=batch,
+        window=window,
+    )
+
+
+# ZO optimizer variants (paper baselines, Table 1/2) — see optimizers.py.
+ZO_VARIANTS = [
+    "mezo",        # Malladi et al. 2023, dense
+    "smezo",       # this paper: dynamic magnitude mask (jnp fused path)
+    "smezo_large", # Fig. 2c contrast arm: perturb only LARGE weights
+    "smezo_const", # ablation: mask frozen at step 0 (paper §3.2 "Constant Mask")
+    "rmezo",       # random mask at same sparsity (paper's R-MeZO)
+    "zo_sign",     # ZO-SGD-Sign  (Zhang et al. 2024)
+    "zo_cons",     # ZO-SGD-Cons  (Zhang et al. 2024)
+    "zo_adam",     # ZO-SGD-Adam  (Zhang et al. 2024)
+    "zo_adamu",    # ZO-AdaMU     (Jiang et al. 2024) — momentum-adapted perturbation
+    "zo_mom",      # scalar-adaptive ZO (AdaZeta-flavoured)
+    "mezo_lora",   # ZO on LoRA adapters only (paper's MeZO-LoRA)
+]
+FO_VARIANTS = ["fo_sgd", "fo_adam", "lora_fo"]
+ALL_VARIANTS = ZO_VARIANTS + FO_VARIANTS
+
+# LoRA rank used by lora_fo / mezo_lora.
+LORA_RANK = 4
+
+
+@dataclass
+class ExportPlan:
+    """Which (model, optimizer-step) programs `aot.py` lowers."""
+
+    entries: dict = field(default_factory=dict)  # model name -> list of step variants
+
+    def add(self, family: str, size: str, variants: list[str]):
+        cfg = model_config(family, size)
+        self.entries.setdefault(cfg.name, (cfg, []))
+        self.entries[cfg.name][1].extend(v for v in variants if v not in self.entries[cfg.name][1])
+
+
+def default_plan(big: bool = False, pallas: bool = True) -> ExportPlan:
+    plan = ExportPlan()
+    tiny_variants = list(ALL_VARIANTS)
+    if pallas:
+        tiny_variants.insert(2, "smezo_pallas")  # fused-kernel path, tiny only
+    plan.add("llama", "tiny", tiny_variants)
+    # Table 1/2/12 workhorse: every baseline at `small`.
+    plan.add(
+        "llama",
+        "small",
+        [
+            "mezo", "smezo", "smezo_large", "smezo_const", "rmezo", "zo_sign", "zo_cons",
+            "zo_adam", "zo_adamu", "zo_mom", "mezo_lora", "fo_sgd", "fo_adam",
+            "lora_fo",
+        ],
+    )
+    # Tables 3 & 11 (Mistral), Table 13 (OPT).
+    plan.add("mistral", "small", ["mezo", "smezo", "rmezo", "mezo_lora", "fo_adam", "lora_fo"])
+    plan.add("opt", "small", ["mezo", "smezo", "rmezo"])
+    # Table 5 scale axis (+ fo_adam so the e2e example's multitask-tuning
+    # phase runs at this scale too).
+    plan.add("llama", "med", ["mezo", "smezo", "fo_adam"])
+    if big:
+        plan.add("llama", "big", ["mezo", "smezo", "fo_adam"])
+    return plan

@@ -1,0 +1,100 @@
+"""Counter-based PRNG shared by all three layers.
+
+Sparse-MeZO's memory efficiency rests on *regenerating* the perturbation z
+from a seed instead of storing it (MeZO's seed-replay trick, paper §2.2.1 /
+Alg. 2). That only works if every consumer derives bit-identical noise from
+``(seed, layer_id, element_index)``. jax.random's threefry is awkward to
+reproduce inside a Pallas tile or in Rust, so we use an explicit
+counter-based generator:
+
+  * ``lowbias32`` — a well-mixed 32-bit integer finalizer (xor-shift +
+    multiply rounds; same constants as the widely used "lowbias32" hash).
+  * two decorrelated streams per element (different stream salts),
+  * Box–Muller to produce a standard normal.
+
+The identical function is implemented three times — here (plain jnp, used
+by the L2 optimizer steps and the ref oracle), inside the Pallas kernels
+(tile-local, see sparse_perturb.py), and in Rust
+(``rust/src/util/prng.rs``) — and cross-checked by tests at both layers.
+
+All arithmetic is mod-2^32 (uint32 wrap-around).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Stream salts: arbitrary odd constants decorrelating the two uniform
+# streams that feed Box-Muller, and the mask stream used by R-MeZO.
+STREAM_A = 0x9E3779B9  # golden-ratio odd constant
+STREAM_B = 0x85EBCA6B
+STREAM_MASK = 0xC2B2AE35
+
+_TWO_PI = 6.283185307179586
+_INV_2_24 = 1.0 / 16777216.0  # map the top 24 bits into (0, 1)
+
+
+def lowbias32(x: jnp.ndarray) -> jnp.ndarray:
+    """Well-mixed 32-bit finalizer. x must be uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def fold(key: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """Fold ``data`` into ``key`` (both uint32), order-sensitive."""
+    key = key.astype(jnp.uint32)
+    data = data.astype(jnp.uint32)
+    return lowbias32(key ^ (data + jnp.uint32(STREAM_A) + (key << jnp.uint32(6)) + (key >> jnp.uint32(2))))
+
+
+def layer_key(seed_lo, seed_hi, layer_id) -> jnp.ndarray:
+    """Derive the per-(seed, layer) key all element streams hang off."""
+    k = lowbias32(jnp.asarray(seed_lo, jnp.uint32))
+    k = fold(k, jnp.asarray(seed_hi, jnp.uint32))
+    k = fold(k, jnp.asarray(layer_id, jnp.uint32))
+    return k
+
+
+def uniform_bits(key: jnp.ndarray, idx: jnp.ndarray, stream: int) -> jnp.ndarray:
+    """uint32 stream value for flat element index ``idx`` (uint32)."""
+    idx = idx.astype(jnp.uint32)
+    return lowbias32(idx * jnp.uint32(2654435761) ^ key ^ jnp.uint32(stream))
+
+
+def bits_to_unit(bits: jnp.ndarray) -> jnp.ndarray:
+    """Top 24 bits -> float32 in (0, 1); never exactly 0 (safe for log)."""
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(_INV_2_24)
+    return jnp.maximum(u, jnp.float32(5.9604645e-08))
+
+
+def normal(key: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Standard normal for each flat element index via Box-Muller."""
+    u1 = bits_to_unit(uniform_bits(key, idx, STREAM_A))
+    u2 = bits_to_unit(uniform_bits(key, idx, STREAM_B))
+    r = jnp.sqrt(jnp.float32(-2.0) * jnp.log(u1))
+    return r * jnp.cos(jnp.float32(_TWO_PI) * u2)
+
+
+def uniform01(key: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Uniform (0,1) on the mask stream (used for R-MeZO's random mask)."""
+    return bits_to_unit(uniform_bits(key, idx, STREAM_MASK))
+
+
+def segment_normal(seed_lo, seed_hi, layer_id: int, offset: int, n: int) -> jnp.ndarray:
+    """Normal noise for a parameter segment: element indices are *global*
+    within the layer's flat storage so tiled (Pallas) and flat (jnp)
+    evaluation agree element-for-element."""
+    key = layer_key(seed_lo, seed_hi, layer_id)
+    idx = jnp.arange(offset, offset + n, dtype=jnp.uint32)
+    return normal(key, idx)
+
+
+def segment_uniform(seed_lo, seed_hi, layer_id: int, offset: int, n: int) -> jnp.ndarray:
+    key = layer_key(seed_lo, seed_hi, layer_id)
+    idx = jnp.arange(offset, offset + n, dtype=jnp.uint32)
+    return uniform01(key, idx)

@@ -1,0 +1,135 @@
+"""L1 Pallas kernel: fused mask + perturb + matmul.
+
+This is the paper's §3.3 "Calculating the Mask During the Forward Pass"
+re-thought for the TPU memory hierarchy. The paper frees the layer-i mask
+before computing layer i+1 (layer granularity, GPU HBM). On TPU the natural
+granularity is the VMEM tile:
+
+    for each (bm x bk) tile of x and (bk x bn) tile of W:
+        load W tile           (HBM -> VMEM, same traffic as a plain matmul)
+        m  = |W| <= h         (registers/VMEM only — never written back)
+        z  = normal(seed, layer, global element index)   (no HBM traffic)
+        acc += x_tile @ (W_tile + eps * m * z)           (MXU)
+
+The perturbed weight matrix, the mask, and the noise never exist in HBM —
+memory = inference memory, which is the whole point of S-MeZO-EI. The MXU
+still sees a dense (bk x bn) operand, so utilization matches the dense
+matmul schedule; masking adds only VPU elementwise work.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered through the interpreter (bit-exact
+semantics, CPU speed). Real-TPU performance is *estimated* in DESIGN.md §5 /
+EXPERIMENTS.md §Perf from the BlockSpec (VMEM footprint, MXU occupancy).
+
+Noise indexing matches prng.segment_normal: element (k, n) of a (K, N)
+weight matrix has flat index k*N + n, so the tiled kernel and the flat
+oracle agree element-for-element.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import prng
+
+# Default tile sizes. On real TPU these would be multiples of the (8, 128)
+# f32 VREG layout / 128x128 MXU; they stay small here so tests can sweep
+# odd shapes quickly under the interpreter.
+DEFAULT_BM = 16
+DEFAULT_BK = 32
+DEFAULT_BN = 32
+
+
+def _tile_normal(key, row0, col0, bk, bn, n_cols):
+    """Normal noise for the W tile whose top-left element is (row0, col0)
+    of a (K, n_cols) matrix — indices are *global*, so tiling is invisible."""
+    rows = row0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
+    idx = rows * jnp.uint32(n_cols) + cols
+    return prng.normal(key, idx)
+
+
+def _masked_perturb_matmul_kernel(
+    x_ref, w_ref, h_ref, seed_ref, eps_ref, o_ref, *, bk: int, bn: int, n_cols: int, layer_id: int
+):
+    """Grid = (M/bm, N/bn, K/bk); K is the reduction (innermost) axis."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    key = prng.layer_key(seed_ref[0], seed_ref[1], jnp.uint32(layer_id))
+    row0 = (k_step * bk).astype(jnp.uint32)
+    col0 = (pl.program_id(1) * bn).astype(jnp.uint32)
+
+    w = w_ref[...]
+    z = _tile_normal(key, row0, col0, bk, bn, n_cols)
+    m = (jnp.abs(w) <= h_ref[0]).astype(w.dtype)
+    w_pert = w + eps_ref[0] * m * z
+
+    o_ref[...] += jnp.dot(x_ref[...], w_pert, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("layer_id", "bm", "bk", "bn"))
+def masked_perturb_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    threshold: jnp.ndarray,
+    seed: jnp.ndarray,
+    eps: jnp.ndarray,
+    *,
+    layer_id: int = 0,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """y = x @ (W + eps * (|W| <= h) * z(seed, layer_id))   without ever
+    materializing the perturbed W.
+
+    x: (M, K) f32;  w: (K, N) f32;  threshold: scalar or (1,) f32;
+    seed: (2,) uint32;  eps: scalar or (1,) f32 (signed: the -2eps re-perturb
+    of Alg. 1 is just a negative eps).
+    """
+    m_dim, k_dim = x.shape
+    k_dim2, n_dim = w.shape
+    assert k_dim == k_dim2, (x.shape, w.shape)
+    bm_ = min(bm, m_dim)
+    bk_ = min(bk, k_dim)
+    bn_ = min(bn, n_dim)
+    # The interpreter pads partial tiles with garbage rows/cols; keep exact
+    # tiling by shrinking to a divisor (correctness first — perf tiles are
+    # chosen by the AOT export for the real shapes, which are powers of two).
+    while m_dim % bm_:
+        bm_ -= 1
+    while k_dim % bk_:
+        bk_ -= 1
+    while n_dim % bn_:
+        bn_ -= 1
+
+    threshold = jnp.asarray(threshold, jnp.float32).reshape((1,))
+    eps = jnp.asarray(eps, jnp.float32).reshape((1,))
+    seed = jnp.asarray(seed, jnp.uint32).reshape((2,))
+
+    grid = (m_dim // bm_, n_dim // bn_, k_dim // bk_)
+    kernel = functools.partial(
+        _masked_perturb_matmul_kernel, bk=bk_, bn=bn_, n_cols=n_dim, layer_id=layer_id
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec(memory_space=pl.ANY),  # threshold: tiny, replicated
+            pl.BlockSpec(memory_space=pl.ANY),  # seed
+            pl.BlockSpec(memory_space=pl.ANY),  # eps
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n_dim), x.dtype),
+        interpret=True,
+    )(x, w, threshold, seed, eps)

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: seed-replay sparse update.
+
+Alg. 1's final loop — theta <- theta - lr * proj_grad * m(theta) (.) z —
+implemented tile-wise over the *flat* parameter segment of one layer. The
+mask is recomputed from the current weights and z is regenerated from the
+counter PRNG, so neither consumes memory (MeZO's seed-replay, made sparse).
+
+Grid is 1-D over flat tiles; element index is global within the layer, so
+the result is bit-identical to ref.sparse_update regardless of tile size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import prng
+
+DEFAULT_BLOCK = 1024
+
+
+def _sparse_update_kernel(w_ref, h_ref, seed_ref, scale_ref, o_ref, *, block: int, layer_id: int):
+    t = pl.program_id(0)
+    key = prng.layer_key(seed_ref[0], seed_ref[1], jnp.uint32(layer_id))
+    idx = (t * block).astype(jnp.uint32) + jax.lax.broadcasted_iota(jnp.uint32, (block,), 0)
+    z = prng.normal(key, idx)
+    w = w_ref[...]
+    m = (jnp.abs(w) <= h_ref[0]).astype(w.dtype)
+    # scale = lr * proj_grad, computed once by the coordinator-side step.
+    o_ref[...] = w - scale_ref[0] * m * z
+
+
+@functools.partial(jax.jit, static_argnames=("layer_id", "block"))
+def sparse_update(
+    w_flat: jnp.ndarray,
+    threshold: jnp.ndarray,
+    seed: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    layer_id: int = 0,
+    block: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """theta' = theta - scale * (|theta| <= h) * z(seed, layer_id).
+
+    w_flat: (n,) f32 — one layer's flat parameter segment.
+    scale = lr * proj_grad (sign included).
+    """
+    (n,) = w_flat.shape
+    blk = min(block, n)
+    while n % blk:
+        blk -= 1
+    threshold = jnp.asarray(threshold, jnp.float32).reshape((1,))
+    seed = jnp.asarray(seed, jnp.uint32).reshape((2,))
+    scale = jnp.asarray(scale, jnp.float32).reshape((1,))
+    kernel = functools.partial(_sparse_update_kernel, block=blk, layer_id=layer_id)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda t: (t,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((n,), w_flat.dtype),
+        interpret=True,
+    )(w_flat, threshold, seed, scale)

@@ -1,0 +1,116 @@
+"""Flat-parameter layout: the single source of truth for the L2<->L3 ABI.
+
+Every model's parameters live in one flat f32[P] vector (DESIGN.md §3.1).
+The layout — an ordered list of (name, shape, kind, offset) entries — is
+built here, used by model.py to slice views, by optimizers.py to apply
+per-entry masks/noise, and serialized into artifacts/manifest.json so the
+Rust coordinator can do checkpointing, memory accounting and reporting
+without ever importing Python.
+
+kinds:
+  matrix — 2-D weights: maskable by S-MeZO (per-entry percentile threshold)
+  vector — 1-D params (norm gains, biases, learned positions): always dense
+Each entry's index doubles as its PRNG ``layer_id`` so noise is stable
+whether generated flat (L2), per-tile (L1 Pallas) or in tests (Rust).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .configs import ModelConfig, LORA_RANK
+
+
+@dataclass(frozen=True)
+class Entry:
+    name: str
+    shape: tuple
+    kind: str  # "matrix" | "vector"
+    offset: int
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def build_layout(cfg: ModelConfig) -> list[Entry]:
+    """Parameter order is deliberate: embedding first, then per-layer blocks
+    in execution order, then final norm + LM head. Rust mirrors this order
+    when reporting per-layer statistics."""
+    entries: list[Entry] = []
+    off = 0
+
+    def add(name, shape, kind):
+        nonlocal off
+        e = Entry(name, tuple(shape), kind, off)
+        entries.append(e)
+        off += e.size
+
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    add("embed.tok", (v, d), "matrix")
+    if cfg.family == "opt":
+        add("embed.pos", (cfg.seq_len, d), "matrix")
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        add(p + "attn_norm", (d,), "vector")
+        add(p + "attn.wq", (d, d), "matrix")
+        add(p + "attn.wk", (d, d), "matrix")
+        add(p + "attn.wv", (d, d), "matrix")
+        add(p + "attn.wo", (d, d), "matrix")
+        add(p + "mlp_norm", (d,), "vector")
+        if cfg.family == "opt":
+            add(p + "mlp.w1", (d, ff), "matrix")
+            add(p + "mlp.w2", (ff, d), "matrix")
+        else:  # llama / mistral: SwiGLU
+            add(p + "mlp.wg", (d, ff), "matrix")
+            add(p + "mlp.wu", (d, ff), "matrix")
+            add(p + "mlp.wd", (ff, d), "matrix")
+    add("final_norm", (d,), "vector")
+    add("head", (d, v), "matrix")
+    return entries
+
+
+def n_params(layout: list[Entry]) -> int:
+    return layout[-1].offset + layout[-1].size
+
+
+def matrix_entries(layout: list[Entry]) -> list[Entry]:
+    return [e for e in layout if e.kind == "matrix"]
+
+
+def build_lora_layout(cfg: ModelConfig) -> list[Entry]:
+    """Adapter layout: rank-r A/B pairs on every attention wq and wv
+    (the standard LoRA placement). Offsets are relative to the adapter
+    segment, which the state packs immediately after the base params."""
+    entries: list[Entry] = []
+    off = 0
+
+    def add(name, shape):
+        nonlocal off
+        e = Entry(name, tuple(shape), "matrix", off)
+        entries.append(e)
+        off += e.size
+
+    d, r = cfg.d_model, LORA_RANK
+    for i in range(cfg.n_layers):
+        for which in ("wq", "wv"):
+            add(f"layer{i}.attn.{which}.lora_a", (d, r))
+            add(f"layer{i}.attn.{which}.lora_b", (r, d))
+    return entries
+
+
+def layout_json(layout: list[Entry]) -> list[dict]:
+    return [
+        {
+            "name": e.name,
+            "shape": list(e.shape),
+            "kind": e.kind,
+            "offset": e.offset,
+            "size": e.size,
+            "layer_id": i,
+        }
+        for i, e in enumerate(layout)
+    ]

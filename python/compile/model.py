@@ -1,0 +1,223 @@
+"""L2: the transformer model families, as pure functions over a flat f32[P].
+
+Three decoder-only families (DESIGN.md §2) sharing one code path with
+family-specific norm / position / MLP / attention-window choices:
+
+  llama   — RMSNorm + RoPE + SwiGLU
+  mistral — RMSNorm + RoPE + SwiGLU + sliding-window causal attention
+  opt     — LayerNorm + learned absolute positions + ReLU MLP
+
+Conventions (mirrored by the Rust data layer):
+  * pad id = 0; sequences are LEFT-padded so the answer is predicted at the
+    final position (classification-as-LM, the MeZO protocol).
+  * attention ignores pad positions; RoPE / learned positions use the
+    pad-invariant position index cumsum(not_pad) - 1.
+  * ``apply`` returns full logits [B, T, V]; classification loss reads
+    position T-1, LM (pretraining) loss reads all shifted positions.
+
+The EI (efficient-implementation) hook: ``apply`` takes a ``perturb``
+callback mapping (entry, weight) -> weight, so the S-MeZO mask+perturb can
+happen *as each weight is consumed* — the paper's §3.3 — either fused by
+XLA (jnp path) or via the L1 Pallas kernel (``use_pallas`` path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .layout import Entry, build_lora_layout, build_layout
+
+NEG_INF = -1e9
+
+
+def unflatten(layout: list[Entry], flat: jnp.ndarray) -> dict:
+    return {e.name: flat[e.offset : e.offset + e.size].reshape(e.shape) for e in layout}
+
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def layernorm(x, g):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def rope(x, positions):
+    """Rotary embedding. x: [B, T, H, Dh], positions: [B, T] (pad-invariant)."""
+    b, t, h, dh = x.shape
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = positions[:, :, None, None].astype(jnp.float32) * freqs[None, None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, not_pad, positions, window: int):
+    """Causal (+optional sliding-window) attention with pad masking.
+    q,k,v: [B, T, H, Dh]; not_pad: [B, T] bool; positions: [B, T] int32."""
+    b, t, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    allowed = j <= i
+    if window > 0:
+        allowed = allowed & (j > i - window)
+    bias = jnp.where(allowed[None, None, :, :], 0.0, NEG_INF)
+    bias = bias + jnp.where(not_pad[:, None, None, :], 0.0, NEG_INF)
+    probs = jax.nn.softmax(scores + bias, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(b, t, h * dh)
+
+
+def apply(
+    cfg: ModelConfig,
+    layout: list[Entry],
+    flat: jnp.ndarray,
+    tokens: jnp.ndarray,
+    perturb=None,
+    matmul=None,
+    lora: dict | None = None,
+) -> jnp.ndarray:
+    """Forward pass -> logits [B, T, V].
+
+    perturb: optional (entry, w) -> w hook (S-MeZO EI mask+perturb).
+    matmul : optional (entry, x2d, w) -> y2d hook; when set, *matrix*
+             weights are consumed through it instead of jnp (@) — this is
+             how the Pallas fused kernel is routed in.
+    lora   : optional {name: (A, B)} adapter dict applied to wq/wv.
+    """
+    params = unflatten(layout, flat)
+    by_name = {e.name: e for e in layout}
+
+    def w(name):
+        x = params[name]
+        if perturb is not None:
+            x = perturb(by_name[name], x)
+        return x
+
+    def mm(name, x):
+        """x: [..., K] @ weight(name): [K, N] with optional hooks/LoRA."""
+        ent = by_name[name]
+        shape = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if matmul is not None and ent.kind == "matrix":
+            y2 = matmul(ent, x2, params[name])
+        else:
+            y2 = x2 @ w(name)
+        if lora is not None and name + ".lora_a" in lora:
+            a = lora[name + ".lora_a"]
+            bmat = lora[name + ".lora_b"]
+            y2 = y2 + (x2 @ a) @ bmat
+        return y2.reshape(*shape, -1)
+
+    b, t = tokens.shape
+    not_pad = tokens != 0
+    positions = jnp.maximum(jnp.cumsum(not_pad.astype(jnp.int32), axis=1) - 1, 0)
+
+    # Token embedding via one-hot matmul so the embedding matrix flows
+    # through the same hook machinery (perturb / Pallas matmul) as every
+    # other matrix.
+    onehot = jax.nn.one_hot(tokens, cfg.vocab, dtype=jnp.float32)
+    h = mm("embed.tok", onehot)
+    if cfg.family == "opt":
+        pos_tab = w("embed.pos")
+        h = h + pos_tab[jnp.minimum(positions, cfg.seq_len - 1)]
+
+    norm = layernorm if cfg.family == "opt" else rmsnorm
+    use_rope = cfg.family != "opt"
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        x = norm(h, w(p + "attn_norm"))
+        q = mm(p + "attn.wq", x).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = mm(p + "attn.wk", x).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = mm(p + "attn.wv", x).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        if use_rope:
+            q, k = rope(q, positions), rope(k, positions)
+        attn = _attention(q, k, v, not_pad, positions, cfg.window)
+        h = h + mm(p + "attn.wo", attn)
+
+        x = norm(h, w(p + "mlp_norm"))
+        if cfg.family == "opt":
+            h = h + mm(p + "mlp.w2", jax.nn.relu(mm(p + "mlp.w1", x)))
+        else:
+            g = jax.nn.silu(mm(p + "mlp.wg", x))
+            u = mm(p + "mlp.wu", x)
+            h = h + mm(p + "mlp.wd", g * u)
+
+    h = norm(h, w("final_norm"))
+    return mm("head", h)
+
+
+def cls_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Answer-token cross-entropy at the final position (MeZO protocol).
+    logits: [B, T, V]; labels: [B] token ids."""
+    last = logits[:, -1, :]
+    logp = jax.nn.log_softmax(last, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def lm_loss(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy over non-pad targets (pretraining)."""
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    targets = tokens[:, 1:]
+    tok_lp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != 0).astype(jnp.float32)
+    return -jnp.sum(tok_lp * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_params(cfg: ModelConfig, layout: list[Entry], seed: jnp.ndarray) -> jnp.ndarray:
+    """Fresh init from the shared counter PRNG (seed: uint32[2]).
+
+    Matrices: N(0, 0.02) except residual-output projections (wo, wd/w2,
+    head) which get the depth-scaled 0.02/sqrt(2L); norm gains: 1."""
+    from .kernels import prng
+
+    chunks = []
+    scale_names = ("attn.wo", "mlp.wd", "mlp.w2")
+    depth_scale = 1.0 / jnp.sqrt(jnp.float32(2 * cfg.n_layers))
+    for i, e in enumerate(layout):
+        if e.kind == "vector":
+            chunks.append(jnp.ones((e.size,), jnp.float32))
+        else:
+            std = jnp.float32(0.02)
+            if any(s in e.name for s in scale_names):
+                std = std * depth_scale
+            z = prng.segment_normal(seed[0], seed[1], i, 0, e.size)
+            chunks.append(std * z)
+    return jnp.concatenate(chunks)
+
+
+def init_lora_params(cfg: ModelConfig, seed: jnp.ndarray) -> jnp.ndarray:
+    """LoRA init: A ~ N(0, 0.02), B = 0 (adapters start as identity)."""
+    from .kernels import prng
+
+    lora_layout = build_lora_layout(cfg)
+    chunks = []
+    for i, e in enumerate(lora_layout):
+        if e.name.endswith("lora_b"):
+            chunks.append(jnp.zeros((e.size,), jnp.float32))
+        else:
+            # offset layer ids so adapter noise never collides with base
+            z = prng.segment_normal(seed[0], seed[1], 4096 + i, 0, e.size)
+            chunks.append(0.02 * z)
+    return jnp.concatenate(chunks)
+
+
+def lora_dict(cfg: ModelConfig, adapters_flat: jnp.ndarray) -> dict:
+    lora_layout = build_lora_layout(cfg)
+    return {
+        e.name: adapters_flat[e.offset : e.offset + e.size].reshape(e.shape)
+        for e in lora_layout
+    }
+
+
+def n_lora_params(cfg: ModelConfig) -> int:
+    ll = build_lora_layout(cfg)
+    return ll[-1].offset + ll[-1].size

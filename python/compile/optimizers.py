@@ -1,0 +1,514 @@
+"""L2: functional optimizer steps — one exported XLA program per variant.
+
+Every step shares the packed-state ABI (DESIGN.md §3.1):
+
+    state  = [ params f32[P] | opt slots f32[S] | metrics f32[K] ]
+    step(state, tokens i32[B,T], labels i32[B], seed u32[2],
+         hypers f32[8], thresholds f32[L]) -> state'
+
+hypers = [lr, eps, sparsity, mask_seed, beta1, beta2, adam_eps, wd]
+thresholds = per-layout-entry magnitude thresholds (from the `thresh`
+program; entries of kind "vector" get +inf, i.e. dense).
+
+The ZO family implements Algorithm 1 of the paper in functional form: the
+perturbation z is *regenerated* (never stored) from the counter PRNG at
+each of its three uses (+eps, -eps, update) — the seed-replay trick that
+keeps memory at inference level. The sparse variants differ only in the
+mask m folded into z_hat = m (.) z:
+
+    mezo        m = 1
+    smezo       m = |theta| <= h          (dynamic, recomputed every step)
+    smezo_const m frozen from step-0 weights (ablation, paper §3.2)
+    rmezo       m ~ Bernoulli(1 - sparsity), fixed by mask_seed
+    smezo_pallas = smezo but the forward consumes weights through the
+                   fused L1 Pallas kernel (mask/perturb per VMEM tile)
+
+Metric tail (K = 8):
+    [l_plus, l_minus, proj_grad, masked_frac, update_norm_sq, train_loss,
+     accept (zo_cons), reserved]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import ModelConfig
+from .kernels import prng, ref
+from .layout import Entry
+
+N_HYPERS = 8
+N_METRICS = 8
+
+H_LR, H_EPS, H_SPARSITY, H_MASK_SEED, H_BETA1, H_BETA2, H_ADAM_EPS, H_WD = range(8)
+
+
+# --------------------------------------------------------------------------
+# mask + noise machinery (flat-vector view)
+# --------------------------------------------------------------------------
+
+def _entry_noise(e: Entry, i: int, seed):
+    return prng.segment_normal(seed[0], seed[1], i, 0, e.size)
+
+
+def flat_noise(layout: list[Entry], seed) -> jnp.ndarray:
+    """z ~ N(0, I_P), per-entry streams (layer_id = entry index)."""
+    return jnp.concatenate([_entry_noise(e, i, seed) for i, e in enumerate(layout)])
+
+
+def flat_mask(
+    layout: list[Entry],
+    params: jnp.ndarray,
+    thresholds: jnp.ndarray,
+    mode: str,
+    hypers: jnp.ndarray,
+) -> jnp.ndarray:
+    """m in {0,1}^P. mode: dense | magnitude | random."""
+    if mode == "dense":
+        return jnp.ones_like(params)
+    parts = []
+    for i, e in enumerate(layout):
+        w = params[e.offset : e.offset + e.size]
+        if e.kind != "matrix":
+            parts.append(jnp.ones((e.size,), jnp.float32))
+        elif mode == "magnitude":
+            parts.append((jnp.abs(w) <= thresholds[i]).astype(jnp.float32))
+        elif mode == "large":
+            # Fig. 2c's contrast arm: perturb/update ONLY the large weights
+            # (the paper shows this arm fails to recover accuracy).
+            parts.append((jnp.abs(w) > thresholds[i]).astype(jnp.float32))
+        elif mode == "random":
+            keep = 1.0 - hypers[H_SPARSITY]
+            u = prng.segment_uniform(
+                hypers[H_MASK_SEED].astype(jnp.uint32), jnp.uint32(0x52), i, 0, e.size
+            )
+            parts.append((u < keep).astype(jnp.float32))
+        else:
+            raise ValueError(mode)
+    return jnp.concatenate(parts)
+
+
+def compute_thresholds(layout: list[Entry], params: jnp.ndarray, sparsity) -> jnp.ndarray:
+    """The `thresh` program body: per-entry percentile thresholds
+    (paper §8.2 — fixed before training, dynamic mask thereafter)."""
+    out = []
+    for e in layout:
+        w = params[e.offset : e.offset + e.size]
+        if e.kind == "matrix":
+            out.append(ref.percentile_threshold(w, sparsity))
+        else:
+            out.append(jnp.float32(3.0e38))  # vectors: always dense
+    return jnp.stack(out)
+
+
+# --------------------------------------------------------------------------
+# packed-state helpers
+# --------------------------------------------------------------------------
+
+def split_state(state, p: int, s: int):
+    return state[:p], state[p : p + s], state[p + s :]
+
+
+def pack_state(params, slots, metrics):
+    return jnp.concatenate([params, slots, metrics])
+
+
+def _metrics(l_plus=0.0, l_minus=0.0, g=0.0, masked_frac=1.0, upd2=0.0, loss=0.0, accept=1.0):
+    return jnp.stack(
+        [
+            jnp.asarray(v, jnp.float32)
+            for v in (l_plus, l_minus, g, masked_frac, upd2, loss, accept, 0.0)
+        ]
+    )
+
+
+# --------------------------------------------------------------------------
+# the ZO core (Algorithm 1)
+# --------------------------------------------------------------------------
+
+def _zo_core(cfg, layout, params, tokens, labels, seed, hypers, thresholds, mode):
+    """Shared S/MeZO machinery: returns (g, z_hat, losses, masked_frac).
+
+    Functionally perturbs params with +eps and -eps using the SAME
+    regenerated z_hat (the two PerturbParameters calls of Alg. 1), and
+    the projected gradient g = (l+ - l-) / 2 eps."""
+    eps = hypers[H_EPS]
+    z = flat_noise(layout, seed)
+    m = flat_mask(layout, params, thresholds, mode, hypers)
+    z_hat = m * z
+
+    def loss_at(p):
+        return M.cls_loss(M.apply(cfg, layout, p, tokens), labels)
+
+    l_plus = loss_at(params + eps * z_hat)
+    l_minus = loss_at(params - eps * z_hat)
+    g = (l_plus - l_minus) / (2.0 * eps)
+    masked_frac = jnp.sum(m) / m.shape[0]
+    return g, z_hat, l_plus, l_minus, masked_frac
+
+
+def _sgd_like_step(mode):
+    """mezo / smezo / rmezo: theta' = theta - lr * g * z_hat."""
+
+    def step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+        p, s, k = p_dims
+        params, slots, _ = split_state(state, p, s)
+        g, z_hat, lp, lm, mf = _zo_core(
+            cfg, layout, params, tokens, labels, seed, hypers, thresholds, mode
+        )
+        upd = hypers[H_LR] * g * z_hat
+        new_params = params - upd
+        mets = _metrics(lp, lm, g, mf, jnp.sum(upd * upd), 0.5 * (lp + lm))
+        return pack_state(new_params, slots, mets)
+
+    return step
+
+
+def _smezo_const_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """Constant-mask ablation (paper §3.2): the mask is computed once from
+    the step-0 weights and *stored* in the opt slots — exactly the memory
+    overhead the paper's dynamic mask avoids (cf. Table 4 vanilla row)."""
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+    t = slots[p]  # slot P holds the "mask initialized" flag
+    stored = slots[:p]
+    fresh = flat_mask(layout, params, thresholds, "magnitude", hypers)
+    m = jnp.where(t > 0.5, stored, fresh)
+
+    eps = hypers[H_EPS]
+    z_hat = m * flat_noise(layout, seed)
+
+    def loss_at(pv):
+        return M.cls_loss(M.apply(cfg, layout, pv, tokens), labels)
+
+    lp = loss_at(params + eps * z_hat)
+    lm = loss_at(params - eps * z_hat)
+    g = (lp - lm) / (2.0 * eps)
+    upd = hypers[H_LR] * g * z_hat
+    new_slots = jnp.concatenate([m, jnp.ones((1,), jnp.float32)])
+    mets = _metrics(lp, lm, g, jnp.sum(m) / p, jnp.sum(upd * upd), 0.5 * (lp + lm))
+    return pack_state(params - upd, new_slots, mets)
+
+
+def _smezo_pallas_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """S-MeZO with the forward pass consuming matrix weights through the
+    fused L1 kernel (mask + perturb + matmul per tile, §3.3). The update
+    uses the L1 sparse_update kernel per entry. Numerics must equal the
+    plain smezo step (tested)."""
+    from .kernels import sparse_perturb, sparse_update
+
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+    eps = hypers[H_EPS]
+    by_idx = {e.name: i for i, e in enumerate(layout)}
+
+    def run(sign):
+        def matmul(e: Entry, x2, w):
+            i = by_idx[e.name]
+            return sparse_perturb.masked_perturb_matmul(
+                x2, w, thresholds[i], seed, sign * eps, layer_id=i
+            )
+
+        def perturb(e: Entry, w):
+            # Matrices not consumed as a matmul operand (e.g. OPT's
+            # positional table, used as a lookup) still get the magnitude
+            # mask; vectors are dense — matching flat_mask exactly.
+            i = by_idx[e.name]
+            z = _entry_noise(e, i, seed).reshape(e.shape)
+            if e.kind == "matrix":
+                m = (jnp.abs(w) <= thresholds[i]).astype(w.dtype)
+                return w + sign * eps * m * z
+            return w + sign * eps * z
+
+        logits = M.apply(cfg, layout, params, tokens, perturb=perturb, matmul=matmul)
+        return M.cls_loss(logits, labels)
+
+    lp = run(1.0)
+    lm = run(-1.0)
+    g = (lp - lm) / (2.0 * eps)
+    scale = hypers[H_LR] * g
+
+    parts = []
+    for i, e in enumerate(layout):
+        w = params[e.offset : e.offset + e.size]
+        if e.kind == "matrix":
+            parts.append(sparse_update.sparse_update(w, thresholds[i], seed, scale, layer_id=i))
+        else:
+            z = _entry_noise(e, i, seed)
+            parts.append(w - scale * z)
+    new_params = jnp.concatenate(parts)
+    mets = _metrics(lp, lm, g, 0.0, 0.0, 0.5 * (lp + lm))
+    return pack_state(new_params, slots, mets)
+
+
+def _zo_sign_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """ZO-SGD-Sign (Zhang et al. 2024): update with the sign of the
+    estimated gradient, theta' = theta - lr * sign(g * z)."""
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+    g, z_hat, lp, lm, mf = _zo_core(
+        cfg, layout, params, tokens, labels, seed, hypers, thresholds, "dense"
+    )
+    upd = hypers[H_LR] * jnp.sign(g * z_hat)
+    mets = _metrics(lp, lm, g, mf, jnp.sum(upd * upd), 0.5 * (lp + lm))
+    return pack_state(params - upd, slots, mets)
+
+
+def _zo_cons_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """ZO-SGD-Cons (Zhang et al. 2024): conservative step — evaluate the
+    candidate update and keep it only if it does not increase the batch
+    loss (a third forward pass)."""
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+    g, z_hat, lp, lm, mf = _zo_core(
+        cfg, layout, params, tokens, labels, seed, hypers, thresholds, "dense"
+    )
+    cand = params - hypers[H_LR] * g * z_hat
+    l_cand = M.cls_loss(M.apply(cfg, layout, cand, tokens), labels)
+    l_base = 0.5 * (lp + lm)  # unperturbed-loss proxy already in hand
+    accept = (l_cand <= l_base).astype(jnp.float32)
+    new_params = jnp.where(accept > 0.5, cand, params)
+    upd = new_params - params
+    mets = _metrics(lp, lm, g, mf, jnp.sum(upd * upd), l_cand, accept)
+    return pack_state(new_params, slots, mets)
+
+
+def _zo_adam_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """ZO-SGD-Adam (Zhang et al. 2024): Adam moments over the ZO gradient
+    estimate g*z. Slots: [m f32[P] | v f32[P] | t]."""
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+    m_t, v_t, t = slots[:p], slots[p : 2 * p], slots[2 * p]
+    g, z_hat, lp, lm, mf = _zo_core(
+        cfg, layout, params, tokens, labels, seed, hypers, thresholds, "dense"
+    )
+    grad = g * z_hat
+    b1, b2 = hypers[H_BETA1], hypers[H_BETA2]
+    t1 = t + 1.0
+    m_n = b1 * m_t + (1.0 - b1) * grad
+    v_n = b2 * v_t + (1.0 - b2) * grad * grad
+    m_hat = m_n / (1.0 - jnp.power(b1, t1))
+    v_hat = v_n / (1.0 - jnp.power(b2, t1))
+    upd = hypers[H_LR] * m_hat / (jnp.sqrt(v_hat) + hypers[H_ADAM_EPS])
+    new_slots = jnp.concatenate([m_n, v_n, t1[None]])
+    mets = _metrics(lp, lm, g, mf, jnp.sum(upd * upd), 0.5 * (lp + lm))
+    return pack_state(params - upd, new_slots, mets)
+
+
+def _zo_adamu_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """ZO-AdaMU (Jiang et al. 2024), simplified: the *perturbation* is
+    adapted by mixing simulated momentum into z — z_hat = (1-a) z + a m_t —
+    and the update applies momentum smoothing. Slots: [mom f32[P] | t]."""
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+    mom, t = slots[:p], slots[p]
+    alpha = 0.2
+    eps = hypers[H_EPS]
+    z = flat_noise(layout, seed)
+    mom_norm = jnp.sqrt(jnp.sum(mom * mom) / p)
+    z_hat = jnp.where(t > 0.5, (1.0 - alpha) * z + alpha * mom / (mom_norm + 1e-8), z)
+
+    def loss_at(pv):
+        return M.cls_loss(M.apply(cfg, layout, pv, tokens), labels)
+
+    lp = loss_at(params + eps * z_hat)
+    lm = loss_at(params - eps * z_hat)
+    g = (lp - lm) / (2.0 * eps)
+    grad = g * z_hat
+    b1 = hypers[H_BETA1]
+    mom_n = b1 * mom + (1.0 - b1) * grad
+    upd = hypers[H_LR] * mom_n
+    new_slots = jnp.concatenate([mom_n, (t + 1.0)[None]])
+    mets = _metrics(lp, lm, g, 1.0, jnp.sum(upd * upd), 0.5 * (lp + lm))
+    return pack_state(params - upd, new_slots, mets)
+
+
+def _zo_mom_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """Scalar-adaptive ZO (AdaZeta-flavoured): a single second-moment
+    scalar v over the projected gradient rescales the step.
+    Slots: [v, t]."""
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+    v, t = slots[0], slots[1]
+    g, z_hat, lp, lm, mf = _zo_core(
+        cfg, layout, params, tokens, labels, seed, hypers, thresholds, "dense"
+    )
+    b2 = hypers[H_BETA2]
+    v_n = b2 * v + (1.0 - b2) * g * g
+    v_hat = v_n / (1.0 - jnp.power(b2, t + 1.0))
+    upd = hypers[H_LR] * g / (jnp.sqrt(v_hat) + hypers[H_ADAM_EPS]) * z_hat
+    new_slots = jnp.stack([v_n, t + 1.0])
+    mets = _metrics(lp, lm, g, mf, jnp.sum(upd * upd), 0.5 * (lp + lm))
+    return pack_state(params - upd, new_slots, mets)
+
+
+def _mezo_lora_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """MeZO-LoRA: ZO perturbs/updates ONLY the adapters; base frozen.
+    State: [base P | adapters A | metrics]."""
+    p, s, k = p_dims  # here s == A (adapter count)
+    base, adapters, _ = split_state(state, p, s)
+    eps = hypers[H_EPS]
+    z = prng.segment_normal(seed[0], seed[1], 8191, 0, s)
+
+    def loss_at(ad):
+        logits = M.apply(cfg, layout, base, tokens, lora=M.lora_dict(cfg, ad))
+        return M.cls_loss(logits, labels)
+
+    lp = loss_at(adapters + eps * z)
+    lm = loss_at(adapters - eps * z)
+    g = (lp - lm) / (2.0 * eps)
+    upd = hypers[H_LR] * g * z
+    mets = _metrics(lp, lm, g, s / (p + s), jnp.sum(upd * upd), 0.5 * (lp + lm))
+    return pack_state(base, adapters - upd, mets)
+
+
+# --------------------------------------------------------------------------
+# first-order baselines
+# --------------------------------------------------------------------------
+
+def _fo_sgd_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+
+    def loss_fn(pv):
+        return M.cls_loss(M.apply(cfg, layout, pv, tokens), labels)
+
+    loss, grad = jax.value_and_grad(loss_fn)(params)
+    upd = hypers[H_LR] * grad
+    mets = _metrics(loss, loss, 0.0, 1.0, jnp.sum(upd * upd), loss)
+    return pack_state(params - upd, slots, mets)
+
+
+def _fo_adam_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    p, s, k = p_dims
+    params, slots, _ = split_state(state, p, s)
+    m_t, v_t, t = slots[:p], slots[p : 2 * p], slots[2 * p]
+
+    def loss_fn(pv):
+        return M.cls_loss(M.apply(cfg, layout, pv, tokens), labels)
+
+    loss, grad = jax.value_and_grad(loss_fn)(params)
+    b1, b2 = hypers[H_BETA1], hypers[H_BETA2]
+    t1 = t + 1.0
+    m_n = b1 * m_t + (1.0 - b1) * grad
+    v_n = b2 * v_t + (1.0 - b2) * grad * grad
+    m_hat = m_n / (1.0 - jnp.power(b1, t1))
+    v_hat = v_n / (1.0 - jnp.power(b2, t1))
+    upd = hypers[H_LR] * (m_hat / (jnp.sqrt(v_hat) + hypers[H_ADAM_EPS]) + hypers[H_WD] * params)
+    new_slots = jnp.concatenate([m_n, v_n, t1[None]])
+    mets = _metrics(loss, loss, 0.0, 1.0, jnp.sum(upd * upd), loss)
+    return pack_state(params - upd, new_slots, mets)
+
+
+def _lora_fo_step(cfg, layout, p_dims, state, tokens, labels, seed, hypers, thresholds):
+    """First-order LoRA: Adam on adapters only.
+    State: [base P | adapters A | m A | v A | t | metrics]; S = 3A + 1
+    counting the adapters themselves as trainable state."""
+    p, s, k = p_dims
+    a = (s - 1) // 3
+    base = state[:p]
+    adapters = state[p : p + a]
+    m_t = state[p + a : p + 2 * a]
+    v_t = state[p + 2 * a : p + 3 * a]
+    t = state[p + 3 * a]
+
+    def loss_fn(ad):
+        logits = M.apply(cfg, layout, base, tokens, lora=M.lora_dict(cfg, ad))
+        return M.cls_loss(logits, labels)
+
+    loss, grad = jax.value_and_grad(loss_fn)(adapters)
+    b1, b2 = hypers[H_BETA1], hypers[H_BETA2]
+    t1 = t + 1.0
+    m_n = b1 * m_t + (1.0 - b1) * grad
+    v_n = b2 * v_t + (1.0 - b2) * grad * grad
+    m_hat = m_n / (1.0 - jnp.power(b1, t1))
+    v_hat = v_n / (1.0 - jnp.power(b2, t1))
+    upd = hypers[H_LR] * m_hat / (jnp.sqrt(v_hat) + hypers[H_ADAM_EPS])
+    mets = _metrics(loss, loss, 0.0, 1.0, jnp.sum(upd * upd), loss)
+    return jnp.concatenate([base, adapters - upd, m_n, v_n, t1[None], mets])
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def slot_count(name: str, p: int, cfg: ModelConfig) -> int:
+    a = M.n_lora_params(cfg)
+    return {
+        "mezo": 0,
+        "smezo": 0,
+        "smezo_large": 0,
+        "smezo_pallas": 0,
+        "smezo_const": p + 1,
+        "rmezo": 0,
+        "zo_sign": 0,
+        "zo_cons": 0,
+        "zo_adam": 2 * p + 1,
+        "zo_adamu": p + 1,
+        "zo_mom": 2,
+        "mezo_lora": a,
+        "fo_sgd": 0,
+        "fo_adam": 2 * p + 1,
+        "lora_fo": 3 * a + 1,
+    }[name]
+
+
+_STEPS = {
+    "mezo": _sgd_like_step("dense"),
+    "smezo": _sgd_like_step("magnitude"),
+    "smezo_large": _sgd_like_step("large"),
+    "smezo_pallas": _smezo_pallas_step,
+    "smezo_const": _smezo_const_step,
+    "rmezo": _sgd_like_step("random"),
+    "zo_sign": _zo_sign_step,
+    "zo_cons": _zo_cons_step,
+    "zo_adam": _zo_adam_step,
+    "zo_adamu": _zo_adamu_step,
+    "zo_mom": _zo_mom_step,
+    "mezo_lora": _mezo_lora_step,
+    "fo_sgd": _fo_sgd_step,
+    "fo_adam": _fo_adam_step,
+    "lora_fo": _lora_fo_step,
+}
+
+
+def make_step(name: str, cfg: ModelConfig, layout: list[Entry], p: int):
+    """Close over (cfg, layout) -> step(state, tokens, labels, seed, hypers,
+    thresholds) ready for jax.jit().lower()."""
+    s = slot_count(name, p, cfg)
+    fn = _STEPS[name]
+
+    def step(state, tokens, labels, seed, hypers, thresholds):
+        return fn(cfg, layout, (p, s, N_METRICS), state, tokens, labels, seed, hypers, thresholds)
+
+    return step, s
+
+
+# --------------------------------------------------------------------------
+# pretraining (LM objective, Adam) — used to manufacture "pretrained"
+# checkpoints whose weight-magnitude structure S-MeZO depends on.
+# --------------------------------------------------------------------------
+
+def make_pretrain_step(cfg: ModelConfig, layout: list[Entry], p: int):
+    s = 2 * p + 1
+
+    def step(state, tokens, seed, hypers):
+        params, slots, _ = split_state(state, p, s)
+        m_t, v_t, t = slots[:p], slots[p : 2 * p], slots[2 * p]
+
+        def loss_fn(pv):
+            return M.lm_loss(M.apply(cfg, layout, pv, tokens), tokens)
+
+        loss, grad = jax.value_and_grad(loss_fn)(params)
+        b1, b2 = hypers[H_BETA1], hypers[H_BETA2]
+        t1 = t + 1.0
+        m_n = b1 * m_t + (1.0 - b1) * grad
+        v_n = b2 * v_t + (1.0 - b2) * grad * grad
+        m_hat = m_n / (1.0 - jnp.power(b1, t1))
+        v_hat = v_n / (1.0 - jnp.power(b2, t1))
+        upd = hypers[H_LR] * m_hat / (jnp.sqrt(v_hat) + hypers[H_ADAM_EPS])
+        mets = _metrics(loss, loss, 0.0, 1.0, jnp.sum(upd * upd), loss)
+        return pack_state(params - upd, jnp.concatenate([m_n, v_n, t1[None]]), mets)
+
+    return step, s

@@ -1,0 +1,70 @@
+"""AOT export sanity: the manifest and HLO artifacts the Rust side loads."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_has_models(manifest):
+    assert "llama_tiny" in manifest["models"]
+    assert "llama_small" in manifest["models"]
+
+
+def test_layout_consistency(manifest):
+    for name, m in manifest["models"].items():
+        off = 0
+        for e in m["layout"]:
+            assert e["offset"] == off, (name, e["name"])
+            size = 1
+            for d in e["shape"]:
+                size *= d
+            assert e["size"] == size
+            off += size
+        assert off == m["n_params"], name
+        assert m["n_entries"] == len(m["layout"])
+
+
+def test_state_lengths(manifest):
+    for name, m in manifest["models"].items():
+        p, k = m["n_params"], m["n_metrics"]
+        for pname, prog in m["programs"].items():
+            if pname.startswith("step_"):
+                assert prog["state_len"] == p + prog["slots"] + k, (name, pname)
+
+
+def test_all_artifact_files_exist_and_parse_header(manifest):
+    for name, m in manifest["models"].items():
+        for pname, prog in m["programs"].items():
+            path = os.path.join(ART, prog["file"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, path
+
+
+def test_hypers_and_metrics_schema(manifest):
+    assert manifest["hyper_names"] == [
+        "lr", "eps", "sparsity", "mask_seed", "beta1", "beta2", "adam_eps", "wd",
+    ]
+    assert len(manifest["metric_names"]) == 8
+
+
+def test_smezo_exported_everywhere(manifest):
+    for name, m in manifest["models"].items():
+        assert "step_mezo" in m["programs"], name
+        assert "step_smezo" in m["programs"], name
+        assert "logits" in m["programs"], name
+        assert "thresh" in m["programs"], name
+        assert "init" in m["programs"], name

@@ -1,0 +1,145 @@
+"""L2 model tests: shapes, padding invariance, family differences, loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import model_config
+from compile.layout import build_layout, build_lora_layout, matrix_entries, n_params
+
+
+@pytest.fixture(scope="module", params=["llama", "mistral", "opt"])
+def setup(request):
+    cfg = model_config(request.param, "tiny")
+    layout = build_layout(cfg)
+    params = M.init_params(cfg, layout, jnp.array([1, 2], jnp.uint32))
+    return cfg, layout, params
+
+
+def _tokens(cfg, seed=0, b=None):
+    rs = np.random.RandomState(seed)
+    b = b or cfg.batch
+    return jnp.asarray(rs.randint(1, cfg.vocab, (b, cfg.seq_len)), jnp.int32)
+
+
+def test_layout_contiguous(setup):
+    cfg, layout, params = setup
+    off = 0
+    for e in layout:
+        assert e.offset == off
+        off += e.size
+    assert n_params(layout) == off == params.shape[0]
+
+
+def test_forward_shape_and_finite(setup):
+    cfg, layout, params = setup
+    logits = M.apply(cfg, layout, params, _tokens(cfg))
+    assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_left_padding_invariance(setup):
+    """Left-padding must not change the final-position logits: the
+    classification-as-LM protocol depends on it."""
+    cfg, layout, params = setup
+    rs = np.random.RandomState(3)
+    content = rs.randint(1, cfg.vocab, (cfg.seq_len // 2,))
+    full = np.zeros((1, cfg.seq_len), np.int32)
+    full[0, -len(content):] = content          # left-padded
+    more = np.zeros((1, cfg.seq_len), np.int32)
+    more[0, -len(content) - 4 : -4] = 0         # (keep zeros)
+    more[0, -len(content):] = content
+    la = M.apply(cfg, layout, params, jnp.asarray(full))[0, -1]
+    lb = M.apply(cfg, layout, params, jnp.asarray(more))[0, -1]
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=1e-4, atol=1e-5)
+
+
+def test_causality(setup):
+    """Changing an *earlier* token changes the last logits; the last token
+    cannot see a (hypothetical) future — verified by prefix equality."""
+    cfg, layout, params = setup
+    t = np.asarray(_tokens(cfg, 4, b=1)).copy()
+    t2 = t.copy()
+    t2[0, 5] = (t2[0, 5] % (cfg.vocab - 1)) + 1
+    a = M.apply(cfg, layout, params, jnp.asarray(t))
+    b = M.apply(cfg, layout, params, jnp.asarray(t2))
+    # positions before the edit are unaffected
+    np.testing.assert_allclose(
+        np.asarray(a[0, :5]), np.asarray(b[0, :5]), rtol=1e-4, atol=1e-5
+    )
+    # the final position is affected
+    assert float(jnp.abs(a[0, -1] - b[0, -1]).max()) > 1e-6
+
+
+def test_cls_loss_matches_manual(setup):
+    cfg, layout, params = setup
+    tokens = _tokens(cfg, 7)
+    labels = jnp.asarray(np.random.RandomState(8).randint(1, cfg.vocab, (cfg.batch,)), jnp.int32)
+    logits = M.apply(cfg, layout, params, tokens)
+    loss = float(M.cls_loss(logits, labels))
+    lp = jax.nn.log_softmax(logits[:, -1, :], axis=-1)
+    manual = -float(jnp.mean(lp[jnp.arange(cfg.batch), labels]))
+    assert abs(loss - manual) < 1e-5
+
+
+def test_lm_loss_ignores_pad(setup):
+    cfg, layout, params = setup
+    t = np.asarray(_tokens(cfg, 9)).copy()
+    t[:, : cfg.seq_len // 2] = 0
+    l1 = float(M.lm_loss(M.apply(cfg, layout, params, jnp.asarray(t)), jnp.asarray(t)))
+    assert np.isfinite(l1) and l1 > 0
+
+
+def test_families_differ():
+    tok = None
+    outs = {}
+    for fam in ("llama", "mistral", "opt"):
+        cfg = model_config(fam, "tiny")
+        layout = build_layout(cfg)
+        params = M.init_params(cfg, layout, jnp.array([1, 2], jnp.uint32))
+        if tok is None:
+            tok = _tokens(cfg, 1, b=2)
+        outs[fam] = np.asarray(M.apply(cfg, layout, params, tok)[:, -1, :])
+    assert np.abs(outs["llama"] - outs["opt"]).max() > 1e-3
+    # mistral == llama except sliding window; with seq 32 and window 16
+    # long-range attention differs
+    assert np.abs(outs["llama"] - outs["mistral"]).max() > 1e-6
+
+
+def test_lora_zero_b_is_identity(setup):
+    cfg, layout, params = setup
+    adapters = M.init_lora_params(cfg, jnp.array([3, 4], jnp.uint32))
+    tok = _tokens(cfg, 2, b=2)
+    base = M.apply(cfg, layout, params, tok)
+    with_lora = M.apply(cfg, layout, params, tok, lora=M.lora_dict(cfg, adapters))
+    np.testing.assert_allclose(np.asarray(base), np.asarray(with_lora), rtol=1e-5, atol=1e-6)
+
+
+def test_lora_nonzero_b_changes_output(setup):
+    cfg, layout, params = setup
+    adapters = M.init_lora_params(cfg, jnp.array([3, 4], jnp.uint32)) + 0.05
+    tok = _tokens(cfg, 2, b=2)
+    base = M.apply(cfg, layout, params, tok)
+    with_lora = M.apply(cfg, layout, params, tok, lora=M.lora_dict(cfg, adapters))
+    assert float(jnp.abs(base - with_lora).max()) > 1e-4
+
+
+def test_init_magnitude_structure(setup):
+    """S-MeZO's premise needs a spread of weight magnitudes; init must not
+    be degenerate (all-equal) and norm gains must be 1."""
+    cfg, layout, params = setup
+    for e in layout:
+        w = np.asarray(params[e.offset : e.offset + e.size])
+        if e.kind == "vector":
+            np.testing.assert_array_equal(w, np.ones_like(w))
+        else:
+            assert w.std() > 1e-4
+            assert abs(w.mean()) < 5e-3
+
+
+def test_matrix_entries_have_thresholdable_shapes(setup):
+    cfg, layout, params = setup
+    for e in matrix_entries(layout):
+        assert len(e.shape) == 2

@@ -1,0 +1,195 @@
+"""Optimizer-step algebraic identities and invariants (paper Alg. 1-3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import optimizers as O
+from compile.configs import model_config
+from compile.layout import build_layout, n_params
+
+CFG = model_config("llama", "tiny")
+LAYOUT = build_layout(CFG)
+P = n_params(LAYOUT)
+SEED = jnp.array([11, 13], jnp.uint32)
+
+
+@pytest.fixture(scope="module")
+def env():
+    params = M.init_params(CFG, LAYOUT, jnp.array([1, 2], jnp.uint32))
+    rs = np.random.RandomState(0)
+    tokens = jnp.asarray(rs.randint(1, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32)
+    labels = jnp.asarray(rs.randint(1, CFG.vocab, (CFG.batch,)), jnp.int32)
+    return params, tokens, labels
+
+
+def _hypers(lr=1e-3, eps=1e-3, sparsity=0.75, mask_seed=42.0):
+    return jnp.asarray([lr, eps, sparsity, mask_seed, 0.9, 0.999, 1e-8, 0.0], jnp.float32)
+
+
+def _run(name, params, tokens, labels, hypers, thresholds, seed=SEED):
+    step, s = O.make_step(name, CFG, LAYOUT, P)
+    state = jnp.concatenate([params, jnp.zeros((s + O.N_METRICS,), jnp.float32)])
+    out = jax.jit(step)(state, tokens, labels, seed, hypers, thresholds)
+    return out[:P], out[P : P + s], out[P + s :]
+
+
+def test_smezo_sparsity_zero_equals_mezo(env):
+    """S-MeZO with sparsity 0 (threshold = max|w|) must reproduce MeZO
+    bit-for-bit — the degenerate-mask identity."""
+    params, tokens, labels = env
+    th0 = O.compute_thresholds(LAYOUT, params, 0.0)
+    pm, _, mm = _run("mezo", params, tokens, labels, _hypers(sparsity=0.0), th0)
+    ps, _, ms = _run("smezo", params, tokens, labels, _hypers(sparsity=0.0), th0)
+    np.testing.assert_array_equal(np.asarray(pm), np.asarray(ps))
+    np.testing.assert_allclose(np.asarray(mm[:3]), np.asarray(ms[:3]), rtol=1e-6)
+
+
+def test_smezo_update_support_is_masked(env):
+    """Paper Alg. 1: only parameters with m_i = 1 move; large weights are
+    frozen. This is THE defining property of Sparse-MeZO."""
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.75)
+    p_new, _, mets = _run("smezo", params, tokens, labels, _hypers(), th)
+    moved = np.asarray(p_new != params)
+    mask = np.asarray(
+        O.flat_mask(LAYOUT, params, th, "magnitude", _hypers())
+    ).astype(bool)
+    # every moved coordinate was masked-in
+    assert not np.any(moved & ~mask)
+    # and a sane number of masked coords actually moved
+    assert moved.sum() > 0.5 * mask.sum()
+    # masked fraction metric ≈ vectors + 25% of matrices
+    assert 0.2 < float(mets[3]) < 0.35
+
+
+def test_mezo_moves_everything(env):
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.75)
+    p_new, _, _ = _run("mezo", params, tokens, labels, _hypers(), th)
+    assert float(np.mean(np.asarray(p_new != params))) > 0.99
+
+
+def test_seed_determinism_and_variation(env):
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.75)
+    a, _, _ = _run("smezo", params, tokens, labels, _hypers(), th)
+    b, _, _ = _run("smezo", params, tokens, labels, _hypers(), th)
+    c, _, _ = _run("smezo", params, tokens, labels, _hypers(), th, seed=jnp.array([99, 1], jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(jnp.abs(a - c).max()) > 0
+
+
+def test_proj_grad_definition(env):
+    """metrics must satisfy g == (l+ - l-) / (2 eps) exactly."""
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.75)
+    _, _, mets = _run("smezo", params, tokens, labels, _hypers(eps=1e-3), th)
+    lp, lm, g = float(mets[0]), float(mets[1]), float(mets[2])
+    assert abs(g - (lp - lm) / 2e-3) < 1e-2 * max(1.0, abs(g))
+
+
+def test_zo_update_rule(env):
+    """theta' - theta == -lr * g * z_hat (recomputed here from the PRNG)."""
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.75)
+    hyp = _hypers(lr=2e-3)
+    p_new, _, mets = _run("smezo", params, tokens, labels, hyp, th)
+    g = float(mets[2])
+    z = O.flat_noise(LAYOUT, SEED)
+    m = O.flat_mask(LAYOUT, params, th, "magnitude", hyp)
+    want = params - 2e-3 * g * (m * z)
+    np.testing.assert_allclose(np.asarray(p_new), np.asarray(want), rtol=1e-5, atol=1e-7)
+
+
+def test_zo_sign_step_magnitudes(env):
+    """Every moved coordinate moves by exactly lr."""
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.0)
+    lr = 1e-4
+    p_new, _, _ = _run("zo_sign", params, tokens, labels, _hypers(lr=lr), th)
+    d = np.abs(np.asarray(p_new - params))
+    assert np.allclose(d[d > 0], lr, rtol=1e-3)
+
+
+def test_zo_cons_never_increases_beyond_base(env):
+    """Conservative step: if rejected, params are unchanged."""
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.0)
+    # silly-large lr forces rejection
+    p_new, _, mets = _run("zo_cons", params, tokens, labels, _hypers(lr=100.0), th)
+    accept = float(mets[6])
+    if accept < 0.5:
+        np.testing.assert_array_equal(np.asarray(p_new), np.asarray(params))
+    else:  # accepted: candidate loss must not exceed base proxy
+        assert float(mets[5]) <= float(0.5 * (mets[0] + mets[1])) + 1e-5
+
+
+def test_zo_adam_state_evolves(env):
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.0)
+    p_new, slots, _ = _run("zo_adam", params, tokens, labels, _hypers(), th)
+    assert float(slots[2 * P]) == 1.0  # t incremented
+    assert float(jnp.abs(slots[:P]).max()) > 0  # momentum nonzero
+
+
+def test_fo_adam_decreases_loss(env):
+    """First-order Adam on one batch should reduce that batch's loss
+    within a few steps — sanity for the FT baseline."""
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.0)
+    step, s = O.make_step("fo_adam", CFG, LAYOUT, P)
+    state = jnp.concatenate([params, jnp.zeros((s + O.N_METRICS,), jnp.float32)])
+    jstep = jax.jit(step)
+    losses = []
+    for i in range(5):
+        state = jstep(state, tokens, labels, SEED, _hypers(lr=1e-3), th)
+        losses.append(float(state[P + s + 5]))
+    assert losses[-1] < losses[0]
+
+
+def test_mezo_lora_freezes_base(env):
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.0)
+    step, s = O.make_step("mezo_lora", CFG, LAYOUT, P)
+    adapters = M.init_lora_params(CFG, jnp.array([3, 4], jnp.uint32))
+    state = jnp.concatenate([params, adapters, jnp.zeros((O.N_METRICS,), jnp.float32)])
+    out = jax.jit(step)(state, tokens, labels, SEED, _hypers(lr=1e-2), th)
+    np.testing.assert_array_equal(np.asarray(out[:P]), np.asarray(params))
+    assert float(jnp.abs(out[P : P + s] - adapters).max()) > 0
+
+
+def test_smezo_const_stores_and_reuses_mask(env):
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.75)
+    step, s = O.make_step("smezo_const", CFG, LAYOUT, P)
+    state = jnp.concatenate([params, jnp.zeros((s + O.N_METRICS,), jnp.float32)])
+    jstep = jax.jit(step)
+    out1 = jstep(state, tokens, labels, SEED, _hypers(), th)
+    mask1 = np.asarray(out1[P : 2 * P])
+    assert float(out1[2 * P]) == 1.0  # initialized flag
+    out2 = jstep(out1, tokens, labels, jnp.array([5, 6], jnp.uint32), _hypers(), th)
+    mask2 = np.asarray(out2[P : 2 * P])
+    np.testing.assert_array_equal(mask1, mask2)  # mask is frozen
+
+
+def test_smezo_pallas_matches_smezo(env):
+    """The fused L1-kernel step must equal the plain jnp step — this is the
+    cross-layer contract (kernel == ref == step)."""
+    params, tokens, labels = env
+    th = O.compute_thresholds(LAYOUT, params, 0.75)
+    hyp = _hypers()
+    p_a, _, m_a = _run("smezo", params, tokens, labels, hyp, th)
+    p_b, _, m_b = _run("smezo_pallas", params, tokens, labels, hyp, th)
+    np.testing.assert_allclose(np.asarray(m_b[:3]), np.asarray(m_a[:3]), rtol=5e-3, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(p_b), np.asarray(p_a), rtol=1e-4, atol=1e-6)
+
+
+def test_thresholds_monotone_in_sparsity(env):
+    params, _, _ = env
+    t5 = np.asarray(O.compute_thresholds(LAYOUT, params, 0.5))
+    t8 = np.asarray(O.compute_thresholds(LAYOUT, params, 0.8))
+    mat = [i for i, e in enumerate(LAYOUT) if e.kind == "matrix"]
+    assert (t8[mat] <= t5[mat]).all()

@@ -1,0 +1,71 @@
+//! Bench: L3 coordinator overhead decomposition.
+//!
+//! The packed-state design (DESIGN.md §3.1) exists so the coordinator's
+//! per-step cost is {batch prep + 3 small uploads + metric readback},
+//! never a parameter round-trip. This bench measures each component and
+//! the end-to-end step, verifying coordinator overhead is a small
+//! fraction of compute (target <5%, EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+
+use sparse_mezo::bench::{bench, bench_auto, write_results};
+use sparse_mezo::config::TrainConfig;
+use sparse_mezo::data::batcher::TrainLoader;
+use sparse_mezo::data::tasks;
+use sparse_mezo::runtime::exec::{InitExec, StepExec, ThreshExec};
+use sparse_mezo::runtime::{Runtime, TrainState};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let model = rt.model("llama_tiny")?.clone();
+    let dataset = tasks::generate_sized("rte", 7, 500, 0, 0)?;
+    let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, 1)?;
+    let init = InitExec::load(&rt, &model)?;
+    let params = init.run(&rt, (1, 2))?;
+    let thresholds = ThreshExec::load(&rt, &model)?.run(&rt, &params, 0.75)?;
+    let cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None)?;
+    let exec = StepExec::load(&rt, &model, "smezo", cfg.hypers, &thresholds)?;
+    let mut state = TrainState::from_params(&rt, &params, 0, model.n_metrics)?;
+
+    let mut results = Vec::new();
+
+    // components
+    results.push(bench("batch_prep (shuffle+pad)", 20, 500, || {
+        let b = loader.next_batch();
+        std::hint::black_box(&b.tokens);
+    }));
+    let batch = loader.next_batch();
+    results.push(bench_auto("upload tokens+labels+seed", 1.0, || {
+        let t = rt.upload_i32(&batch.tokens, &[model.batch, model.seq_len]).unwrap();
+        let l = rt.upload_i32(&batch.labels, &[model.batch]).unwrap();
+        let s = rt.upload_u32(&[1, 2], &[2]).unwrap();
+        std::hint::black_box((&t, &l, &s));
+    }));
+    results.push(bench_auto("metric readback (full-state literal)", 1.0, || {
+        let m = state.metrics(&rt).unwrap();
+        std::hint::black_box(&m);
+    }));
+    results.push(bench_auto("params readback (eval path)", 1.0, || {
+        let p = state.params_host(&rt).unwrap();
+        std::hint::black_box(&p);
+    }));
+
+    // end-to-end step (compute + coordinator)
+    let mut t = 0u32;
+    let e2e = bench_auto("end-to-end smezo step", 3.0, || {
+        t += 1;
+        exec.run(&rt, &mut state, &batch.tokens, &batch.labels, (1, t)).unwrap();
+        let _ = state.metrics(&rt).unwrap();
+    });
+
+    let overhead: f64 = results[0].summary.mean + results[1].summary.mean + results[2].summary.mean;
+    println!(
+        "\ncoordinator overhead: {:.1} µs of {:.1} µs step = {:.1}%  (target < 5%)",
+        overhead * 1e6,
+        e2e.summary.mean * 1e6,
+        100.0 * overhead / e2e.summary.mean
+    );
+    results.push(e2e);
+    write_results("coordinator_overhead", &results);
+    Ok(())
+}

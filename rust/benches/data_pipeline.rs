@@ -1,0 +1,47 @@
+//! Bench: data-layer throughput — task generation, batching, corpus
+//! streaming. The data pipeline must never be the training bottleneck
+//! (steps are ~10ms; a batch must assemble in ~µs).
+
+use sparse_mezo::bench::{bench, write_results};
+use sparse_mezo::data::batcher::{eval_batches, TrainLoader};
+use sparse_mezo::data::corpus::Corpus;
+use sparse_mezo::data::tasks;
+
+fn main() -> anyhow::Result<()> {
+    let mut results = Vec::new();
+
+    for task in ["rte", "boolq", "copa", "aqua"] {
+        results.push(bench(&format!("generate 100 examples/{task}"), 2, 30, || {
+            let ds = tasks::generate_sized(task, 7, 100, 0, 0).unwrap();
+            std::hint::black_box(&ds.train);
+        }));
+    }
+
+    let ds = tasks::generate_sized("rte", 7, 1000, 0, 500)?;
+    let mut loader = TrainLoader::new(&ds.train, 16, 32, 1)?;
+    results.push(bench("train batch (16x32)", 100, 5000, || {
+        let b = loader.next_batch();
+        std::hint::black_box(&b.tokens);
+    }));
+
+    results.push(bench("eval batching 500 examples", 5, 100, || {
+        let bs = eval_batches(&ds.test, 16, 32);
+        std::hint::black_box(&bs);
+    }));
+
+    let mut corpus = Corpus::new(7, 64);
+    results.push(bench("corpus LM batch (16x64)", 20, 300, || {
+        let b = corpus.batch(16);
+        std::hint::black_box(&b);
+    }));
+
+    // throughput summary vs a 10 ms training step
+    let batch_cost = results.iter().find(|r| r.name.starts_with("train batch")).unwrap().summary.mean;
+    println!(
+        "\nbatch prep = {:.1} µs -> {:.4}% of a 10 ms optimizer step",
+        batch_cost * 1e6,
+        100.0 * batch_cost / 10e-3
+    );
+    write_results("data_pipeline", &results);
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Bench: optimizer step latency per variant (paper claim: S-MeZO adds
+//! NO overhead over MeZO — "without any overhead", §1). Regenerates the
+//! wallclock basis of Fig. 1 and the Table-4 companion measurement.
+//!
+//! Run: `cargo bench --bench step_latency` (artifacts must be built).
+
+use std::path::Path;
+
+use sparse_mezo::bench::{bench_auto, write_results};
+use sparse_mezo::config::TrainConfig;
+use sparse_mezo::data::batcher::TrainLoader;
+use sparse_mezo::data::tasks;
+use sparse_mezo::runtime::exec::{InitExec, StepExec, ThreshExec};
+use sparse_mezo::runtime::{Runtime, TrainState};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let model = rt.model("llama_tiny")?.clone();
+    let dataset = tasks::generate_sized("rte", 7, 200, 0, 0)?;
+    let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, 1)?;
+    let init = InitExec::load(&rt, &model)?;
+    let params = init.run(&rt, (1, 2))?;
+    let thresholds = ThreshExec::load(&rt, &model)?.run(&rt, &params, 0.75)?;
+
+    let mut results = Vec::new();
+    let variants = ["mezo", "smezo", "smezo_const", "rmezo", "zo_sign", "zo_adam", "fo_adam"];
+    for opt in variants {
+        let cfg = TrainConfig::resolve("llama_tiny", "rte", opt, None)?;
+        let exec = StepExec::load(&rt, &model, opt, cfg.hypers, &thresholds)?;
+        let mut state = TrainState::from_params(&rt, &params, exec.slots, model.n_metrics)?;
+        let batch = loader.next_batch();
+        let mut t = 0u32;
+        results.push(bench_auto(&format!("step/{opt}"), 2.0, || {
+            t += 1;
+            exec.run(&rt, &mut state, &batch.tokens, &batch.labels, (1, t)).unwrap();
+            // force completion: metrics readback is part of a real step
+            let _ = state.metrics(&rt).unwrap();
+        }));
+    }
+
+    // headline check: S-MeZO step time within 10% of MeZO (no overhead)
+    let mezo = results.iter().find(|r| r.name.ends_with("/mezo")).unwrap().summary.mean;
+    let smezo = results.iter().find(|r| r.name.ends_with("/smezo")).unwrap().summary.mean;
+    println!(
+        "\nS-MeZO / MeZO step-time ratio: {:.3} (paper: no overhead; EI mask fused into fwd)",
+        smezo / mezo
+    );
+    write_results("step_latency", &results);
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Bench harness (criterion replacement): warmup + timed iterations with
+//! mean/p50/p99 reporting and JSON output. Used by the `rust/benches/*`
+//! targets (all `harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// per-iteration seconds
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>6} iters  mean {:>10}  p50 {:>10}  p99 {:>10}",
+            self.name,
+            self.iters,
+            fmt_secs(self.summary.mean),
+            fmt_secs(self.summary.p50),
+            fmt_secs(self.summary.p99),
+        )
+    }
+
+    pub fn json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.summary.mean)),
+            ("p50_s", Json::Num(self.summary.p50)),
+            ("p99_s", Json::Num(self.summary.p99)),
+            ("min_s", Json::Num(self.summary.min)),
+            ("max_s", Json::Num(self.summary.max)),
+        ])
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult { name: name.to_string(), iters, summary: summarize(&samples) };
+    println!("{}", r.report());
+    r
+}
+
+/// Auto-select an iteration count targeting ~`budget_s` seconds total.
+pub fn bench_auto<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // one probe call to estimate cost
+    let t0 = Instant::now();
+    f();
+    let per = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / per) as usize).clamp(5, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Write a set of results to `bench_results/<file>.jsonl`.
+pub fn write_results(file: &str, results: &[BenchResult]) {
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{file}.jsonl"));
+    if let Ok(mut w) = crate::util::log::JsonlWriter::create(&path) {
+        for r in results {
+            let _ = w.write(&r.json());
+        }
+        let _ = w.flush();
+    }
+    println!("(bench results -> {})", path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench("spin", 2, 50, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.summary.p99 >= r.summary.p50);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(3e-9).contains("ns"));
+        assert!(fmt_secs(3e-6).contains("µs"));
+        assert!(fmt_secs(3e-3).contains("ms"));
+        assert!(fmt_secs(3.0).contains(" s"));
+    }
+}

@@ -1,0 +1,191 @@
+//! Configuration: presets + TOML overrides.
+//!
+//! Presets encode the paper's hyperparameter appendix (Tables 7–9) scaled
+//! to this testbed's model sizes; `presets/*.toml` files in the repo carry
+//! the same values in editable form and are parsed by [`load_overrides`].
+
+pub mod presets;
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use crate::runtime::exec::Hypers;
+use crate::util::json::Json;
+use crate::util::toml;
+
+/// A fully-resolved training run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub task: String,
+    pub optimizer: String,
+    pub steps: usize,
+    pub hypers: Hypers,
+    /// data + noise seed for the run
+    pub seed: u64,
+    /// evaluate on dev every N steps (0 = never)
+    pub eval_every: usize,
+    /// log metrics every N steps
+    pub log_every: usize,
+    /// initialize params from this checkpoint (path) instead of `init`
+    pub init_from: Option<String>,
+    /// cap on dev examples per evaluation (speed knob; 0 = all)
+    pub eval_cap: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "llama_tiny".into(),
+            task: "rte".into(),
+            optimizer: "smezo".into(),
+            steps: 400,
+            hypers: Hypers::default(),
+            seed: 42,
+            eval_every: 0,
+            log_every: 25,
+            init_from: None,
+            eval_cap: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Resolve a config from presets, then apply an optional TOML file and
+    /// then CLI-style key=value overrides.
+    pub fn resolve(
+        model: &str,
+        task: &str,
+        optimizer: &str,
+        toml_path: Option<&Path>,
+    ) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig {
+            model: model.to_string(),
+            task: task.to_string(),
+            optimizer: optimizer.to_string(),
+            ..TrainConfig::default()
+        };
+        cfg.hypers = presets::default_hypers(optimizer, task);
+        cfg.steps = presets::default_steps(optimizer);
+        if let Some(path) = toml_path {
+            let doc = toml::parse_file(path)?;
+            cfg.apply_json(&doc)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply overrides from a parsed TOML/JSON tree.
+    pub fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        if let Some(v) = doc.get("model") {
+            self.model = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("task") {
+            self.task = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("optimizer") {
+            self.optimizer = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("steps") {
+            self.steps = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("seed") {
+            self.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = doc.get("eval_every") {
+            self.eval_every = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("log_every") {
+            self.log_every = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("eval_cap") {
+            self.eval_cap = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("init_from") {
+            self.init_from = Some(v.as_str()?.to_string());
+        }
+        if let Some(h) = doc.get("hypers") {
+            for (key, field) in [
+                ("lr", 0usize),
+                ("eps", 1),
+                ("sparsity", 2),
+                ("mask_seed", 3),
+                ("beta1", 4),
+                ("beta2", 5),
+                ("adam_eps", 6),
+                ("wd", 7),
+            ] {
+                if let Some(v) = h.get(key) {
+                    let x = v.as_f64()? as f32;
+                    match field {
+                        0 => self.hypers.lr = x,
+                        1 => self.hypers.eps = x,
+                        2 => self.hypers.sparsity = x,
+                        3 => self.hypers.mask_seed = x,
+                        4 => self.hypers.beta1 = x,
+                        5 => self.hypers.beta2 = x,
+                        6 => self.hypers.adam_eps = x,
+                        _ => self.hypers.wd = x,
+                    }
+                }
+            }
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.hypers.sparsity) {
+            bail!("sparsity must be in [0, 1), got {}", self.hypers.sparsity);
+        }
+        if self.hypers.eps <= 0.0 {
+            bail!("eps must be positive");
+        }
+        if self.hypers.lr < 0.0 {
+            bail!("lr must be non-negative");
+        }
+        Ok(())
+    }
+
+    /// Run label used in paths and reports.
+    pub fn label(&self) -> String {
+        format!("{}_{}_{}_s{}", self.model, self.task, self.optimizer, self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_and_override() {
+        let mut cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
+        assert_eq!(cfg.task, "rte");
+        assert!(cfg.hypers.sparsity > 0.0);
+        let doc = crate::util::toml::parse("steps = 10\n[hypers]\nlr = 0.5\nsparsity = 0.6\n").unwrap();
+        cfg.apply_json(&doc).unwrap();
+        assert_eq!(cfg.steps, 10);
+        assert_eq!(cfg.hypers.lr, 0.5);
+        assert_eq!(cfg.hypers.sparsity, 0.6);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = TrainConfig::default();
+        cfg.hypers.sparsity = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.hypers.sparsity = 0.5;
+        cfg.hypers.eps = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.hypers.eps = 1e-3;
+        cfg.steps = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn label_stable() {
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.label(), "llama_tiny_rte_smezo_s42");
+    }
+}

@@ -1,0 +1,133 @@
+//! Hyperparameter presets — the paper's appendix Tables 7–9, rescaled.
+//!
+//! The paper's absolute learning rates (1e-6-ish) belong to 7B-parameter
+//! models; ZO step size scales roughly with 1/sqrt(d̂) and our models are
+//! ~4 orders of magnitude smaller, so the presets below were calibrated
+//! with the `sweep` subcommand (Fig-2a harness) on the tiny/small models
+//! and keep the paper's *relationships*: S-MeZO runs at a higher LR than
+//! MeZO (paper §4.1), R-MeZO uses the S-MeZO grid, FT-Adam uses a standard
+//! first-order LR, eps = 1e-3 everywhere (paper's value).
+
+use crate::runtime::exec::Hypers;
+
+/// Per-task S-MeZO sparsity — paper Table 9 (LLaMA row), reused for every
+/// magnitude-masked variant; tasks the paper didn't list default to 0.75.
+pub fn task_sparsity(task: &str) -> f32 {
+    match task {
+        "sst2" => 0.70,
+        "rte" => 0.75,
+        "boolq" => 0.80,
+        "wic" => 0.80,
+        "multirc" => 0.80,
+        _ => 0.75,
+    }
+}
+
+/// The LR searched over by the Fig-2a sweep for ZO methods.
+pub const ZO_LR_GRID: [f32; 6] = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2];
+
+/// First-order LR grid (FT baseline).
+pub const FO_LR_GRID: [f32; 3] = [1e-4, 3e-4, 1e-3];
+
+/// Calibrated default hypers per optimizer (eps fixed at the paper's 1e-3).
+pub fn default_hypers(optimizer: &str, task: &str) -> Hypers {
+    let sparsity = task_sparsity(task);
+    let mut h = Hypers { sparsity, ..Hypers::default() };
+    h.lr = match optimizer {
+        // Calibrated on llama_tiny from the multitask base (see
+        // EXPERIMENTS.md §Calibration): MeZO diverges at 1e-3 (Fig-2a);
+        // the sparse variants run stably at 3-30x higher LR, mirroring
+        // the paper's S-MeZO-takes-larger-LR relationship.
+        "mezo" => 3e-4,
+        "smezo" | "smezo_const" | "smezo_pallas" => 3e-3,
+        "smezo_large" => 3e-3,
+        "rmezo" => 1e-3,
+        "zo_sign" => 1e-4,
+        "zo_cons" => 3e-4,
+        "zo_adam" => 1e-4,
+        "zo_adamu" => 3e-4,
+        "zo_mom" => 1e-4,
+        "mezo_lora" => 3e-3,
+        "fo_sgd" => 1e-2,
+        "fo_adam" => 3e-3,
+        "lora_fo" => 1e-2,
+        _ => 1e-3,
+    };
+    h
+}
+
+/// Default training length per optimizer (first-order converges in far
+/// fewer steps — paper Table 4 note / standard MeZO protocol).
+pub fn default_steps(optimizer: &str) -> usize {
+    match optimizer {
+        "fo_sgd" | "fo_adam" | "lora_fo" => 1000,
+        _ => 6000,
+    }
+}
+
+/// Which optimizers count as zeroth-order (reporting splits on this).
+pub fn is_zeroth_order(optimizer: &str) -> bool {
+    !matches!(optimizer, "fo_sgd" | "fo_adam" | "lora_fo")
+}
+
+/// Display names used in report tables (paper's row labels).
+pub fn display_name(optimizer: &str) -> &'static str {
+    match optimizer {
+        "mezo" => "MeZO",
+        "smezo" => "S-MeZO",
+        "smezo_pallas" => "S-MeZO (Pallas)",
+        "smezo_const" => "S-MeZO (const mask)",
+        "smezo_large" => "S-MeZO (large-only)",
+        "rmezo" => "R-MeZO",
+        "zo_sign" => "ZO-SGD-Sign",
+        "zo_cons" => "ZO-SGD-Cons",
+        "zo_adam" => "ZO-SGD-Adam",
+        "zo_adamu" => "ZO-AdaMU",
+        "zo_mom" => "AdaZeta*",
+        "mezo_lora" => "MeZO-LoRA",
+        "fo_sgd" => "SGD (FO)",
+        "fo_adam" => "FT",
+        "lora_fo" => "LoRA",
+        _ => "?",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table9_values() {
+        assert_eq!(task_sparsity("sst2"), 0.70);
+        assert_eq!(task_sparsity("rte"), 0.75);
+        assert_eq!(task_sparsity("boolq"), 0.80);
+        assert_eq!(task_sparsity("aqua"), 0.75); // default
+    }
+
+    #[test]
+    fn smezo_lr_exceeds_mezo_lr() {
+        // the paper's central hyperparameter relationship
+        let m = default_hypers("mezo", "rte");
+        let s = default_hypers("smezo", "rte");
+        assert!(s.lr > m.lr);
+        assert_eq!(m.eps, s.eps);
+    }
+
+    #[test]
+    fn fo_split() {
+        assert!(is_zeroth_order("mezo"));
+        assert!(is_zeroth_order("zo_adamu"));
+        assert!(!is_zeroth_order("fo_adam"));
+        assert!(default_steps("fo_adam") < default_steps("mezo"));
+    }
+
+    #[test]
+    fn display_names_cover_known() {
+        for o in [
+            "mezo", "smezo", "rmezo", "zo_sign", "zo_cons", "zo_adam", "zo_adamu",
+            "zo_mom", "mezo_lora", "fo_sgd", "fo_adam", "lora_fo", "smezo_large",
+        ] {
+            assert_ne!(display_name(o), "?", "{o}");
+        }
+    }
+}

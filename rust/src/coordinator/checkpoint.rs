@@ -1,0 +1,171 @@
+//! Checkpointing: raw little-endian f32 params (+ optional slots) with a
+//! JSON sidecar carrying the ABI fingerprint, so a checkpoint can't be
+//! silently loaded into the wrong model.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::ModelInfo;
+use crate::util::json::{self, Json};
+
+/// On-disk checkpoint.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub model: String,
+    pub n_params: usize,
+    pub step: usize,
+    pub params: Vec<f32>,
+    /// optimizer slots (empty for ZO-SGD-family)
+    pub slots: Vec<f32>,
+    /// free-form provenance (task, optimizer, hypers) for reports
+    pub meta: Json,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut bytes = Vec::with_capacity(4 * (self.params.len() + self.slots.len()));
+        for x in self.params.iter().chain(self.slots.iter()) {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
+        let sidecar = Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("n_params", Json::Num(self.n_params as f64)),
+            ("n_slots", Json::Num(self.slots.len() as f64)),
+            ("step", Json::Num(self.step as f64)),
+            ("meta", self.meta.clone()),
+        ]);
+        std::fs::write(sidecar_path(path), sidecar.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path, expect: &ModelInfo) -> Result<Checkpoint> {
+        let sidecar = std::fs::read_to_string(sidecar_path(path))
+            .with_context(|| format!("sidecar for {path:?}"))?;
+        let meta = json::parse(&sidecar)?;
+        let model = meta.req("model")?.as_str()?.to_string();
+        let n_params = meta.req("n_params")?.as_usize()?;
+        let n_slots = meta.req("n_slots")?.as_usize()?;
+        let step = meta.req("step")?.as_usize()?;
+        if model != expect.name {
+            bail!("checkpoint is for model '{model}', expected '{}'", expect.name);
+        }
+        if n_params != expect.n_params {
+            bail!("checkpoint has {n_params} params, model expects {}", expect.n_params);
+        }
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {path:?}"))?
+            .read_to_end(&mut bytes)?;
+        let want = 4 * (n_params + n_slots);
+        if bytes.len() != want {
+            bail!("checkpoint {path:?}: {} bytes, expected {want}", bytes.len());
+        }
+        let mut all = Vec::with_capacity(n_params + n_slots);
+        for chunk in bytes.chunks_exact(4) {
+            all.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        let slots = all.split_off(n_params);
+        Ok(Checkpoint {
+            model,
+            n_params,
+            step,
+            params: all,
+            slots,
+            meta: meta.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+fn sidecar_path(path: &Path) -> std::path::PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".json");
+    std::path::PathBuf::from(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{LayoutEntry, ModelInfo};
+    use std::collections::BTreeMap;
+
+    fn model(n_params: usize) -> ModelInfo {
+        ModelInfo {
+            name: "toy".into(),
+            family: "llama".into(),
+            size: "tiny".into(),
+            n_layers: 1,
+            d_model: 4,
+            n_heads: 1,
+            d_ff: 8,
+            vocab: 16,
+            seq_len: 8,
+            batch: 2,
+            window: 0,
+            n_params,
+            n_lora_params: 0,
+            lora_rank: 0,
+            n_entries: 1,
+            n_hypers: 8,
+            n_metrics: 8,
+            layout: vec![LayoutEntry {
+                name: "w".into(),
+                shape: vec![n_params],
+                kind: "matrix".into(),
+                offset: 0,
+                size: n_params,
+                layer_id: 0,
+            }],
+            lora_layout: vec![],
+            programs: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join(format!("smz_ckpt_{}", std::process::id()));
+        let path = dir.join("p.bin");
+        let ck = Checkpoint {
+            model: "toy".into(),
+            n_params: 5,
+            step: 123,
+            params: vec![1.0, -2.0, 3.5, 0.0, 1e-8],
+            slots: vec![9.0, 8.0],
+            meta: Json::obj(vec![("task", Json::Str("rte".into()))]),
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path, &model(5)).unwrap();
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.slots, ck.slots);
+        assert_eq!(back.step, 123);
+        assert_eq!(back.meta.req("task").unwrap().as_str().unwrap(), "rte");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_model() {
+        let dir = std::env::temp_dir().join(format!("smz_ckpt2_{}", std::process::id()));
+        let path = dir.join("p.bin");
+        let ck = Checkpoint {
+            model: "toy".into(),
+            n_params: 3,
+            step: 0,
+            params: vec![1.0, 2.0, 3.0],
+            slots: vec![],
+            meta: Json::Null,
+        };
+        ck.save(&path).unwrap();
+        // wrong param count
+        assert!(Checkpoint::load(&path, &model(4)).is_err());
+        // truncated payload
+        std::fs::write(&path, [0u8; 5]).unwrap();
+        assert!(Checkpoint::load(&path, &model(3)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,100 @@
+//! Convergence analysis: steps-to-target-accuracy and speedup ratios —
+//! the quantities behind Fig. 1 ("3.5x speedup") and Fig. 3.
+
+use crate::coordinator::trainer::CurvePoint;
+
+/// First step at which the dev accuracy reaches `target` (sustained —
+/// single-eval blips don't count; we require the NEXT eval point to stay
+/// above target - slack, or be the last point).
+pub fn steps_to_accuracy(curve: &[CurvePoint], target: f64, slack: f64) -> Option<usize> {
+    for (i, pt) in curve.iter().enumerate() {
+        if pt.dev_accuracy >= target {
+            let sustained = match curve.get(i + 1) {
+                Some(next) => next.dev_accuracy >= target - slack,
+                None => true,
+            };
+            if sustained {
+                return Some(pt.step);
+            }
+        }
+    }
+    None
+}
+
+/// Speedup of `fast` over `slow` at the highest target both reach.
+/// Returns (target_accuracy, steps_slow, steps_fast, ratio).
+pub fn speedup(slow: &[CurvePoint], fast: &[CurvePoint]) -> Option<(f64, usize, usize, f64)> {
+    let best_slow = slow.iter().map(|c| c.dev_accuracy).fold(0.0, f64::max);
+    let best_fast = fast.iter().map(|c| c.dev_accuracy).fold(0.0, f64::max);
+    let target = best_slow.min(best_fast);
+    if target <= 0.0 {
+        return None;
+    }
+    // measure at 98% of the common ceiling to dodge plateau noise
+    let target = target * 0.98;
+    let s = steps_to_accuracy(slow, target, 0.05)?;
+    let f = steps_to_accuracy(fast, target, 0.05)?;
+    Some((target, s, f, s as f64 / f as f64))
+}
+
+/// Area-under-curve of accuracy over steps (normalized) — a blip-robust
+/// secondary convergence metric used in EXPERIMENTS.md.
+pub fn accuracy_auc(curve: &[CurvePoint]) -> f64 {
+    if curve.len() < 2 {
+        return curve.first().map(|c| c.dev_accuracy).unwrap_or(0.0);
+    }
+    let mut area = 0.0;
+    for w in curve.windows(2) {
+        let dx = (w[1].step - w[0].step) as f64;
+        area += dx * 0.5 * (w[0].dev_accuracy + w[1].dev_accuracy);
+    }
+    area / (curve.last().unwrap().step - curve[0].step) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(points: &[(usize, f64)]) -> Vec<CurvePoint> {
+        points
+            .iter()
+            .map(|&(step, acc)| CurvePoint {
+                step,
+                dev_accuracy: acc,
+                dev_loss: 0.0,
+                train_loss_ema: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn finds_first_sustained_crossing() {
+        let c = curve(&[(100, 0.5), (200, 0.72), (300, 0.55), (400, 0.71), (500, 0.73)]);
+        // 0.7 at step 200 is a blip (next point 0.55 < 0.7 - 0.05)
+        assert_eq!(steps_to_accuracy(&c, 0.7, 0.05), Some(400));
+        assert_eq!(steps_to_accuracy(&c, 0.9, 0.05), None);
+    }
+
+    #[test]
+    fn last_point_counts() {
+        let c = curve(&[(100, 0.5), (200, 0.8)]);
+        assert_eq!(steps_to_accuracy(&c, 0.75, 0.05), Some(200));
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let slow = curve(&[(1000, 0.5), (2000, 0.6), (3000, 0.7), (4000, 0.70)]);
+        let fast = curve(&[(1000, 0.7), (2000, 0.72), (3000, 0.72), (4000, 0.72)]);
+        let (_t, s, f, r) = speedup(&slow, &fast).unwrap();
+        assert_eq!(s, 3000);
+        assert_eq!(f, 1000);
+        assert!((r - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_prefers_early_risers() {
+        let early = curve(&[(0, 0.7), (100, 0.7)]);
+        let late = curve(&[(0, 0.2), (100, 0.7)]);
+        assert!(accuracy_auc(&early) > accuracy_auc(&late));
+    }
+}

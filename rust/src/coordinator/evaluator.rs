@@ -1,0 +1,136 @@
+//! Evaluation: candidate-scored accuracy + cross-entropy from last-position
+//! logits (the MeZO protocol: the prediction is the argmax over the
+//! example's candidate answer tokens, not the full vocabulary).
+
+use anyhow::Result;
+
+use crate::data::batcher::{eval_batches, Batch};
+use crate::data::Example;
+use crate::runtime::exec::LogitsExec;
+use crate::runtime::Runtime;
+
+/// Result of one evaluation pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub n: usize,
+    pub correct: usize,
+    pub mean_loss: f64,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.n.max(1) as f64
+    }
+}
+
+/// log-softmax cross-entropy of `label` under `logits` (one row).
+pub fn row_loss(logits: &[f32], label: i32) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits.iter().map(|&l| ((l as f64) - max).exp()).sum::<f64>().ln() + max;
+    lse - logits[label as usize] as f64
+}
+
+/// Candidate-restricted argmax prediction for one row.
+pub fn row_prediction(logits: &[f32], candidates: &[i32]) -> i32 {
+    *candidates
+        .iter()
+        .max_by(|&&a, &&b| logits[a as usize].partial_cmp(&logits[b as usize]).unwrap())
+        .expect("non-empty candidates")
+}
+
+/// Score a batch of logits rows against the batch's labels/candidates.
+pub fn score_batch(logits: &[f32], vocab: usize, batch: &Batch) -> EvalResult {
+    let mut correct = 0usize;
+    let mut loss = 0.0f64;
+    for row in 0..batch.real {
+        let lg = &logits[row * vocab..(row + 1) * vocab];
+        if row_prediction(lg, &batch.candidates[row]) == batch.labels[row] {
+            correct += 1;
+        }
+        loss += row_loss(lg, batch.labels[row]);
+    }
+    EvalResult { n: batch.real, correct, mean_loss: loss / batch.real.max(1) as f64 }
+}
+
+/// Evaluate `params` over `examples` (optionally capped for speed).
+pub fn evaluate(
+    rt: &Runtime,
+    logits: &LogitsExec,
+    params: &[f32],
+    examples: &[Example],
+    cap: usize,
+) -> Result<EvalResult> {
+    let slice = if cap > 0 && cap < examples.len() { &examples[..cap] } else { examples };
+    let params_buf = logits.upload_params(rt, params)?;
+    let mut total = EvalResult { n: 0, correct: 0, mean_loss: 0.0 };
+    for batch in eval_batches(slice, logits.batch, logits.seq_len) {
+        let lg = logits.run(rt, &params_buf, &batch.tokens)?;
+        let r = score_batch(&lg, logits.vocab, &batch);
+        total.mean_loss = (total.mean_loss * total.n as f64 + r.mean_loss * r.n as f64)
+            / (total.n + r.n).max(1) as f64;
+        total.n += r.n;
+        total.correct += r.correct;
+    }
+    Ok(total)
+}
+
+/// Mean training-style loss of `params` on an explicit token/label batch
+/// (used by the Fig-2b probe, which needs loss-at-theta without a step).
+pub fn batch_loss(
+    rt: &Runtime,
+    logits: &LogitsExec,
+    params_buf: &xla::PjRtBuffer,
+    batch: &Batch,
+) -> Result<f64> {
+    let lg = logits.run(rt, params_buf, &batch.tokens)?;
+    let mut loss = 0.0;
+    for row in 0..batch.real {
+        loss += row_loss(&lg[row * logits.vocab..(row + 1) * logits.vocab], batch.labels[row]);
+    }
+    Ok(loss / batch.real.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_prediction_restricted_to_candidates() {
+        // vocab of 6; token 5 has the max logit but is not a candidate
+        let logits = [0.0, 1.0, 0.5, -1.0, 0.0, 9.0];
+        assert_eq!(row_prediction(&logits, &[1, 2]), 1);
+        assert_eq!(row_prediction(&logits, &[3, 4]), 4);
+    }
+
+    #[test]
+    fn row_loss_matches_manual_softmax() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let l = row_loss(&logits, 2);
+        let z: f64 = (1f64.exp() + 2f64.exp() + 3f64.exp()).ln();
+        assert!((l - (z - 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn score_batch_respects_real() {
+        let batch = Batch {
+            tokens: vec![0; 2 * 4],
+            labels: vec![1, 2],
+            real: 1, // second row is padding
+            candidates: vec![vec![1, 2], vec![1, 2]],
+        };
+        // row0 predicts 1 (correct); row1 would predict 2 but must be ignored
+        let logits = vec![
+            0.0, 5.0, 1.0, 0.0, // row 0
+            0.0, 1.0, 5.0, 0.0, // row 1
+        ];
+        let r = score_batch(&logits, 4, &batch);
+        assert_eq!(r.n, 1);
+        assert_eq!(r.correct, 1);
+    }
+
+    #[test]
+    fn eval_result_accuracy() {
+        let r = EvalResult { n: 10, correct: 7, mean_loss: 0.0 };
+        assert!((r.accuracy() - 0.7).abs() < 1e-12);
+    }
+}

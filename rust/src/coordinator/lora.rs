@@ -1,0 +1,159 @@
+//! LoRA-family training (lora_fo, mezo_lora): same loop as [`super::trainer`]
+//! but the trainable state is the adapter block and evaluation goes through
+//! the `logits_lora` program (base params + adapters).
+//!
+//! Packed state layout (python/compile/optimizers.py):
+//!   mezo_lora: [base P | adapters A                    | metrics]
+//!   lora_fo:   [base P | adapters A | m A | v A | t(1) | metrics]
+//! so in both cases `TrainState.p = P` and the adapters are the first A
+//! floats of the slot block.
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::evaluator::{score_batch, EvalResult};
+use crate::coordinator::trainer::{CurvePoint, TrainResult, DIVERGENCE_LOSS};
+use crate::data::batcher::{eval_batches, TrainLoader};
+use crate::data::Dataset;
+use crate::runtime::exec::{InitExec, InitLoraExec, LogitsLoraExec, StepExec, StepMetrics, ThreshExec};
+use crate::runtime::{ModelInfo, Runtime, TrainState};
+
+pub struct LoraTrainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: TrainConfig,
+    /// base params override (pretrained checkpoint); falls back to `init`
+    pub base_params: Option<Vec<f32>>,
+}
+
+impl<'rt> LoraTrainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> LoraTrainer<'rt> {
+        LoraTrainer { rt, cfg, base_params: None }
+    }
+
+    fn eval(
+        &self,
+        model: &ModelInfo,
+        logits: &LogitsLoraExec,
+        base_buf: &xla::PjRtBuffer,
+        adapters: &[f32],
+        examples: &[crate::data::Example],
+        cap: usize,
+    ) -> Result<EvalResult> {
+        let slice = if cap > 0 && cap < examples.len() { &examples[..cap] } else { examples };
+        let ad_buf = self.rt.upload_f32(adapters, &[adapters.len()])?;
+        let mut total = EvalResult { n: 0, correct: 0, mean_loss: 0.0 };
+        for batch in eval_batches(slice, model.batch, model.seq_len) {
+            let lg = logits.run(self.rt, base_buf, &ad_buf, &batch.tokens)?;
+            let r = score_batch(&lg, model.vocab, &batch);
+            total.mean_loss = (total.mean_loss * total.n as f64 + r.mean_loss * r.n as f64)
+                / (total.n + r.n).max(1) as f64;
+            total.n += r.n;
+            total.correct += r.correct;
+        }
+        Ok(total)
+    }
+
+    pub fn run_on(&mut self, model: &ModelInfo, dataset: &Dataset) -> Result<TrainResult> {
+        let cfg = self.cfg.clone();
+        if cfg.optimizer != "mezo_lora" && cfg.optimizer != "lora_fo" {
+            bail!("LoraTrainer only handles mezo_lora / lora_fo, got {}", cfg.optimizer);
+        }
+        let t_total = std::time::Instant::now();
+        let a = model.n_lora_params;
+
+        // base params: pretrained override or fresh init
+        let base = match &self.base_params {
+            Some(p) => p.clone(),
+            None => InitExec::load(self.rt, model)?.run(self.rt, (cfg.seed as u32, 0x1717))?,
+        };
+        let adapters0 = InitLoraExec::load(self.rt, model)?.run(self.rt, (cfg.seed as u32, 0xada))?;
+
+        // thresholds input exists in the step ABI even though LoRA ignores it
+        let thresh = ThreshExec::load(self.rt, model)?;
+        let thresholds = thresh.run(self.rt, &base, cfg.hypers.sparsity)?;
+        let step_exec = StepExec::load(self.rt, model, &cfg.optimizer, cfg.hypers, &thresholds)?;
+        let logits = LogitsLoraExec::load(self.rt, model)?;
+        let base_buf = self.rt.upload_f32(&base, &[base.len()])?;
+
+        // assemble packed state: [base | adapters | extra slots zeroed | K]
+        let slots_total = step_exec.slots;
+        if slots_total < a {
+            bail!("slot count {slots_total} < adapter count {a}");
+        }
+        let mut slot_block = vec![0.0f32; slots_total];
+        slot_block[..a].copy_from_slice(&adapters0);
+        let mut state = TrainState::from_parts(self.rt, &base, &slot_block, model.n_metrics)?;
+
+        let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, cfg.seed)?;
+        let mut curve = Vec::new();
+        let mut train_losses = Vec::with_capacity(cfg.steps);
+        let mut ema = crate::util::stats::Ema::new(0.95);
+        let mut diverged = false;
+        let mut step_seconds = 0.0f64;
+
+        for t in 0..cfg.steps {
+            let batch = loader.next_batch();
+            let seed = (cfg.seed as u32, t as u32);
+            let t0 = std::time::Instant::now();
+            step_exec.run(self.rt, &mut state, &batch.tokens, &batch.labels, seed)?;
+            let mets = StepMetrics::from_tail(&state.metrics(self.rt)?)?;
+            step_seconds += t0.elapsed().as_secs_f64();
+            let loss = mets.train_loss;
+            train_losses.push(loss);
+            let smoothed = ema.update(loss as f64);
+
+            if !loss.is_finite() || loss > DIVERGENCE_LOSS {
+                diverged = true;
+                break;
+            }
+            let is_last = t + 1 == cfg.steps;
+            if (cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0) || is_last {
+                let adapters = state.segment_slots(self.rt, a)?;
+                let dev = self.eval(model, &logits, &base_buf, &adapters, &dataset.dev, cfg.eval_cap)?;
+                curve.push(CurvePoint {
+                    step: t + 1,
+                    dev_accuracy: dev.accuracy(),
+                    dev_loss: dev.mean_loss,
+                    train_loss_ema: smoothed,
+                });
+                crate::info!(
+                    "[{}] step {}/{} dev acc {:.3}",
+                    cfg.label(),
+                    t + 1,
+                    cfg.steps,
+                    dev.accuracy()
+                );
+            }
+        }
+
+        let adapters = state.segment_slots(self.rt, a)?;
+        let test = if !diverged {
+            Some(self.eval(model, &logits, &base_buf, &adapters, &dataset.test, 0)?)
+        } else {
+            None
+        };
+        let steps_run = train_losses.len();
+        Ok(TrainResult {
+            config_label: cfg.label(),
+            steps_run,
+            curve,
+            final_dev: None,
+            test,
+            diverged,
+            wallclock_s: t_total.elapsed().as_secs_f64(),
+            sec_per_step: step_seconds / steps_run.max(1) as f64,
+            params: adapters,
+            train_losses,
+        })
+    }
+}
+
+impl TrainState {
+    /// First `n` floats of the slot block (the adapter segment).
+    pub fn segment_slots(&self, rt: &Runtime, n: usize) -> Result<Vec<f32>> {
+        if n > self.s {
+            bail!("slot segment {n} > slots {}", self.s);
+        }
+        rt.download_f32_at(&self.buffer, self.p, n)
+    }
+}

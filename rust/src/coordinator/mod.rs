@@ -1,0 +1,14 @@
+//! The coordinator: everything between raw artifacts and paper results.
+
+pub mod checkpoint;
+pub mod convergence;
+pub mod evaluator;
+pub mod experiments;
+pub mod lora;
+pub mod memory;
+pub mod pretrain;
+pub mod probe;
+pub mod report;
+pub mod schedule;
+pub mod sweep;
+pub mod trainer;

@@ -1,0 +1,173 @@
+//! Pretraining driver: first-order Adam on the LM objective over the
+//! synthetic corpus, producing the "pretrained" checkpoints every
+//! fine-tuning experiment starts from (DESIGN.md §2 — the substitute for
+//! downloading LLaMA/OPT/Mistral weights).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::data::corpus::Corpus;
+use crate::runtime::exec::{Hypers, InitExec, PretrainExec, StepMetrics};
+use crate::runtime::{Runtime, TrainState};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct PretrainConfig {
+    pub model: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig { model: "llama_tiny".into(), steps: 1500, lr: 3e-3, seed: 7, log_every: 100 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PretrainResult {
+    pub losses: Vec<f32>,
+    pub final_loss_ema: f64,
+    pub params: Vec<f32>,
+    pub sec_per_step: f64,
+}
+
+pub fn pretrain(rt: &Runtime, cfg: &PretrainConfig) -> Result<PretrainResult> {
+    let model = rt.model(&cfg.model)?.clone();
+    let hypers = Hypers { lr: cfg.lr, ..Hypers::default() };
+    let init = InitExec::load(rt, &model)?;
+    let params = init.run(rt, (cfg.seed as u32, 0x9e37))?;
+    let exec = PretrainExec::load(rt, &model, hypers)?;
+    let mut state = TrainState::from_params(rt, &params, exec.slots, model.n_metrics)?;
+    let mut corpus = Corpus::new(cfg.seed, model.seq_len);
+
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut ema = crate::util::stats::Ema::new(0.98);
+    let mut step_seconds = 0.0;
+    for t in 0..cfg.steps {
+        let tokens = corpus.batch(model.batch);
+        let t0 = std::time::Instant::now();
+        exec.run(rt, &mut state, &tokens, (cfg.seed as u32, t as u32))?;
+        let mets = StepMetrics::from_tail(&state.metrics(rt)?)?;
+        step_seconds += t0.elapsed().as_secs_f64();
+        losses.push(mets.train_loss);
+        let s = ema.update(mets.train_loss as f64);
+        if cfg.log_every > 0 && t % cfg.log_every == 0 {
+            crate::info!("[pretrain {}] step {t}/{} lm loss {:.4} (ema {s:.4})", cfg.model, cfg.steps, mets.train_loss);
+        }
+        if !mets.train_loss.is_finite() {
+            anyhow::bail!("pretraining diverged at step {t}");
+        }
+    }
+    Ok(PretrainResult {
+        final_loss_ema: ema.get(),
+        params: state.params_host(rt)?,
+        losses,
+        sec_per_step: step_seconds / cfg.steps.max(1) as f64,
+    })
+}
+
+/// Multi-task supervised tuning on HELD-OUT task data (data seed differs
+/// from every fine-tuning experiment's): the substitute for the broad
+/// instruction-ish pretraining a 7B checkpoint arrives with. It gives the
+/// base model real task *features* (the regime in which MeZO-style ZO
+/// works — Malladi et al.'s prompted-loss assumption) while leaving
+/// per-task headroom for the fine-tuning comparison.
+pub fn multitask_tune(
+    rt: &Runtime,
+    model_name: &str,
+    params: Vec<f32>,
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<f32>> {
+    use crate::data::batcher::TrainLoader;
+    use crate::data::tasks;
+    use crate::runtime::exec::{StepExec, StepMetrics, ThreshExec};
+
+    let model = rt.model(model_name)?.clone();
+    let hypers = Hypers { lr: 1e-3, ..Hypers::default() };
+    let thresholds = ThreshExec::load(rt, &model)?.run(rt, &params, 0.0)?;
+    let step = StepExec::load(rt, &model, "fo_adam", hypers, &thresholds)?;
+    let mut state = TrainState::from_params(rt, &params, step.slots, model.n_metrics)?;
+
+    // held-out data seed: multitask tuning must never see the fine-tuning
+    // splits (which use the experiment data seed)
+    let datasets: Vec<_> = tasks::ALL_TASKS
+        .iter()
+        .map(|t| tasks::generate_sized(t, seed ^ 0x9999, 600, 0, 0))
+        .collect::<Result<Vec<_>>>()?;
+    let mut loaders: Vec<TrainLoader> = datasets
+        .iter()
+        .map(|d| TrainLoader::new(&d.train, model.batch, model.seq_len, seed))
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut ema = crate::util::stats::Ema::new(0.98);
+    for t in 0..steps {
+        let idx = t % loaders.len();
+        let loader = &mut loaders[idx];
+        let batch = loader.next_batch();
+        step.run(rt, &mut state, &batch.tokens, &batch.labels, (seed as u32, t as u32))?;
+        let mets = StepMetrics::from_tail(&state.metrics(rt)?)?;
+        let s = ema.update(mets.train_loss as f64);
+        if t % 200 == 0 {
+            crate::info!("[multitask {model_name}] step {t}/{steps} loss {:.4} (ema {s:.4})", mets.train_loss);
+        }
+        if !mets.train_loss.is_finite() {
+            anyhow::bail!("multitask tuning diverged at step {t}");
+        }
+    }
+    state.params_host(rt)
+}
+
+/// Pretrain (or load a cached pretrain checkpoint) for `model`.
+/// Checkpoints land in `<ckpt_dir>/<model>_pretrained.bin`; every
+/// experiment shares them, so the expensive phase runs once per model.
+pub fn pretrained_params(
+    rt: &Runtime,
+    model_name: &str,
+    ckpt_dir: &Path,
+    cfg_override: Option<PretrainConfig>,
+) -> Result<Vec<f32>> {
+    let model = rt.model(model_name)?.clone();
+    let path = ckpt_dir.join(format!("{model_name}_pretrained.bin"));
+    if path.exists() {
+        match Checkpoint::load(&path, &model) {
+            Ok(ck) => {
+                crate::info!("loaded pretrained checkpoint {} (step {})", path.display(), ck.step);
+                return Ok(ck.params);
+            }
+            Err(e) => crate::info!("stale pretrain checkpoint ({e}); re-pretraining"),
+        }
+    }
+    let cfg = cfg_override.unwrap_or(PretrainConfig { model: model_name.into(), ..Default::default() });
+    let result = pretrain(rt, &cfg)?;
+    // phase 2: multi-task tuning on held-out data (see multitask_tune)
+    let mt_steps = cfg.steps / 2;
+    let params = multitask_tune(rt, model_name, result.params, mt_steps, cfg.seed)?;
+    Checkpoint {
+        model: model_name.into(),
+        n_params: params.len(),
+        step: cfg.steps + mt_steps,
+        params: params.clone(),
+        slots: vec![],
+        meta: Json::obj(vec![
+            ("kind", Json::Str("pretrain+multitask".into())),
+            ("lm_loss_ema", Json::Num(result.final_loss_ema)),
+            ("lr", Json::Num(cfg.lr as f64)),
+            ("multitask_steps", Json::Num(mt_steps as f64)),
+        ]),
+    }
+    .save(&path)?;
+    crate::info!(
+        "pretrained {model_name}: {} LM + {} multitask steps, lm loss ema {:.4} -> {}",
+        cfg.steps,
+        mt_steps,
+        result.final_loss_ema,
+        path.display()
+    );
+    Ok(params)
+}

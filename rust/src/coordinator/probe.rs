@@ -1,0 +1,120 @@
+//! The half-batch generalization probe on the *real* model — Fig. 2b and
+//! Fig. 4.
+//!
+//! Protocol (paper §3.1): draw a 2B batch, split into halves B1/B2;
+//! estimate the update on B1 (one ZO step via the AOT step program, or an
+//! FO-SGD step for the Fig-4 contrast); measure the loss change on both
+//! halves; keep the update and continue. P(loss increase) per epoch-sized
+//! window is the reported series.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::batcher::TrainLoader;
+use crate::data::Dataset;
+use crate::coordinator::evaluator::batch_loss;
+use crate::runtime::exec::{LogitsExec, StepExec, ThreshExec};
+use crate::runtime::{Runtime, TrainState};
+use crate::util::stats::wilson_interval;
+
+/// One window (epoch analog) of probe statistics.
+#[derive(Debug, Clone)]
+pub struct ProbeWindow {
+    pub window: usize,
+    pub n: usize,
+    pub up_same: usize,
+    pub up_held: usize,
+}
+
+impl ProbeWindow {
+    pub fn p_up_same(&self) -> f64 {
+        self.up_same as f64 / self.n.max(1) as f64
+    }
+    pub fn p_up_held(&self) -> f64 {
+        self.up_held as f64 / self.n.max(1) as f64
+    }
+    pub fn held_interval(&self) -> (f64, f64) {
+        wilson_interval(self.up_held, self.n, 1.96)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    pub optimizer: String,
+    pub windows: Vec<ProbeWindow>,
+}
+
+impl ProbeResult {
+    pub fn overall_up_same(&self) -> f64 {
+        let (u, n): (usize, usize) =
+            self.windows.iter().fold((0, 0), |(u, n), w| (u + w.up_same, n + w.n));
+        u as f64 / n.max(1) as f64
+    }
+    pub fn overall_up_held(&self) -> f64 {
+        let (u, n): (usize, usize) =
+            self.windows.iter().fold((0, 0), |(u, n), w| (u + w.up_held, n + w.n));
+        u as f64 / n.max(1) as f64
+    }
+}
+
+/// Run the probe for `steps` update steps, reporting per-`window` stats.
+/// `cfg.optimizer` selects the estimator: any ZO variant, or `fo_sgd` for
+/// the Fig-4 exact-gradient arm (both go through their exported step).
+pub fn half_batch_probe(
+    rt: &Runtime,
+    cfg: &TrainConfig,
+    dataset: &Dataset,
+    init_params: &[f32],
+    steps: usize,
+    window: usize,
+) -> Result<ProbeResult> {
+    let model = rt.model(&cfg.model)?.clone();
+    let thresh = ThreshExec::load(rt, &model)?;
+    let thresholds = thresh.run(rt, init_params, cfg.hypers.sparsity)?;
+    let step_exec = StepExec::load(rt, &model, &cfg.optimizer, cfg.hypers, &thresholds)?;
+    let logits = LogitsExec::load(rt, &model)?;
+    let prog = model.step_program(&cfg.optimizer)?;
+    let mut state =
+        TrainState::from_params(rt, init_params, prog.slots.unwrap_or(0), model.n_metrics)?;
+    let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, cfg.seed)?;
+
+    let mut windows: Vec<ProbeWindow> = Vec::new();
+    let mut cur = ProbeWindow { window: 0, n: 0, up_same: 0, up_held: 0 };
+    for t in 0..steps {
+        let (b1, b2) = loader.next_half_batches();
+        // loss before (both halves) — params pulled once, uploaded once
+        let params = state.params_host(rt)?;
+        let pbuf = logits.upload_params(rt, &params)?;
+        let l1_before = batch_loss(rt, &logits, &pbuf, &b1)?;
+        let l2_before = batch_loss(rt, &logits, &pbuf, &b2)?;
+        // one update step computed ON b1
+        step_exec.run(rt, &mut state, &b1.tokens, &b1.labels, (cfg.seed as u32, t as u32))?;
+        // loss after
+        let params = state.params_host(rt)?;
+        let pbuf = logits.upload_params(rt, &params)?;
+        let l1_after = batch_loss(rt, &logits, &pbuf, &b1)?;
+        let l2_after = batch_loss(rt, &logits, &pbuf, &b2)?;
+
+        cur.n += 1;
+        if l1_after > l1_before {
+            cur.up_same += 1;
+        }
+        if l2_after > l2_before {
+            cur.up_held += 1;
+        }
+        if cur.n == window || t + 1 == steps {
+            crate::info!(
+                "[probe {}] window {} P(up|same)={:.2} P(up|held)={:.2} (n={})",
+                cfg.optimizer,
+                cur.window,
+                cur.p_up_same(),
+                cur.p_up_held(),
+                cur.n
+            );
+            let next_idx = cur.window + 1;
+            windows.push(cur);
+            cur = ProbeWindow { window: next_idx, n: 0, up_same: 0, up_held: 0 };
+        }
+    }
+    Ok(ProbeResult { optimizer: cfg.optimizer.clone(), windows })
+}

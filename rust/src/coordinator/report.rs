@@ -1,0 +1,194 @@
+//! Report rendering: paper-style markdown tables + curve CSVs.
+//!
+//! Every repro subcommand funnels its numbers through here so results/
+//! contains a uniform set of `tableN.md` / `figN.csv` files that
+//! EXPERIMENTS.md references.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A markdown table builder with right-aligned numeric cells.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out.push('\n');
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())?;
+        crate::info!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Format an accuracy as the paper does (xx.x, percent).
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+/// Accuracy with a delta annotation against a baseline, paper-style:
+/// "80.7 (+9.0)".
+pub fn pct_delta(x: f64, baseline: f64) -> String {
+    let d = 100.0 * (x - baseline);
+    if d.abs() < 0.05 {
+        pct(x)
+    } else {
+        format!("{} ({}{:.1})", pct(x), if d > 0.0 { "+" } else { "" }, d)
+    }
+}
+
+/// Write a CSV of (x, series...) rows for figures.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row
+            .iter()
+            .map(|v| if v.is_finite() { format!("{v}") } else { String::new() })
+            .collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    crate::info!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Render a figure as an ASCII sparkline block (terminal-friendly "plot").
+pub fn ascii_curve(title: &str, series: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let mut out = format!("{title}\n");
+    let (mut xmin, mut xmax, mut ymin, mut ymax) =
+        (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+    for (_, pts) in series {
+        for &(x, y) in pts {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !xmin.is_finite() || xmax <= xmin {
+        return out;
+    }
+    if ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['o', 'x', '+', '*', '#', '@'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    out.push_str(&format!("  y: [{ymin:.3}, {ymax:.3}]\n"));
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("   x: [{xmin:.0}, {xmax:.0}]  legend: "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Test", &["Method", "RTE"]);
+        t.row(vec!["MeZO".into(), "71.7".into()]);
+        t.row(vec!["S-MeZO".into(), "80.7 (+9.0)".into()]);
+        let s = t.render();
+        assert!(s.contains("### Test"));
+        assert!(s.contains("| S-MeZO"));
+        // all data lines have the same width
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.807), "80.7");
+        assert_eq!(pct_delta(0.807, 0.717), "80.7 (+9.0)");
+        assert_eq!(pct_delta(0.5, 0.5), "50.0");
+        assert!(pct_delta(0.5, 0.6).contains("-10.0"));
+    }
+
+    #[test]
+    fn ascii_curve_renders() {
+        let s = ascii_curve(
+            "fig",
+            &[("a", vec![(0.0, 0.5), (100.0, 0.8)]), ("b", vec![(0.0, 0.5), (100.0, 0.6)])],
+            40,
+            8,
+        );
+        assert!(s.contains('o') && s.contains('x'));
+    }
+}

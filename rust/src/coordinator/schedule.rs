@@ -1,0 +1,87 @@
+//! Learning-rate schedules. MeZO-family runs use a constant LR (the
+//! paper's protocol); first-order baselines get optional warmup+decay.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// linear warmup over `warmup` steps then constant
+    Warmup { warmup: usize },
+    /// linear warmup then linear decay to zero at `total`
+    WarmupLinearDecay { warmup: usize, total: usize },
+    /// cosine decay to `floor_frac * base` at `total`
+    Cosine { total: usize, floor_frac: f64 },
+}
+
+impl Schedule {
+    /// LR multiplier at `step` (0-based).
+    pub fn factor(&self, step: usize) -> f64 {
+        match *self {
+            Schedule::Constant => 1.0,
+            Schedule::Warmup { warmup } => {
+                if warmup == 0 || step >= warmup {
+                    1.0
+                } else {
+                    (step + 1) as f64 / warmup as f64
+                }
+            }
+            Schedule::WarmupLinearDecay { warmup, total } => {
+                if step < warmup {
+                    return (step + 1) as f64 / warmup.max(1) as f64;
+                }
+                let span = total.saturating_sub(warmup).max(1) as f64;
+                let done = (step - warmup) as f64;
+                (1.0 - done / span).max(0.0)
+            }
+            Schedule::Cosine { total, floor_frac } => {
+                let t = (step as f64 / total.max(1) as f64).min(1.0);
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                floor_frac + (1.0 - floor_frac) * cos
+            }
+        }
+    }
+
+    pub fn lr_at(&self, base: f32, step: usize) -> f32 {
+        (base as f64 * self.factor(step)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        assert_eq!(Schedule::Constant.factor(0), 1.0);
+        assert_eq!(Schedule::Constant.factor(10_000), 1.0);
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = Schedule::Warmup { warmup: 10 };
+        assert!(s.factor(0) < s.factor(5));
+        assert_eq!(s.factor(10), 1.0);
+        assert_eq!(s.factor(100), 1.0);
+    }
+
+    #[test]
+    fn decay_hits_zero() {
+        let s = Schedule::WarmupLinearDecay { warmup: 10, total: 110 };
+        assert!((s.factor(110) - 0.0).abs() < 1e-9);
+        assert!(s.factor(60) > 0.4 && s.factor(60) < 0.6);
+    }
+
+    #[test]
+    fn cosine_monotone_down_with_floor() {
+        let s = Schedule::Cosine { total: 100, floor_frac: 0.1 };
+        assert!((s.factor(0) - 1.0).abs() < 1e-9);
+        assert!(s.factor(50) < s.factor(10));
+        assert!((s.factor(100) - 0.1).abs() < 1e-9);
+        assert!((s.factor(500) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lr_at_scales() {
+        let s = Schedule::Warmup { warmup: 4 };
+        assert!((s.lr_at(2.0, 0) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,96 @@
+//! Hyperparameter sweeps — the Fig-2a learning-rate sensitivity harness
+//! and the Table-10 sparsity sweep share this grid driver.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::Trainer;
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+
+/// Outcome of one grid cell.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub value: f64,
+    pub test_accuracy: Option<f64>,
+    pub best_dev_accuracy: f64,
+    pub diverged: bool,
+    pub final_train_loss: f64,
+}
+
+/// Which hyper the sweep varies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SweepAxis {
+    LearningRate,
+    Sparsity,
+}
+
+/// Run `base` once per grid value (shared dataset + paired seeds) and
+/// collect accuracy/divergence per cell.
+pub fn sweep(
+    rt: &Runtime,
+    base: &TrainConfig,
+    dataset: &Dataset,
+    axis: SweepAxis,
+    grid: &[f64],
+    init_params: Option<&[f32]>,
+) -> Result<Vec<SweepCell>> {
+    let model = rt.model(&base.model)?.clone();
+    let mut cells = Vec::with_capacity(grid.len());
+    for &v in grid {
+        let mut cfg = base.clone();
+        match axis {
+            SweepAxis::LearningRate => cfg.hypers.lr = v as f32,
+            SweepAxis::Sparsity => cfg.hypers.sparsity = v as f32,
+        }
+        crate::info!("[sweep {:?}={v}] starting ({})", axis, cfg.label());
+        let mut trainer = Trainer::new(rt, cfg);
+        if let Some(p) = init_params {
+            trainer.initial_override = Some(p.to_vec());
+        }
+        let result = trainer.run_on(&model, dataset)?;
+        cells.push(SweepCell {
+            value: v,
+            test_accuracy: result.test.map(|t| t.accuracy()),
+            best_dev_accuracy: result.best_dev_accuracy(),
+            diverged: result.diverged,
+            final_train_loss: *result.train_losses.last().unwrap_or(&f32::NAN) as f64,
+        });
+    }
+    Ok(cells)
+}
+
+/// Pick the best cell by dev accuracy, treating divergence as -inf
+/// (the paper's model-selection protocol: grid search on dev).
+pub fn best_cell(cells: &[SweepCell]) -> Option<&SweepCell> {
+    cells
+        .iter()
+        .filter(|c| !c.diverged)
+        .max_by(|a, b| a.best_dev_accuracy.partial_cmp(&b.best_dev_accuracy).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_cell_skips_divergence() {
+        let cells = vec![
+            SweepCell { value: 1e-3, test_accuracy: Some(0.7), best_dev_accuracy: 0.7, diverged: false, final_train_loss: 0.5 },
+            SweepCell { value: 1e-2, test_accuracy: None, best_dev_accuracy: 0.9, diverged: true, final_train_loss: f64::NAN },
+        ];
+        assert_eq!(best_cell(&cells).unwrap().value, 1e-3);
+    }
+
+    #[test]
+    fn best_cell_empty_on_all_diverged() {
+        let cells = vec![SweepCell {
+            value: 1.0,
+            test_accuracy: None,
+            best_dev_accuracy: 0.0,
+            diverged: true,
+            final_train_loss: f64::NAN,
+        }];
+        assert!(best_cell(&cells).is_none());
+    }
+}

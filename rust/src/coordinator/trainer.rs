@@ -1,0 +1,305 @@
+//! The ZO training loop (paper Algorithm 1, coordinator side).
+//!
+//! Per step the coordinator: draws a batch, derives the step seed, and
+//! dispatches the AOT-compiled step executable with the device-resident
+//! state. Everything heavier than the K-float metric readback stays on
+//! device. Evaluation snapshots (accuracy on dev) happen every
+//! `eval_every` steps and feed the convergence analysis of Fig. 1/3.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::evaluator::{self, EvalResult};
+use crate::coordinator::schedule::Schedule;
+use crate::data::batcher::TrainLoader;
+use crate::data::{tasks, Dataset};
+use crate::runtime::exec::{Hypers, InitExec, LogitsExec, StepExec, StepMetrics, ThreshExec};
+use crate::runtime::{Runtime, TrainState};
+use crate::util::json::Json;
+use crate::util::log::JsonlWriter;
+
+/// One point on an accuracy-over-steps curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub dev_accuracy: f64,
+    pub dev_loss: f64,
+    pub train_loss_ema: f64,
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub config_label: String,
+    pub steps_run: usize,
+    pub curve: Vec<CurvePoint>,
+    pub final_dev: Option<EvalResult>,
+    pub test: Option<EvalResult>,
+    pub diverged: bool,
+    pub wallclock_s: f64,
+    /// mean seconds per optimizer step (excluding eval pauses)
+    pub sec_per_step: f64,
+    /// final parameters (host) for downstream analysis / checkpointing
+    pub params: Vec<f32>,
+    pub train_losses: Vec<f32>,
+}
+
+impl TrainResult {
+    pub fn best_dev_accuracy(&self) -> f64 {
+        self.curve.iter().map(|c| c.dev_accuracy).fold(0.0, f64::max)
+    }
+}
+
+/// Training-loss threshold beyond which a ZO run counts as diverged
+/// (Fig. 2a's divergence detection; ln(512) ~ 6.24 is the uniform loss).
+pub const DIVERGENCE_LOSS: f32 = 9.0;
+
+/// Driver for one training run.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: TrainConfig,
+    pub schedule: Schedule,
+    /// stream per-step metrics here if set
+    pub jsonl: Option<JsonlWriter>,
+    /// evaluate on test at the end
+    pub eval_test: bool,
+    /// explicit initial parameters (pretrained weights shared across a
+    /// whole experiment table) — takes precedence over cfg.init_from
+    pub initial_override: Option<Vec<f32>>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Trainer<'rt> {
+        Trainer {
+            rt,
+            cfg,
+            schedule: Schedule::Constant,
+            jsonl: None,
+            eval_test: true,
+            initial_override: None,
+        }
+    }
+
+    pub fn with_jsonl(mut self, path: &std::path::Path) -> Result<Self> {
+        self.jsonl = Some(JsonlWriter::create(path)?);
+        Ok(self)
+    }
+
+    /// Resolve initial parameters: checkpoint if configured, else `init`.
+    fn initial_params(&self, model: &crate::runtime::ModelInfo) -> Result<Vec<f32>> {
+        if let Some(p) = &self.initial_override {
+            if p.len() != model.n_params {
+                bail!("initial_override has {} params, model expects {}", p.len(), model.n_params);
+            }
+            return Ok(p.clone());
+        }
+        if let Some(path) = &self.cfg.init_from {
+            let ck = Checkpoint::load(&PathBuf::from(path), model)
+                .with_context(|| format!("loading init checkpoint {path}"))?;
+            crate::info!("initialized from checkpoint {path} (step {})", ck.step);
+            Ok(ck.params)
+        } else {
+            let init = InitExec::load(self.rt, model)?;
+            init.run(self.rt, (self.cfg.seed as u32, 0x1717))
+        }
+    }
+
+    pub fn run(&mut self) -> Result<TrainResult> {
+        let cfg = self.cfg.clone();
+        cfg.validate()?;
+        let model = self.rt.model(&cfg.model)?.clone();
+        let dataset = tasks::generate(&cfg.task, cfg.seed)?;
+        self.run_on(&model, &dataset)
+    }
+
+    /// Run against an explicit dataset (the experiment harness shares one
+    /// dataset across methods so comparisons are paired).
+    pub fn run_on(
+        &mut self,
+        model: &crate::runtime::ModelInfo,
+        dataset: &Dataset,
+    ) -> Result<TrainResult> {
+        let cfg = self.cfg.clone();
+        let t_total = std::time::Instant::now();
+
+        // ---- setup ---------------------------------------------------------
+        if cfg.optimizer == "mezo_lora" || cfg.optimizer == "lora_fo" {
+            bail!("use LoraTrainer for adapter-based optimizers");
+        }
+        let params = self.initial_params(model)?;
+        let thresh = ThreshExec::load(self.rt, model)?;
+        let thresholds = thresh.run(self.rt, &params, cfg.hypers.sparsity)?;
+        let mut step_exec = StepExec::load(self.rt, model, &cfg.optimizer, cfg.hypers, &thresholds)?;
+        let logits = LogitsExec::load(self.rt, model)?;
+        let prog = model.step_program(&cfg.optimizer)?;
+        let slots = prog.slots.unwrap_or(0);
+        let mut state = TrainState::from_params(self.rt, &params, slots, model.n_metrics)?;
+
+        let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, cfg.seed)?;
+
+        // ---- loop ----------------------------------------------------------
+        let mut curve = Vec::new();
+        let mut train_losses = Vec::with_capacity(cfg.steps);
+        let mut ema = crate::util::stats::Ema::new(0.95);
+        let mut diverged = false;
+        let mut step_seconds = 0.0f64;
+        let mut current_lr = cfg.hypers.lr;
+
+        for t in 0..cfg.steps {
+            let lr = self.schedule.lr_at(cfg.hypers.lr, t);
+            if (lr - current_lr).abs() > f32::EPSILON * lr.abs().max(1e-12) {
+                step_exec.set_hypers(self.rt, Hypers { lr, ..cfg.hypers })?;
+                current_lr = lr;
+            }
+            let batch = loader.next_batch();
+            let seed = (cfg.seed as u32, t as u32);
+            let t0 = std::time::Instant::now();
+            step_exec.run(self.rt, &mut state, &batch.tokens, &batch.labels, seed)?;
+            let mets = StepMetrics::from_tail(&state.metrics(self.rt)?)?;
+            step_seconds += t0.elapsed().as_secs_f64();
+
+            let loss = mets.train_loss;
+            train_losses.push(loss);
+            let smoothed = ema.update(loss as f64);
+
+            if let Some(w) = &mut self.jsonl {
+                if cfg.log_every > 0 && t % cfg.log_every == 0 {
+                    w.write(&Json::obj(vec![
+                        ("step", Json::Num(t as f64)),
+                        ("loss", Json::Num(loss as f64)),
+                        ("loss_ema", Json::Num(smoothed)),
+                        ("l_plus", Json::Num(mets.l_plus as f64)),
+                        ("l_minus", Json::Num(mets.l_minus as f64)),
+                        ("proj_grad", Json::Num(mets.proj_grad as f64)),
+                        ("masked_frac", Json::Num(mets.masked_frac as f64)),
+                        ("lr", Json::Num(lr as f64)),
+                    ]))?;
+                }
+            }
+            if cfg.log_every > 0 && t % (cfg.log_every * 10) == 0 {
+                crate::debug!(
+                    "[{}] step {t}/{} loss {loss:.4} (ema {smoothed:.4}) g {:.3}",
+                    cfg.label(),
+                    cfg.steps,
+                    mets.proj_grad
+                );
+            }
+
+            // divergence detection (Fig. 2a)
+            if !loss.is_finite() || loss > DIVERGENCE_LOSS {
+                crate::info!("[{}] DIVERGED at step {t} (loss {loss})", cfg.label());
+                diverged = true;
+                break;
+            }
+
+            // periodic dev evaluation
+            let is_last = t + 1 == cfg.steps;
+            if (cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0) || is_last {
+                let p = state.params_host(self.rt)?;
+                let dev = evaluator::evaluate(self.rt, &logits, &p, &dataset.dev, cfg.eval_cap)?;
+                curve.push(CurvePoint {
+                    step: t + 1,
+                    dev_accuracy: dev.accuracy(),
+                    dev_loss: dev.mean_loss,
+                    train_loss_ema: smoothed,
+                });
+                if let Some(w) = &mut self.jsonl {
+                    w.write(&Json::obj(vec![
+                        ("step", Json::Num((t + 1) as f64)),
+                        ("dev_accuracy", Json::Num(dev.accuracy())),
+                        ("dev_loss", Json::Num(dev.mean_loss)),
+                    ]))?;
+                }
+                crate::info!(
+                    "[{}] step {}/{} dev acc {:.3} loss {:.3}",
+                    cfg.label(),
+                    t + 1,
+                    cfg.steps,
+                    dev.accuracy(),
+                    dev.mean_loss
+                );
+            }
+        }
+
+        // ---- final evaluation ----------------------------------------------
+        let params = state.params_host(self.rt)?;
+        let final_dev = curve.last().map(|c| EvalResult {
+            n: 0,
+            correct: 0,
+            mean_loss: c.dev_loss,
+        });
+        let test = if self.eval_test && !diverged {
+            Some(evaluator::evaluate(self.rt, &logits, &params, &dataset.test, 0)?)
+        } else {
+            None
+        };
+        if let Some(w) = &mut self.jsonl {
+            w.flush()?;
+        }
+        let steps_run = train_losses.len();
+        Ok(TrainResult {
+            config_label: cfg.label(),
+            steps_run,
+            curve,
+            final_dev,
+            test,
+            diverged,
+            wallclock_s: t_total.elapsed().as_secs_f64(),
+            sec_per_step: step_seconds / steps_run.max(1) as f64,
+            params,
+            train_losses,
+        })
+    }
+}
+
+/// Zero-shot / in-context baselines share the eval path.
+pub fn zero_shot(
+    rt: &Runtime,
+    model_name: &str,
+    dataset: &Dataset,
+    params: &[f32],
+    cap: usize,
+) -> Result<EvalResult> {
+    let model = rt.model(model_name)?;
+    let logits = LogitsExec::load(rt, model)?;
+    evaluator::evaluate(rt, &logits, params, &dataset.test, cap)
+}
+
+/// In-context learning: k-shot prompts built from train examples.
+pub fn in_context(
+    rt: &Runtime,
+    model_name: &str,
+    dataset: &Dataset,
+    params: &[f32],
+    shots: usize,
+    cap: usize,
+) -> Result<EvalResult> {
+    let model = rt.model(model_name)?;
+    let logits = LogitsExec::load(rt, model)?;
+    let params_buf = logits.upload_params(rt, params)?;
+    let slice = if cap > 0 && cap < dataset.test.len() { &dataset.test[..cap] } else { &dataset.test };
+
+    // rebuild each test example with demonstrations prepended
+    let demo = &dataset.train[..shots.min(dataset.train.len())];
+    let prompted: Vec<crate::data::Example> = slice
+        .iter()
+        .map(|e| crate::data::Example {
+            prompt: tasks::icl_prompt(demo, e, model.seq_len),
+            label: e.label,
+            candidates: e.candidates.clone(),
+        })
+        .collect();
+    let mut total = EvalResult { n: 0, correct: 0, mean_loss: 0.0 };
+    for batch in crate::data::batcher::eval_batches(&prompted, model.batch, model.seq_len) {
+        let lg = logits.run(rt, &params_buf, &batch.tokens)?;
+        let r = evaluator::score_batch(&lg, model.vocab, &batch);
+        total.mean_loss = (total.mean_loss * total.n as f64 + r.mean_loss * r.n as f64)
+            / (total.n + r.n).max(1) as f64;
+        total.n += r.n;
+        total.correct += r.correct;
+    }
+    Ok(total)
+}

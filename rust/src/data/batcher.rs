@@ -1,0 +1,217 @@
+//! Batching: fixed-shape [B, T] token tensors for the AOT executables.
+//!
+//! The exported step/logits programs have *static* shapes, so the batcher's
+//! contract is strict: every batch is exactly B x T i32, left-padded with
+//! PAD=0 (the model is left-padding invariant — tested in
+//! python/tests/test_model.py), labels are length B. Epoch order is
+//! shuffled with a deterministic per-epoch seed; the final partial batch
+//! wraps around (training) or is masked by `real` counts (evaluation).
+
+use anyhow::{bail, Result};
+
+use super::{vocab as V, Example};
+use crate::util::prng::Pcg32;
+
+/// One fixed-shape batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// row-major [B, T]
+    pub tokens: Vec<i32>,
+    /// [B]
+    pub labels: Vec<i32>,
+    /// number of non-duplicated examples (== B except the eval tail batch)
+    pub real: usize,
+    /// per-row candidate sets (evaluation scoring)
+    pub candidates: Vec<Vec<i32>>,
+}
+
+/// Left-pad (or tail-truncate) a prompt to `t` tokens.
+pub fn pad_prompt(prompt: &[i32], t: usize) -> Vec<i32> {
+    let mut row = vec![V::PAD; t];
+    if prompt.len() >= t {
+        row.copy_from_slice(&prompt[prompt.len() - t..]);
+    } else {
+        row[t - prompt.len()..].copy_from_slice(prompt);
+    }
+    row
+}
+
+/// Assemble a batch from explicit examples (duplicating the last to fill).
+pub fn make_batch(examples: &[&Example], b: usize, t: usize) -> Result<Batch> {
+    if examples.is_empty() || examples.len() > b {
+        bail!("make_batch: got {} examples for batch size {b}", examples.len());
+    }
+    let mut tokens = Vec::with_capacity(b * t);
+    let mut labels = Vec::with_capacity(b);
+    let mut candidates = Vec::with_capacity(b);
+    for i in 0..b {
+        let e = examples[i.min(examples.len() - 1)];
+        tokens.extend(pad_prompt(&e.prompt, t));
+        labels.push(e.label);
+        candidates.push(e.candidates.clone());
+    }
+    Ok(Batch { tokens, labels, real: examples.len(), candidates })
+}
+
+/// Deterministic epoch-shuffled training batch stream.
+pub struct TrainLoader<'a> {
+    examples: &'a [Example],
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+    pub b: usize,
+    pub t: usize,
+}
+
+impl<'a> TrainLoader<'a> {
+    pub fn new(examples: &'a [Example], b: usize, t: usize, seed: u64) -> Result<TrainLoader<'a>> {
+        if examples.is_empty() {
+            bail!("TrainLoader: empty dataset");
+        }
+        let mut loader = TrainLoader {
+            examples,
+            order: (0..examples.len()).collect(),
+            cursor: 0,
+            epoch: 0,
+            seed,
+            b,
+            t,
+        };
+        loader.reshuffle();
+        Ok(loader)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Pcg32::new(self.seed ^ 0x5eed, self.epoch.wrapping_add(1));
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next batch; rolls into a fresh epoch (reshuffled) when exhausted.
+    pub fn next_batch(&mut self) -> Batch {
+        let mut picked = Vec::with_capacity(self.b);
+        for _ in 0..self.b {
+            if self.cursor >= self.order.len() {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            picked.push(&self.examples[self.order[self.cursor]]);
+            self.cursor += 1;
+        }
+        make_batch(&picked, self.b, self.t).expect("make_batch invariants")
+    }
+
+    /// Two disjoint half-batches from the same draw — the Fig-2b probe's
+    /// B_t = {B_t^1, B_t^2} split (paper §3.1).
+    pub fn next_half_batches(&mut self) -> (Batch, Batch) {
+        let full = {
+            let mut picked = Vec::with_capacity(2 * self.b);
+            for _ in 0..2 * self.b {
+                if self.cursor >= self.order.len() {
+                    self.epoch += 1;
+                    self.reshuffle();
+                }
+                picked.push(&self.examples[self.order[self.cursor]]);
+                self.cursor += 1;
+            }
+            picked
+        };
+        let b1 = make_batch(&full[..self.b], self.b, self.t).unwrap();
+        let b2 = make_batch(&full[self.b..], self.b, self.t).unwrap();
+        (b1, b2)
+    }
+}
+
+/// Evaluation batches in dataset order, last batch padded with `real` set.
+pub fn eval_batches(examples: &[Example], b: usize, t: usize) -> Vec<Batch> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < examples.len() {
+        let hi = (i + b).min(examples.len());
+        let refs: Vec<&Example> = examples[i..hi].iter().collect();
+        out.push(make_batch(&refs, b, t).expect("eval batch"));
+        i = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks;
+
+    fn ds() -> crate::data::Dataset {
+        tasks::generate_sized("rte", 3, 37, 0, 11).unwrap()
+    }
+
+    #[test]
+    fn pad_left_and_truncate() {
+        let p = pad_prompt(&[5, 6, 7], 6);
+        assert_eq!(p, vec![0, 0, 0, 5, 6, 7]);
+        let q = pad_prompt(&[1, 2, 3, 4, 5], 3);
+        assert_eq!(q, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn batches_always_fixed_shape() {
+        let d = ds();
+        let mut loader = TrainLoader::new(&d.train, 8, 32, 1).unwrap();
+        for _ in 0..20 {
+            let b = loader.next_batch();
+            assert_eq!(b.tokens.len(), 8 * 32);
+            assert_eq!(b.labels.len(), 8);
+            assert_eq!(b.real, 8);
+        }
+        // 20 batches of 8 over 37 examples => epoch advanced
+        assert!(loader.epoch() >= 3);
+    }
+
+    #[test]
+    fn epoch_reshuffles_deterministically() {
+        let d = ds();
+        let mut a = TrainLoader::new(&d.train, 4, 32, 9).unwrap();
+        let mut b = TrainLoader::new(&d.train, 4, 32, 9).unwrap();
+        for _ in 0..30 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+        let mut c = TrainLoader::new(&d.train, 4, 32, 10).unwrap();
+        let same: bool = (0..10).all(|_| a.next_batch().tokens == c.next_batch().tokens);
+        assert!(!same);
+    }
+
+    #[test]
+    fn each_epoch_covers_all_examples() {
+        let d = ds();
+        let mut loader = TrainLoader::new(&d.train, 1, 32, 5).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..37 {
+            let b = loader.next_batch();
+            seen.insert(b.tokens.clone());
+        }
+        assert_eq!(seen.len(), 37, "epoch must visit each example once");
+    }
+
+    #[test]
+    fn eval_tail_batch_real_count() {
+        let d = ds();
+        let batches = eval_batches(&d.test, 4, 32);
+        assert_eq!(batches.len(), 3); // 11 examples -> 4+4+3
+        assert_eq!(batches[2].real, 3);
+        assert_eq!(batches[2].tokens.len(), 4 * 32);
+    }
+
+    #[test]
+    fn half_batches_disjoint() {
+        let d = ds();
+        let mut loader = TrainLoader::new(&d.train, 8, 32, 2).unwrap();
+        let (a, b) = loader.next_half_batches();
+        assert_ne!(a.tokens, b.tokens);
+        assert_eq!(a.real, 8);
+        assert_eq!(b.real, 8);
+    }
+}

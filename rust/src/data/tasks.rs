@@ -1,0 +1,551 @@
+//! Planted-rule synthetic task generators (SuperGLUE analogs).
+//!
+//! Each generator produces i.i.d. examples from a fixed rule with
+//! controlled difficulty (distractors, lengths) and balanced labels, then
+//! splits into train/dev/test with fingerprint-based leakage removal.
+//! Prompts are capped at [`MAX_PROMPT`] tokens so they fit every exported
+//! sequence length.
+//!
+//! | analog  | planted rule |
+//! |---------|--------------|
+//! | sst2    | majority sentiment polarity of the lexicon tokens present |
+//! | rte     | hypothesis tokens are a subset of premise tokens |
+//! | boolq   | queried token occurs in the passage |
+//! | wic     | the two contexts draw from the same sense cluster of the word |
+//! | multirc | candidate answer occurs within distance 2 of the question token |
+//! | copa    | pick the candidate sharing the premise's topic cluster |
+//! | piqa    | pick the "action" from the object's cluster (more distractors) |
+//! | siqa    | pick the in-cluster candidate under cross-cluster noise |
+//! | aqua    | answer (a + b) mod 10 as a digit token (10-way) |
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use super::vocab as V;
+use super::{Dataset, Example};
+use crate::util::prng::Pcg32;
+
+/// Longest prompt any generator may emit (min exported seq_len is 32).
+pub const MAX_PROMPT: usize = 30;
+
+pub const ALL_TASKS: [&str; 9] =
+    ["sst2", "rte", "boolq", "wic", "multirc", "copa", "piqa", "siqa", "aqua"];
+
+/// Paper-matching split sizes (1,000 training examples; §4.1).
+pub const N_TRAIN: usize = 1000;
+pub const N_DEV: usize = 500;
+pub const N_TEST: usize = 1000;
+
+/// Generate a dataset for `task` with canonical split sizes.
+pub fn generate(task: &str, seed: u64) -> Result<Dataset> {
+    generate_sized(task, seed, N_TRAIN, N_DEV, N_TEST)
+}
+
+pub fn generate_sized(
+    task: &str,
+    seed: u64,
+    n_train: usize,
+    n_dev: usize,
+    n_test: usize,
+) -> Result<Dataset> {
+    let gen: fn(&mut Pcg32) -> Example = match task {
+        "sst2" => gen_sst2,
+        "rte" => gen_rte,
+        "boolq" => gen_boolq,
+        "wic" => gen_wic,
+        "multirc" => gen_multirc,
+        "copa" => gen_copa,
+        "piqa" => gen_piqa,
+        "siqa" => gen_siqa,
+        "aqua" => gen_aqua,
+        other => bail!("unknown task '{other}' (known: {})", ALL_TASKS.join(", ")),
+    };
+    let mut rng = Pcg32::from_name(seed, task);
+    let total = n_train + n_dev + n_test;
+    let mut seen = HashSet::new();
+    let mut examples = Vec::with_capacity(total);
+    let mut attempts = 0usize;
+    while examples.len() < total {
+        attempts += 1;
+        if attempts > total * 200 {
+            bail!("task '{task}': cannot generate {total} distinct examples");
+        }
+        let e = gen(&mut rng);
+        debug_assert!(e.prompt.len() <= MAX_PROMPT, "{task} prompt too long: {}", e.prompt.len());
+        debug_assert!(e.candidates.contains(&e.label));
+        if seen.insert(e.fingerprint()) {
+            examples.push(e);
+        }
+    }
+    let test = examples.split_off(n_train + n_dev);
+    let dev = examples.split_off(n_train);
+    Ok(Dataset { task: task.to_string(), train: examples, dev, test })
+}
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn pick_range(rng: &mut Pcg32, r: std::ops::Range<i32>) -> i32 {
+    r.start + rng.below((r.end - r.start) as u32) as i32
+}
+
+fn pick_n_distinct(rng: &mut Pcg32, r: std::ops::Range<i32>, n: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(n);
+    let mut guard = 0;
+    while out.len() < n {
+        let t = pick_range(rng, r.clone());
+        if !out.contains(&t) {
+            out.push(t);
+        }
+        guard += 1;
+        assert!(guard < 10_000, "range too small for {n} distinct tokens");
+    }
+    out
+}
+
+fn yesno(label: bool) -> (i32, Vec<i32>) {
+    (if label { V::YES } else { V::NO }, vec![V::YES, V::NO])
+}
+
+// ---------------------------------------------------------------------------
+// generators
+// ---------------------------------------------------------------------------
+
+/// SST-2 analog: 8–14 tokens; k_pos from the positive lexicon, k_neg from
+/// the negative, rest neutral filler, shuffled. Label = majority polarity
+/// (counts never tie).
+fn gen_sst2(rng: &mut Pcg32) -> Example {
+    let len = 8 + rng.below(7) as usize;
+    let label = rng.chance(0.5);
+    // majority margin of at least 1, both polarities may appear (realistic
+    // mixed reviews)
+    let minor = rng.below(3) as usize;
+    let major = minor + 1 + rng.below(2) as usize;
+    let (n_pos, n_neg) = if label { (major, minor) } else { (minor, major) };
+    let mut toks = Vec::with_capacity(len);
+    for _ in 0..n_pos {
+        toks.push(pick_range(rng, V::POS_LEX));
+    }
+    for _ in 0..n_neg {
+        toks.push(pick_range(rng, V::NEG_LEX));
+    }
+    while toks.len() < len {
+        toks.push(pick_range(rng, V::FILLER));
+    }
+    rng.shuffle(&mut toks);
+    let (lab, candidates) = yesno(label);
+    Example { prompt: toks, label: lab, candidates }
+}
+
+/// RTE analog: premise (8–12 distinct content tokens) SEP hypothesis
+/// (3–4 tokens). Entailed: hypothesis sampled from the premise. Not
+/// entailed: at least one hypothesis token swapped for an out-of-premise
+/// token from the same cluster (so surface statistics stay close).
+fn gen_rte(rng: &mut Pcg32) -> Example {
+    let c = rng.below(V::N_CLUSTERS as u32) as i32;
+    let c2 = (c + 1 + rng.below(V::N_CLUSTERS as u32 - 1) as i32) % V::N_CLUSTERS;
+    let np = 8 + rng.below(5) as usize;
+    let mut premise = pick_n_distinct(rng, V::cluster(c), np.min(20));
+    // sprinkle 2 tokens from a second cluster for diversity
+    premise.extend(pick_n_distinct(rng, V::cluster(c2), 2));
+    rng.shuffle(&mut premise);
+
+    let nh = 3 + rng.below(2) as usize;
+    let mut hyp: Vec<i32> = Vec::new();
+    let mut idxs: Vec<usize> = (0..premise.len()).collect();
+    rng.shuffle(&mut idxs);
+    for i in idxs.into_iter().take(nh) {
+        hyp.push(premise[i]);
+    }
+    let label = rng.chance(0.5);
+    if !label {
+        // corrupt 1-2 hypothesis slots with tokens absent from the premise.
+        // Mostly (80%) the corruption comes from a FOREIGN cluster — a
+        // topical-consistency cue a small model can learn — and sometimes
+        // (20%) from the premise's own clusters, the hard exact-membership
+        // case that keeps ceiling below 100%.
+        let c3 = (c + 2 + rng.below(V::N_CLUSTERS as u32 - 3) as i32) % V::N_CLUSTERS;
+        let n_corrupt = 1 + rng.below(2) as usize;
+        for _ in 0..n_corrupt {
+            let slot = rng.below(hyp.len() as u32) as usize;
+            let mut guard = 0;
+            loop {
+                let pick_c = if rng.chance(0.8) {
+                    c3
+                } else if rng.chance(0.5) {
+                    c
+                } else {
+                    c2
+                };
+                let t = pick_range(rng, V::cluster(pick_c));
+                if !premise.contains(&t) {
+                    hyp[slot] = t;
+                    break;
+                }
+                guard += 1;
+                if guard > 1000 {
+                    break;
+                }
+            }
+        }
+    }
+    let mut prompt = premise;
+    prompt.push(V::SEP);
+    prompt.extend(hyp);
+    let (lab, candidates) = yesno(label);
+    Example { prompt, label: lab, candidates }
+}
+
+/// BoolQ analog: passage (12–18 tokens) SEP QRY w. Yes iff w occurs in the
+/// passage. Negatives query a token from the same cluster that is absent.
+fn gen_boolq(rng: &mut Pcg32) -> Example {
+    let c = rng.below(V::N_CLUSTERS as u32) as i32;
+    let np = 12 + rng.below(7) as usize;
+    let mut passage = Vec::with_capacity(np);
+    for _ in 0..np {
+        let r = if rng.chance(0.7) { V::cluster(c) } else { V::FILLER };
+        passage.push(pick_range(rng, r));
+    }
+    let label = rng.chance(0.5);
+    let w = if label {
+        *rng.choose(&passage)
+    } else if rng.chance(0.6) {
+        // easy negative: query from a foreign cluster (topical mismatch)
+        let c_far = (c + 1 + rng.below(V::N_CLUSTERS as u32 - 1) as i32) % V::N_CLUSTERS;
+        let mut guard = 0;
+        loop {
+            let t = pick_range(rng, V::cluster(c_far));
+            if !passage.contains(&t) {
+                break t;
+            }
+            guard += 1;
+            if guard > 1000 {
+                break V::FILLER.start;
+            }
+        }
+    } else {
+        // hard negative: same cluster, absent from the passage
+        let mut guard = 0;
+        loop {
+            let t = pick_range(rng, V::cluster(c));
+            if !passage.contains(&t) {
+                break t;
+            }
+            guard += 1;
+            if guard > 1000 {
+                break V::FILLER.start; // filler token surely absent enough
+            }
+        }
+    };
+    let mut prompt = passage;
+    prompt.push(V::SEP);
+    prompt.push(V::QRY);
+    prompt.push(w);
+    let (lab, candidates) = yesno(label);
+    Example { prompt, label: lab, candidates }
+}
+
+/// WIC analog: w SEP ctx1 SEP ctx2 where each context draws 4–5 tokens
+/// from one of w's two sense clusters (plus filler noise). Yes iff both
+/// contexts use the same sense.
+fn gen_wic(rng: &mut Pcg32) -> Example {
+    let w = pick_range(rng, V::WIC_WORDS);
+    let (sa, sb) = V::wic_senses(w);
+    let label = rng.chance(0.5);
+    let (c1, c2) = if label {
+        let s = if rng.chance(0.5) { sa } else { sb };
+        (s, s)
+    } else if rng.chance(0.5) {
+        (sa, sb)
+    } else {
+        (sb, sa)
+    };
+    let ctx = |c: i32, rng: &mut Pcg32| -> Vec<i32> {
+        let n = 4 + rng.below(2) as usize;
+        let mut out = pick_n_distinct(rng, V::cluster(c), n);
+        if rng.chance(0.5) {
+            out.push(pick_range(rng, V::FILLER));
+        }
+        rng.shuffle(&mut out);
+        out
+    };
+    let mut prompt = vec![w, V::SEP];
+    prompt.extend(ctx(c1, rng));
+    prompt.push(V::SEP);
+    prompt.extend(ctx(c2, rng));
+    let (lab, candidates) = yesno(label);
+    Example { prompt, label: lab, candidates }
+}
+
+/// MultiRC analog: paragraph containing the question token q somewhere;
+/// candidate answer a. Yes iff a occurs within distance 2 of q.
+fn gen_multirc(rng: &mut Pcg32) -> Example {
+    let c = rng.below(V::N_CLUSTERS as u32) as i32;
+    let np = 12 + rng.below(5) as usize;
+    let mut para: Vec<i32> = (0..np)
+        .map(|_| {
+            if rng.chance(0.75) {
+                pick_range(rng, V::cluster(c))
+            } else {
+                pick_range(rng, V::FILLER)
+            }
+        })
+        .collect();
+    let q = pick_range(rng, V::cluster(c));
+    let qpos = 1 + rng.below(np as u32 - 2) as usize;
+    para[qpos] = q;
+    let label = rng.chance(0.5);
+    let a = if label {
+        // answer adjacent to q (distance 1 or 2)
+        let d = 1 + rng.below(2) as i64;
+        let side = if rng.chance(0.5) { 1i64 } else { -1 };
+        let pos = (qpos as i64 + side * d).clamp(0, np as i64 - 1) as usize;
+        if pos == qpos {
+            para[(qpos + 1).min(np - 1)]
+        } else {
+            para[pos]
+        }
+    } else if rng.chance(0.6) {
+        // easy negative: answer from a foreign cluster
+        let c_far = (c + 1 + rng.below(V::N_CLUSTERS as u32 - 1) as i32) % V::N_CLUSTERS;
+        pick_range(rng, V::cluster(c_far))
+    } else {
+        // hard negative: in-cluster token far from q
+        let near: Vec<i32> = para
+            [qpos.saturating_sub(2)..(qpos + 3).min(np)]
+            .to_vec();
+        let mut guard = 0;
+        loop {
+            let t = pick_range(rng, V::cluster(c));
+            if !near.contains(&t) {
+                break t;
+            }
+            guard += 1;
+            if guard > 1000 {
+                break pick_range(rng, V::FILLER);
+            }
+        }
+    };
+    let mut prompt = para;
+    prompt.push(V::SEP);
+    prompt.push(V::QRY);
+    prompt.push(q);
+    prompt.push(V::SEP);
+    prompt.push(a);
+    let (lab, candidates) = yesno(label);
+    Example { prompt, label: lab, candidates }
+}
+
+/// Two-candidate topic-match scoring shared by copa/piqa/siqa.
+fn two_candidate(rng: &mut Pcg32, marker: i32, n_premise: usize, noise: f64) -> Example {
+    let c = rng.below(V::N_CLUSTERS as u32) as i32;
+    let c_wrong = (c + 1 + rng.below(V::N_CLUSTERS as u32 - 1) as i32) % V::N_CLUSTERS;
+    let mut premise: Vec<i32> = (0..n_premise)
+        .map(|_| {
+            if rng.chance(1.0 - noise) {
+                pick_range(rng, V::cluster(c))
+            } else {
+                pick_range(rng, V::FILLER)
+            }
+        })
+        .collect();
+    rng.shuffle(&mut premise);
+    let right = pick_range(rng, V::cluster(c));
+    let wrong = pick_range(rng, V::cluster(c_wrong));
+    // candidate order randomized; answer = the correct token itself
+    let (c1, c2) = if rng.chance(0.5) { (right, wrong) } else { (wrong, right) };
+    let mut prompt = premise;
+    prompt.push(marker);
+    prompt.push(c1);
+    prompt.push(V::SEP);
+    prompt.push(c2);
+    prompt.push(V::SEP);
+    Example { prompt, label: right, candidates: vec![c1, c2] }
+}
+
+/// COPA analog: premise + CAUSE/EFFECT marker, choose the continuation
+/// from the premise's topic cluster.
+fn gen_copa(rng: &mut Pcg32) -> Example {
+    let marker = if rng.chance(0.5) { V::CAUSE } else { V::EFFECT };
+    let n = 6 + rng.below(4) as usize;
+    two_candidate(rng, marker, n, 0.2)
+}
+
+/// PIQA analog: like copa, longer "physical context", more filler noise.
+fn gen_piqa(rng: &mut Pcg32) -> Example {
+    let n = 9 + rng.below(5) as usize;
+    two_candidate(rng, V::EFFECT, n, 0.35)
+}
+
+/// SIQA analog: shorter context, highest noise — the hardest 2-way task.
+fn gen_siqa(rng: &mut Pcg32) -> Example {
+    let n = 5 + rng.below(3) as usize;
+    two_candidate(rng, V::CAUSE, n, 0.45)
+}
+
+/// AQuA analog: small-operand addition, 10-way classification.
+/// prompt = d(a) PLUS d(b) EQ, answer = digit((a+b) mod 10). Operands are
+/// restricted to 0..=4 (25 patterns, carry-free) — full mod-10 arithmetic
+/// shows grokking-style delayed generalization that tiny models don't
+/// reach in a CPU-budget run; this keeps the task 10-way but learnable.
+fn gen_aqua(rng: &mut Pcg32) -> Example {
+    let a = rng.below(5);
+    let b = rng.below(5);
+    // pad with filler context so sequences aren't degenerate 4-token runs
+    let mut prompt = Vec::new();
+    let n_ctx = rng.below(4) as usize;
+    for _ in 0..n_ctx {
+        prompt.push(pick_range(rng, V::FILLER));
+    }
+    prompt.extend([V::digit(a), V::PLUS, V::digit(b), V::EQ]);
+    Example {
+        prompt,
+        label: V::digit((a + b) % 10),
+        candidates: (0..10).map(V::digit).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// in-context prompt construction (ICL baseline, paper Tables 1/11/13)
+// ---------------------------------------------------------------------------
+
+/// Build a k-shot prompt: `demo1 answer1 SEP ... query`. Truncates shots
+/// (keeping the query intact) to fit `max_len` — with seq_len 32 this is
+/// effectively one-shot, which EXPERIMENTS.md notes.
+pub fn icl_prompt(shots: &[Example], query: &Example, max_len: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    for s in shots {
+        let mut segment = s.prompt.clone();
+        segment.push(s.label);
+        segment.push(V::SEP);
+        if out.len() + segment.len() + query.prompt.len() > max_len {
+            break;
+        }
+        out.extend(segment);
+    }
+    out.extend(&query.prompt);
+    // if even the bare query overflows, keep its tail (answer cues are
+    // rightmost in every task format)
+    if out.len() > max_len {
+        out.drain(..out.len() - max_len);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate() {
+        for t in ALL_TASKS {
+            let ds = generate_sized(t, 7, 50, 20, 50).unwrap();
+            assert_eq!(ds.train.len(), 50, "{t}");
+            assert_eq!(ds.dev.len(), 20, "{t}");
+            assert_eq!(ds.test.len(), 50, "{t}");
+        }
+    }
+
+    #[test]
+    fn prompts_fit_and_labels_valid() {
+        for t in ALL_TASKS {
+            let ds = generate_sized(t, 3, 200, 0, 0).unwrap();
+            for e in &ds.train {
+                assert!(e.prompt.len() <= MAX_PROMPT, "{t}: {}", e.prompt.len());
+                assert!(!e.prompt.is_empty());
+                assert!(e.candidates.contains(&e.label), "{t}");
+                assert!(e.prompt.iter().all(|&tok| tok > 0 && (tok as usize) < V::SIZE), "{t}");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        for t in ["sst2", "rte", "boolq", "wic", "multirc"] {
+            let ds = generate_sized(t, 11, 600, 0, 0).unwrap();
+            let yes = ds.train.iter().filter(|e| e.label == V::YES).count();
+            assert!(
+                (yes as f64 / 600.0 - 0.5).abs() < 0.08,
+                "{t}: yes fraction {}",
+                yes as f64 / 600.0
+            );
+        }
+    }
+
+    #[test]
+    fn no_split_leakage() {
+        for t in ALL_TASKS {
+            let ds = generate_sized(t, 5, 150, 50, 150).unwrap();
+            let train: std::collections::HashSet<u64> =
+                ds.train.iter().map(|e| e.fingerprint()).collect();
+            for e in ds.test.iter().chain(ds.dev.iter()) {
+                assert!(!train.contains(&e.fingerprint()), "{t}: leak");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_sized("rte", 42, 20, 5, 20).unwrap();
+        let b = generate_sized("rte", 42, 20, 5, 20).unwrap();
+        assert_eq!(a.train, b.train);
+        let c = generate_sized("rte", 43, 20, 5, 20).unwrap();
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn rules_are_consistent() {
+        // verify the planted rule by re-deriving labels
+        let ds = generate_sized("boolq", 9, 300, 0, 0).unwrap();
+        for e in &ds.train {
+            let sep = e.prompt.iter().rposition(|&t| t == V::QRY).unwrap();
+            let w = e.prompt[sep + 1];
+            let passage = &e.prompt[..sep - 1];
+            let present = passage.contains(&w);
+            assert_eq!(e.label == V::YES, present);
+        }
+        let ds = generate_sized("aqua", 9, 200, 0, 0).unwrap();
+        for e in &ds.train {
+            let eq = e.prompt.iter().rposition(|&t| t == V::EQ).unwrap();
+            let a = e.prompt[eq - 3] - V::DIGIT_BASE;
+            let b = e.prompt[eq - 1] - V::DIGIT_BASE;
+            assert_eq!(e.label, V::digit(((a + b) % 10) as u32));
+        }
+    }
+
+    #[test]
+    fn copa_candidates_contain_answer_in_prompt() {
+        let ds = generate_sized("copa", 2, 100, 0, 0).unwrap();
+        for e in &ds.train {
+            assert_eq!(e.candidates.len(), 2);
+            // both candidates appear in the prompt (the scoring format)
+            for c in &e.candidates {
+                assert!(e.prompt.contains(c));
+            }
+        }
+    }
+
+    #[test]
+    fn majority_baseline_near_half() {
+        let ds = generate_sized("rte", 1, 100, 10, 400).unwrap();
+        let mb = ds.majority_baseline();
+        assert!(mb < 0.6, "degenerate labels: {mb}");
+    }
+
+    #[test]
+    fn icl_prompt_respects_budget() {
+        let ds = generate_sized("rte", 4, 10, 0, 10).unwrap();
+        let p = icl_prompt(&ds.train[..4], &ds.test[0], 32);
+        assert!(p.len() <= 32);
+        // query tail is preserved
+        let q = &ds.test[0].prompt;
+        assert_eq!(&p[p.len() - q.len().min(p.len())..], &q[q.len() - q.len().min(p.len())..]);
+    }
+
+    #[test]
+    fn unknown_task_errors() {
+        assert!(generate("nope", 0).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! The shared 512-token synthetic vocabulary.
+//!
+//! Layout (must stay in sync with `python/compile/configs.py::VOCAB` only
+//! in total size; the *structure* below is purely a data-layer concern):
+//!
+//! ```text
+//!   0          PAD (also the attention-mask sentinel in the model)
+//!   1          SEP        segment separator
+//!   2          QRY        question marker (boolq/multirc)
+//!   3..=5      YES / NO / MAYBE answer tokens
+//!   6..=15     DIGIT(0..9) answer tokens (aqua)
+//!   16         PLUS   17 EQ   18 CAUSE   19 EFFECT   20..=31 reserved
+//!   32..=63    polysemous "words" for WIC (each tied to 2 sense clusters)
+//!   64..=127   positive-sentiment lexicon
+//!   128..=191  negative-sentiment lexicon
+//!   192..=447  8 topic clusters x 32 tokens (copa/piqa/siqa/rte content)
+//!   448..=511  neutral filler
+//! ```
+
+pub const SIZE: usize = 512;
+
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+pub const QRY: i32 = 2;
+pub const YES: i32 = 3;
+pub const NO: i32 = 4;
+pub const MAYBE: i32 = 5;
+pub const PLUS: i32 = 16;
+pub const EQ: i32 = 17;
+pub const CAUSE: i32 = 18;
+pub const EFFECT: i32 = 19;
+
+pub const DIGIT_BASE: i32 = 6; // DIGIT(d) = 6 + d, d in 0..10
+
+pub const WIC_WORDS: std::ops::Range<i32> = 32..64;
+pub const POS_LEX: std::ops::Range<i32> = 64..128;
+pub const NEG_LEX: std::ops::Range<i32> = 128..192;
+pub const CLUSTER_BASE: i32 = 192;
+pub const CLUSTER_SIZE: i32 = 32;
+pub const N_CLUSTERS: i32 = 8;
+pub const FILLER: std::ops::Range<i32> = 448..512;
+
+pub fn digit(d: u32) -> i32 {
+    debug_assert!(d < 10);
+    DIGIT_BASE + d as i32
+}
+
+/// Tokens of topic cluster `c` (0..8).
+pub fn cluster(c: i32) -> std::ops::Range<i32> {
+    debug_assert!((0..N_CLUSTERS).contains(&c));
+    let lo = CLUSTER_BASE + c * CLUSTER_SIZE;
+    lo..lo + CLUSTER_SIZE
+}
+
+/// The two sense clusters of a WIC word: deterministic, distinct.
+pub fn wic_senses(word: i32) -> (i32, i32) {
+    debug_assert!(WIC_WORDS.contains(&word));
+    let a = (word - WIC_WORDS.start) % N_CLUSTERS;
+    let b = (a + 1 + (word - WIC_WORDS.start) / N_CLUSTERS % (N_CLUSTERS - 1)) % N_CLUSTERS;
+    (a, b)
+}
+
+/// Human-readable token names for report/debug output.
+pub fn name(tok: i32) -> String {
+    match tok {
+        PAD => "<pad>".into(),
+        SEP => "<sep>".into(),
+        QRY => "<qry>".into(),
+        YES => "yes".into(),
+        NO => "no".into(),
+        MAYBE => "maybe".into(),
+        PLUS => "+".into(),
+        EQ => "=".into(),
+        CAUSE => "because".into(),
+        EFFECT => "so".into(),
+        d if (DIGIT_BASE..DIGIT_BASE + 10).contains(&d) => format!("d{}", d - DIGIT_BASE),
+        w if WIC_WORDS.contains(&w) => format!("w{}", w - WIC_WORDS.start),
+        p if POS_LEX.contains(&p) => format!("pos{}", p - POS_LEX.start),
+        n if NEG_LEX.contains(&n) => format!("neg{}", n - NEG_LEX.start),
+        c if (CLUSTER_BASE..CLUSTER_BASE + N_CLUSTERS * CLUSTER_SIZE).contains(&c) => {
+            let rel = c - CLUSTER_BASE;
+            format!("c{}t{}", rel / CLUSTER_SIZE, rel % CLUSTER_SIZE)
+        }
+        f if FILLER.contains(&f) => format!("fill{}", f - FILLER.start),
+        other => format!("tok{other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_are_disjoint_and_cover() {
+        // end of clusters == start of filler; all regions in-vocab
+        assert_eq!(CLUSTER_BASE + N_CLUSTERS * CLUSTER_SIZE, FILLER.start);
+        assert_eq!(FILLER.end as usize, SIZE);
+        assert!(POS_LEX.end <= NEG_LEX.start);
+    }
+
+    #[test]
+    fn wic_senses_distinct() {
+        for w in WIC_WORDS {
+            let (a, b) = wic_senses(w);
+            assert_ne!(a, b, "word {w}");
+            assert!((0..N_CLUSTERS).contains(&a));
+            assert!((0..N_CLUSTERS).contains(&b));
+        }
+    }
+
+    #[test]
+    fn names_unique_over_vocab() {
+        let mut seen = std::collections::HashSet::new();
+        for t in 0..SIZE as i32 {
+            assert!(seen.insert(name(t)), "dup name for {t}");
+        }
+    }
+
+    #[test]
+    fn cluster_ranges() {
+        assert_eq!(cluster(0).start, 192);
+        assert_eq!(cluster(7).end, 448);
+    }
+}

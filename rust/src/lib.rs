@@ -1,0 +1,40 @@
+//! # sparse-mezo
+//!
+//! Production reproduction of **"Sparse MeZO: Less Parameters for Better
+//! Performance in Zeroth-Order LLM Fine-Tuning"** (Liu et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is **Layer 3**: the training coordinator. It owns the data
+//! pipeline, the ZO training loop, seed management, evaluation, sweeps,
+//! checkpointing, metrics and the experiment harness that regenerates every
+//! table and figure of the paper. The compute itself — model forward passes
+//! and the functional optimizer steps (Layer 2 JAX, with the Layer 1 Pallas
+//! fused mask+perturb kernels inside) — was AOT-lowered to HLO text by
+//! `python/compile/aot.py` and is executed through the PJRT C API (the
+//! `xla` crate). Python never runs at training time.
+//!
+//! ## Module map
+//! * [`util`] — hand-rolled substrates (JSON, TOML-subset config, CLI,
+//!   counter PRNG mirroring the Python/Pallas one, logging, stats).
+//! * [`runtime`] — PJRT client, artifact manifest, typed executables,
+//!   device-resident packed training state.
+//! * [`data`] — vocabulary, synthetic SuperGLUE-analog task generators,
+//!   pretraining corpus, batcher.
+//! * [`config`] — presets (models, tasks, optimizers) + experiment plans.
+//! * [`zo`] — a pure-Rust MLP + every ZO optimizer variant, used as a
+//!   property-testing substrate and cross-check (no PJRT needed).
+//! * [`coordinator`] — trainer, evaluator, LR schedules, sweeps,
+//!   convergence tracking, the Fig-2b/4 generalization probe, memory
+//!   model (Table 4), checkpoints, experiment registry, report rendering.
+//! * [`bench`] — the timing harness used by `cargo bench` targets.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod util;
+pub mod zo;
+
+/// Crate-wide result alias (anyhow is the only error dependency).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,390 @@
+//! sparse-mezo CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands:
+//!   pretrain         LM-pretrain a model on the synthetic corpus
+//!   train            fine-tune one (model, task, optimizer) run
+//!   eval             zero-shot / ICL evaluation of a checkpoint
+//!   sweep            LR or sparsity grid (Fig-2a harness)
+//!   probe            half-batch generalization probe (Fig-2b/4)
+//!   repro <exp>      regenerate a paper table/figure (or `all`)
+//!   memory-table     Table-4 memory model only (fast)
+//!   inspect          print manifest/model/layout information
+//!   check-artifacts  compile every artifact and run ABI smoke checks
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use sparse_mezo::config::{presets, TrainConfig};
+use sparse_mezo::coordinator::checkpoint::Checkpoint;
+use sparse_mezo::coordinator::experiments::{self, Ctx};
+use sparse_mezo::coordinator::lora::LoraTrainer;
+use sparse_mezo::coordinator::pretrain::{self, PretrainConfig};
+use sparse_mezo::coordinator::probe;
+use sparse_mezo::coordinator::sweep::{self, SweepAxis};
+use sparse_mezo::coordinator::trainer::{in_context, zero_shot, Trainer};
+use sparse_mezo::coordinator::report::Table;
+use sparse_mezo::data::tasks;
+use sparse_mezo::info;
+use sparse_mezo::runtime::Runtime;
+use sparse_mezo::util::cli::Args;
+use sparse_mezo::util::json::Json;
+use sparse_mezo::util::log;
+
+const USAGE: &str = "\
+sparse-mezo — Sparse MeZO reproduction (rust coordinator)
+
+USAGE: sparse-mezo <command> [options]
+
+COMMANDS
+  pretrain        --model M --steps N --lr X --seed S
+  train           --model M --task T --optimizer O [--steps N --lr X
+                  --eps X --sparsity X --seed S --eval-every N
+                  --init-from CKPT --save CKPT --config FILE.toml]
+  eval            --model M --task T [--ckpt CKPT --icl-shots K]
+  sweep           --model M --task T --optimizer O --axis lr|sparsity
+                  [--grid a,b,c --steps N]
+  probe           --model M --task T --optimizer O [--steps N]
+  repro           <table1|table2|table3|table4|table5|table10|table11|
+                   table13|fig1|fig2a|fig2b|fig2c|fig3|fig4|all>
+                  [--model M --out DIR --zo-steps N --seeds a,b --fast]
+  memory-table    [--model M --out DIR]
+  inspect         [--model M]
+  check-artifacts
+
+COMMON
+  --artifacts DIR   artifact directory (default: artifacts)
+  --verbose         debug logging
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["verbose", "fast", "no-test-eval"])?;
+    if args.flag("verbose") {
+        log::set_level(log::DEBUG);
+    }
+    let command = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing command\n{USAGE}"))?;
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+
+    match command {
+        "pretrain" => cmd_pretrain(&args, &artifacts),
+        "train" => cmd_train(&args, &artifacts),
+        "eval" => cmd_eval(&args, &artifacts),
+        "sweep" => cmd_sweep(&args, &artifacts),
+        "probe" => cmd_probe(&args, &artifacts),
+        "repro" => cmd_repro(&args, &artifacts),
+        "memory-table" => cmd_memory(&args, &artifacts),
+        "inspect" => cmd_inspect(&args, &artifacts),
+        "check-artifacts" => cmd_check(&artifacts),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_pretrain(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let cfg = PretrainConfig {
+        model: args.str_or("model", "llama_tiny"),
+        steps: args.usize_or("steps", 1500)?,
+        lr: args.f32_or("lr", 3e-3)?,
+        seed: args.u64_or("seed", 7)?,
+        log_every: args.usize_or("log-every", 100)?,
+    };
+    let result = pretrain::pretrain(&rt, &cfg)?;
+    // phase 2: multi-task tuning (skippable with --no-multitask 0 steps)
+    let mt_steps = args.usize_or("multitask-steps", cfg.steps / 2)?;
+    let params = if mt_steps > 0 {
+        pretrain::multitask_tune(&rt, &cfg.model, result.params, mt_steps, cfg.seed)?
+    } else {
+        result.params
+    };
+    let path = PathBuf::from(args.str_or("save", &format!("checkpoints/{}_pretrained.bin", cfg.model)));
+    Checkpoint {
+        model: cfg.model.clone(),
+        n_params: params.len(),
+        step: cfg.steps + mt_steps,
+        params,
+        slots: vec![],
+        meta: Json::obj(vec![
+            ("kind", Json::Str("pretrain+multitask".into())),
+            ("lm_loss_ema", Json::Num(result.final_loss_ema)),
+            ("multitask_steps", Json::Num(mt_steps as f64)),
+        ]),
+    }
+    .save(&path)?;
+    info!(
+        "pretrain done: lm loss ema {:.4}, {:.3}s/step, {mt_steps} multitask steps -> {}",
+        result.final_loss_ema,
+        result.sec_per_step,
+        path.display()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let model = args.str_or("model", "llama_tiny");
+    let task = args.str_or("task", "rte");
+    let optimizer = args.str_or("optimizer", "smezo");
+    let toml_path = args.get("config").map(PathBuf::from);
+    let mut cfg = TrainConfig::resolve(&model, &task, &optimizer, toml_path.as_deref())?;
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.hypers.lr = args.f32_or("lr", cfg.hypers.lr)?;
+    cfg.hypers.eps = args.f32_or("eps", cfg.hypers.eps)?;
+    cfg.hypers.sparsity = args.f32_or("sparsity", cfg.hypers.sparsity)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.eval_every = args.usize_or("eval-every", 200)?;
+    cfg.eval_cap = args.usize_or("eval-cap", 200)?;
+    cfg.init_from = args.get("init-from").map(|s| s.to_string()).or(cfg.init_from);
+    cfg.validate()?;
+
+    let model_info = rt.model(&cfg.model)?.clone();
+    let dataset = tasks::generate(&cfg.task, cfg.seed)?;
+    info!(
+        "train: {} | {} params | task {} (majority {:.3})",
+        cfg.label(),
+        model_info.n_params,
+        cfg.task,
+        dataset.majority_baseline()
+    );
+    let result = if optimizer == "mezo_lora" || optimizer == "lora_fo" {
+        let mut t = LoraTrainer::new(&rt, cfg.clone());
+        if let Some(ckpt) = &cfg.init_from {
+            t.base_params = Some(Checkpoint::load(&PathBuf::from(ckpt), &model_info)?.params);
+        }
+        t.run_on(&model_info, &dataset)?
+    } else {
+        let jsonl = PathBuf::from(format!("results/runs/{}.jsonl", cfg.label()));
+        let mut t = Trainer::new(&rt, cfg.clone()).with_jsonl(&jsonl)?;
+        t.eval_test = !args.flag("no-test-eval");
+        t.run_on(&model_info, &dataset)?
+    };
+
+    if let Some(save) = args.get("save") {
+        Checkpoint {
+            model: cfg.model.clone(),
+            n_params: result.params.len(),
+            step: result.steps_run,
+            params: result.params.clone(),
+            slots: vec![],
+            meta: Json::obj(vec![
+                ("task", Json::Str(cfg.task.clone())),
+                ("optimizer", Json::Str(cfg.optimizer.clone())),
+            ]),
+        }
+        .save(&PathBuf::from(save))?;
+    }
+    info!(
+        "done: steps {} | diverged {} | best dev {:.3} | test {} | {:.3}s/step",
+        result.steps_run,
+        result.diverged,
+        result.best_dev_accuracy(),
+        result.test.map(|t| format!("{:.3}", t.accuracy())).unwrap_or_else(|| "—".into()),
+        result.sec_per_step
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let model = args.str_or("model", "llama_tiny");
+    let task = args.str_or("task", "rte");
+    let model_info = rt.model(&model)?.clone();
+    let dataset = tasks::generate(&task, args.u64_or("seed", 1234)?)?;
+    let params = match args.get("ckpt") {
+        Some(p) => Checkpoint::load(&PathBuf::from(p), &model_info)?.params,
+        None => {
+            let init = sparse_mezo::runtime::exec::InitExec::load(&rt, &model_info)?;
+            init.run(&rt, (42, 0x1717))?
+        }
+    };
+    let zs = zero_shot(&rt, &model, &dataset, &params, 0)?;
+    println!("zero-shot: acc {:.3} loss {:.3} (n={})", zs.accuracy(), zs.mean_loss, zs.n);
+    let shots = args.usize_or("icl-shots", 4)?;
+    if shots > 0 {
+        let icl = in_context(&rt, &model, &dataset, &params, shots, 0)?;
+        println!("icl-{shots}:     acc {:.3} loss {:.3}", icl.accuracy(), icl.mean_loss);
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let model = args.str_or("model", "llama_tiny");
+    let task = args.str_or("task", "rte");
+    let optimizer = args.str_or("optimizer", "smezo");
+    let axis = match args.str_or("axis", "lr").as_str() {
+        "lr" => SweepAxis::LearningRate,
+        "sparsity" => SweepAxis::Sparsity,
+        other => bail!("unknown axis '{other}'"),
+    };
+    let grid: Vec<f64> = match args.get("grid") {
+        Some(g) => g
+            .split(',')
+            .map(|s| s.trim().parse().context("parsing --grid"))
+            .collect::<Result<_>>()?,
+        None => match axis {
+            SweepAxis::LearningRate => presets::ZO_LR_GRID.iter().map(|&x| x as f64).collect(),
+            SweepAxis::Sparsity => vec![0.0, 0.5, 0.6, 0.7, 0.8],
+        },
+    };
+    let mut cfg = TrainConfig::resolve(&model, &task, &optimizer, None)?;
+    cfg.steps = args.usize_or("steps", 600)?;
+    cfg.eval_every = args.usize_or("eval-every", 150)?;
+    cfg.eval_cap = args.usize_or("eval-cap", 200)?;
+    cfg.seed = args.u64_or("seed", 17)?;
+    let dataset = tasks::generate(&task, 1234)?;
+    let cells = sweep::sweep(&rt, &cfg, &dataset, axis, &grid, None)?;
+    let mut table = Table::new(
+        &format!("sweep {axis:?} — {model}/{task}/{optimizer}"),
+        &["value", "best dev", "test", "diverged"],
+    );
+    for c in &cells {
+        table.row(vec![
+            format!("{:.4}", c.value),
+            format!("{:.3}", c.best_dev_accuracy),
+            c.test_accuracy.map(|a| format!("{a:.3}")).unwrap_or_else(|| "—".into()),
+            if c.diverged { "yes".into() } else { "".into() },
+        ]);
+    }
+    print!("{}", table.render());
+    if let Some(best) = sweep::best_cell(&cells) {
+        println!("best: {} (dev {:.3})", best.value, best.best_dev_accuracy);
+    }
+    Ok(())
+}
+
+fn cmd_probe(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let model = args.str_or("model", "llama_tiny");
+    let task = args.str_or("task", "rte");
+    let optimizer = args.str_or("optimizer", "mezo");
+    let steps = args.usize_or("steps", 120)?;
+    let mut cfg = TrainConfig::resolve(&model, &task, &optimizer, None)?;
+    cfg.seed = args.u64_or("seed", 17)?;
+    let dataset = tasks::generate(&task, 1234)?;
+    let init = sparse_mezo::runtime::exec::InitExec::load(&rt, rt.model(&model)?)?;
+    let params = init.run(&rt, (cfg.seed as u32, 0x1717))?;
+    let res = probe::half_batch_probe(&rt, &cfg, &dataset, &params, steps, (steps / 6).max(1))?;
+    println!(
+        "{}: P(up|same)={:.2} P(up|held)={:.2}",
+        optimizer,
+        res.overall_up_same(),
+        res.overall_up_held()
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let what = args
+        .positionals
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("repro needs an experiment name (or 'all')"))?;
+    let rt = Runtime::new(artifacts)?;
+    let mut ctx = Ctx::new(&rt, PathBuf::from(args.str_or("out", "results")));
+    ctx.zo_steps = args.usize_or("zo-steps", ctx.zo_steps)?;
+    ctx.fo_steps = args.usize_or("fo-steps", ctx.fo_steps)?;
+    ctx.eval_every = args.usize_or("eval-every", ctx.eval_every)?;
+    ctx.eval_cap = args.usize_or("eval-cap", ctx.eval_cap)?;
+    ctx.pretrain_steps = args.usize_or("pretrain-steps", ctx.pretrain_steps)?;
+    ctx.seeds = args
+        .list_or("seeds", &["17"])
+        .iter()
+        .map(|s| s.parse().context("parsing --seeds"))
+        .collect::<Result<_>>()?;
+    if args.flag("fast") {
+        ctx.zo_steps = 300;
+        ctx.fo_steps = 60;
+        ctx.eval_every = 100;
+        ctx.eval_cap = 100;
+        ctx.pretrain_steps = 300;
+    }
+    let model = args.str_or("model", "llama_tiny");
+    let t0 = std::time::Instant::now();
+    experiments::run(&ctx, what, &model)?;
+    info!("repro {what} finished in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_memory(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let ctx = Ctx::new(&rt, PathBuf::from(args.str_or("out", "results")));
+    experiments::table4(&ctx, &args.str_or("model", "llama_tiny"))?;
+    // also print the 7B table to stdout for quick reading
+    let rows = sparse_mezo::coordinator::memory::table4_rows_7b();
+    for (name, b) in rows {
+        println!("{name:<22} {:>8.1} GB", b.gb());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    match args.get("model") {
+        None => {
+            println!("models in manifest:");
+            for (name, m) in &rt.manifest.models {
+                println!(
+                    "  {name:<16} {:>10} params  B={} T={} V={}  programs: {}",
+                    m.n_params,
+                    m.batch,
+                    m.seq_len,
+                    m.vocab,
+                    m.programs.len()
+                );
+            }
+        }
+        Some(name) => {
+            let m = rt.model(name)?;
+            println!("{name}: {} params, {} layout entries", m.n_params, m.n_entries);
+            for e in &m.layout {
+                println!(
+                    "  [{:>3}] {:<24} {:>12} {:?} @ {}",
+                    e.layer_id,
+                    e.name,
+                    format!("{:?}", e.shape),
+                    e.kind,
+                    e.offset
+                );
+            }
+            println!("programs:");
+            for (p, info) in &m.programs {
+                println!("  {p:<22} {}", info.file);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_check(artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let names: Vec<String> = rt.manifest.models.keys().cloned().collect();
+    for name in names {
+        let model = rt.model(&name)?.clone();
+        for (pname, prog) in &model.programs {
+            rt.load(prog).with_context(|| format!("{name}/{pname}"))?;
+        }
+        println!("{name}: {} programs compile OK", model.programs.len());
+    }
+    println!(
+        "all artifacts compile ({} executables, {:.1}s total compile time)",
+        rt.cached_executables(),
+        rt.total_compile_seconds()
+    );
+    Ok(())
+}

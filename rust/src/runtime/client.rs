@@ -1,0 +1,132 @@
+//! PJRT client wrapper + compiled-executable cache.
+//!
+//! Compilation of a step program takes O(seconds); every experiment in the
+//! repro harness reuses the same handful of programs, so executables are
+//! cached by artifact file name for the lifetime of the `Runtime`. The
+//! client is CPU PJRT (`PjRtClient::cpu()`); interchange is HLO text
+//! (see aot.py for why not serialized protos).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{Manifest, ModelInfo, ProgramInfo};
+
+/// Owns the PJRT client, the manifest, and the executable cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// cumulative compile seconds (perf accounting)
+    compile_seconds: RefCell<f64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        crate::info!(
+            "PJRT platform={} devices={} | {} models in manifest",
+            client.platform_name(),
+            client.device_count(),
+            manifest.models.len()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(0.0),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.manifest.model(name)
+    }
+
+    /// Load + compile (cached) one program.
+    pub fn load(&self, prog: &ProgramInfo) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&prog.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(prog);
+        let t0 = std::time::Instant::now();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parsing HLO {}: {e:?}", path.display()))
+            .with_context(|| "artifact missing or stale — run `make artifacts`")?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        let dt = t0.elapsed().as_secs_f64();
+        *self.compile_seconds.borrow_mut() += dt;
+        crate::debug!("compiled {} in {:.2}s", prog.file, dt);
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(prog.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn total_compile_seconds(&self) -> f64 {
+        *self.compile_seconds.borrow()
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    // ---- host <-> device helpers -----------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload u32 {dims:?}: {e:?}"))
+    }
+
+    /// Full f32 readback of a device buffer.
+    ///
+    /// NOTE: the TFRT CPU PJRT plugin does not implement `CopyRawToHost`
+    /// (partial raw reads), so readback goes through `to_literal_sync`,
+    /// which copies the whole buffer. On the CPU "device" this is a host
+    /// memcpy (~µs/MB); the packed-state design still avoids re-UPLOADING
+    /// parameters each step, which is the expensive direction. See
+    /// EXPERIMENTS.md §Perf for the measured cost.
+    pub fn download_f32(&self, buf: &PjRtBuffer, len: usize) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download f32[{len}]: {e:?}"))?;
+        let out: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+        if out.len() < len {
+            anyhow::bail!("buffer has {} elements, wanted {len}", out.len());
+        }
+        Ok(out)
+    }
+
+    /// Ranged readback (element offset). Falls back to a full literal copy
+    /// + host-side slice (see `download_f32`).
+    pub fn download_f32_at(&self, buf: &PjRtBuffer, offset: usize, len: usize) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download f32[{offset}..+{len}]: {e:?}"))?;
+        let all: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+        if offset + len > all.len() {
+            anyhow::bail!("range [{offset}, +{len}) out of buffer len {}", all.len());
+        }
+        Ok(all[offset..offset + len].to_vec())
+    }
+}

@@ -1,0 +1,412 @@
+//! Typed executable wrappers enforcing the packed-state ABI.
+//!
+//! Each wrapper pins the argument order/shapes of one exported program
+//! class so the coordinator can't mis-call an artifact. Constant inputs
+//! (hypers, thresholds) are uploaded once and reused across steps.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use xla::{PjRtBuffer, PjRtLoadedExecutable};
+
+use super::client::Runtime;
+use super::manifest::ModelInfo;
+use super::state::TrainState;
+
+/// The 8-slot hyperparameter vector (manifest.hyper_names order).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hypers {
+    pub lr: f32,
+    pub eps: f32,
+    pub sparsity: f32,
+    pub mask_seed: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    pub wd: f32,
+}
+
+impl Default for Hypers {
+    fn default() -> Self {
+        Hypers {
+            lr: 1e-3,
+            eps: 1e-3,
+            sparsity: 0.75,
+            mask_seed: 42.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+            wd: 0.0,
+        }
+    }
+}
+
+impl Hypers {
+    pub fn to_vec(self) -> Vec<f32> {
+        vec![
+            self.lr,
+            self.eps,
+            self.sparsity,
+            self.mask_seed,
+            self.beta1,
+            self.beta2,
+            self.adam_eps,
+            self.wd,
+        ]
+    }
+}
+
+/// Per-step metrics decoded from the packed tail
+/// (manifest.metric_names order).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepMetrics {
+    pub l_plus: f32,
+    pub l_minus: f32,
+    pub proj_grad: f32,
+    pub masked_frac: f32,
+    pub update_norm_sq: f32,
+    pub train_loss: f32,
+    pub accept: f32,
+}
+
+impl StepMetrics {
+    pub fn from_tail(tail: &[f32]) -> Result<StepMetrics> {
+        if tail.len() < 7 {
+            bail!("metric tail too short: {}", tail.len());
+        }
+        Ok(StepMetrics {
+            l_plus: tail[0],
+            l_minus: tail[1],
+            proj_grad: tail[2],
+            masked_frac: tail[3],
+            update_norm_sq: tail[4],
+            train_loss: tail[5],
+            accept: tail[6],
+        })
+    }
+}
+
+fn single_output(mut outs: Vec<Vec<PjRtBuffer>>, what: &str) -> Result<PjRtBuffer> {
+    if outs.len() != 1 || outs[0].len() != 1 {
+        bail!("{what}: expected 1 output buffer, got {}x{}", outs.len(),
+            outs.first().map(|v| v.len()).unwrap_or(0));
+    }
+    Ok(outs.remove(0).remove(0))
+}
+
+// ---------------------------------------------------------------------------
+// init
+// ---------------------------------------------------------------------------
+
+/// `init(seed u32[2]) -> params f32[P]`
+pub struct InitExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub n_params: usize,
+}
+
+impl InitExec {
+    pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<InitExec> {
+        let prog = model.program("init")?;
+        Ok(InitExec { exe: rt.load(prog)?, n_params: model.n_params })
+    }
+
+    /// Returns host params (they immediately get packed into a TrainState).
+    pub fn run(&self, rt: &Runtime, seed: (u32, u32)) -> Result<Vec<f32>> {
+        let seed_buf = rt.upload_u32(&[seed.0, seed.1], &[2])?;
+        let out = self.exe.execute_b(&[&seed_buf]).map_err(|e| anyhow::anyhow!("init: {e:?}"))?;
+        let buf = single_output(out, "init")?;
+        rt.download_f32(&buf, self.n_params)
+    }
+}
+
+/// `init_lora(seed u32[2]) -> adapters f32[A]`
+pub struct InitLoraExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub n_adapters: usize,
+}
+
+impl InitLoraExec {
+    pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<InitLoraExec> {
+        let prog = model.program("init_lora")?;
+        Ok(InitLoraExec { exe: rt.load(prog)?, n_adapters: model.n_lora_params })
+    }
+
+    pub fn run(&self, rt: &Runtime, seed: (u32, u32)) -> Result<Vec<f32>> {
+        let seed_buf = rt.upload_u32(&[seed.0, seed.1], &[2])?;
+        let out = self.exe.execute_b(&[&seed_buf]).map_err(|e| anyhow::anyhow!("init_lora: {e:?}"))?;
+        let buf = single_output(out, "init_lora")?;
+        rt.download_f32(&buf, self.n_adapters)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thresholds
+// ---------------------------------------------------------------------------
+
+/// `thresh(params f32[P], sparsity f32[1]) -> f32[L]`
+pub struct ThreshExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    n_entries: usize,
+    n_params: usize,
+}
+
+impl ThreshExec {
+    pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<ThreshExec> {
+        let prog = model.program("thresh")?;
+        Ok(ThreshExec { exe: rt.load(prog)?, n_entries: model.n_entries, n_params: model.n_params })
+    }
+
+    pub fn run(&self, rt: &Runtime, params: &[f32], sparsity: f32) -> Result<Vec<f32>> {
+        if params.len() != self.n_params {
+            bail!("thresh: params len {} != {}", params.len(), self.n_params);
+        }
+        let p_buf = rt.upload_f32(params, &[params.len()])?;
+        let s_buf = rt.upload_f32(&[sparsity], &[1])?;
+        let out = self.exe.execute_b(&[&p_buf, &s_buf]).map_err(|e| anyhow::anyhow!("thresh: {e:?}"))?;
+        let buf = single_output(out, "thresh")?;
+        rt.download_f32(&buf, self.n_entries)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// step
+// ---------------------------------------------------------------------------
+
+/// `step(state, tokens i32[B,T], labels i32[B], seed u32[2], hypers f32[8],
+///  thresholds f32[L]) -> state'`
+pub struct StepExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub optimizer: String,
+    pub slots: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    n_entries: usize,
+    hypers_buf: PjRtBuffer,
+    thresholds_buf: PjRtBuffer,
+}
+
+impl StepExec {
+    pub fn load(
+        rt: &Runtime,
+        model: &ModelInfo,
+        optimizer: &str,
+        hypers: Hypers,
+        thresholds: &[f32],
+    ) -> Result<StepExec> {
+        let prog = model.step_program(optimizer)?;
+        if thresholds.len() != model.n_entries {
+            bail!("thresholds len {} != n_entries {}", thresholds.len(), model.n_entries);
+        }
+        Ok(StepExec {
+            exe: rt.load(prog)?,
+            optimizer: optimizer.to_string(),
+            slots: prog.slots.unwrap_or(0),
+            batch: model.batch,
+            seq_len: model.seq_len,
+            n_entries: model.n_entries,
+            hypers_buf: rt.upload_f32(&hypers.to_vec(), &[8])?,
+            thresholds_buf: rt.upload_f32(thresholds, &[thresholds.len()])?,
+        })
+    }
+
+    /// Change hyperparameters mid-run (LR schedules / sweeps reuse the
+    /// compiled executable — re-upload is 32 bytes).
+    pub fn set_hypers(&mut self, rt: &Runtime, hypers: Hypers) -> Result<()> {
+        self.hypers_buf = rt.upload_f32(&hypers.to_vec(), &[8])?;
+        Ok(())
+    }
+
+    pub fn set_thresholds(&mut self, rt: &Runtime, thresholds: &[f32]) -> Result<()> {
+        if thresholds.len() != self.n_entries {
+            bail!("thresholds len {} != n_entries {}", thresholds.len(), self.n_entries);
+        }
+        self.thresholds_buf = rt.upload_f32(thresholds, &[thresholds.len()])?;
+        Ok(())
+    }
+
+    /// One optimizer step: chains the state buffer on device.
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        state: &mut TrainState,
+        tokens: &[i32],
+        labels: &[i32],
+        seed: (u32, u32),
+    ) -> Result<()> {
+        if tokens.len() != self.batch * self.seq_len {
+            bail!("tokens len {} != {}x{}", tokens.len(), self.batch, self.seq_len);
+        }
+        if labels.len() != self.batch {
+            bail!("labels len {} != batch {}", labels.len(), self.batch);
+        }
+        if state.s != self.slots {
+            bail!("state slots {} != optimizer '{}' slots {}", state.s, self.optimizer, self.slots);
+        }
+        let tok_buf = rt.upload_i32(tokens, &[self.batch, self.seq_len])?;
+        let lab_buf = rt.upload_i32(labels, &[self.batch])?;
+        let seed_buf = rt.upload_u32(&[seed.0, seed.1], &[2])?;
+        let out = self
+            .exe
+            .execute_b(&[
+                &state.buffer,
+                &tok_buf,
+                &lab_buf,
+                &seed_buf,
+                &self.hypers_buf,
+                &self.thresholds_buf,
+            ])
+            .map_err(|e| anyhow::anyhow!("step({}): {e:?}", self.optimizer))?;
+        state.replace(single_output(out, "step")?);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// logits (evaluation)
+// ---------------------------------------------------------------------------
+
+/// `logits(params f32[P], tokens i32[B,T]) -> f32[B,V]`
+/// (last-position logits; candidate scoring happens host-side)
+pub struct LogitsExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    n_params: usize,
+}
+
+impl LogitsExec {
+    pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<LogitsExec> {
+        let prog = model.program("logits")?;
+        Ok(LogitsExec {
+            exe: rt.load(prog)?,
+            batch: model.batch,
+            seq_len: model.seq_len,
+            vocab: model.vocab,
+            n_params: model.n_params,
+        })
+    }
+
+    /// Upload params once for a whole evaluation pass.
+    pub fn upload_params(&self, rt: &Runtime, params: &[f32]) -> Result<PjRtBuffer> {
+        if params.len() != self.n_params {
+            bail!("logits: params len {} != {}", params.len(), self.n_params);
+        }
+        rt.upload_f32(params, &[params.len()])
+    }
+
+    /// Last-position logits for one batch, row-major [B, V].
+    pub fn run(&self, rt: &Runtime, params_buf: &PjRtBuffer, tokens: &[i32]) -> Result<Vec<f32>> {
+        if tokens.len() != self.batch * self.seq_len {
+            bail!("logits: tokens len {} != {}x{}", tokens.len(), self.batch, self.seq_len);
+        }
+        let tok_buf = rt.upload_i32(tokens, &[self.batch, self.seq_len])?;
+        let out = self
+            .exe
+            .execute_b(&[params_buf, &tok_buf])
+            .map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let buf = single_output(out, "logits")?;
+        rt.download_f32(&buf, self.batch * self.vocab)
+    }
+}
+
+/// `logits_lora(params, adapters, tokens) -> f32[B,V]`
+pub struct LogitsLoraExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl LogitsLoraExec {
+    pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<LogitsLoraExec> {
+        let prog = model.program("logits_lora")?;
+        Ok(LogitsLoraExec {
+            exe: rt.load(prog)?,
+            batch: model.batch,
+            seq_len: model.seq_len,
+            vocab: model.vocab,
+        })
+    }
+
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        params_buf: &PjRtBuffer,
+        adapters_buf: &PjRtBuffer,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let tok_buf = rt.upload_i32(tokens, &[self.batch, self.seq_len])?;
+        let out = self
+            .exe
+            .execute_b(&[params_buf, adapters_buf, &tok_buf])
+            .map_err(|e| anyhow::anyhow!("logits_lora: {e:?}"))?;
+        let buf = single_output(out, "logits_lora")?;
+        rt.download_f32(&buf, self.batch * self.vocab)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pretrain
+// ---------------------------------------------------------------------------
+
+/// `pretrain(state, tokens i32[B,T], seed u32[2], hypers f32[8]) -> state'`
+pub struct PretrainExec {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub slots: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    hypers_buf: PjRtBuffer,
+}
+
+impl PretrainExec {
+    pub fn load(rt: &Runtime, model: &ModelInfo, hypers: Hypers) -> Result<PretrainExec> {
+        let prog = model.program("pretrain")?;
+        Ok(PretrainExec {
+            exe: rt.load(prog)?,
+            slots: prog.slots.unwrap_or(0),
+            batch: model.batch,
+            seq_len: model.seq_len,
+            hypers_buf: rt.upload_f32(&hypers.to_vec(), &[8])?,
+        })
+    }
+
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        state: &mut TrainState,
+        tokens: &[i32],
+        seed: (u32, u32),
+    ) -> Result<()> {
+        if tokens.len() != self.batch * self.seq_len {
+            bail!("pretrain: tokens len {} != {}x{}", tokens.len(), self.batch, self.seq_len);
+        }
+        let tok_buf = rt.upload_i32(tokens, &[self.batch, self.seq_len])?;
+        let seed_buf = rt.upload_u32(&[seed.0, seed.1], &[2])?;
+        let out = self
+            .exe
+            .execute_b(&[&state.buffer, &tok_buf, &seed_buf, &self.hypers_buf])
+            .map_err(|e| anyhow::anyhow!("pretrain: {e:?}"))?;
+        state.replace(single_output(out, "pretrain")?);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hypers_vector_order_matches_manifest() {
+        let h = Hypers { lr: 1.0, eps: 2.0, sparsity: 3.0, mask_seed: 4.0, beta1: 5.0, beta2: 6.0, adam_eps: 7.0, wd: 8.0 };
+        assert_eq!(h.to_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn metrics_decode() {
+        let m = StepMetrics::from_tail(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 0.0]).unwrap();
+        assert_eq!(m.l_plus, 1.0);
+        assert_eq!(m.accept, 7.0);
+        assert!(StepMetrics::from_tail(&[1.0]).is_err());
+    }
+}

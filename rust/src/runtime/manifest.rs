@@ -1,0 +1,284 @@
+//! `artifacts/manifest.json` — the L2->L3 ABI contract, parsed.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One flat-parameter layout entry (mirror of python layout.Entry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "matrix" (maskable) or "vector" (always dense)
+    pub kind: String,
+    pub offset: usize,
+    pub size: usize,
+    /// PRNG stream id == entry index
+    pub layer_id: usize,
+}
+
+/// One exported HLO program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramInfo {
+    pub file: String,
+    /// optimizer slot count (step programs only)
+    pub slots: Option<usize>,
+    /// full packed state length (step programs only)
+    pub state_len: Option<usize>,
+    /// output vector length (init / thresh)
+    pub out_len: Option<usize>,
+}
+
+/// One exported model.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub family: String,
+    pub size: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub window: usize,
+    pub n_params: usize,
+    pub n_lora_params: usize,
+    pub lora_rank: usize,
+    pub n_entries: usize,
+    pub n_hypers: usize,
+    pub n_metrics: usize,
+    pub layout: Vec<LayoutEntry>,
+    pub lora_layout: Vec<LayoutEntry>,
+    pub programs: BTreeMap<String, ProgramInfo>,
+}
+
+impl ModelInfo {
+    pub fn program(&self, name: &str) -> Result<&ProgramInfo> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{}' has no program '{name}' (have: {})",
+                self.name,
+                self.programs.keys().cloned().collect::<Vec<_>>().join(", ")))
+    }
+
+    pub fn step_program(&self, optimizer: &str) -> Result<&ProgramInfo> {
+        self.program(&format!("step_{optimizer}"))
+    }
+
+    /// Optimizer variants this model was exported with.
+    pub fn step_variants(&self) -> Vec<String> {
+        self.programs
+            .keys()
+            .filter_map(|k| k.strip_prefix("step_").map(|s| s.to_string()))
+            .collect()
+    }
+
+    /// Total parameter bytes (f32).
+    pub fn param_bytes(&self) -> usize {
+        self.n_params * 4
+    }
+
+    pub fn matrix_entries(&self) -> impl Iterator<Item = &LayoutEntry> {
+        self.layout.iter().filter(|e| e.kind == "matrix")
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub hyper_names: Vec<String>,
+    pub metric_names: Vec<String>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let version = root.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let hyper_names = str_vec(root.req("hyper_names")?)?;
+        let metric_names = str_vec(root.req("metric_names")?)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in root.req("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(name, m).with_context(|| format!("model {name}"))?);
+        }
+        if models.is_empty() {
+            bail!("manifest has no models");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), hyper_names, metric_names, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("model '{name}' not in manifest (have: {})",
+                self.models.keys().cloned().collect::<Vec<_>>().join(", "))
+        })
+    }
+
+    pub fn artifact_path(&self, prog: &ProgramInfo) -> PathBuf {
+        self.dir.join(&prog.file)
+    }
+
+    /// Index of a named hyper in the hypers vector.
+    pub fn hyper_index(&self, name: &str) -> Result<usize> {
+        self.hyper_names
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| anyhow!("unknown hyper '{name}'"))
+    }
+}
+
+fn str_vec(v: &Json) -> Result<Vec<String>> {
+    v.as_arr()?.iter().map(|x| Ok(x.as_str()?.to_string())).collect()
+}
+
+fn parse_layout(v: &Json) -> Result<Vec<LayoutEntry>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(LayoutEntry {
+                name: e.req("name")?.as_str()?.to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                kind: e.req("kind")?.as_str()?.to_string(),
+                offset: e.req("offset")?.as_usize()?,
+                size: e.req("size")?.as_usize()?,
+                layer_id: e.req("layer_id")?.as_usize()?,
+            })
+        })
+        .collect()
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    let mut programs = BTreeMap::new();
+    for (pname, p) in m.req("programs")?.as_obj()? {
+        programs.insert(
+            pname.clone(),
+            ProgramInfo {
+                file: p.req("file")?.as_str()?.to_string(),
+                slots: p.get("slots").map(|v| v.as_usize()).transpose()?,
+                state_len: p.get("state_len").map(|v| v.as_usize()).transpose()?,
+                out_len: p.get("out_len").map(|v| v.as_usize()).transpose()?,
+            },
+        );
+    }
+    let info = ModelInfo {
+        name: name.to_string(),
+        family: m.req("family")?.as_str()?.to_string(),
+        size: m.req("size")?.as_str()?.to_string(),
+        n_layers: m.req("n_layers")?.as_usize()?,
+        d_model: m.req("d_model")?.as_usize()?,
+        n_heads: m.req("n_heads")?.as_usize()?,
+        d_ff: m.req("d_ff")?.as_usize()?,
+        vocab: m.req("vocab")?.as_usize()?,
+        seq_len: m.req("seq_len")?.as_usize()?,
+        batch: m.req("batch")?.as_usize()?,
+        window: m.req("window")?.as_usize()?,
+        n_params: m.req("n_params")?.as_usize()?,
+        n_lora_params: m.req("n_lora_params")?.as_usize()?,
+        lora_rank: m.req("lora_rank")?.as_usize()?,
+        n_entries: m.req("n_entries")?.as_usize()?,
+        n_hypers: m.req("n_hypers")?.as_usize()?,
+        n_metrics: m.req("n_metrics")?.as_usize()?,
+        layout: parse_layout(m.req("layout")?)?,
+        lora_layout: parse_layout(m.req("lora_layout")?)?,
+        programs,
+    };
+    // ABI sanity: layout must tile [0, n_params) exactly.
+    let mut off = 0;
+    for e in &info.layout {
+        if e.offset != off {
+            bail!("layout entry '{}' offset {} != running {}", e.name, e.offset, off);
+        }
+        off += e.size;
+    }
+    if off != info.n_params {
+        bail!("layout covers {off} != n_params {}", info.n_params);
+    }
+    if info.n_entries != info.layout.len() {
+        bail!("n_entries mismatch");
+    }
+    Ok(info)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+ "version": 1,
+ "hyper_names": ["lr", "eps", "sparsity", "mask_seed", "beta1", "beta2", "adam_eps", "wd"],
+ "metric_names": ["l_plus", "l_minus", "proj_grad", "masked_frac", "update_norm_sq", "train_loss", "accept", "reserved"],
+ "models": {
+  "toy": {
+   "family": "llama", "size": "tiny", "n_layers": 1, "d_model": 4,
+   "n_heads": 1, "d_ff": 8, "vocab": 16, "seq_len": 8, "batch": 2,
+   "window": 0, "n_params": 72, "n_lora_params": 8, "lora_rank": 2,
+   "n_entries": 2, "n_hypers": 8, "n_metrics": 8,
+   "layout": [
+     {"name": "embed.tok", "shape": [16, 4], "kind": "matrix", "offset": 0, "size": 64, "layer_id": 0},
+     {"name": "final_norm", "shape": [8], "kind": "vector", "offset": 64, "size": 8, "layer_id": 1}
+   ],
+   "lora_layout": [
+     {"name": "a", "shape": [4, 2], "kind": "matrix", "offset": 0, "size": 8, "layer_id": 0}
+   ],
+   "programs": {
+     "init": {"file": "toy__init.hlo.txt", "out_len": 72},
+     "step_mezo": {"file": "toy__step_mezo.hlo.txt", "slots": 0, "state_len": 80}
+   }
+  }
+ }
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("smz_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.n_params, 72);
+        assert_eq!(toy.step_variants(), vec!["mezo".to_string()]);
+        assert_eq!(toy.step_program("mezo").unwrap().state_len, Some(80));
+        assert!(toy.step_program("smezo").is_err());
+        assert_eq!(m.hyper_index("eps").unwrap(), 1);
+        assert!(m.hyper_index("nope").is_err());
+        assert_eq!(toy.matrix_entries().count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_gapped_layout() {
+        let bad = fake_manifest_json().replace("\"offset\": 64", "\"offset\": 65");
+        let dir = std::env::temp_dir().join(format!("smz_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_helpful() {
+        let dir = std::env::temp_dir().join("smz_no_such_dir_xyz");
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Runtime: load + execute the AOT-compiled XLA programs via PJRT.
+//!
+//! The Python side (`python/compile/aot.py`) lowered every (model,
+//! optimizer) program to HLO text under `artifacts/` together with a
+//! `manifest.json` describing the packed-state ABI (DESIGN.md §3.1). This
+//! module is everything Rust needs to run them:
+//!
+//! * [`manifest`] — parse the manifest into typed structs.
+//! * [`client`] — PJRT CPU client wrapper + compiled-executable cache.
+//! * [`state`] — the device-resident packed training state
+//!   `[params | opt slots | metrics]` with partial host readback.
+//! * [`exec`] — typed wrappers (`StepExec`, `LogitsExec`, ...) that enforce
+//!   the ABI at the call site.
+
+pub mod client;
+pub mod exec;
+pub mod manifest;
+pub mod state;
+
+pub use client::Runtime;
+pub use manifest::{LayoutEntry, Manifest, ModelInfo, ProgramInfo};
+pub use state::TrainState;

@@ -1,0 +1,82 @@
+//! Device-resident packed training state.
+//!
+//! `state = [params f32[P] | opt slots f32[S] | metrics f32[K]]` lives as a
+//! single PJRT buffer and is *chained* through step executions via
+//! `execute_b` — parameters never round-trip through the host during
+//! training. The only per-step host traffic is the K-element metric tail
+//! (partial `copy_raw_to_host_sync`), which is the design that makes the
+//! coordinator overhead negligible (EXPERIMENTS.md §Perf).
+
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
+
+use super::client::Runtime;
+
+pub struct TrainState {
+    pub buffer: PjRtBuffer,
+    /// parameter count
+    pub p: usize,
+    /// optimizer slot count
+    pub s: usize,
+    /// metric slot count
+    pub k: usize,
+}
+
+impl TrainState {
+    pub fn state_len(&self) -> usize {
+        self.p + self.s + self.k
+    }
+
+    /// Assemble a fresh state on device from host parameters
+    /// (slots and metrics zeroed).
+    pub fn from_params(rt: &Runtime, params: &[f32], s: usize, k: usize) -> Result<TrainState> {
+        let mut host = Vec::with_capacity(params.len() + s + k);
+        host.extend_from_slice(params);
+        host.resize(params.len() + s + k, 0.0);
+        let buffer = rt.upload_f32(&host, &[host.len()])?;
+        Ok(TrainState { buffer, p: params.len(), s, k })
+    }
+
+    /// Assemble with pre-filled slots (checkpoint restore).
+    pub fn from_parts(rt: &Runtime, params: &[f32], slots: &[f32], k: usize) -> Result<TrainState> {
+        let mut host = Vec::with_capacity(params.len() + slots.len() + k);
+        host.extend_from_slice(params);
+        host.extend_from_slice(slots);
+        host.resize(params.len() + slots.len() + k, 0.0);
+        let buffer = rt.upload_f32(&host, &[host.len()])?;
+        Ok(TrainState { buffer, p: params.len(), s: slots.len(), k })
+    }
+
+    /// Adopt the output buffer of a step execution.
+    pub fn replace(&mut self, new_buffer: PjRtBuffer) {
+        self.buffer = new_buffer;
+    }
+
+    /// Read the K-element metric tail (cheap partial copy).
+    pub fn metrics(&self, rt: &Runtime) -> Result<Vec<f32>> {
+        rt.download_f32_at(&self.buffer, self.p + self.s, self.k)
+    }
+
+    /// Read the parameter prefix (checkpointing, eval, analysis).
+    pub fn params_host(&self, rt: &Runtime) -> Result<Vec<f32>> {
+        rt.download_f32_at(&self.buffer, 0, self.p)
+    }
+
+    /// Read one layout segment of the parameters.
+    pub fn segment_host(&self, rt: &Runtime, offset: usize, len: usize) -> Result<Vec<f32>> {
+        if offset + len > self.p {
+            bail!("segment [{offset}, +{len}) out of params range {}", self.p);
+        }
+        rt.download_f32_at(&self.buffer, offset, len)
+    }
+
+    /// Read optimizer slots (checkpointing).
+    pub fn slots_host(&self, rt: &Runtime) -> Result<Vec<f32>> {
+        rt.download_f32_at(&self.buffer, self.p, self.s)
+    }
+
+    /// Live device bytes held by this state (Table-4 measured accounting).
+    pub fn device_bytes(&self) -> usize {
+        self.state_len() * 4
+    }
+}

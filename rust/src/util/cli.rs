@@ -1,0 +1,162 @@
+//! Tiny CLI argument parser (clap is not in the vendored dependency set).
+//!
+//! Model: `binary <subcommand> [positionals] [--flag] [--key value]`.
+//! Typed getters with defaults; unknown-flag detection; auto-generated
+//! usage text assembled by the caller (main.rs).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). `bool_flags` lists flags that
+    /// take no value; everything else starting with `--` consumes one.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{name} requires a value"))?;
+                    out.options.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow!("--{name}: expected integer, got '{v}' ({e})")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: expected float, got '{v}' ({e})")),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(name, default as f64)? as f32)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow!("--{name}: expected u64, got '{v}' ({e})")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        }
+    }
+
+    /// Error on options the command does not understand (typo guard).
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &sv(&["train", "--task", "rte", "--steps=100", "--verbose", "extra"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positionals, sv(&["train", "extra"]));
+        assert_eq!(a.get("task"), Some("rte"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_and_types() {
+        let a = Args::parse(&sv(&["--lr", "2e-6"]), &[]).unwrap();
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 2e-6);
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("task", "boolq"), "boolq");
+        assert!(a.usize_or("lr", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--tasks", "rte, boolq,wic"]), &[]).unwrap();
+        assert_eq!(a.list_or("tasks", &[]), sv(&["rte", "boolq", "wic"]));
+        assert_eq!(a.list_or("absent", &["x"]), sv(&["x"]));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--task"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_detection() {
+        let a = Args::parse(&sv(&["--good", "1", "--bad", "2"]), &[]).unwrap();
+        assert!(a.reject_unknown(&["good"]).is_err());
+        assert!(a.reject_unknown(&["good", "bad"]).is_ok());
+    }
+}

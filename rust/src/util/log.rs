@@ -1,0 +1,122 @@
+//! Leveled stderr logging + run-directory JSONL metric streams.
+//!
+//! The coordinator logs human-readable progress to stderr and appends
+//! machine-readable metric records (one JSON object per line) to files
+//! under the run directory — the format the repro harness and plotting
+//! scripts consume.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+pub const ERROR: u8 = 0;
+pub const INFO: u8 = 1;
+pub const DEBUG: u8 = 2;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn enabled(level: u8) -> bool {
+    level <= LEVEL.load(Ordering::Relaxed)
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::INFO) {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::DEBUG) {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Wall-clock scope timer for coarse phase timing.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Timer {
+        Timer { label: label.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn finish(self) -> f64 {
+        let dt = self.elapsed_s();
+        crate::info!("{} took {:.2}s", self.label, dt);
+        dt
+    }
+}
+
+/// Append-only JSONL metric stream.
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: &Path) -> anyhow::Result<JsonlWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new().create(true).write(true).truncate(true).open(path)?;
+        Ok(JsonlWriter { out: BufWriter::new(file) })
+    }
+
+    pub fn write(&mut self, record: &Json) -> anyhow::Result<()> {
+        writeln!(self.out, "{}", record.to_string())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Read a JSONL file back (used by the repro harness to aggregate runs).
+pub fn read_jsonl(path: &Path) -> anyhow::Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(crate::util::json::parse)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_round_trip() {
+        let dir = std::env::temp_dir().join(format!("smz_log_test_{}", std::process::id()));
+        let path = dir.join("metrics.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        for i in 0..3 {
+            w.write(&Json::obj(vec![("step", Json::Num(i as f64))])).unwrap();
+        }
+        w.flush().unwrap();
+        let rows = read_jsonl(&path).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2].req("step").unwrap().as_usize().unwrap(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Hand-rolled utility substrates.
+//!
+//! The build environment vendors only the `xla` crate and `anyhow`, so the
+//! conveniences a crates.io project would pull in (serde_json, toml, clap,
+//! rand, env_logger, criterion) are implemented here, scoped to exactly
+//! what the coordinator needs. Each is unit-tested in its own module.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,231 @@
+//! Counter-based PRNG — the Rust mirror of `python/compile/kernels/prng.py`.
+//!
+//! Three independent implementations of this generator exist (jnp, Pallas
+//! tile-local, and this one); MeZO's seed-replay trick requires them to be
+//! bit-identical on the integer side and allclose on the Box–Muller side.
+//! `python/tests/test_prng.py` writes golden vectors
+//! (`python/tests/golden_prng.json`) that `tests/golden.rs` checks against
+//! this module.
+//!
+//! Also hosts a small xoshiro-style generator (`Pcg32`) used for *local*
+//! randomness (task data generation, property tests) where cross-language
+//! agreement is needed between the data layer and nothing else.
+
+/// Stream salts — must match prng.py.
+pub const STREAM_A: u32 = 0x9E37_79B9;
+pub const STREAM_B: u32 = 0x85EB_CA6B;
+pub const STREAM_MASK: u32 = 0xC2B2_AE35;
+
+const TWO_PI: f32 = 6.283_185_3;
+const INV_2_24: f32 = 1.0 / 16_777_216.0;
+const MIN_UNIT: f32 = 5.960_464_5e-8;
+
+/// Well-mixed 32-bit finalizer ("lowbias32").
+#[inline]
+pub fn lowbias32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7FEB_352D);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846C_A68B);
+    x ^= x >> 16;
+    x
+}
+
+/// Order-sensitive key folding (mirrors prng.fold).
+#[inline]
+pub fn fold(key: u32, data: u32) -> u32 {
+    lowbias32(key ^ data.wrapping_add(STREAM_A).wrapping_add(key << 6).wrapping_add(key >> 2))
+}
+
+/// Per-(seed, layer) stream key.
+#[inline]
+pub fn layer_key(seed_lo: u32, seed_hi: u32, layer_id: u32) -> u32 {
+    fold(fold(lowbias32(seed_lo), seed_hi), layer_id)
+}
+
+/// uint32 stream value for flat element index `idx`.
+#[inline]
+pub fn uniform_bits(key: u32, idx: u32, stream: u32) -> u32 {
+    lowbias32(idx.wrapping_mul(2_654_435_761) ^ key ^ stream)
+}
+
+/// Top 24 bits -> (0, 1), never exactly 0.
+#[inline]
+pub fn bits_to_unit(bits: u32) -> f32 {
+    ((bits >> 8) as f32 * INV_2_24).max(MIN_UNIT)
+}
+
+/// Standard normal via Box–Muller, matching the jnp implementation.
+#[inline]
+pub fn normal(key: u32, idx: u32) -> f32 {
+    let u1 = bits_to_unit(uniform_bits(key, idx, STREAM_A));
+    let u2 = bits_to_unit(uniform_bits(key, idx, STREAM_B));
+    (-2.0 * u1.ln()).sqrt() * (TWO_PI * u2).cos()
+}
+
+/// Uniform (0,1) on the mask stream (R-MeZO masks).
+#[inline]
+pub fn uniform01(key: u32, idx: u32) -> f32 {
+    bits_to_unit(uniform_bits(key, idx, STREAM_MASK))
+}
+
+/// z ~ N(0, I_n) for a parameter segment (layer_id = layout entry index).
+pub fn segment_normal(seed_lo: u32, seed_hi: u32, layer_id: u32, offset: u32, n: usize) -> Vec<f32> {
+    let key = layer_key(seed_lo, seed_hi, layer_id);
+    (0..n as u32).map(|i| normal(key, offset + i)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Local (non-cross-language) generator for data synthesis & property tests.
+// PCG-XSH-RR 32, seeded deterministically; small, fast, well understood.
+// ---------------------------------------------------------------------------
+
+/// PCG32 generator for task data / shuffling / property tests.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut g = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        g.next_u32();
+        g.state = g.state.wrapping_add(seed);
+        g.next_u32();
+        g
+    }
+
+    /// Convenience: one generator per (experiment, purpose) name.
+    pub fn from_name(seed: u64, name: &str) -> Self {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Self::new(seed, h)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform in [0, bound).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        // Lemire's nearly-divisionless method would be overkill; simple
+        // rejection keeps it unbiased.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    pub fn unit_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * INV_2_24
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        let u1 = self.unit_f32().max(MIN_UNIT);
+        let u2 = self.unit_f32();
+        (-2.0 * u1.ln()).sqrt() * (TWO_PI * u2).cos()
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        (self.unit_f32() as f64) < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u32) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowbias32_is_deterministic_and_mixing() {
+        assert_eq!(lowbias32(1), lowbias32(1));
+        assert_ne!(lowbias32(1), lowbias32(2));
+        // avalanche smoke: flipping one bit flips many output bits
+        let a = lowbias32(0x1234_5678);
+        let b = lowbias32(0x1234_5679);
+        assert!((a ^ b).count_ones() >= 8);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let z = segment_normal(7, 9, 3, 0, 100_000);
+        let mean: f32 = z.iter().sum::<f32>() / z.len() as f32;
+        let var: f32 = z.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / z.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var.sqrt() - 1.0).abs() < 0.02, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn segment_offset_consistency() {
+        let full = segment_normal(11, 22, 5, 0, 1000);
+        let a = segment_normal(11, 22, 5, 0, 300);
+        let b = segment_normal(11, 22, 5, 300, 700);
+        assert_eq!(&full[..300], &a[..]);
+        assert_eq!(&full[300..], &b[..]);
+    }
+
+    #[test]
+    fn seed_replay_identical() {
+        assert_eq!(segment_normal(123, 456, 7, 0, 512), segment_normal(123, 456, 7, 0, 512));
+    }
+
+    #[test]
+    fn different_layers_differ() {
+        assert_ne!(segment_normal(1, 2, 0, 0, 16), segment_normal(1, 2, 1, 0, 16));
+    }
+
+    #[test]
+    fn pcg_bounded_unbiased_smoke() {
+        let mut g = Pcg32::new(42, 1);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[g.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as i64 - 10_000).abs() < 600, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn pcg_shuffle_is_permutation() {
+        let mut g = Pcg32::new(7, 3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        g.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pcg_streams_independent() {
+        let mut a = Pcg32::from_name(1, "alpha");
+        let mut b = Pcg32::from_name(1, "beta");
+        let va: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_ne!(va, vb);
+    }
+}

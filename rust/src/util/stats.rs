@@ -1,0 +1,164 @@
+//! Small statistics helpers: summaries, percentiles, EMA, binomial probe
+//! math used by the Fig-2b/Fig-4 generalization experiments.
+
+/// Summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize: empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: percentile_sorted(&sorted, 0.50),
+        p95: percentile_sorted(&sorted, 0.95),
+        p99: percentile_sorted(&sorted, 0.99),
+    }
+}
+
+/// Percentile of an already-sorted sample (nearest-rank with interpolation).
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Exponential moving average with bias correction (for loss curves).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    beta: f64,
+    value: f64,
+    t: u64,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Ema {
+        Ema { beta, value: 0.0, t: 0 }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        self.t += 1;
+        self.value = self.beta * self.value + (1.0 - self.beta) * x;
+        self.get()
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.t == 0 {
+            f64::NAN
+        } else {
+            self.value / (1.0 - self.beta.powi(self.t as i32))
+        }
+    }
+}
+
+/// Wilson score interval for a binomial proportion — used when reporting
+/// P(loss increase) in the Fig-2b/Fig-4 probes so the paper-shape claims
+/// ("~50% on held-out") carry uncertainty.
+pub fn wilson_interval(successes: usize, n: usize, z: f64) -> (f64, f64) {
+    if n == 0 {
+        return (0.0, 1.0);
+    }
+    let p = successes as f64 / n as f64;
+    let nf = n as f64;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / nf;
+    let center = (p + z2 / (2.0 * nf)) / denom;
+    let half = (z / denom) * ((p * (1.0 - p) / nf + z2 / (4.0 * nf * nf)).sqrt());
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Simple linear regression slope (loss-curve trend tests).
+pub fn slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if var == 0.0 {
+        0.0
+    } else {
+        cov / var
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.9);
+        for _ in 0..200 {
+            e.update(2.5);
+        }
+        assert!((e.get() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_bias_corrected_early() {
+        let mut e = Ema::new(0.99);
+        e.update(4.0);
+        assert!((e.get() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wilson_sane() {
+        let (lo, hi) = wilson_interval(50, 100, 1.96);
+        assert!(lo < 0.5 && 0.5 < hi);
+        assert!(hi - lo < 0.25);
+        let (lo0, _) = wilson_interval(0, 100, 1.96);
+        assert_eq!(lo0, 0.0);
+    }
+
+    #[test]
+    fn slope_signs() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let down: Vec<f64> = xs.iter().map(|x| 5.0 - 0.3 * x).collect();
+        assert!(slope(&xs, &down) < -0.29);
+        let flat = vec![1.0; 10];
+        assert!(slope(&xs, &flat).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,260 @@
+//! TOML-subset parser for experiment/preset config files.
+//!
+//! Supports the subset the configs actually use: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! bool / homogeneous-array values, `#` comments, and bare or quoted keys.
+//! Values land in the same [`Json`] tree the JSON module uses, so config
+//! plumbing is uniform. Unsupported TOML (dates, inline tables, multi-line
+//! strings) errors loudly instead of mis-parsing.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// Parse TOML text into a Json::Obj tree (sections become nested objects).
+pub fn parse(input: &str) -> Result<Json> {
+    let mut root = BTreeMap::new();
+    let mut path: Vec<String> = Vec::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let end = rest.find(']').ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+            if rest[end + 1..].trim() != "" {
+                bail!("line {}: garbage after section header", lineno + 1);
+            }
+            path = rest[..end].split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|s| s.is_empty()) {
+                bail!("line {}: empty section name component", lineno + 1);
+            }
+            ensure_section(&mut root, &path, lineno + 1)?;
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = parse_key(line[..eq].trim(), lineno + 1)?;
+        let val = parse_value(line[eq + 1..].trim(), lineno + 1)?;
+        let section = section_mut(&mut root, &path, lineno + 1)?;
+        if section.insert(key.clone(), val).is_some() {
+            bail!("line {}: duplicate key '{key}'", lineno + 1);
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+pub fn parse_file(path: &std::path::Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_key(s: &str, lineno: usize) -> Result<String> {
+    if s.is_empty() {
+        bail!("line {lineno}: empty key");
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("line {lineno}: unterminated quoted key");
+        }
+        return Ok(s[1..s.len() - 1].to_string());
+    }
+    if !s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+        bail!("line {lineno}: invalid bare key '{s}'");
+    }
+    Ok(s.to_string())
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Json> {
+    if s.is_empty() {
+        bail!("line {lineno}: missing value");
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("line {lineno}: unterminated string");
+        }
+        // escapes: only the basics
+        let inner = &s[1..s.len() - 1];
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => bail!("line {lineno}: bad escape \\{other:?}"),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Json::Str(out));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("line {lineno}: arrays must be single-line");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p, lineno)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    // number
+    let cleaned = s.replace('_', "");
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| anyhow!("line {lineno}: cannot parse value '{s}'"))
+}
+
+/// Split an array body on top-level commas (no nested arrays in configs,
+/// but strings may contain commas).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut depth = 0;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn ensure_section(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    lineno: usize,
+) -> Result<()> {
+    section_mut(root, path, lineno).map(|_| ())
+}
+
+fn section_mut<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Json>> {
+    let mut cur = root;
+    for comp in path {
+        let entry = cur.entry(comp.clone()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => bail!("line {lineno}: section '{comp}' collides with a value"),
+        };
+    }
+    Ok(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_sections_and_types() {
+        let src = r#"
+# experiment preset
+name = "rte"           # task
+steps = 4_000
+lr = 2e-6
+use_sparse = true
+sparsities = [0.5, 0.6, 0.7, 0.8]
+tags = ["a", "b,c"]
+
+[model]
+family = "llama"
+size = "small"
+
+[model.extra]
+window = 16
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.req("name").unwrap().as_str().unwrap(), "rte");
+        assert_eq!(v.req("steps").unwrap().as_usize().unwrap(), 4000);
+        assert_eq!(v.req("lr").unwrap().as_f64().unwrap(), 2e-6);
+        assert_eq!(v.req("use_sparse").unwrap(), &Json::Bool(true));
+        assert_eq!(v.req("sparsities").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(
+            v.req("tags").unwrap().as_arr().unwrap()[1].as_str().unwrap(),
+            "b,c"
+        );
+        let model = v.req("model").unwrap();
+        assert_eq!(model.req("family").unwrap().as_str().unwrap(), "llama");
+        assert_eq!(
+            model.req("extra").unwrap().req("window").unwrap().as_usize().unwrap(),
+            16
+        );
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        for s in [
+            "key",
+            "= 1",
+            "[unterminated",
+            "k = [1, 2",
+            "k = \"open",
+            "k = 2020-01-01",
+            "a = 1\na = 2",
+        ] {
+            assert!(parse(s).is_err(), "should reject {s:?}");
+        }
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let v = parse("k = \"a # b\"").unwrap();
+        assert_eq!(v.req("k").unwrap().as_str().unwrap(), "a # b");
+    }
+
+    #[test]
+    fn empty_and_whitespace() {
+        assert_eq!(parse("").unwrap(), Json::Obj(Default::default()));
+        assert_eq!(parse("\n\n# hi\n").unwrap(), Json::Obj(Default::default()));
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal MLP on flat `Vec<f32>` params — the loss surface used by the
+//! property tests and the Fig-2 noise analysis. Two linear layers + tanh,
+//! softmax cross-entropy, with an exact analytic gradient (so ZO estimates
+//! can be compared against ground truth, something the 7B-scale paper can
+//! only do implicitly).
+
+use crate::util::prng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct MlpSpec {
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub n_classes: usize,
+}
+
+impl MlpSpec {
+    pub fn n_params(&self) -> usize {
+        self.d_in * self.d_hidden + self.d_hidden + self.d_hidden * self.n_classes + self.n_classes
+    }
+
+    /// Heavy-tailed-ish init: N(0, 0.5) on weights — gives the magnitude
+    /// spread the S-MeZO mask needs — zero biases.
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::from_name(seed, "mlp-init");
+        let mut p = vec![0.0f32; self.n_params()];
+        let w1 = self.d_in * self.d_hidden;
+        let w2_off = w1 + self.d_hidden;
+        let w2 = self.d_hidden * self.n_classes;
+        for i in 0..w1 {
+            p[i] = 0.5 * rng.normal_f32();
+        }
+        for i in 0..w2 {
+            p[w2_off + i] = 0.5 * rng.normal_f32();
+        }
+        p
+    }
+}
+
+/// A batch of (x, y) pairs.
+#[derive(Debug, Clone)]
+pub struct MlpBatch {
+    pub xs: Vec<f32>, // [n, d_in]
+    pub ys: Vec<usize>,
+}
+
+/// Linearly-separable-with-noise synthetic classification data.
+/// `proto_seed` fixes the class prototypes (the "task"); `sample_seed`
+/// varies the drawn batch. Batches that should be i.i.d. from the SAME
+/// distribution (the Fig-2b half-batch probe!) must share `proto_seed`.
+pub fn make_data_with(spec: &MlpSpec, n: usize, proto_seed: u64, sample_seed: u64) -> MlpBatch {
+    let mut prng = Pcg32::from_name(proto_seed, "mlp-protos");
+    let protos: Vec<f32> =
+        (0..spec.n_classes * spec.d_in).map(|_| prng.normal_f32()).collect();
+    let mut rng = Pcg32::from_name(sample_seed, "mlp-data");
+    let mut xs = Vec::with_capacity(n * spec.d_in);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(spec.n_classes as u32) as usize;
+        for j in 0..spec.d_in {
+            xs.push(protos[c * spec.d_in + j] + 0.4 * rng.normal_f32());
+        }
+        ys.push(c);
+    }
+    MlpBatch { xs, ys }
+}
+
+/// Single-seed convenience (prototypes and samples from one seed).
+pub fn make_data(spec: &MlpSpec, n: usize, seed: u64) -> MlpBatch {
+    make_data_with(spec, n, 0xA5A5, seed)
+}
+
+fn forward(spec: &MlpSpec, p: &[f32], x: &[f32], hidden: &mut [f32], logits: &mut [f32]) {
+    let (din, dh, nc) = (spec.d_in, spec.d_hidden, spec.n_classes);
+    let w1 = &p[..din * dh];
+    let b1 = &p[din * dh..din * dh + dh];
+    let w2 = &p[din * dh + dh..din * dh + dh + dh * nc];
+    let b2 = &p[din * dh + dh + dh * nc..];
+    for h in 0..dh {
+        let mut acc = b1[h];
+        for i in 0..din {
+            acc += x[i] * w1[i * dh + h];
+        }
+        hidden[h] = acc.tanh();
+    }
+    for c in 0..nc {
+        let mut acc = b2[c];
+        for h in 0..dh {
+            acc += hidden[h] * w2[h * nc + c];
+        }
+        logits[c] = acc;
+    }
+}
+
+/// Mean cross-entropy over the batch.
+pub fn loss(spec: &MlpSpec, p: &[f32], batch: &MlpBatch) -> f32 {
+    let n = batch.ys.len();
+    let mut hidden = vec![0.0f32; spec.d_hidden];
+    let mut logits = vec![0.0f32; spec.n_classes];
+    let mut total = 0.0f64;
+    for ex in 0..n {
+        let x = &batch.xs[ex * spec.d_in..(ex + 1) * spec.d_in];
+        forward(spec, p, x, &mut hidden, &mut logits);
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = logits.iter().map(|l| (l - max).exp()).sum::<f32>().ln() + max;
+        total += (lse - logits[batch.ys[ex]]) as f64;
+    }
+    (total / n as f64) as f32
+}
+
+/// Mean accuracy over the batch.
+pub fn accuracy(spec: &MlpSpec, p: &[f32], batch: &MlpBatch) -> f32 {
+    let n = batch.ys.len();
+    let mut hidden = vec![0.0f32; spec.d_hidden];
+    let mut logits = vec![0.0f32; spec.n_classes];
+    let mut correct = 0usize;
+    for ex in 0..n {
+        let x = &batch.xs[ex * spec.d_in..(ex + 1) * spec.d_in];
+        forward(spec, p, x, &mut hidden, &mut logits);
+        let pred = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == batch.ys[ex] {
+            correct += 1;
+        }
+    }
+    correct as f32 / n as f32
+}
+
+/// Exact analytic gradient (backprop by hand) — ground truth for the
+/// Fig-2 noise analysis and the SGD arm of the Fig-4 probe.
+pub fn grad(spec: &MlpSpec, p: &[f32], batch: &MlpBatch) -> Vec<f32> {
+    let (din, dh, nc) = (spec.d_in, spec.d_hidden, spec.n_classes);
+    let n = batch.ys.len();
+    let w1_off = 0;
+    let b1_off = din * dh;
+    let w2_off = b1_off + dh;
+    let b2_off = w2_off + dh * nc;
+    let mut g = vec![0.0f32; p.len()];
+    let mut hidden = vec![0.0f32; dh];
+    let mut logits = vec![0.0f32; nc];
+    let scale = 1.0 / n as f32;
+    for ex in 0..n {
+        let x = &batch.xs[ex * din..(ex + 1) * din];
+        forward(spec, p, x, &mut hidden, &mut logits);
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|l| (l - max).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        // dL/dlogit_c = softmax_c - 1[c == y]
+        let mut dlogit = vec![0.0f32; nc];
+        for c in 0..nc {
+            dlogit[c] = exps[c] / z - if c == batch.ys[ex] { 1.0 } else { 0.0 };
+        }
+        // w2, b2
+        for h in 0..dh {
+            for c in 0..nc {
+                g[w2_off + h * nc + c] += scale * hidden[h] * dlogit[c];
+            }
+        }
+        for c in 0..nc {
+            g[b2_off + c] += scale * dlogit[c];
+        }
+        // back through tanh
+        let w2 = &p[w2_off..w2_off + dh * nc];
+        for h in 0..dh {
+            let mut dh_acc = 0.0f32;
+            for c in 0..nc {
+                dh_acc += dlogit[c] * w2[h * nc + c];
+            }
+            let dpre = dh_acc * (1.0 - hidden[h] * hidden[h]);
+            for i in 0..din {
+                g[w1_off + i * dh + h] += scale * x[i] * dpre;
+            }
+            g[b1_off + h] += scale * dpre;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> MlpSpec {
+        MlpSpec { d_in: 8, d_hidden: 12, n_classes: 3 }
+    }
+
+    #[test]
+    fn shapes() {
+        let s = spec();
+        assert_eq!(s.n_params(), 8 * 12 + 12 + 12 * 3 + 3);
+        let p = s.init(1);
+        assert_eq!(p.len(), s.n_params());
+    }
+
+    #[test]
+    fn loss_finite_and_near_uniform_at_init() {
+        let s = spec();
+        let p = s.init(2);
+        let b = make_data(&s, 64, 3);
+        let l = loss(&s, &p, &b);
+        assert!(l.is_finite());
+        assert!(l > 0.05 && l < 5.0, "loss {l}");
+    }
+
+    #[test]
+    fn analytic_grad_matches_finite_difference() {
+        let s = spec();
+        let mut p = s.init(4);
+        let b = make_data(&s, 16, 5);
+        let g = grad(&s, &p, &b);
+        let mut rng = crate::util::prng::Pcg32::new(1, 1);
+        for _ in 0..20 {
+            let i = rng.below(p.len() as u32) as usize;
+            let h = 1e-3f32;
+            let orig = p[i];
+            p[i] = orig + h;
+            let lp = loss(&s, &p, &b);
+            p[i] = orig - h;
+            let lm = loss(&s, &p, &b);
+            p[i] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (fd - g[i]).abs() < 2e-2 * g[i].abs().max(0.1),
+                "coord {i}: fd {fd} vs analytic {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_descent_learns() {
+        let s = spec();
+        let mut p = s.init(6);
+        let train = make_data(&s, 128, 7);
+        for _ in 0..300 {
+            let g = grad(&s, &p, &train);
+            for (pi, gi) in p.iter_mut().zip(&g) {
+                *pi -= 0.5 * gi;
+            }
+        }
+        assert!(accuracy(&s, &p, &train) > 0.9);
+    }
+}

@@ -1,0 +1,70 @@
+//! Pure-Rust ZO optimization substrate.
+//!
+//! A dependency-free mirror of the paper's optimizer family operating on
+//! plain `Vec<f32>` parameters with caller-supplied loss functions. It
+//! exists for three reasons:
+//!
+//! 1. **Property-based testing** — coordinator/optimizer invariants
+//!    (mask support, seed replay, sparsity-0 degeneracy, descent on
+//!    quadratics, Theorem-1 scaling) are checked over thousands of random
+//!    instances without paying PJRT startup (see `tests/properties.rs`).
+//! 2. **Cross-check** — the update rule here and the L2 JAX step use the
+//!    *same counter PRNG*, so a rust-side step on a toy objective can be
+//!    compared against golden values.
+//! 3. **Baseline comparator substrate** — the paper's Fig. 2 noise
+//!    analysis is replicated on a controlled quadratic where the true
+//!    gradient is known exactly (`analysis` module).
+
+pub mod analysis;
+pub mod mlp;
+pub mod optim;
+
+/// Mask modes matching `python/compile/optimizers.py::flat_mask`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MaskMode {
+    /// MeZO: every coordinate perturbed.
+    Dense,
+    /// S-MeZO: |theta_i| <= h (small weights selected). Threshold from
+    /// [`optim::percentile_threshold`].
+    Magnitude { threshold: f32 },
+    /// S-MeZO inverted (Fig. 2c "large weights" arm).
+    LargeOnly { threshold: f32 },
+    /// R-MeZO: Bernoulli(keep_prob) keyed on (mask_seed, index).
+    Random { keep_prob: f32, mask_seed: u32 },
+}
+
+impl MaskMode {
+    /// Mask value for coordinate `i` of `theta`.
+    #[inline]
+    pub fn mask(&self, theta: &[f32], i: usize) -> f32 {
+        match self {
+            MaskMode::Dense => 1.0,
+            MaskMode::Magnitude { threshold } => {
+                if theta[i].abs() <= *threshold {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            MaskMode::LargeOnly { threshold } => {
+                if theta[i].abs() > *threshold {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            MaskMode::Random { keep_prob, mask_seed } => {
+                let key = crate::util::prng::layer_key(*mask_seed, 0x52, 0);
+                if crate::util::prng::uniform01(key, i as u32) < *keep_prob {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    pub fn mask_vec(&self, theta: &[f32]) -> Vec<f32> {
+        (0..theta.len()).map(|i| self.mask(theta, i)).collect()
+    }
+}

@@ -1,0 +1,331 @@
+//! The ZO optimizer family on plain vectors (paper Alg. 1–3).
+//!
+//! `ZoStepper` is written exactly like the L2 JAX step: regenerate
+//! z from `(seed, layer_id=0, index)` with the shared counter PRNG,
+//! evaluate the loss at theta ± eps * m⊙z, form the projected gradient,
+//! and update only the masked coordinates. Nothing is ever stored per
+//! coordinate beyond theta itself.
+
+use crate::util::prng;
+use crate::zo::MaskMode;
+
+/// Percentile threshold over |theta| (paper §8.2): the bottom
+/// (1 - sparsity) fraction by magnitude is selected.
+pub fn percentile_threshold(theta: &[f32], sparsity: f32) -> f32 {
+    assert!(!theta.is_empty());
+    let mut mags: Vec<f32> = theta.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if sparsity <= 0.0 {
+        return mags[mags.len() - 1];
+    }
+    let q = (((1.0 - sparsity) * mags.len() as f32).floor() as usize).min(mags.len() - 1);
+    mags[q]
+}
+
+/// Result of one ZO step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    pub l_plus: f32,
+    pub l_minus: f32,
+    pub proj_grad: f32,
+    pub masked_frac: f32,
+    /// squared L2 norm of the applied update
+    pub update_norm_sq: f32,
+}
+
+/// Variants supported by the pure-Rust stepper.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Variant {
+    /// theta -= lr * g * m⊙z (MeZO / S-MeZO / R-MeZO depending on mask)
+    Sgd,
+    /// theta -= lr * sign(g * m⊙z)
+    Sign,
+    /// accept the Sgd step only if it does not increase the batch loss
+    Conservative,
+    /// heavy-ball momentum on g * m⊙z (beta = 0.9)
+    Momentum,
+}
+
+pub struct ZoStepper {
+    pub eps: f32,
+    pub lr: f32,
+    pub variant: Variant,
+    /// momentum buffer (allocated lazily for Variant::Momentum)
+    momentum: Vec<f32>,
+    beta: f32,
+}
+
+impl ZoStepper {
+    pub fn new(eps: f32, lr: f32, variant: Variant) -> ZoStepper {
+        ZoStepper { eps, lr, variant, momentum: Vec::new(), beta: 0.9 }
+    }
+
+    /// One step of Algorithm 1. `loss` is the minibatch loss closure;
+    /// the caller controls which batch it binds (the Fig-2b probe calls
+    /// this with one batch and evaluates deltas on another).
+    pub fn step<F: FnMut(&[f32]) -> f32>(
+        &mut self,
+        theta: &mut [f32],
+        mask: MaskMode,
+        seed: (u32, u32),
+        mut loss: F,
+    ) -> StepInfo {
+        let n = theta.len();
+        let key = prng::layer_key(seed.0, seed.1, 0);
+        let m: Vec<f32> = mask.mask_vec(theta);
+        let masked_frac = m.iter().sum::<f32>() / n as f32;
+
+        // + eps perturb (Alg. 2 with seed replay)
+        for i in 0..n {
+            theta[i] += self.eps * m[i] * prng::normal(key, i as u32);
+        }
+        let l_plus = loss(theta);
+        // -2 eps
+        for i in 0..n {
+            theta[i] -= 2.0 * self.eps * m[i] * prng::normal(key, i as u32);
+        }
+        let l_minus = loss(theta);
+        // back to theta
+        for i in 0..n {
+            theta[i] += self.eps * m[i] * prng::normal(key, i as u32);
+        }
+        let g = (l_plus - l_minus) / (2.0 * self.eps);
+
+        let mut update_norm_sq = 0.0f32;
+        match self.variant {
+            Variant::Sgd => {
+                for i in 0..n {
+                    let u = self.lr * g * m[i] * prng::normal(key, i as u32);
+                    theta[i] -= u;
+                    update_norm_sq += u * u;
+                }
+            }
+            Variant::Sign => {
+                for i in 0..n {
+                    let gz = g * m[i] * prng::normal(key, i as u32);
+                    if gz != 0.0 {
+                        let u = self.lr * gz.signum();
+                        theta[i] -= u;
+                        update_norm_sq += u * u;
+                    }
+                }
+            }
+            Variant::Conservative => {
+                let before: Vec<f32> = theta.to_vec();
+                let l_base = 0.5 * (l_plus + l_minus);
+                for i in 0..n {
+                    theta[i] -= self.lr * g * m[i] * prng::normal(key, i as u32);
+                }
+                let l_cand = loss(theta);
+                if l_cand > l_base {
+                    theta.copy_from_slice(&before); // reject
+                } else {
+                    for i in 0..n {
+                        let u = theta[i] - before[i];
+                        update_norm_sq += u * u;
+                    }
+                }
+            }
+            Variant::Momentum => {
+                if self.momentum.len() != n {
+                    self.momentum = vec![0.0; n];
+                }
+                for i in 0..n {
+                    let gz = g * m[i] * prng::normal(key, i as u32);
+                    self.momentum[i] = self.beta * self.momentum[i] + (1.0 - self.beta) * gz;
+                    let u = self.lr * self.momentum[i];
+                    theta[i] -= u;
+                    update_norm_sq += u * u;
+                }
+            }
+        }
+
+        StepInfo { l_plus, l_minus, proj_grad: g, masked_frac, update_norm_sq }
+    }
+
+    /// The ZO gradient estimate g * m⊙z WITHOUT applying it (probe use).
+    pub fn estimate<F: FnMut(&[f32]) -> f32>(
+        &self,
+        theta: &mut [f32],
+        mask: MaskMode,
+        seed: (u32, u32),
+        mut loss: F,
+    ) -> (Vec<f32>, StepInfo) {
+        let n = theta.len();
+        let key = prng::layer_key(seed.0, seed.1, 0);
+        let m = mask.mask_vec(theta);
+        for i in 0..n {
+            theta[i] += self.eps * m[i] * prng::normal(key, i as u32);
+        }
+        let l_plus = loss(theta);
+        for i in 0..n {
+            theta[i] -= 2.0 * self.eps * m[i] * prng::normal(key, i as u32);
+        }
+        let l_minus = loss(theta);
+        for i in 0..n {
+            theta[i] += self.eps * m[i] * prng::normal(key, i as u32);
+        }
+        let g = (l_plus - l_minus) / (2.0 * self.eps);
+        let grad: Vec<f32> = (0..n).map(|i| g * m[i] * prng::normal(key, i as u32)).collect();
+        let masked_frac = m.iter().sum::<f32>() / n as f32;
+        (grad, StepInfo { l_plus, l_minus, proj_grad: g, masked_frac, update_norm_sq: 0.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic(center: &[f32]) -> impl FnMut(&[f32]) -> f32 + '_ {
+        move |x| x.iter().zip(center).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+    }
+
+    #[test]
+    fn threshold_selects_expected_fraction() {
+        let theta: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) / 100.0).collect();
+        let h = percentile_threshold(&theta, 0.8);
+        let kept = theta.iter().filter(|x| x.abs() <= h).count();
+        assert!((kept as f32 / 1000.0 - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn descends_quadratic_dense() {
+        // Theorem-1 stable step size: eta ~ 1/(4 (d + 4) L), d = 64, L = 2
+        let center = vec![1.0f32; 64];
+        let mut theta = vec![0.0f32; 64];
+        let mut opt = ZoStepper::new(1e-3, 1.0 / (4.0 * 68.0 * 2.0), Variant::Sgd);
+        let mut loss = quadratic(&center);
+        let l0 = loss(&theta);
+        for t in 0..4000 {
+            opt.step(&mut theta, MaskMode::Dense, (t, 1), &mut loss);
+        }
+        let l1 = loss(&theta);
+        assert!(l1 < 0.2 * l0, "l0={l0} l1={l1}");
+    }
+
+    #[test]
+    fn diverges_beyond_stable_lr_but_sparse_survives() {
+        // The Fig-2a mechanism on a controlled objective: a step size that
+        // blows up dense ZO is tamed by masking to a small subnetwork
+        // (d_hat << d lowers the variance of g*z).
+        let center = vec![1.0f32; 64];
+        let lr = 0.02; // far above 1/(4(d+4)L)
+        let mut dense = vec![0.0f32; 64];
+        let mut opt = ZoStepper::new(1e-3, lr, Variant::Sgd);
+        let mut loss = quadratic(&center);
+        for t in 0..500 {
+            opt.step(&mut dense, MaskMode::Dense, (t, 1), &mut loss);
+        }
+        let dense_loss = loss(&dense);
+
+        // sparse: only 25% of coordinates active per step
+        let mut sparse = vec![0.0f32; 64];
+        let mut opt2 = ZoStepper::new(1e-3, lr, Variant::Sgd);
+        for t in 0..500 {
+            opt2.step(
+                &mut sparse,
+                MaskMode::Random { keep_prob: 0.25, mask_seed: t },
+                (t, 2),
+                &mut loss,
+            );
+        }
+        let sparse_loss = loss(&sparse);
+        assert!(
+            sparse_loss < dense_loss,
+            "sparse {sparse_loss} should beat dense {dense_loss} at lr {lr}"
+        );
+        assert!(sparse_loss < 64.0, "sparse arm should not diverge: {sparse_loss}");
+    }
+
+    #[test]
+    fn sparse_only_moves_masked() {
+        let mut theta: Vec<f32> = (0..100).map(|i| if i % 2 == 0 { 0.01 } else { 5.0 }).collect();
+        let before = theta.clone();
+        let mut opt = ZoStepper::new(1e-3, 0.01, Variant::Sgd);
+        let center = vec![1.0f32; 100];
+        let mut loss = quadratic(&center);
+        opt.step(&mut theta, MaskMode::Magnitude { threshold: 1.0 }, (7, 7), &mut loss);
+        for i in 0..100 {
+            if before[i].abs() > 1.0 {
+                assert_eq!(theta[i], before[i], "large coord {i} moved");
+            }
+        }
+        assert_ne!(theta, before);
+    }
+
+    #[test]
+    fn seed_replay_restores_exactly_on_zero_lr() {
+        // with lr = 0 the step must leave theta EXACTLY unchanged:
+        // the +eps / -2eps / +eps walk must cancel bit-for-bit
+        let mut theta: Vec<f32> = (0..257).map(|i| (i as f32).sin()).collect();
+        let before = theta.clone();
+        let mut opt = ZoStepper::new(1e-3, 0.0, Variant::Sgd);
+        let center = vec![0.0f32; 257];
+        let mut loss = quadratic(&center);
+        opt.step(&mut theta, MaskMode::Dense, (3, 9), &mut loss);
+        for i in 0..theta.len() {
+            assert!(
+                (theta[i] - before[i]).abs() <= 2e-6 * before[i].abs().max(1.0),
+                "coord {i}: {} vs {}",
+                theta[i],
+                before[i]
+            );
+        }
+    }
+
+    #[test]
+    fn conservative_never_worsens() {
+        let center = vec![2.0f32; 32];
+        let mut theta = vec![0.0f32; 32];
+        // absurd lr: plain SGD would explode, Conservative must survive
+        let mut opt = ZoStepper::new(1e-3, 50.0, Variant::Conservative);
+        let mut loss = quadratic(&center);
+        let mut prev = loss(&theta);
+        for t in 0..50 {
+            opt.step(&mut theta, MaskMode::Dense, (t, 2), &mut loss);
+            let cur = loss(&theta);
+            assert!(cur <= prev * 1.001, "step {t}: {prev} -> {cur}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn sign_moves_by_lr() {
+        let center = vec![1.0f32; 16];
+        let mut theta = vec![0.0f32; 16];
+        let before = theta.clone();
+        let mut opt = ZoStepper::new(1e-3, 0.01, Variant::Sign);
+        let mut loss = quadratic(&center);
+        opt.step(&mut theta, MaskMode::Dense, (1, 1), &mut loss);
+        for i in 0..16 {
+            let d = (theta[i] - before[i]).abs();
+            assert!(d == 0.0 || (d - 0.01).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn random_mask_deterministic_in_seed() {
+        let theta = vec![1.0f32; 1000];
+        let m1 = MaskMode::Random { keep_prob: 0.3, mask_seed: 5 }.mask_vec(&theta);
+        let m2 = MaskMode::Random { keep_prob: 0.3, mask_seed: 5 }.mask_vec(&theta);
+        let m3 = MaskMode::Random { keep_prob: 0.3, mask_seed: 6 }.mask_vec(&theta);
+        assert_eq!(m1, m2);
+        assert_ne!(m1, m3);
+        let frac = m1.iter().sum::<f32>() / 1000.0;
+        assert!((frac - 0.3).abs() < 0.05);
+    }
+
+    #[test]
+    fn estimate_matches_step_direction() {
+        let center = vec![1.0f32; 32];
+        let mut theta = vec![0.0f32; 32];
+        let opt = ZoStepper::new(1e-3, 0.01, Variant::Sgd);
+        let mut loss = quadratic(&center);
+        let (grad, info) = opt.estimate(&mut theta, MaskMode::Dense, (9, 9), &mut loss);
+        assert_eq!(grad.len(), 32);
+        // gradient estimate should correlate with the true gradient 2(x-c)
+        let true_grad: Vec<f32> = theta.iter().zip(&center).map(|(a, b)| 2.0 * (a - b)).collect();
+        let dot: f32 = grad.iter().zip(&true_grad).map(|(a, b)| a * b).sum();
+        assert!(dot > 0.0, "estimate anti-correlated: dot={dot}, info={info:?}");
+    }
+}

@@ -1,0 +1,50 @@
+//! Cross-language golden tests: the Rust PRNG mirror vs the values the
+//! Python test suite records in `python/tests/golden_prng.json`.
+
+use sparse_mezo::util::json;
+use sparse_mezo::util::prng;
+
+#[test]
+fn prng_matches_python_goldens() {
+    let path = std::path::Path::new("python/tests/golden_prng.json");
+    if !path.exists() {
+        eprintln!("SKIP: golden_prng.json missing — run pytest first");
+        return;
+    }
+    let doc = json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let seed = doc.req("seed").unwrap().as_arr().unwrap();
+    let (s0, s1) = (seed[0].as_usize().unwrap() as u32, seed[1].as_usize().unwrap() as u32);
+    let layer = doc.req("layer").unwrap().as_usize().unwrap() as u32;
+
+    // integer stream must match EXACTLY
+    let key = prng::layer_key(s0, s1, layer);
+    let bits: Vec<u32> = doc
+        .req("bits_stream_a")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect();
+    for (i, &want) in bits.iter().enumerate() {
+        let got = prng::uniform_bits(key, i as u32, prng::STREAM_A);
+        assert_eq!(got, want, "bit stream diverged at index {i}");
+    }
+
+    // Box-Muller floats must match to transcendental-function tolerance
+    let normals: Vec<f64> = doc
+        .req("normals")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let z = prng::segment_normal(s0, s1, layer, 0, normals.len());
+    for (i, (&got, &want)) in z.iter().zip(normals.iter()).enumerate() {
+        assert!(
+            (got as f64 - want).abs() < 1e-5 * want.abs().max(1.0),
+            "normal[{i}]: rust {got} vs python {want}"
+        );
+    }
+}
