@@ -1,11 +1,12 @@
 //! Quickstart: the smallest end-to-end use of the library.
 //!
-//! Loads the AOT artifacts, builds a synthetic RTE-analog dataset,
-//! fine-tunes `llama_tiny` with Sparse-MeZO for a few hundred steps, and
-//! prints the accuracy before/after. Run with:
+//! Starts a runtime (native pure-Rust backend by default — no artifacts
+//! needed; PJRT with `--features pjrt` + `make artifacts`), builds a
+//! synthetic RTE-analog dataset, fine-tunes `llama_tiny` with Sparse-MeZO
+//! for a few hundred steps, and prints the accuracy before/after:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use std::path::Path;
@@ -17,7 +18,7 @@ use sparse_mezo::runtime::exec::InitExec;
 use sparse_mezo::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    // 1. runtime: PJRT CPU client + artifact manifest
+    // 1. runtime: picks the compute backend (native offline by default)
     let rt = Runtime::new(Path::new("artifacts"))?;
     let model = rt.model("llama_tiny")?.clone();
     println!(

@@ -1,10 +1,11 @@
 //! Bench: L3 coordinator overhead decomposition.
 //!
-//! The packed-state design (DESIGN.md §3.1) exists so the coordinator's
-//! per-step cost is {batch prep + 3 small uploads + metric readback},
-//! never a parameter round-trip. This bench measures each component and
-//! the end-to-end step, verifying coordinator overhead is a small
-//! fraction of compute (target <5%, EXPERIMENTS.md §Perf).
+//! The packed-state design exists so the coordinator's per-step cost is
+//! {batch prep + metric readback}, never a parameter round-trip. This
+//! bench measures each component and the end-to-end step, verifying
+//! coordinator overhead is a small fraction of compute (target <5%).
+//! Runs against whatever backend `Runtime::new` selects — native in a
+//! fresh checkout, PJRT when built with `--features pjrt` + artifacts.
 
 use std::path::Path;
 
@@ -35,13 +36,11 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(&b.tokens);
     }));
     let batch = loader.next_batch();
-    results.push(bench_auto("upload tokens+labels+seed", 1.0, || {
-        let t = rt.upload_i32(&batch.tokens, &[model.batch, model.seq_len]).unwrap();
-        let l = rt.upload_i32(&batch.labels, &[model.batch]).unwrap();
-        let s = rt.upload_u32(&[1, 2], &[2]).unwrap();
-        std::hint::black_box((&t, &l, &s));
+    results.push(bench_auto("state assembly (params -> packed state)", 1.0, || {
+        let s = TrainState::from_params(&rt, &params, 0, model.n_metrics).unwrap();
+        std::hint::black_box(&s);
     }));
-    results.push(bench_auto("metric readback (full-state literal)", 1.0, || {
+    results.push(bench_auto("metric readback (K-float tail)", 1.0, || {
         let m = state.metrics(&rt).unwrap();
         std::hint::black_box(&m);
     }));
@@ -58,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         let _ = state.metrics(&rt).unwrap();
     });
 
-    let overhead: f64 = results[0].summary.mean + results[1].summary.mean + results[2].summary.mean;
+    let overhead: f64 = results[0].summary.mean + results[2].summary.mean;
     println!(
         "\ncoordinator overhead: {:.1} µs of {:.1} µs step = {:.1}%  (target < 5%)",
         overhead * 1e6,

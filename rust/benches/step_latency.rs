@@ -2,7 +2,8 @@
 //! NO overhead over MeZO — "without any overhead", §1). Regenerates the
 //! wallclock basis of Fig. 1 and the Table-4 companion measurement.
 //!
-//! Run: `cargo bench --bench step_latency` (artifacts must be built).
+//! Run: `cargo bench --bench step_latency`. Uses the native backend in a
+//! fresh checkout; PJRT when built with `--features pjrt` + artifacts.
 
 use std::path::Path;
 

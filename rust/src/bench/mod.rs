@@ -9,13 +9,16 @@ use crate::util::stats::{summarize, Summary};
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// bench case name
     pub name: String,
+    /// timed iterations
     pub iters: usize,
     /// per-iteration seconds
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// One-line human-readable report row.
     pub fn report(&self) -> String {
         format!(
             "{:<42} {:>6} iters  mean {:>10}  p50 {:>10}  p99 {:>10}",
@@ -27,6 +30,7 @@ impl BenchResult {
         )
     }
 
+    /// JSON record for `bench_results/*.jsonl`.
     pub fn json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         Json::obj(vec![
@@ -41,6 +45,7 @@ impl BenchResult {
     }
 }
 
+/// Human-readable seconds (ns/µs/ms/s autoscale).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1} ns", s * 1e9)

@@ -16,10 +16,15 @@ use crate::util::toml;
 /// A fully-resolved training run configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// model name (manifest key)
     pub model: String,
+    /// task name (see `data::tasks`)
     pub task: String,
+    /// optimizer name (step-program suffix)
     pub optimizer: String,
+    /// training steps
     pub steps: usize,
+    /// step hyperparameters
     pub hypers: Hypers,
     /// data + noise seed for the run
     pub seed: u64,
@@ -132,6 +137,7 @@ impl TrainConfig {
         self.validate()
     }
 
+    /// Reject out-of-range hypers/steps before any compute runs.
     pub fn validate(&self) -> Result<()> {
         if self.steps == 0 {
             bail!("steps must be > 0");

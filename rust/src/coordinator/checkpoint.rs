@@ -13,9 +13,13 @@ use crate::util::json::{self, Json};
 /// On-disk checkpoint.
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
+    /// model name the params belong to
     pub model: String,
+    /// parameter count (ABI fingerprint)
     pub n_params: usize,
+    /// training step the checkpoint was taken at
     pub step: usize,
+    /// flat parameters
     pub params: Vec<f32>,
     /// optimizer slots (empty for ZO-SGD-family)
     pub slots: Vec<f32>,
@@ -24,6 +28,7 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Write payload + JSON sidecar (creating parent dirs).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -45,6 +50,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Load and validate against the expected model ABI.
     pub fn load(path: &Path, expect: &ModelInfo) -> Result<Checkpoint> {
         let sidecar = std::fs::read_to_string(sidecar_path(path))
             .with_context(|| format!("sidecar for {path:?}"))?;

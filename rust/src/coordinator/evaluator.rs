@@ -12,12 +12,16 @@ use crate::runtime::Runtime;
 /// Result of one evaluation pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EvalResult {
+    /// examples scored
     pub n: usize,
+    /// correct candidate-restricted predictions
     pub correct: usize,
+    /// mean cross-entropy of the gold answer token
     pub mean_loss: f64,
 }
 
 impl EvalResult {
+    /// Fraction correct (0 when nothing was scored).
     pub fn accuracy(&self) -> f64 {
         self.correct as f64 / self.n.max(1) as f64
     }
@@ -61,10 +65,9 @@ pub fn evaluate(
     cap: usize,
 ) -> Result<EvalResult> {
     let slice = if cap > 0 && cap < examples.len() { &examples[..cap] } else { examples };
-    let params_buf = logits.upload_params(rt, params)?;
     let mut total = EvalResult { n: 0, correct: 0, mean_loss: 0.0 };
     for batch in eval_batches(slice, logits.batch, logits.seq_len) {
-        let lg = logits.run(rt, &params_buf, &batch.tokens)?;
+        let lg = logits.run(rt, params, &batch.tokens)?;
         let r = score_batch(&lg, logits.vocab, &batch);
         total.mean_loss = (total.mean_loss * total.n as f64 + r.mean_loss * r.n as f64)
             / (total.n + r.n).max(1) as f64;
@@ -79,10 +82,10 @@ pub fn evaluate(
 pub fn batch_loss(
     rt: &Runtime,
     logits: &LogitsExec,
-    params_buf: &xla::PjRtBuffer,
+    params: &[f32],
     batch: &Batch,
 ) -> Result<f64> {
-    let lg = logits.run(rt, params_buf, &batch.tokens)?;
+    let lg = logits.run(rt, params, &batch.tokens)?;
     let mut loss = 0.0;
     for row in 0..batch.real {
         loss += row_loss(&lg[row * logits.vocab..(row + 1) * logits.vocab], batch.labels[row]);

@@ -26,7 +26,9 @@ use crate::runtime::Runtime;
 
 /// Shared experiment context: runtime, output dir, scale knobs.
 pub struct Ctx<'rt> {
+    /// runtime to execute on
     pub rt: &'rt Runtime,
+    /// output directory for tables/CSVs
     pub out: PathBuf,
     /// ZO training steps per run
     pub zo_steps: usize,
@@ -45,6 +47,7 @@ pub struct Ctx<'rt> {
 }
 
 impl<'rt> Ctx<'rt> {
+    /// Context with CPU-feasible default scale knobs.
     pub fn new(rt: &'rt Runtime, out: PathBuf) -> Ctx<'rt> {
         Ctx {
             rt,
@@ -248,7 +251,7 @@ pub fn table13(ctx: &Ctx) -> Result<()> {
 pub fn table5(ctx: &Ctx) -> Result<()> {
     let task_names = ["boolq", "rte", "wic"];
     let mut table = Table::new(
-        "Table 5 — Scaling: tiny (~0.15M) vs med (~4M)",
+        "Table 5 — Scaling: llama_tiny vs llama_med",
         &["Model", "Method", "boolq", "rte", "wic"],
     );
     for model in ["llama_tiny", "llama_med"] {
@@ -606,6 +609,7 @@ pub fn fig2c(ctx: &Ctx, model: &str, task: &str) -> Result<()> {
 // registry
 // ---------------------------------------------------------------------------
 
+/// Every experiment name [`run`] understands.
 pub const ALL: [&str; 14] = [
     "table1", "table2", "table3", "table4", "table5", "table10", "table11", "table13",
     "fig1", "fig2a", "fig2b", "fig2c", "fig3", "fig4",

@@ -2,7 +2,8 @@
 //! but the trainable state is the adapter block and evaluation goes through
 //! the `logits_lora` program (base params + adapters).
 //!
-//! Packed state layout (python/compile/optimizers.py):
+//! Packed state layout (python/compile/optimizers.py, mirrored by the
+//! native backend):
 //!   mezo_lora: [base P | adapters A                    | metrics]
 //!   lora_fo:   [base P | adapters A | m A | v A | t(1) | metrics]
 //! so in both cases `TrainState.p = P` and the adapters are the first A
@@ -18,14 +19,18 @@ use crate::data::Dataset;
 use crate::runtime::exec::{InitExec, InitLoraExec, LogitsLoraExec, StepExec, StepMetrics, ThreshExec};
 use crate::runtime::{ModelInfo, Runtime, TrainState};
 
+/// Driver for adapter-based training runs.
 pub struct LoraTrainer<'rt> {
+    /// the runtime (and through it, the compute backend) to train on
     pub rt: &'rt Runtime,
+    /// fully-resolved run configuration
     pub cfg: TrainConfig,
     /// base params override (pretrained checkpoint); falls back to `init`
     pub base_params: Option<Vec<f32>>,
 }
 
 impl<'rt> LoraTrainer<'rt> {
+    /// A LoRA trainer with freshly-initialized base params.
     pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> LoraTrainer<'rt> {
         LoraTrainer { rt, cfg, base_params: None }
     }
@@ -34,16 +39,15 @@ impl<'rt> LoraTrainer<'rt> {
         &self,
         model: &ModelInfo,
         logits: &LogitsLoraExec,
-        base_buf: &xla::PjRtBuffer,
+        base: &[f32],
         adapters: &[f32],
         examples: &[crate::data::Example],
         cap: usize,
     ) -> Result<EvalResult> {
         let slice = if cap > 0 && cap < examples.len() { &examples[..cap] } else { examples };
-        let ad_buf = self.rt.upload_f32(adapters, &[adapters.len()])?;
         let mut total = EvalResult { n: 0, correct: 0, mean_loss: 0.0 };
         for batch in eval_batches(slice, model.batch, model.seq_len) {
-            let lg = logits.run(self.rt, base_buf, &ad_buf, &batch.tokens)?;
+            let lg = logits.run(self.rt, base, adapters, &batch.tokens)?;
             let r = score_batch(&lg, model.vocab, &batch);
             total.mean_loss = (total.mean_loss * total.n as f64 + r.mean_loss * r.n as f64)
                 / (total.n + r.n).max(1) as f64;
@@ -53,6 +57,8 @@ impl<'rt> LoraTrainer<'rt> {
         Ok(total)
     }
 
+    /// Run against an explicit model + dataset (paired-comparison entry
+    /// point used by the experiment harness).
     pub fn run_on(&mut self, model: &ModelInfo, dataset: &Dataset) -> Result<TrainResult> {
         let cfg = self.cfg.clone();
         if cfg.optimizer != "mezo_lora" && cfg.optimizer != "lora_fo" {
@@ -73,7 +79,6 @@ impl<'rt> LoraTrainer<'rt> {
         let thresholds = thresh.run(self.rt, &base, cfg.hypers.sparsity)?;
         let step_exec = StepExec::load(self.rt, model, &cfg.optimizer, cfg.hypers, &thresholds)?;
         let logits = LogitsLoraExec::load(self.rt, model)?;
-        let base_buf = self.rt.upload_f32(&base, &[base.len()])?;
 
         // assemble packed state: [base | adapters | extra slots zeroed | K]
         let slots_total = step_exec.slots;
@@ -109,7 +114,7 @@ impl<'rt> LoraTrainer<'rt> {
             let is_last = t + 1 == cfg.steps;
             if (cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0) || is_last {
                 let adapters = state.segment_slots(self.rt, a)?;
-                let dev = self.eval(model, &logits, &base_buf, &adapters, &dataset.dev, cfg.eval_cap)?;
+                let dev = self.eval(model, &logits, &base, &adapters, &dataset.dev, cfg.eval_cap)?;
                 curve.push(CurvePoint {
                     step: t + 1,
                     dev_accuracy: dev.accuracy(),
@@ -128,7 +133,7 @@ impl<'rt> LoraTrainer<'rt> {
 
         let adapters = state.segment_slots(self.rt, a)?;
         let test = if !diverged {
-            Some(self.eval(model, &logits, &base_buf, &adapters, &dataset.test, 0)?)
+            Some(self.eval(model, &logits, &base, &adapters, &dataset.test, 0)?)
         } else {
             None
         };
@@ -145,15 +150,5 @@ impl<'rt> LoraTrainer<'rt> {
             params: adapters,
             train_losses,
         })
-    }
-}
-
-impl TrainState {
-    /// First `n` floats of the slot block (the adapter segment).
-    pub fn segment_slots(&self, rt: &Runtime, n: usize) -> Result<Vec<f32>> {
-        if n > self.s {
-            bail!("slot segment {n} > slots {}", self.s);
-        }
-        rt.download_f32_at(&self.buffer, self.p, n)
     }
 }

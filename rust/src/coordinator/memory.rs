@@ -21,7 +21,9 @@ use crate::runtime::ModelInfo;
 /// Scenario constants for the activation model.
 #[derive(Debug, Clone, Copy)]
 pub struct MemScenario {
+    /// batch size
     pub batch: usize,
+    /// sequence length
     pub seq_len: usize,
     /// bytes per element of weights/activations
     pub dtype_bytes: usize,
@@ -30,18 +32,26 @@ pub struct MemScenario {
 /// Breakdown in bytes.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct MemBreakdown {
+    /// parameter bytes (incl. fp32 master copies when mixed)
     pub params: usize,
+    /// gradient bytes
     pub grads: usize,
+    /// optimizer slot bytes
     pub opt_slots: usize,
+    /// live activation bytes
     pub activations: usize,
+    /// stored-mask bytes (vanilla S-MeZO only)
     pub mask: usize,
+    /// perturbed parameter copy bytes (vanilla S-MeZO only)
     pub perturbed_copy: usize,
 }
 
 impl MemBreakdown {
+    /// Total bytes.
     pub fn total(&self) -> usize {
         self.params + self.grads + self.opt_slots + self.activations + self.mask + self.perturbed_copy
     }
+    /// Total in GB (1e9 bytes).
     pub fn gb(&self) -> f64 {
         self.total() as f64 / 1e9
     }

@@ -14,11 +14,17 @@ use crate::runtime::{Runtime, TrainState};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
+/// Pretraining run configuration.
 pub struct PretrainConfig {
+    /// model name
     pub model: String,
+    /// LM pretraining steps
     pub steps: usize,
+    /// Adam learning rate
     pub lr: f32,
+    /// corpus + init seed
     pub seed: u64,
+    /// log cadence (0 = silent)
     pub log_every: usize,
 }
 
@@ -29,13 +35,19 @@ impl Default for PretrainConfig {
 }
 
 #[derive(Debug, Clone)]
+/// Outcome of the LM pretraining phase.
 pub struct PretrainResult {
+    /// per-step LM losses
     pub losses: Vec<f32>,
+    /// bias-corrected EMA of the final loss
     pub final_loss_ema: f64,
+    /// final host parameters
     pub params: Vec<f32>,
+    /// mean seconds per step
     pub sec_per_step: f64,
 }
 
+/// LM-pretrain `cfg.model` from scratch on the synthetic corpus.
 pub fn pretrain(rt: &Runtime, cfg: &PretrainConfig) -> Result<PretrainResult> {
     let model = rt.model(&cfg.model)?.clone();
     let hypers = Hypers { lr: cfg.lr, ..Hypers::default() };

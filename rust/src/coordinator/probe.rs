@@ -20,36 +20,48 @@ use crate::util::stats::wilson_interval;
 /// One window (epoch analog) of probe statistics.
 #[derive(Debug, Clone)]
 pub struct ProbeWindow {
+    /// window index (epoch analog)
     pub window: usize,
+    /// probe steps in this window
     pub n: usize,
+    /// count of loss increases on the same half-batch
     pub up_same: usize,
+    /// count of loss increases on the held-out half-batch
     pub up_held: usize,
 }
 
 impl ProbeWindow {
+    /// P(loss increase | same batch).
     pub fn p_up_same(&self) -> f64 {
         self.up_same as f64 / self.n.max(1) as f64
     }
+    /// P(loss increase | held-out batch).
     pub fn p_up_held(&self) -> f64 {
         self.up_held as f64 / self.n.max(1) as f64
     }
+    /// Wilson interval for the held-out proportion.
     pub fn held_interval(&self) -> (f64, f64) {
         wilson_interval(self.up_held, self.n, 1.96)
     }
 }
 
 #[derive(Debug, Clone)]
+/// Full probe outcome: per-window statistics.
 pub struct ProbeResult {
+    /// estimator that drove the probe
     pub optimizer: String,
+    /// per-window counts
     pub windows: Vec<ProbeWindow>,
 }
 
 impl ProbeResult {
+    /// Pooled P(up | same) over all windows.
     pub fn overall_up_same(&self) -> f64 {
         let (u, n): (usize, usize) =
             self.windows.iter().fold((0, 0), |(u, n), w| (u + w.up_same, n + w.n));
         u as f64 / n.max(1) as f64
     }
+    /// Pooled P(up | held-out) over all windows.
     pub fn overall_up_held(&self) -> f64 {
         let (u, n): (usize, usize) =
             self.windows.iter().fold((0, 0), |(u, n), w| (u + w.up_held, n + w.n));
@@ -82,18 +94,16 @@ pub fn half_batch_probe(
     let mut cur = ProbeWindow { window: 0, n: 0, up_same: 0, up_held: 0 };
     for t in 0..steps {
         let (b1, b2) = loader.next_half_batches();
-        // loss before (both halves) — params pulled once, uploaded once
+        // loss before (both halves) — params pulled once per phase
         let params = state.params_host(rt)?;
-        let pbuf = logits.upload_params(rt, &params)?;
-        let l1_before = batch_loss(rt, &logits, &pbuf, &b1)?;
-        let l2_before = batch_loss(rt, &logits, &pbuf, &b2)?;
+        let l1_before = batch_loss(rt, &logits, &params, &b1)?;
+        let l2_before = batch_loss(rt, &logits, &params, &b2)?;
         // one update step computed ON b1
         step_exec.run(rt, &mut state, &b1.tokens, &b1.labels, (cfg.seed as u32, t as u32))?;
         // loss after
         let params = state.params_host(rt)?;
-        let pbuf = logits.upload_params(rt, &params)?;
-        let l1_after = batch_loss(rt, &logits, &pbuf, &b1)?;
-        let l2_after = batch_loss(rt, &logits, &pbuf, &b2)?;
+        let l1_after = batch_loss(rt, &logits, &params, &b1)?;
+        let l2_after = batch_loss(rt, &logits, &params, &b2)?;
 
         cur.n += 1;
         if l1_after > l1_before {

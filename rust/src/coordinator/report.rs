@@ -16,6 +16,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Start a table with a title + header row.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -24,12 +25,14 @@ impl Table {
         }
     }
 
+    /// Append one row (width-checked against the header).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);
         self
     }
 
+    /// Render as an aligned markdown table.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -60,6 +63,7 @@ impl Table {
         out
     }
 
+    /// Render to a file (creating parent dirs).
     pub fn write(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;

@@ -2,7 +2,9 @@
 //! paper's protocol); first-order baselines get optional warmup+decay.
 
 #[derive(Debug, Clone, Copy, PartialEq)]
+/// A learning-rate schedule (multiplier over steps).
 pub enum Schedule {
+    /// constant LR (the ZO-family protocol)
     Constant,
     /// linear warmup over `warmup` steps then constant
     Warmup { warmup: usize },
@@ -40,6 +42,7 @@ impl Schedule {
         }
     }
 
+    /// Scheduled LR at `step` for base LR `base`.
     pub fn lr_at(&self, base: f32, step: usize) -> f32 {
         (base as f64 * self.factor(step)) as f32
     }

@@ -24,30 +24,43 @@ use crate::util::log::JsonlWriter;
 /// One point on an accuracy-over-steps curve.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CurvePoint {
+    /// optimizer step the evaluation ran after
     pub step: usize,
+    /// dev-split candidate-scored accuracy
     pub dev_accuracy: f64,
+    /// dev-split mean cross-entropy
     pub dev_loss: f64,
+    /// smoothed training loss at this step
     pub train_loss_ema: f64,
 }
 
 /// Outcome of a training run.
 #[derive(Debug, Clone)]
 pub struct TrainResult {
+    /// `TrainConfig::label()` of the run
     pub config_label: String,
+    /// steps actually executed (may stop early on divergence)
     pub steps_run: usize,
+    /// periodic dev evaluations
     pub curve: Vec<CurvePoint>,
+    /// last dev evaluation (loss only; kept for report compatibility)
     pub final_dev: Option<EvalResult>,
+    /// test-split evaluation (skipped after divergence)
     pub test: Option<EvalResult>,
+    /// whether divergence detection fired
     pub diverged: bool,
+    /// total wallclock including evaluation pauses
     pub wallclock_s: f64,
     /// mean seconds per optimizer step (excluding eval pauses)
     pub sec_per_step: f64,
     /// final parameters (host) for downstream analysis / checkpointing
     pub params: Vec<f32>,
+    /// raw per-step training losses
     pub train_losses: Vec<f32>,
 }
 
 impl TrainResult {
+    /// Best dev accuracy seen along the curve (the model-selection metric).
     pub fn best_dev_accuracy(&self) -> f64 {
         self.curve.iter().map(|c| c.dev_accuracy).fold(0.0, f64::max)
     }
@@ -59,8 +72,11 @@ pub const DIVERGENCE_LOSS: f32 = 9.0;
 
 /// Driver for one training run.
 pub struct Trainer<'rt> {
+    /// the runtime (and through it, the compute backend) to train on
     pub rt: &'rt Runtime,
+    /// fully-resolved run configuration
     pub cfg: TrainConfig,
+    /// learning-rate schedule (constant for the ZO family)
     pub schedule: Schedule,
     /// stream per-step metrics here if set
     pub jsonl: Option<JsonlWriter>,
@@ -72,6 +88,7 @@ pub struct Trainer<'rt> {
 }
 
 impl<'rt> Trainer<'rt> {
+    /// A trainer with default policy: constant LR, test eval at the end.
     pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Trainer<'rt> {
         Trainer {
             rt,
@@ -83,6 +100,7 @@ impl<'rt> Trainer<'rt> {
         }
     }
 
+    /// Stream per-step metric records to a JSONL file under `path`.
     pub fn with_jsonl(mut self, path: &std::path::Path) -> Result<Self> {
         self.jsonl = Some(JsonlWriter::create(path)?);
         Ok(self)
@@ -107,6 +125,7 @@ impl<'rt> Trainer<'rt> {
         }
     }
 
+    /// Resolve the model + dataset from the config and run.
     pub fn run(&mut self) -> Result<TrainResult> {
         let cfg = self.cfg.clone();
         cfg.validate()?;
@@ -279,7 +298,6 @@ pub fn in_context(
 ) -> Result<EvalResult> {
     let model = rt.model(model_name)?;
     let logits = LogitsExec::load(rt, model)?;
-    let params_buf = logits.upload_params(rt, params)?;
     let slice = if cap > 0 && cap < dataset.test.len() { &dataset.test[..cap] } else { &dataset.test };
 
     // rebuild each test example with demonstrations prepended
@@ -294,7 +312,7 @@ pub fn in_context(
         .collect();
     let mut total = EvalResult { n: 0, correct: 0, mean_loss: 0.0 };
     for batch in crate::data::batcher::eval_batches(&prompted, model.batch, model.seq_len) {
-        let lg = logits.run(rt, &params_buf, &batch.tokens)?;
+        let lg = logits.run(rt, params, &batch.tokens)?;
         let r = evaluator::score_batch(&lg, model.vocab, &batch);
         total.mean_loss = (total.mean_loss * total.n as f64 + r.mean_loss * r.n as f64)
             / (total.n + r.n).max(1) as f64;

@@ -60,11 +60,14 @@ pub struct TrainLoader<'a> {
     cursor: usize,
     epoch: u64,
     seed: u64,
+    /// batch size `B`
     pub b: usize,
+    /// sequence length `T`
     pub t: usize,
 }
 
 impl<'a> TrainLoader<'a> {
+    /// A loader over `examples` with deterministic epoch shuffling.
     pub fn new(examples: &'a [Example], b: usize, t: usize, seed: u64) -> Result<TrainLoader<'a>> {
         if examples.is_empty() {
             bail!("TrainLoader: empty dataset");
@@ -82,6 +85,7 @@ impl<'a> TrainLoader<'a> {
         Ok(loader)
     }
 
+    /// Completed epoch count.
     pub fn epoch(&self) -> u64 {
         self.epoch
     }

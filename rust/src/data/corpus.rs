@@ -27,6 +27,7 @@ pub struct Corpus {
 }
 
 impl Corpus {
+    /// A corpus stream of `seq_len`-token packed sequences.
     pub fn new(seed: u64, seq_len: usize) -> Corpus {
         Corpus { rng: Pcg32::from_name(seed, "corpus"), seq_len, task_frac: 0.25, induction_frac: 0.25 }
     }

@@ -18,8 +18,11 @@ pub mod vocab;
 /// token, and the candidate answer tokens the evaluator scores over.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Example {
+    /// prompt tokens (unpadded)
     pub prompt: Vec<i32>,
+    /// gold answer token
     pub label: i32,
+    /// candidate answer tokens the evaluator scores over
     pub candidates: Vec<i32>,
 }
 
@@ -46,9 +49,13 @@ impl Example {
 /// examples; dev for model selection; test for reported accuracy).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// task name
     pub task: String,
+    /// training split
     pub train: Vec<Example>,
+    /// model-selection split
     pub dev: Vec<Example>,
+    /// reported-accuracy split
     pub test: Vec<Example>,
 }
 

@@ -29,12 +29,15 @@ use crate::util::prng::Pcg32;
 /// Longest prompt any generator may emit (min exported seq_len is 32).
 pub const MAX_PROMPT: usize = 30;
 
+/// Every task name [`generate`] understands.
 pub const ALL_TASKS: [&str; 9] =
     ["sst2", "rte", "boolq", "wic", "multirc", "copa", "piqa", "siqa", "aqua"];
 
 /// Paper-matching split sizes (1,000 training examples; §4.1).
 pub const N_TRAIN: usize = 1000;
+/// dev split size (model selection)
 pub const N_DEV: usize = 500;
+/// test split size (reported accuracy)
 pub const N_TEST: usize = 1000;
 
 /// Generate a dataset for `task` with canonical split sizes.
@@ -42,6 +45,7 @@ pub fn generate(task: &str, seed: u64) -> Result<Dataset> {
     generate_sized(task, seed, N_TRAIN, N_DEV, N_TEST)
 }
 
+/// Generate a dataset with explicit split sizes.
 pub fn generate_sized(
     task: &str,
     seed: u64,

@@ -17,29 +17,49 @@
 //!   448..=511  neutral filler
 //! ```
 
+/// total vocabulary size
 pub const SIZE: usize = 512;
 
+/// padding + attention-mask sentinel
 pub const PAD: i32 = 0;
+/// segment separator
 pub const SEP: i32 = 1;
+/// question marker (boolq/multirc)
 pub const QRY: i32 = 2;
+/// "yes" answer token
 pub const YES: i32 = 3;
+/// "no" answer token
 pub const NO: i32 = 4;
+/// "maybe" answer token (reserved)
 pub const MAYBE: i32 = 5;
+/// "+" token (aqua)
 pub const PLUS: i32 = 16;
+/// "=" token (aqua)
 pub const EQ: i32 = 17;
+/// "because" marker (copa)
 pub const CAUSE: i32 = 18;
+/// "so" marker (copa)
 pub const EFFECT: i32 = 19;
 
+/// first digit token; `DIGIT(d) = DIGIT_BASE + d`
 pub const DIGIT_BASE: i32 = 6; // DIGIT(d) = 6 + d, d in 0..10
 
+/// polysemous WIC words
 pub const WIC_WORDS: std::ops::Range<i32> = 32..64;
+/// positive-sentiment lexicon
 pub const POS_LEX: std::ops::Range<i32> = 64..128;
+/// negative-sentiment lexicon
 pub const NEG_LEX: std::ops::Range<i32> = 128..192;
+/// first topic-cluster token
 pub const CLUSTER_BASE: i32 = 192;
+/// tokens per topic cluster
 pub const CLUSTER_SIZE: i32 = 32;
+/// topic cluster count
 pub const N_CLUSTERS: i32 = 8;
+/// neutral filler tokens
 pub const FILLER: std::ops::Range<i32> = 448..512;
 
+/// The answer token for digit `d`.
 pub fn digit(d: u32) -> i32 {
     debug_assert!(d < 10);
     DIGIT_BASE + d as i32

@@ -7,26 +7,33 @@
 //! This crate is **Layer 3**: the training coordinator. It owns the data
 //! pipeline, the ZO training loop, seed management, evaluation, sweeps,
 //! checkpointing, metrics and the experiment harness that regenerates every
-//! table and figure of the paper. The compute itself — model forward passes
-//! and the functional optimizer steps (Layer 2 JAX, with the Layer 1 Pallas
-//! fused mask+perturb kernels inside) — was AOT-lowered to HLO text by
-//! `python/compile/aot.py` and is executed through the PJRT C API (the
-//! `xla` crate). Python never runs at training time.
+//! table and figure of the paper. Compute routes through a pluggable
+//! [`runtime::backend::Backend`]:
+//!
+//! * the **native** pure-Rust backend (default) serves the whole CLI
+//!   offline — no artifacts, no Python, no network;
+//! * the **pjrt** backend (cargo feature `pjrt`) executes the model
+//!   forward passes and functional optimizer steps that were AOT-lowered
+//!   to HLO text by `python/compile/aot.py` (Layer 2 JAX, with the Layer 1
+//!   Pallas fused mask+perturb kernels inside) through the PJRT C API.
+//!   Python never runs at training time.
 //!
 //! ## Module map
 //! * [`util`] — hand-rolled substrates (JSON, TOML-subset config, CLI,
 //!   counter PRNG mirroring the Python/Pallas one, logging, stats).
-//! * [`runtime`] — PJRT client, artifact manifest, typed executables,
-//!   device-resident packed training state.
+//! * [`runtime`] — the backend trait, the native and PJRT backends, the
+//!   artifact manifest, and the packed training state.
 //! * [`data`] — vocabulary, synthetic SuperGLUE-analog task generators,
 //!   pretraining corpus, batcher.
 //! * [`config`] — presets (models, tasks, optimizers) + experiment plans.
 //! * [`zo`] — a pure-Rust MLP + every ZO optimizer variant, used as a
-//!   property-testing substrate and cross-check (no PJRT needed).
-//! * [`coordinator`] — trainer, evaluator, LR schedules, sweeps,
+//!   property-testing substrate and cross-check (no backend needed).
+//! * [`coordinator`] — trainer, evaluator, LR schedules, parallel sweeps,
 //!   convergence tracking, the Fig-2b/4 generalization probe, memory
 //!   model (Table 4), checkpoints, experiment registry, report rendering.
 //! * [`bench`] — the timing harness used by `cargo bench` targets.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod config;

@@ -337,8 +337,8 @@ fn cmd_inspect(args: &Args, artifacts: &PathBuf) -> Result<()> {
     let rt = Runtime::new(artifacts)?;
     match args.get("model") {
         None => {
-            println!("models in manifest:");
-            for (name, m) in &rt.manifest.models {
+            println!("models in manifest ({} backend):", rt.backend().platform());
+            for (name, m) in &rt.manifest().models {
                 println!(
                     "  {name:<16} {:>10} params  B={} T={} V={}  programs: {}",
                     m.n_params,
@@ -373,16 +373,19 @@ fn cmd_inspect(args: &Args, artifacts: &PathBuf) -> Result<()> {
 
 fn cmd_check(artifacts: &PathBuf) -> Result<()> {
     let rt = Runtime::new(artifacts)?;
-    let names: Vec<String> = rt.manifest.models.keys().cloned().collect();
+    let names: Vec<String> = rt.manifest().models.keys().cloned().collect();
     for name in names {
         let model = rt.model(&name)?.clone();
-        for (pname, prog) in &model.programs {
-            rt.load(prog).with_context(|| format!("{name}/{pname}"))?;
+        for pname in model.programs.keys() {
+            rt.backend()
+                .compile_check(&model, pname)
+                .with_context(|| format!("{name}/{pname}"))?;
         }
-        println!("{name}: {} programs compile OK", model.programs.len());
+        println!("{name}: {} programs check OK", model.programs.len());
     }
     println!(
-        "all artifacts compile ({} executables, {:.1}s total compile time)",
+        "all programs check out on the {} backend ({} executables, {:.1}s total compile time)",
+        rt.backend().platform(),
         rt.cached_executables(),
         rt.total_compile_seconds()
     );

@@ -1,0 +1,116 @@
+//! The pluggable compute-backend contract.
+//!
+//! The coordinator (trainer, evaluator, sweeps, probes, repro harness)
+//! only ever needs a small semantic surface from the compute layer:
+//!
+//! * **init** — deterministic parameter/adapter initialization,
+//! * **thresholds** — per-layout-entry §8.2 percentile thresholds,
+//! * **step** — one optimizer step on the packed
+//!   `[params | slots | metrics]` state (the perturb / forward-loss /
+//!   replay-update cycle of paper Alg. 1–3),
+//! * **logits** — last-position logits for candidate-scored evaluation,
+//! * **state plumbing** — creating and partially reading packed states.
+//!
+//! [`Backend`] captures exactly that surface, so the coordinator is
+//! independent of *where* compute happens. Two implementations ship:
+//!
+//! * [`native`](super::native) (default) — a pure-Rust model + optimizer
+//!   family built on the [`zo`](crate::zo) substrate and the shared
+//!   counter PRNG. Runs everywhere, offline, no artifacts needed.
+//! * [`pjrt`](super::pjrt) (behind the `pjrt` cargo feature) — executes
+//!   the AOT-compiled XLA programs under `artifacts/` through the PJRT C
+//!   API, as described in the module docs of [`super`].
+//!
+//! Backends must be `Send + Sync`: the sweep driver
+//! ([`crate::coordinator::sweep`]) fans grid cells out across scoped
+//! threads that share one backend reference.
+
+use anyhow::Result;
+
+use super::exec::Hypers;
+use super::manifest::{Manifest, ModelInfo};
+use super::state::TrainState;
+
+/// A compute backend: everything the coordinator needs from the layer
+/// that owns parameters and runs forward passes. See the module docs.
+pub trait Backend: Send + Sync {
+    /// Short platform tag for logs (`"native"`, `"pjrt"`).
+    fn platform(&self) -> &'static str;
+
+    /// The model/program manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Deterministic parameter init: `seed -> f32[P]`.
+    fn init(&self, model: &ModelInfo, seed: (u32, u32)) -> Result<Vec<f32>>;
+
+    /// Deterministic LoRA adapter init: `seed -> f32[A]`.
+    fn init_lora(&self, model: &ModelInfo, seed: (u32, u32)) -> Result<Vec<f32>>;
+
+    /// Per-layout-entry magnitude thresholds at `sparsity` (paper §8.2):
+    /// matrix entries get their |theta| percentile, vector entries get
+    /// +inf (always dense). Returns `f32[n_entries]`.
+    fn thresholds(&self, model: &ModelInfo, params: &[f32], sparsity: f32) -> Result<Vec<f32>>;
+
+    /// Wrap an assembled host `[params | slots | metrics]` vector into a
+    /// backend-resident [`TrainState`].
+    fn new_state(&self, host: Vec<f32>, p: usize, s: usize, k: usize) -> Result<TrainState>;
+
+    /// Read `len` floats at element `offset` from the packed state.
+    fn read_state(&self, state: &TrainState, offset: usize, len: usize) -> Result<Vec<f32>>;
+
+    /// One optimizer step of `optimizer` on `state` (paper Alg. 1 for the
+    /// ZO family): evaluate the two perturbed losses on the batch, form
+    /// the projected gradient, apply the masked update, and write the
+    /// K-element metric tail.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        model: &ModelInfo,
+        optimizer: &str,
+        hypers: &Hypers,
+        thresholds: &[f32],
+        state: &mut TrainState,
+        tokens: &[i32],
+        labels: &[i32],
+        seed: (u32, u32),
+    ) -> Result<()>;
+
+    /// One first-order LM pretraining step on `state` (next-token
+    /// objective over a corpus batch).
+    fn pretrain_step(
+        &self,
+        model: &ModelInfo,
+        hypers: &Hypers,
+        state: &mut TrainState,
+        tokens: &[i32],
+        seed: (u32, u32),
+    ) -> Result<()>;
+
+    /// Last-position logits `f32[B, V]` for a token batch under `params`.
+    fn logits(&self, model: &ModelInfo, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Last-position logits under frozen `params` + LoRA `adapters`.
+    fn logits_lora(
+        &self,
+        model: &ModelInfo,
+        params: &[f32],
+        adapters: &[f32],
+        tokens: &[i32],
+    ) -> Result<Vec<f32>>;
+
+    /// Verify one named program is loadable/executable (the
+    /// `check-artifacts` smoke pass). PJRT compiles the artifact; the
+    /// native backend validates the program name.
+    fn compile_check(&self, model: &ModelInfo, program: &str) -> Result<()>;
+
+    /// Number of compiled executables held in the cache (perf accounting;
+    /// 0 for backends without a compile step).
+    fn cached_executables(&self) -> usize {
+        0
+    }
+
+    /// Cumulative compile seconds (perf accounting).
+    fn total_compile_seconds(&self) -> f64 {
+        0.0
+    }
+}

@@ -1,28 +1,36 @@
-//! Typed executable wrappers enforcing the packed-state ABI.
+//! Typed program wrappers enforcing the packed-state ABI.
 //!
-//! Each wrapper pins the argument order/shapes of one exported program
-//! class so the coordinator can't mis-call an artifact. Constant inputs
-//! (hypers, thresholds) are uploaded once and reused across steps.
-
-use std::rc::Rc;
+//! Each wrapper pins the argument shapes of one program class so the
+//! coordinator can't mis-call the backend: shape mismatches fail at the
+//! call site with an actionable message, before any compute runs. The
+//! wrappers are thin — all execution routes through the active
+//! [`Backend`](super::backend::Backend), so the same coordinator code
+//! drives the native model and the PJRT artifacts.
 
 use anyhow::{bail, Result};
-use xla::{PjRtBuffer, PjRtLoadedExecutable};
 
-use super::client::Runtime;
 use super::manifest::ModelInfo;
 use super::state::TrainState;
+use super::Runtime;
 
-/// The 8-slot hyperparameter vector (manifest.hyper_names order).
+/// The 8-slot hyperparameter vector (`Manifest::hyper_names` order).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Hypers {
+    /// learning rate
     pub lr: f32,
+    /// ZO perturbation scale (paper's epsilon, 1e-3 throughout)
     pub eps: f32,
+    /// S-MeZO sparsity (fraction of matrix coordinates frozen)
     pub sparsity: f32,
+    /// R-MeZO Bernoulli-mask seed (carried as f32 in the hyper vector)
     pub mask_seed: f32,
+    /// Adam first-moment decay
     pub beta1: f32,
+    /// Adam second-moment decay
     pub beta2: f32,
+    /// Adam denominator epsilon
     pub adam_eps: f32,
+    /// decoupled weight decay
     pub wd: f32,
 }
 
@@ -42,6 +50,7 @@ impl Default for Hypers {
 }
 
 impl Hypers {
+    /// The vector form uploaded to step programs (hyper_names order).
     pub fn to_vec(self) -> Vec<f32> {
         vec![
             self.lr,
@@ -57,19 +66,27 @@ impl Hypers {
 }
 
 /// Per-step metrics decoded from the packed tail
-/// (manifest.metric_names order).
+/// (`Manifest::metric_names` order).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StepMetrics {
+    /// loss at `theta + eps * m ⊙ z`
     pub l_plus: f32,
+    /// loss at `theta - eps * m ⊙ z`
     pub l_minus: f32,
+    /// projected gradient `(l_plus - l_minus) / (2 eps)`
     pub proj_grad: f32,
+    /// fraction of coordinates the mask selected this step
     pub masked_frac: f32,
+    /// squared L2 norm of the applied update
     pub update_norm_sq: f32,
+    /// the step's training-loss proxy (divergence detection reads this)
     pub train_loss: f32,
+    /// 1 if the update was applied (conservative variants may reject)
     pub accept: f32,
 }
 
 impl StepMetrics {
+    /// Decode the metric tail read back from a [`TrainState`].
     pub fn from_tail(tail: &[f32]) -> Result<StepMetrics> {
         if tail.len() < 7 {
             bail!("metric tail too short: {}", tail.len());
@@ -86,56 +103,49 @@ impl StepMetrics {
     }
 }
 
-fn single_output(mut outs: Vec<Vec<PjRtBuffer>>, what: &str) -> Result<PjRtBuffer> {
-    if outs.len() != 1 || outs[0].len() != 1 {
-        bail!("{what}: expected 1 output buffer, got {}x{}", outs.len(),
-            outs.first().map(|v| v.len()).unwrap_or(0));
-    }
-    Ok(outs.remove(0).remove(0))
-}
-
 // ---------------------------------------------------------------------------
 // init
 // ---------------------------------------------------------------------------
 
 /// `init(seed u32[2]) -> params f32[P]`
 pub struct InitExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    model: ModelInfo,
+    /// parameter count of the bound model
     pub n_params: usize,
 }
 
 impl InitExec {
+    /// Bind the init program of `model`.
     pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<InitExec> {
-        let prog = model.program("init")?;
-        Ok(InitExec { exe: rt.load(prog)?, n_params: model.n_params })
+        model.program("init")?;
+        let _ = rt;
+        Ok(InitExec { model: model.clone(), n_params: model.n_params })
     }
 
     /// Returns host params (they immediately get packed into a TrainState).
     pub fn run(&self, rt: &Runtime, seed: (u32, u32)) -> Result<Vec<f32>> {
-        let seed_buf = rt.upload_u32(&[seed.0, seed.1], &[2])?;
-        let out = self.exe.execute_b(&[&seed_buf]).map_err(|e| anyhow::anyhow!("init: {e:?}"))?;
-        let buf = single_output(out, "init")?;
-        rt.download_f32(&buf, self.n_params)
+        rt.backend().init(&self.model, seed)
     }
 }
 
 /// `init_lora(seed u32[2]) -> adapters f32[A]`
 pub struct InitLoraExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    model: ModelInfo,
+    /// adapter count of the bound model
     pub n_adapters: usize,
 }
 
 impl InitLoraExec {
+    /// Bind the LoRA-init program of `model`.
     pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<InitLoraExec> {
-        let prog = model.program("init_lora")?;
-        Ok(InitLoraExec { exe: rt.load(prog)?, n_adapters: model.n_lora_params })
+        model.program("init_lora")?;
+        let _ = rt;
+        Ok(InitLoraExec { model: model.clone(), n_adapters: model.n_lora_params })
     }
 
+    /// Deterministic adapter init.
     pub fn run(&self, rt: &Runtime, seed: (u32, u32)) -> Result<Vec<f32>> {
-        let seed_buf = rt.upload_u32(&[seed.0, seed.1], &[2])?;
-        let out = self.exe.execute_b(&[&seed_buf]).map_err(|e| anyhow::anyhow!("init_lora: {e:?}"))?;
-        let buf = single_output(out, "init_lora")?;
-        rt.download_f32(&buf, self.n_adapters)
+        rt.backend().init_lora(&self.model, seed)
     }
 }
 
@@ -145,26 +155,23 @@ impl InitLoraExec {
 
 /// `thresh(params f32[P], sparsity f32[1]) -> f32[L]`
 pub struct ThreshExec {
-    exe: Rc<PjRtLoadedExecutable>,
-    n_entries: usize,
-    n_params: usize,
+    model: ModelInfo,
 }
 
 impl ThreshExec {
+    /// Bind the threshold program of `model`.
     pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<ThreshExec> {
-        let prog = model.program("thresh")?;
-        Ok(ThreshExec { exe: rt.load(prog)?, n_entries: model.n_entries, n_params: model.n_params })
+        model.program("thresh")?;
+        let _ = rt;
+        Ok(ThreshExec { model: model.clone() })
     }
 
+    /// Per-layout-entry §8.2 percentile thresholds at `sparsity`.
     pub fn run(&self, rt: &Runtime, params: &[f32], sparsity: f32) -> Result<Vec<f32>> {
-        if params.len() != self.n_params {
-            bail!("thresh: params len {} != {}", params.len(), self.n_params);
+        if params.len() != self.model.n_params {
+            bail!("thresh: params len {} != {}", params.len(), self.model.n_params);
         }
-        let p_buf = rt.upload_f32(params, &[params.len()])?;
-        let s_buf = rt.upload_f32(&[sparsity], &[1])?;
-        let out = self.exe.execute_b(&[&p_buf, &s_buf]).map_err(|e| anyhow::anyhow!("thresh: {e:?}"))?;
-        let buf = single_output(out, "thresh")?;
-        rt.download_f32(&buf, self.n_entries)
+        rt.backend().thresholds(&self.model, params, sparsity)
     }
 }
 
@@ -175,17 +182,21 @@ impl ThreshExec {
 /// `step(state, tokens i32[B,T], labels i32[B], seed u32[2], hypers f32[8],
 ///  thresholds f32[L]) -> state'`
 pub struct StepExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    model: ModelInfo,
+    /// which optimizer's step program this wrapper drives
     pub optimizer: String,
+    /// optimizer slot count `S` the packed state must carry
     pub slots: usize,
+    /// batch size `B`
     pub batch: usize,
+    /// sequence length `T`
     pub seq_len: usize,
-    n_entries: usize,
-    hypers_buf: PjRtBuffer,
-    thresholds_buf: PjRtBuffer,
+    hypers: Hypers,
+    thresholds: Vec<f32>,
 }
 
 impl StepExec {
+    /// Bind `optimizer`'s step program with constant hypers + thresholds.
     pub fn load(
         rt: &Runtime,
         model: &ModelInfo,
@@ -197,34 +208,37 @@ impl StepExec {
         if thresholds.len() != model.n_entries {
             bail!("thresholds len {} != n_entries {}", thresholds.len(), model.n_entries);
         }
+        let _ = rt;
         Ok(StepExec {
-            exe: rt.load(prog)?,
+            model: model.clone(),
             optimizer: optimizer.to_string(),
             slots: prog.slots.unwrap_or(0),
             batch: model.batch,
             seq_len: model.seq_len,
-            n_entries: model.n_entries,
-            hypers_buf: rt.upload_f32(&hypers.to_vec(), &[8])?,
-            thresholds_buf: rt.upload_f32(thresholds, &[thresholds.len()])?,
+            hypers,
+            thresholds: thresholds.to_vec(),
         })
     }
 
     /// Change hyperparameters mid-run (LR schedules / sweeps reuse the
-    /// compiled executable — re-upload is 32 bytes).
+    /// bound program).
     pub fn set_hypers(&mut self, rt: &Runtime, hypers: Hypers) -> Result<()> {
-        self.hypers_buf = rt.upload_f32(&hypers.to_vec(), &[8])?;
+        let _ = rt;
+        self.hypers = hypers;
         Ok(())
     }
 
+    /// Replace the per-entry mask thresholds.
     pub fn set_thresholds(&mut self, rt: &Runtime, thresholds: &[f32]) -> Result<()> {
-        if thresholds.len() != self.n_entries {
-            bail!("thresholds len {} != n_entries {}", thresholds.len(), self.n_entries);
+        if thresholds.len() != self.model.n_entries {
+            bail!("thresholds len {} != n_entries {}", thresholds.len(), self.model.n_entries);
         }
-        self.thresholds_buf = rt.upload_f32(thresholds, &[thresholds.len()])?;
+        let _ = rt;
+        self.thresholds = thresholds.to_vec();
         Ok(())
     }
 
-    /// One optimizer step: chains the state buffer on device.
+    /// One optimizer step: chains the packed state through the backend.
     pub fn run(
         &self,
         rt: &Runtime,
@@ -242,22 +256,16 @@ impl StepExec {
         if state.s != self.slots {
             bail!("state slots {} != optimizer '{}' slots {}", state.s, self.optimizer, self.slots);
         }
-        let tok_buf = rt.upload_i32(tokens, &[self.batch, self.seq_len])?;
-        let lab_buf = rt.upload_i32(labels, &[self.batch])?;
-        let seed_buf = rt.upload_u32(&[seed.0, seed.1], &[2])?;
-        let out = self
-            .exe
-            .execute_b(&[
-                &state.buffer,
-                &tok_buf,
-                &lab_buf,
-                &seed_buf,
-                &self.hypers_buf,
-                &self.thresholds_buf,
-            ])
-            .map_err(|e| anyhow::anyhow!("step({}): {e:?}", self.optimizer))?;
-        state.replace(single_output(out, "step")?);
-        Ok(())
+        rt.backend().step(
+            &self.model,
+            &self.optimizer,
+            &self.hypers,
+            &self.thresholds,
+            state,
+            tokens,
+            labels,
+            seed,
+        )
     }
 }
 
@@ -268,81 +276,76 @@ impl StepExec {
 /// `logits(params f32[P], tokens i32[B,T]) -> f32[B,V]`
 /// (last-position logits; candidate scoring happens host-side)
 pub struct LogitsExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    model: ModelInfo,
+    /// batch size `B`
     pub batch: usize,
+    /// sequence length `T`
     pub seq_len: usize,
+    /// vocabulary size `V`
     pub vocab: usize,
-    n_params: usize,
 }
 
 impl LogitsExec {
+    /// Bind the logits program of `model`.
     pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<LogitsExec> {
-        let prog = model.program("logits")?;
+        model.program("logits")?;
+        let _ = rt;
         Ok(LogitsExec {
-            exe: rt.load(prog)?,
+            model: model.clone(),
             batch: model.batch,
             seq_len: model.seq_len,
             vocab: model.vocab,
-            n_params: model.n_params,
         })
     }
 
-    /// Upload params once for a whole evaluation pass.
-    pub fn upload_params(&self, rt: &Runtime, params: &[f32]) -> Result<PjRtBuffer> {
-        if params.len() != self.n_params {
-            bail!("logits: params len {} != {}", params.len(), self.n_params);
+    /// Last-position logits for one batch, row-major `[B, V]`.
+    pub fn run(&self, rt: &Runtime, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        if params.len() != self.model.n_params {
+            bail!("logits: params len {} != {}", params.len(), self.model.n_params);
         }
-        rt.upload_f32(params, &[params.len()])
-    }
-
-    /// Last-position logits for one batch, row-major [B, V].
-    pub fn run(&self, rt: &Runtime, params_buf: &PjRtBuffer, tokens: &[i32]) -> Result<Vec<f32>> {
         if tokens.len() != self.batch * self.seq_len {
             bail!("logits: tokens len {} != {}x{}", tokens.len(), self.batch, self.seq_len);
         }
-        let tok_buf = rt.upload_i32(tokens, &[self.batch, self.seq_len])?;
-        let out = self
-            .exe
-            .execute_b(&[params_buf, &tok_buf])
-            .map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
-        let buf = single_output(out, "logits")?;
-        rt.download_f32(&buf, self.batch * self.vocab)
+        rt.backend().logits(&self.model, params, tokens)
     }
 }
 
 /// `logits_lora(params, adapters, tokens) -> f32[B,V]`
 pub struct LogitsLoraExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    model: ModelInfo,
+    /// batch size `B`
     pub batch: usize,
+    /// sequence length `T`
     pub seq_len: usize,
+    /// vocabulary size `V`
     pub vocab: usize,
 }
 
 impl LogitsLoraExec {
+    /// Bind the LoRA logits program of `model`.
     pub fn load(rt: &Runtime, model: &ModelInfo) -> Result<LogitsLoraExec> {
-        let prog = model.program("logits_lora")?;
+        model.program("logits_lora")?;
+        let _ = rt;
         Ok(LogitsLoraExec {
-            exe: rt.load(prog)?,
+            model: model.clone(),
             batch: model.batch,
             seq_len: model.seq_len,
             vocab: model.vocab,
         })
     }
 
+    /// Last-position logits under frozen base params + adapters.
     pub fn run(
         &self,
         rt: &Runtime,
-        params_buf: &PjRtBuffer,
-        adapters_buf: &PjRtBuffer,
+        params: &[f32],
+        adapters: &[f32],
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
-        let tok_buf = rt.upload_i32(tokens, &[self.batch, self.seq_len])?;
-        let out = self
-            .exe
-            .execute_b(&[params_buf, adapters_buf, &tok_buf])
-            .map_err(|e| anyhow::anyhow!("logits_lora: {e:?}"))?;
-        let buf = single_output(out, "logits_lora")?;
-        rt.download_f32(&buf, self.batch * self.vocab)
+        if tokens.len() != self.batch * self.seq_len {
+            bail!("logits_lora: tokens len {} != {}x{}", tokens.len(), self.batch, self.seq_len);
+        }
+        rt.backend().logits_lora(&self.model, params, adapters, tokens)
     }
 }
 
@@ -352,25 +355,31 @@ impl LogitsLoraExec {
 
 /// `pretrain(state, tokens i32[B,T], seed u32[2], hypers f32[8]) -> state'`
 pub struct PretrainExec {
-    exe: Rc<PjRtLoadedExecutable>,
+    model: ModelInfo,
+    /// optimizer slot count of the pretrain program
     pub slots: usize,
+    /// batch size `B`
     pub batch: usize,
+    /// sequence length `T`
     pub seq_len: usize,
-    hypers_buf: PjRtBuffer,
+    hypers: Hypers,
 }
 
 impl PretrainExec {
+    /// Bind the pretrain program with constant hypers.
     pub fn load(rt: &Runtime, model: &ModelInfo, hypers: Hypers) -> Result<PretrainExec> {
         let prog = model.program("pretrain")?;
+        let _ = rt;
         Ok(PretrainExec {
-            exe: rt.load(prog)?,
+            model: model.clone(),
             slots: prog.slots.unwrap_or(0),
             batch: model.batch,
             seq_len: model.seq_len,
-            hypers_buf: rt.upload_f32(&hypers.to_vec(), &[8])?,
+            hypers,
         })
     }
 
+    /// One LM pretraining step on a corpus batch.
     pub fn run(
         &self,
         rt: &Runtime,
@@ -381,14 +390,7 @@ impl PretrainExec {
         if tokens.len() != self.batch * self.seq_len {
             bail!("pretrain: tokens len {} != {}x{}", tokens.len(), self.batch, self.seq_len);
         }
-        let tok_buf = rt.upload_i32(tokens, &[self.batch, self.seq_len])?;
-        let seed_buf = rt.upload_u32(&[seed.0, seed.1], &[2])?;
-        let out = self
-            .exe
-            .execute_b(&[&state.buffer, &tok_buf, &seed_buf, &self.hypers_buf])
-            .map_err(|e| anyhow::anyhow!("pretrain: {e:?}"))?;
-        state.replace(single_output(out, "pretrain")?);
-        Ok(())
+        rt.backend().pretrain_step(&self.model, &self.hypers, state, tokens, seed)
     }
 }
 
@@ -398,7 +400,16 @@ mod tests {
 
     #[test]
     fn hypers_vector_order_matches_manifest() {
-        let h = Hypers { lr: 1.0, eps: 2.0, sparsity: 3.0, mask_seed: 4.0, beta1: 5.0, beta2: 6.0, adam_eps: 7.0, wd: 8.0 };
+        let h = Hypers {
+            lr: 1.0,
+            eps: 2.0,
+            sparsity: 3.0,
+            mask_seed: 4.0,
+            beta1: 5.0,
+            beta2: 6.0,
+            adam_eps: 7.0,
+            wd: 8.0,
+        };
         assert_eq!(h.to_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
     }
 

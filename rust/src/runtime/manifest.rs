@@ -10,11 +10,15 @@ use crate::util::json::{self, Json};
 /// One flat-parameter layout entry (mirror of python layout.Entry).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayoutEntry {
+    /// parameter tensor name
     pub name: String,
+    /// tensor shape
     pub shape: Vec<usize>,
     /// "matrix" (maskable) or "vector" (always dense)
     pub kind: String,
+    /// flat offset into the packed parameter vector
     pub offset: usize,
+    /// element count
     pub size: usize,
     /// PRNG stream id == entry index
     pub layer_id: usize,
@@ -23,6 +27,7 @@ pub struct LayoutEntry {
 /// One exported HLO program.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ProgramInfo {
+    /// artifact file name (doubles as the backend program id)
     pub file: String,
     /// optimizer slot count (step programs only)
     pub slots: Option<usize>,
@@ -35,29 +40,50 @@ pub struct ProgramInfo {
 /// One exported model.
 #[derive(Debug, Clone)]
 pub struct ModelInfo {
+    /// model name (manifest key)
     pub name: String,
+    /// architecture family (llama / mistral / opt)
     pub family: String,
+    /// size tag (tiny / med / small / ...)
     pub size: String,
+    /// layer count (drives the analytic memory model)
     pub n_layers: usize,
+    /// model width
     pub d_model: usize,
+    /// attention heads
     pub n_heads: usize,
+    /// feed-forward width
     pub d_ff: usize,
+    /// vocabulary size `V`
     pub vocab: usize,
+    /// sequence length `T`
     pub seq_len: usize,
+    /// batch size `B`
     pub batch: usize,
+    /// sliding-window size (0 = full attention)
     pub window: usize,
+    /// total trainable parameters `P`
     pub n_params: usize,
+    /// LoRA adapter parameters `A`
     pub n_lora_params: usize,
+    /// LoRA rank `r`
     pub lora_rank: usize,
+    /// layout entry count `L`
     pub n_entries: usize,
+    /// hyper vector length
     pub n_hypers: usize,
+    /// metric tail length `K`
     pub n_metrics: usize,
+    /// flat-parameter layout
     pub layout: Vec<LayoutEntry>,
+    /// adapter layout
     pub lora_layout: Vec<LayoutEntry>,
+    /// exported programs by name
     pub programs: BTreeMap<String, ProgramInfo>,
 }
 
 impl ModelInfo {
+    /// Look up a program by name with an actionable error.
     pub fn program(&self, name: &str) -> Result<&ProgramInfo> {
         self.programs
             .get(name)
@@ -66,6 +92,7 @@ impl ModelInfo {
                 self.programs.keys().cloned().collect::<Vec<_>>().join(", ")))
     }
 
+    /// The step program of `optimizer`.
     pub fn step_program(&self, optimizer: &str) -> Result<&ProgramInfo> {
         self.program(&format!("step_{optimizer}"))
     }
@@ -91,13 +118,18 @@ impl ModelInfo {
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// directory artifact files resolve against
     pub dir: PathBuf,
+    /// hyper vector slot names
     pub hyper_names: Vec<String>,
+    /// metric tail slot names
     pub metric_names: Vec<String>,
+    /// models by name
     pub models: BTreeMap<String, ModelInfo>,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json` (with ABI validation).
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -119,6 +151,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), hyper_names, metric_names, models })
     }
 
+    /// Look up a model with an actionable error.
     pub fn model(&self, name: &str) -> Result<&ModelInfo> {
         self.models.get(name).ok_or_else(|| {
             anyhow!("model '{name}' not in manifest (have: {})",
@@ -126,6 +159,7 @@ impl Manifest {
         })
     }
 
+    /// Path of a program's artifact file.
     pub fn artifact_path(&self, prog: &ProgramInfo) -> PathBuf {
         self.dir.join(&prog.file)
     }

@@ -1,22 +1,125 @@
-//! Runtime: load + execute the AOT-compiled XLA programs via PJRT.
+//! Runtime: the coordinator's gateway to compute, behind a pluggable
+//! [`Backend`](backend::Backend).
 //!
-//! The Python side (`python/compile/aot.py`) lowered every (model,
-//! optimizer) program to HLO text under `artifacts/` together with a
-//! `manifest.json` describing the packed-state ABI (DESIGN.md §3.1). This
-//! module is everything Rust needs to run them:
-//!
-//! * [`manifest`] — parse the manifest into typed structs.
-//! * [`client`] — PJRT CPU client wrapper + compiled-executable cache.
-//! * [`state`] — the device-resident packed training state
-//!   `[params | opt slots | metrics]` with partial host readback.
-//! * [`exec`] — typed wrappers (`StepExec`, `LogitsExec`, ...) that enforce
-//!   the ABI at the call site.
+//! * [`backend`] — the trait capturing the forward-loss / perturb-replay
+//!   surface the coordinator needs (init, thresholds, step, logits,
+//!   packed-state plumbing).
+//! * [`native`] — the default pure-Rust backend: a bag-of-embeddings MLP
+//!   with the full optimizer family, synthesized manifest, no artifacts
+//!   required. Everything runs offline.
+//! * [`pjrt`] (feature `pjrt`) — executes the AOT-lowered XLA programs
+//!   under `artifacts/` through the PJRT C API (the three-layer design:
+//!   Python lowers JAX+Pallas to HLO once; Rust executes it forever).
+//! * [`manifest`] — the L2→L3 ABI contract (also synthesized by the
+//!   native backend).
+//! * [`state`] — the backend-resident packed `[params | slots | metrics]`
+//!   training state.
+//! * [`exec`] — typed program wrappers that enforce shapes at call sites.
 
-pub mod client;
+pub mod backend;
 pub mod exec;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod state;
 
-pub use client::Runtime;
+use std::path::Path;
+
+use anyhow::Result;
+
 pub use manifest::{LayoutEntry, Manifest, ModelInfo, ProgramInfo};
 pub use state::TrainState;
+
+use backend::Backend;
+
+/// Owns the active compute backend and routes the coordinator to it.
+pub struct Runtime {
+    backend: Box<dyn Backend>,
+}
+
+impl Runtime {
+    /// Select a backend. With the `pjrt` feature enabled and a manifest
+    /// present under `artifacts_dir`, the PJRT backend is attempted first.
+    /// A present-but-invalid manifest is a hard error (silently training a
+    /// different model than the artifacts describe would be worse than
+    /// failing); only a PJRT *client* start failure — e.g. when built
+    /// against the vendored API stub — falls back to native with a log
+    /// line. Otherwise the native pure-Rust backend serves everything
+    /// offline.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        {
+            if artifacts_dir.join("manifest.json").exists() {
+                // corrupt/stale manifests must propagate, not fall back
+                let manifest = Manifest::load(artifacts_dir)?;
+                match pjrt::PjrtBackend::with_manifest(manifest) {
+                    Ok(b) => return Ok(Runtime { backend: Box::new(b) }),
+                    Err(e) => {
+                        crate::info!("PJRT client unavailable ({e:#}); using native backend")
+                    }
+                }
+            }
+        }
+        let _ = artifacts_dir;
+        Ok(Runtime::native())
+    }
+
+    /// The native pure-Rust backend, unconditionally.
+    pub fn native() -> Runtime {
+        Runtime { backend: Box::new(native::NativeBackend::new()) }
+    }
+
+    /// The active backend.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// The model/program manifest the backend serves.
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
+    }
+
+    /// Look up one model's ABI description.
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.backend.manifest().model(name)
+    }
+
+    /// Number of compiled executables held by the backend (0 for native).
+    pub fn cached_executables(&self) -> usize {
+        self.backend.cached_executables()
+    }
+
+    /// Cumulative backend compile seconds (0 for native).
+    pub fn total_compile_seconds(&self) -> f64 {
+        self.backend.total_compile_seconds()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_serves_models_offline() {
+        let rt = Runtime::new(Path::new("/nonexistent/artifacts")).unwrap();
+        assert_eq!(rt.backend().platform(), "native");
+        let m = rt.model("llama_tiny").unwrap();
+        assert!(m.n_params > 0);
+        assert!(rt.model("no_such_model").is_err());
+        assert_eq!(rt.cached_executables(), 0);
+    }
+
+    #[test]
+    fn state_round_trips_through_backend() {
+        let rt = Runtime::native();
+        let params = vec![1.0f32, -2.0, 3.5];
+        let state = TrainState::from_params(&rt, &params, 2, 1).unwrap();
+        assert_eq!(state.state_len(), 6);
+        assert_eq!(state.params_host(&rt).unwrap(), params);
+        assert_eq!(state.slots_host(&rt).unwrap(), vec![0.0, 0.0]);
+        assert_eq!(state.metrics(&rt).unwrap(), vec![0.0]);
+        assert!(state.segment_host(&rt, 2, 2).is_err());
+        assert_eq!(state.device_bytes(), 24);
+    }
+}

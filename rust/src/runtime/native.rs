@@ -1,0 +1,1321 @@
+//! The default pure-Rust compute backend.
+//!
+//! Implements the full [`Backend`](super::backend::Backend) surface with a
+//! host-memory model so the whole CLI — `train`, `sweep`, `probe`,
+//! `repro`, `memory-table` — runs offline with no AOT artifacts and no
+//! PJRT. The model is a **bag-of-embeddings MLP classifier** over the
+//! shared 512-token vocabulary:
+//!
+//! ```text
+//!   x   = RMS-norm( recency-weighted mean of embed.tok[token] )   [D]
+//!   h   = tanh( g1 ⊙ (x · W1) )                                   [H]
+//!   y_c = g2_c ⊙ (h · W2)                                         [V]
+//! ```
+//!
+//! It deliberately mirrors the ABI of the exported transformer programs:
+//! the same flat-parameter layout discipline (matrix entries maskable,
+//! vector entries always dense, PRNG stream id == layout-entry index),
+//! the same packed `[params | slots | metrics]` step state, the same
+//! 8-slot hyper vector and metric tail, and the *same counter PRNG* — so
+//! every optimizer's seed-replay walk (paper Alg. 1–3) exercises exactly
+//! the code paths the coordinator uses against PJRT, and the property /
+//! integration suites validate real optimizer semantics (mask support,
+//! sparsity-0 degeneracy, seed-replay restoration, divergence at large
+//! LR) end to end.
+//!
+//! Masking follows the paper: S-MeZO keeps coordinates with
+//! `|theta| <= h_entry` (dynamic — recomputed from the current parameters
+//! every step, nothing stored), `smezo_large` inverts the mask (Fig. 2c),
+//! `smezo_const` stores a sign-encoded mask in its slot block (the §3.3
+//! vanilla ablation that pays the extra memory), and R-MeZO draws a
+//! Bernoulli mask from the `mask_seed` hyper.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::util::prng;
+use crate::zo::optim::percentile_threshold;
+
+use super::backend::Backend;
+use super::exec::Hypers;
+use super::manifest::{LayoutEntry, Manifest, ModelInfo, ProgramInfo};
+use super::state::{StateBuf, TrainState};
+
+/// Metric-tail layout (mirrors `Manifest::metric_names` order).
+const M_L_PLUS: usize = 0;
+const M_L_MINUS: usize = 1;
+const M_PROJ_GRAD: usize = 2;
+const M_MASKED_FRAC: usize = 3;
+const M_UPDATE_NORM_SQ: usize = 4;
+const M_TRAIN_LOSS: usize = 5;
+const M_ACCEPT: usize = 6;
+/// Metric slot count `K`.
+const N_METRICS: usize = 8;
+
+/// RMS-norm epsilon for the pooled feature vector.
+const RMS_EPS: f32 = 1e-6;
+
+/// The native backend: a synthesized manifest plus the host-memory model.
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl NativeBackend {
+    /// Build the backend with its synthesized model registry.
+    pub fn new() -> NativeBackend {
+        NativeBackend { manifest: native_manifest() }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// manifest synthesis
+// ---------------------------------------------------------------------------
+
+/// Step-program optimizers the native backend implements, with their
+/// optimizer-slot counts as a function of (P = params, A = adapters).
+fn native_optimizers(p: usize, a: usize) -> Vec<(&'static str, usize)> {
+    vec![
+        ("mezo", 0),
+        ("smezo", 0),
+        ("smezo_large", 0),
+        ("smezo_const", p), // stored mask: the §3.3 vanilla ablation
+        ("rmezo", 0),
+        ("zo_sign", 0),
+        ("zo_cons", 0),
+        ("zo_mom", p),
+        ("zo_adam", 2 * p + 1),
+        ("zo_adamu", 2 * p + 1),
+        ("mezo_lora", a),
+        ("lora_fo", 3 * a + 1),
+        ("fo_sgd", 0),
+        ("fo_adam", 2 * p + 1),
+    ]
+}
+
+/// Assemble one synthesized model entry.
+#[allow(clippy::too_many_arguments)]
+fn native_model(
+    name: &str,
+    family: &str,
+    size: &str,
+    d: usize,
+    h: usize,
+    n_layers: usize,
+    d_ff: usize,
+    window: usize,
+) -> ModelInfo {
+    let v = crate::data::vocab::SIZE;
+    let r = 4usize; // LoRA rank
+    let seq_len = 32;
+    let batch = 16;
+
+    let sizes = [v * d, d * h, h, h * v, v];
+    let names = ["embed.tok", "mlp.w1", "mlp.g1", "mlp.w2", "mlp.g2"];
+    let shapes: [Vec<usize>; 5] =
+        [vec![v, d], vec![d, h], vec![h], vec![h, v], vec![v]];
+    let kinds = ["matrix", "matrix", "vector", "matrix", "vector"];
+    let mut layout = Vec::with_capacity(5);
+    let mut off = 0usize;
+    for i in 0..5 {
+        layout.push(LayoutEntry {
+            name: names[i].to_string(),
+            shape: shapes[i].clone(),
+            kind: kinds[i].to_string(),
+            offset: off,
+            size: sizes[i],
+            layer_id: i,
+        });
+        off += sizes[i];
+    }
+    let n_params = off;
+
+    let a_sizes = [d * r, r * h];
+    let a_names = ["lora.a", "lora.b"];
+    let a_shapes: [Vec<usize>; 2] = [vec![d, r], vec![r, h]];
+    let mut lora_layout = Vec::with_capacity(2);
+    let mut a_off = 0usize;
+    for i in 0..2 {
+        lora_layout.push(LayoutEntry {
+            name: a_names[i].to_string(),
+            shape: a_shapes[i].clone(),
+            kind: "matrix".to_string(),
+            offset: a_off,
+            size: a_sizes[i],
+            layer_id: i,
+        });
+        a_off += a_sizes[i];
+    }
+    let n_lora_params = a_off;
+
+    let mut programs = BTreeMap::new();
+    let prog = |file: String, slots, state_len, out_len| ProgramInfo { file, slots, state_len, out_len };
+    programs.insert(
+        "init".to_string(),
+        prog(format!("{name}__init.native"), None, None, Some(n_params)),
+    );
+    programs.insert(
+        "init_lora".to_string(),
+        prog(format!("{name}__init_lora.native"), None, None, Some(n_lora_params)),
+    );
+    programs.insert(
+        "thresh".to_string(),
+        prog(format!("{name}__thresh.native"), None, None, Some(layout.len())),
+    );
+    programs.insert("logits".to_string(), prog(format!("{name}__logits.native"), None, None, None));
+    programs.insert(
+        "logits_lora".to_string(),
+        prog(format!("{name}__logits_lora.native"), None, None, None),
+    );
+    programs.insert(
+        "pretrain".to_string(),
+        prog(
+            format!("{name}__pretrain.native"),
+            Some(2 * n_params + 1),
+            Some(n_params + 2 * n_params + 1 + N_METRICS),
+            None,
+        ),
+    );
+    for (opt, slots) in native_optimizers(n_params, n_lora_params) {
+        programs.insert(
+            format!("step_{opt}"),
+            prog(
+                format!("{name}__step_{opt}.native"),
+                Some(slots),
+                Some(n_params + slots + N_METRICS),
+                None,
+            ),
+        );
+    }
+
+    ModelInfo {
+        name: name.to_string(),
+        family: family.to_string(),
+        size: size.to_string(),
+        n_layers,
+        d_model: d,
+        n_heads: 4,
+        d_ff,
+        vocab: v,
+        seq_len,
+        batch,
+        window,
+        n_params,
+        n_lora_params,
+        lora_rank: r,
+        n_entries: layout.len(),
+        n_hypers: 8,
+        n_metrics: N_METRICS,
+        layout,
+        lora_layout,
+        programs,
+    }
+}
+
+/// The synthesized manifest served by the native backend (no artifacts
+/// directory required; `dir` is a placeholder that is never read).
+pub fn native_manifest() -> Manifest {
+    let mut models = BTreeMap::new();
+    for m in [
+        native_model("llama_tiny", "llama", "tiny", 64, 96, 2, 256, 0),
+        native_model("llama_med", "llama", "med", 128, 192, 4, 512, 0),
+        native_model("mistral_small", "mistral", "small", 80, 112, 2, 320, 8),
+        native_model("opt_small", "opt", "small", 48, 64, 2, 192, 0),
+    ] {
+        models.insert(m.name.clone(), m);
+    }
+    Manifest {
+        dir: PathBuf::from("native"),
+        hyper_names: ["lr", "eps", "sparsity", "mask_seed", "beta1", "beta2", "adam_eps", "wd"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        metric_names: [
+            "l_plus",
+            "l_minus",
+            "proj_grad",
+            "masked_frac",
+            "update_norm_sq",
+            "train_loss",
+            "accept",
+            "reserved",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        models,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flat-parameter geometry
+// ---------------------------------------------------------------------------
+
+/// Resolved offsets of the native model's flat-parameter layout.
+struct Geo {
+    v: usize,
+    d: usize,
+    h: usize,
+    r: usize,
+    t: usize,
+    b: usize,
+    e_tok: usize,
+    w1: usize,
+    g1: usize,
+    w2: usize,
+    g2: usize,
+    n_params: usize,
+    n_lora: usize,
+}
+
+fn geometry(model: &ModelInfo) -> Result<Geo> {
+    if model.layout.len() != 5 {
+        bail!("model '{}' is not a native-backend model (layout has {} entries)", model.name, model.layout.len());
+    }
+    let e = &model.layout;
+    let (v, d) = (e[0].shape[0], e[0].shape[1]);
+    let h = e[1].shape[1];
+    let geo = Geo {
+        v,
+        d,
+        h,
+        r: model.lora_rank,
+        t: model.seq_len,
+        b: model.batch,
+        e_tok: e[0].offset,
+        w1: e[1].offset,
+        g1: e[2].offset,
+        w2: e[3].offset,
+        g2: e[4].offset,
+        n_params: model.n_params,
+        n_lora: model.n_lora_params,
+    };
+    if geo.g2 + v != geo.n_params {
+        bail!("layout/n_params mismatch for '{}'", model.name);
+    }
+    Ok(geo)
+}
+
+// ---------------------------------------------------------------------------
+// forward pass
+// ---------------------------------------------------------------------------
+
+/// Per-row forward intermediates (kept for the backward pass).
+struct Fwd {
+    /// normalized features [D]
+    x: Vec<f32>,
+    /// pre-norm feature RMS denominator (sigma)
+    sigma: f32,
+    /// raw pooled features / sigma relationship: x = raw / sigma
+    s1: Vec<f32>,
+    /// post-tanh hidden [H]
+    hid: Vec<f32>,
+    /// pre-gain output accumulators [V]
+    s2: Vec<f32>,
+    /// final logits [V]
+    logits: Vec<f32>,
+}
+
+/// One forward pass. `lora = Some(adapters)` adds the rank-r update
+/// `(1/r) A·B` to `W1` (the logits_lora program).
+fn forward_row(geo: &Geo, params: &[f32], lora: Option<&[f32]>, row: &[i32]) -> Fwd {
+    let (d, h, v) = (geo.d, geo.h, geo.v);
+    // raw pooled features (pre-norm), then normalize
+    let mut raw = vec![0.0f32; d];
+    let mut wsum = 0.0f32;
+    for (p, &tok) in row.iter().enumerate() {
+        if tok == crate::data::vocab::PAD {
+            continue;
+        }
+        let w = 1.0 + (p + 1) as f32 / row.len() as f32;
+        wsum += w;
+        let e = &params[geo.e_tok + tok as usize * d..geo.e_tok + (tok as usize + 1) * d];
+        for i in 0..d {
+            raw[i] += w * e[i];
+        }
+    }
+    if wsum > 0.0 {
+        for ri in raw.iter_mut() {
+            *ri /= wsum;
+        }
+    }
+    let ms = raw.iter().map(|v| v * v).sum::<f32>() / d as f32;
+    let sigma = (ms + RMS_EPS).sqrt();
+    let x: Vec<f32> = raw.iter().map(|&ri| ri / sigma).collect();
+
+    let w1 = &params[geo.w1..geo.w1 + d * h];
+    let g1 = &params[geo.g1..geo.g1 + h];
+    let w2 = &params[geo.w2..geo.w2 + h * v];
+    let g2 = &params[geo.g2..geo.g2 + v];
+
+    // s1 = x · W1 (+ LoRA), hid = tanh(g1 ⊙ s1)
+    let mut s1 = vec![0.0f32; h];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let wrow = &w1[i * h..(i + 1) * h];
+        for j in 0..h {
+            s1[j] += xi * wrow[j];
+        }
+    }
+    if let Some(ad) = lora {
+        let r = geo.r;
+        let a = &ad[..d * r];
+        let b = &ad[d * r..d * r + r * h];
+        let inv_r = 1.0 / r as f32;
+        let mut xa = vec![0.0f32; r];
+        for (i, &xi) in x.iter().enumerate() {
+            for k in 0..r {
+                xa[k] += xi * a[i * r + k];
+            }
+        }
+        for k in 0..r {
+            let scale = xa[k] * inv_r;
+            let brow = &b[k * h..(k + 1) * h];
+            for j in 0..h {
+                s1[j] += scale * brow[j];
+            }
+        }
+    }
+    let hid: Vec<f32> = (0..h).map(|j| (g1[j] * s1[j]).tanh()).collect();
+
+    // s2 = hid · W2, logits = g2 ⊙ s2
+    let mut s2 = vec![0.0f32; v];
+    for (j, &hj) in hid.iter().enumerate() {
+        if hj == 0.0 {
+            continue;
+        }
+        let wrow = &w2[j * v..(j + 1) * v];
+        for c in 0..v {
+            s2[c] += hj * wrow[c];
+        }
+    }
+    let logits: Vec<f32> = (0..v).map(|c| g2[c] * s2[c]).collect();
+    Fwd { x, sigma, s1, hid, s2, logits }
+}
+
+/// Row-major `[B, V]` last-position logits for a token batch.
+fn logits_batch(geo: &Geo, params: &[f32], lora: Option<&[f32]>, tokens: &[i32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(geo.b * geo.v);
+    for row in tokens.chunks(geo.t) {
+        out.extend(forward_row(geo, params, lora, row).logits);
+    }
+    out
+}
+
+/// Softmax cross-entropy of `label` under one logits row (f64 internals).
+fn row_ce(logits: &[f32], label: i32) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits.iter().map(|&l| ((l as f64) - max).exp()).sum::<f64>().ln() + max;
+    lse - logits[label as usize] as f64
+}
+
+/// Mean batch cross-entropy (the training loss of every step program).
+fn batch_ce(geo: &Geo, params: &[f32], lora: Option<&[f32]>, tokens: &[i32], labels: &[i32]) -> f32 {
+    let mut total = 0.0f64;
+    for (row, &label) in tokens.chunks(geo.t).zip(labels) {
+        let fwd = forward_row(geo, params, lora, row);
+        total += row_ce(&fwd.logits, label);
+    }
+    (total / labels.len().max(1) as f64) as f32
+}
+
+// ---------------------------------------------------------------------------
+// exact gradient (first-order baselines + pretraining)
+// ---------------------------------------------------------------------------
+
+/// Analytic gradient of the mean batch cross-entropy w.r.t. the flat
+/// parameters; also returns the loss. Ground truth for the FO baselines
+/// (`fo_sgd`, `fo_adam`) and the Fig-4 exact-gradient probe arm.
+fn grad_batch(geo: &Geo, params: &[f32], tokens: &[i32], labels: &[i32]) -> (Vec<f32>, f32) {
+    let (d, h, v) = (geo.d, geo.h, geo.v);
+    let n = labels.len().max(1);
+    let scale = 1.0 / n as f32;
+    let mut g = vec![0.0f32; geo.n_params];
+    let mut total = 0.0f64;
+
+    let w1 = &params[geo.w1..geo.w1 + d * h];
+    let g1 = &params[geo.g1..geo.g1 + h];
+    let w2 = &params[geo.w2..geo.w2 + h * v];
+    let g2 = &params[geo.g2..geo.g2 + v];
+
+    for (row, &label) in tokens.chunks(geo.t).zip(labels) {
+        let fwd = forward_row(geo, params, None, row);
+        total += row_ce(&fwd.logits, label);
+
+        // dL/dlogit_c = softmax_c - 1[c == label]
+        let max = fwd.logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = fwd.logits.iter().map(|l| (l - max).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let mut dlogit = vec![0.0f32; v];
+        for c in 0..v {
+            dlogit[c] = exps[c] / z - if c as i32 == label { 1.0 } else { 0.0 };
+        }
+
+        // output gain + W2
+        let mut dhid = vec![0.0f32; h];
+        for c in 0..v {
+            let dl = dlogit[c];
+            if dl == 0.0 {
+                continue;
+            }
+            g[geo.g2 + c] += scale * fwd.s2[c] * dl;
+            let dg = dl * g2[c];
+            for j in 0..h {
+                g[geo.w2 + j * v + c] += scale * fwd.hid[j] * dg;
+                dhid[j] += dg * w2[j * v + c];
+            }
+        }
+
+        // tanh + hidden gain + W1
+        let mut dx_hat = vec![0.0f32; d];
+        for j in 0..h {
+            let dpre = dhid[j] * (1.0 - fwd.hid[j] * fwd.hid[j]);
+            g[geo.g1 + j] += scale * fwd.s1[j] * dpre;
+            let dw = dpre * g1[j];
+            for i in 0..d {
+                g[geo.w1 + i * h + j] += scale * fwd.x[i] * dw;
+                dx_hat[i] += dw * w1[i * h + j];
+            }
+        }
+
+        // back through RMS norm: x_hat = raw / sigma
+        let dot: f32 = dx_hat.iter().zip(&fwd.x).map(|(a, b)| a * b).sum();
+        let inv_sigma = 1.0 / fwd.sigma;
+        let mut draw = vec![0.0f32; d];
+        for i in 0..d {
+            draw[i] = inv_sigma * (dx_hat[i] - fwd.x[i] * dot / d as f32);
+        }
+
+        // distribute to token embeddings (recency-weighted mean pooling)
+        let mut wsum = 0.0f32;
+        for (p, &tok) in row.iter().enumerate() {
+            if tok != crate::data::vocab::PAD {
+                wsum += 1.0 + (p + 1) as f32 / row.len() as f32;
+            }
+        }
+        if wsum > 0.0 {
+            for (p, &tok) in row.iter().enumerate() {
+                if tok == crate::data::vocab::PAD {
+                    continue;
+                }
+                let w = (1.0 + (p + 1) as f32 / row.len() as f32) / wsum;
+                let base = geo.e_tok + tok as usize * d;
+                for i in 0..d {
+                    g[base + i] += scale * w * draw[i];
+                }
+            }
+        }
+    }
+    (g, (total / n as f64) as f32)
+}
+
+/// Gradient of the batch loss w.r.t. the LoRA adapters only (base frozen).
+fn grad_lora(
+    geo: &Geo,
+    params: &[f32],
+    adapters: &[f32],
+    tokens: &[i32],
+    labels: &[i32],
+) -> (Vec<f32>, f32) {
+    let (d, h, v, r) = (geo.d, geo.h, geo.v, geo.r);
+    let n = labels.len().max(1);
+    let scale = 1.0 / n as f32;
+    let inv_r = 1.0 / r as f32;
+    let mut ga = vec![0.0f32; geo.n_lora];
+    let mut total = 0.0f64;
+    let g1 = &params[geo.g1..geo.g1 + h];
+    let g2 = &params[geo.g2..geo.g2 + v];
+    let w2 = &params[geo.w2..geo.w2 + h * v];
+    let a = &adapters[..d * r];
+    let b = &adapters[d * r..d * r + r * h];
+
+    for (row, &label) in tokens.chunks(geo.t).zip(labels) {
+        let fwd = forward_row(geo, params, Some(adapters), row);
+        total += row_ce(&fwd.logits, label);
+        let max = fwd.logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = fwd.logits.iter().map(|l| (l - max).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let mut dhid = vec![0.0f32; h];
+        for c in 0..v {
+            let dl = exps[c] / z - if c as i32 == label { 1.0 } else { 0.0 };
+            if dl == 0.0 {
+                continue;
+            }
+            let dg = dl * g2[c];
+            for j in 0..h {
+                dhid[j] += dg * w2[j * v + c];
+            }
+        }
+        // ds1_j, then dW1' = x ⊗ ds1; dA = dW1'·Bᵀ/r, dB = Aᵀ·dW1'/r
+        let mut ds1 = vec![0.0f32; h];
+        for j in 0..h {
+            ds1[j] = dhid[j] * (1.0 - fwd.hid[j] * fwd.hid[j]) * g1[j];
+        }
+        // xa_k = x·A[:,k]; bs_k = ds1·B[k,:]
+        let mut xa = vec![0.0f32; r];
+        for (i, &xi) in fwd.x.iter().enumerate() {
+            for k in 0..r {
+                xa[k] += xi * a[i * r + k];
+            }
+        }
+        let mut bs = vec![0.0f32; r];
+        for k in 0..r {
+            for j in 0..h {
+                bs[k] += ds1[j] * b[k * h + j];
+            }
+        }
+        for i in 0..d {
+            for k in 0..r {
+                ga[i * r + k] += scale * inv_r * fwd.x[i] * bs[k];
+            }
+        }
+        for k in 0..r {
+            for j in 0..h {
+                ga[d * r + k * h + j] += scale * inv_r * xa[k] * ds1[j];
+            }
+        }
+    }
+    (ga, (total / n as f64) as f32)
+}
+
+// ---------------------------------------------------------------------------
+// ZO machinery
+// ---------------------------------------------------------------------------
+
+/// One seed-replay perturbation stream: a contiguous span of the packed
+/// state driven by `normal(key, local_index)`.
+struct Stream {
+    offset: usize,
+    len: usize,
+    key: u32,
+}
+
+/// Streams for the base parameter layout (one per entry, the manifest's
+/// `PRNG stream id == entry index` convention).
+fn base_streams(model: &ModelInfo, seed: (u32, u32)) -> Vec<Stream> {
+    model
+        .layout
+        .iter()
+        .map(|e| Stream {
+            offset: e.offset,
+            len: e.size,
+            key: prng::layer_key(seed.0, seed.1, e.layer_id as u32),
+        })
+        .collect()
+}
+
+/// Streams for the LoRA adapter block (offset past the base params; the
+/// stream ids are shifted past the base entries so they never collide).
+fn lora_streams(model: &ModelInfo, p: usize, seed: (u32, u32)) -> Vec<Stream> {
+    model
+        .lora_layout
+        .iter()
+        .map(|e| Stream {
+            offset: p + e.offset,
+            len: e.size,
+            key: prng::layer_key(seed.0, seed.1, (model.layout.len() + e.layer_id) as u32),
+        })
+        .collect()
+}
+
+/// `state[i] += scale * m_i * z_i` over all streams (Alg. 2 seed replay).
+fn perturb(state: &mut [f32], streams: &[Stream], mask: Option<&[u8]>, scale: f32) {
+    for st in streams {
+        for j in 0..st.len {
+            let idx = st.offset + j;
+            if let Some(m) = mask {
+                if m[idx] == 0 {
+                    continue;
+                }
+            }
+            state[idx] += scale * prng::normal(st.key, j as u32);
+        }
+    }
+}
+
+/// Which update rule the final fused walk applies.
+enum Rule {
+    /// `theta -= lr * g * m ⊙ z` (MeZO / S-MeZO / R-MeZO)
+    Sgd,
+    /// `theta -= lr * sign(g * m ⊙ z)`
+    Sign,
+    /// SGD step accepted only if the candidate loss does not regress
+    Conservative,
+    /// heavy-ball momentum on `g * m ⊙ z`; slot block holds the buffer
+    Momentum,
+    /// Adam moments on `g * m ⊙ z`; `clamp` additionally bounds each
+    /// coordinate update to ±lr (the AdaMU-flavored variant)
+    Adam { clamp: bool },
+}
+
+/// Outcome of one ZO walk, destined for the metric tail.
+struct WalkInfo {
+    l_plus: f32,
+    l_minus: f32,
+    g: f32,
+    update_norm_sq: f32,
+    accept: f32,
+}
+
+/// The fused Alg.-1 walk over the packed state:
+/// `+eps` perturb -> loss -> `-2eps` -> loss -> fused restore+update.
+/// `loss` receives the full packed state slice and reads what it needs,
+/// so the same driver serves base-parameter and LoRA-adapter training.
+#[allow(clippy::too_many_arguments)]
+fn zo_walk<F: Fn(&[f32]) -> f32>(
+    state: &mut Vec<f32>,
+    streams: &[Stream],
+    mask: Option<&[u8]>,
+    rule: Rule,
+    hypers: &Hypers,
+    slot_off: usize,
+    slot_base: usize,
+    loss: F,
+) -> WalkInfo {
+    let eps = hypers.eps;
+    let lr = hypers.lr;
+
+    perturb(state, streams, mask, eps);
+    let l_plus = loss(state.as_slice());
+    perturb(state, streams, mask, -2.0 * eps);
+    let l_minus = loss(state.as_slice());
+    let g = (l_plus - l_minus) / (2.0 * eps);
+
+    let mut norm = 0.0f32;
+    let mut accept = 1.0f32;
+    match rule {
+        Rule::Sgd => {
+            for st in streams {
+                for j in 0..st.len {
+                    let idx = st.offset + j;
+                    if let Some(m) = mask {
+                        if m[idx] == 0 {
+                            continue;
+                        }
+                    }
+                    let z = prng::normal(st.key, j as u32);
+                    let u = lr * g * z;
+                    state[idx] += eps * z - u;
+                    norm += u * u;
+                }
+            }
+        }
+        Rule::Sign => {
+            for st in streams {
+                for j in 0..st.len {
+                    let idx = st.offset + j;
+                    if let Some(m) = mask {
+                        if m[idx] == 0 {
+                            continue;
+                        }
+                    }
+                    let z = prng::normal(st.key, j as u32);
+                    let gz = g * z;
+                    state[idx] += eps * z;
+                    if gz != 0.0 {
+                        let u = lr * gz.signum();
+                        state[idx] -= u;
+                        norm += u * u;
+                    }
+                }
+            }
+        }
+        Rule::Conservative => {
+            // restore exactly, snapshot, try the SGD step, maybe reject
+            perturb(state, streams, mask, eps);
+            let before = state.clone();
+            for st in streams {
+                for j in 0..st.len {
+                    let idx = st.offset + j;
+                    if let Some(m) = mask {
+                        if m[idx] == 0 {
+                            continue;
+                        }
+                    }
+                    let z = prng::normal(st.key, j as u32);
+                    let u = lr * g * z;
+                    state[idx] -= u;
+                    norm += u * u;
+                }
+            }
+            let l_cand = loss(state.as_slice());
+            if l_cand > 0.5 * (l_plus + l_minus) {
+                state.copy_from_slice(&before);
+                norm = 0.0;
+                accept = 0.0;
+            }
+        }
+        Rule::Momentum => {
+            let beta = hypers.beta1;
+            for st in streams {
+                for j in 0..st.len {
+                    let idx = st.offset + j;
+                    if let Some(m) = mask {
+                        if m[idx] == 0 {
+                            continue;
+                        }
+                    }
+                    let z = prng::normal(st.key, j as u32);
+                    let gz = g * z;
+                    let mi = slot_off + (idx - slot_base);
+                    state[mi] = beta * state[mi] + (1.0 - beta) * gz;
+                    let u = lr * state[mi];
+                    state[idx] += eps * z - u;
+                    norm += u * u;
+                }
+            }
+        }
+        Rule::Adam { clamp } => {
+            let n_train: usize = streams.iter().map(|s| s.len).sum();
+            let t_idx = slot_off + 2 * n_train;
+            state[t_idx] += 1.0;
+            let t = state[t_idx];
+            let bc1 = 1.0 - hypers.beta1.powf(t);
+            let bc2 = 1.0 - hypers.beta2.powf(t);
+            for st in streams {
+                for j in 0..st.len {
+                    let idx = st.offset + j;
+                    if let Some(m) = mask {
+                        if m[idx] == 0 {
+                            continue;
+                        }
+                    }
+                    let z = prng::normal(st.key, j as u32);
+                    let gz = g * z;
+                    let mi = slot_off + (idx - slot_base);
+                    let vi = slot_off + n_train + (idx - slot_base);
+                    state[mi] = hypers.beta1 * state[mi] + (1.0 - hypers.beta1) * gz;
+                    state[vi] = hypers.beta2 * state[vi] + (1.0 - hypers.beta2) * gz * gz;
+                    let mhat = state[mi] / bc1;
+                    let vhat = state[vi] / bc2;
+                    let mut u = lr * mhat / (vhat.sqrt() + hypers.adam_eps);
+                    if clamp {
+                        u = u.clamp(-lr, lr);
+                    }
+                    state[idx] += eps * z - u;
+                    norm += u * u;
+                }
+            }
+        }
+    }
+    WalkInfo { l_plus, l_minus, g, update_norm_sq: norm, accept }
+}
+
+/// Build the 0/1 mask over the base parameters for a masked variant.
+/// Matrix entries test `|theta|` against their per-entry threshold;
+/// vector entries (norm-gain analogs) are always dense — the paper's
+/// §8.2 rule.
+fn magnitude_mask(model: &ModelInfo, params: &[f32], thresholds: &[f32], large: bool) -> Vec<u8> {
+    let mut m = vec![1u8; params.len()];
+    for (i, e) in model.layout.iter().enumerate() {
+        if e.kind != "matrix" {
+            continue;
+        }
+        let h = thresholds[i];
+        for j in e.offset..e.offset + e.size {
+            let small = params[j].abs() <= h;
+            m[j] = u8::from(small != large);
+        }
+    }
+    m
+}
+
+/// Bernoulli mask over matrix entries keyed on the `mask_seed` hyper
+/// (R-MeZO); vector entries stay dense.
+fn random_mask(model: &ModelInfo, n_params: usize, keep_prob: f32, mask_seed: u32) -> Vec<u8> {
+    let key = prng::layer_key(mask_seed, 0x52, 0);
+    let mut m = vec![1u8; n_params];
+    for e in &model.layout {
+        if e.kind != "matrix" {
+            continue;
+        }
+        for j in e.offset..e.offset + e.size {
+            m[j] = u8::from(prng::uniform01(key, j as u32) < keep_prob);
+        }
+    }
+    m
+}
+
+/// Adam moment update over an explicit gradient (FO baselines).
+/// Slot layout: `[m (n) | v (n) | t (1)]` at `slot_off`; the trainable
+/// block starts at `train_off`.
+#[allow(clippy::too_many_arguments)]
+fn adam_apply(
+    state: &mut [f32],
+    train_off: usize,
+    grad: &[f32],
+    slot_off: usize,
+    hypers: &Hypers,
+) -> f32 {
+    let n = grad.len();
+    let t_idx = slot_off + 2 * n;
+    state[t_idx] += 1.0;
+    let t = state[t_idx];
+    let bc1 = 1.0 - hypers.beta1.powf(t);
+    let bc2 = 1.0 - hypers.beta2.powf(t);
+    let mut norm = 0.0f32;
+    for i in 0..n {
+        let gi = grad[i] + hypers.wd * state[train_off + i];
+        let mi = slot_off + i;
+        let vi = slot_off + n + i;
+        state[mi] = hypers.beta1 * state[mi] + (1.0 - hypers.beta1) * gi;
+        state[vi] = hypers.beta2 * state[vi] + (1.0 - hypers.beta2) * gi * gi;
+        let u = hypers.lr * (state[mi] / bc1) / ((state[vi] / bc2).sqrt() + hypers.adam_eps);
+        state[train_off + i] -= u;
+        norm += u * u;
+    }
+    norm
+}
+
+/// Write the metric tail of the packed state.
+fn write_metrics(state: &mut [f32], k_off: usize, info: &WalkInfo, masked_frac: f32, train_loss: f32) {
+    state[k_off + M_L_PLUS] = info.l_plus;
+    state[k_off + M_L_MINUS] = info.l_minus;
+    state[k_off + M_PROJ_GRAD] = info.g;
+    state[k_off + M_MASKED_FRAC] = masked_frac;
+    state[k_off + M_UPDATE_NORM_SQ] = info.update_norm_sq;
+    state[k_off + M_TRAIN_LOSS] = train_loss;
+    state[k_off + M_ACCEPT] = info.accept;
+    state[k_off + M_ACCEPT + 1] = 0.0;
+}
+
+// ---------------------------------------------------------------------------
+// Backend impl
+// ---------------------------------------------------------------------------
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init(&self, model: &ModelInfo, seed: (u32, u32)) -> Result<Vec<f32>> {
+        let geo = geometry(model)?;
+        let mut p = vec![0.0f32; model.n_params];
+        for e in &model.layout {
+            if e.kind == "vector" {
+                // norm-gain analogs start at exactly 1
+                for x in &mut p[e.offset..e.offset + e.size] {
+                    *x = 1.0;
+                }
+                continue;
+            }
+            // matrix entries: std * z from the shared counter PRNG, one
+            // stream per layout entry (the cross-language init contract)
+            let std = if e.offset == geo.e_tok {
+                0.02
+            } else if e.offset == geo.w1 {
+                1.0 / (geo.d as f32).sqrt()
+            } else {
+                1.0 / (geo.h as f32).sqrt()
+            };
+            let key = prng::layer_key(seed.0, seed.1, e.layer_id as u32);
+            for j in 0..e.size {
+                p[e.offset + j] = std * prng::normal(key, j as u32);
+            }
+        }
+        Ok(p)
+    }
+
+    fn init_lora(&self, model: &ModelInfo, seed: (u32, u32)) -> Result<Vec<f32>> {
+        let geo = geometry(model)?;
+        let mut p = vec![0.0f32; model.n_lora_params];
+        // LoRA convention: A ~ N(0, 1/sqrt(d)), B = 0 (the update starts
+        // at exactly zero)
+        let e = &model.lora_layout[0];
+        let key = prng::layer_key(seed.0, seed.1, (model.layout.len() + e.layer_id) as u32);
+        let std = 1.0 / (geo.d as f32).sqrt();
+        for j in 0..e.size {
+            p[e.offset + j] = std * prng::normal(key, j as u32);
+        }
+        Ok(p)
+    }
+
+    fn thresholds(&self, model: &ModelInfo, params: &[f32], sparsity: f32) -> Result<Vec<f32>> {
+        if params.len() != model.n_params {
+            bail!("thresholds: params len {} != {}", params.len(), model.n_params);
+        }
+        Ok(model
+            .layout
+            .iter()
+            .map(|e| {
+                if e.kind == "matrix" {
+                    percentile_threshold(&params[e.offset..e.offset + e.size], sparsity)
+                } else {
+                    f32::INFINITY
+                }
+            })
+            .collect())
+    }
+
+    fn new_state(&self, host: Vec<f32>, p: usize, s: usize, k: usize) -> Result<TrainState> {
+        if host.len() != p + s + k {
+            bail!("state vector len {} != {p}+{s}+{k}", host.len());
+        }
+        Ok(TrainState { buf: StateBuf::Host(host), p, s, k })
+    }
+
+    fn read_state(&self, state: &TrainState, offset: usize, len: usize) -> Result<Vec<f32>> {
+        let host = state.host()?;
+        if offset + len > host.len() {
+            bail!("read_state [{offset}, +{len}) out of state len {}", host.len());
+        }
+        Ok(host[offset..offset + len].to_vec())
+    }
+
+    fn step(
+        &self,
+        model: &ModelInfo,
+        optimizer: &str,
+        hypers: &Hypers,
+        thresholds: &[f32],
+        state: &mut TrainState,
+        tokens: &[i32],
+        labels: &[i32],
+        seed: (u32, u32),
+    ) -> Result<()> {
+        let geo = geometry(model)?;
+        if thresholds.len() != model.n_entries {
+            bail!("step: thresholds len {} != n_entries {}", thresholds.len(), model.n_entries);
+        }
+        let (p, s, k) = (state.p, state.s, state.k);
+        if p != model.n_params || k != N_METRICS {
+            bail!("step: state geometry [{p}|{s}|{k}] does not match model '{}'", model.name);
+        }
+        let k_off = p + s;
+        let vec = state.host_mut()?;
+
+        // mask selection (None = dense). Masks are computed from the
+        // UNPERTURBED parameters, exactly once per step — the dynamic-mask
+        // EI semantics (paper §3.3).
+        let mask: Option<Vec<u8>> = match optimizer {
+            "smezo" => Some(magnitude_mask(model, &vec[..p], thresholds, false)),
+            "smezo_large" => Some(magnitude_mask(model, &vec[..p], thresholds, true)),
+            "smezo_const" => {
+                // stored-mask ablation: computed once, parked in the slot
+                // block as ±1 (slot 0 == 0.0 means "not yet initialized")
+                if vec[p] == 0.0 {
+                    let m = magnitude_mask(model, &vec[..p], thresholds, false);
+                    for (i, &mi) in m.iter().enumerate() {
+                        vec[p + i] = if mi != 0 { 1.0 } else { -1.0 };
+                    }
+                }
+                Some((0..p).map(|i| u8::from(vec[p + i] > 0.0)).collect())
+            }
+            "rmezo" => Some(random_mask(
+                model,
+                p,
+                (1.0 - hypers.sparsity).clamp(0.0, 1.0),
+                hypers.mask_seed as u32,
+            )),
+            _ => None,
+        };
+        let masked_frac = match &mask {
+            Some(m) => m.iter().map(|&x| x as usize).sum::<usize>() as f32 / p as f32,
+            None => 1.0,
+        };
+
+        match optimizer {
+            "mezo" | "smezo" | "smezo_large" | "smezo_const" | "rmezo" | "zo_sign" | "zo_cons"
+            | "zo_mom" | "zo_adam" | "zo_adamu" => {
+                let rule = match optimizer {
+                    "zo_sign" => Rule::Sign,
+                    "zo_cons" => Rule::Conservative,
+                    "zo_mom" => Rule::Momentum,
+                    "zo_adam" => Rule::Adam { clamp: false },
+                    "zo_adamu" => Rule::Adam { clamp: true },
+                    _ => Rule::Sgd,
+                };
+                // slot_base 0: slots are indexed by parameter coordinate;
+                // smezo_const's mask slots take no optimizer slots.
+                let slot_off = p + if optimizer == "smezo_const" { p } else { 0 };
+                let streams = base_streams(model, seed);
+                let info = zo_walk(
+                    vec,
+                    &streams,
+                    mask.as_deref(),
+                    rule,
+                    hypers,
+                    slot_off,
+                    0,
+                    |sv: &[f32]| batch_ce(&geo, &sv[..p], None, tokens, labels),
+                );
+                let train_loss = 0.5 * (info.l_plus + info.l_minus);
+                write_metrics(vec, k_off, &info, masked_frac, train_loss);
+            }
+            "mezo_lora" => {
+                let a = geo.n_lora;
+                if s < a {
+                    bail!("mezo_lora: slot block {s} < adapter count {a}");
+                }
+                let streams = lora_streams(model, p, seed);
+                let info = zo_walk(
+                    vec,
+                    &streams,
+                    None,
+                    Rule::Sgd,
+                    hypers,
+                    p + a,
+                    p,
+                    |sv: &[f32]| batch_ce(&geo, &sv[..p], Some(&sv[p..p + a]), tokens, labels),
+                );
+                let train_loss = 0.5 * (info.l_plus + info.l_minus);
+                write_metrics(vec, k_off, &info, 1.0, train_loss);
+            }
+            "lora_fo" => {
+                let a = geo.n_lora;
+                if s < 3 * a + 1 {
+                    bail!("lora_fo: slot block {s} < 3A+1 = {}", 3 * a + 1);
+                }
+                let (grad, loss) = grad_lora(&geo, &vec[..p], &vec[p..p + a], tokens, labels);
+                let norm = adam_apply(vec, p, &grad, p + a, hypers);
+                let gnorm = grad.iter().map(|g| (g * g) as f64).sum::<f64>().sqrt() as f32;
+                let info = WalkInfo {
+                    l_plus: loss,
+                    l_minus: loss,
+                    g: gnorm,
+                    update_norm_sq: norm,
+                    accept: 1.0,
+                };
+                write_metrics(vec, k_off, &info, 1.0, loss);
+            }
+            "fo_sgd" | "fo_adam" => {
+                let (grad, loss) = grad_batch(&geo, &vec[..p], tokens, labels);
+                let norm = if optimizer == "fo_adam" {
+                    if s < 2 * p + 1 {
+                        bail!("fo_adam: slot block {s} < 2P+1");
+                    }
+                    adam_apply(vec, 0, &grad, p, hypers)
+                } else {
+                    let mut norm = 0.0f32;
+                    for (i, gi) in grad.iter().enumerate() {
+                        let u = hypers.lr * gi;
+                        vec[i] -= u;
+                        norm += u * u;
+                    }
+                    norm
+                };
+                let gnorm = grad.iter().map(|g| (g * g) as f64).sum::<f64>().sqrt() as f32;
+                let info = WalkInfo {
+                    l_plus: loss,
+                    l_minus: loss,
+                    g: gnorm,
+                    update_norm_sq: norm,
+                    accept: 1.0,
+                };
+                write_metrics(vec, k_off, &info, 1.0, loss);
+            }
+            other => bail!(
+                "native backend has no step program '{other}' (have: {})",
+                native_optimizers(0, 0).iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+            ),
+        }
+        Ok(())
+    }
+
+    fn pretrain_step(
+        &self,
+        model: &ModelInfo,
+        hypers: &Hypers,
+        state: &mut TrainState,
+        tokens: &[i32],
+        _seed: (u32, u32),
+    ) -> Result<()> {
+        let geo = geometry(model)?;
+        let (p, s) = (state.p, state.s);
+        if s < 2 * p + 1 {
+            bail!("pretrain: slot block {s} < 2P+1");
+        }
+        let k_off = p + s;
+        // next-token analog: predict the final token of each packed row
+        // from its prefix
+        let mut inputs = Vec::with_capacity(tokens.len());
+        let mut labels = Vec::with_capacity(tokens.len() / geo.t);
+        for row in tokens.chunks(geo.t) {
+            labels.push(row[geo.t - 1]);
+            inputs.extend_from_slice(&row[..geo.t - 1]);
+            inputs.push(crate::data::vocab::PAD);
+        }
+        let vec = state.host_mut()?;
+        let (grad, loss) = grad_batch(&geo, &vec[..p], &inputs, &labels);
+        let norm = adam_apply(vec, 0, &grad, p, hypers);
+        let gnorm = grad.iter().map(|g| (g * g) as f64).sum::<f64>().sqrt() as f32;
+        let info =
+            WalkInfo { l_plus: loss, l_minus: loss, g: gnorm, update_norm_sq: norm, accept: 1.0 };
+        write_metrics(vec, k_off, &info, 1.0, loss);
+        Ok(())
+    }
+
+    fn logits(&self, model: &ModelInfo, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let geo = geometry(model)?;
+        if params.len() != model.n_params {
+            bail!("logits: params len {} != {}", params.len(), model.n_params);
+        }
+        Ok(logits_batch(&geo, params, None, tokens))
+    }
+
+    fn logits_lora(
+        &self,
+        model: &ModelInfo,
+        params: &[f32],
+        adapters: &[f32],
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let geo = geometry(model)?;
+        if params.len() != model.n_params {
+            bail!("logits_lora: params len {} != {}", params.len(), model.n_params);
+        }
+        if adapters.len() != model.n_lora_params {
+            bail!("logits_lora: adapters len {} != {}", adapters.len(), model.n_lora_params);
+        }
+        Ok(logits_batch(&geo, params, Some(adapters), tokens))
+    }
+
+    fn compile_check(&self, model: &ModelInfo, program: &str) -> Result<()> {
+        model.program(program).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    fn tiny(b: &NativeBackend) -> ModelInfo {
+        b.manifest().model("llama_tiny").unwrap().clone()
+    }
+
+    #[test]
+    fn manifest_layouts_validate() {
+        let b = backend();
+        for (_, m) in &b.manifest().models {
+            let mut off = 0;
+            for e in &m.layout {
+                assert_eq!(e.offset, off, "{}/{}", m.name, e.name);
+                off += e.size;
+            }
+            assert_eq!(off, m.n_params, "{}", m.name);
+            assert_eq!(m.n_entries, m.layout.len());
+            // every step program's state_len is consistent
+            for (pname, prog) in &m.programs {
+                if let (Some(slots), Some(state_len)) = (prog.slots, prog.state_len) {
+                    assert_eq!(state_len, m.n_params + slots + m.n_metrics, "{}/{pname}", m.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn init_deterministic_and_contractual() {
+        let b = backend();
+        let m = tiny(&b);
+        let p1 = b.init(&m, (42, 7)).unwrap();
+        let p2 = b.init(&m, (42, 7)).unwrap();
+        let p3 = b.init(&m, (43, 7)).unwrap();
+        assert_eq!(p1, p2);
+        assert_ne!(p1, p3);
+        // embed.tok entries are 0.02 * z (the cross-language mirror check)
+        let e = &m.layout[0];
+        let z = prng::segment_normal(42, 7, e.layer_id as u32, 0, 8);
+        for i in 0..8 {
+            assert!((p1[e.offset + i] - 0.02 * z[i]).abs() < 1e-7);
+        }
+        // vector entries are exactly 1 at init
+        for e in m.layout.iter().filter(|e| e.kind == "vector") {
+            assert!(p1[e.offset..e.offset + e.size].iter().all(|&x| x == 1.0));
+        }
+    }
+
+    #[test]
+    fn logits_shape_and_determinism() {
+        let b = backend();
+        let m = tiny(&b);
+        let p = b.init(&m, (1, 1)).unwrap();
+        let tokens = vec![5i32; m.batch * m.seq_len];
+        let l1 = b.logits(&m, &p, &tokens).unwrap();
+        let l2 = b.logits(&m, &p, &tokens).unwrap();
+        assert_eq!(l1.len(), m.batch * m.vocab);
+        assert_eq!(l1, l2);
+        assert!(l1.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn fo_grad_matches_finite_difference() {
+        let b = backend();
+        let m = tiny(&b);
+        let geo = geometry(&m).unwrap();
+        let mut p = b.init(&m, (3, 9)).unwrap();
+        // one small batch of two rows
+        let t = m.seq_len;
+        let mut tokens = vec![0i32; 2 * t];
+        tokens[t - 3..t].copy_from_slice(&[200, 201, 3]);
+        tokens[2 * t - 2..].copy_from_slice(&[130, 4]);
+        let labels = vec![3, 4];
+        let (g, _) = grad_batch(&geo, &p, &tokens, &labels);
+        let mut rng = crate::util::prng::Pcg32::new(5, 5);
+        for _ in 0..12 {
+            let i = rng.below(p.len() as u32) as usize;
+            let h = 1e-3f32;
+            let orig = p[i];
+            p[i] = orig + h;
+            let lp = batch_ce(&geo, &p, None, &tokens, &labels);
+            p[i] = orig - h;
+            let lm = batch_ce(&geo, &p, None, &tokens, &labels);
+            p[i] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (fd - g[i]).abs() < 3e-2 * g[i].abs().max(0.05),
+                "coord {i}: fd {fd} vs analytic {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn zero_lr_step_is_identity_within_replay_tolerance() {
+        let b = backend();
+        let m = tiny(&b);
+        let params = b.init(&m, (2, 2)).unwrap();
+        let hypers = Hypers { lr: 0.0, ..Hypers::default() };
+        let thresholds = b.thresholds(&m, &params, hypers.sparsity).unwrap();
+        let mut state = b
+            .new_state(
+                {
+                    let mut v = params.clone();
+                    v.resize(params.len() + N_METRICS, 0.0);
+                    v
+                },
+                params.len(),
+                0,
+                N_METRICS,
+            )
+            .unwrap();
+        let tokens = vec![7i32; m.batch * m.seq_len];
+        let labels = vec![3i32; m.batch];
+        b.step(&m, "smezo", &hypers, &thresholds, &mut state, &tokens, &labels, (9, 9)).unwrap();
+        let after = b.read_state(&state, 0, params.len()).unwrap();
+        for i in 0..params.len() {
+            assert!(
+                (after[i] - params[i]).abs() <= 2e-6 * params[i].abs().max(1.0),
+                "coord {i}: {} vs {}",
+                after[i],
+                params[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! The PJRT execution backend (behind the `pjrt` cargo feature).
+//!
+//! Runs the AOT-compiled XLA programs under `artifacts/` (lowered by
+//! `python/compile/aot.py`) through the PJRT C API. Compilation of a step
+//! program takes O(seconds); every experiment reuses the same handful of
+//! programs, so executables are cached by artifact file name for the
+//! lifetime of the backend. Interchange is HLO text (see aot.py for why
+//! not serialized protos).
+//!
+//! NOTE: the workspace vendors an API *stub* for the `xla` crate
+//! (`rust/vendor/xla`) so this module type-checks offline; against the
+//! stub every entry point reports "PJRT unavailable" and
+//! [`Runtime::new`](super::Runtime::new) falls back to the native
+//! backend. Link the real `xla` crate to execute artifacts.
+//!
+//! KNOWN COST (tracked in ROADMAP.md): the backend-trait port passes
+//! parameters as host slices, so `logits`/`logits_lora` re-upload the
+//! full `f32[P]` vector per evaluation batch and `step` re-uploads the
+//! 8-float hypers + L-float thresholds per step — the pre-refactor
+//! wrappers cached those device buffers across calls. Restore an
+//! upload-once params handle (a backend-owned buffer cache) when the
+//! real `xla` crate is linked; on the CPU plugin the upload is a host
+//! memcpy, and the packed training state itself still never round-trips.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::backend::Backend;
+use super::exec::Hypers;
+use super::manifest::{Manifest, ModelInfo, ProgramInfo};
+use super::state::{StateBuf, TrainState};
+
+/// Backend that owns the PJRT client, the manifest, and the executable
+/// cache. Interior caches are mutex-guarded so the sweep driver can share
+/// one backend across scoped threads (PJRT CPU executions serialize on
+/// the cache only during compile, not during execute).
+pub struct PjrtBackend {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    /// cumulative compile seconds (perf accounting)
+    compile_seconds: Mutex<f64>,
+}
+
+impl PjrtBackend {
+    /// Load the manifest from `artifacts_dir` and start the CPU client.
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        Self::with_manifest(Manifest::load(artifacts_dir)?)
+    }
+
+    /// Start the CPU client against an already-loaded manifest. Errors
+    /// here mean "PJRT itself is unavailable" (the caller may fall back
+    /// to native), never "the manifest is bad".
+    pub fn with_manifest(manifest: Manifest) -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        crate::info!(
+            "PJRT platform={} devices={} | {} models in manifest",
+            client.platform_name(),
+            client.device_count(),
+            manifest.models.len()
+        );
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
+        })
+    }
+
+    /// Load + compile (cached) one program.
+    fn load(&self, prog: &ProgramInfo) -> Result<Arc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&prog.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(prog);
+        let t0 = std::time::Instant::now();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parsing HLO {}: {e:?}", path.display()))
+            .with_context(|| "artifact missing or stale — run `make artifacts`")?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let dt = t0.elapsed().as_secs_f64();
+        *self.compile_seconds.lock().unwrap() += dt;
+        crate::debug!("compiled {} in {:.2}s", prog.file, dt);
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(prog.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    // ---- host <-> device helpers -----------------------------------------
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    fn upload_u32(&self, data: &[u32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload u32 {dims:?}: {e:?}"))
+    }
+
+    /// Ranged f32 readback (element offset). The TFRT CPU PJRT plugin
+    /// does not implement partial raw reads, so readback goes through a
+    /// full literal copy + host-side slice; on the CPU "device" this is a
+    /// host memcpy. The packed-state design still avoids re-UPLOADING
+    /// parameters each step, which is the expensive direction.
+    fn download_f32_at(&self, buf: &PjRtBuffer, offset: usize, len: usize) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download f32[{offset}..+{len}]: {e:?}"))?;
+        let all: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        if offset + len > all.len() {
+            anyhow::bail!("range [{offset}, +{len}) out of buffer len {}", all.len());
+        }
+        Ok(all[offset..offset + len].to_vec())
+    }
+
+    fn single_output(mut outs: Vec<Vec<PjRtBuffer>>, what: &str) -> Result<PjRtBuffer> {
+        if outs.len() != 1 || outs[0].len() != 1 {
+            anyhow::bail!(
+                "{what}: expected 1 output buffer, got {}x{}",
+                outs.len(),
+                outs.first().map(|v| v.len()).unwrap_or(0)
+            );
+        }
+        Ok(outs.remove(0).remove(0))
+    }
+
+    /// Run a single-output program whose inputs are already uploaded.
+    fn run1(&self, prog: &ProgramInfo, args: &[&PjRtBuffer], what: &str) -> Result<PjRtBuffer> {
+        let exe = self.load(prog)?;
+        let outs = exe.execute_b(args).map_err(|e| anyhow!("{what}: {e:?}"))?;
+        Self::single_output(outs, what)
+    }
+
+    fn state_buffer<'s>(state: &'s TrainState, what: &str) -> Result<&'s PjRtBuffer> {
+        match &state.buf {
+            StateBuf::Pjrt(b) => Ok(b),
+            StateBuf::Host(_) => anyhow::bail!("{what}: state is host-resident, not a PJRT buffer"),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn init(&self, model: &ModelInfo, seed: (u32, u32)) -> Result<Vec<f32>> {
+        let seed_buf = self.upload_u32(&[seed.0, seed.1], &[2])?;
+        let out = self.run1(model.program("init")?, &[&seed_buf], "init")?;
+        self.download_f32_at(&out, 0, model.n_params)
+    }
+
+    fn init_lora(&self, model: &ModelInfo, seed: (u32, u32)) -> Result<Vec<f32>> {
+        let seed_buf = self.upload_u32(&[seed.0, seed.1], &[2])?;
+        let out = self.run1(model.program("init_lora")?, &[&seed_buf], "init_lora")?;
+        self.download_f32_at(&out, 0, model.n_lora_params)
+    }
+
+    fn thresholds(&self, model: &ModelInfo, params: &[f32], sparsity: f32) -> Result<Vec<f32>> {
+        if params.len() != model.n_params {
+            anyhow::bail!("thresh: params len {} != {}", params.len(), model.n_params);
+        }
+        let p_buf = self.upload_f32(params, &[params.len()])?;
+        let s_buf = self.upload_f32(&[sparsity], &[1])?;
+        let out = self.run1(model.program("thresh")?, &[&p_buf, &s_buf], "thresh")?;
+        self.download_f32_at(&out, 0, model.n_entries)
+    }
+
+    fn new_state(&self, host: Vec<f32>, p: usize, s: usize, k: usize) -> Result<TrainState> {
+        if host.len() != p + s + k {
+            anyhow::bail!("state vector len {} != {p}+{s}+{k}", host.len());
+        }
+        let buffer = self.upload_f32(&host, &[host.len()])?;
+        Ok(TrainState { buf: StateBuf::Pjrt(buffer), p, s, k })
+    }
+
+    fn read_state(&self, state: &TrainState, offset: usize, len: usize) -> Result<Vec<f32>> {
+        let buf = Self::state_buffer(state, "read_state")?;
+        self.download_f32_at(buf, offset, len)
+    }
+
+    fn step(
+        &self,
+        model: &ModelInfo,
+        optimizer: &str,
+        hypers: &Hypers,
+        thresholds: &[f32],
+        state: &mut TrainState,
+        tokens: &[i32],
+        labels: &[i32],
+        seed: (u32, u32),
+    ) -> Result<()> {
+        let prog = model.step_program(optimizer)?;
+        let tok_buf = self.upload_i32(tokens, &[model.batch, model.seq_len])?;
+        let lab_buf = self.upload_i32(labels, &[model.batch])?;
+        let seed_buf = self.upload_u32(&[seed.0, seed.1], &[2])?;
+        let hyp_buf = self.upload_f32(&hypers.to_vec(), &[8])?;
+        let thr_buf = self.upload_f32(thresholds, &[thresholds.len()])?;
+        let out = {
+            let state_buf = Self::state_buffer(state, "step")?;
+            self.run1(
+                prog,
+                &[state_buf, &tok_buf, &lab_buf, &seed_buf, &hyp_buf, &thr_buf],
+                &format!("step({optimizer})"),
+            )?
+        };
+        state.buf = StateBuf::Pjrt(out);
+        Ok(())
+    }
+
+    fn pretrain_step(
+        &self,
+        model: &ModelInfo,
+        hypers: &Hypers,
+        state: &mut TrainState,
+        tokens: &[i32],
+        seed: (u32, u32),
+    ) -> Result<()> {
+        let prog = model.program("pretrain")?;
+        let tok_buf = self.upload_i32(tokens, &[model.batch, model.seq_len])?;
+        let seed_buf = self.upload_u32(&[seed.0, seed.1], &[2])?;
+        let hyp_buf = self.upload_f32(&hypers.to_vec(), &[8])?;
+        let out = {
+            let state_buf = Self::state_buffer(state, "pretrain")?;
+            self.run1(prog, &[state_buf, &tok_buf, &seed_buf, &hyp_buf], "pretrain")?
+        };
+        state.buf = StateBuf::Pjrt(out);
+        Ok(())
+    }
+
+    fn logits(&self, model: &ModelInfo, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let p_buf = self.upload_f32(params, &[params.len()])?;
+        let tok_buf = self.upload_i32(tokens, &[model.batch, model.seq_len])?;
+        let out = self.run1(model.program("logits")?, &[&p_buf, &tok_buf], "logits")?;
+        self.download_f32_at(&out, 0, model.batch * model.vocab)
+    }
+
+    fn logits_lora(
+        &self,
+        model: &ModelInfo,
+        params: &[f32],
+        adapters: &[f32],
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let p_buf = self.upload_f32(params, &[params.len()])?;
+        let a_buf = self.upload_f32(adapters, &[adapters.len()])?;
+        let tok_buf = self.upload_i32(tokens, &[model.batch, model.seq_len])?;
+        let out =
+            self.run1(model.program("logits_lora")?, &[&p_buf, &a_buf, &tok_buf], "logits_lora")?;
+        self.download_f32_at(&out, 0, model.batch * model.vocab)
+    }
+
+    fn compile_check(&self, model: &ModelInfo, program: &str) -> Result<()> {
+        self.load(model.program(program)?).map(|_| ())
+    }
+
+    fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn total_compile_seconds(&self) -> f64 {
+        *self.compile_seconds.lock().unwrap()
+    }
+}

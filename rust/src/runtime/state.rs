@@ -1,19 +1,30 @@
-//! Device-resident packed training state.
+//! Backend-resident packed training state.
 //!
-//! `state = [params f32[P] | opt slots f32[S] | metrics f32[K]]` lives as a
-//! single PJRT buffer and is *chained* through step executions via
-//! `execute_b` — parameters never round-trip through the host during
-//! training. The only per-step host traffic is the K-element metric tail
-//! (partial `copy_raw_to_host_sync`), which is the design that makes the
-//! coordinator overhead negligible (EXPERIMENTS.md §Perf).
+//! `state = [params f32[P] | opt slots f32[S] | metrics f32[K]]` lives
+//! wherever the active [`Backend`](super::backend::Backend) keeps compute
+//! state — host memory for the native backend, a device buffer for PJRT —
+//! and is *chained* through step executions so parameters never round-trip
+//! through the coordinator during training. The only per-step host traffic
+//! is the K-element metric tail, which is the design that keeps
+//! coordinator overhead negligible (see `benches/coordinator_overhead.rs`).
 
 use anyhow::{bail, Result};
-use xla::PjRtBuffer;
 
-use super::client::Runtime;
+use super::Runtime;
 
+/// Where the packed state actually lives.
+pub enum StateBuf {
+    /// Host memory (native backend): the packed vector itself.
+    Host(Vec<f32>),
+    /// Device-resident PJRT buffer (pjrt backend).
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+/// The packed `[params | slots | metrics]` training state.
 pub struct TrainState {
-    pub buffer: PjRtBuffer,
+    /// Backing storage, owned by the backend that created it.
+    pub(crate) buf: StateBuf,
     /// parameter count
     pub p: usize,
     /// optimizer slot count
@@ -23,43 +34,37 @@ pub struct TrainState {
 }
 
 impl TrainState {
+    /// Total packed length `P + S + K`.
     pub fn state_len(&self) -> usize {
         self.p + self.s + self.k
     }
 
-    /// Assemble a fresh state on device from host parameters
+    /// Assemble a fresh state from host parameters
     /// (slots and metrics zeroed).
     pub fn from_params(rt: &Runtime, params: &[f32], s: usize, k: usize) -> Result<TrainState> {
         let mut host = Vec::with_capacity(params.len() + s + k);
         host.extend_from_slice(params);
         host.resize(params.len() + s + k, 0.0);
-        let buffer = rt.upload_f32(&host, &[host.len()])?;
-        Ok(TrainState { buffer, p: params.len(), s, k })
+        rt.backend().new_state(host, params.len(), s, k)
     }
 
-    /// Assemble with pre-filled slots (checkpoint restore).
+    /// Assemble with pre-filled slots (checkpoint restore, LoRA adapters).
     pub fn from_parts(rt: &Runtime, params: &[f32], slots: &[f32], k: usize) -> Result<TrainState> {
         let mut host = Vec::with_capacity(params.len() + slots.len() + k);
         host.extend_from_slice(params);
         host.extend_from_slice(slots);
         host.resize(params.len() + slots.len() + k, 0.0);
-        let buffer = rt.upload_f32(&host, &[host.len()])?;
-        Ok(TrainState { buffer, p: params.len(), s: slots.len(), k })
-    }
-
-    /// Adopt the output buffer of a step execution.
-    pub fn replace(&mut self, new_buffer: PjRtBuffer) {
-        self.buffer = new_buffer;
+        rt.backend().new_state(host, params.len(), slots.len(), k)
     }
 
     /// Read the K-element metric tail (cheap partial copy).
     pub fn metrics(&self, rt: &Runtime) -> Result<Vec<f32>> {
-        rt.download_f32_at(&self.buffer, self.p + self.s, self.k)
+        rt.backend().read_state(self, self.p + self.s, self.k)
     }
 
     /// Read the parameter prefix (checkpointing, eval, analysis).
     pub fn params_host(&self, rt: &Runtime) -> Result<Vec<f32>> {
-        rt.download_f32_at(&self.buffer, 0, self.p)
+        rt.backend().read_state(self, 0, self.p)
     }
 
     /// Read one layout segment of the parameters.
@@ -67,16 +72,42 @@ impl TrainState {
         if offset + len > self.p {
             bail!("segment [{offset}, +{len}) out of params range {}", self.p);
         }
-        rt.download_f32_at(&self.buffer, offset, len)
+        rt.backend().read_state(self, offset, len)
     }
 
     /// Read optimizer slots (checkpointing).
     pub fn slots_host(&self, rt: &Runtime) -> Result<Vec<f32>> {
-        rt.download_f32_at(&self.buffer, self.p, self.s)
+        rt.backend().read_state(self, self.p, self.s)
     }
 
-    /// Live device bytes held by this state (Table-4 measured accounting).
+    /// First `n` floats of the slot block (the LoRA adapter segment).
+    pub fn segment_slots(&self, rt: &Runtime, n: usize) -> Result<Vec<f32>> {
+        if n > self.s {
+            bail!("slot segment {n} > slots {}", self.s);
+        }
+        rt.backend().read_state(self, self.p, n)
+    }
+
+    /// Live backend bytes held by this state (Table-4 measured accounting).
     pub fn device_bytes(&self) -> usize {
         self.state_len() * 4
+    }
+
+    /// Host view of the packed state (native backend only).
+    pub(crate) fn host(&self) -> Result<&[f32]> {
+        match &self.buf {
+            StateBuf::Host(v) => Ok(v),
+            #[cfg(feature = "pjrt")]
+            StateBuf::Pjrt(_) => bail!("state is device-resident, not host"),
+        }
+    }
+
+    /// Mutable host view of the packed state (native backend only).
+    pub(crate) fn host_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.buf {
+            StateBuf::Host(v) => Ok(v),
+            #[cfg(feature = "pjrt")]
+            StateBuf::Pjrt(_) => bail!("state is device-resident, not host"),
+        }
     }
 }

@@ -8,9 +8,13 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
+/// Parsed command-line arguments.
 pub struct Args {
+    /// positional arguments in order
     pub positionals: Vec<String>,
+    /// `--key value` options
     pub options: BTreeMap<String, String>,
+    /// boolean flags present
     pub flags: Vec<String>,
 }
 
@@ -42,18 +46,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Whether a boolean flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw option value, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// String option with default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Integer option with default (underscores allowed).
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -64,6 +72,7 @@ impl Args {
         }
     }
 
+    /// Float option with default.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -73,10 +82,12 @@ impl Args {
         }
     }
 
+    /// f32 option with default.
     pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
         Ok(self.f64_or(name, default as f64)? as f32)
     }
 
+    /// u64 option with default (underscores allowed).
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),

@@ -13,16 +13,23 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any number (always carried as f64)
     Num(f64),
+    /// string
     Str(String),
+    /// array
     Arr(Vec<Json>),
+    /// object with ordered keys
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- typed accessors -------------------------------------------------
+    /// Object field, if present.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -35,6 +42,7 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
     }
 
+    /// Numeric value or a type error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -42,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value or a type error.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -50,6 +59,7 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// String value or a type error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -57,6 +67,7 @@ impl Json {
         }
     }
 
+    /// Array items or a type error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -64,6 +75,7 @@ impl Json {
         }
     }
 
+    /// Object map or a type error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -72,23 +84,28 @@ impl Json {
     }
 
     // ---- constructors ----------------------------------------------------
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array of numbers.
     pub fn from_f64s(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
     }
 
+    /// Array of numbers from f32s.
     pub fn from_f32s(xs: &[f32]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Num(*x as f64)).collect())
     }
 
+    /// Array of strings.
     pub fn from_strs(xs: &[&str]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Str(x.to_string())).collect())
     }
 
     // ---- writer ------------------------------------------------------------
+    /// Serialize to compact JSON text.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

@@ -13,20 +13,26 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
+/// error level
 pub const ERROR: u8 = 0;
+/// info level (the default)
 pub const INFO: u8 = 1;
+/// debug level (`--verbose`)
 pub const DEBUG: u8 = 2;
 
 static LEVEL: AtomicU8 = AtomicU8::new(INFO);
 
+/// Set the global log level.
 pub fn set_level(level: u8) {
     LEVEL.store(level, Ordering::Relaxed);
 }
 
+/// Whether `level` is currently enabled.
 pub fn enabled(level: u8) -> bool {
     level <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Log a formatted line to stderr at info level.
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
@@ -36,6 +42,7 @@ macro_rules! info {
     };
 }
 
+/// Log a formatted line to stderr at debug level (`--verbose`).
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => {
@@ -52,14 +59,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start a labeled timer.
     pub fn start(label: &str) -> Timer {
         Timer { label: label.to_string(), start: Instant::now() }
     }
 
+    /// Seconds since start.
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Log and return the elapsed seconds.
     pub fn finish(self) -> f64 {
         let dt = self.elapsed_s();
         crate::info!("{} took {:.2}s", self.label, dt);
@@ -73,6 +83,7 @@ pub struct JsonlWriter {
 }
 
 impl JsonlWriter {
+    /// Create/truncate the JSONL file (creating parent dirs).
     pub fn create(path: &Path) -> anyhow::Result<JsonlWriter> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -81,11 +92,13 @@ impl JsonlWriter {
         Ok(JsonlWriter { out: BufWriter::new(file) })
     }
 
+    /// Append one JSON record as a line.
     pub fn write(&mut self, record: &Json) -> anyhow::Result<()> {
         writeln!(self.out, "{}", record.to_string())?;
         Ok(())
     }
 
+    /// Flush buffered lines to disk.
     pub fn flush(&mut self) -> anyhow::Result<()> {
         self.out.flush()?;
         Ok(())

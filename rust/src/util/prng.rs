@@ -13,7 +13,9 @@
 
 /// Stream salts — must match prng.py.
 pub const STREAM_A: u32 = 0x9E37_79B9;
+/// second Box–Muller stream salt
 pub const STREAM_B: u32 = 0x85EB_CA6B;
+/// R-MeZO Bernoulli-mask stream salt
 pub const STREAM_MASK: u32 = 0xC2B2_AE35;
 
 const TWO_PI: f32 = 6.283_185_3;
@@ -88,6 +90,7 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Seeded generator on an explicit stream.
     pub fn new(seed: u64, stream: u64) -> Self {
         let mut g = Pcg32 { state: 0, inc: (stream << 1) | 1 };
         g.next_u32();
@@ -106,6 +109,7 @@ impl Pcg32 {
         Self::new(seed, h)
     }
 
+    /// Next raw 32-bit output.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
@@ -127,16 +131,19 @@ impl Pcg32 {
         }
     }
 
+    /// Uniform in [0, 1).
     pub fn unit_f32(&mut self) -> f32 {
         (self.next_u32() >> 8) as f32 * INV_2_24
     }
 
+    /// Standard normal via Box–Muller.
     pub fn normal_f32(&mut self) -> f32 {
         let u1 = self.unit_f32().max(MIN_UNIT);
         let u2 = self.unit_f32();
         (-2.0 * u1.ln()).sqrt() * (TWO_PI * u2).cos()
     }
 
+    /// Bernoulli(p) draw.
     pub fn chance(&mut self, p: f64) -> bool {
         (self.unit_f32() as f64) < p
     }

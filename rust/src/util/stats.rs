@@ -4,16 +4,25 @@
 /// Summary of a sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// sample size
     pub n: usize,
+    /// arithmetic mean
     pub mean: f64,
+    /// population standard deviation
     pub std: f64,
+    /// minimum
     pub min: f64,
+    /// maximum
     pub max: f64,
+    /// median
     pub p50: f64,
+    /// 95th percentile
     pub p95: f64,
+    /// 99th percentile
     pub p99: f64,
 }
 
+/// Summary statistics of a sample.
 pub fn summarize(xs: &[f64]) -> Summary {
     assert!(!xs.is_empty(), "summarize: empty sample");
     let n = xs.len();
@@ -56,16 +65,19 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// An EMA with decay `beta`.
     pub fn new(beta: f64) -> Ema {
         Ema { beta, value: 0.0, t: 0 }
     }
 
+    /// Fold in one observation; returns the corrected mean.
     pub fn update(&mut self, x: f64) -> f64 {
         self.t += 1;
         self.value = self.beta * self.value + (1.0 - self.beta) * x;
         self.get()
     }
 
+    /// Current bias-corrected value (NaN before any update).
     pub fn get(&self) -> f64 {
         if self.t == 0 {
             f64::NAN

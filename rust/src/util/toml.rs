@@ -44,6 +44,7 @@ pub fn parse(input: &str) -> Result<Json> {
     Ok(Json::Obj(root))
 }
 
+/// Parse a TOML-subset file into a [`Json`] tree.
 pub fn parse_file(path: &std::path::Path) -> Result<Json> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;

@@ -18,6 +18,7 @@ use crate::zo::MaskMode;
 /// Outcome counts of the generalization probe.
 #[derive(Debug, Clone, Default)]
 pub struct ProbeResult {
+    /// probe steps counted
     pub n: usize,
     /// loss increased on the SAME half-batch the gradient came from
     pub up_same: usize,
@@ -26,9 +27,11 @@ pub struct ProbeResult {
 }
 
 impl ProbeResult {
+    /// P(loss increase | same half-batch).
     pub fn p_up_same(&self) -> f64 {
         self.up_same as f64 / self.n.max(1) as f64
     }
+    /// P(loss increase | held-out half-batch).
     pub fn p_up_held(&self) -> f64 {
         self.up_held as f64 / self.n.max(1) as f64
     }
@@ -100,9 +103,11 @@ pub struct NoiseByMagnitude {
     pub err_large: f64,
     /// mean |g_true| over the same groups (for relative comparison)
     pub gmag_small: f64,
+    /// mean |g_true| over the top-20% coordinates
     pub gmag_large: f64,
     /// cosine similarity of g_zo with g_true restricted to each group
     pub cos_small: f64,
+    /// cosine similarity restricted to the top-20% group
     pub cos_large: f64,
 }
 

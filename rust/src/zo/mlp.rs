@@ -7,13 +7,18 @@
 use crate::util::prng::Pcg32;
 
 #[derive(Debug, Clone)]
+/// MLP shape specification.
 pub struct MlpSpec {
+    /// input features
     pub d_in: usize,
+    /// hidden width
     pub d_hidden: usize,
+    /// output classes
     pub n_classes: usize,
 }
 
 impl MlpSpec {
+    /// Flat parameter count.
     pub fn n_params(&self) -> usize {
         self.d_in * self.d_hidden + self.d_hidden + self.d_hidden * self.n_classes + self.n_classes
     }
@@ -39,7 +44,9 @@ impl MlpSpec {
 /// A batch of (x, y) pairs.
 #[derive(Debug, Clone)]
 pub struct MlpBatch {
+    /// inputs, row-major `[n, d_in]`
     pub xs: Vec<f32>, // [n, d_in]
+    /// class labels
     pub ys: Vec<usize>,
 }
 

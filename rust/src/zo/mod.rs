@@ -20,6 +20,20 @@ pub mod mlp;
 pub mod optim;
 
 /// Mask modes matching `python/compile/optimizers.py::flat_mask`.
+///
+/// # Examples
+/// ```
+/// use sparse_mezo::zo::MaskMode;
+/// let theta = [0.1f32, 5.0, -0.2, -8.0];
+/// // S-MeZO selects the small-magnitude coordinates...
+/// let small = MaskMode::Magnitude { threshold: 1.0 };
+/// assert_eq!(small.mask_vec(&theta), vec![1.0, 0.0, 1.0, 0.0]);
+/// // ...the Fig-2c contrast arm selects the complement...
+/// let large = MaskMode::LargeOnly { threshold: 1.0 };
+/// assert_eq!(large.mask_vec(&theta), vec![0.0, 1.0, 0.0, 1.0]);
+/// // ...and MeZO perturbs everything.
+/// assert_eq!(MaskMode::Dense.mask_vec(&theta), vec![1.0; 4]);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum MaskMode {
     /// MeZO: every coordinate perturbed.
@@ -64,6 +78,7 @@ impl MaskMode {
         }
     }
 
+    /// The full mask vector for `theta` (1.0 = perturbed/updated).
     pub fn mask_vec(&self, theta: &[f32]) -> Vec<f32> {
         (0..theta.len()).map(|i| self.mask(theta, i)).collect()
     }

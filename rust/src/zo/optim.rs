@@ -11,8 +11,26 @@ use crate::zo::MaskMode;
 
 /// Percentile threshold over |theta| (paper §8.2): the bottom
 /// (1 - sparsity) fraction by magnitude is selected.
+///
+/// Boundary behavior: `sparsity <= 0` returns the largest magnitude
+/// (everything selected — the MeZO degeneracy), and `sparsity >= 1`
+/// returns `f32::NEG_INFINITY` (nothing selected, not even exact zeros).
+///
+/// # Examples
+/// ```
+/// use sparse_mezo::zo::optim::percentile_threshold;
+/// let theta: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+/// let h = percentile_threshold(&theta, 0.8); // keep the smallest ~20%
+/// assert_eq!(theta.iter().filter(|x| x.abs() <= h).count(), 21);
+/// // boundary cases: keep-everything and keep-nothing
+/// assert!(percentile_threshold(&theta, 0.0) >= 100.0);
+/// assert_eq!(percentile_threshold(&theta, 1.0), f32::NEG_INFINITY);
+/// ```
 pub fn percentile_threshold(theta: &[f32], sparsity: f32) -> f32 {
     assert!(!theta.is_empty());
+    if sparsity >= 1.0 {
+        return f32::NEG_INFINITY;
+    }
     let mut mags: Vec<f32> = theta.iter().map(|x| x.abs()).collect();
     mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
     if sparsity <= 0.0 {
@@ -25,9 +43,13 @@ pub fn percentile_threshold(theta: &[f32], sparsity: f32) -> f32 {
 /// Result of one ZO step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepInfo {
+    /// loss at `theta + eps * m ⊙ z`
     pub l_plus: f32,
+    /// loss at `theta - eps * m ⊙ z`
     pub l_minus: f32,
+    /// projected gradient `(l_plus - l_minus) / (2 eps)`
     pub proj_grad: f32,
+    /// fraction of coordinates the mask selected
     pub masked_frac: f32,
     /// squared L2 norm of the applied update
     pub update_norm_sq: f32,
@@ -46,9 +68,13 @@ pub enum Variant {
     Momentum,
 }
 
+/// The seed-replay ZO stepper (paper Alg. 1–3 on plain vectors).
 pub struct ZoStepper {
+    /// perturbation scale
     pub eps: f32,
+    /// learning rate
     pub lr: f32,
+    /// update rule
     pub variant: Variant,
     /// momentum buffer (allocated lazily for Variant::Momentum)
     momentum: Vec<f32>,
@@ -56,6 +82,7 @@ pub struct ZoStepper {
 }
 
 impl ZoStepper {
+    /// A stepper with zeroed momentum state.
     pub fn new(eps: f32, lr: f32, variant: Variant) -> ZoStepper {
         ZoStepper { eps, lr, variant, momentum: Vec::new(), beta: 0.9 }
     }
@@ -63,6 +90,30 @@ impl ZoStepper {
     /// One step of Algorithm 1. `loss` is the minibatch loss closure;
     /// the caller controls which batch it binds (the Fig-2b probe calls
     /// this with one batch and evaluates deltas on another).
+    ///
+    /// The walk is **fused and chunked**: the three loss-side traversals
+    /// (`+eps`, `-2eps`, restore) plus the update would naively cost four
+    /// z-regenerations per coordinate; here the restore and the update
+    /// share one regeneration (`theta += (eps - lr·g)·m⊙z` for the SGD
+    /// rule), and every traversal streams z through a small stack chunk.
+    /// The mask is computed exactly once, from the unperturbed `theta` —
+    /// per-walk recomputation would break seed replay for magnitude masks,
+    /// whose support depends on the (perturbed) parameter values.
+    ///
+    /// # Examples
+    /// ```
+    /// use sparse_mezo::zo::{optim::{Variant, ZoStepper}, MaskMode};
+    /// let quad = |x: &[f32]| x.iter().map(|v| (v - 1.0) * (v - 1.0)).sum::<f32>();
+    /// let mut theta = vec![0.0f32; 8];
+    /// let mut opt = ZoStepper::new(1e-3, 0.05, Variant::Sgd);
+    /// let info = opt.step(&mut theta, MaskMode::Dense, (1, 2), quad);
+    /// assert!(info.l_plus.is_finite() && info.masked_frac == 1.0);
+    /// // seed replay: the same (seed, step) pair reproduces the step
+    /// let mut theta2 = vec![0.0f32; 8];
+    /// let mut opt2 = ZoStepper::new(1e-3, 0.05, Variant::Sgd);
+    /// opt2.step(&mut theta2, MaskMode::Dense, (1, 2), quad);
+    /// assert_eq!(theta, theta2);
+    /// ```
     pub fn step<F: FnMut(&[f32]) -> f32>(
         &mut self,
         theta: &mut [f32],
@@ -70,51 +121,111 @@ impl ZoStepper {
         seed: (u32, u32),
         mut loss: F,
     ) -> StepInfo {
+        /// z-chunk size: big enough to amortize loop overhead, small
+        /// enough to stay in L1.
+        const CHUNK: usize = 512;
         let n = theta.len();
         let key = prng::layer_key(seed.0, seed.1, 0);
+        // Mask support is decided ONCE, from the unperturbed theta.
         let m: Vec<f32> = mask.mask_vec(theta);
         let masked_frac = m.iter().sum::<f32>() / n as f32;
+        let mut z = [0.0f32; CHUNK];
+        let eps = self.eps;
+        let lr = self.lr;
 
-        // + eps perturb (Alg. 2 with seed replay)
-        for i in 0..n {
-            theta[i] += self.eps * m[i] * prng::normal(key, i as u32);
+        // + eps perturb (Alg. 2 with seed replay), chunked
+        let mut start = 0;
+        while start < n {
+            let len = CHUNK.min(n - start);
+            for (j, zj) in z[..len].iter_mut().enumerate() {
+                *zj = prng::normal(key, (start + j) as u32);
+            }
+            for j in 0..len {
+                theta[start + j] += eps * m[start + j] * z[j];
+            }
+            start += len;
         }
         let l_plus = loss(theta);
+
         // -2 eps
-        for i in 0..n {
-            theta[i] -= 2.0 * self.eps * m[i] * prng::normal(key, i as u32);
+        let mut start = 0;
+        while start < n {
+            let len = CHUNK.min(n - start);
+            for (j, zj) in z[..len].iter_mut().enumerate() {
+                *zj = prng::normal(key, (start + j) as u32);
+            }
+            for j in 0..len {
+                theta[start + j] -= 2.0 * eps * m[start + j] * z[j];
+            }
+            start += len;
         }
         let l_minus = loss(theta);
-        // back to theta
-        for i in 0..n {
-            theta[i] += self.eps * m[i] * prng::normal(key, i as u32);
-        }
-        let g = (l_plus - l_minus) / (2.0 * self.eps);
+        let g = (l_plus - l_minus) / (2.0 * eps);
 
+        // fused restore (+eps) + update, one z-regeneration per coordinate
         let mut update_norm_sq = 0.0f32;
         match self.variant {
             Variant::Sgd => {
-                for i in 0..n {
-                    let u = self.lr * g * m[i] * prng::normal(key, i as u32);
-                    theta[i] -= u;
-                    update_norm_sq += u * u;
+                let mut start = 0;
+                while start < n {
+                    let len = CHUNK.min(n - start);
+                    for (j, zj) in z[..len].iter_mut().enumerate() {
+                        *zj = prng::normal(key, (start + j) as u32);
+                    }
+                    for j in 0..len {
+                        let i = start + j;
+                        let u = lr * g * m[i] * z[j];
+                        theta[i] += eps * m[i] * z[j] - u;
+                        update_norm_sq += u * u;
+                    }
+                    start += len;
                 }
             }
             Variant::Sign => {
-                for i in 0..n {
-                    let gz = g * m[i] * prng::normal(key, i as u32);
-                    if gz != 0.0 {
-                        let u = self.lr * gz.signum();
-                        theta[i] -= u;
-                        update_norm_sq += u * u;
+                let mut start = 0;
+                while start < n {
+                    let len = CHUNK.min(n - start);
+                    for (j, zj) in z[..len].iter_mut().enumerate() {
+                        *zj = prng::normal(key, (start + j) as u32);
                     }
+                    for j in 0..len {
+                        let i = start + j;
+                        theta[i] += eps * m[i] * z[j];
+                        let gz = g * m[i] * z[j];
+                        if gz != 0.0 {
+                            let u = lr * gz.signum();
+                            theta[i] -= u;
+                            update_norm_sq += u * u;
+                        }
+                    }
+                    start += len;
                 }
             }
             Variant::Conservative => {
+                // restore exactly, snapshot, then try the candidate step
+                let mut start = 0;
+                while start < n {
+                    let len = CHUNK.min(n - start);
+                    for (j, zj) in z[..len].iter_mut().enumerate() {
+                        *zj = prng::normal(key, (start + j) as u32);
+                    }
+                    for j in 0..len {
+                        theta[start + j] += eps * m[start + j] * z[j];
+                    }
+                    start += len;
+                }
                 let before: Vec<f32> = theta.to_vec();
                 let l_base = 0.5 * (l_plus + l_minus);
-                for i in 0..n {
-                    theta[i] -= self.lr * g * m[i] * prng::normal(key, i as u32);
+                let mut start = 0;
+                while start < n {
+                    let len = CHUNK.min(n - start);
+                    for (j, zj) in z[..len].iter_mut().enumerate() {
+                        *zj = prng::normal(key, (start + j) as u32);
+                    }
+                    for j in 0..len {
+                        theta[start + j] -= lr * g * m[start + j] * z[j];
+                    }
+                    start += len;
                 }
                 let l_cand = loss(theta);
                 if l_cand > l_base {
@@ -130,12 +241,21 @@ impl ZoStepper {
                 if self.momentum.len() != n {
                     self.momentum = vec![0.0; n];
                 }
-                for i in 0..n {
-                    let gz = g * m[i] * prng::normal(key, i as u32);
-                    self.momentum[i] = self.beta * self.momentum[i] + (1.0 - self.beta) * gz;
-                    let u = self.lr * self.momentum[i];
-                    theta[i] -= u;
-                    update_norm_sq += u * u;
+                let mut start = 0;
+                while start < n {
+                    let len = CHUNK.min(n - start);
+                    for (j, zj) in z[..len].iter_mut().enumerate() {
+                        *zj = prng::normal(key, (start + j) as u32);
+                    }
+                    for j in 0..len {
+                        let i = start + j;
+                        let gz = g * m[i] * z[j];
+                        self.momentum[i] = self.beta * self.momentum[i] + (1.0 - self.beta) * gz;
+                        let u = lr * self.momentum[i];
+                        theta[i] += eps * m[i] * z[j] - u;
+                        update_norm_sq += u * u;
+                    }
+                    start += len;
                 }
             }
         }
