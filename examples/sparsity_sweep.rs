@@ -13,6 +13,7 @@ use std::path::PathBuf;
 use sparse_mezo::config::TrainConfig;
 use sparse_mezo::coordinator::sweep::{best_cell, sweep, SweepAxis};
 use sparse_mezo::data::tasks;
+use sparse_mezo::parallel::WorkerPool;
 use sparse_mezo::runtime::exec::InitExec;
 use sparse_mezo::runtime::Runtime;
 use sparse_mezo::util::cli::Args;
@@ -37,7 +38,9 @@ fn main() -> anyhow::Result<()> {
     let base = init.run(&rt, (7, 0x1717))?;
 
     let grid = [0.0, 0.5, 0.6, 0.7, 0.8, 0.9];
-    let cells = sweep(&rt, &cfg, &dataset, SweepAxis::Sparsity, &grid, Some(&base))?;
+    // one pool thread per cell: the pre-pool full-fan-out behavior
+    let pool = WorkerPool::new(grid.len());
+    let cells = sweep(&rt, &pool, &cfg, &dataset, SweepAxis::Sparsity, &grid, Some(&base))?;
 
     println!("\nsparsity  best-dev  test      diverged");
     for c in &cells {

@@ -1,0 +1,107 @@
+//! Bench: seed-sync data-parallel throughput — steps/sec vs worker
+//! count (the ZO-specific scaling story: workers exchange one scalar
+//! per step, so DP efficiency is bounded by the replicated
+//! perturb/update walk, not by gradient traffic).
+//!
+//! Run: `cargo bench --bench dp_throughput`. Uses the native backend.
+//! Writes a human table to stdout and refreshes the repo-root
+//! `BENCH_dp.json` snapshot that seeds the perf trajectory across PRs.
+//! Headline target (ISSUE 2): >1.5x steps/sec at 4 workers vs 1.
+
+use std::path::PathBuf;
+
+use sparse_mezo::config::TrainConfig;
+use sparse_mezo::coordinator::trainer::Trainer;
+use sparse_mezo::data::tasks;
+use sparse_mezo::parallel::{DpTrainer, WorkerPool};
+use sparse_mezo::runtime::Runtime;
+use sparse_mezo::util::json::Json;
+
+/// Timed steps per configuration (excludes eval pauses by design).
+const STEPS: usize = 30;
+/// llama_med: the heaviest native model — forward cost dominates the
+/// replicated walk, which is the regime DP is for.
+const MODEL: &str = "llama_med";
+
+fn bench_cfg(workers: usize, steps: usize) -> anyhow::Result<TrainConfig> {
+    let mut cfg = TrainConfig::resolve(MODEL, "rte", "smezo", None)?;
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.eval_cap = 0;
+    cfg.seed = 17;
+    cfg.workers = workers;
+    Ok(cfg)
+}
+
+/// Steps/sec of a DP run at `workers` replicas.
+fn dp_steps_per_sec(rt: &Runtime, workers: usize, steps: usize) -> anyhow::Result<f64> {
+    let pool = WorkerPool::new(workers);
+    let model = rt.model(MODEL)?.clone();
+    let dataset = tasks::generate_sized("rte", 17, 128, 16, 16)?;
+    let mut t = DpTrainer::new(rt, &pool, bench_cfg(workers, steps)?);
+    t.eval_test = false;
+    let result = t.run_on(&model, &dataset)?;
+    Ok(1.0 / result.sec_per_step.max(1e-12))
+}
+
+/// Steps/sec of the serial trainer (the pre-subsystem reference point).
+fn serial_steps_per_sec(rt: &Runtime, steps: usize) -> anyhow::Result<f64> {
+    let model = rt.model(MODEL)?.clone();
+    let dataset = tasks::generate_sized("rte", 17, 128, 16, 16)?;
+    let mut t = Trainer::new(rt, bench_cfg(1, steps)?);
+    t.eval_test = false;
+    let result = t.run_on(&model, &dataset)?;
+    Ok(1.0 / result.sec_per_step.max(1e-12))
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::native();
+    // warmup: page-in + allocator + first-touch of the replicas
+    let _ = dp_steps_per_sec(&rt, 1, 4)?;
+
+    let serial = serial_steps_per_sec(&rt, STEPS)?;
+    println!("{:<26} {serial:9.2} steps/s", "serial trainer");
+
+    let worker_counts = [1usize, 2, 4];
+    let mut rows = Vec::new();
+    let mut baseline = 0.0f64;
+    let mut at4 = 0.0f64;
+    for &w in &worker_counts {
+        let sps = dp_steps_per_sec(&rt, w, STEPS)?;
+        if w == 1 {
+            baseline = sps;
+        }
+        if w == 4 {
+            at4 = sps;
+        }
+        let speedup = sps / baseline.max(1e-12);
+        println!("{:<26} {sps:9.2} steps/s  x{speedup:.2} vs 1 worker", format!("dp workers={w}"));
+        rows.push(Json::obj(vec![
+            ("workers", Json::Num(w as f64)),
+            ("steps_per_sec", Json::Num(sps)),
+            ("speedup_vs_1w", Json::Num(speedup)),
+        ]));
+    }
+    let speedup4 = at4 / baseline.max(1e-12);
+    println!(
+        "\n4-worker speedup: x{speedup4:.2} (acceptance target >1.5x; \
+         machine has {} cores)",
+        WorkerPool::default_size()
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("dp_throughput".into())),
+        ("status", Json::Str("measured".into())),
+        ("model", Json::Str(MODEL.into())),
+        ("optimizer", Json::Str("smezo".into())),
+        ("timed_steps", Json::Num(STEPS as f64)),
+        ("cores", Json::Num(WorkerPool::default_size() as f64)),
+        ("serial_steps_per_sec", Json::Num(serial)),
+        ("speedup_4w", Json::Num(speedup4)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_dp.json");
+    std::fs::write(&path, format!("{}\n", out.to_string()))?;
+    println!("(snapshot -> {})", path.display());
+    Ok(())
+}

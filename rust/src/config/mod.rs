@@ -36,6 +36,9 @@ pub struct TrainConfig {
     pub init_from: Option<String>,
     /// cap on dev examples per evaluation (speed knob; 0 = all)
     pub eval_cap: usize,
+    /// data-parallel worker count (1 = serial trainer; >1 routes ZO
+    /// runs through the seed-sync DP engine, `crate::parallel::dp`)
+    pub workers: usize,
 }
 
 impl Default for TrainConfig {
@@ -51,6 +54,7 @@ impl Default for TrainConfig {
             log_every: 25,
             init_from: None,
             eval_cap: 0,
+            workers: 1,
         }
     }
 }
@@ -105,6 +109,9 @@ impl TrainConfig {
         if let Some(v) = doc.get("eval_cap") {
             self.eval_cap = v.as_usize()?;
         }
+        if let Some(v) = doc.get("workers") {
+            self.workers = v.as_usize()?;
+        }
         if let Some(v) = doc.get("init_from") {
             self.init_from = Some(v.as_str()?.to_string());
         }
@@ -151,6 +158,9 @@ impl TrainConfig {
         if self.hypers.lr < 0.0 {
             bail!("lr must be non-negative");
         }
+        if self.workers == 0 {
+            bail!("workers must be >= 1 (1 = serial)");
+        }
         Ok(())
     }
 
@@ -168,12 +178,23 @@ mod tests {
     fn resolve_and_override() {
         let mut cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
         assert_eq!(cfg.task, "rte");
+        assert_eq!(cfg.workers, 1);
         assert!(cfg.hypers.sparsity > 0.0);
-        let doc = crate::util::toml::parse("steps = 10\n[hypers]\nlr = 0.5\nsparsity = 0.6\n").unwrap();
+        let doc =
+            crate::util::toml::parse("steps = 10\nworkers = 4\n[hypers]\nlr = 0.5\nsparsity = 0.6\n")
+                .unwrap();
         cfg.apply_json(&doc).unwrap();
         assert_eq!(cfg.steps, 10);
+        assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.hypers.lr, 0.5);
         assert_eq!(cfg.hypers.sparsity, 0.6);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let mut cfg = TrainConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -1,6 +1,13 @@
 //! Evaluation: candidate-scored accuracy + cross-entropy from last-position
 //! logits (the MeZO protocol: the prediction is the argmax over the
 //! example's candidate answer tokens, not the full vocabulary).
+//!
+//! [`evaluate`] is the serial reference implementation;
+//! [`evaluate_sharded`](crate::parallel::eval::evaluate_sharded) splits
+//! the same batches across the worker pool and folds the per-batch
+//! results with the same running-mean formula in batch order, so both
+//! return bit-identical numbers. The trainer picks per its `pool` field;
+//! keep the fold formulas in lockstep if either changes.
 
 use anyhow::Result;
 

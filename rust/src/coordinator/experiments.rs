@@ -21,6 +21,7 @@ use crate::coordinator::report::{ascii_curve, pct, pct_delta, write_csv, Table};
 use crate::coordinator::sweep::{self, SweepAxis};
 use crate::coordinator::trainer::{in_context, zero_shot, TrainResult, Trainer};
 use crate::data::{tasks, Dataset};
+use crate::parallel::WorkerPool;
 use crate::runtime::exec::Hypers;
 use crate::runtime::Runtime;
 
@@ -44,6 +45,8 @@ pub struct Ctx<'rt> {
     pub pretrain_steps: usize,
     /// checkpoint cache dir
     pub ckpt_dir: PathBuf,
+    /// shared worker pool: sweep cells and sharded evals schedule here
+    pub pool: WorkerPool,
 }
 
 impl<'rt> Ctx<'rt> {
@@ -59,6 +62,7 @@ impl<'rt> Ctx<'rt> {
             seeds: vec![17],
             pretrain_steps: 3000,
             ckpt_dir: PathBuf::from("checkpoints"),
+            pool: WorkerPool::new(WorkerPool::default_size()),
         }
     }
 
@@ -296,6 +300,7 @@ pub fn table10(ctx: &Ctx, model: &str) -> Result<()> {
         cfg.seed = ctx.seeds[0];
         let cells_res = sweep::sweep(
             ctx.rt,
+            &ctx.pool,
             &cfg,
             &ds,
             SweepAxis::Sparsity,
@@ -451,7 +456,8 @@ pub fn fig2a(ctx: &Ctx, model: &str, task: &str) -> Result<()> {
         cfg.eval_every = ctx.eval_every;
         cfg.eval_cap = ctx.eval_cap;
         cfg.seed = ctx.seeds[0];
-        let cells = sweep::sweep(ctx.rt, &cfg, &ds, SweepAxis::LearningRate, &grid, Some(&base))?;
+        let cells =
+            sweep::sweep(ctx.rt, &ctx.pool, &cfg, &ds, SweepAxis::LearningRate, &grid, Some(&base))?;
         for (i, c) in cells.iter().enumerate() {
             if rows.len() <= i {
                 rows.push(vec![c.value, f64::NAN, 0.0, f64::NAN, 0.0]);

@@ -2,18 +2,22 @@
 //! and the Table-10 sparsity sweep share this grid driver.
 //!
 //! Grid cells are **independent runs** (shared dataset + paired seeds,
-//! nothing mutated across cells), so they fan out across
-//! `std::thread::scope` workers — one per cell — and the wall-clock of a
-//! sweep is the slowest single cell instead of the sum of the grid. This
-//! is what the [`Backend: Send + Sync`](crate::runtime::backend::Backend)
-//! bound buys. Log lines from concurrent cells interleave on stderr;
-//! results are returned in grid order regardless.
+//! nothing mutated across cells), so they fan out across the shared
+//! [`WorkerPool`] — the same scheduler the data-parallel trainer and
+//! sharded evaluator use — instead of spawning one ad-hoc thread per
+//! cell: a sweep's concurrency is bounded by the pool size, and a sweep
+//! can coexist with other pool workloads without oversubscribing the
+//! machine. This is what the
+//! [`Backend: Send + Sync`](crate::runtime::backend::Backend) bound
+//! buys. Log lines from concurrent cells interleave on stderr; results
+//! are returned in grid order regardless.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::coordinator::trainer::Trainer;
 use crate::data::Dataset;
+use crate::parallel::WorkerPool;
 use crate::runtime::Runtime;
 
 /// Outcome of one grid cell.
@@ -40,9 +44,13 @@ pub enum SweepAxis {
     Sparsity,
 }
 
-/// One worker: train `base` with the axis hyper set to `v`.
+/// One worker: train `base` with the axis hyper set to `v`. The cell's
+/// evaluation passes shard across the same `pool` its cell runs on —
+/// safe because `scatter` callers participate in draining the queue.
+#[allow(clippy::too_many_arguments)]
 fn run_cell(
     rt: &Runtime,
+    pool: &WorkerPool,
     base: &TrainConfig,
     model: &crate::runtime::ModelInfo,
     dataset: &Dataset,
@@ -56,7 +64,7 @@ fn run_cell(
         SweepAxis::Sparsity => cfg.hypers.sparsity = v as f32,
     }
     crate::info!("[sweep {:?}={v}] starting ({})", axis, cfg.label());
-    let mut trainer = Trainer::new(rt, cfg);
+    let mut trainer = Trainer::new(rt, cfg).with_pool(pool);
     if let Some(p) = init_params {
         trainer.initial_override = Some(p.to_vec());
     }
@@ -72,9 +80,10 @@ fn run_cell(
 
 /// Run `base` once per grid value (shared dataset + paired seeds) and
 /// collect accuracy/divergence per cell. Cells execute concurrently on
-/// scoped threads; the returned vector is in grid order.
+/// the shared `pool`; the returned vector is in grid order.
 pub fn sweep(
     rt: &Runtime,
+    pool: &WorkerPool,
     base: &TrainConfig,
     dataset: &Dataset,
     axis: SweepAxis,
@@ -82,18 +91,8 @@ pub fn sweep(
     init_params: Option<&[f32]>,
 ) -> Result<Vec<SweepCell>> {
     let model = rt.model(&base.model)?.clone();
-    let model_ref = &model;
-    let results: Vec<Result<SweepCell>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = grid
-            .iter()
-            .map(|&v| {
-                scope.spawn(move || run_cell(rt, base, model_ref, dataset, axis, v, init_params))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("sweep worker panicked"))))
-            .collect()
+    let results: Vec<Result<SweepCell>> = pool.scatter(grid.len(), |i| {
+        run_cell(rt, pool, base, &model, dataset, axis, grid[i], init_params)
     });
     results.into_iter().collect()
 }
@@ -136,7 +135,7 @@ mod tests {
     fn parallel_sweep_preserves_grid_order_and_pairs_runs() {
         // two tiny cells on the native backend; results must come back in
         // grid order and a repeated sweep must be bit-identical (paired
-        // seeds + shared init)
+        // seeds + shared init) — including across pool sizes
         let rt = Runtime::native();
         let ds = crate::data::tasks::generate_sized("rte", 5, 48, 16, 16).unwrap();
         let mut cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
@@ -144,8 +143,10 @@ mod tests {
         cfg.eval_every = 0;
         cfg.eval_cap = 8;
         let grid = [1e-4, 3e-4];
-        let a = sweep(&rt, &cfg, &ds, SweepAxis::LearningRate, &grid, None).unwrap();
-        let b = sweep(&rt, &cfg, &ds, SweepAxis::LearningRate, &grid, None).unwrap();
+        let pool = WorkerPool::new(2);
+        let serial = WorkerPool::new(0);
+        let a = sweep(&rt, &pool, &cfg, &ds, SweepAxis::LearningRate, &grid, None).unwrap();
+        let b = sweep(&rt, &serial, &cfg, &ds, SweepAxis::LearningRate, &grid, None).unwrap();
         assert_eq!(a.len(), 2);
         assert_eq!(a[0].value, 1e-4);
         assert_eq!(a[1].value, 3e-4);

@@ -15,7 +15,8 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::evaluator::{self, EvalResult};
 use crate::coordinator::schedule::Schedule;
 use crate::data::batcher::TrainLoader;
-use crate::data::{tasks, Dataset};
+use crate::data::{tasks, Dataset, Example};
+use crate::parallel::{eval as peval, WorkerPool};
 use crate::runtime::exec::{Hypers, InitExec, LogitsExec, StepExec, StepMetrics, ThreshExec};
 use crate::runtime::{Runtime, TrainState};
 use crate::util::json::Json;
@@ -70,6 +71,34 @@ impl TrainResult {
 /// (Fig. 2a's divergence detection; ln(512) ~ 6.24 is the uniform loss).
 pub const DIVERGENCE_LOSS: f32 = 9.0;
 
+/// Resolve a run's initial parameters: explicit override first, then a
+/// configured checkpoint, then the deterministic `init` program. Shared
+/// by the serial [`Trainer`] and the data-parallel
+/// [`DpTrainer`](crate::parallel::dp::DpTrainer) so both start from the
+/// same bits for the same config.
+pub(crate) fn resolve_initial_params(
+    rt: &Runtime,
+    cfg: &TrainConfig,
+    initial_override: &Option<Vec<f32>>,
+    model: &crate::runtime::ModelInfo,
+) -> Result<Vec<f32>> {
+    if let Some(p) = initial_override {
+        if p.len() != model.n_params {
+            bail!("initial_override has {} params, model expects {}", p.len(), model.n_params);
+        }
+        return Ok(p.clone());
+    }
+    if let Some(path) = &cfg.init_from {
+        let ck = Checkpoint::load(&PathBuf::from(path), model)
+            .with_context(|| format!("loading init checkpoint {path}"))?;
+        crate::info!("initialized from checkpoint {path} (step {})", ck.step);
+        Ok(ck.params)
+    } else {
+        let init = InitExec::load(rt, model)?;
+        init.run(rt, (cfg.seed as u32, 0x1717))
+    }
+}
+
 /// Driver for one training run.
 pub struct Trainer<'rt> {
     /// the runtime (and through it, the compute backend) to train on
@@ -85,6 +114,10 @@ pub struct Trainer<'rt> {
     /// explicit initial parameters (pretrained weights shared across a
     /// whole experiment table) — takes precedence over cfg.init_from
     pub initial_override: Option<Vec<f32>>,
+    /// shard evaluation passes across this pool when set (training steps
+    /// stay serial; use [`DpTrainer`](crate::parallel::dp::DpTrainer)
+    /// for data-parallel stepping)
+    pub pool: Option<&'rt WorkerPool>,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -97,6 +130,7 @@ impl<'rt> Trainer<'rt> {
             jsonl: None,
             eval_test: true,
             initial_override: None,
+            pool: None,
         }
     }
 
@@ -106,23 +140,30 @@ impl<'rt> Trainer<'rt> {
         Ok(self)
     }
 
+    /// Shard evaluation passes across `pool` (bit-identical results to
+    /// serial evaluation; only the schedule changes).
+    pub fn with_pool(mut self, pool: &'rt WorkerPool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Evaluate through the pool when one is attached, serially otherwise.
+    fn evaluate(
+        &self,
+        logits: &LogitsExec,
+        params: &[f32],
+        examples: &[Example],
+        cap: usize,
+    ) -> Result<EvalResult> {
+        match self.pool {
+            Some(pool) => peval::evaluate_sharded(self.rt, pool, logits, params, examples, cap),
+            None => evaluator::evaluate(self.rt, logits, params, examples, cap),
+        }
+    }
+
     /// Resolve initial parameters: checkpoint if configured, else `init`.
     fn initial_params(&self, model: &crate::runtime::ModelInfo) -> Result<Vec<f32>> {
-        if let Some(p) = &self.initial_override {
-            if p.len() != model.n_params {
-                bail!("initial_override has {} params, model expects {}", p.len(), model.n_params);
-            }
-            return Ok(p.clone());
-        }
-        if let Some(path) = &self.cfg.init_from {
-            let ck = Checkpoint::load(&PathBuf::from(path), model)
-                .with_context(|| format!("loading init checkpoint {path}"))?;
-            crate::info!("initialized from checkpoint {path} (step {})", ck.step);
-            Ok(ck.params)
-        } else {
-            let init = InitExec::load(self.rt, model)?;
-            init.run(self.rt, (self.cfg.seed as u32, 0x1717))
-        }
+        resolve_initial_params(self.rt, &self.cfg, &self.initial_override, model)
     }
 
     /// Resolve the model + dataset from the config and run.
@@ -218,7 +259,7 @@ impl<'rt> Trainer<'rt> {
             let is_last = t + 1 == cfg.steps;
             if (cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0) || is_last {
                 let p = state.params_host(self.rt)?;
-                let dev = evaluator::evaluate(self.rt, &logits, &p, &dataset.dev, cfg.eval_cap)?;
+                let dev = self.evaluate(&logits, &p, &dataset.dev, cfg.eval_cap)?;
                 curve.push(CurvePoint {
                     step: t + 1,
                     dev_accuracy: dev.accuracy(),
@@ -251,7 +292,7 @@ impl<'rt> Trainer<'rt> {
             mean_loss: c.dev_loss,
         });
         let test = if self.eval_test && !diverged {
-            Some(evaluator::evaluate(self.rt, &logits, &params, &dataset.test, 0)?)
+            Some(self.evaluate(&logits, &params, &dataset.test, 0)?)
         } else {
             None
         };

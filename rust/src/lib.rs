@@ -31,6 +31,9 @@
 //! * [`coordinator`] — trainer, evaluator, LR schedules, parallel sweeps,
 //!   convergence tracking, the Fig-2b/4 generalization probe, memory
 //!   model (Table 4), checkpoints, experiment registry, report rendering.
+//! * [`parallel`] — the worker pool (the crate's one scheduler), the
+//!   seed-sync data-parallel trainer, sharded evaluation, and the
+//!   step-exchange protocol + replayable journal.
 //! * [`bench`] — the timing harness used by `cargo bench` targets.
 
 #![warn(missing_docs)]
@@ -39,6 +42,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod parallel;
 pub mod runtime;
 pub mod util;
 pub mod zo;

@@ -26,6 +26,7 @@ use sparse_mezo::coordinator::trainer::{in_context, zero_shot, Trainer};
 use sparse_mezo::coordinator::report::Table;
 use sparse_mezo::data::tasks;
 use sparse_mezo::info;
+use sparse_mezo::parallel::{DpTrainer, WorkerPool};
 use sparse_mezo::runtime::Runtime;
 use sparse_mezo::util::cli::Args;
 use sparse_mezo::util::json::Json;
@@ -40,10 +41,13 @@ COMMANDS
   pretrain        --model M --steps N --lr X --seed S
   train           --model M --task T --optimizer O [--steps N --lr X
                   --eps X --sparsity X --seed S --eval-every N
-                  --init-from CKPT --save CKPT --config FILE.toml]
+                  --init-from CKPT --save CKPT --config FILE.toml
+                  --workers N --journal FILE --mask-refresh N]
+                  (--workers > 1 routes ZO runs through the seed-sync
+                  data-parallel engine; bit-identical to --workers 1)
   eval            --model M --task T [--ckpt CKPT --icl-shots K]
   sweep           --model M --task T --optimizer O --axis lr|sparsity
-                  [--grid a,b,c --steps N]
+                  [--grid a,b,c --steps N --workers N]
   probe           --model M --task T --optimizer O [--steps N]
   repro           <table1|table2|table3|table4|table5|table10|table11|
                    table13|fig1|fig2a|fig2b|fig2c|fig3|fig4|all>
@@ -149,23 +153,36 @@ fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.eval_every = args.usize_or("eval-every", 200)?;
     cfg.eval_cap = args.usize_or("eval-cap", 200)?;
+    cfg.workers = args.workers_or(cfg.workers)?;
     cfg.init_from = args.get("init-from").map(|s| s.to_string()).or(cfg.init_from);
     cfg.validate()?;
 
     let model_info = rt.model(&cfg.model)?.clone();
     let dataset = tasks::generate(&cfg.task, cfg.seed)?;
     info!(
-        "train: {} | {} params | task {} (majority {:.3})",
+        "train: {} | {} params | task {} (majority {:.3}) | workers {}",
         cfg.label(),
         model_info.n_params,
         cfg.task,
-        dataset.majority_baseline()
+        dataset.majority_baseline(),
+        cfg.workers
     );
     let result = if optimizer == "mezo_lora" || optimizer == "lora_fo" {
         let mut t = LoraTrainer::new(&rt, cfg.clone());
         if let Some(ckpt) = &cfg.init_from {
             t.base_params = Some(Checkpoint::load(&PathBuf::from(ckpt), &model_info)?.params);
         }
+        t.run_on(&model_info, &dataset)?
+    } else if cfg.workers > 1 {
+        // seed-sync data-parallel engine: N replicas, scalar exchange,
+        // step journal for crash recovery / audit
+        let pool = WorkerPool::new(cfg.workers);
+        let journal = PathBuf::from(
+            args.str_or("journal", &format!("results/runs/{}.journal.jsonl", cfg.label())),
+        );
+        let mut t = DpTrainer::new(&rt, &pool, cfg.clone()).with_journal(&journal);
+        t.eval_test = !args.flag("no-test-eval");
+        t.mask_refresh = args.usize_or("mask-refresh", 0)?;
         t.run_on(&model_info, &dataset)?
     } else {
         let jsonl = PathBuf::from(format!("results/runs/{}.jsonl", cfg.label()));
@@ -248,7 +265,10 @@ fn cmd_sweep(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.eval_cap = args.usize_or("eval-cap", 200)?;
     cfg.seed = args.u64_or("seed", 17)?;
     let dataset = tasks::generate(&task, 1234)?;
-    let cells = sweep::sweep(&rt, &cfg, &dataset, axis, &grid, None)?;
+    // pool sized to the grid by default (the pre-pool behavior: every
+    // cell concurrent); --workers caps it
+    let pool = WorkerPool::new(args.workers_or(grid.len().max(1))?);
+    let cells = sweep::sweep(&rt, &pool, &cfg, &dataset, axis, &grid, None)?;
     let mut table = Table::new(
         &format!("sweep {axis:?} — {model}/{task}/{optimizer}"),
         &["value", "best dev", "test", "diverged"],

@@ -1,0 +1,404 @@
+//! Seed-sync data-parallel ZO training.
+//!
+//! ZO training has a property no first-order method shares: a full
+//! MeZO/Sparse-MeZO step is completely described by its `(seed, g)`
+//! pair, so data-parallel workers stay bit-identical by exchanging a
+//! few bytes per step instead of gradients. The engine:
+//!
+//! 1. generates the step's perturbation noise `z` **once** from the
+//!    shared step seed (sharded across the pool — chunk-invariant by
+//!    the counter-PRNG contract) and the step mask once from the
+//!    (identical) unperturbed replicas;
+//! 2. **phase A** — each of the N workers perturbs its own parameter
+//!    replica `+eps`/`-2eps` in place and scores the two forward passes
+//!    on its `B/N`-row microbatch shard, returning *per-row* f64 losses;
+//! 3. **all-reduce** — the per-row losses are folded in canonical row
+//!    order into `l_plus`/`l_minus` and the projected-gradient scalar
+//!    `g = (l+ - l-)/(2 eps)`. The canonical fold is what makes every
+//!    worker count produce the same bits as a serial
+//!    [`Trainer`](crate::coordinator::trainer::Trainer) step — means of
+//!    shard-means would not;
+//! 4. **phase B** — every replica applies the identical fused
+//!    restore+update `theta += eps*z - lr*g*(m (.) z)` locally. No
+//!    parameter ever crosses a worker boundary.
+//!
+//! Each step's `(step, seed, g, mask_epoch)` record goes to the
+//! [`protocol`](super::protocol) journal, which replays to bit-identical
+//! final parameters without forward passes (crash recovery / audit).
+//!
+//! Scope: the stateless-mask ZO family (`mezo`, `smezo`, `smezo_large`,
+//! `rmezo`) with a constant learning rate — the paper's methods.
+//! Slot-stateful optimizers (momentum/Adam/stored-mask) would need
+//! replicated slot blocks and are left on the serial trainer.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::evaluator::EvalResult;
+use crate::coordinator::trainer::{self, CurvePoint, TrainResult, DIVERGENCE_LOSS};
+use crate::data::batcher::TrainLoader;
+use crate::data::{tasks, Dataset};
+use crate::runtime::exec::LogitsExec;
+use crate::runtime::{ModelInfo, Runtime};
+use crate::util::json::Json;
+use crate::util::stats::Ema;
+
+use super::eval;
+use super::pool::WorkerPool;
+use super::protocol::{JournalWriter, StepRecord};
+
+/// Optimizers the DP engine supports (stateless step masks only).
+pub fn dp_supported(optimizer: &str) -> bool {
+    matches!(optimizer, "mezo" | "smezo" | "smezo_large" | "rmezo")
+}
+
+/// `params[i] += scale * z[i]` over unmasked coordinates — the Alg.-2
+/// seed-replay perturbation, expression-for-expression identical to the
+/// serial walk so DP trajectories match serial ones bit-for-bit.
+pub(crate) fn perturb_in_place(params: &mut [f32], z: &[f32], mask: Option<&[u8]>, scale: f32) {
+    match mask {
+        Some(m) => {
+            for ((pv, &zv), &mv) in params.iter_mut().zip(z).zip(m) {
+                if mv != 0 {
+                    *pv += scale * zv;
+                }
+            }
+        }
+        None => {
+            for (pv, &zv) in params.iter_mut().zip(z) {
+                *pv += scale * zv;
+            }
+        }
+    }
+}
+
+/// The fused restore+update from the minus-perturbed point (`Rule::Sgd`
+/// of the serial walk): `u = lr*g*z; params += eps*z - u` on unmasked
+/// coordinates. Returns the squared L2 norm of the applied update.
+pub(crate) fn apply_sgd_update(
+    params: &mut [f32],
+    z: &[f32],
+    mask: Option<&[u8]>,
+    eps: f32,
+    lr: f32,
+    g: f32,
+) -> f32 {
+    let mut norm = 0.0f32;
+    match mask {
+        Some(m) => {
+            for ((pv, &zv), &mv) in params.iter_mut().zip(z).zip(m) {
+                if mv != 0 {
+                    let u = lr * g * zv;
+                    *pv += eps * zv - u;
+                    norm += u * u;
+                }
+            }
+        }
+        None => {
+            for (pv, &zv) in params.iter_mut().zip(z) {
+                let u = lr * g * zv;
+                *pv += eps * zv - u;
+                norm += u * u;
+            }
+        }
+    }
+    norm
+}
+
+/// Driver for one seed-sync data-parallel training run. Mirrors
+/// [`Trainer`](crate::coordinator::trainer::Trainer)'s policy surface
+/// (initial override, test eval, curve/divergence handling) and returns
+/// the same [`TrainResult`] so reports and sweeps are interchangeable.
+pub struct DpTrainer<'rt> {
+    /// the runtime (and through it, the compute backend) to train on
+    pub rt: &'rt Runtime,
+    /// shared scheduler for DP phases and sharded evaluation
+    pub pool: &'rt WorkerPool,
+    /// fully-resolved run configuration (`cfg.workers` = replica count)
+    pub cfg: TrainConfig,
+    /// write the step-exchange journal here if set
+    pub journal_path: Option<PathBuf>,
+    /// evaluate on test at the end
+    pub eval_test: bool,
+    /// explicit initial parameters (takes precedence over cfg.init_from)
+    pub initial_override: Option<Vec<f32>>,
+    /// recompute §8.2 thresholds from live params every N steps
+    /// (0 = never, matching the serial trainer); each refresh bumps the
+    /// journal's `mask_epoch`
+    pub mask_refresh: usize,
+}
+
+impl<'rt> DpTrainer<'rt> {
+    /// A DP trainer with default policy: no journal, test eval at the
+    /// end, thresholds fixed at init (serial-trainer parity).
+    pub fn new(rt: &'rt Runtime, pool: &'rt WorkerPool, cfg: TrainConfig) -> DpTrainer<'rt> {
+        DpTrainer {
+            rt,
+            pool,
+            cfg,
+            journal_path: None,
+            eval_test: true,
+            initial_override: None,
+            mask_refresh: 0,
+        }
+    }
+
+    /// Stream `(step, seed, g, mask_epoch)` records to a journal file.
+    pub fn with_journal(mut self, path: &std::path::Path) -> DpTrainer<'rt> {
+        self.journal_path = Some(path.to_path_buf());
+        self
+    }
+
+    /// Resolve the model + dataset from the config and run.
+    pub fn run(&mut self) -> Result<TrainResult> {
+        let cfg = self.cfg.clone();
+        cfg.validate()?;
+        let model = self.rt.model(&cfg.model)?.clone();
+        let dataset = tasks::generate(&cfg.task, cfg.seed)?;
+        self.run_on(&model, &dataset)
+    }
+
+    /// Run against an explicit dataset (paired-comparison harnesses
+    /// share one dataset across methods and worker counts).
+    pub fn run_on(&mut self, model: &ModelInfo, dataset: &Dataset) -> Result<TrainResult> {
+        let cfg = self.cfg.clone();
+        cfg.validate()?;
+        let n = cfg.workers.max(1);
+        if !dp_supported(&cfg.optimizer) {
+            bail!(
+                "data-parallel training supports the mezo/smezo/smezo_large/rmezo family, \
+                 not '{}' (use the serial trainer)",
+                cfg.optimizer
+            );
+        }
+        if model.batch % n != 0 {
+            bail!("workers {n} must divide the model batch size {}", model.batch);
+        }
+        let backend = self.rt.backend();
+        let t_total = Instant::now();
+
+        // ---- setup ---------------------------------------------------------
+        let params = trainer::resolve_initial_params(self.rt, &cfg, &self.initial_override, model)?;
+        let mut thresholds = backend.thresholds(model, &params, cfg.hypers.sparsity)?;
+        let logits = LogitsExec::load(self.rt, model)?;
+        let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, cfg.seed)?;
+        let p = model.n_params;
+        let rows_per = model.batch / n;
+        let shard_tok = rows_per * model.seq_len;
+        let eps = cfg.hypers.eps;
+        let lr = cfg.hypers.lr;
+
+        // N full parameter replicas; seed-sync keeps them bit-identical
+        // forever, which the end-of-run drift check asserts
+        let replicas: Vec<Mutex<Vec<f32>>> = (0..n).map(|_| Mutex::new(params.clone())).collect();
+
+        let mut journal = match &self.journal_path {
+            Some(path) => Some(JournalWriter::create(
+                path,
+                vec![
+                    ("label", Json::Str(cfg.label())),
+                    ("model", Json::Str(cfg.model.clone())),
+                    ("task", Json::Str(cfg.task.clone())),
+                    ("optimizer", Json::Str(cfg.optimizer.clone())),
+                    ("workers", Json::Num(n as f64)),
+                    ("seed", Json::Num(cfg.seed as f64)),
+                    ("steps", Json::Num(cfg.steps as f64)),
+                    ("mask_refresh", Json::Num(self.mask_refresh as f64)),
+                    // the hypers replay needs; check_compatible() verifies
+                    // them against the replaying config
+                    ("lr", Json::Num(cfg.hypers.lr as f64)),
+                    ("eps", Json::Num(cfg.hypers.eps as f64)),
+                    ("sparsity", Json::Num(cfg.hypers.sparsity as f64)),
+                ],
+            )?),
+            None => None,
+        };
+
+        // ---- loop ----------------------------------------------------------
+        let mut curve = Vec::new();
+        let mut train_losses = Vec::with_capacity(cfg.steps);
+        let mut ema = Ema::new(0.95);
+        let mut diverged = false;
+        let mut step_seconds = 0.0f64;
+        let mut mask_epoch = 0u32;
+
+        for t in 0..cfg.steps {
+            let batch = loader.next_batch();
+            let seed = (cfg.seed as u32, t as u32);
+            let t0 = Instant::now();
+
+            if self.mask_refresh > 0 && t > 0 && t % self.mask_refresh == 0 {
+                let master = replicas[0].lock().unwrap();
+                thresholds = backend.thresholds(model, &master, cfg.hypers.sparsity)?;
+                mask_epoch += 1;
+            }
+
+            // shared step noise, generated once and sharded across the
+            // pool (chunk boundaries are free to vary: zo_noise is
+            // chunk-invariant by the counter-PRNG offset contract)
+            let chunks = self.pool.parallelism().min(p).max(1);
+            let chunk_len = (p + chunks - 1) / chunks;
+            let parts = self.pool.scatter(chunks, |c| {
+                let lo = (c * chunk_len).min(p);
+                let hi = ((c + 1) * chunk_len).min(p);
+                if lo >= hi {
+                    Ok(Vec::new())
+                } else {
+                    backend.zo_noise(model, seed, lo, hi)
+                }
+            });
+            let mut z = Vec::with_capacity(p);
+            for part in parts {
+                z.extend(part?);
+            }
+
+            // step mask from the unperturbed (identical) replicas
+            let mask = {
+                let master = replicas[0].lock().unwrap();
+                backend.zo_mask(model, &cfg.optimizer, &cfg.hypers, &thresholds, &master)?
+            };
+            let masked_frac = match &mask {
+                Some(m) => m.iter().map(|&x| x as usize).sum::<usize>() as f32 / p as f32,
+                None => 1.0,
+            };
+
+            // phase A: perturb replicas +eps/-2eps, score microbatch shards
+            let shard_losses = self.pool.scatter(n, |j| -> Result<(Vec<f64>, Vec<f64>)> {
+                let mut replica = replicas[j].lock().unwrap();
+                let tokens = &batch.tokens[j * shard_tok..(j + 1) * shard_tok];
+                let labels = &batch.labels[j * rows_per..(j + 1) * rows_per];
+                perturb_in_place(&mut replica, &z, mask.as_deref(), eps);
+                let rows_plus = backend.row_losses(model, &replica, tokens, labels)?;
+                perturb_in_place(&mut replica, &z, mask.as_deref(), -2.0 * eps);
+                let rows_minus = backend.row_losses(model, &replica, tokens, labels)?;
+                Ok((rows_plus, rows_minus))
+            });
+
+            // all-reduce: canonical row-order f64 fold, then the same f32
+            // casts a serial step performs — worker-count-invariant bits
+            let mut sum_plus = 0.0f64;
+            let mut sum_minus = 0.0f64;
+            let mut rows = 0usize;
+            for shard in shard_losses {
+                let (rp, rm) = shard?;
+                for &v in &rp {
+                    sum_plus += v;
+                }
+                for &v in &rm {
+                    sum_minus += v;
+                }
+                rows += rp.len();
+            }
+            let l_plus = (sum_plus / rows.max(1) as f64) as f32;
+            let l_minus = (sum_minus / rows.max(1) as f64) as f32;
+            let g = (l_plus - l_minus) / (2.0 * eps);
+            let train_loss = 0.5 * (l_plus + l_minus);
+
+            if !g.is_finite() {
+                // a NaN scalar would both poison every replica and break
+                // the JSON journal; stop before exchanging it
+                crate::info!("[{}] DIVERGED at step {t} (non-finite g)", cfg.label());
+                diverged = true;
+                break;
+            }
+            if let Some(w) = &mut journal {
+                w.record(&StepRecord { step: t as u32, seed, scalar: g, mask_epoch })?;
+            }
+
+            // phase B: identical masked update on every replica — the
+            // whole exchange was the scalar g
+            let norms = self.pool.scatter(n, |j| {
+                let mut replica = replicas[j].lock().unwrap();
+                apply_sgd_update(&mut replica, &z, mask.as_deref(), eps, lr, g)
+            });
+            let update_norm_sq = norms.first().copied().unwrap_or(0.0);
+            step_seconds += t0.elapsed().as_secs_f64();
+
+            train_losses.push(train_loss);
+            let smoothed = ema.update(train_loss as f64);
+            if cfg.log_every > 0 && t % (cfg.log_every * 10) == 0 {
+                crate::debug!(
+                    "[{} dp{n}] step {t}/{} loss {train_loss:.4} (ema {smoothed:.4}) g {g:.3} \
+                     masked {masked_frac:.3} |u|^2 {update_norm_sq:.3e}",
+                    cfg.label(),
+                    cfg.steps,
+                );
+            }
+
+            // divergence detection (Fig. 2a), after the update like the
+            // serial trainer
+            if !train_loss.is_finite() || train_loss > DIVERGENCE_LOSS {
+                crate::info!("[{}] DIVERGED at step {t} (loss {train_loss})", cfg.label());
+                diverged = true;
+                break;
+            }
+
+            // periodic dev evaluation, sharded over the same pool
+            let is_last = t + 1 == cfg.steps;
+            if (cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0) || is_last {
+                let p_host = replicas[0].lock().unwrap().clone();
+                let dev = eval::evaluate_sharded(
+                    self.rt,
+                    self.pool,
+                    &logits,
+                    &p_host,
+                    &dataset.dev,
+                    cfg.eval_cap,
+                )?;
+                curve.push(CurvePoint {
+                    step: t + 1,
+                    dev_accuracy: dev.accuracy(),
+                    dev_loss: dev.mean_loss,
+                    train_loss_ema: smoothed,
+                });
+                if let Some(w) = &mut journal {
+                    w.flush()?;
+                }
+                crate::info!(
+                    "[{} dp{n}] step {}/{} dev acc {:.3} loss {:.3}",
+                    cfg.label(),
+                    t + 1,
+                    cfg.steps,
+                    dev.accuracy(),
+                    dev.mean_loss
+                );
+            }
+        }
+
+        // ---- final check + evaluation --------------------------------------
+        let params = replicas[0].lock().unwrap().clone();
+        for (j, replica) in replicas.iter().enumerate().skip(1) {
+            let replica = replica.lock().unwrap();
+            let drifted = replica.iter().zip(&params).any(|(a, b)| a.to_bits() != b.to_bits());
+            if drifted {
+                bail!("replica {j} drifted from replica 0 — seed-sync invariant broken");
+            }
+        }
+        let final_dev = curve.last().map(|c| EvalResult { n: 0, correct: 0, mean_loss: c.dev_loss });
+        let test = if self.eval_test && !diverged {
+            Some(eval::evaluate_sharded(self.rt, self.pool, &logits, &params, &dataset.test, 0)?)
+        } else {
+            None
+        };
+        if let Some(w) = &mut journal {
+            w.flush()?;
+        }
+        let steps_run = train_losses.len();
+        Ok(TrainResult {
+            config_label: cfg.label(),
+            steps_run,
+            curve,
+            final_dev,
+            test,
+            diverged,
+            wallclock_s: t_total.elapsed().as_secs_f64(),
+            sec_per_step: step_seconds / steps_run.max(1) as f64,
+            params,
+            train_losses,
+        })
+    }
+}

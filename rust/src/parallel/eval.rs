@@ -1,0 +1,50 @@
+//! Sharded evaluation: split eval batches across the worker pool.
+//!
+//! Evaluation batches are embarrassingly parallel — every batch is an
+//! independent `logits` call plus host-side candidate scoring — so the
+//! pool turns an eval pass's wall-clock into roughly
+//! `ceil(batches / parallelism)` batch latencies. Per-batch results are
+//! *folded in batch order with the exact running-mean formula of the
+//! serial evaluator*, so a sharded pass returns bit-identical numbers
+//! to [`evaluator::evaluate`](crate::coordinator::evaluator::evaluate)
+//! regardless of worker count or completion order (asserted in
+//! `tests/parallel.rs`).
+
+use anyhow::Result;
+
+use crate::coordinator::evaluator::{score_batch, EvalResult};
+use crate::data::batcher::eval_batches;
+use crate::data::Example;
+use crate::runtime::exec::LogitsExec;
+use crate::runtime::Runtime;
+
+use super::pool::WorkerPool;
+
+/// Evaluate `params` over `examples`, sharding batches across `pool`.
+/// Semantics (cap, candidate scoring, running-mean fold) are identical
+/// to the serial evaluator; only the schedule differs.
+pub fn evaluate_sharded(
+    rt: &Runtime,
+    pool: &WorkerPool,
+    logits: &LogitsExec,
+    params: &[f32],
+    examples: &[Example],
+    cap: usize,
+) -> Result<EvalResult> {
+    let slice = if cap > 0 && cap < examples.len() { &examples[..cap] } else { examples };
+    let batches = eval_batches(slice, logits.batch, logits.seq_len);
+    let shards = pool.scatter(batches.len(), |i| -> Result<EvalResult> {
+        let lg = logits.run(rt, params, &batches[i].tokens)?;
+        Ok(score_batch(&lg, logits.vocab, &batches[i]))
+    });
+    // fold in batch order with the serial evaluator's exact formula
+    let mut total = EvalResult { n: 0, correct: 0, mean_loss: 0.0 };
+    for shard in shards {
+        let r = shard?;
+        total.mean_loss = (total.mean_loss * total.n as f64 + r.mean_loss * r.n as f64)
+            / (total.n + r.n).max(1) as f64;
+        total.n += r.n;
+        total.correct += r.correct;
+    }
+    Ok(total)
+}

@@ -1,0 +1,33 @@
+//! The parallel execution layer: one scheduler, three workloads.
+//!
+//! * [`pool`] — the persistent [`WorkerPool`](pool::WorkerPool):
+//!   crossbeam-style MPMC task queue over `std` primitives, scoped
+//!   borrows, caller participation (nesting-safe), panic transparency.
+//!   Sweep grid cells, DP replica phases and eval shards all schedule
+//!   through it — there is no other thread fan-out in the crate.
+//! * [`dp`] — the seed-sync data-parallel trainer
+//!   ([`DpTrainer`](dp::DpTrainer)): N parameter replicas, two forward
+//!   passes per microbatch shard, an all-reduce of *per-row losses* into
+//!   one projected-gradient scalar, and the identical masked update
+//!   applied locally from the shared seed. Bytes exchanged per step:
+//!   one `(seed, g)` pair — never a parameter.
+//! * [`eval`] — sharded evaluation over the pool, bit-identical to the
+//!   serial evaluator by a canonical batch-order fold.
+//! * [`protocol`] — the `(step, seed, g, mask_epoch)` step-exchange
+//!   record, its JSONL journal, and the forward-pass-free
+//!   [`replay`](protocol::replay) used for crash recovery and audit.
+//!
+//! Why this shape works: MeZO's update is a rank-one function of a
+//! scalar and a PRNG seed (paper Alg. 1–2), so the classic DP cost —
+//! shipping gradients or averaged parameters — vanishes. The engine
+//! exploits that to keep N workers bit-identical to the 1-worker (and
+//! serial-trainer) trajectory, which `tests/parallel.rs` asserts
+//! bit-for-bit.
+
+pub mod dp;
+pub mod eval;
+pub mod pool;
+pub mod protocol;
+
+pub use dp::DpTrainer;
+pub use pool::WorkerPool;

@@ -1,0 +1,276 @@
+//! The persistent worker pool — one scheduler for every parallel axis.
+//!
+//! A fixed set of threads drain a shared FIFO of closures; `scatter` is
+//! the single entry point: fan an indexed closure out over the pool and
+//! block until every piece has finished. Three properties make it safe
+//! to use as the *only* scheduler in the crate (sweep cells, DP replica
+//! phases and eval shards all go through it, replacing the ad-hoc
+//! `std::thread::scope` fan-out of the pre-parallel sweep driver):
+//!
+//! * **Caller participation** — the calling thread drains the queue too,
+//!   so `scatter` from inside a pool task (a sweep cell sharding its
+//!   evaluation, say) can never deadlock: every `scatter` contributes at
+//!   least its own thread to the work it enqueued. A zero-thread pool
+//!   degenerates to serial in-line execution.
+//! * **Scoped borrows** — closures may borrow from the caller's stack
+//!   (`&Runtime`, datasets, replicas). `scatter` guarantees the borrow
+//!   outlives every task by not returning until the completion count
+//!   hits zero; the lifetime erasure this needs is confined to
+//!   [`erase`], the one `unsafe` block in the crate.
+//! * **Panic transparency** — a panicking task never kills a pool
+//!   thread; the payload is carried back and re-thrown on the calling
+//!   thread, matching `std::thread::scope` semantics.
+//!
+//! Channels are crossbeam-style in shape (MPMC queue + blocking pop)
+//! but built on `std` primitives only: a `Mutex<VecDeque>` plus a
+//! `Condvar`, which at this workload's task granularity (milliseconds
+//! of compute per task) is nowhere near contention.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// A queued unit of work.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Queue + wakeup shared between the pool handle and its threads.
+struct Inner {
+    queue: Mutex<VecDeque<Task>>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Inner {
+    /// Non-blocking pop; the queue lock is released before returning so
+    /// the popped task can itself touch the queue (nested `scatter`).
+    fn try_pop(&self) -> Option<Task> {
+        self.queue.lock().unwrap().pop_front()
+    }
+}
+
+/// Erase a scoped task's lifetime so it can ride the `'static` queue.
+///
+/// SAFETY contract (upheld by [`WorkerPool::scatter`], the only caller):
+/// the closure borrows only from a stack frame that blocks until the
+/// task has *finished running* — tasks are never dropped unexecuted
+/// while a scatter is pending (workers and the scatter caller pop until
+/// the queue is empty, and `WorkerPool` can't be dropped mid-call
+/// because `scatter` holds `&self`).
+fn erase<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    // SAFETY: see above — the borrow checker can't see that `scatter`
+    // joins on completion before its frame unwinds, exactly the
+    // obligation `std::thread::scope` discharges the same way.
+    unsafe { std::mem::transmute(task) }
+}
+
+/// Per-scatter completion state: one result slot per task plus a latch.
+struct Scatter<T> {
+    slots: Vec<Mutex<Option<thread::Result<T>>>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+/// The persistent worker pool. See the module docs for the contract.
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// A pool with `threads` worker threads. `0` is valid: every
+    /// `scatter` then runs entirely on the calling thread, which is the
+    /// serial baseline the DP bit-identity tests compare against.
+    pub fn new(threads: usize) -> WorkerPool {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                thread::Builder::new()
+                    .name(format!("smz-pool-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { inner, handles }
+    }
+
+    /// Number of pool threads (excluding participating callers).
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Machine-sized default thread count: one per available core (the
+    /// participating caller rides on top). Used where no `--workers`
+    /// knob reaches, e.g. the repro harness's sweeps.
+    pub fn default_size() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    /// Executors available to one `scatter`: pool threads + the caller.
+    pub fn parallelism(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run `f(0), f(1), …, f(n-1)` across the pool and the calling
+    /// thread, returning results in index order. Blocks until all `n`
+    /// complete; re-throws the first task panic on the caller.
+    pub fn scatter<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.handles.is_empty() {
+            // no workers: plain serial map, no queue traffic
+            return (0..n).map(f).collect();
+        }
+        let state = Scatter::<T> {
+            slots: (0..n).map(|_| Mutex::new(None)).collect(),
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+        };
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            for i in 0..n {
+                let state = &state;
+                let f = &f;
+                q.push_back(erase(Box::new(move || {
+                    let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+                    *state.slots[i].lock().unwrap() = Some(result);
+                    let mut remaining = state.remaining.lock().unwrap();
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        state.done.notify_all();
+                    }
+                })));
+            }
+        }
+        self.inner.ready.notify_all();
+
+        // caller participation: drain the queue (our tasks and, under
+        // nesting, anyone else's) until it runs dry …
+        while let Some(task) = self.inner.try_pop() {
+            task();
+        }
+        // … then wait out stragglers still running on pool threads
+        let mut remaining = state.remaining.lock().unwrap();
+        while *remaining > 0 {
+            remaining = state.done.wait(remaining).unwrap();
+        }
+        drop(remaining);
+
+        state
+            .slots
+            .into_iter()
+            .map(|slot| match slot.into_inner().unwrap() {
+                Some(Ok(v)) => v,
+                Some(Err(payload)) => resume_unwind(payload),
+                None => unreachable!("scatter latch released with an unfilled slot"),
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker thread body: pop-and-run until shutdown.
+fn worker_loop(inner: &Inner) {
+    loop {
+        let mut guard = inner.queue.lock().unwrap();
+        let task = loop {
+            if let Some(t) = guard.pop_front() {
+                break t;
+            }
+            if inner.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            guard = inner.ready.wait(guard).unwrap();
+        };
+        drop(guard);
+        // scatter's closure already catch_unwinds the user payload; this
+        // outer guard is belt-and-braces so a slot/latch bug can never
+        // take a pool thread down with it.
+        let _ = catch_unwind(AssertUnwindSafe(task));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scatter_returns_in_index_order() {
+        let pool = WorkerPool::new(3);
+        let out = pool.scatter(17, |i| i * i);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.parallelism(), 1);
+        assert_eq!(pool.scatter(4, |i| i + 1), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scatter_runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        let out = pool.scatter(100, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            1usize
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert_eq!(out.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn nested_scatter_does_not_deadlock() {
+        // every cell shards inner work through the same pool — the shared
+        // scheduler the sweep/DP/eval stack relies on
+        let pool = WorkerPool::new(2);
+        let out = pool.scatter(4, |i| pool.scatter(3, |j| i * 10 + j).iter().sum::<usize>());
+        assert_eq!(out, vec![3, 33, 63, 93]);
+    }
+
+    #[test]
+    fn scatter_borrows_caller_stack() {
+        let pool = WorkerPool::new(2);
+        let data: Vec<u64> = (0..64).collect();
+        let sum = pool.scatter(8, |i| data[i * 8..(i + 1) * 8].iter().sum::<u64>());
+        assert_eq!(sum.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn panicking_task_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.scatter(4, |i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(caught.is_err());
+        // the pool is still serviceable afterwards
+        assert_eq!(pool.scatter(3, |i| i), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,228 @@
+//! The seed-sync step-exchange protocol.
+//!
+//! A full MeZO/Sparse-MeZO step is completely described by its
+//! `(perturbation seed, projected-gradient scalar)` pair: every worker
+//! regenerates the same `z` from the seed, computes the same mask from
+//! its (identical) replica, and applies the same masked update — so the
+//! only state that ever crosses a worker boundary is a [`StepRecord`],
+//! a few bytes per step, never a parameter. The same records, appended
+//! to a JSONL *journal*, make a run replayable: [`replay`] re-walks the
+//! perturb/update arithmetic from the recorded scalars **without any
+//! forward passes** and lands on the bit-identical final parameters —
+//! the crash-recovery and audit path (`tests/parallel.rs` locks this).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+use crate::runtime::{ModelInfo, Runtime};
+use crate::util::json::Json;
+use crate::util::log::{read_jsonl, JsonlWriter};
+
+use super::dp::{apply_sgd_update, perturb_in_place};
+
+/// One step's exchange record — everything a peer (or a future resume)
+/// needs to reproduce the update exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    /// optimizer step index
+    pub step: u32,
+    /// the step's perturbation seed (shared by every worker; Alg. 2)
+    pub seed: (u32, u32),
+    /// the all-reduced projected-gradient scalar `g`
+    pub scalar: f32,
+    /// threshold generation this step's mask was computed under
+    /// (increments when the DP trainer refreshes §8.2 thresholds)
+    pub mask_epoch: u32,
+}
+
+impl StepRecord {
+    /// Serialize to one journal line. `f32 -> f64` is exact, so the
+    /// scalar round-trips bit-for-bit through JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::Num(self.step as f64)),
+            ("seed_lo", Json::Num(self.seed.0 as f64)),
+            ("seed_hi", Json::Num(self.seed.1 as f64)),
+            ("g", Json::Num(self.scalar as f64)),
+            ("mask_epoch", Json::Num(self.mask_epoch as f64)),
+        ])
+    }
+
+    /// Parse one journal line.
+    pub fn from_json(j: &Json) -> Result<StepRecord> {
+        Ok(StepRecord {
+            step: j.req("step")?.as_usize()? as u32,
+            seed: (
+                j.req("seed_lo")?.as_usize()? as u32,
+                j.req("seed_hi")?.as_usize()? as u32,
+            ),
+            scalar: j.req("g")?.as_f64()? as f32,
+            mask_epoch: j.req("mask_epoch")?.as_usize()? as u32,
+        })
+    }
+}
+
+/// Journal format tag carried in the header line.
+pub const JOURNAL_KIND: &str = "dp-journal";
+
+/// Append-only step journal: one header line, then one line per step.
+pub struct JournalWriter {
+    w: JsonlWriter,
+}
+
+impl JournalWriter {
+    /// Create the journal and write its header. `meta` fields are merged
+    /// into the header object alongside the `kind` tag.
+    pub fn create(path: &Path, meta: Vec<(&str, Json)>) -> Result<JournalWriter> {
+        let mut fields = vec![("kind", Json::Str(JOURNAL_KIND.into()))];
+        fields.extend(meta);
+        let mut w = JsonlWriter::create(path)?;
+        w.write(&Json::obj(fields))?;
+        Ok(JournalWriter { w })
+    }
+
+    /// Append one step record.
+    pub fn record(&mut self, rec: &StepRecord) -> Result<()> {
+        self.w.write(&rec.to_json())
+    }
+
+    /// Flush buffered records to disk (called at eval boundaries and at
+    /// the end of the run so a crash loses at most one eval interval).
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Read a journal back: `(header, records)`.
+pub fn load_journal(path: &Path) -> Result<(Json, Vec<StepRecord>)> {
+    let lines = read_jsonl(path)?;
+    let Some((header, rest)) = lines.split_first() else {
+        bail!("journal {} is empty", path.display());
+    };
+    let kind_ok = header
+        .get("kind")
+        .map(|k| k.as_str().ok() == Some(JOURNAL_KIND))
+        .unwrap_or(false);
+    if !kind_ok {
+        bail!("journal {} has no '{JOURNAL_KIND}' header line", path.display());
+    }
+    let records = rest.iter().map(StepRecord::from_json).collect::<Result<Vec<_>>>()?;
+    Ok((header.clone(), records))
+}
+
+/// Verify a journal `header` was written by a run compatible with
+/// `cfg`: same model/task/optimizer and bit-identical lr/eps/sparsity.
+/// Replaying under a mismatched config would confidently produce wrong
+/// parameters, so [`replay`] makes this a hard error up front.
+pub fn check_compatible(header: &Json, cfg: &TrainConfig) -> Result<()> {
+    for (key, want) in [
+        ("model", cfg.model.as_str()),
+        ("task", cfg.task.as_str()),
+        ("optimizer", cfg.optimizer.as_str()),
+    ] {
+        let got = header.req(key)?.as_str()?;
+        if got != want {
+            bail!("journal {key} '{got}' does not match replay config '{want}'");
+        }
+    }
+    for (key, want) in [
+        ("lr", cfg.hypers.lr),
+        ("eps", cfg.hypers.eps),
+        ("sparsity", cfg.hypers.sparsity),
+    ] {
+        let got = header.req(key)?.as_f64()? as f32;
+        if got.to_bits() != want.to_bits() {
+            bail!("journal {key} {got} does not match replay config {want}");
+        }
+    }
+    let seed = header.req("seed")?.as_f64()? as u64;
+    if seed != cfg.seed {
+        bail!("journal seed {seed} does not match replay config {}", cfg.seed);
+    }
+    Ok(())
+}
+
+/// Re-walk a journal from `init` parameters: regenerate each step's mask
+/// and noise, then apply the recorded scalar through the *identical*
+/// fused perturb/update arithmetic the live run used — no forward
+/// passes, so replay is orders of magnitude faster than training, and
+/// the result is bit-identical to the live run's final parameters.
+/// `header` (from [`load_journal`]) is validated against `cfg` first so
+/// a mismatched config is an error, not silently wrong parameters.
+pub fn replay(
+    rt: &Runtime,
+    model: &ModelInfo,
+    cfg: &TrainConfig,
+    header: &Json,
+    init: &[f32],
+    records: &[StepRecord],
+) -> Result<Vec<f32>> {
+    check_compatible(header, cfg)?;
+    if init.len() != model.n_params {
+        bail!("replay: init has {} params, model expects {}", init.len(), model.n_params);
+    }
+    let backend = rt.backend();
+    let mut params = init.to_vec();
+    let mut thresholds = backend.thresholds(model, &params, cfg.hypers.sparsity)?;
+    let mut mask_epoch = 0u32;
+    for rec in records {
+        if rec.mask_epoch != mask_epoch {
+            // the live run refreshed §8.2 thresholds at this step's start
+            thresholds = backend.thresholds(model, &params, cfg.hypers.sparsity)?;
+            mask_epoch = rec.mask_epoch;
+        }
+        let mask = backend.zo_mask(model, &cfg.optimizer, &cfg.hypers, &thresholds, &params)?;
+        let z = backend.zo_noise(model, rec.seed, 0, model.n_params)?;
+        let eps = cfg.hypers.eps;
+        perturb_in_place(&mut params, &z, mask.as_deref(), eps);
+        perturb_in_place(&mut params, &z, mask.as_deref(), -2.0 * eps);
+        apply_sgd_update(&mut params, &z, mask.as_deref(), eps, cfg.hypers.lr, rec.scalar);
+    }
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_round_trips_exactly() {
+        let rec = StepRecord {
+            step: 41,
+            seed: (0xDEAD_BEEF, 7),
+            scalar: -3.724_119e-2,
+            mask_epoch: 2,
+        };
+        let back = StepRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back, rec);
+        assert_eq!(back.scalar.to_bits(), rec.scalar.to_bits());
+    }
+
+    #[test]
+    fn journal_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("smz_journal_{}", std::process::id()));
+        let path = dir.join("run.journal.jsonl");
+        let recs: Vec<StepRecord> = (0..5)
+            .map(|t| StepRecord {
+                step: t,
+                seed: (9, t),
+                scalar: t as f32 * 0.125,
+                mask_epoch: t / 3,
+            })
+            .collect();
+        {
+            let mut w =
+                JournalWriter::create(&path, vec![("label", Json::Str("unit".into()))]).unwrap();
+            for r in &recs {
+                w.record(r).unwrap();
+            }
+            w.flush().unwrap();
+        }
+        let (header, back) = load_journal(&path).unwrap();
+        assert_eq!(header.req("label").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(back, recs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

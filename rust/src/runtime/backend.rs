@@ -25,7 +25,7 @@
 //! ([`crate::coordinator::sweep`]) fans grid cells out across scoped
 //! threads that share one backend reference.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::exec::Hypers;
 use super::manifest::{Manifest, ModelInfo};
@@ -102,6 +102,58 @@ pub trait Backend: Send + Sync {
     /// `check-artifacts` smoke pass). PJRT compiles the artifact; the
     /// native backend validates the program name.
     fn compile_check(&self, model: &ModelInfo, program: &str) -> Result<()>;
+
+    // ---- data-parallel surface (crate::parallel) --------------------------
+    //
+    // The seed-sync DP engine needs three finer-grained primitives than
+    // `step`: per-row losses for a microbatch shard, the seed-replay
+    // perturbation noise z, and the step's coordinate mask. The engine
+    // reduces shard losses to one projected-gradient scalar and applies
+    // the identical masked update on every replica — so these three
+    // primitives, not `step`, are the unit of distribution. Backends
+    // without a DP implementation inherit the `bail!` defaults (the
+    // stubbed PJRT path compiles but reports "unsupported" at runtime).
+
+    /// Per-row cross-entropy losses (f64, row order) of a token batch
+    /// under `params`. Unlike [`Backend::logits`], the batch may be
+    /// *ragged* — any row count, `tokens.len() == labels.len() * seq_len`
+    /// — so a microbatch shard needs no padding. Row values must match
+    /// what the step programs fold into their training loss, which is
+    /// what makes the DP reduction bit-identical to a serial step.
+    fn row_losses(
+        &self,
+        _model: &ModelInfo,
+        _params: &[f32],
+        _tokens: &[i32],
+        _labels: &[i32],
+    ) -> Result<Vec<f64>> {
+        bail!("backend '{}' does not support data-parallel row losses", self.platform())
+    }
+
+    /// The seed-replay perturbation noise `z` for flat parameter
+    /// coordinates `[lo, hi)` at `seed` — the same per-layout-entry
+    /// counter-PRNG streams every step program regenerates (Alg. 2).
+    /// Chunk-invariant: concatenating `[lo, m)` and `[m, hi)` equals
+    /// `[lo, hi)` bit-for-bit, so callers may shard generation freely.
+    fn zo_noise(&self, _model: &ModelInfo, _seed: (u32, u32), _lo: usize, _hi: usize) -> Result<Vec<f32>> {
+        bail!("backend '{}' does not support host-side noise replay", self.platform())
+    }
+
+    /// The 0/1 coordinate mask `optimizer` would apply this step, computed
+    /// from the **unperturbed** `params` (dynamic-mask EI semantics,
+    /// paper §3.3). `None` means dense. Only the stateless mask family
+    /// (`mezo`, `smezo`, `smezo_large`, `rmezo`) is required; optimizers
+    /// whose mask lives in optimizer slots may error.
+    fn zo_mask(
+        &self,
+        _model: &ModelInfo,
+        _optimizer: &str,
+        _hypers: &Hypers,
+        _thresholds: &[f32],
+        _params: &[f32],
+    ) -> Result<Option<Vec<u8>>> {
+        bail!("backend '{}' does not support host-side mask computation", self.platform())
+    }
 
     /// Number of compiled executables held in the cache (perf accounting;
     /// 0 for backends without a compile step).

@@ -1186,6 +1186,87 @@ impl Backend for NativeBackend {
     fn compile_check(&self, model: &ModelInfo, program: &str) -> Result<()> {
         model.program(program).map(|_| ())
     }
+
+    fn row_losses(
+        &self,
+        model: &ModelInfo,
+        params: &[f32],
+        tokens: &[i32],
+        labels: &[i32],
+    ) -> Result<Vec<f64>> {
+        let geo = geometry(model)?;
+        if params.len() != model.n_params {
+            bail!("row_losses: params len {} != {}", params.len(), model.n_params);
+        }
+        if tokens.len() != labels.len() * geo.t {
+            bail!(
+                "row_losses: tokens len {} != {} rows x seq_len {}",
+                tokens.len(),
+                labels.len(),
+                geo.t
+            );
+        }
+        // Per-row values of exactly what batch_ce folds — the DP reducer
+        // re-folds them in row order, reproducing a serial step bit-for-bit.
+        Ok(tokens
+            .chunks(geo.t)
+            .zip(labels)
+            .map(|(row, &label)| row_ce(&forward_row(&geo, params, None, row).logits, label))
+            .collect())
+    }
+
+    fn zo_noise(&self, model: &ModelInfo, seed: (u32, u32), lo: usize, hi: usize) -> Result<Vec<f32>> {
+        if lo > hi || hi > model.n_params {
+            bail!("zo_noise: range [{lo}, {hi}) out of n_params {}", model.n_params);
+        }
+        let mut out = Vec::with_capacity(hi - lo);
+        for e in &model.layout {
+            let start = e.offset.max(lo);
+            let end = (e.offset + e.size).min(hi);
+            if start >= end {
+                continue;
+            }
+            let key = prng::layer_key(seed.0, seed.1, e.layer_id as u32);
+            for j in start..end {
+                out.push(prng::normal(key, (j - e.offset) as u32));
+            }
+        }
+        if out.len() != hi - lo {
+            bail!("zo_noise: layout does not cover range [{lo}, {hi})");
+        }
+        Ok(out)
+    }
+
+    fn zo_mask(
+        &self,
+        model: &ModelInfo,
+        optimizer: &str,
+        hypers: &Hypers,
+        thresholds: &[f32],
+        params: &[f32],
+    ) -> Result<Option<Vec<u8>>> {
+        if params.len() != model.n_params {
+            bail!("zo_mask: params len {} != {}", params.len(), model.n_params);
+        }
+        if thresholds.len() != model.n_entries {
+            bail!("zo_mask: thresholds len {} != n_entries {}", thresholds.len(), model.n_entries);
+        }
+        match optimizer {
+            "mezo" => Ok(None),
+            "smezo" => Ok(Some(magnitude_mask(model, params, thresholds, false))),
+            "smezo_large" => Ok(Some(magnitude_mask(model, params, thresholds, true))),
+            "rmezo" => Ok(Some(random_mask(
+                model,
+                model.n_params,
+                (1.0 - hypers.sparsity).clamp(0.0, 1.0),
+                hypers.mask_seed as u32,
+            ))),
+            other => bail!(
+                "optimizer '{other}' has no stateless step mask (data-parallel training \
+                 supports the mezo/smezo/smezo_large/rmezo family)"
+            ),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1284,6 +1365,70 @@ mod tests {
                 g[i]
             );
         }
+    }
+
+    #[test]
+    fn zo_noise_is_chunk_invariant_and_matches_streams() {
+        let b = backend();
+        let m = tiny(&b);
+        let whole = b.zo_noise(&m, (7, 9), 0, m.n_params).unwrap();
+        assert_eq!(whole.len(), m.n_params);
+        // any chunking reassembles bit-identically (the DP engine shards
+        // noise generation across the pool)
+        let mid = m.n_params / 3;
+        let mut parts = b.zo_noise(&m, (7, 9), 0, mid).unwrap();
+        parts.extend(b.zo_noise(&m, (7, 9), mid, m.n_params).unwrap());
+        assert_eq!(whole, parts);
+        // and the values are exactly the per-entry counter-PRNG streams
+        let e = &m.layout[1];
+        let z = prng::segment_normal(7, 9, e.layer_id as u32, 0, 8);
+        assert_eq!(&whole[e.offset..e.offset + 8], &z[..]);
+        assert!(b.zo_noise(&m, (7, 9), 0, m.n_params + 1).is_err());
+    }
+
+    #[test]
+    fn row_losses_fold_matches_batch_ce() {
+        let b = backend();
+        let m = tiny(&b);
+        let geo = geometry(&m).unwrap();
+        let p = b.init(&m, (1, 2)).unwrap();
+        let tokens = vec![5i32; m.batch * m.seq_len];
+        let labels = vec![3i32; m.batch];
+        let rows = b.row_losses(&m, &p, &tokens, &labels).unwrap();
+        assert_eq!(rows.len(), m.batch);
+        let total: f64 = rows.iter().sum();
+        let folded = (total / labels.len() as f64) as f32;
+        // the DP reduction (sequential f64 fold, then the f32 cast) must
+        // reproduce the step programs' training loss bit-for-bit
+        assert_eq!(folded.to_bits(), batch_ce(&geo, &p, None, &tokens, &labels).to_bits());
+        // ragged shards are fine
+        let shard = b.row_losses(&m, &p, &tokens[..4 * m.seq_len], &labels[..4]).unwrap();
+        assert_eq!(&shard[..], &rows[..4]);
+    }
+
+    #[test]
+    fn zo_mask_mirrors_step_mask_family() {
+        let b = backend();
+        let m = tiny(&b);
+        let p = b.init(&m, (4, 4)).unwrap();
+        let h = Hypers::default();
+        let th = b.thresholds(&m, &p, h.sparsity).unwrap();
+        assert!(b.zo_mask(&m, "mezo", &h, &th, &p).unwrap().is_none());
+        let small = b.zo_mask(&m, "smezo", &h, &th, &p).unwrap().unwrap();
+        let large = b.zo_mask(&m, "smezo_large", &h, &th, &p).unwrap().unwrap();
+        assert_eq!(small, magnitude_mask(&m, &p, &th, false));
+        // small/large are complements on matrix entries, both dense on vectors
+        for e in &m.layout {
+            for j in e.offset..e.offset + e.size {
+                if e.kind == "matrix" {
+                    assert_eq!(small[j] ^ large[j], 1, "coord {j}");
+                } else {
+                    assert_eq!((small[j], large[j]), (1, 1), "coord {j}");
+                }
+            }
+        }
+        // slot-stateful masks are rejected with an actionable error
+        assert!(b.zo_mask(&m, "smezo_const", &h, &th, &p).is_err());
     }
 
     #[test]

@@ -13,16 +13,22 @@
 //! [`Runtime::new`](super::Runtime::new) falls back to the native
 //! backend. Link the real `xla` crate to execute artifacts.
 //!
-//! KNOWN COST (tracked in ROADMAP.md): the backend-trait port passes
-//! parameters as host slices, so `logits`/`logits_lora` re-upload the
-//! full `f32[P]` vector per evaluation batch and `step` re-uploads the
-//! 8-float hypers + L-float thresholds per step — the pre-refactor
-//! wrappers cached those device buffers across calls. Restore an
-//! upload-once params handle (a backend-owned buffer cache) when the
-//! real `xla` crate is linked; on the CPU plugin the upload is a host
-//! memcpy, and the packed training state itself still never round-trips.
+//! UPLOAD-ONCE CACHING (closes the ROADMAP open item left by the
+//! backend-trait port): `logits`/`logits_lora` receive parameters as
+//! host slices and `step` receives hypers + thresholds per call, but
+//! within one evaluation pass / training run those inputs are *the same
+//! bytes* call after call. A small content-addressed device-buffer
+//! cache ([`BufCache`]) therefore keys constant-ish f32 uploads by an
+//! FNV-1a hash of their bits + dims and reuses the device buffer on
+//! hit: the params vector uploads once per eval pass instead of once
+//! per batch, and the 8-float hypers / L-float thresholds upload once
+//! per run instead of once per step. Hashing a params slice is a read
+//! of the same bytes the upload would copy anyway, so a miss costs
+//! ~one extra pass over the data and a hit saves the transfer
+//! entirely. Tokens/labels/seeds change every call and stay uncached.
+//! The packed training state itself still never round-trips.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
@@ -34,6 +40,44 @@ use super::exec::Hypers;
 use super::manifest::{Manifest, ModelInfo, ProgramInfo};
 use super::state::{StateBuf, TrainState};
 
+/// Content-addressed cache of constant-ish f32 device buffers (params,
+/// hypers, thresholds). FIFO-bounded: the working set is a handful of
+/// distinct values per run, so `CAP` entries with first-in eviction is
+/// plenty and keeps worst-case device memory bounded at
+/// `CAP * max(P) * 4` bytes.
+struct BufCache {
+    map: HashMap<u64, Arc<PjRtBuffer>>,
+    order: VecDeque<u64>,
+}
+
+impl BufCache {
+    /// Bounded entry count (largest entries are full param vectors).
+    const CAP: usize = 8;
+
+    fn new() -> BufCache {
+        BufCache { map: HashMap::new(), order: VecDeque::new() }
+    }
+}
+
+/// FNV-1a (word-at-a-time) over an f32 slice's raw bits and its dims —
+/// the upload-once cache key. Bit-exact: distinct NaN payloads or
+/// -0.0/+0.0 hash differently, which is the conservative direction.
+fn content_key_f32(data: &[f32], dims: &[usize]) -> u64 {
+    const PRIME: u64 = 0x100_0000_01b3; // FNV-1a 64-bit prime, 2^40 + 0x1b3
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &d in dims {
+        h ^= d as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h ^= data.len() as u64;
+    h = h.wrapping_mul(PRIME);
+    for &v in data {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// Backend that owns the PJRT client, the manifest, and the executable
 /// cache. Interior caches are mutex-guarded so the sweep driver can share
 /// one backend across scoped threads (PJRT CPU executions serialize on
@@ -42,6 +86,8 @@ pub struct PjrtBackend {
     client: PjRtClient,
     manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    /// upload-once device buffers for constant-ish inputs (see module docs)
+    buf_cache: Mutex<BufCache>,
     /// cumulative compile seconds (perf accounting)
     compile_seconds: Mutex<f64>,
 }
@@ -67,6 +113,7 @@ impl PjrtBackend {
             client,
             manifest,
             cache: Mutex::new(HashMap::new()),
+            buf_cache: Mutex::new(BufCache::new()),
             compile_seconds: Mutex::new(0.0),
         })
     }
@@ -100,6 +147,28 @@ impl PjrtBackend {
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    /// Upload-once path for constant-ish f32 inputs (params, hypers,
+    /// thresholds): content-hash the bytes, reuse the device buffer on a
+    /// hit, upload + remember on a miss.
+    fn cached_upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Arc<PjRtBuffer>> {
+        let key = content_key_f32(data, dims);
+        if let Some(buf) = self.buf_cache.lock().unwrap().map.get(&key).cloned() {
+            return Ok(buf);
+        }
+        let buf = Arc::new(self.upload_f32(data, dims)?);
+        let mut cache = self.buf_cache.lock().unwrap();
+        if !cache.map.contains_key(&key) {
+            if cache.order.len() >= BufCache::CAP {
+                if let Some(evicted) = cache.order.pop_front() {
+                    cache.map.remove(&evicted);
+                }
+            }
+            cache.order.push_back(key);
+            cache.map.insert(key, buf.clone());
+        }
+        Ok(buf)
     }
 
     fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
@@ -181,9 +250,9 @@ impl Backend for PjrtBackend {
         if params.len() != model.n_params {
             anyhow::bail!("thresh: params len {} != {}", params.len(), model.n_params);
         }
-        let p_buf = self.upload_f32(params, &[params.len()])?;
+        let p_buf = self.cached_upload_f32(params, &[params.len()])?;
         let s_buf = self.upload_f32(&[sparsity], &[1])?;
-        let out = self.run1(model.program("thresh")?, &[&p_buf, &s_buf], "thresh")?;
+        let out = self.run1(model.program("thresh")?, &[p_buf.as_ref(), &s_buf], "thresh")?;
         self.download_f32_at(&out, 0, model.n_entries)
     }
 
@@ -215,13 +284,14 @@ impl Backend for PjrtBackend {
         let tok_buf = self.upload_i32(tokens, &[model.batch, model.seq_len])?;
         let lab_buf = self.upload_i32(labels, &[model.batch])?;
         let seed_buf = self.upload_u32(&[seed.0, seed.1], &[2])?;
-        let hyp_buf = self.upload_f32(&hypers.to_vec(), &[8])?;
-        let thr_buf = self.upload_f32(thresholds, &[thresholds.len()])?;
+        // hypers + thresholds are constant across a run: upload-once
+        let hyp_buf = self.cached_upload_f32(&hypers.to_vec(), &[8])?;
+        let thr_buf = self.cached_upload_f32(thresholds, &[thresholds.len()])?;
         let out = {
             let state_buf = Self::state_buffer(state, "step")?;
             self.run1(
                 prog,
-                &[state_buf, &tok_buf, &lab_buf, &seed_buf, &hyp_buf, &thr_buf],
+                &[state_buf, &tok_buf, &lab_buf, &seed_buf, hyp_buf.as_ref(), thr_buf.as_ref()],
                 &format!("step({optimizer})"),
             )?
         };
@@ -240,19 +310,21 @@ impl Backend for PjrtBackend {
         let prog = model.program("pretrain")?;
         let tok_buf = self.upload_i32(tokens, &[model.batch, model.seq_len])?;
         let seed_buf = self.upload_u32(&[seed.0, seed.1], &[2])?;
-        let hyp_buf = self.upload_f32(&hypers.to_vec(), &[8])?;
+        let hyp_buf = self.cached_upload_f32(&hypers.to_vec(), &[8])?;
         let out = {
             let state_buf = Self::state_buffer(state, "pretrain")?;
-            self.run1(prog, &[state_buf, &tok_buf, &seed_buf, &hyp_buf], "pretrain")?
+            self.run1(prog, &[state_buf, &tok_buf, &seed_buf, hyp_buf.as_ref()], "pretrain")?
         };
         state.buf = StateBuf::Pjrt(out);
         Ok(())
     }
 
     fn logits(&self, model: &ModelInfo, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
-        let p_buf = self.upload_f32(params, &[params.len()])?;
+        // the same params slice arrives for every batch of an eval pass:
+        // upload-once instead of once per batch
+        let p_buf = self.cached_upload_f32(params, &[params.len()])?;
         let tok_buf = self.upload_i32(tokens, &[model.batch, model.seq_len])?;
-        let out = self.run1(model.program("logits")?, &[&p_buf, &tok_buf], "logits")?;
+        let out = self.run1(model.program("logits")?, &[p_buf.as_ref(), &tok_buf], "logits")?;
         self.download_f32_at(&out, 0, model.batch * model.vocab)
     }
 
@@ -263,11 +335,14 @@ impl Backend for PjrtBackend {
         adapters: &[f32],
         tokens: &[i32],
     ) -> Result<Vec<f32>> {
-        let p_buf = self.upload_f32(params, &[params.len()])?;
-        let a_buf = self.upload_f32(adapters, &[adapters.len()])?;
+        let p_buf = self.cached_upload_f32(params, &[params.len()])?;
+        let a_buf = self.cached_upload_f32(adapters, &[adapters.len()])?;
         let tok_buf = self.upload_i32(tokens, &[model.batch, model.seq_len])?;
-        let out =
-            self.run1(model.program("logits_lora")?, &[&p_buf, &a_buf, &tok_buf], "logits_lora")?;
+        let out = self.run1(
+            model.program("logits_lora")?,
+            &[p_buf.as_ref(), a_buf.as_ref(), &tok_buf],
+            "logits_lora",
+        )?;
         self.download_f32_at(&out, 0, model.batch * model.vocab)
     }
 
@@ -281,5 +356,39 @@ impl Backend for PjrtBackend {
 
     fn total_compile_seconds(&self) -> f64 {
         *self.compile_seconds.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn content_key_is_bit_exact_and_dim_sensitive() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 3.0];
+        assert_eq!(content_key_f32(&a, &[3]), content_key_f32(&b, &[3]));
+        // same data under different dims is a different device value
+        assert_ne!(content_key_f32(&a, &[3]), content_key_f32(&a, &[1, 3]));
+        // any bit flip changes the key
+        let c = [1.0f32, 2.0, 4.0];
+        assert_ne!(content_key_f32(&a, &[3]), content_key_f32(&c, &[3]));
+        // -0.0 vs +0.0 are distinct bit patterns — conservative direction
+        assert_ne!(content_key_f32(&[0.0], &[1]), content_key_f32(&[-0.0], &[1]));
+    }
+
+    #[test]
+    fn buf_cache_evicts_fifo_at_capacity() {
+        let mut cache = BufCache::new();
+        // exercise the bookkeeping without a live client: keys only
+        for k in 0..(BufCache::CAP as u64 + 3) {
+            if cache.order.len() >= BufCache::CAP {
+                let evicted = cache.order.pop_front().unwrap();
+                cache.map.remove(&evicted);
+            }
+            cache.order.push_back(k);
+        }
+        assert_eq!(cache.order.len(), BufCache::CAP);
+        assert_eq!(*cache.order.front().unwrap(), 3);
     }
 }

@@ -98,6 +98,17 @@ impl Args {
         }
     }
 
+    /// The `--workers N` knob (data-parallel worker count), validated:
+    /// 0 is rejected at parse time so every downstream consumer (pool
+    /// sizing, DP shard math) can rely on `workers >= 1`.
+    pub fn workers_or(&self, default: usize) -> Result<usize> {
+        let n = self.usize_or("workers", default)?;
+        if n == 0 {
+            bail!("--workers: must be >= 1 (1 = serial)");
+        }
+        Ok(n)
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
         match self.get(name) {
@@ -162,6 +173,14 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&sv(&["--task"]), &[]).is_err());
+    }
+
+    #[test]
+    fn workers_flag_parses_and_rejects_zero() {
+        let a = Args::parse(&sv(&["--workers", "4"]), &[]).unwrap();
+        assert_eq!(a.workers_or(1).unwrap(), 4);
+        assert_eq!(Args::parse(&sv(&[]), &[]).unwrap().workers_or(2).unwrap(), 2);
+        assert!(Args::parse(&sv(&["--workers", "0"]), &[]).unwrap().workers_or(1).is_err());
     }
 
     #[test]

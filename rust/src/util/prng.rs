@@ -10,6 +10,22 @@
 //! Also hosts a small xoshiro-style generator (`Pcg32`) used for *local*
 //! randomness (task data generation, property tests) where cross-language
 //! agreement is needed between the data layer and nothing else.
+//!
+//! ## Bit-identity audit (data-parallel seed sync)
+//!
+//! The seed-sync DP engine (`crate::parallel::dp`) relies on every
+//! worker regenerating the *same* `z` stream from the shared step seed.
+//! The generators here are safe for that by construction, and must stay
+//! so:
+//!
+//! * the counter PRNG is **pure**: `normal(key, idx)` is a function of
+//!   `(seed, layer_id, idx)` only. No global state, no thread-locals, no
+//!   per-call counters — which thread evaluates a stream can never
+//!   change its values (`tests/parallel.rs` guards this);
+//! * keys must always derive from the **step seed** `(cfg.seed, t)`,
+//!   never from a worker index, pool-thread id, or iteration-order
+//!   artifact. `Pcg32` (stateful, advance-order-dependent) is for data
+//!   synthesis only and MUST NOT be used for perturbation replay.
 
 /// Stream salts — must match prng.py.
 pub const STREAM_A: u32 = 0x9E37_79B9;
@@ -197,6 +213,25 @@ mod tests {
     #[test]
     fn seed_replay_identical() {
         assert_eq!(segment_normal(123, 456, 7, 0, 512), segment_normal(123, 456, 7, 0, 512));
+    }
+
+    #[test]
+    fn streams_are_thread_independent() {
+        // the DP bit-identity contract: worker-local z-regeneration is a
+        // pure function of the shared step seed — which thread runs it
+        // (and how many run it concurrently) must be unobservable
+        let reference = segment_normal(42, 3, 1, 0, 2048);
+        let copies: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            (0..4)
+                .map(|_| scope.spawn(|| segment_normal(42, 3, 1, 0, 2048)))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for c in &copies {
+            assert_eq!(c, &reference);
+        }
     }
 
     #[test]

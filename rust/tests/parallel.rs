@@ -1,0 +1,234 @@
+//! Integration tests for the seed-sync data-parallel subsystem.
+//!
+//! The contracts under test are exact, not approximate:
+//!
+//! * N-worker DP training is **bit-identical** to 1-worker DP training
+//!   and to the serial [`Trainer`] — same parameters, same per-step
+//!   losses — because the all-reduce folds per-row losses in canonical
+//!   row order and the update replays the shared seed.
+//! * The step journal (`(step, seed, g, mask_epoch)` records) replays
+//!   to the bit-identical final parameters without any forward passes,
+//!   hence to the same final loss.
+//! * Sharded evaluation returns bit-identical results to the serial
+//!   evaluator for any pool size.
+//!
+//! CI runs this suite both under the default test harness and with
+//! `--test-threads=1` (pool scheduling must not depend on ambient
+//! parallelism).
+
+use std::sync::OnceLock;
+
+use sparse_mezo::config::TrainConfig;
+use sparse_mezo::coordinator::evaluator;
+use sparse_mezo::coordinator::trainer::{TrainResult, Trainer};
+use sparse_mezo::data::{tasks, Dataset};
+use sparse_mezo::parallel::eval::evaluate_sharded;
+use sparse_mezo::parallel::protocol::{load_journal, replay};
+use sparse_mezo::parallel::{DpTrainer, WorkerPool};
+use sparse_mezo::runtime::exec::{InitExec, LogitsExec};
+use sparse_mezo::runtime::Runtime;
+
+/// One shared native runtime per test process.
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(Runtime::native)
+}
+
+/// Small-but-real config: enough steps for masks/updates to matter.
+fn tiny_cfg(optimizer: &str, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::resolve("llama_tiny", "rte", optimizer, None).unwrap();
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.eval_cap = 16;
+    cfg.seed = 11;
+    cfg
+}
+
+/// Shared dataset: deterministic for a fixed seed, so every run in a
+/// test observes identical batches.
+fn ds() -> Dataset {
+    tasks::generate_sized("rte", 11, 64, 24, 24).unwrap()
+}
+
+fn dp_run(workers: usize, optimizer: &str, steps: usize) -> TrainResult {
+    let rt = rt();
+    let pool = WorkerPool::new(workers);
+    let mut cfg = tiny_cfg(optimizer, steps);
+    cfg.workers = workers;
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    let mut t = DpTrainer::new(rt, &pool, cfg);
+    t.eval_test = false;
+    t.run_on(&model, &dataset).unwrap()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coord {i} ({x} vs {y})");
+    }
+}
+
+#[test]
+fn n_workers_bit_identical_to_one_worker() {
+    let one = dp_run(1, "smezo", 6);
+    let two = dp_run(2, "smezo", 6);
+    let four = dp_run(4, "smezo", 6);
+    assert_bits_eq(&one.params, &two.params, "params 1v2");
+    assert_bits_eq(&one.params, &four.params, "params 1v4");
+    assert_bits_eq(&one.train_losses, &two.train_losses, "losses 1v2");
+    assert_bits_eq(&one.train_losses, &four.train_losses, "losses 1v4");
+    assert_eq!(one.steps_run, 6);
+}
+
+#[test]
+fn dp_is_bit_identical_to_serial_trainer() {
+    // the strongest guard: the DP engine's host-side perturb/reduce/update
+    // arithmetic reproduces the native backend's fused serial walk exactly
+    let rt = rt();
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    let cfg = tiny_cfg("smezo", 5);
+    let mut serial = Trainer::new(rt, cfg);
+    serial.eval_test = false;
+    let s = serial.run_on(&model, &dataset).unwrap();
+    let d = dp_run(2, "smezo", 5);
+    assert_bits_eq(&s.params, &d.params, "serial vs dp params");
+    assert_bits_eq(&s.train_losses, &d.train_losses, "serial vs dp losses");
+}
+
+#[test]
+fn dense_and_random_mask_variants_stay_in_sync() {
+    for optimizer in ["mezo", "rmezo"] {
+        let one = dp_run(1, optimizer, 3);
+        let four = dp_run(4, optimizer, 3);
+        assert_bits_eq(&one.params, &four.params, optimizer);
+    }
+}
+
+#[test]
+fn journal_replays_to_identical_params_and_loss() {
+    let rt = rt();
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    let dir = std::env::temp_dir().join(format!("smz_dp_journal_{}", std::process::id()));
+    let path = dir.join("run.journal.jsonl");
+
+    let pool = WorkerPool::new(2);
+    let mut cfg = tiny_cfg("smezo", 6);
+    cfg.workers = 2;
+    let mut t = DpTrainer::new(rt, &pool, cfg.clone()).with_journal(&path);
+    t.eval_test = false;
+    let live = t.run_on(&model, &dataset).unwrap();
+
+    let (header, records) = load_journal(&path).unwrap();
+    assert_eq!(header.req("workers").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(records.len(), live.steps_run);
+    assert_eq!(records[0].step, 0);
+
+    // replay from the same deterministic init: no forward passes, same bits
+    let init = InitExec::load(rt, &model)
+        .unwrap()
+        .run(rt, (cfg.seed as u32, 0x1717))
+        .unwrap();
+    let replayed = replay(rt, &model, &cfg, &header, &init, &records).unwrap();
+    assert_bits_eq(&live.params, &replayed, "live vs replayed params");
+
+    // a mismatched config must be a hard error, not wrong parameters
+    let mut wrong = cfg.clone();
+    wrong.hypers.lr *= 2.0;
+    assert!(replay(rt, &model, &wrong, &header, &init, &records).is_err());
+
+    // same parameters => same final loss, bit for bit
+    let logits = LogitsExec::load(rt, &model).unwrap();
+    let live_eval = evaluator::evaluate(rt, &logits, &live.params, &dataset.dev, 0).unwrap();
+    let replay_eval = evaluator::evaluate(rt, &logits, &replayed, &dataset.dev, 0).unwrap();
+    assert_eq!(live_eval.mean_loss.to_bits(), replay_eval.mean_loss.to_bits());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mask_refresh_epochs_replay_exactly() {
+    // threshold refreshes change the mask mid-run; the journal's
+    // mask_epoch must carry enough to replay through them
+    let rt = rt();
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    let dir = std::env::temp_dir().join(format!("smz_dp_refresh_{}", std::process::id()));
+    let path = dir.join("run.journal.jsonl");
+
+    let pool = WorkerPool::new(2);
+    let mut cfg = tiny_cfg("smezo", 7);
+    cfg.workers = 2;
+    let mut t = DpTrainer::new(rt, &pool, cfg.clone()).with_journal(&path);
+    t.eval_test = false;
+    t.mask_refresh = 3;
+    let live = t.run_on(&model, &dataset).unwrap();
+
+    let (header, records) = load_journal(&path).unwrap();
+    assert_eq!(records.last().unwrap().mask_epoch, 2, "refresh at t=3 and t=6");
+    let init = InitExec::load(rt, &model)
+        .unwrap()
+        .run(rt, (cfg.seed as u32, 0x1717))
+        .unwrap();
+    let replayed = replay(rt, &model, &cfg, &header, &init, &records).unwrap();
+    assert_bits_eq(&live.params, &replayed, "refresh live vs replayed");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sharded_eval_bit_identical_to_serial_for_any_pool_size() {
+    let rt = rt();
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    let logits = LogitsExec::load(rt, &model).unwrap();
+    let params = InitExec::load(rt, &model).unwrap().run(rt, (3, 9)).unwrap();
+    let serial = evaluator::evaluate(rt, &logits, &params, &dataset.test, 0).unwrap();
+    for threads in [0usize, 1, 3] {
+        let pool = WorkerPool::new(threads);
+        let sharded =
+            evaluate_sharded(rt, &pool, &logits, &params, &dataset.test, 0).unwrap();
+        assert_eq!(sharded.n, serial.n, "{threads} threads");
+        assert_eq!(sharded.correct, serial.correct, "{threads} threads");
+        assert_eq!(sharded.mean_loss.to_bits(), serial.mean_loss.to_bits(), "{threads} threads");
+    }
+}
+
+#[test]
+fn serial_trainer_with_pool_matches_without() {
+    // the Trainer.pool path (sharded eval inside the serial trainer, as
+    // sweep cells use it) must change the schedule only, never a number
+    let rt = rt();
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    let mut cfg = tiny_cfg("smezo", 4);
+    cfg.eval_every = 2;
+    let mut plain = Trainer::new(rt, cfg.clone());
+    let a = plain.run_on(&model, &dataset).unwrap();
+    let pool = WorkerPool::new(3);
+    let mut pooled = Trainer::new(rt, cfg).with_pool(&pool);
+    let b = pooled.run_on(&model, &dataset).unwrap();
+    assert_bits_eq(&a.params, &b.params, "pooled-eval trainer params");
+    assert_eq!(a.curve, b.curve);
+    assert_eq!(a.test.unwrap(), b.test.unwrap());
+}
+
+#[test]
+fn dp_rejects_unsupported_configs() {
+    let rt = rt();
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    let pool = WorkerPool::new(2);
+
+    // slot-stateful optimizer: serial trainer only
+    let mut cfg = tiny_cfg("zo_adam", 2);
+    cfg.workers = 2;
+    let err = DpTrainer::new(rt, &pool, cfg).run_on(&model, &dataset).unwrap_err();
+    assert!(err.to_string().contains("serial trainer"), "{err:#}");
+
+    // worker count must divide the batch (16 % 5 != 0)
+    let mut cfg = tiny_cfg("smezo", 2);
+    cfg.workers = 5;
+    let err = DpTrainer::new(rt, &pool, cfg).run_on(&model, &dataset).unwrap_err();
+    assert!(err.to_string().contains("divide"), "{err:#}");
+}
