@@ -1,0 +1,100 @@
+//! Bench: multi-tenant serving throughput — rows/sec through the full
+//! checkout → shard → fold path (`ServeEngine::classify`) vs worker
+//! count, plus the per-request cost of the copy-free adapter swap.
+//!
+//! Run: `cargo bench --bench serve_throughput` (append `-- --quick` for
+//! the CI smoke matrix). Uses the native backend. Writes a human table
+//! to stdout and refreshes the repo-root `BENCH_serve.json` snapshot
+//! that seeds the serving perf trajectory across PRs.
+
+use std::path::PathBuf;
+
+use sparse_mezo::config::ServeConfig;
+use sparse_mezo::runtime::exec::InitExec;
+use sparse_mezo::runtime::Runtime;
+use sparse_mezo::serve::{ServeEngine, SparseDelta};
+use sparse_mezo::util::json::Json;
+use sparse_mezo::util::prng::Pcg32;
+
+const MODEL: &str = "llama_tiny";
+
+/// A synthetic ~25%-density adapter (the sparsity-0.75 serving regime)
+/// without paying for a training run inside the bench.
+fn synthetic_delta(rt: &Runtime, base: &[f32]) -> SparseDelta {
+    let model = rt.model(MODEL).unwrap();
+    let mut tuned = base.to_vec();
+    let mut rng = Pcg32::new(17, 17);
+    for (i, v) in tuned.iter_mut().enumerate() {
+        if i % 4 == 0 {
+            *v += 1e-3 + 1e-4 * (rng.below(1000) as f32);
+        }
+    }
+    SparseDelta::extract(model, base, &tuned, None, Json::Null).unwrap()
+}
+
+/// Deterministic prompt rows in-vocab.
+fn prompt_rows(n_rows: usize, len: usize, vocab: usize) -> Vec<Vec<i32>> {
+    let mut rng = Pcg32::new(7, 99);
+    (0..n_rows)
+        .map(|_| (0..len).map(|_| rng.below(vocab as u32) as i32).collect())
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (rows_per_request, iters, worker_counts): (usize, usize, &[usize]) =
+        if quick { (16, 5, &[1, 2]) } else { (64, 20, &[1, 2, 4]) };
+
+    let probe_rt = Runtime::native();
+    let model = probe_rt.model(MODEL)?.clone();
+    let base = InitExec::load(&probe_rt, &model)?.run(&probe_rt, (11, 0x1717))?;
+    let rows = prompt_rows(rows_per_request, model.seq_len, model.vocab);
+
+    let mut results = Vec::new();
+    let mut baseline = 0.0f64;
+    for &w in worker_counts {
+        let cfg = ServeConfig { workers: w, ..ServeConfig::default() };
+        let engine = ServeEngine::new(Runtime::native(), &cfg, base.clone())?;
+        engine.registry.insert("bench", synthetic_delta(&probe_rt, &base))?;
+        // warmup: first-touch + one checkout/release cycle
+        engine.classify("bench", &rows)?;
+        let r = sparse_mezo::bench::bench(
+            &format!("classify {rows_per_request} rows, {w} workers"),
+            1,
+            iters,
+            || {
+                engine.classify("bench", &rows).unwrap();
+            },
+        );
+        let rows_per_sec = rows_per_request as f64 / r.summary.mean.max(1e-12);
+        if w == worker_counts[0] {
+            baseline = rows_per_sec;
+        }
+        println!(
+            "{:<30} {rows_per_sec:10.1} rows/s  x{:.2} vs {} worker(s)",
+            format!("serve workers={w}"),
+            rows_per_sec / baseline.max(1e-12),
+            worker_counts[0]
+        );
+        results.push(Json::obj(vec![
+            ("workers", Json::Num(w as f64)),
+            ("rows_per_sec", Json::Num(rows_per_sec)),
+            ("mean_request_s", Json::Num(r.summary.mean)),
+            ("p99_request_s", Json::Num(r.summary.p99)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("serve_throughput".into())),
+        ("status", Json::Str("measured".into())),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::Str(MODEL.into())),
+        ("rows_per_request", Json::Num(rows_per_request as f64)),
+        ("timed_iters", Json::Num(iters as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serve.json");
+    std::fs::write(&path, format!("{}\n", out.to_string()))?;
+    println!("(snapshot -> {})", path.display());
+    Ok(())
+}

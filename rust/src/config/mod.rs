@@ -170,9 +170,135 @@ impl TrainConfig {
     }
 }
 
+/// A fully-resolved serving configuration (the `serve` subcommand and
+/// the loopback test/bench harnesses).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// model name to serve (manifest key)
+    pub model: String,
+    /// loopback TCP port (0 = OS-assigned ephemeral)
+    pub port: u16,
+    /// worker-pool threads fused forward passes shard across
+    pub workers: usize,
+    /// micro-batch size trigger: flush an adapter group at this many rows
+    pub max_batch_rows: usize,
+    /// micro-batch deadline trigger in milliseconds
+    pub flush_ms: u64,
+    /// adapter registry count cap (LRU beyond it)
+    pub max_adapters: usize,
+    /// adapter registry byte budget (LRU beyond it)
+    pub adapter_budget: usize,
+    /// seed for the deterministic base init when no checkpoint is given
+    pub seed: u64,
+    /// base parameters from this checkpoint instead of `init`
+    pub init_from: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "llama_tiny".into(),
+            port: 0,
+            workers: 2,
+            max_batch_rows: 16,
+            flush_ms: 5,
+            max_adapters: 8,
+            adapter_budget: 64 << 20,
+            seed: 42,
+            init_from: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Defaults, then an optional TOML override file.
+    pub fn resolve(toml_path: Option<&Path>) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(path) = toml_path {
+            let doc = toml::parse_file(path)?;
+            cfg.apply_json(&doc)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply overrides from a parsed TOML/JSON tree.
+    pub fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        if let Some(v) = doc.get("model") {
+            self.model = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("port") {
+            let p = v.as_usize()?;
+            if p > u16::MAX as usize {
+                bail!("port {p} out of range");
+            }
+            self.port = p as u16;
+        }
+        if let Some(v) = doc.get("workers") {
+            self.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("max_batch_rows") {
+            self.max_batch_rows = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("flush_ms") {
+            self.flush_ms = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.get("max_adapters") {
+            self.max_adapters = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("adapter_budget") {
+            self.adapter_budget = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("seed") {
+            self.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = doc.get("init_from") {
+            self.init_from = Some(v.as_str()?.to_string());
+        }
+        self.validate()
+    }
+
+    /// Reject nonsensical caps before any thread or socket exists.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch_rows == 0 {
+            bail!("max_batch_rows must be >= 1");
+        }
+        if self.max_adapters == 0 || self.adapter_budget == 0 {
+            bail!("adapter caps must be positive");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_config_defaults_and_overrides() {
+        let cfg = ServeConfig::resolve(None).unwrap();
+        assert_eq!(cfg.port, 0);
+        assert!(cfg.validate().is_ok());
+        let mut cfg = ServeConfig::default();
+        let doc = crate::util::toml::parse(
+            "model = \"llama_med\"\nport = 8080\nmax_batch_rows = 4\nflush_ms = 2\n",
+        )
+        .unwrap();
+        cfg.apply_json(&doc).unwrap();
+        assert_eq!(cfg.model, "llama_med");
+        assert_eq!(cfg.port, 8080);
+        assert_eq!(cfg.max_batch_rows, 4);
+        assert_eq!(cfg.flush_ms, 2);
+        // bad values rejected
+        let mut bad = ServeConfig::default();
+        bad.max_batch_rows = 0;
+        assert!(bad.validate().is_err());
+        bad.max_batch_rows = 1;
+        bad.workers = 0;
+        assert!(bad.validate().is_err());
+    }
 
     #[test]
     fn resolve_and_override() {

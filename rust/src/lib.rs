@@ -34,6 +34,10 @@
 //! * [`parallel`] — the worker pool (the crate's one scheduler), the
 //!   seed-sync data-parallel trainer, sharded evaluation, and the
 //!   step-exchange protocol + replayable journal.
+//! * [`serve`] — sparse-delta adapters (extract/certify/swap/save), the
+//!   multi-tenant adapter registry, dynamic micro-batching over the
+//!   worker pool, and the std-only HTTP loopback server behind the
+//!   `serve` subcommand.
 //! * [`bench`] — the timing harness used by `cargo bench` targets.
 
 #![warn(missing_docs)]
@@ -44,6 +48,7 @@ pub mod coordinator;
 pub mod data;
 pub mod parallel;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod zo;
 

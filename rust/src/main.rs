@@ -7,15 +7,17 @@
 //!   sweep            LR or sparsity grid (Fig-2a harness)
 //!   probe            half-batch generalization probe (Fig-2b/4)
 //!   repro <exp>      regenerate a paper table/figure (or `all`)
+//!   serve            multi-tenant sparse-adapter inference server
 //!   memory-table     Table-4 memory model only (fast)
 //!   inspect          print manifest/model/layout information
 //!   check-artifacts  compile every artifact and run ABI smoke checks
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use sparse_mezo::config::{presets, TrainConfig};
+use sparse_mezo::config::{presets, ServeConfig, TrainConfig};
 use sparse_mezo::coordinator::checkpoint::Checkpoint;
 use sparse_mezo::coordinator::experiments::{self, Ctx};
 use sparse_mezo::coordinator::lora::LoraTrainer;
@@ -28,6 +30,7 @@ use sparse_mezo::data::tasks;
 use sparse_mezo::info;
 use sparse_mezo::parallel::{DpTrainer, WorkerPool};
 use sparse_mezo::runtime::Runtime;
+use sparse_mezo::serve::{http, ServeEngine};
 use sparse_mezo::util::cli::Args;
 use sparse_mezo::util::json::Json;
 use sparse_mezo::util::log;
@@ -52,6 +55,12 @@ COMMANDS
   repro           <table1|table2|table3|table4|table5|table10|table11|
                    table13|fig1|fig2a|fig2b|fig2c|fig3|fig4|all>
                   [--model M --out DIR --zo-steps N --seeds a,b --fast]
+  serve           --model M [--port P --workers N --max-batch R
+                  --flush-ms MS --max-adapters K --adapter-budget BYTES
+                  --seed S --init-from CKPT --config FILE.toml]
+                  (loopback HTTP: GET /healthz, GET|POST /v1/adapters,
+                  POST /v1/classify; adapters materialize from step
+                  journals relative to the server's base parameters)
   memory-table    [--model M --out DIR]
   inspect         [--model M]
   check-artifacts
@@ -92,6 +101,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(&args, &artifacts),
         "probe" => cmd_probe(&args, &artifacts),
         "repro" => cmd_repro(&args, &artifacts),
+        "serve" => cmd_serve(&args, &artifacts),
         "memory-table" => cmd_memory(&args, &artifacts),
         "inspect" => cmd_inspect(&args, &artifacts),
         "check-artifacts" => cmd_check(&artifacts),
@@ -338,6 +348,50 @@ fn cmd_repro(args: &Args, artifacts: &PathBuf) -> Result<()> {
     let t0 = std::time::Instant::now();
     experiments::run(&ctx, what, &model)?;
     info!("repro {what} finished in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let toml_path = args.get("config").map(PathBuf::from);
+    let mut cfg = ServeConfig::resolve(toml_path.as_deref())?;
+    cfg.model = args.str_or("model", &cfg.model);
+    cfg.port = args.u16_or("port", cfg.port)?;
+    cfg.workers = args.workers_or(cfg.workers)?;
+    cfg.max_batch_rows = args.usize_or("max-batch", cfg.max_batch_rows)?;
+    cfg.flush_ms = args.u64_or("flush-ms", cfg.flush_ms)?;
+    cfg.max_adapters = args.usize_or("max-adapters", cfg.max_adapters)?;
+    cfg.adapter_budget = args.usize_or("adapter-budget", cfg.adapter_budget)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.init_from = args.get("init-from").map(String::from).or(cfg.init_from);
+    cfg.validate()?;
+
+    let model_info = rt.model(&cfg.model)?.clone();
+    let base = match &cfg.init_from {
+        Some(path) => {
+            Checkpoint::load(&PathBuf::from(path), &model_info)
+                .with_context(|| format!("loading base checkpoint {path}"))?
+                .params
+        }
+        None => {
+            let init = sparse_mezo::runtime::exec::InitExec::load(&rt, &model_info)?;
+            init.run(&rt, (cfg.seed as u32, 0x1717))?
+        }
+    };
+    info!(
+        "serve: {} | {} params | {} pool threads | batch {} rows / {} ms | {} adapters / {} MB",
+        cfg.model,
+        model_info.n_params,
+        cfg.workers,
+        cfg.max_batch_rows,
+        cfg.flush_ms,
+        cfg.max_adapters,
+        cfg.adapter_budget >> 20
+    );
+    let engine = Arc::new(ServeEngine::new(rt, &cfg, base)?);
+    let running = http::serve(engine, cfg.port)?;
+    info!("listening on http://{} (loopback only)", running.addr);
+    running.join();
     Ok(())
 }
 

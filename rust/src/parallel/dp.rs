@@ -27,9 +27,15 @@
 //! final parameters without forward passes (crash recovery / audit).
 //!
 //! Scope: the stateless-mask ZO family (`mezo`, `smezo`, `smezo_large`,
-//! `rmezo`) with a constant learning rate — the paper's methods.
-//! Slot-stateful optimizers (momentum/Adam/stored-mask) would need
-//! replicated slot blocks and are left on the serial trainer.
+//! `rmezo`) with a constant learning rate — the paper's methods — plus
+//! the dense slot-stateful optimizers `zo_mom`/`zo_adam`/`zo_adamu`.
+//! The slot-stateful extension costs nothing on the wire: optimizer
+//! slots are a deterministic function of the shared `(seed, g)` stream,
+//! so each replica carries its own slot block and updates it from the
+//! same scalar — slots stay bit-identical forever, exactly like the
+//! parameters (the end-of-run drift check covers both). Only the
+//! stored-mask ablation `smezo_const` stays on the serial trainer (its
+//! mask lives in slots *and* feeds back into perturbation support).
 
 use std::path::PathBuf;
 use std::sync::Mutex;
@@ -42,18 +48,59 @@ use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::trainer::{self, CurvePoint, TrainResult, DIVERGENCE_LOSS};
 use crate::data::batcher::TrainLoader;
 use crate::data::{tasks, Dataset};
-use crate::runtime::exec::LogitsExec;
+use crate::runtime::exec::{Hypers, LogitsExec};
 use crate::runtime::{ModelInfo, Runtime};
 use crate::util::json::Json;
 use crate::util::stats::Ema;
 
 use super::eval;
 use super::pool::WorkerPool;
-use super::protocol::{JournalWriter, StepRecord};
+use super::protocol::{params_fingerprint, JournalWriter, StepRecord};
 
-/// Optimizers the DP engine supports (stateless step masks only).
+/// Which phase-B update rule the DP engine applies for an optimizer —
+/// each mirrors the corresponding `Rule` arm of the native backend's
+/// fused serial walk expression-for-expression, which is what keeps DP
+/// trajectories bit-identical to serial ones.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum DpRule {
+    /// `theta -= lr * g * m ⊙ z` (MeZO / S-MeZO / R-MeZO)
+    Sgd,
+    /// heavy-ball momentum on `g * z`; slot block `[m (P)]`
+    Momentum,
+    /// Adam moments on `g * z`; slot block `[m (P) | v (P) | t (1)]`.
+    /// `clamp` bounds each coordinate update to ±lr (zo_adamu).
+    Adam {
+        /// bound each coordinate update to ±lr (the AdaMU variant)
+        clamp: bool,
+    },
+}
+
+/// The update rule the DP engine would use for `optimizer`
+/// (`None` = not DP-supported; use the serial trainer).
+pub(crate) fn dp_rule(optimizer: &str) -> Option<DpRule> {
+    match optimizer {
+        "mezo" | "smezo" | "smezo_large" | "rmezo" => Some(DpRule::Sgd),
+        "zo_mom" => Some(DpRule::Momentum),
+        "zo_adam" => Some(DpRule::Adam { clamp: false }),
+        "zo_adamu" => Some(DpRule::Adam { clamp: true }),
+        _ => None,
+    }
+}
+
+/// Optimizer-slot floats each DP replica carries for `optimizer` (the
+/// same slot geometry the serial trainer's packed state uses).
+pub(crate) fn dp_slot_len(optimizer: &str, p: usize) -> usize {
+    match dp_rule(optimizer) {
+        Some(DpRule::Momentum) => p,
+        Some(DpRule::Adam { .. }) => 2 * p + 1,
+        _ => 0,
+    }
+}
+
+/// Optimizers the DP engine supports: stateless step masks plus the
+/// dense slot-stateful family (slots replay from the shared scalar).
 pub fn dp_supported(optimizer: &str) -> bool {
-    matches!(optimizer, "mezo" | "smezo" | "smezo_large" | "rmezo")
+    dp_rule(optimizer).is_some()
 }
 
 /// `params[i] += scale * z[i]` over unmasked coordinates — the Alg.-2
@@ -107,6 +154,97 @@ pub(crate) fn apply_sgd_update(
         }
     }
     norm
+}
+
+/// The fused restore+update for heavy-ball momentum (`Rule::Momentum`
+/// of the serial walk): `m = beta1*m + (1-beta1)*g*z; u = lr*m;
+/// params += eps*z - u` on unmasked coordinates. `slots` is the
+/// P-element momentum buffer; masked-out coordinates leave their slot
+/// untouched, exactly like the serial walk.
+pub(crate) fn apply_mom_update(
+    params: &mut [f32],
+    slots: &mut [f32],
+    z: &[f32],
+    mask: Option<&[u8]>,
+    hypers: &Hypers,
+    g: f32,
+) -> f32 {
+    let (eps, lr, beta) = (hypers.eps, hypers.lr, hypers.beta1);
+    let mut norm = 0.0f32;
+    for i in 0..params.len() {
+        if let Some(m) = mask {
+            if m[i] == 0 {
+                continue;
+            }
+        }
+        let zv = z[i];
+        let gz = g * zv;
+        slots[i] = beta * slots[i] + (1.0 - beta) * gz;
+        let u = lr * slots[i];
+        params[i] += eps * zv - u;
+        norm += u * u;
+    }
+    norm
+}
+
+/// The fused restore+update for Adam moments (`Rule::Adam` of the serial
+/// walk). Slot layout `[m (P) | v (P) | t (1)]`; the step counter at
+/// `slots[2P]` increments once per call before the coordinate loop, and
+/// `clamp` bounds each coordinate update to ±lr (zo_adamu).
+pub(crate) fn apply_adam_update(
+    params: &mut [f32],
+    slots: &mut [f32],
+    z: &[f32],
+    mask: Option<&[u8]>,
+    hypers: &Hypers,
+    g: f32,
+    clamp: bool,
+) -> f32 {
+    let p = params.len();
+    let (eps, lr) = (hypers.eps, hypers.lr);
+    slots[2 * p] += 1.0;
+    let t = slots[2 * p];
+    let bc1 = 1.0 - hypers.beta1.powf(t);
+    let bc2 = 1.0 - hypers.beta2.powf(t);
+    let mut norm = 0.0f32;
+    for i in 0..p {
+        if let Some(m) = mask {
+            if m[i] == 0 {
+                continue;
+            }
+        }
+        let zv = z[i];
+        let gz = g * zv;
+        slots[i] = hypers.beta1 * slots[i] + (1.0 - hypers.beta1) * gz;
+        slots[p + i] = hypers.beta2 * slots[p + i] + (1.0 - hypers.beta2) * gz * gz;
+        let mhat = slots[i] / bc1;
+        let vhat = slots[p + i] / bc2;
+        let mut u = lr * mhat / (vhat.sqrt() + hypers.adam_eps);
+        if clamp {
+            u = u.clamp(-lr, lr);
+        }
+        params[i] += eps * zv - u;
+        norm += u * u;
+    }
+    norm
+}
+
+/// Dispatch one phase-B update by rule. `slots` must be sized by
+/// [`dp_slot_len`] for the rule's optimizer (empty for `Sgd`).
+pub(crate) fn apply_update(
+    params: &mut [f32],
+    slots: &mut [f32],
+    z: &[f32],
+    mask: Option<&[u8]>,
+    hypers: &Hypers,
+    g: f32,
+    rule: DpRule,
+) -> f32 {
+    match rule {
+        DpRule::Sgd => apply_sgd_update(params, z, mask, hypers.eps, hypers.lr, g),
+        DpRule::Momentum => apply_mom_update(params, slots, z, mask, hypers, g),
+        DpRule::Adam { clamp } => apply_adam_update(params, slots, z, mask, hypers, g, clamp),
+    }
 }
 
 /// Driver for one seed-sync data-parallel training run. Mirrors
@@ -168,13 +306,13 @@ impl<'rt> DpTrainer<'rt> {
         let cfg = self.cfg.clone();
         cfg.validate()?;
         let n = cfg.workers.max(1);
-        if !dp_supported(&cfg.optimizer) {
+        let Some(rule) = dp_rule(&cfg.optimizer) else {
             bail!(
-                "data-parallel training supports the mezo/smezo/smezo_large/rmezo family, \
-                 not '{}' (use the serial trainer)",
+                "data-parallel training supports the mezo/smezo/smezo_large/rmezo/\
+                 zo_mom/zo_adam/zo_adamu family, not '{}' (use the serial trainer)",
                 cfg.optimizer
             );
-        }
+        };
         if model.batch % n != 0 {
             bail!("workers {n} must divide the model batch size {}", model.batch);
         }
@@ -190,11 +328,13 @@ impl<'rt> DpTrainer<'rt> {
         let rows_per = model.batch / n;
         let shard_tok = rows_per * model.seq_len;
         let eps = cfg.hypers.eps;
-        let lr = cfg.hypers.lr;
 
-        // N full parameter replicas; seed-sync keeps them bit-identical
-        // forever, which the end-of-run drift check asserts
-        let replicas: Vec<Mutex<Vec<f32>>> = (0..n).map(|_| Mutex::new(params.clone())).collect();
+        // N full replicas (parameters + optimizer slots, zero-initialized
+        // like the serial trainer's packed state); seed-sync keeps both
+        // blocks bit-identical forever, which the drift check asserts
+        let slot_len = dp_slot_len(&cfg.optimizer, p);
+        let replicas: Vec<Mutex<(Vec<f32>, Vec<f32>)>> =
+            (0..n).map(|_| Mutex::new((params.clone(), vec![0.0f32; slot_len]))).collect();
 
         let mut journal = match &self.journal_path {
             Some(path) => Some(JournalWriter::create(
@@ -208,11 +348,19 @@ impl<'rt> DpTrainer<'rt> {
                     ("seed", Json::Num(cfg.seed as f64)),
                     ("steps", Json::Num(cfg.steps as f64)),
                     ("mask_refresh", Json::Num(self.mask_refresh as f64)),
+                    // bit-exact fingerprint of the run's initial params;
+                    // replay refuses a different base (see replay_full)
+                    ("init_fnv", Json::Str(params_fingerprint(&params))),
                     // the hypers replay needs; check_compatible() verifies
                     // them against the replaying config
                     ("lr", Json::Num(cfg.hypers.lr as f64)),
                     ("eps", Json::Num(cfg.hypers.eps as f64)),
                     ("sparsity", Json::Num(cfg.hypers.sparsity as f64)),
+                    // slot-stateful replay (zo_mom/zo_adam) needs the
+                    // moment hypers too
+                    ("beta1", Json::Num(cfg.hypers.beta1 as f64)),
+                    ("beta2", Json::Num(cfg.hypers.beta2 as f64)),
+                    ("adam_eps", Json::Num(cfg.hypers.adam_eps as f64)),
                 ],
             )?),
             None => None,
@@ -233,7 +381,7 @@ impl<'rt> DpTrainer<'rt> {
 
             if self.mask_refresh > 0 && t > 0 && t % self.mask_refresh == 0 {
                 let master = replicas[0].lock().unwrap();
-                thresholds = backend.thresholds(model, &master, cfg.hypers.sparsity)?;
+                thresholds = backend.thresholds(model, &master.0, cfg.hypers.sparsity)?;
                 mask_epoch += 1;
             }
 
@@ -259,7 +407,7 @@ impl<'rt> DpTrainer<'rt> {
             // step mask from the unperturbed (identical) replicas
             let mask = {
                 let master = replicas[0].lock().unwrap();
-                backend.zo_mask(model, &cfg.optimizer, &cfg.hypers, &thresholds, &master)?
+                backend.zo_mask(model, &cfg.optimizer, &cfg.hypers, &thresholds, &master.0)?
             };
             let masked_frac = match &mask {
                 Some(m) => m.iter().map(|&x| x as usize).sum::<usize>() as f32 / p as f32,
@@ -271,10 +419,10 @@ impl<'rt> DpTrainer<'rt> {
                 let mut replica = replicas[j].lock().unwrap();
                 let tokens = &batch.tokens[j * shard_tok..(j + 1) * shard_tok];
                 let labels = &batch.labels[j * rows_per..(j + 1) * rows_per];
-                perturb_in_place(&mut replica, &z, mask.as_deref(), eps);
-                let rows_plus = backend.row_losses(model, &replica, tokens, labels)?;
-                perturb_in_place(&mut replica, &z, mask.as_deref(), -2.0 * eps);
-                let rows_minus = backend.row_losses(model, &replica, tokens, labels)?;
+                perturb_in_place(&mut replica.0, &z, mask.as_deref(), eps);
+                let rows_plus = backend.row_losses(model, &replica.0, tokens, labels)?;
+                perturb_in_place(&mut replica.0, &z, mask.as_deref(), -2.0 * eps);
+                let rows_minus = backend.row_losses(model, &replica.0, tokens, labels)?;
                 Ok((rows_plus, rows_minus))
             });
 
@@ -310,10 +458,13 @@ impl<'rt> DpTrainer<'rt> {
             }
 
             // phase B: identical masked update on every replica — the
-            // whole exchange was the scalar g
+            // whole exchange was the scalar g. Slot-stateful rules update
+            // each replica's own slot block from the same scalar, so
+            // slots stay bit-identical across replicas too.
             let norms = self.pool.scatter(n, |j| {
                 let mut replica = replicas[j].lock().unwrap();
-                apply_sgd_update(&mut replica, &z, mask.as_deref(), eps, lr, g)
+                let (params, slots) = &mut *replica;
+                apply_update(params, slots, &z, mask.as_deref(), &cfg.hypers, g, rule)
             });
             let update_norm_sq = norms.first().copied().unwrap_or(0.0);
             step_seconds += t0.elapsed().as_secs_f64();
@@ -340,7 +491,7 @@ impl<'rt> DpTrainer<'rt> {
             // periodic dev evaluation, sharded over the same pool
             let is_last = t + 1 == cfg.steps;
             if (cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0) || is_last {
-                let p_host = replicas[0].lock().unwrap().clone();
+                let p_host = replicas[0].lock().unwrap().0.clone();
                 let dev = eval::evaluate_sharded(
                     self.rt,
                     self.pool,
@@ -370,10 +521,11 @@ impl<'rt> DpTrainer<'rt> {
         }
 
         // ---- final check + evaluation --------------------------------------
-        let params = replicas[0].lock().unwrap().clone();
+        let (params, slots) = replicas[0].lock().unwrap().clone();
         for (j, replica) in replicas.iter().enumerate().skip(1) {
             let replica = replica.lock().unwrap();
-            let drifted = replica.iter().zip(&params).any(|(a, b)| a.to_bits() != b.to_bits());
+            let drifted = replica.0.iter().zip(&params).any(|(a, b)| a.to_bits() != b.to_bits())
+                || replica.1.iter().zip(&slots).any(|(a, b)| a.to_bits() != b.to_bits());
             if drifted {
                 bail!("replica {j} drifted from replica 0 — seed-sync invariant broken");
             }

@@ -15,7 +15,9 @@
 //!   serial evaluator by a canonical batch-order fold.
 //! * [`protocol`] — the `(step, seed, g, mask_epoch)` step-exchange
 //!   record, its JSONL journal, and the forward-pass-free
-//!   [`replay`](protocol::replay) used for crash recovery and audit.
+//!   [`replay`](protocol::replay) used for crash recovery, audit, and
+//!   (via [`replay_full`](protocol::replay_full)'s mask-union
+//!   certificate) sparse-adapter materialization in [`crate::serve`].
 //!
 //! Why this shape works: MeZO's update is a rank-one function of a
 //! scalar and a PRNG seed (paper Alg. 1–2), so the classic DP cost —

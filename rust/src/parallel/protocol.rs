@@ -17,10 +17,11 @@ use anyhow::{bail, Result};
 
 use crate::config::TrainConfig;
 use crate::runtime::{ModelInfo, Runtime};
+use crate::util::bitset;
 use crate::util::json::Json;
 use crate::util::log::{read_jsonl, JsonlWriter};
 
-use super::dp::{apply_sgd_update, perturb_in_place};
+use super::dp::{apply_update, dp_rule, dp_slot_len, perturb_in_place};
 
 /// One step's exchange record — everything a peer (or a future resume)
 /// needs to reproduce the update exactly.
@@ -137,6 +138,28 @@ pub fn check_compatible(header: &Json, cfg: &TrainConfig) -> Result<()> {
             bail!("journal {key} {got} does not match replay config {want}");
         }
     }
+    // Moment hypers shape the slot-stateful replays; journals written
+    // before the zo_mom/zo_adam extension lack them, so they are
+    // compared when present and *required* for slot-stateful optimizers.
+    let slot_stateful = dp_slot_len(&cfg.optimizer, 1) > 0;
+    for (key, want) in [
+        ("beta1", cfg.hypers.beta1),
+        ("beta2", cfg.hypers.beta2),
+        ("adam_eps", cfg.hypers.adam_eps),
+    ] {
+        match header.get(key) {
+            Some(v) => {
+                let got = v.as_f64()? as f32;
+                if got.to_bits() != want.to_bits() {
+                    bail!("journal {key} {got} does not match replay config {want}");
+                }
+            }
+            None if slot_stateful => {
+                bail!("journal lacks '{key}', required to replay '{}'", cfg.optimizer)
+            }
+            None => {}
+        }
+    }
     let seed = header.req("seed")?.as_f64()? as u64;
     if seed != cfg.seed {
         bail!("journal seed {seed} does not match replay config {}", cfg.seed);
@@ -144,27 +167,117 @@ pub fn check_compatible(header: &Json, cfg: &TrainConfig) -> Result<()> {
     Ok(())
 }
 
+/// Reconstruct the [`TrainConfig`] a journal was recorded under from its
+/// header — the self-describing path the serving layer uses to
+/// materialize an adapter from an uploaded journal without any
+/// out-of-band configuration. The result passes [`check_compatible`]
+/// against the same header by construction.
+pub fn config_from_header(header: &Json) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig {
+        model: header.req("model")?.as_str()?.to_string(),
+        task: header.req("task")?.as_str()?.to_string(),
+        optimizer: header.req("optimizer")?.as_str()?.to_string(),
+        seed: header.req("seed")?.as_f64()? as u64,
+        steps: header.req("steps")?.as_usize()?.max(1),
+        eval_every: 0,
+        ..TrainConfig::default()
+    };
+    cfg.hypers.lr = header.req("lr")?.as_f64()? as f32;
+    cfg.hypers.eps = header.req("eps")?.as_f64()? as f32;
+    cfg.hypers.sparsity = header.req("sparsity")?.as_f64()? as f32;
+    if let Some(v) = header.get("beta1") {
+        cfg.hypers.beta1 = v.as_f64()? as f32;
+    }
+    if let Some(v) = header.get("beta2") {
+        cfg.hypers.beta2 = v.as_f64()? as f32;
+    }
+    if let Some(v) = header.get("adam_eps") {
+        cfg.hypers.adam_eps = v.as_f64()? as f32;
+    }
+    if let Some(v) = header.get("workers") {
+        cfg.workers = v.as_usize()?.max(1);
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// FNV-1a fingerprint of a parameter vector's exact bits (hex). The DP
+/// trainer stamps its initial parameters' fingerprint into the journal
+/// header as `init_fnv`; [`replay_full`] refuses to replay from a base
+/// with a different fingerprint — replaying a `(seed, g)` stream against
+/// the wrong starting point would produce confidently wrong parameters
+/// (and wrong magnitude masks) with no other symptom.
+pub fn params_fingerprint(params: &[f32]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in params {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    format!("{h:016x}")
+}
+
+/// Everything a full journal re-walk produces beyond the parameters.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    /// final parameters, bit-identical to the live run's
+    pub params: Vec<f32>,
+    /// final optimizer slots (empty for the stateless family)
+    pub slots: Vec<f32>,
+    /// union of the per-step coordinate masks as a 1-bit/param bitset
+    /// (dense steps set every bit) — exactly the support an exported
+    /// sparse adapter delta is allowed to touch
+    pub mask_union: Vec<u64>,
+    /// steps replayed
+    pub steps: usize,
+}
+
 /// Re-walk a journal from `init` parameters: regenerate each step's mask
 /// and noise, then apply the recorded scalar through the *identical*
 /// fused perturb/update arithmetic the live run used — no forward
 /// passes, so replay is orders of magnitude faster than training, and
 /// the result is bit-identical to the live run's final parameters.
+/// Slot-stateful optimizers (`zo_mom`/`zo_adam`/`zo_adamu`) replay too:
+/// their slots are a deterministic function of the `(seed, g)` stream,
+/// rebuilt from zero exactly as the live replicas built them. The
+/// outcome also carries the union of per-step masks, which is the
+/// support certificate the serving layer checks adapter deltas against.
 /// `header` (from [`load_journal`]) is validated against `cfg` first so
 /// a mismatched config is an error, not silently wrong parameters.
-pub fn replay(
+pub fn replay_full(
     rt: &Runtime,
     model: &ModelInfo,
     cfg: &TrainConfig,
     header: &Json,
     init: &[f32],
     records: &[StepRecord],
-) -> Result<Vec<f32>> {
+) -> Result<ReplayOutcome> {
     check_compatible(header, cfg)?;
     if init.len() != model.n_params {
         bail!("replay: init has {} params, model expects {}", init.len(), model.n_params);
     }
+    // journals stamped with their initial-parameter fingerprint refuse
+    // to replay from a different base (pre-stamp journals skip the check)
+    if let Some(v) = header.get("init_fnv") {
+        let want = v.as_str()?;
+        let got = params_fingerprint(init);
+        if got != want {
+            bail!(
+                "journal was recorded from different initial parameters \
+                 (init fingerprint {want}, replay base {got}); materialize \
+                 the adapter against the base the run actually started from"
+            );
+        }
+    }
+    let Some(rule) = dp_rule(&cfg.optimizer) else {
+        bail!("optimizer '{}' has no journal replay rule", cfg.optimizer);
+    };
     let backend = rt.backend();
+    let p = model.n_params;
     let mut params = init.to_vec();
+    let mut slots = vec![0.0f32; dp_slot_len(&cfg.optimizer, p)];
+    let mut union = bitset::new(p);
     let mut thresholds = backend.thresholds(model, &params, cfg.hypers.sparsity)?;
     let mut mask_epoch = 0u32;
     for rec in records {
@@ -174,13 +287,36 @@ pub fn replay(
             mask_epoch = rec.mask_epoch;
         }
         let mask = backend.zo_mask(model, &cfg.optimizer, &cfg.hypers, &thresholds, &params)?;
-        let z = backend.zo_noise(model, rec.seed, 0, model.n_params)?;
+        match &mask {
+            Some(m) => {
+                for (i, &mv) in m.iter().enumerate() {
+                    if mv != 0 {
+                        bitset::set(&mut union, i);
+                    }
+                }
+            }
+            None => bitset::set_all(&mut union, p),
+        }
+        let z = backend.zo_noise(model, rec.seed, 0, p)?;
         let eps = cfg.hypers.eps;
         perturb_in_place(&mut params, &z, mask.as_deref(), eps);
         perturb_in_place(&mut params, &z, mask.as_deref(), -2.0 * eps);
-        apply_sgd_update(&mut params, &z, mask.as_deref(), eps, cfg.hypers.lr, rec.scalar);
+        apply_update(&mut params, &mut slots, &z, mask.as_deref(), &cfg.hypers, rec.scalar, rule);
     }
-    Ok(params)
+    Ok(ReplayOutcome { params, slots, mask_union: union, steps: records.len() })
+}
+
+/// [`replay_full`] reduced to the final parameters (the original crash
+/// recovery / audit entry point).
+pub fn replay(
+    rt: &Runtime,
+    model: &ModelInfo,
+    cfg: &TrainConfig,
+    header: &Json,
+    init: &[f32],
+    records: &[StepRecord],
+) -> Result<Vec<f32>> {
+    Ok(replay_full(rt, model, cfg, header, init, records)?.params)
 }
 
 #[cfg(test)]

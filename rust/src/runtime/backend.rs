@@ -142,8 +142,10 @@ pub trait Backend: Send + Sync {
     /// The 0/1 coordinate mask `optimizer` would apply this step, computed
     /// from the **unperturbed** `params` (dynamic-mask EI semantics,
     /// paper §3.3). `None` means dense. Only the stateless mask family
-    /// (`mezo`, `smezo`, `smezo_large`, `rmezo`) is required; optimizers
-    /// whose mask lives in optimizer slots may error.
+    /// (`mezo`, `smezo`, `smezo_large`, `rmezo`) plus the dense
+    /// slot-stateful DP family (`zo_mom`, `zo_adam`, `zo_adamu`, which
+    /// answer `None`) is required; optimizers whose mask lives in
+    /// optimizer slots may error.
     fn zo_mask(
         &self,
         _model: &ModelInfo,
@@ -153,6 +155,26 @@ pub trait Backend: Send + Sync {
         _params: &[f32],
     ) -> Result<Option<Vec<u8>>> {
         bail!("backend '{}' does not support host-side mask computation", self.platform())
+    }
+
+    // ---- serving surface (crate::serve) -----------------------------------
+    //
+    // The multi-tenant inference server batches same-adapter requests
+    // and shards the fused forward pass across the worker pool, so it
+    // needs logits for a *ragged* row batch — any row count, no padding
+    // to the compiled [B, T] shape. Backends without a serving
+    // implementation inherit the `bail!` default (the stubbed PJRT path
+    // compiles but reports "unsupported" at runtime).
+
+    /// Last-position logits `f32[R, V]` for a **ragged** token batch
+    /// under `params`: any row count `R >= 1`,
+    /// `tokens.len() == R * seq_len`. Row r must be bit-identical to the
+    /// same row of [`Backend::logits`] on any batch carrying the same
+    /// tokens — the serving layer shards one logical batch across
+    /// workers and re-concatenates in row order, and its
+    /// batched-equals-serial guarantee rests on this contract.
+    fn logits_rows(&self, _model: &ModelInfo, _params: &[f32], _tokens: &[i32]) -> Result<Vec<f32>> {
+        bail!("backend '{}' does not support ragged serving logits", self.platform())
     }
 
     /// Number of compiled executables held in the cache (perf accounting;

@@ -1252,7 +1252,9 @@ impl Backend for NativeBackend {
             bail!("zo_mask: thresholds len {} != n_entries {}", thresholds.len(), model.n_entries);
         }
         match optimizer {
-            "mezo" => Ok(None),
+            // dense families: plain MeZO and the slot-stateful DP
+            // optimizers, whose step programs apply no coordinate mask
+            "mezo" | "zo_mom" | "zo_adam" | "zo_adamu" => Ok(None),
             "smezo" => Ok(Some(magnitude_mask(model, params, thresholds, false))),
             "smezo_large" => Ok(Some(magnitude_mask(model, params, thresholds, true))),
             "rmezo" => Ok(Some(random_mask(
@@ -1263,9 +1265,31 @@ impl Backend for NativeBackend {
             ))),
             other => bail!(
                 "optimizer '{other}' has no stateless step mask (data-parallel training \
-                 supports the mezo/smezo/smezo_large/rmezo family)"
+                 supports the mezo/smezo/smezo_large/rmezo/zo_mom/zo_adam/zo_adamu family)"
             ),
         }
+    }
+
+    fn logits_rows(&self, model: &ModelInfo, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let geo = geometry(model)?;
+        if params.len() != model.n_params {
+            bail!("logits_rows: params len {} != {}", params.len(), model.n_params);
+        }
+        if tokens.is_empty() || tokens.len() % geo.t != 0 {
+            bail!(
+                "logits_rows: tokens len {} is not a positive multiple of seq_len {}",
+                tokens.len(),
+                geo.t
+            );
+        }
+        // Row-independent forward passes: each output row is bit-identical
+        // to the same row of `logits` on any batch carrying these tokens,
+        // which is what lets the serving layer shard one batch freely.
+        let mut out = Vec::with_capacity((tokens.len() / geo.t) * geo.v);
+        for row in tokens.chunks(geo.t) {
+            out.extend(forward_row(&geo, params, None, row).logits);
+        }
+        Ok(out)
     }
 }
 
@@ -1427,8 +1451,35 @@ mod tests {
                 }
             }
         }
-        // slot-stateful masks are rejected with an actionable error
+        // the dense slot-stateful DP family answers None (no step mask)
+        for opt in ["zo_mom", "zo_adam", "zo_adamu"] {
+            assert!(b.zo_mask(&m, opt, &h, &th, &p).unwrap().is_none(), "{opt}");
+        }
+        // stored-mask optimizers are rejected with an actionable error
         assert!(b.zo_mask(&m, "smezo_const", &h, &th, &p).is_err());
+    }
+
+    #[test]
+    fn logits_rows_ragged_matches_full_batch_rows() {
+        let b = backend();
+        let m = tiny(&b);
+        let p = b.init(&m, (6, 6)).unwrap();
+        let mut tokens = vec![0i32; m.batch * m.seq_len];
+        for (i, t) in tokens.iter_mut().enumerate() {
+            *t = (i % 97) as i32 % m.vocab as i32;
+        }
+        let full = b.logits(&m, &p, &tokens).unwrap();
+        // any ragged slicing reproduces the corresponding rows bit-for-bit
+        for rows in [1usize, 3, m.batch] {
+            let part = b.logits_rows(&m, &p, &tokens[..rows * m.seq_len]).unwrap();
+            assert_eq!(part.len(), rows * m.vocab);
+            for (i, (a, f)) in part.iter().zip(&full[..rows * m.vocab]).enumerate() {
+                assert_eq!(a.to_bits(), f.to_bits(), "coord {i} at {rows} rows");
+            }
+        }
+        // shape guards
+        assert!(b.logits_rows(&m, &p, &tokens[..m.seq_len - 1]).is_err());
+        assert!(b.logits_rows(&m, &p, &[]).is_err());
     }
 
     #[test]

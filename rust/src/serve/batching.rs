@@ -1,0 +1,422 @@
+//! Dynamic micro-batching + the serving engine.
+//!
+//! Classify requests queue into a [`MicroBatcher`]; a dispatcher drains
+//! it one *adapter group* at a time. A group (all queued requests for
+//! one adapter, submission order) flushes when its row count reaches
+//! `max_rows` (size trigger) or its oldest request has waited
+//! `flush_ms` (deadline trigger) — the classic latency/throughput knob.
+//! Grouping by adapter is what makes multi-tenancy cheap: one registry
+//! checkout amortizes over every request in the group.
+//!
+//! [`ServeEngine::classify`] executes one fused group: check the
+//! adapter out of the registry (copy-free swap), shard the padded rows
+//! across the existing [`WorkerPool`], and re-concatenate per-row
+//! logits in row order. Because each output row depends only on its own
+//! tokens (the [`logits_rows`](crate::runtime::backend::Backend::logits_rows)
+//! contract), the fold is **bit-identical to a serial pass** for any
+//! worker count — asserted end-to-end in `tests/serve.rs` — and
+//! splitting the fused output back per request in submission order is
+//! plain bookkeeping, not arithmetic.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ServeConfig;
+use crate::data::batcher::pad_prompt;
+use crate::parallel::WorkerPool;
+use crate::runtime::{ModelInfo, Runtime};
+
+use super::registry::AdapterRegistry;
+
+/// One-shot response slot a submitter blocks on.
+pub struct Ticket {
+    slot: Mutex<Option<Result<Vec<Vec<f32>>>>>,
+    done: Condvar,
+}
+
+impl Ticket {
+    fn new() -> Arc<Ticket> {
+        Arc::new(Ticket { slot: Mutex::new(None), done: Condvar::new() })
+    }
+
+    fn fulfill(&self, result: Result<Vec<Vec<f32>>>) {
+        *self.slot.lock().unwrap() = Some(result);
+        self.done.notify_all();
+    }
+
+    /// Block until the dispatcher answers; returns per-row logits in
+    /// the submitted row order.
+    pub fn wait(&self) -> Result<Vec<Vec<f32>>> {
+        let mut slot = self.slot.lock().unwrap();
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.done.wait(slot).unwrap();
+        }
+    }
+}
+
+/// One queued request: its adapter, rows, enqueue time and responder.
+struct Pending {
+    adapter: String,
+    rows: Vec<Vec<i32>>,
+    since: Instant,
+    ticket: Arc<Ticket>,
+}
+
+/// Queue state behind the batcher lock.
+struct Queue {
+    pending: Vec<Pending>,
+    shutdown: bool,
+}
+
+/// The size- and deadline-triggered request queue. See the module docs.
+pub struct MicroBatcher {
+    inner: Mutex<Queue>,
+    ready: Condvar,
+    max_rows: usize,
+    max_delay: Duration,
+}
+
+impl MicroBatcher {
+    /// A batcher flushing adapter groups at `max_rows` rows or after
+    /// `flush_ms` milliseconds, whichever comes first.
+    pub fn new(max_rows: usize, flush_ms: u64) -> MicroBatcher {
+        MicroBatcher {
+            inner: Mutex::new(Queue { pending: Vec::new(), shutdown: false }),
+            ready: Condvar::new(),
+            max_rows: max_rows.max(1),
+            max_delay: Duration::from_millis(flush_ms),
+        }
+    }
+
+    /// Enqueue `rows` for `adapter`; the returned ticket resolves when
+    /// the dispatcher has run the group this request rode in.
+    pub fn submit(&self, adapter: &str, rows: Vec<Vec<i32>>) -> Arc<Ticket> {
+        let ticket = Ticket::new();
+        let mut q = self.inner.lock().unwrap();
+        if q.shutdown {
+            ticket.fulfill(Err(anyhow!("server is shutting down")));
+            return ticket;
+        }
+        q.pending.push(Pending {
+            adapter: adapter.to_string(),
+            rows,
+            since: Instant::now(),
+            ticket: Arc::clone(&ticket),
+        });
+        drop(q);
+        self.ready.notify_all();
+        ticket
+    }
+
+    /// Requests currently queued (health reporting).
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    /// Stop the dispatcher after it drains the queue; subsequent
+    /// submits fail fast.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.ready.notify_all();
+    }
+
+    /// Extract the ripest adapter group (oldest head first), if any.
+    fn take_ripe(&self, q: &mut Queue) -> Option<Vec<Pending>> {
+        let now = Instant::now();
+        let mut best: Option<(&str, Instant)> = None;
+        // per-adapter totals; heads are the first occurrence in queue
+        // order, so scanning forward keeps them
+        let mut groups: Vec<(&str, usize, Instant)> = Vec::new();
+        for p in &q.pending {
+            match groups.iter_mut().find(|(name, _, _)| *name == p.adapter.as_str()) {
+                Some((_, rows, _)) => *rows += p.rows.len(),
+                None => groups.push((p.adapter.as_str(), p.rows.len(), p.since)),
+            }
+        }
+        for (name, rows, head) in groups {
+            let ripe = q.shutdown
+                || rows >= self.max_rows
+                || now.duration_since(head) >= self.max_delay;
+            if ripe && best.map(|(_, h)| head < h).unwrap_or(true) {
+                best = Some((name, head));
+            }
+        }
+        let name = best.map(|(n, _)| n.to_string())?;
+        let (taken, rest): (Vec<Pending>, Vec<Pending>) =
+            q.pending.drain(..).partition(|p| p.adapter == name);
+        q.pending = rest;
+        Some(taken)
+    }
+
+    /// Dispatcher loop: drain groups through `exec` until [`shutdown`]
+    /// *and* an empty queue. `exec` receives the group's adapter and its
+    /// concatenated rows; its output is split back per request in
+    /// submission order.
+    ///
+    /// [`shutdown`]: MicroBatcher::shutdown
+    pub fn run<F>(&self, mut exec: F)
+    where
+        F: FnMut(&str, &[Vec<i32>]) -> Result<Vec<Vec<f32>>>,
+    {
+        loop {
+            let group = {
+                let mut q = self.inner.lock().unwrap();
+                loop {
+                    if let Some(g) = self.take_ripe(&mut q) {
+                        break g;
+                    }
+                    if q.shutdown {
+                        return; // shutdown + nothing ripe => queue empty
+                    }
+                    if q.pending.is_empty() {
+                        q = self.ready.wait(q).unwrap();
+                    } else {
+                        // sleep until the oldest pending request's deadline
+                        let oldest = q.pending.iter().map(|p| p.since).min().unwrap();
+                        let dur = (oldest + self.max_delay)
+                            .saturating_duration_since(Instant::now());
+                        if dur == Duration::ZERO {
+                            continue;
+                        }
+                        let (guard, _) = self.ready.wait_timeout(q, dur).unwrap();
+                        q = guard;
+                    }
+                }
+            };
+            let adapter = group[0].adapter.clone();
+            let mut rows: Vec<Vec<i32>> = Vec::new();
+            for p in &group {
+                rows.extend(p.rows.iter().cloned());
+            }
+            // a panicking exec (worker-pool scatter re-throws task panics
+            // on this thread) must fail this group's tickets, not kill
+            // the single dispatcher and wedge every future request
+            let result = catch_unwind(AssertUnwindSafe(|| exec(&adapter, &rows)))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "opaque panic payload".into());
+                    Err(anyhow!("classify panicked: {msg}"))
+                });
+            match result {
+                Ok(mut out) => {
+                    // fold outputs back per request, submission order
+                    for p in group {
+                        let rest = out.split_off(p.rows.len());
+                        p.ticket.fulfill(Ok(out));
+                        out = rest;
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for p in group {
+                        p.ticket.fulfill(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The serving engine: runtime + registry + pool + batcher, the shared
+/// state every connection handler and the dispatcher borrow.
+pub struct ServeEngine {
+    rt: Runtime,
+    model: ModelInfo,
+    /// the adapter registry (one base vector, N tenants)
+    pub registry: AdapterRegistry,
+    /// the shared scheduler fused forward passes shard across
+    pub pool: WorkerPool,
+    /// the request queue the HTTP layer submits into
+    pub batcher: MicroBatcher,
+}
+
+impl ServeEngine {
+    /// Assemble an engine for `cfg.model` serving from `base`.
+    pub fn new(rt: Runtime, cfg: &ServeConfig, base: Vec<f32>) -> Result<ServeEngine> {
+        cfg.validate()?;
+        let model = rt.model(&cfg.model)?.clone();
+        let registry =
+            AdapterRegistry::new(model.clone(), base, cfg.max_adapters, cfg.adapter_budget)?;
+        Ok(ServeEngine {
+            rt,
+            model,
+            registry,
+            pool: WorkerPool::new(cfg.workers),
+            batcher: MicroBatcher::new(cfg.max_batch_rows, cfg.flush_ms),
+        })
+    }
+
+    /// The served model's ABI description.
+    pub fn model(&self) -> &ModelInfo {
+        &self.model
+    }
+
+    /// The runtime (and through it, the compute backend).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Execute one fused classify for `adapter` over raw prompt rows:
+    /// checkout, pad every row to `seq_len`, shard the ragged batch
+    /// across the pool, fold per-row logits back in row order, release.
+    /// Bit-identical to a serial pass over the same rows for any worker
+    /// count.
+    pub fn classify(&self, adapter: &str, rows: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        if rows.is_empty() {
+            bail!("classify: no rows");
+        }
+        let vocab = self.model.vocab as i32;
+        for (r, row) in rows.iter().enumerate() {
+            if let Some(&t) = row.iter().find(|&&t| t < 0 || t >= vocab) {
+                bail!("classify: row {r} token {t} outside vocab 0..{vocab}");
+            }
+        }
+        let seq = self.model.seq_len;
+        let n = rows.len();
+        let co = self.registry.checkout(adapter)?;
+        let params: &[f32] = &co;
+        let chunks = self.pool.parallelism().min(n).max(1);
+        let per = (n + chunks - 1) / chunks;
+        let parts = self.pool.scatter(chunks, |c| -> Result<Vec<f32>> {
+            let lo = (c * per).min(n);
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                return Ok(Vec::new());
+            }
+            let mut tokens = Vec::with_capacity((hi - lo) * seq);
+            for row in &rows[lo..hi] {
+                tokens.extend(pad_prompt(row, seq));
+            }
+            self.rt.backend().logits_rows(&self.model, params, &tokens)
+        });
+        let mut out = Vec::with_capacity(n);
+        for part in parts {
+            for row in part?.chunks(self.model.vocab) {
+                out.push(row.to_vec());
+            }
+        }
+        drop(co); // revert-on-release: the base is whole again
+        if out.len() != n {
+            bail!("classify: folded {} rows for {n} requests", out.len());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+
+    /// Echo executor: logit row = [first token as f32]; records calls.
+    fn echo(adapter: &str, rows: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        if adapter == "boom" {
+            bail!("no such tenant");
+        }
+        Ok(rows.iter().map(|r| vec![r.first().copied().unwrap_or(-1) as f32]).collect())
+    }
+
+    #[test]
+    fn groups_flush_by_size_and_split_in_submission_order() {
+        let b = Arc::new(MicroBatcher::new(4, 60_000)); // deadline far away
+        let calls = Arc::new(AtomicUsize::new(0));
+        let dispatcher = {
+            let b = Arc::clone(&b);
+            let calls = Arc::clone(&calls);
+            thread::spawn(move || {
+                b.run(|a, rows| {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    echo(a, rows)
+                })
+            })
+        };
+        // 2 + 1 rows for "a" stay parked (size 3 < 4) until the fourth row
+        let t1 = b.submit("a", vec![vec![10], vec![11]]);
+        let t2 = b.submit("a", vec![vec![12]]);
+        let t3 = b.submit("a", vec![vec![13]]);
+        assert_eq!(t1.wait().unwrap(), vec![vec![10.0], vec![11.0]]);
+        assert_eq!(t2.wait().unwrap(), vec![vec![12.0]]);
+        assert_eq!(t3.wait().unwrap(), vec![vec![13.0]]);
+        // the whole group ran as ONE fused exec
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        b.shutdown();
+        dispatcher.join().unwrap();
+    }
+
+    #[test]
+    fn deadline_flushes_undersized_groups_and_errors_propagate() {
+        let b = Arc::new(MicroBatcher::new(1024, 1)); // size trigger unreachable
+        let dispatcher = {
+            let b = Arc::clone(&b);
+            thread::spawn(move || b.run(echo))
+        };
+        let t = b.submit("a", vec![vec![7]]);
+        assert_eq!(t.wait().unwrap(), vec![vec![7.0]]);
+        let e = b.submit("boom", vec![vec![1]]);
+        assert!(e.wait().unwrap_err().to_string().contains("no such tenant"));
+        b.shutdown();
+        dispatcher.join().unwrap();
+        // post-shutdown submits fail fast instead of hanging
+        let late = b.submit("a", vec![vec![1]]);
+        assert!(late.wait().is_err());
+    }
+
+    #[test]
+    fn panicking_exec_fails_the_group_but_not_the_dispatcher() {
+        let b = Arc::new(MicroBatcher::new(1, 60_000));
+        let dispatcher = {
+            let b = Arc::clone(&b);
+            thread::spawn(move || {
+                b.run(|a, rows| {
+                    if a == "kaboom" {
+                        panic!("backend exploded");
+                    }
+                    echo(a, rows)
+                })
+            })
+        };
+        let boom = b.submit("kaboom", vec![vec![1]]);
+        let err = boom.wait().unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err:#}");
+        // the dispatcher survived and still serves other tenants
+        let ok = b.submit("a", vec![vec![9]]);
+        assert_eq!(ok.wait().unwrap(), vec![vec![9.0]]);
+        b.shutdown();
+        dispatcher.join().unwrap();
+    }
+
+    #[test]
+    fn different_adapters_never_share_a_fused_batch() {
+        let b = Arc::new(MicroBatcher::new(2, 60_000));
+        let seen: Arc<Mutex<Vec<(String, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+        let dispatcher = {
+            let b = Arc::clone(&b);
+            let seen = Arc::clone(&seen);
+            thread::spawn(move || {
+                b.run(|a, rows| {
+                    seen.lock().unwrap().push((a.to_string(), rows.len()));
+                    echo(a, rows)
+                })
+            })
+        };
+        let ta = b.submit("a", vec![vec![1], vec![2]]);
+        let tb = b.submit("b", vec![vec![3], vec![4]]);
+        ta.wait().unwrap();
+        tb.wait().unwrap();
+        b.shutdown();
+        dispatcher.join().unwrap();
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 2, "{seen:?}");
+        assert!(seen.iter().all(|(_, n)| *n == 2), "{seen:?}");
+    }
+}

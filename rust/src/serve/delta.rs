@@ -1,0 +1,402 @@
+//! Sparse adapter deltas: a fine-tuned model as `base + delta`.
+//!
+//! Sparse-MeZO's defining property is that an update only ever touches
+//! masked coordinates, so a whole fine-tuning run compresses to the set
+//! of coordinates its masks selected plus their final values — a
+//! task-specific artifact proportional to `(1 - sparsity) * P`, not `P`.
+//! [`SparseDelta`] is that artifact:
+//!
+//! * **extract** — diff a tuned parameter vector against the base by
+//!   *bit* comparison, with an exact-sparsity certificate: when the
+//!   caller supplies the union of the run's per-step masks (from
+//!   [`replay_full`](crate::parallel::protocol::replay_full)), any
+//!   changed coordinate outside that support is a hard error, locking
+//!   the paper's §3.3 claim ("the update lives inside the mask") at
+//!   export time.
+//! * **swap** — the checkout primitive: exchange the delta's values with
+//!   the parameter vector's in place. One call installs the adapter
+//!   (and parks the base values in the delta); a second call restores
+//!   the base **bit-for-bit**. No parameter copy is ever made, which is
+//!   what lets the registry serve N tenants out of one resident vector.
+//! * **save/load** — a compact on-disk form: a 1-bit/param support
+//!   bitset (§3.3's quantized-mask representation) plus the raw f32
+//!   values in ascending coordinate order, with an FNV-1a payload
+//!   checksum. Exact by construction — the served logits are
+//!   bit-identical to evaluating the tuned parameters directly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::memory;
+use crate::parallel::protocol;
+use crate::runtime::{ModelInfo, Runtime};
+use crate::util::bitset;
+use crate::util::json::{self, Json};
+
+/// On-disk magic for the adapter format (version 1).
+const MAGIC: &[u8] = b"SMZA1\n";
+
+/// A compact sparse adapter: the coordinates a fine-tuning run touched
+/// and their values. At rest `val[k]` holds the *tuned* value of
+/// coordinate `idx[k]`; while checked out (after one [`swap`]) it holds
+/// the parked *base* value — see [`SparseDelta::swap`].
+///
+/// [`swap`]: SparseDelta::swap
+#[derive(Debug, Clone)]
+pub struct SparseDelta {
+    /// model name the delta belongs to (ABI fingerprint)
+    pub model: String,
+    /// parameter count of that model (ABI fingerprint)
+    pub n_params: usize,
+    /// touched coordinates, ascending
+    idx: Vec<u32>,
+    /// the touched coordinates' values (tuned at rest; base mid-checkout)
+    val: Vec<f32>,
+    /// free-form provenance (source journal, task, optimizer, steps)
+    pub meta: Json,
+}
+
+impl SparseDelta {
+    /// Diff `tuned` against `base` by bit comparison. With
+    /// `allowed = Some(support)` (a 1-bit/param bitset, normally the
+    /// mask union from a journal replay), any changed coordinate outside
+    /// the support fails the export — the exact-sparsity invariant.
+    pub fn extract(
+        model: &ModelInfo,
+        base: &[f32],
+        tuned: &[f32],
+        allowed: Option<&[u64]>,
+        meta: Json,
+    ) -> Result<SparseDelta> {
+        if base.len() != model.n_params || tuned.len() != model.n_params {
+            bail!(
+                "extract: base/tuned len {}/{} != model '{}' n_params {}",
+                base.len(),
+                tuned.len(),
+                model.name,
+                model.n_params
+            );
+        }
+        if let Some(bits) = allowed {
+            if bits.len() != bitset::words(model.n_params) {
+                bail!(
+                    "extract: support bitset has {} words, expected {}",
+                    bits.len(),
+                    bitset::words(model.n_params)
+                );
+            }
+        }
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..model.n_params {
+            if base[i].to_bits() == tuned[i].to_bits() {
+                continue;
+            }
+            if let Some(bits) = allowed {
+                if !bitset::get(bits, i) {
+                    bail!(
+                        "exact-sparsity invariant violated: coordinate {i} changed \
+                         ({} -> {}) outside the declared mask support",
+                        base[i],
+                        tuned[i]
+                    );
+                }
+            }
+            idx.push(i as u32);
+            val.push(tuned[i]);
+        }
+        Ok(SparseDelta { model: model.name.clone(), n_params: model.n_params, idx, val, meta })
+    }
+
+    /// Materialize an adapter from a step journal: rebuild the journal's
+    /// config from its self-describing header, replay it from `base`
+    /// (no forward passes), and extract the delta under the replay's
+    /// mask-union certificate. `base` must be the parameter vector the
+    /// journaled run started from — the registry's resident base.
+    pub fn from_journal(
+        rt: &Runtime,
+        model: &ModelInfo,
+        base: &[f32],
+        path: &Path,
+        mut meta: Vec<(&str, Json)>,
+    ) -> Result<SparseDelta> {
+        let (header, records) = protocol::load_journal(path)?;
+        let cfg = protocol::config_from_header(&header)
+            .with_context(|| format!("journal {} header", path.display()))?;
+        if cfg.model != model.name {
+            bail!("journal is for model '{}', server hosts '{}'", cfg.model, model.name);
+        }
+        let outcome = protocol::replay_full(rt, model, &cfg, &header, base, &records)?;
+        meta.extend([
+            ("source", Json::Str(format!("journal:{}", path.display()))),
+            ("task", Json::Str(cfg.task.clone())),
+            ("optimizer", Json::Str(cfg.optimizer.clone())),
+            ("steps", Json::Num(outcome.steps as f64)),
+        ]);
+        SparseDelta::extract(model, base, &outcome.params, Some(&outcome.mask_union), Json::obj(meta))
+    }
+
+    /// Number of touched coordinates.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// The touched coordinates, ascending.
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// The stored values (tuned at rest, parked base values mid-checkout).
+    pub fn values(&self) -> &[f32] {
+        &self.val
+    }
+
+    /// The support as a 1-bit/param bitset (§3.3 representation).
+    pub fn support_bitset(&self) -> Vec<u64> {
+        let mut bits = bitset::new(self.n_params);
+        for &i in &self.idx {
+            bitset::set(&mut bits, i as usize);
+        }
+        bits
+    }
+
+    /// Host bytes this adapter accounts for in the registry budget.
+    pub fn host_bytes(&self) -> usize {
+        memory::sparse_adapter_bytes(self.n_params, self.nnz())
+    }
+
+    /// Exchange the delta's stored values with `params` at the support
+    /// coordinates. **Involution**: the first call installs the tuned
+    /// values (checkout) and parks the base values in the delta; the
+    /// second call restores `params` to its prior state bit-for-bit
+    /// (release). No copy of `params` is ever taken.
+    pub fn swap(&mut self, params: &mut [f32]) {
+        debug_assert_eq!(params.len(), self.n_params);
+        for (i, v) in self.idx.iter().zip(self.val.iter_mut()) {
+            std::mem::swap(&mut params[*i as usize], v);
+        }
+    }
+
+    /// Write the compact on-disk form (creating parent dirs); returns
+    /// bytes written. Layout: magic, one JSON header line, the support
+    /// bitset (LE u64 words), the values (LE f32, ascending coordinate
+    /// order). Must be called at rest (not mid-checkout), or the parked
+    /// base values would be serialized as the adapter.
+    pub fn save(&self, path: &Path) -> Result<usize> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let bits = self.support_bitset();
+        let mut payload = Vec::with_capacity(bits.len() * 8 + self.val.len() * 4);
+        for w in &bits {
+            payload.extend_from_slice(&w.to_le_bytes());
+        }
+        for v in &self.val {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let header = Json::obj(vec![
+            ("kind", Json::Str("sparse-adapter".into())),
+            ("model", Json::Str(self.model.clone())),
+            ("n_params", Json::Num(self.n_params as f64)),
+            ("nnz", Json::Num(self.nnz() as f64)),
+            ("checksum", Json::Str(format!("{:016x}", fnv64(&payload)))),
+            ("meta", self.meta.clone()),
+        ]);
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let head = header.to_string();
+        f.write_all(MAGIC)?;
+        f.write_all(head.as_bytes())?;
+        f.write_all(b"\n")?;
+        f.write_all(&payload)?;
+        Ok(MAGIC.len() + head.len() + 1 + payload.len())
+    }
+
+    /// Read an adapter back, validating magic, model ABI, payload length,
+    /// support/nnz consistency and the checksum. Values round-trip
+    /// bit-for-bit.
+    pub fn load(path: &Path, expect: &ModelInfo) -> Result<SparseDelta> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open adapter {path:?}"))?
+            .read_to_end(&mut bytes)?;
+        if !bytes.starts_with(MAGIC) {
+            bail!("{path:?} is not a sparse-adapter file (bad magic)");
+        }
+        let rest = &bytes[MAGIC.len()..];
+        let nl = rest
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| anyhow!("{path:?}: truncated header"))?;
+        let header = json::parse(std::str::from_utf8(&rest[..nl])?)?;
+        if header.req("kind")?.as_str()? != "sparse-adapter" {
+            bail!("{path:?}: wrong kind");
+        }
+        let model = header.req("model")?.as_str()?.to_string();
+        let n_params = header.req("n_params")?.as_usize()?;
+        let nnz = header.req("nnz")?.as_usize()?;
+        if model != expect.name || n_params != expect.n_params {
+            bail!(
+                "adapter is for model '{model}' ({n_params} params), server hosts '{}' ({})",
+                expect.name,
+                expect.n_params
+            );
+        }
+        let payload = &rest[nl + 1..];
+        let words = bitset::words(n_params);
+        let want = words * 8 + nnz * 4;
+        if payload.len() != want {
+            bail!("{path:?}: payload {} bytes, expected {want}", payload.len());
+        }
+        let checksum = header.req("checksum")?.as_str()?.to_string();
+        let got = format!("{:016x}", fnv64(payload));
+        if got != checksum {
+            bail!("{path:?}: checksum mismatch ({got} != {checksum})");
+        }
+        let mut bits = Vec::with_capacity(words);
+        for chunk in payload[..words * 8].chunks_exact(8) {
+            bits.push(u64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        if bitset::count(&bits) != nnz {
+            bail!("{path:?}: support popcount {} != nnz {nnz}", bitset::count(&bits));
+        }
+        let idx = bitset::indices(&bits, n_params);
+        let mut val = Vec::with_capacity(nnz);
+        for chunk in payload[words * 8..].chunks_exact(4) {
+            val.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(SparseDelta {
+            model,
+            n_params,
+            idx,
+            val,
+            meta: header.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+/// FNV-1a over a byte slice (the checkpoint/prng family's hash choice).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{LayoutEntry, ModelInfo};
+    use std::collections::BTreeMap;
+
+    fn toy_model(n_params: usize) -> ModelInfo {
+        ModelInfo {
+            name: "toy".into(),
+            family: "llama".into(),
+            size: "tiny".into(),
+            n_layers: 1,
+            d_model: 4,
+            n_heads: 1,
+            d_ff: 8,
+            vocab: 16,
+            seq_len: 8,
+            batch: 2,
+            window: 0,
+            n_params,
+            n_lora_params: 0,
+            lora_rank: 0,
+            n_entries: 1,
+            n_hypers: 8,
+            n_metrics: 8,
+            layout: vec![LayoutEntry {
+                name: "w".into(),
+                shape: vec![n_params],
+                kind: "matrix".into(),
+                offset: 0,
+                size: n_params,
+                layer_id: 0,
+            }],
+            lora_layout: vec![],
+            programs: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn extract_swap_is_a_bit_exact_involution() {
+        let m = toy_model(10);
+        let base: Vec<f32> = (0..10).map(|i| (i as f32).sin()).collect();
+        let mut tuned = base.clone();
+        tuned[2] = 7.25;
+        tuned[5] = -base[5]; // sign-only change must count as changed
+        tuned[9] = f32::MIN_POSITIVE; // tiny value survives the round trip
+        let mut d = SparseDelta::extract(&m, &base, &tuned, None, Json::Null).unwrap();
+        assert_eq!(d.indices(), &[2, 5, 9]);
+        let mut p = base.clone();
+        d.swap(&mut p); // checkout: install tuned
+        for i in 0..10 {
+            assert_eq!(p[i].to_bits(), tuned[i].to_bits(), "coord {i}");
+        }
+        d.swap(&mut p); // release: restore base
+        for i in 0..10 {
+            assert_eq!(p[i].to_bits(), base[i].to_bits(), "coord {i}");
+        }
+        // and the delta is whole again (tuned values at rest)
+        assert_eq!(d.values()[0].to_bits(), 7.25f32.to_bits());
+    }
+
+    #[test]
+    fn extract_enforces_the_support_certificate() {
+        let m = toy_model(8);
+        let base = vec![1.0f32; 8];
+        let mut tuned = base.clone();
+        tuned[3] = 2.0;
+        tuned[6] = 3.0;
+        let mut ok = bitset::new(8);
+        bitset::set(&mut ok, 3);
+        bitset::set(&mut ok, 6);
+        assert!(SparseDelta::extract(&m, &base, &tuned, Some(&ok), Json::Null).is_ok());
+        let mut narrow = bitset::new(8);
+        bitset::set(&mut narrow, 3);
+        let err = SparseDelta::extract(&m, &base, &tuned, Some(&narrow), Json::Null).unwrap_err();
+        assert!(err.to_string().contains("coordinate 6"), "{err:#}");
+    }
+
+    #[test]
+    fn save_load_round_trips_bit_exactly() {
+        let m = toy_model(100);
+        let base: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).cos()).collect();
+        let mut tuned = base.clone();
+        for i in (0..100).step_by(7) {
+            tuned[i] = base[i] * 1.5 + 1e-4;
+        }
+        let d = SparseDelta::extract(
+            &m,
+            &base,
+            &tuned,
+            None,
+            Json::obj(vec![("task", Json::Str("unit".into()))]),
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join(format!("smz_delta_{}", std::process::id()));
+        let path = dir.join("toy.adapter");
+        let written = d.save(&path).unwrap();
+        assert_eq!(written, std::fs::metadata(&path).unwrap().len() as usize);
+        let back = SparseDelta::load(&path, &m).unwrap();
+        assert_eq!(back.indices(), d.indices());
+        for (a, b) in back.values().iter().zip(d.values()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.meta.req("task").unwrap().as_str().unwrap(), "unit");
+        // wrong model rejected; corrupted payload rejected
+        assert!(SparseDelta::load(&path, &toy_model(99)).is_err());
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(SparseDelta::load(&path, &m).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

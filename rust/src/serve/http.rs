@@ -1,0 +1,418 @@
+//! Minimal std-only HTTP/1.1 loopback server + client.
+//!
+//! No HTTP crate exists in the vendored dependency set, so this module
+//! hand-rolls exactly the subset the serving API needs: one request per
+//! connection (`Connection: close`), `Content-Length` bodies, JSON in
+//! and out. Endpoints:
+//!
+//! | method + path        | action |
+//! |----------------------|--------|
+//! | `GET  /healthz`      | liveness + registry/queue gauges |
+//! | `GET  /v1/adapters`  | list registered adapters (nnz, bytes, hits) |
+//! | `POST /v1/adapters`  | register: `{"name", "journal": path}` replays a step journal against the base and extracts the delta under its mask-union certificate; `{"name", "delta": path}` loads a saved `.adapter` file |
+//! | `POST /v1/classify`  | `{"adapter", "prompts": [[tok,...],...]}` → per-row logits + candidate-free argmax, micro-batched with concurrent same-adapter requests |
+//!
+//! Logits cross the wire losslessly: `f32 → f64` is exact, the JSON
+//! writer emits shortest round-trip decimal for f64, and the client
+//! parses it back to the identical bits — so a served classification is
+//! bit-comparable to offline evaluation (asserted in `tests/serve.rs`).
+//!
+//! Threading: one accept thread, one detached thread per connection
+//! (loopback traffic, bounded by the OS backlog), one dispatcher thread
+//! draining the [`MicroBatcher`](super::batching::MicroBatcher).
+//! [`RunningServer::shutdown`] flips the stop flag, drains the batcher,
+//! pokes the listener with a loopback connect, and joins.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::batching::ServeEngine;
+use super::delta::SparseDelta;
+
+/// A parsed inbound request.
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Handle to a live server; dropping it shuts the server down.
+pub struct RunningServer {
+    /// the bound loopback address (`127.0.0.1:port`)
+    pub addr: SocketAddr,
+    engine: Arc<ServeEngine>,
+    stop_flag: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    dispatch: Option<JoinHandle<()>>,
+}
+
+impl RunningServer {
+    /// Stop accepting, drain in-flight batches, join the server threads.
+    pub fn shutdown(mut self) {
+        self.stop_impl();
+    }
+
+    /// Block on the accept thread forever (the CLI `serve` command's
+    /// foreground mode).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatch.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_impl(&mut self) {
+        if self.accept.is_none() && self.dispatch.is_none() {
+            return;
+        }
+        self.stop_flag.store(true, Ordering::Release);
+        self.engine.batcher.shutdown();
+        // poke the blocking accept() so it observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatch.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RunningServer {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+/// Bind `127.0.0.1:port` (0 = ephemeral) and start serving `engine`.
+pub fn serve(engine: Arc<ServeEngine>, port: u16) -> Result<RunningServer> {
+    let listener =
+        TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding port {port}"))?;
+    let addr = listener.local_addr()?;
+    let stop_flag = Arc::new(AtomicBool::new(false));
+
+    let dispatch = {
+        let engine = Arc::clone(&engine);
+        thread::Builder::new()
+            .name("smz-serve-batch".into())
+            .spawn(move || engine.batcher.run(|adapter, rows| engine.classify(adapter, rows)))?
+    };
+    let accept = {
+        let engine = Arc::clone(&engine);
+        let stop_flag = Arc::clone(&stop_flag);
+        thread::Builder::new().name("smz-serve-accept".into()).spawn(move || {
+            for stream in listener.incoming() {
+                if stop_flag.load(Ordering::Acquire) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let engine = Arc::clone(&engine);
+                // detached per-connection worker; loopback-scale only
+                let _ = thread::Builder::new()
+                    .name("smz-serve-conn".into())
+                    .spawn(move || handle_connection(&engine, stream));
+            }
+        })?
+    };
+    Ok(RunningServer {
+        addr,
+        engine,
+        stop_flag,
+        accept: Some(accept),
+        dispatch: Some(dispatch),
+    })
+}
+
+/// Serve one request on one connection; errors end the connection.
+fn handle_connection(engine: &ServeEngine, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let response = match read_request(&mut stream) {
+        Ok(req) => route(engine, &req),
+        Err(e) => (400, error_json(&e)),
+    };
+    let _ = write_response(&mut stream, response.0, &response.1);
+}
+
+/// `{"error": "<context chain>"}`.
+fn error_json(e: &anyhow::Error) -> Json {
+    Json::obj(vec![("error", Json::Str(format!("{e:#}")))])
+}
+
+/// Dispatch one request to its endpoint.
+fn route(engine: &ServeEngine, req: &Request) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, healthz(engine)),
+        ("GET", "/v1/adapters") => (200, list_adapters(engine)),
+        ("POST", "/v1/adapters") => match post_adapter(engine, &req.body) {
+            Ok(body) => (200, body),
+            Err(e) => (400, error_json(&e)),
+        },
+        ("POST", "/v1/classify") => match post_classify(engine, &req.body) {
+            Ok(body) => (200, body),
+            Err(ClassifyError::UnknownAdapter(e)) => (404, error_json(&e)),
+            Err(ClassifyError::Bad(e)) => (400, error_json(&e)),
+        },
+        _ => (
+            404,
+            Json::obj(vec![(
+                "error",
+                Json::Str(format!("no route {} {}", req.method, req.path)),
+            )]),
+        ),
+    }
+}
+
+fn healthz(engine: &ServeEngine) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("platform", Json::Str(engine.runtime().backend().platform().to_string())),
+        ("model", Json::Str(engine.model().name.clone())),
+        ("adapters", Json::Num(engine.registry.len() as f64)),
+        ("pending_requests", Json::Num(engine.batcher.pending() as f64)),
+    ])
+}
+
+fn list_adapters(engine: &ServeEngine) -> Json {
+    let stats = engine.registry.stats();
+    Json::obj(vec![
+        (
+            "adapters",
+            Json::Arr(
+                stats
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::Str(s.name.clone())),
+                            ("nnz", Json::Num(s.nnz as f64)),
+                            ("bytes", Json::Num(s.bytes as f64)),
+                            ("hits", Json::Num(s.hits as f64)),
+                            ("in_use", Json::Bool(s.in_use)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("bytes", Json::Num(engine.registry.bytes() as f64)),
+        ("byte_budget", Json::Num(engine.registry.byte_budget() as f64)),
+    ])
+}
+
+/// Register an adapter from a journal replay or a saved adapter file.
+fn post_adapter(engine: &ServeEngine, body: &str) -> Result<Json> {
+    let doc = json::parse(body).context("request body")?;
+    let name = doc.req("name")?.as_str()?.to_string();
+    let delta = if let Some(j) = doc.get("journal") {
+        let path = j.as_str()?.to_string();
+        let base = engine.registry.base_snapshot();
+        SparseDelta::from_journal(
+            engine.runtime(),
+            engine.model(),
+            &base,
+            Path::new(&path),
+            vec![("name", Json::Str(name.clone()))],
+        )?
+    } else if let Some(d) = doc.get("delta") {
+        SparseDelta::load(Path::new(d.as_str()?), engine.model())?
+    } else {
+        bail!("adapter upload needs a 'journal' or 'delta' path");
+    };
+    let nnz = delta.nnz();
+    let bytes = delta.host_bytes();
+    let evicted = engine.registry.insert(&name, delta)?;
+    Ok(Json::obj(vec![
+        ("name", Json::Str(name)),
+        ("nnz", Json::Num(nnz as f64)),
+        ("bytes", Json::Num(bytes as f64)),
+        ("evicted", Json::Arr(evicted.into_iter().map(Json::Str).collect())),
+    ]))
+}
+
+/// Classify failures that map to distinct HTTP statuses.
+enum ClassifyError {
+    /// the named adapter is not registered (404)
+    UnknownAdapter(anyhow::Error),
+    /// anything else the caller got wrong (400)
+    Bad(anyhow::Error),
+}
+
+impl From<anyhow::Error> for ClassifyError {
+    fn from(e: anyhow::Error) -> ClassifyError {
+        ClassifyError::Bad(e)
+    }
+}
+
+/// Micro-batched classification: parse rows, enqueue, block on the
+/// ticket, render logits + argmax.
+fn post_classify(engine: &ServeEngine, body: &str) -> Result<Json, ClassifyError> {
+    let doc = json::parse(body).context("request body")?;
+    let adapter = doc.req("adapter")?.as_str()?.to_string();
+    if !engine.registry.contains(&adapter) {
+        return Err(ClassifyError::UnknownAdapter(anyhow!(
+            "no adapter '{adapter}' registered"
+        )));
+    }
+    let prompts = doc.req("prompts")?.as_arr()?;
+    if prompts.is_empty() {
+        return Err(ClassifyError::Bad(anyhow!("'prompts' is empty")));
+    }
+    let mut rows: Vec<Vec<i32>> = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        let mut row = Vec::new();
+        for t in p.as_arr()? {
+            row.push(t.as_usize()? as i32);
+        }
+        rows.push(row);
+    }
+    let n = rows.len();
+    let logits = engine.batcher.submit(&adapter, rows).wait()?;
+    let argmax: Vec<Json> = logits
+        .iter()
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            Json::Num(best as f64)
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("adapter", Json::Str(adapter)),
+        ("rows", Json::Num(n as f64)),
+        ("vocab", Json::Num(engine.model().vocab as f64)),
+        ("logits", Json::Arr(logits.iter().map(|r| Json::from_f32s(r)).collect())),
+        ("argmax", Json::Arr(argmax)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// wire plumbing
+// ---------------------------------------------------------------------------
+
+/// Find the first occurrence of `needle` in `haystack`.
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one request: request line, headers (only `Content-Length` is
+/// interpreted), body.
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > (1 << 20) {
+            bail!("request headers too large");
+        }
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed mid-headers");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..header_end]).context("non-utf8 headers")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("request line lacks a path"))?.to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("Content-Length")?;
+            }
+        }
+    }
+    if content_length > (64 << 20) {
+        bail!("request body too large ({content_length} bytes)");
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, body: String::from_utf8(body).context("non-utf8 body")? })
+}
+
+/// Canonical reason phrases for the statuses this server emits.
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Write one JSON response and flush.
+fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
+    let payload = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_text(status),
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// The curl-free loopback client: one request, parsed JSON back.
+/// `(status, body)`; an empty response body parses as `Json::Null`.
+/// This is the client `tests/serve.rs`, the CI smoke and the README
+/// example all share.
+pub fn loopback_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> Result<(u16, Json)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let payload = body.map(|b| b.to_string()).unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let header_end =
+        find_subslice(&raw, b"\r\n\r\n").ok_or_else(|| anyhow!("malformed response"))?;
+    let head = std::str::from_utf8(&raw[..header_end])?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| anyhow!("no status in '{head}'"))?
+        .parse()
+        .context("status code")?;
+    let body_text = std::str::from_utf8(&raw[header_end + 4..])?;
+    let body = if body_text.trim().is_empty() {
+        Json::Null
+    } else {
+        json::parse(body_text).with_context(|| format!("response body of {method} {path}"))?
+    };
+    Ok((status, body))
+}

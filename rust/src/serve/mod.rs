@@ -1,0 +1,41 @@
+//! The serving layer: sparse adapters as first-class artifacts.
+//!
+//! A Sparse-MeZO fine-tune only ever moves masked coordinates, so a
+//! finished run is exactly `base + sparse_delta` — a compact,
+//! task-specific adapter in the spirit of the paper's §3.3 mask-as-bits
+//! memory argument, orders of magnitude smaller than the per-task full
+//! parameter copies dense MeZO would hand you. This subsystem turns
+//! that property into a **batched multi-tenant inference server**:
+//!
+//! * [`delta`] — extract / certify / save / load / swap sparse adapter
+//!   deltas. Export checks the exact-sparsity invariant (delta support
+//!   ⊆ the run's mask union, certified by the PR-2 journal replay), and
+//!   `swap` installs or reverts an adapter in place, bit-for-bit, with
+//!   zero parameter copies.
+//! * [`registry`] — one resident base vector + N named adapters with
+//!   checkout/release guards, LRU eviction under a count cap and a byte
+//!   budget accounted via
+//!   [`memory::sparse_adapter_bytes`](crate::coordinator::memory::sparse_adapter_bytes).
+//! * [`batching`] — the dynamic micro-batching queue (size- and
+//!   deadline-triggered flush, same-adapter grouping) and the
+//!   [`ServeEngine`](batching::ServeEngine) that shards fused forward
+//!   passes across the crate's one scheduler, the
+//!   [`WorkerPool`](crate::parallel::WorkerPool), folding per-row
+//!   logits back in request order — bit-identical to a serial pass.
+//! * [`http`] — a std-only HTTP/1.1 loopback server (`POST
+//!   /v1/classify`, `GET|POST /v1/adapters`, `GET /healthz`) plus the
+//!   curl-free loopback client, driven by the `serve` CLI subcommand.
+//!
+//! End-to-end contract (locked by `tests/serve.rs`): train → journal →
+//! materialize adapter by replay → register → classify over HTTP, and
+//! the served logits equal offline evaluation of the tuned parameters
+//! **bit-for-bit**, under concurrent requests to different adapters.
+
+pub mod batching;
+pub mod delta;
+pub mod http;
+pub mod registry;
+
+pub use batching::{MicroBatcher, ServeEngine};
+pub use delta::SparseDelta;
+pub use registry::AdapterRegistry;

@@ -1,0 +1,434 @@
+//! The in-process adapter registry: one base, N tenants, zero copies.
+//!
+//! The registry owns exactly **one** resident parameter vector (the
+//! base) plus N named [`SparseDelta`] adapters. Serving a tenant is a
+//! *checkout*: the adapter's values are swapped into the base in place
+//! (O(nnz), no allocation), the forward passes run against the borrowed
+//! vector, and dropping the [`Checkout`] guard swaps the base values
+//! back bit-for-bit (release). Compare the naive design — a full
+//! fine-tuned copy per tenant — against
+//! [`memory::serving_breakdown`](crate::coordinator::memory::serving_breakdown),
+//! which this registry's byte accounting feeds.
+//!
+//! Eviction is LRU under two simultaneous caps: an adapter-count cap
+//! and a byte budget (each adapter accounted at
+//! [`memory::sparse_adapter_bytes`](crate::coordinator::memory::sparse_adapter_bytes)).
+//! A checked-out adapter is never evicted.
+//!
+//! Lock order: `base` **before** `entries`, always. `checkout` takes
+//! base then entries (releasing entries before returning); the guard's
+//! drop takes entries while still holding base. No path takes entries
+//! and then waits on base, so the order is acyclic.
+
+use std::collections::BTreeMap;
+use std::ops::Deref;
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::memory;
+use crate::runtime::ModelInfo;
+
+use super::delta::SparseDelta;
+
+/// One registered adapter plus its bookkeeping.
+struct Entry {
+    delta: SparseDelta,
+    bytes: usize,
+    hits: u64,
+    last_used: u64,
+    in_use: bool,
+}
+
+/// Mutable registry state behind the `entries` lock.
+struct Entries {
+    map: BTreeMap<String, Entry>,
+    bytes: usize,
+    clock: u64,
+}
+
+/// Public snapshot of one adapter's bookkeeping (the `/v1/adapters`
+/// listing).
+#[derive(Debug, Clone)]
+pub struct AdapterStat {
+    /// adapter name
+    pub name: String,
+    /// touched coordinates
+    pub nnz: usize,
+    /// host bytes accounted against the budget
+    pub bytes: usize,
+    /// completed checkouts
+    pub hits: u64,
+    /// currently checked out
+    pub in_use: bool,
+}
+
+/// The adapter registry. See the module docs for the locking contract.
+pub struct AdapterRegistry {
+    model: ModelInfo,
+    base: Mutex<Vec<f32>>,
+    entries: Mutex<Entries>,
+    max_adapters: usize,
+    byte_budget: usize,
+}
+
+impl AdapterRegistry {
+    /// A registry serving `model` from `base`, holding at most
+    /// `max_adapters` adapters within `byte_budget` accounted bytes.
+    pub fn new(
+        model: ModelInfo,
+        base: Vec<f32>,
+        max_adapters: usize,
+        byte_budget: usize,
+    ) -> Result<AdapterRegistry> {
+        if base.len() != model.n_params {
+            bail!("registry base has {} params, model '{}' expects {}", base.len(), model.name, model.n_params);
+        }
+        if max_adapters == 0 || byte_budget == 0 {
+            bail!("registry caps must be positive (max_adapters {max_adapters}, byte_budget {byte_budget})");
+        }
+        Ok(AdapterRegistry {
+            model,
+            base: Mutex::new(base),
+            entries: Mutex::new(Entries { map: BTreeMap::new(), bytes: 0, clock: 0 }),
+            max_adapters,
+            byte_budget,
+        })
+    }
+
+    /// The model this registry serves.
+    pub fn model(&self) -> &ModelInfo {
+        &self.model
+    }
+
+    /// A copy of the resident base parameters. Blocks until no adapter
+    /// is checked out, so the snapshot is always the *base*, never a
+    /// tenant's tuned vector — the invariant adapter materialization
+    /// relies on.
+    pub fn base_snapshot(&self) -> Vec<f32> {
+        self.base.lock().unwrap().clone()
+    }
+
+    /// Register (or replace) `name`. Evicts least-recently-used
+    /// adapters as needed to respect both caps; returns the evicted
+    /// names. The eviction plan is computed **before** anything is
+    /// registered, so a refused insert (adapter alone over the byte
+    /// budget, or nothing evictable because every resident adapter is
+    /// checked out) leaves the registry exactly as it was.
+    pub fn insert(&self, name: &str, delta: SparseDelta) -> Result<Vec<String>> {
+        if delta.model != self.model.name || delta.n_params != self.model.n_params {
+            bail!(
+                "adapter '{name}' is for model '{}' ({} params); registry hosts '{}' ({})",
+                delta.model,
+                delta.n_params,
+                self.model.name,
+                self.model.n_params
+            );
+        }
+        let bytes = delta.host_bytes();
+        if bytes > self.byte_budget {
+            bail!(
+                "adapter '{name}' needs {bytes} bytes, over the whole registry budget {}",
+                self.byte_budget
+            );
+        }
+        let mut entries = self.entries.lock().unwrap();
+        let replaced_bytes = match entries.map.get(name) {
+            Some(old) if old.in_use => {
+                bail!("adapter '{name}' is checked out; cannot replace it")
+            }
+            Some(old) => old.bytes,
+            None => 0,
+        };
+        let existed = entries.map.contains_key(name);
+
+        // plan LRU eviction against the *projected* state; commit only
+        // if both caps can actually be satisfied
+        let mut projected_len = entries.map.len() + usize::from(!existed);
+        let mut projected_bytes = entries.bytes - replaced_bytes + bytes;
+        let mut victims: Vec<String> = Vec::new();
+        while projected_len > self.max_adapters || projected_bytes > self.byte_budget {
+            let victim = entries
+                .map
+                .iter()
+                .filter(|(n, e)| !e.in_use && n.as_str() != name && !victims.contains(*n))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(n, _)| n.clone());
+            let Some(victim) = victim else {
+                bail!(
+                    "cannot register adapter '{name}': registry would hold {projected_bytes} \
+                     bytes / {projected_len} adapters with nothing evictable (all checked out); \
+                     '{name}' was NOT registered",
+                );
+            };
+            projected_len -= 1;
+            projected_bytes -= entries.map.get(&victim).map(|e| e.bytes).unwrap_or(0);
+            victims.push(victim);
+        }
+
+        // commit: evict the plan, replace the old entry, insert the new
+        for v in &victims {
+            let e = entries.map.remove(v).unwrap();
+            entries.bytes -= e.bytes;
+        }
+        if existed {
+            let e = entries.map.remove(name).unwrap();
+            entries.bytes -= e.bytes;
+        }
+        entries.clock += 1;
+        let stamp = entries.clock;
+        entries.map.insert(
+            name.to_string(),
+            Entry { delta, bytes, hits: 0, last_used: stamp, in_use: false },
+        );
+        entries.bytes += bytes;
+        Ok(victims)
+    }
+
+    /// Remove `name` (error if absent or checked out).
+    pub fn remove(&self, name: &str) -> Result<()> {
+        let mut entries = self.entries.lock().unwrap();
+        match entries.map.get(name) {
+            None => bail!("no adapter '{name}' registered"),
+            Some(e) if e.in_use => bail!("adapter '{name}' is checked out"),
+            Some(_) => {
+                let e = entries.map.remove(name).unwrap();
+                entries.bytes -= e.bytes;
+                Ok(())
+            }
+        }
+    }
+
+    /// Whether `name` is registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.lock().unwrap().map.contains_key(name)
+    }
+
+    /// Registered adapter count.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().map.len()
+    }
+
+    /// Whether no adapter is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total accounted adapter bytes.
+    pub fn bytes(&self) -> usize {
+        self.entries.lock().unwrap().bytes
+    }
+
+    /// The registry's byte budget.
+    pub fn byte_budget(&self) -> usize {
+        self.byte_budget
+    }
+
+    /// Bookkeeping snapshot of every adapter, name order.
+    pub fn stats(&self) -> Vec<AdapterStat> {
+        let entries = self.entries.lock().unwrap();
+        entries
+            .map
+            .iter()
+            .map(|(name, e)| AdapterStat {
+                name: name.clone(),
+                nnz: e.delta.nnz(),
+                bytes: e.bytes,
+                hits: e.hits,
+                in_use: e.in_use,
+            })
+            .collect()
+    }
+
+    /// Check `name` out: swap its values into the base and return a
+    /// guard dereferencing to the tuned parameter vector. Exclusive —
+    /// a second checkout blocks until the guard drops (the micro-batcher
+    /// serializes same-server forward passes anyway). Dropping the guard
+    /// swaps the base back bit-for-bit.
+    pub fn checkout(&self, name: &str) -> Result<Checkout<'_>> {
+        // lock order: base first, then entries (see module docs)
+        let mut params = self.base.lock().unwrap();
+        let mut entries = self.entries.lock().unwrap();
+        entries.clock += 1;
+        let stamp = entries.clock;
+        let Some(entry) = entries.map.get_mut(name) else {
+            bail!("no adapter '{name}' registered");
+        };
+        entry.delta.swap(&mut params);
+        entry.in_use = true;
+        entry.hits += 1;
+        entry.last_used = stamp;
+        drop(entries);
+        Ok(Checkout { registry: self, name: name.to_string(), params: Some(params) })
+    }
+}
+
+/// RAII checkout guard: derefs to the tuned parameter slice; dropping it
+/// reverts the base (release). See [`AdapterRegistry::checkout`].
+pub struct Checkout<'a> {
+    registry: &'a AdapterRegistry,
+    name: String,
+    params: Option<MutexGuard<'a, Vec<f32>>>,
+}
+
+impl Deref for Checkout<'_> {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.params.as_ref().expect("checkout guard intact")
+    }
+}
+
+impl Drop for Checkout<'_> {
+    fn drop(&mut self) {
+        // still holding the base lock — entries after base is the
+        // registry's one legal order
+        let mut entries = self.registry.entries.lock().unwrap();
+        if let (Some(entry), Some(params)) =
+            (entries.map.get_mut(&self.name), self.params.as_mut())
+        {
+            entry.delta.swap(params);
+            entry.in_use = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::LayoutEntry;
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    fn toy_model(n_params: usize) -> ModelInfo {
+        ModelInfo {
+            name: "toy".into(),
+            family: "llama".into(),
+            size: "tiny".into(),
+            n_layers: 1,
+            d_model: 4,
+            n_heads: 1,
+            d_ff: 8,
+            vocab: 16,
+            seq_len: 8,
+            batch: 2,
+            window: 0,
+            n_params,
+            n_lora_params: 0,
+            lora_rank: 0,
+            n_entries: 1,
+            n_hypers: 8,
+            n_metrics: 8,
+            layout: vec![LayoutEntry {
+                name: "w".into(),
+                shape: vec![n_params],
+                kind: "matrix".into(),
+                offset: 0,
+                size: n_params,
+                layer_id: 0,
+            }],
+            lora_layout: vec![],
+            programs: BTreeMap::new(),
+        }
+    }
+
+    fn delta_touching(model: &ModelInfo, base: &[f32], coords: &[usize], bump: f32) -> SparseDelta {
+        let mut tuned = base.to_vec();
+        for &c in coords {
+            tuned[c] = base[c] + bump;
+        }
+        SparseDelta::extract(model, base, &tuned, None, Json::Null).unwrap()
+    }
+
+    #[test]
+    fn checkout_installs_and_release_restores_bit_exactly() {
+        let m = toy_model(12);
+        let base: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let reg = AdapterRegistry::new(m.clone(), base.clone(), 4, 1 << 20).unwrap();
+        reg.insert("a", delta_touching(&m, &base, &[1, 5], 10.0)).unwrap();
+        {
+            let co = reg.checkout("a").unwrap();
+            assert_eq!(co[1], base[1] + 10.0);
+            assert_eq!(co[5], base[5] + 10.0);
+            assert_eq!(co[0].to_bits(), base[0].to_bits());
+        } // release
+        assert_eq!(reg.base_snapshot(), base);
+        // a second checkout cycle still works (the swap healed)
+        {
+            let co = reg.checkout("a").unwrap();
+            assert_eq!(co[1], base[1] + 10.0);
+        }
+        assert_eq!(reg.base_snapshot(), base);
+        assert_eq!(reg.stats()[0].hits, 2);
+        assert!(reg.checkout("missing").is_err());
+    }
+
+    #[test]
+    fn lru_eviction_respects_count_and_bytes() {
+        let m = toy_model(64);
+        let base = vec![1.0f32; 64];
+        let per = memory::sparse_adapter_bytes(64, 4);
+        // budget fits exactly two adapters of nnz 4
+        let reg = AdapterRegistry::new(m.clone(), base.clone(), 8, 2 * per).unwrap();
+        reg.insert("a", delta_touching(&m, &base, &[0, 1, 2, 3], 1.0)).unwrap();
+        reg.insert("b", delta_touching(&m, &base, &[4, 5, 6, 7], 1.0)).unwrap();
+        // touch "a" so "b" becomes least-recent
+        drop(reg.checkout("a").unwrap());
+        let evicted = reg.insert("c", delta_touching(&m, &base, &[8, 9, 10, 11], 1.0)).unwrap();
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert!(reg.contains("a") && reg.contains("c") && !reg.contains("b"));
+        assert!(reg.bytes() <= 2 * per);
+        // count cap: max_adapters 2 with a huge budget
+        let reg2 = AdapterRegistry::new(m.clone(), base.clone(), 2, 1 << 20).unwrap();
+        reg2.insert("a", delta_touching(&m, &base, &[0], 1.0)).unwrap();
+        reg2.insert("b", delta_touching(&m, &base, &[1], 1.0)).unwrap();
+        let ev = reg2.insert("c", delta_touching(&m, &base, &[2], 1.0)).unwrap();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(reg2.len(), 2);
+        // an adapter alone over budget is refused outright
+        let tiny = AdapterRegistry::new(m.clone(), base.clone(), 2, 8).unwrap();
+        assert!(tiny.insert("x", delta_touching(&m, &base, &[0], 1.0)).is_err());
+    }
+
+    #[test]
+    fn refused_insert_leaves_registry_untouched() {
+        // cap 1, and the only resident adapter is checked out: a new
+        // insert must be refused WITHOUT registering anything
+        let m = toy_model(16);
+        let base = vec![1.0f32; 16];
+        let reg = AdapterRegistry::new(m.clone(), base.clone(), 1, 1 << 20).unwrap();
+        reg.insert("a", delta_touching(&m, &base, &[0, 1], 1.0)).unwrap();
+        let bytes_before = reg.bytes();
+        let co = reg.checkout("a").unwrap();
+        let err = reg.insert("b", delta_touching(&m, &base, &[2], 1.0)).unwrap_err();
+        assert!(err.to_string().contains("NOT registered"), "{err:#}");
+        assert_eq!(reg.len(), 1);
+        assert!(reg.contains("a") && !reg.contains("b"));
+        assert_eq!(reg.bytes(), bytes_before);
+        drop(co);
+        // once released, the same insert succeeds and evicts "a"
+        let evicted = reg.insert("b", delta_touching(&m, &base, &[2], 1.0)).unwrap();
+        assert_eq!(evicted, vec!["a".to_string()]);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn wrong_model_and_double_names_handled() {
+        let m = toy_model(8);
+        let base = vec![0.5f32; 8];
+        let reg = AdapterRegistry::new(m.clone(), base.clone(), 4, 1 << 20).unwrap();
+        // replacing a name adjusts the byte accounting instead of leaking
+        reg.insert("a", delta_touching(&m, &base, &[0, 1, 2], 1.0)).unwrap();
+        let before = reg.bytes();
+        reg.insert("a", delta_touching(&m, &base, &[3], 1.0)).unwrap();
+        assert!(reg.bytes() < before);
+        assert_eq!(reg.len(), 1);
+        // ABI mismatch rejected
+        let other = toy_model(9);
+        let bad = delta_touching(&other, &vec![0.0f32; 9], &[0], 1.0);
+        assert!(reg.insert("bad", bad).is_err());
+        reg.remove("a").unwrap();
+        assert!(reg.is_empty());
+        assert!(reg.remove("a").is_err());
+    }
+}

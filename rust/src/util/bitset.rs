@@ -1,0 +1,111 @@
+//! Minimal u64-word bitset over flat coordinate indices.
+//!
+//! The serving layer stores each sparse adapter's *support* — which
+//! parameter coordinates its delta touches — as 1 bit per parameter,
+//! the same quantized-mask representation the paper's §3.3 memory
+//! argument uses for the stored-mask ablation. The step-journal replay
+//! uses the same words to accumulate the union of per-step masks, which
+//! is exactly the invariant an exported delta is checked against
+//! (support ⊆ mask union). Free functions over `&[u64]` rather than a
+//! wrapper type: both producers already own plain vectors and the
+//! serialized form is the word array itself.
+
+/// Number of u64 words needed for `n` bits.
+pub fn words(n: usize) -> usize {
+    (n + 63) / 64
+}
+
+/// A zeroed bitset able to hold `n` bits.
+pub fn new(n: usize) -> Vec<u64> {
+    vec![0u64; words(n)]
+}
+
+/// Set bit `i`.
+pub fn set(bits: &mut [u64], i: usize) {
+    bits[i / 64] |= 1u64 << (i % 64);
+}
+
+/// Read bit `i`.
+pub fn get(bits: &[u64], i: usize) -> bool {
+    (bits[i / 64] >> (i % 64)) & 1 == 1
+}
+
+/// Number of set bits.
+pub fn count(bits: &[u64]) -> usize {
+    bits.iter().map(|w| w.count_ones() as usize).sum()
+}
+
+/// Set the first `n` bits (a dense mask); bits past `n` stay clear so
+/// [`count`] and serialized comparisons stay exact.
+pub fn set_all(bits: &mut [u64], n: usize) {
+    for (w, word) in bits.iter_mut().enumerate() {
+        let lo = w * 64;
+        if lo + 64 <= n {
+            *word = u64::MAX;
+        } else if lo < n {
+            *word = (1u64 << (n - lo)) - 1;
+        } else {
+            *word = 0;
+        }
+    }
+}
+
+/// `dst |= src` word-wise (accumulating a union of masks).
+pub fn union_into(dst: &mut [u64], src: &[u64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d |= s;
+    }
+}
+
+/// Ascending indices of the set bits among the first `n`.
+pub fn indices(bits: &[u64], n: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(count(bits));
+    for i in 0..n {
+        if get(bits, i) {
+            out.push(i as u32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count_round_trip() {
+        let mut b = new(130);
+        assert_eq!(b.len(), 3);
+        for i in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+            set(&mut b, i);
+        }
+        assert_eq!(count(&b), 8);
+        assert!(get(&b, 64));
+        assert!(!get(&b, 2));
+        assert_eq!(indices(&b, 130), vec![0, 1, 63, 64, 65, 127, 128, 129]);
+    }
+
+    #[test]
+    fn set_all_masks_the_tail_word() {
+        let mut b = new(70);
+        set_all(&mut b, 70);
+        assert_eq!(count(&b), 70);
+        assert!(get(&b, 69));
+        // exact word boundary
+        let mut c = new(128);
+        set_all(&mut c, 128);
+        assert_eq!(count(&c), 128);
+    }
+
+    #[test]
+    fn union_accumulates() {
+        let mut a = new(64);
+        let mut b = new(64);
+        set(&mut a, 1);
+        set(&mut b, 2);
+        union_into(&mut a, &b);
+        assert!(get(&a, 1) && get(&a, 2));
+        assert_eq!(count(&a), 2);
+    }
+}

@@ -109,6 +109,16 @@ impl Args {
         Ok(n)
     }
 
+    /// u16 option with default (the serve `--port` knob; 0 = ephemeral).
+    pub fn u16_or(&self, name: &str, default: u16) -> Result<u16> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: expected u16, got '{v}' ({e})")),
+        }
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
         match self.get(name) {
@@ -181,6 +191,15 @@ mod tests {
         assert_eq!(a.workers_or(1).unwrap(), 4);
         assert_eq!(Args::parse(&sv(&[]), &[]).unwrap().workers_or(2).unwrap(), 2);
         assert!(Args::parse(&sv(&["--workers", "0"]), &[]).unwrap().workers_or(1).is_err());
+    }
+
+    #[test]
+    fn u16_parses_and_rejects_out_of_range() {
+        let a = Args::parse(&sv(&["--port", "8080"]), &[]).unwrap();
+        assert_eq!(a.u16_or("port", 0).unwrap(), 8080);
+        assert_eq!(a.u16_or("absent", 7).unwrap(), 7);
+        assert!(Args::parse(&sv(&["--port", "70000"]), &[]).unwrap().u16_or("port", 0).is_err());
+        assert!(Args::parse(&sv(&["--port", "-1"]), &[]).unwrap().u16_or("port", 0).is_err());
     }
 
     #[test]

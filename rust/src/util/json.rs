@@ -118,7 +118,11 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
                 if n.is_finite() {
-                    if n.fract() == 0.0 && n.abs() < 1e15 {
+                    if *n == 0.0 && n.is_sign_negative() {
+                        // keep the sign bit: serving round-trips logits
+                        // bit-exactly, and `-0.0 as i64` would print "0"
+                        out.push_str("-0.0");
+                    } else if n.fract() == 0.0 && n.abs() < 1e15 {
                         let _ = write!(out, "{}", *n as i64);
                     } else {
                         let _ = write!(out, "{n}");
@@ -408,6 +412,15 @@ mod tests {
     #[test]
     fn non_finite_serializes_as_null() {
         assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn negative_zero_round_trips_with_its_sign_bit() {
+        let v = parse(&Json::Num(-0.0).to_string()).unwrap();
+        let back = v.as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // positive zero still prints as a plain integer
+        assert_eq!(Json::Num(0.0).to_string(), "0");
     }
 
     #[test]

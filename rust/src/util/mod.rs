@@ -5,6 +5,7 @@
 //! rand, env_logger, criterion) are implemented here, scoped to exactly
 //! what the coordinator needs. Each is unit-tested in its own module.
 
+pub mod bitset;
 pub mod cli;
 pub mod json;
 pub mod log;

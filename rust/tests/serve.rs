@@ -1,0 +1,395 @@
+//! Integration tests for the serving subsystem (`rust/src/serve/`).
+//!
+//! The contracts under test are exact, not approximate:
+//!
+//! * A sparse adapter delta is supported **exactly** inside the union of
+//!   the run's per-step masks (paper §3.3: updates live inside the
+//!   mask), and `swap` (checkout/release) is a bit-exact involution.
+//! * The compact on-disk adapter is a small fraction of a full
+//!   parameter snapshot — the multi-tenant storage story.
+//! * End to end: train → journal → upload (replay-materialized) →
+//!   batched `POST /v1/classify` returns logits **bit-identical** to
+//!   offline evaluation of the tuned parameters, under concurrent
+//!   requests to two different adapters.
+
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+use sparse_mezo::config::{ServeConfig, TrainConfig};
+use sparse_mezo::coordinator::trainer::TrainResult;
+use sparse_mezo::data::batcher::pad_prompt;
+use sparse_mezo::data::{tasks, Dataset};
+use sparse_mezo::parallel::protocol::{self, load_journal};
+use sparse_mezo::parallel::{DpTrainer, WorkerPool};
+use sparse_mezo::runtime::exec::InitExec;
+use sparse_mezo::runtime::{ModelInfo, Runtime};
+use sparse_mezo::serve::http::{self, loopback_request};
+use sparse_mezo::serve::{ServeEngine, SparseDelta};
+use sparse_mezo::util::bitset;
+use sparse_mezo::util::json::Json;
+
+/// One shared native runtime per test process.
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(Runtime::native)
+}
+
+fn model() -> ModelInfo {
+    rt().model("llama_tiny").unwrap().clone()
+}
+
+/// The server's base parameters: the deterministic init for seed 11
+/// (every journaled run below starts from the same bits).
+fn base_params(m: &ModelInfo) -> Vec<f32> {
+    InitExec::load(rt(), m).unwrap().run(rt(), (11, 0x1717)).unwrap()
+}
+
+fn serve_dataset(task: &str) -> Dataset {
+    tasks::generate_sized(task, 11, 48, 8, 8).unwrap()
+}
+
+/// Train `steps` S-MeZO steps on `task` from `base`, journaling to
+/// `path`; returns the live result (params are the ground truth the
+/// served logits must reproduce bit-for-bit).
+fn train_with_journal(task: &str, steps: usize, path: &Path, base: Vec<f32>) -> TrainResult {
+    let rt = rt();
+    let m = model();
+    let mut cfg = TrainConfig::resolve("llama_tiny", task, "smezo", None).unwrap();
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.eval_cap = 8;
+    cfg.seed = 11;
+    cfg.workers = 1;
+    let dataset = serve_dataset(task);
+    let pool = WorkerPool::new(1);
+    let mut t = DpTrainer::new(rt, &pool, cfg).with_journal(path);
+    t.eval_test = false;
+    t.initial_override = Some(base);
+    t.run_on(&m, &dataset).unwrap()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coord {i} ({x} vs {y})");
+    }
+}
+
+/// Offline reference: serial ragged logits over padded prompts.
+fn offline_logits(m: &ModelInfo, params: &[f32], prompts: &[Vec<i32>]) -> Vec<f32> {
+    let mut tokens = Vec::with_capacity(prompts.len() * m.seq_len);
+    for p in prompts {
+        tokens.extend(pad_prompt(p, m.seq_len));
+    }
+    rt().backend().logits_rows(m, params, &tokens).unwrap()
+}
+
+/// Parse a classify response's logits into one flat row-major vector.
+fn logits_from_body(body: &Json) -> Vec<f32> {
+    let mut out = Vec::new();
+    for row in body.req("logits").unwrap().as_arr().unwrap() {
+        for v in row.as_arr().unwrap() {
+            out.push(v.as_f64().unwrap() as f32);
+        }
+    }
+    out
+}
+
+#[test]
+fn delta_support_is_exactly_the_mask_union_and_swap_involutes() {
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_serve_delta_{}", std::process::id()));
+    let path = dir.join("rte.journal.jsonl");
+    let live = train_with_journal("rte", 12, &path, base.clone());
+
+    // replay: bit-identical params + the mask-union support certificate
+    let (header, records) = load_journal(&path).unwrap();
+    let cfg = protocol::config_from_header(&header).unwrap();
+    let outcome = protocol::replay_full(rt(), &m, &cfg, &header, &base, &records).unwrap();
+    assert_bits_eq(&outcome.params, &live.params, "replay vs live");
+
+    // extract under the certificate: every changed coordinate is inside
+    // the union; everything outside it is bit-untouched
+    let delta =
+        SparseDelta::extract(&m, &base, &live.params, Some(&outcome.mask_union), Json::Null)
+            .unwrap();
+    assert!(delta.nnz() > 0, "training moved nothing");
+    for &i in delta.indices() {
+        assert!(bitset::get(&outcome.mask_union, i as usize), "coord {i} outside union");
+    }
+    for i in 0..m.n_params {
+        if !bitset::get(&outcome.mask_union, i) {
+            assert_eq!(base[i].to_bits(), live.params[i].to_bits(), "frozen coord {i} moved");
+        }
+    }
+    // S-MeZO with fixed thresholds can never grow the union past the
+    // step-0 mask (+ dense vector entries): coordinates outside it are
+    // never updated, so their magnitudes never cross the threshold
+    let union_frac = bitset::count(&outcome.mask_union) as f64 / m.n_params as f64;
+    assert!(union_frac < 0.30, "union fraction {union_frac} at sparsity 0.75");
+    assert!(delta.nnz() <= bitset::count(&outcome.mask_union));
+
+    // a support certificate narrower than the real support must fail
+    let narrow = bitset::new(m.n_params);
+    assert!(SparseDelta::extract(&m, &base, &live.params, Some(&narrow), Json::Null).is_err());
+
+    // swap is a bit-exact involution: apply(revert(x)) == x
+    let mut d = delta;
+    let mut p = base.clone();
+    d.swap(&mut p);
+    assert_bits_eq(&p, &live.params, "checkout installs tuned bits");
+    d.swap(&mut p);
+    assert_bits_eq(&p, &base, "release restores base bits");
+
+    // compact on-disk form: values round-trip bit-exactly, and the file
+    // is a small fraction of a full parameter snapshot. Exact f32 values
+    // put the floor at ~(1 - sparsity) + bitset overhead (~29% of a 4P
+    // snapshot at sparsity 0.75, dense gain vectors included); assert
+    // the guaranteed < 1/3 bound.
+    let fpath = dir.join("rte.adapter");
+    d.save(&fpath).unwrap();
+    let back = SparseDelta::load(&fpath, &m).unwrap();
+    assert_eq!(back.indices(), d.indices());
+    for (a, b) in back.values().iter().zip(d.values()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let file_bytes = std::fs::metadata(&fpath).unwrap().len() as usize;
+    let snapshot_bytes = 4 * m.n_params;
+    assert!(
+        file_bytes * 3 < snapshot_bytes,
+        "adapter {file_bytes} B vs snapshot {snapshot_bytes} B"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn journal_materialization_rejects_a_mismatched_base() {
+    // replaying a (seed, g) stream from the wrong base would register a
+    // confidently wrong adapter; the header's init fingerprint makes it
+    // a hard error instead
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_serve_fnv_{}", std::process::id()));
+    let path = dir.join("rte.journal.jsonl");
+    train_with_journal("rte", 4, &path, base.clone());
+    let other = InitExec::load(rt(), &m).unwrap().run(rt(), (12, 0x1717)).unwrap();
+    let err = SparseDelta::from_journal(rt(), &m, &other, &path, vec![]).unwrap_err();
+    assert!(err.to_string().contains("initial parameters"), "{err:#}");
+    // the matching base still materializes fine
+    assert!(SparseDelta::from_journal(rt(), &m, &base, &path, vec![]).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_classify_is_bit_identical_to_serial_for_any_worker_count() {
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_serve_engine_{}", std::process::id()));
+    let path = dir.join("rte.journal.jsonl");
+    let live = train_with_journal("rte", 8, &path, base.clone());
+    let prompts: Vec<Vec<i32>> =
+        serve_dataset("rte").dev.iter().map(|e| e.prompt.clone()).collect();
+    let expected = offline_logits(&m, &live.params, &prompts);
+
+    for workers in [1usize, 2, 5] {
+        let cfg = ServeConfig { workers, ..ServeConfig::default() };
+        let engine = ServeEngine::new(Runtime::native(), &cfg, base.clone()).unwrap();
+        let delta =
+            SparseDelta::from_journal(engine.runtime(), engine.model(), &base, &path, vec![])
+                .unwrap();
+        engine.registry.insert("rte", delta).unwrap();
+        let out = engine.classify("rte", &prompts).unwrap();
+        let flat: Vec<f32> = out.into_iter().flatten().collect();
+        assert_bits_eq(&flat, &expected, &format!("classify at {workers} workers"));
+        // the base healed after the checkout
+        assert_bits_eq(&engine.registry.base_snapshot(), &base, "base after classify");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn end_to_end_two_adapter_serving_bit_identical_under_concurrency() {
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_serve_e2e_{}", std::process::id()));
+    let path_a = dir.join("rte.journal.jsonl");
+    let path_b = dir.join("boolq.journal.jsonl");
+    // 20-step runs from the SAME base — two tenants of one server
+    let live_a = train_with_journal("rte", 20, &path_a, base.clone());
+    let live_b = train_with_journal("boolq", 20, &path_b, base.clone());
+
+    let cfg =
+        ServeConfig { workers: 2, max_batch_rows: 8, flush_ms: 2, ..ServeConfig::default() };
+    let engine = Arc::new(ServeEngine::new(Runtime::native(), &cfg, base.clone()).unwrap());
+    let running = http::serve(engine, 0).unwrap();
+    let addr = running.addr;
+
+    // liveness before any adapter exists; classify against nothing is 404
+    let (code, body) = loopback_request(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    assert_eq!(body.req("adapters").unwrap().as_usize().unwrap(), 0);
+    let miss = Json::obj(vec![
+        ("adapter", Json::Str("nope".into())),
+        ("prompts", Json::Arr(vec![Json::Arr(vec![Json::Num(1.0)])])),
+    ]);
+    let (code, _) = loopback_request(addr, "POST", "/v1/classify", Some(&miss)).unwrap();
+    assert_eq!(code, 404);
+
+    // upload both adapters, materialized from their journals
+    for (name, path) in [("rte", &path_a), ("boolq", &path_b)] {
+        let req = Json::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("journal", Json::Str(path.display().to_string())),
+        ]);
+        let (code, body) = loopback_request(addr, "POST", "/v1/adapters", Some(&req)).unwrap();
+        assert_eq!(code, 200, "{name}: {body:?}");
+        assert!(body.req("nnz").unwrap().as_usize().unwrap() > 0, "{name}");
+    }
+    // a bad journal path is a 400, not a crash
+    let bad = Json::obj(vec![
+        ("name", Json::Str("ghost".into())),
+        ("journal", Json::Str(dir.join("missing.jsonl").display().to_string())),
+    ]);
+    let (code, _) = loopback_request(addr, "POST", "/v1/adapters", Some(&bad)).unwrap();
+    assert_eq!(code, 400);
+
+    let (code, body) = loopback_request(addr, "GET", "/v1/adapters", None).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(body.req("adapters").unwrap().as_arr().unwrap().len(), 2);
+
+    // expected logits per tenant: offline serial evaluation of the
+    // tuned parameters each journal replays to
+    let prompts_a: Vec<Vec<i32>> =
+        serve_dataset("rte").dev.iter().map(|e| e.prompt.clone()).collect();
+    let prompts_b: Vec<Vec<i32>> =
+        serve_dataset("boolq").dev.iter().map(|e| e.prompt.clone()).collect();
+    let expected_a = offline_logits(&m, &live_a.params, &prompts_a);
+    let expected_b = offline_logits(&m, &live_b.params, &prompts_b);
+
+    // concurrent batched classify against the two tenants
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (name, prompts, expected) in [
+            ("rte", &prompts_a, &expected_a),
+            ("boolq", &prompts_b, &expected_b),
+        ] {
+            handles.push(scope.spawn(move || {
+                let req = Json::obj(vec![
+                    ("adapter", Json::Str(name.into())),
+                    (
+                        "prompts",
+                        Json::Arr(
+                            prompts
+                                .iter()
+                                .map(|p| {
+                                    Json::Arr(p.iter().map(|&t| Json::Num(t as f64)).collect())
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                for round in 0..3 {
+                    let (code, body) =
+                        loopback_request(addr, "POST", "/v1/classify", Some(&req)).unwrap();
+                    assert_eq!(code, 200, "{name} round {round}: {body:?}");
+                    let got = logits_from_body(&body);
+                    assert_bits_eq(&got, expected, &format!("{name} round {round}"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // registry accounting saw traffic, and the base never drifted
+    let (_, body) = loopback_request(addr, "GET", "/v1/adapters", None).unwrap();
+    for a in body.req("adapters").unwrap().as_arr().unwrap() {
+        assert!(a.req("hits").unwrap().as_usize().unwrap() > 0, "{a:?}");
+    }
+    running.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn registry_eviction_over_http_keeps_serving_survivors() {
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_serve_evict_{}", std::process::id()));
+    let path = dir.join("rte.journal.jsonl");
+    train_with_journal("rte", 6, &path, base.clone());
+
+    // registry capped at ONE adapter: the second upload evicts the first
+    let cfg = ServeConfig { max_adapters: 1, flush_ms: 1, ..ServeConfig::default() };
+    let engine = Arc::new(ServeEngine::new(Runtime::native(), &cfg, base.clone()).unwrap());
+    let running = http::serve(engine, 0).unwrap();
+    let addr = running.addr;
+    for name in ["first", "second"] {
+        let req = Json::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("journal", Json::Str(path.display().to_string())),
+        ]);
+        let (code, body) = loopback_request(addr, "POST", "/v1/adapters", Some(&req)).unwrap();
+        assert_eq!(code, 200, "{body:?}");
+        if name == "second" {
+            let evicted = body.req("evicted").unwrap().as_arr().unwrap();
+            assert_eq!(evicted.len(), 1);
+            assert_eq!(evicted[0].as_str().unwrap(), "first");
+        }
+    }
+    // the survivor serves; the evicted tenant is a 404
+    let prompts = Json::Arr(vec![Json::Arr(vec![Json::Num(3.0), Json::Num(5.0)])]);
+    let ok = Json::obj(vec![("adapter", Json::Str("second".into())), ("prompts", prompts.clone())]);
+    let (code, _) = loopback_request(addr, "POST", "/v1/classify", Some(&ok)).unwrap();
+    assert_eq!(code, 200);
+    let gone = Json::obj(vec![("adapter", Json::Str("first".into())), ("prompts", prompts)]);
+    let (code, _) = loopback_request(addr, "POST", "/v1/classify", Some(&gone)).unwrap();
+    assert_eq!(code, 404);
+    running.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn adapter_file_upload_round_trips_through_the_server() {
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_serve_file_{}", std::process::id()));
+    let jpath = dir.join("rte.journal.jsonl");
+    let live = train_with_journal("rte", 6, &jpath, base.clone());
+    let delta = SparseDelta::from_journal(rt(), &m, &base, &jpath, vec![]).unwrap();
+    let apath = dir.join("rte.adapter");
+    delta.save(&apath).unwrap();
+
+    let cfg = ServeConfig { flush_ms: 1, ..ServeConfig::default() };
+    let engine = Arc::new(ServeEngine::new(Runtime::native(), &cfg, base.clone()).unwrap());
+    let running = http::serve(engine, 0).unwrap();
+    let addr = running.addr;
+    let req = Json::obj(vec![
+        ("name", Json::Str("rte".into())),
+        ("delta", Json::Str(apath.display().to_string())),
+    ]);
+    let (code, body) = loopback_request(addr, "POST", "/v1/adapters", Some(&req)).unwrap();
+    assert_eq!(code, 200, "{body:?}");
+
+    let prompts: Vec<Vec<i32>> =
+        serve_dataset("rte").dev.iter().take(3).map(|e| e.prompt.clone()).collect();
+    let expected = offline_logits(&m, &live.params, &prompts);
+    let creq = Json::obj(vec![
+        ("adapter", Json::Str("rte".into())),
+        (
+            "prompts",
+            Json::Arr(
+                prompts
+                    .iter()
+                    .map(|p| Json::Arr(p.iter().map(|&t| Json::Num(t as f64)).collect()))
+                    .collect(),
+            ),
+        ),
+    ]);
+    let (code, body) = loopback_request(addr, "POST", "/v1/classify", Some(&creq)).unwrap();
+    assert_eq!(code, 200);
+    assert_bits_eq(&logits_from_body(&body), &expected, "file-uploaded adapter");
+    running.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
