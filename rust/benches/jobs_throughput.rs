@@ -1,0 +1,115 @@
+//! Bench: job-orchestration throughput — end-to-end jobs/sec through
+//! submit → priority slicing → checkpoint → publish, and the
+//! orchestration overhead per optimizer step versus raw (un-orchestrated)
+//! data-parallel training of the same step count.
+//!
+//! Run: `cargo bench --bench jobs_throughput` (append `-- --quick` for
+//! the CI smoke matrix). Uses the native backend. Writes a human table
+//! to stdout and refreshes the repo-root `BENCH_jobs.json` snapshot in
+//! place (same convention as `BENCH_dp.json`/`BENCH_serve.json`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use sparse_mezo::config::ServeConfig;
+use sparse_mezo::data::tasks;
+use sparse_mezo::jobs::{JobQueue, JobSpec, JobState, Scheduler};
+use sparse_mezo::parallel::{DpTrainer, WorkerPool};
+use sparse_mezo::runtime::exec::InitExec;
+use sparse_mezo::runtime::Runtime;
+use sparse_mezo::serve::ServeEngine;
+use sparse_mezo::util::json::Json;
+
+const MODEL: &str = "llama_tiny";
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n_jobs, steps, slice) = if quick { (2usize, 6usize, 3usize) } else { (6, 24, 6) };
+
+    let probe_rt = Runtime::native();
+    let model = probe_rt.model(MODEL)?.clone();
+    let base = InitExec::load(&probe_rt, &model)?.run(&probe_rt, (11, 0x1717))?;
+
+    // ---- baseline: one raw DP run of `steps`, no orchestration -----------
+    let spec0 = JobSpec { name: "bench-0".into(), steps, seed: 11, ..JobSpec::default() };
+    let cfg = spec0.train_config(MODEL)?;
+    let dataset = tasks::generate(&spec0.task, cfg.seed)?;
+    let pool = WorkerPool::new(2);
+    let baseline_s = {
+        let mut t = DpTrainer::new(&probe_rt, &pool, cfg);
+        t.eval_test = false;
+        t.initial_override = Some(base.clone());
+        let t0 = Instant::now();
+        let r = t.run_on(&model, &dataset)?;
+        assert_eq!(r.steps_run, steps);
+        t0.elapsed().as_secs_f64()
+    };
+    let baseline_per_step = baseline_s / steps as f64;
+    println!(
+        "{:<40} {:>8.1} steps/s",
+        format!("raw dp training ({steps} steps)"),
+        1.0 / baseline_per_step.max(1e-12)
+    );
+
+    // ---- orchestrated: n_jobs through the full queue/scheduler loop ------
+    let dir = std::env::temp_dir().join(format!("smz_bench_jobs_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let queue = Arc::new(JobQueue::open(&dir)?);
+    let scfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let engine = Arc::new(
+        ServeEngine::new(Runtime::native(), &scfg, base.clone())?
+            .with_jobs(Arc::clone(&queue), slice),
+    );
+    let scheduler = Scheduler::new(Arc::clone(&engine), Arc::clone(&queue), slice);
+    for j in 0..n_jobs {
+        queue.submit(JobSpec {
+            name: format!("bench-{j}"),
+            steps,
+            slice_steps: slice,
+            priority: (j % 2) as i64, // two priority levels interleave
+            seed: 11,
+            ..JobSpec::default()
+        })?;
+    }
+    let t0 = Instant::now();
+    let slices = scheduler.run_until_idle();
+    let orchestrated_s = t0.elapsed().as_secs_f64();
+    let jobs = queue.list();
+    assert!(
+        jobs.iter().all(|j| j.state == JobState::Completed && j.published),
+        "bench jobs must all complete: {jobs:?}"
+    );
+    assert_eq!(engine.registry.len(), n_jobs.min(scfg.max_adapters));
+    let total_steps = (n_jobs * steps) as f64;
+    let orchestrated_per_step = orchestrated_s / total_steps;
+    let overhead = orchestrated_per_step / baseline_per_step.max(1e-12) - 1.0;
+    println!(
+        "{:<40} {:>8.1} steps/s  {:>6.2} jobs/s  ({} slices, {:+.1}% overhead/step)",
+        format!("orchestrated ({n_jobs} jobs x {steps} steps)"),
+        total_steps / orchestrated_s.max(1e-12),
+        n_jobs as f64 / orchestrated_s.max(1e-12),
+        slices,
+        overhead * 100.0
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("jobs_throughput".into())),
+        ("status", Json::Str("measured".into())),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::Str(MODEL.into())),
+        ("jobs", Json::Num(n_jobs as f64)),
+        ("steps_per_job", Json::Num(steps as f64)),
+        ("slice_steps", Json::Num(slice as f64)),
+        ("scheduler_slices", Json::Num(slices as f64)),
+        ("baseline_steps_per_sec", Json::Num(1.0 / baseline_per_step.max(1e-12))),
+        ("orchestrated_steps_per_sec", Json::Num(total_steps / orchestrated_s.max(1e-12))),
+        ("jobs_per_sec", Json::Num(n_jobs as f64 / orchestrated_s.max(1e-12))),
+        ("orchestration_overhead_frac", Json::Num(overhead)),
+    ]);
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_jobs.json");
+    std::fs::write(&path, format!("{}\n", out.to_string()))?;
+    println!("(snapshot -> {})", path.display());
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -192,6 +192,12 @@ pub struct ServeConfig {
     pub seed: u64,
     /// base parameters from this checkpoint instead of `init`
     pub init_from: Option<String>,
+    /// enable job orchestration persisted under this directory
+    /// (`None` = the `/v1/jobs` API answers 400)
+    pub jobs_dir: Option<String>,
+    /// default optimizer steps per job-scheduler slice
+    /// (0 = the scheduler's built-in default)
+    pub slice_steps: usize,
 }
 
 impl Default for ServeConfig {
@@ -206,6 +212,8 @@ impl Default for ServeConfig {
             adapter_budget: 64 << 20,
             seed: 42,
             init_from: None,
+            jobs_dir: None,
+            slice_steps: 0,
         }
     }
 }
@@ -254,6 +262,12 @@ impl ServeConfig {
         if let Some(v) = doc.get("init_from") {
             self.init_from = Some(v.as_str()?.to_string());
         }
+        if let Some(v) = doc.get("jobs_dir") {
+            self.jobs_dir = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("slice_steps") {
+            self.slice_steps = v.as_usize()?;
+        }
         self.validate()
     }
 
@@ -283,7 +297,8 @@ mod tests {
         assert!(cfg.validate().is_ok());
         let mut cfg = ServeConfig::default();
         let doc = crate::util::toml::parse(
-            "model = \"llama_med\"\nport = 8080\nmax_batch_rows = 4\nflush_ms = 2\n",
+            "model = \"llama_med\"\nport = 8080\nmax_batch_rows = 4\nflush_ms = 2\n\
+             jobs_dir = \"jobs\"\nslice_steps = 10\n",
         )
         .unwrap();
         cfg.apply_json(&doc).unwrap();
@@ -291,6 +306,8 @@ mod tests {
         assert_eq!(cfg.port, 8080);
         assert_eq!(cfg.max_batch_rows, 4);
         assert_eq!(cfg.flush_ms, 2);
+        assert_eq!(cfg.jobs_dir.as_deref(), Some("jobs"));
+        assert_eq!(cfg.slice_steps, 10);
         // bad values rejected
         let mut bad = ServeConfig::default();
         bad.max_batch_rows = 0;

@@ -50,6 +50,17 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Best-effort load for the job orchestrator's slice-resume fast
+    /// path: `Some` only when the file exists, parses, matches
+    /// `expect`'s ABI **and** was taken at exactly `step`. Any mismatch
+    /// — including a checkpoint that lags its step journal after a
+    /// crash between the two writes — returns `None` and the caller
+    /// falls back to the journal replay, which is always authoritative.
+    pub fn load_if_matching(path: &Path, expect: &ModelInfo, step: usize) -> Option<Checkpoint> {
+        let ck = Checkpoint::load(path, expect).ok()?;
+        (ck.step == step).then_some(ck)
+    }
+
     /// Load and validate against the expected model ABI.
     pub fn load(path: &Path, expect: &ModelInfo) -> Result<Checkpoint> {
         let sidecar = std::fs::read_to_string(sidecar_path(path))

@@ -11,13 +11,19 @@
 //! [`Backend: Send + Sync`](crate::runtime::backend::Backend) bound
 //! buys. Log lines from concurrent cells interleave on stderr; results
 //! are returned in grid order regardless.
+//!
+//! Cells honor the base config's `workers` knob: `workers > 1` trains
+//! each cell through the seed-sync data-parallel engine
+//! ([`DpTrainer`](crate::parallel::DpTrainer)), bit-identical to the
+//! serial trainer — so a sweep can use DP inside cells *and* cell-level
+//! concurrency at once, all on the one shared pool.
 
 use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::coordinator::trainer::Trainer;
 use crate::data::Dataset;
-use crate::parallel::WorkerPool;
+use crate::parallel::{DpTrainer, WorkerPool};
 use crate::runtime::Runtime;
 
 /// Outcome of one grid cell.
@@ -64,11 +70,24 @@ fn run_cell(
         SweepAxis::Sparsity => cfg.hypers.sparsity = v as f32,
     }
     crate::info!("[sweep {:?}={v}] starting ({})", axis, cfg.label());
-    let mut trainer = Trainer::new(rt, cfg).with_pool(pool);
-    if let Some(p) = init_params {
-        trainer.initial_override = Some(p.to_vec());
-    }
-    let result = trainer.run_on(model, dataset)?;
+    // `cfg.workers > 1` routes the cell through the seed-sync DP engine
+    // (bit-identical to the serial trainer, asserted in this module's
+    // tests and tests/parallel.rs) — its replica phases and this cell's
+    // sibling cells share the same pool, which is nesting-safe by the
+    // caller-participation contract
+    let result = if cfg.workers > 1 {
+        let mut trainer = DpTrainer::new(rt, pool, cfg);
+        if let Some(p) = init_params {
+            trainer.initial_override = Some(p.to_vec());
+        }
+        trainer.run_on(model, dataset)?
+    } else {
+        let mut trainer = Trainer::new(rt, cfg).with_pool(pool);
+        if let Some(p) = init_params {
+            trainer.initial_override = Some(p.to_vec());
+        }
+        trainer.run_on(model, dataset)?
+    };
     Ok(SweepCell {
         value: v,
         test_accuracy: result.test.map(|t| t.accuracy()),
@@ -129,6 +148,36 @@ mod tests {
             final_train_loss: f64::NAN,
         }];
         assert!(best_cell(&cells).is_none());
+    }
+
+    #[test]
+    fn dp_cells_bit_identical_to_serial_cells() {
+        // the ROADMAP "DP under repro/sweep" item: grid cells routed
+        // through the seed-sync DP engine (workers > 1) must reproduce
+        // the serial sweep bit for bit — same cells, same losses
+        let rt = Runtime::native();
+        let ds = crate::data::tasks::generate_sized("rte", 5, 48, 16, 16).unwrap();
+        let mut serial_cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
+        serial_cfg.steps = 4;
+        serial_cfg.eval_every = 0;
+        serial_cfg.eval_cap = 8;
+        let mut dp_cfg = serial_cfg.clone();
+        dp_cfg.workers = 2; // 2 divides the llama_tiny batch
+        let grid = [1e-4, 3e-4];
+        let pool = WorkerPool::new(2);
+        let a = sweep(&rt, &pool, &serial_cfg, &ds, SweepAxis::LearningRate, &grid, None).unwrap();
+        let b = sweep(&rt, &pool, &dp_cfg, &ds, SweepAxis::LearningRate, &grid, None).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.value, y.value);
+            assert_eq!(
+                x.final_train_loss.to_bits(),
+                y.final_train_loss.to_bits(),
+                "lr {}",
+                x.value
+            );
+            assert_eq!(x.diverged, y.diverged);
+        }
     }
 
     #[test]

@@ -90,6 +90,21 @@ impl<'a> TrainLoader<'a> {
         self.epoch
     }
 
+    /// Advance past the first `batches` draws without assembling them —
+    /// positions a fresh loader exactly where an uninterrupted run's
+    /// loader would be after `batches` steps (the slice-resume path).
+    /// Only the cursor/epoch bookkeeping runs, so skipping is O(examples
+    /// per epoch), not O(tokens).
+    pub fn skip(&mut self, batches: usize) {
+        for _ in 0..batches * self.b {
+            if self.cursor >= self.order.len() {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            self.cursor += 1;
+        }
+    }
+
     fn reshuffle(&mut self) {
         let mut rng = Pcg32::new(self.seed ^ 0x5eed, self.epoch.wrapping_add(1));
         rng.shuffle(&mut self.order);
@@ -207,6 +222,21 @@ mod tests {
         assert_eq!(batches.len(), 3); // 11 examples -> 4+4+3
         assert_eq!(batches[2].real, 3);
         assert_eq!(batches[2].tokens.len(), 4 * 32);
+    }
+
+    #[test]
+    fn skip_matches_draining_across_epochs() {
+        let d = ds();
+        let mut drained = TrainLoader::new(&d.train, 4, 32, 9).unwrap();
+        for _ in 0..25 {
+            drained.next_batch(); // 100 draws over 37 examples: epoch rolls
+        }
+        let mut skipped = TrainLoader::new(&d.train, 4, 32, 9).unwrap();
+        skipped.skip(25);
+        assert_eq!(skipped.epoch(), drained.epoch());
+        for _ in 0..10 {
+            assert_eq!(skipped.next_batch().tokens, drained.next_batch().tokens);
+        }
     }
 
     #[test]

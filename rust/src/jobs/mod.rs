@@ -1,0 +1,43 @@
+//! Train-to-serve job orchestration: the async fine-tuning job queue.
+//!
+//! Sparse-MeZO fine-tunes at inference-level memory, which makes
+//! fine-tuning itself cheap enough to offer as a multi-tenant service —
+//! this subsystem is that service's control plane, closing the loop
+//! between the PR-2 data-parallel trainer and the PR-3 adapter server:
+//!
+//! * [`spec`] — [`JobSpec`](spec::JobSpec): the tenant-facing job
+//!   description (task × optimizer cell, sparsity/mask knobs, step
+//!   budget, DP width, priority, slice size), JSON on the wire and at
+//!   rest.
+//! * [`queue`] — the persistent [`JobQueue`](queue::JobQueue): one
+//!   state file + one step journal + one slice checkpoint per job;
+//!   survives restarts (interrupted `Running` jobs re-queue and resume
+//!   from their journals); priority pick with round-robin fairness
+//!   inside a priority level.
+//! * [`scheduler`] — the [`Scheduler`](scheduler::Scheduler):
+//!   cooperative time-slicing of runnable jobs over the serve engine's
+//!   [`WorkerPool`](crate::parallel::WorkerPool), per-slice
+//!   checkpointing through the step journal, cooperative mid-slice
+//!   cancel, and auto-publish of the finished adapter into the serve
+//!   registry under the exact-sparsity replay certificate.
+//!
+//! Why pause/resume is ~free here and impossible for first-order
+//! fine-tuning at this cost: a MeZO-family run's entire state is its
+//! `(seed, g)` step stream (Malladi et al.'s seed-replay property), so
+//! a paused job is a few bytes per completed step plus an O(P)
+//! checkpoint, and resumption lands on **bit-identical** parameters —
+//! asserted end-to-end, across slice boundaries, cancellations and
+//! `mask_refresh` threshold epochs, in `tests/jobs.rs`.
+//!
+//! The lifecycle is exposed over the serve HTTP server (`POST
+//! /v1/jobs`, `GET /v1/jobs`, `GET /v1/jobs/{id}`, `POST
+//! /v1/jobs/{id}/cancel`, `POST /v1/jobs/{id}/resume`) and the `jobs`
+//! CLI subcommand.
+
+pub mod queue;
+pub mod scheduler;
+pub mod spec;
+
+pub use queue::{Job, JobQueue, JobState};
+pub use scheduler::Scheduler;
+pub use spec::JobSpec;

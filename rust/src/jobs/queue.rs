@@ -1,0 +1,545 @@
+//! The persistent job queue: lifecycle state machine + priority pick.
+//!
+//! Every job is one state file (`job-<id>.json`: spec + lifecycle) plus
+//! one step journal (`job-<id>.journal.jsonl`, the PR-2 format) and an
+//! optional slice checkpoint (`job-<id>.ckpt`) under the queue
+//! directory. The state file is rewritten on every transition and after
+//! every slice, so a crashed or restarted orchestrator reopens the
+//! directory and finds every job where it left off — `Running` jobs
+//! (interrupted mid-slice) downgrade to `Queued` and resume from their
+//! journal, which is the whole point of the seed-replay property: a
+//! job's entire training state is a few bytes per step.
+//!
+//! Scheduling policy (see [`JobQueue::next_runnable`]): highest
+//! `priority` first; within a priority level, least-recently-scheduled
+//! first — so equal-priority jobs interleave slice-by-slice and a long
+//! job cannot starve a short one.
+//!
+//! Lifecycle: `Queued → Running → {Completed, Failed, Cancelled}`, with
+//! `Running → Queued` at every slice boundary (cooperative
+//! time-slicing) and `{Failed, Cancelled} → Queued` via
+//! [`resume`](JobQueue::resume).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::spec::JobSpec;
+
+/// Lifecycle state of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// waiting for (more) scheduler slices
+    Queued,
+    /// a scheduler is currently running one of its slices
+    Running,
+    /// all steps done, adapter published
+    Completed,
+    /// training errored or diverged (see `error`)
+    Failed,
+    /// cancelled by the tenant; journal retained, resumable
+    Cancelled,
+}
+
+impl JobState {
+    /// Wire/state-file name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Parse a state-file name.
+    pub fn parse(s: &str) -> Result<JobState> {
+        Ok(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "completed" => JobState::Completed,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            other => bail!("unknown job state '{other}'"),
+        })
+    }
+
+    /// Whether the job can never be scheduled again without a `resume`.
+    pub fn terminal(self) -> bool {
+        matches!(self, JobState::Completed | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// One job: spec + lifecycle bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// queue-assigned id (monotonic)
+    pub id: u64,
+    /// the submitted spec
+    pub spec: JobSpec,
+    /// lifecycle state
+    pub state: JobState,
+    /// optimizer steps completed across all slices
+    pub steps_done: usize,
+    /// scheduler slices executed
+    pub slices_run: usize,
+    /// failure reason (Failed only)
+    pub error: Option<String>,
+    /// the adapter was registered in the serve registry
+    pub published: bool,
+    /// tenant asked for cancellation; honored at the next step boundary
+    pub cancel_requested: bool,
+    /// scheduler clock stamp of the last slice (round-robin fairness)
+    last_scheduled: u64,
+}
+
+impl Job {
+    /// Serialize the full job (state file + `GET /v1/jobs/{id}` body).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("state", Json::Str(self.state.as_str().into())),
+            ("steps_done", Json::Num(self.steps_done as f64)),
+            ("slices_run", Json::Num(self.slices_run as f64)),
+            (
+                "error",
+                self.error.as_ref().map(|e| Json::Str(e.clone())).unwrap_or(Json::Null),
+            ),
+            ("published", Json::Bool(self.published)),
+            ("cancel_requested", Json::Bool(self.cancel_requested)),
+            ("last_scheduled", Json::Num(self.last_scheduled as f64)),
+            ("spec", self.spec.to_json()),
+        ])
+    }
+
+    /// Parse a state file back.
+    pub fn from_json(doc: &Json) -> Result<Job> {
+        let error = match doc.get("error") {
+            Some(Json::Str(s)) => Some(s.clone()),
+            _ => None,
+        };
+        Ok(Job {
+            id: doc.req("id")?.as_f64()? as u64,
+            spec: JobSpec::from_json(doc.req("spec")?)?,
+            state: JobState::parse(doc.req("state")?.as_str()?)?,
+            steps_done: doc.req("steps_done")?.as_usize()?,
+            slices_run: doc.req("slices_run")?.as_usize()?,
+            error,
+            published: matches!(doc.get("published"), Some(Json::Bool(true))),
+            cancel_requested: matches!(doc.get("cancel_requested"), Some(Json::Bool(true))),
+            last_scheduled: doc
+                .get("last_scheduled")
+                .map(|v| v.as_f64().map(|x| x as u64))
+                .transpose()?
+                .unwrap_or(0),
+        })
+    }
+}
+
+/// Queue state behind the lock.
+struct Inner {
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+    clock: u64,
+}
+
+/// The persistent job queue. See the module docs for the contract.
+pub struct JobQueue {
+    dir: PathBuf,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    /// Open (or create) the queue directory and load every persisted
+    /// job. Jobs found `Running` were interrupted mid-slice by a crash
+    /// or shutdown; they re-enter the queue as `Queued` and resume from
+    /// their journals.
+    pub fn open(dir: &Path) -> Result<JobQueue> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating jobs dir {dir:?}"))?;
+        let mut jobs = BTreeMap::new();
+        let mut next_id = 1u64;
+        let mut clock = 0u64;
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if !(name.starts_with("job-") && name.ends_with(".json")) {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path)?;
+            // a corrupt state file must not brick the whole queue (the
+            // subsystem's pitch is crash recovery): quarantine it and
+            // keep loading the healthy jobs. Writes are atomic
+            // (temp+rename), so this only catches external damage.
+            let mut job = match json::parse(&text).and_then(|doc| Job::from_json(&doc)) {
+                Ok(job) => job,
+                Err(e) => {
+                    crate::info!("[jobs] quarantining unreadable state {path:?}: {e:#}");
+                    let _ = std::fs::rename(&path, path.with_extension("json.corrupt"));
+                    // never recycle the quarantined job's id: its journal
+                    // and checkpoint files survive, and a new job under
+                    // the same id would silently resume from them
+                    if let Some(id) = name
+                        .strip_prefix("job-")
+                        .and_then(|s| s.strip_suffix(".json"))
+                        .and_then(|s| s.parse::<u64>().ok())
+                    {
+                        next_id = next_id.max(id + 1);
+                    }
+                    continue;
+                }
+            };
+            if job.state == JobState::Running {
+                // crash recovery: an interrupted slice re-queues — unless
+                // cancellation was already requested, which now completes
+                job.state =
+                    if job.cancel_requested { JobState::Cancelled } else { JobState::Queued };
+            } else if job.state == JobState::Queued && job.cancel_requested {
+                job.state = JobState::Cancelled;
+            }
+            next_id = next_id.max(job.id + 1);
+            clock = clock.max(job.last_scheduled);
+            jobs.insert(job.id, job);
+        }
+        let queue = JobQueue {
+            dir: dir.to_path_buf(),
+            inner: Mutex::new(Inner { jobs, next_id, clock }),
+            ready: Condvar::new(),
+        };
+        // persist the Running->Queued downgrade so a second crash
+        // before any slice still sees consistent state
+        {
+            let inner = queue.inner.lock().unwrap();
+            for job in inner.jobs.values() {
+                queue.persist(job)?;
+            }
+        }
+        Ok(queue)
+    }
+
+    /// The queue directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Step-journal path for a job (the PR-2 JSONL format).
+    pub fn journal_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("job-{id}.journal.jsonl"))
+    }
+
+    /// Slice-checkpoint path for a job (fast resume; journal replay is
+    /// the fallback and audit path).
+    pub fn checkpoint_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("job-{id}.ckpt"))
+    }
+
+    /// On-disk adapter artifact path for a published job.
+    pub fn adapter_path(&self, name: &str) -> PathBuf {
+        self.dir.join("adapters").join(format!("{name}.adapter"))
+    }
+
+    fn state_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("job-{id}.json"))
+    }
+
+    /// Rewrite one job's state file (called on every transition).
+    /// Write-to-temp + rename, so a crash mid-write can never leave a
+    /// truncated state file — the queue's reopen path must not find one.
+    fn persist(&self, job: &Job) -> Result<()> {
+        let path = self.state_path(job.id);
+        let tmp = self.dir.join(format!("job-{}.json.tmp", job.id));
+        std::fs::write(&tmp, format!("{}\n", job.to_json().to_string()))
+            .with_context(|| format!("persisting job state {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing job state {path:?}"))
+    }
+
+    /// Submit a new job; returns its id. The spec is validated first.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        spec.validate()?;
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let job = Job {
+            id,
+            spec,
+            state: JobState::Queued,
+            steps_done: 0,
+            slices_run: 0,
+            error: None,
+            published: false,
+            cancel_requested: false,
+            last_scheduled: 0,
+        };
+        self.persist(&job)?;
+        inner.jobs.insert(id, job);
+        drop(inner);
+        self.ready.notify_all();
+        Ok(id)
+    }
+
+    /// Snapshot one job.
+    pub fn get(&self, id: u64) -> Result<Job> {
+        self.inner
+            .lock()
+            .unwrap()
+            .jobs
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no job {id}"))
+    }
+
+    /// Snapshot every job, id order.
+    pub fn list(&self) -> Vec<Job> {
+        self.inner.lock().unwrap().jobs.values().cloned().collect()
+    }
+
+    /// Request cancellation. A `Queued` job cancels immediately; a
+    /// `Running` job gets the flag and the scheduler honors it at the
+    /// next step boundary (cooperative). Terminal jobs error.
+    pub fn cancel(&self, id: u64) -> Result<Job> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(job) = inner.jobs.get_mut(&id) else { bail!("no job {id}") };
+        match job.state {
+            JobState::Queued => {
+                job.state = JobState::Cancelled;
+                job.cancel_requested = true;
+            }
+            JobState::Running => job.cancel_requested = true,
+            s => bail!("job {id} is {} and cannot be cancelled", s.as_str()),
+        }
+        let snap = job.clone();
+        self.persist(&snap)?;
+        Ok(snap)
+    }
+
+    /// Re-queue a `Cancelled` or `Failed` job: it keeps its journal and
+    /// continues from the exact step it stopped at (bit-identically, by
+    /// the seed-replay property).
+    pub fn resume(&self, id: u64) -> Result<Job> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(job) = inner.jobs.get_mut(&id) else { bail!("no job {id}") };
+        match job.state {
+            JobState::Cancelled | JobState::Failed => {
+                job.state = JobState::Queued;
+                job.cancel_requested = false;
+                job.error = None;
+            }
+            s => bail!("job {id} is {} and cannot be resumed", s.as_str()),
+        }
+        let snap = job.clone();
+        self.persist(&snap)?;
+        drop(inner);
+        self.ready.notify_all();
+        Ok(snap)
+    }
+
+    /// Claim the next runnable job for one slice: highest priority
+    /// first, then least-recently-scheduled (round-robin within a
+    /// priority level), then lowest id. The job transitions to
+    /// `Running` and gets a fresh fairness stamp.
+    pub fn next_runnable(&self) -> Option<Job> {
+        let mut inner = self.inner.lock().unwrap();
+        let pick = inner
+            .jobs
+            .values()
+            .filter(|j| j.state == JobState::Queued && !j.cancel_requested)
+            .map(|j| (std::cmp::Reverse(j.spec.priority), j.last_scheduled, j.id))
+            .min()?;
+        let id = pick.2;
+        inner.clock += 1;
+        let stamp = inner.clock;
+        let job = inner.jobs.get_mut(&id).unwrap();
+        job.state = JobState::Running;
+        job.last_scheduled = stamp;
+        let snap = job.clone();
+        let _ = self.persist(&snap);
+        Some(snap)
+    }
+
+    /// Whether cancellation was requested for `id` (the scheduler's
+    /// per-step cooperative stop poll).
+    pub fn cancel_requested(&self, id: u64) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .jobs
+            .get(&id)
+            .map(|j| j.cancel_requested)
+            .unwrap_or(true)
+    }
+
+    /// Record the outcome of one slice: updated progress plus the next
+    /// lifecycle state (back to `Queued` mid-run, or terminal). A
+    /// cancel that raced the end of the slice (requested after the
+    /// scheduler's in-slice check) is honored here instead of leaving
+    /// the job parked as unschedulable-but-unresumable
+    /// `Queued + cancel_requested`.
+    pub fn finish_slice(
+        &self,
+        id: u64,
+        steps_done: usize,
+        state: JobState,
+        error: Option<String>,
+        published: bool,
+    ) -> Result<Job> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(job) = inner.jobs.get_mut(&id) else { bail!("no job {id}") };
+        job.steps_done = steps_done;
+        job.slices_run += 1;
+        job.state = if state == JobState::Queued && job.cancel_requested {
+            JobState::Cancelled
+        } else {
+            state
+        };
+        job.error = error;
+        job.published = published || job.published;
+        let requeued = job.state == JobState::Queued;
+        let snap = job.clone();
+        self.persist(&snap)?;
+        drop(inner);
+        if requeued {
+            self.ready.notify_all();
+        }
+        Ok(snap)
+    }
+
+    /// Number of jobs in non-terminal states (queue depth gauge).
+    pub fn active(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .jobs
+            .values()
+            .filter(|j| !j.state.terminal())
+            .count()
+    }
+
+    /// Block up to `timeout` for a runnable job to appear. Returns
+    /// whether one exists (spurious wakeups surface as `false` and the
+    /// scheduler loop just re-polls).
+    pub fn wait_for_work(&self, timeout: Duration) -> bool {
+        let inner = self.inner.lock().unwrap();
+        let has = |i: &Inner| {
+            i.jobs
+                .values()
+                .any(|j| j.state == JobState::Queued && !j.cancel_requested)
+        };
+        if has(&inner) {
+            return true;
+        }
+        let (inner, _) = self.ready.wait_timeout(inner, timeout).unwrap();
+        has(&inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, priority: i64) -> JobSpec {
+        JobSpec { name: name.into(), steps: 4, priority, ..JobSpec::default() }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("smz_queue_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn submit_pick_order_honors_priority_then_round_robin() {
+        let dir = tmp_dir("prio");
+        let q = JobQueue::open(&dir).unwrap();
+        let low = q.submit(spec("low", 0)).unwrap();
+        let hi_a = q.submit(spec("hi-a", 5)).unwrap();
+        let hi_b = q.submit(spec("hi-b", 5)).unwrap();
+        // both high-priority jobs slice before the low one, round-robin
+        let first = q.next_runnable().unwrap();
+        assert_eq!(first.id, hi_a);
+        q.finish_slice(hi_a, 1, JobState::Queued, None, false).unwrap();
+        let second = q.next_runnable().unwrap();
+        assert_eq!(second.id, hi_b, "round-robin within the priority level");
+        q.finish_slice(hi_b, 1, JobState::Queued, None, false).unwrap();
+        assert_eq!(q.next_runnable().unwrap().id, hi_a, "alternates, no starvation");
+        q.finish_slice(hi_a, 2, JobState::Completed, None, true).unwrap();
+        q.finish_slice(hi_b, 2, JobState::Completed, None, true).unwrap();
+        assert_eq!(q.next_runnable().unwrap().id, low);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lifecycle_and_persistence_survive_reopen() {
+        let dir = tmp_dir("persist");
+        {
+            let q = JobQueue::open(&dir).unwrap();
+            let a = q.submit(spec("a", 1)).unwrap();
+            let b = q.submit(spec("b", 0)).unwrap();
+            let picked = q.next_runnable().unwrap();
+            assert_eq!(picked.id, a);
+            // crash here: "a" is Running on disk, "b" Queued
+            let _ = b;
+        }
+        let q = JobQueue::open(&dir).unwrap();
+        let jobs = q.list();
+        assert_eq!(jobs.len(), 2);
+        // the interrupted Running job came back Queued
+        assert!(jobs.iter().all(|j| j.state == JobState::Queued), "{jobs:?}");
+        // ids keep increasing after reopen
+        let c = q.submit(spec("c", 0)).unwrap();
+        assert!(c > jobs.iter().map(|j| j.id).max().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cancel_and_resume_transitions() {
+        let dir = tmp_dir("cancel");
+        let q = JobQueue::open(&dir).unwrap();
+        let id = q.submit(spec("x", 0)).unwrap();
+        // queued job cancels immediately and is no longer runnable
+        let j = q.cancel(id).unwrap();
+        assert_eq!(j.state, JobState::Cancelled);
+        assert!(q.next_runnable().is_none());
+        // cancelling again errors (terminal)
+        assert!(q.cancel(id).is_err());
+        // resume re-queues it
+        let j = q.resume(id).unwrap();
+        assert_eq!(j.state, JobState::Queued);
+        assert!(!j.cancel_requested);
+        // running job: cancel sets the flag, scheduler observes it
+        let picked = q.next_runnable().unwrap();
+        assert_eq!(picked.id, id);
+        let j = q.cancel(id).unwrap();
+        assert_eq!(j.state, JobState::Running);
+        assert!(q.cancel_requested(id));
+        q.finish_slice(id, 2, JobState::Cancelled, None, false).unwrap();
+        assert_eq!(q.get(id).unwrap().state, JobState::Cancelled);
+        // a completed job cannot be resumed
+        let done = q.submit(spec("done", 0)).unwrap();
+        q.next_runnable().unwrap();
+        q.finish_slice(done, 4, JobState::Completed, None, true).unwrap();
+        assert!(q.resume(done).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn job_json_round_trips() {
+        let dir = tmp_dir("json");
+        let q = JobQueue::open(&dir).unwrap();
+        let id = q.submit(spec("rt", 2)).unwrap();
+        q.next_runnable().unwrap();
+        let j =
+            q.finish_slice(id, 3, JobState::Failed, Some("diverged".into()), false).unwrap();
+        let back = Job::from_json(&j.to_json()).unwrap();
+        assert_eq!(back.id, j.id);
+        assert_eq!(back.state, JobState::Failed);
+        assert_eq!(back.error.as_deref(), Some("diverged"));
+        assert_eq!(back.steps_done, 3);
+        assert_eq!(back.slices_run, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

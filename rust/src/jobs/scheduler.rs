@@ -1,0 +1,364 @@
+//! The slice scheduler: cooperative multiplexing of fine-tuning jobs
+//! over the serving engine's worker pool, closing the train→serve loop.
+//!
+//! One scheduler drains the [`JobQueue`] one **slice** at a time: claim
+//! the highest-priority runnable job, advance it by a bounded number of
+//! optimizer steps through the slice-resumable
+//! [`DpTrainer`](crate::parallel::DpTrainer) entry point, checkpoint,
+//! and put it back in the queue. Because every slice re-enters the
+//! scheduling decision, a long job can never starve a short one at the
+//! same priority (round-robin), and a higher-priority submission
+//! preempts at the next slice boundary without losing a step.
+//!
+//! Checkpoint/resume is the seed-replay property made operational: a
+//! job's training state *is* its `(seed, g)` step journal, so pausing
+//! costs one buffered-write flush and resuming costs either an O(P)
+//! checkpoint load (fast path) or a forward-pass-free journal replay
+//! (fallback + audit) — both land on bit-identical parameters.
+//!
+//! On completion the scheduler replays the full journal, **verifies the
+//! replay reproduces the live parameters bit-for-bit**, extracts the
+//! sparse delta under the replay's exact-sparsity mask-union
+//! certificate, saves the `.adapter` artifact, and publishes it into
+//! the serve [`Registry`](crate::serve::AdapterRegistry) — the adapter
+//! is classifiable the moment the job finishes, with no operator step
+//! in between.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::data::{tasks, Dataset};
+use crate::parallel::{protocol, DpTrainer, SliceState};
+use crate::runtime::ModelInfo;
+use crate::serve::{ServeEngine, SparseDelta};
+use crate::util::json::Json;
+
+use super::queue::{Job, JobQueue, JobState};
+
+/// Default steps per scheduler slice when a spec leaves `slice_steps` 0.
+pub const DEFAULT_SLICE_STEPS: usize = 25;
+
+/// The job scheduler. See the module docs for the policy.
+pub struct Scheduler {
+    engine: Arc<ServeEngine>,
+    queue: Arc<JobQueue>,
+    default_slice: usize,
+    /// the engine's resident base, snapshotted once at construction —
+    /// it is immutable for the engine's lifetime, and re-snapshotting
+    /// per slice would both copy O(P) floats and convoy on the base
+    /// mutex behind in-flight classify checkouts
+    base: Vec<f32>,
+    /// datasets are deterministic in `(task, seed)`; caching them keeps
+    /// per-slice bookkeeping from regenerating the same data every slice
+    datasets: Mutex<BTreeMap<(String, u64), Arc<Dataset>>>,
+}
+
+impl Scheduler {
+    /// A scheduler draining `queue` over `engine`'s pool/registry.
+    /// `default_slice` (0 = [`DEFAULT_SLICE_STEPS`]) bounds a slice for
+    /// specs that don't set their own.
+    pub fn new(engine: Arc<ServeEngine>, queue: Arc<JobQueue>, default_slice: usize) -> Scheduler {
+        let default_slice = if default_slice == 0 { DEFAULT_SLICE_STEPS } else { default_slice };
+        let base = engine.registry.base_snapshot();
+        Scheduler { engine, queue, default_slice, base, datasets: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The (deterministic) dataset for a `(task, seed)` cell. Cached so
+    /// consecutive slices of one job don't regenerate identical data;
+    /// bounded (generation is cheap, so on overflow the cache simply
+    /// resets rather than growing with every distinct tenant submission
+    /// over a long-uptime server's life).
+    fn dataset_for(&self, task: &str, seed: u64) -> Result<Arc<Dataset>> {
+        const CACHE_CAP: usize = 8;
+        let mut cache = self.datasets.lock().unwrap();
+        if let Some(ds) = cache.get(&(task.to_string(), seed)) {
+            return Ok(Arc::clone(ds));
+        }
+        let ds = Arc::new(
+            tasks::generate(task, seed).with_context(|| format!("generating task '{task}'"))?,
+        );
+        if cache.len() >= CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert((task.to_string(), seed), Arc::clone(&ds));
+        Ok(ds)
+    }
+
+    /// The queue this scheduler drains.
+    pub fn queue(&self) -> &Arc<JobQueue> {
+        &self.queue
+    }
+
+    /// Claim and run exactly one slice. Returns `false` when nothing is
+    /// runnable. A failing (or panicking) slice marks its job `Failed`
+    /// and never takes the scheduler down — one poisoned job cannot
+    /// wedge the queue.
+    pub fn run_one_slice(&self) -> bool {
+        self.run_one_slice_stop(None)
+    }
+
+    /// [`run_one_slice`](Scheduler::run_one_slice) with a server stop
+    /// flag threaded into the per-step cooperative poll, so shutdown
+    /// interrupts an in-flight slice at the next step boundary (the
+    /// journal/state pair stays consistent and the job simply
+    /// re-queues) instead of blocking for the whole slice.
+    fn run_one_slice_stop(&self, server_stop: Option<&AtomicBool>) -> bool {
+        let Some(job) = self.queue.next_runnable() else {
+            return false;
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.slice_job(&job, server_stop)));
+        let (steps_done, state, error, published) = match outcome {
+            Ok(Ok(result)) => result,
+            Ok(Err(e)) => (job.steps_done, JobState::Failed, Some(format!("{e:#}")), false),
+            Err(payload) => {
+                let msg = crate::util::panic_message(&*payload);
+                (job.steps_done, JobState::Failed, Some(format!("slice panicked: {msg}")), false)
+            }
+        };
+        if let Some(e) = &error {
+            crate::info!("[jobs] job {} '{}' failed: {e}", job.id, job.spec.name);
+        }
+        let _ = self.queue.finish_slice(job.id, steps_done, state, error, published);
+        true
+    }
+
+    /// Run slices until the queue has nothing runnable; returns the
+    /// number of slices executed (the CLI `jobs drain` path and the
+    /// test harness).
+    pub fn run_until_idle(&self) -> usize {
+        let mut slices = 0;
+        while self.run_one_slice() {
+            slices += 1;
+        }
+        slices
+    }
+
+    /// The background scheduler loop the HTTP server runs: drain slices,
+    /// park briefly when idle, exit when `stop` flips — even mid-slice,
+    /// at the next step boundary.
+    pub fn run_loop(&self, stop: &AtomicBool) {
+        while !stop.load(Ordering::Acquire) {
+            if !self.run_one_slice_stop(Some(stop)) {
+                self.queue.wait_for_work(Duration::from_millis(50));
+            }
+        }
+    }
+
+    /// Re-register the saved `.adapter` artifacts of already-published
+    /// jobs — a restarted server starts with an empty registry, but the
+    /// artifacts under `<dir>/adapters/` are the durable copies, so a
+    /// tenant's completed job stays classifiable across restarts.
+    /// Returns how many adapters were restored; an unreadable or
+    /// over-budget artifact is logged and skipped, never fatal.
+    /// [`http::serve`](crate::serve::http::serve) calls this before the
+    /// scheduler loop starts.
+    pub fn reload_published(&self) -> usize {
+        let mut restored = 0;
+        for job in self.queue.list() {
+            if !(job.published && job.state == JobState::Completed) {
+                continue;
+            }
+            let name = &job.spec.name;
+            if self.engine.registry.contains(name) {
+                continue;
+            }
+            let path = self.queue.adapter_path(name);
+            match SparseDelta::load(&path, self.engine.model())
+                .and_then(|delta| self.engine.registry.insert(name, delta))
+            {
+                Ok(_) => restored += 1,
+                Err(e) => crate::info!(
+                    "[jobs] could not restore published adapter '{name}' from {path:?}: {e:#}"
+                ),
+            }
+        }
+        restored
+    }
+
+    /// The fallible slice body: resolve config, restore state, advance
+    /// one slice, checkpoint, and decide the next lifecycle state.
+    /// Returns `(steps_done, next_state, error, published)`.
+    fn slice_job(
+        &self,
+        job: &Job,
+        server_stop: Option<&AtomicBool>,
+    ) -> Result<(usize, JobState, Option<String>, bool)> {
+        let spec = &job.spec;
+        let model: ModelInfo = self.engine.model().clone();
+        let cfg = spec.train_config(&model.name)?;
+        let dataset = self.dataset_for(&spec.task, cfg.seed)?;
+        let journal = self.queue.journal_path(job.id);
+        let mut trainer =
+            DpTrainer::new(self.engine.runtime(), &self.engine.pool, cfg.clone())
+                .with_journal(&journal);
+        trainer.eval_test = false;
+        trainer.mask_refresh = spec.mask_refresh;
+
+        // jobs always train from the server's resident base (snapshotted
+        // once at scheduler construction), so the published delta is
+        // valid against the vector classify serves
+        let mut state = if !journal.exists() {
+            trainer.begin_slices(&model, self.base.clone())?
+        } else {
+            match self.restore_from_checkpoint(job.id, &model, &journal) {
+                Some(st) => st,
+                None => trainer.resume_slices(&model, &self.base)?,
+            }
+        };
+
+        let slice = if spec.slice_steps > 0 { spec.slice_steps } else { self.default_slice };
+        let queue = &self.queue;
+        let id = job.id;
+        let stop = move || {
+            queue.cancel_requested(id)
+                || server_stop.map(|s| s.load(Ordering::Acquire)).unwrap_or(false)
+        };
+        let report = trainer.run_slice(&model, &dataset, &mut state, slice, Some(&stop))?;
+        if !report.diverged {
+            // a diverged slice leaves no checkpoint: its state stopped
+            // mid-step (no record was journaled), and a checkpoint whose
+            // step count matches the journal would shadow the
+            // authoritative replay on a later resume
+            self.save_checkpoint(job.id, &model, &state)?;
+        }
+        crate::debug!(
+            "[jobs] job {id} '{}' slice {}: +{} steps ({}/{}), loss {:.4}",
+            spec.name,
+            job.slices_run + 1,
+            report.steps_run,
+            state.step,
+            spec.steps,
+            report.last_loss
+        );
+
+        if report.diverged {
+            return Ok((
+                state.step,
+                JobState::Failed,
+                Some(format!("diverged at step {}", state.step)),
+                false,
+            ));
+        }
+        if self.queue.cancel_requested(job.id) {
+            return Ok((state.step, JobState::Cancelled, None, false));
+        }
+        if report.done {
+            self.publish(job, &model, &self.base, &state, &cfg)?;
+            return Ok((state.step, JobState::Completed, None, true));
+        }
+        Ok((state.step, JobState::Queued, None, false))
+    }
+
+    /// Fast resume: the slice checkpoint, accepted only when it matches
+    /// the journal's record count exactly (a crash between the journal
+    /// flush and the checkpoint write leaves them desynced — then the
+    /// journal replay below is authoritative). The count check parses
+    /// no records, so this path stays O(P + journal bytes) per slice.
+    fn restore_from_checkpoint(
+        &self,
+        id: u64,
+        model: &ModelInfo,
+        journal: &std::path::Path,
+    ) -> Option<SliceState> {
+        let records = protocol::journal_record_count(journal).ok()?;
+        let ck = Checkpoint::load_if_matching(&self.queue.checkpoint_path(id), model, records)?;
+        let mask_epoch = ck.meta.get("mask_epoch")?.as_f64().ok()? as u32;
+        let thresholds = ck
+            .meta
+            .get("thresholds")?
+            .as_arr()
+            .ok()?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect::<Result<Vec<f32>>>()
+            .ok()?;
+        Some(SliceState {
+            step: ck.step,
+            mask_epoch,
+            params: ck.params,
+            slots: ck.slots,
+            thresholds,
+        })
+    }
+
+    /// Persist the slice state as a checkpoint (params/slots binary,
+    /// epoch + thresholds in the sidecar — all bit-exact round trips).
+    fn save_checkpoint(&self, id: u64, model: &ModelInfo, state: &SliceState) -> Result<()> {
+        Checkpoint {
+            model: model.name.clone(),
+            n_params: state.params.len(),
+            step: state.step,
+            params: state.params.clone(),
+            slots: state.slots.clone(),
+            meta: Json::obj(vec![
+                ("kind", Json::Str("job-slice".into())),
+                ("mask_epoch", Json::Num(state.mask_epoch as f64)),
+                ("thresholds", Json::from_f32s(&state.thresholds)),
+            ]),
+        }
+        .save(&self.queue.checkpoint_path(id))
+    }
+
+    /// Completion: replay the full journal, verify it reproduces the
+    /// live parameters bit-for-bit, extract the delta under the
+    /// mask-union certificate, save the `.adapter` artifact and publish
+    /// it into the serve registry.
+    fn publish(
+        &self,
+        job: &Job,
+        model: &ModelInfo,
+        base: &[f32],
+        live: &SliceState,
+        cfg: &crate::config::TrainConfig,
+    ) -> Result<()> {
+        let journal = self.queue.journal_path(job.id);
+        let (header, records) = protocol::load_journal(&journal)?;
+        let outcome =
+            protocol::replay_full(self.engine.runtime(), model, cfg, &header, base, &records)?;
+        for (i, (a, b)) in outcome.params.iter().zip(&live.params).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                bail!(
+                    "journal replay diverges from live training state at coordinate {i} \
+                     ({a} vs {b}) — refusing to publish job {}",
+                    job.id
+                );
+            }
+        }
+        let meta = Json::obj(vec![
+            ("source", Json::Str(format!("job:{}", job.id))),
+            ("task", Json::Str(job.spec.task.clone())),
+            ("optimizer", Json::Str(job.spec.optimizer.clone())),
+            ("steps", Json::Num(outcome.steps as f64)),
+            ("seed", Json::Num(job.spec.seed as f64)),
+        ]);
+        let delta =
+            SparseDelta::extract(model, base, &outcome.params, Some(&outcome.mask_union), meta)?;
+        let apath = self.queue.adapter_path(&job.spec.name);
+        delta
+            .save(&apath)
+            .with_context(|| format!("saving adapter artifact {apath:?}"))?;
+        let evicted = self
+            .engine
+            .registry
+            .insert(&job.spec.name, delta)
+            .with_context(|| format!("publishing adapter '{}'", job.spec.name))?;
+        crate::info!(
+            "[jobs] job {} published adapter '{}' ({} steps{})",
+            job.id,
+            job.spec.name,
+            outcome.steps,
+            if evicted.is_empty() {
+                String::new()
+            } else {
+                format!(", evicted {}", evicted.join(", "))
+            }
+        );
+        Ok(())
+    }
+}

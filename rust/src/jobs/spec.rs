@@ -1,0 +1,255 @@
+//! Job specifications: what a tenant asks the orchestrator to fine-tune.
+//!
+//! A [`JobSpec`] is the entire user-facing surface of a fine-tuning job:
+//! the task/optimizer cell to train (the Zhang-et-al. benchmark matrix a
+//! queue is expected to multiplex), the sparsity/mask knobs, the step
+//! budget, the data-parallel width, and the scheduling knobs (priority,
+//! slice size). Specs cross the wire as JSON (`POST /v1/jobs`) and rest
+//! on disk inside the queue's per-job state files, so they round-trip
+//! exactly through [`to_json`](JobSpec::to_json) /
+//! [`from_json`](JobSpec::from_json).
+
+use anyhow::{bail, Result};
+
+use crate::config::TrainConfig;
+use crate::parallel::dp::dp_supported;
+use crate::util::json::Json;
+
+/// Everything a fine-tuning job needs, as submitted by a tenant.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// adapter name published into the serve registry on completion
+    /// (also the `.adapter` artifact filename — restricted charset)
+    pub name: String,
+    /// task to fine-tune on (see `data::tasks`)
+    pub task: String,
+    /// optimizer (must be DP-supported: the mezo/smezo/rmezo/zo_* family)
+    pub optimizer: String,
+    /// total optimizer steps
+    pub steps: usize,
+    /// data-parallel worker count (must divide the model batch)
+    pub workers: usize,
+    /// scheduling priority — higher runs first; ties round-robin
+    pub priority: i64,
+    /// steps per cooperative scheduler slice (0 = scheduler default)
+    pub slice_steps: usize,
+    /// recompute §8.2 thresholds every N steps (0 = fixed at init)
+    pub mask_refresh: usize,
+    /// data + noise seed
+    pub seed: u64,
+    /// learning-rate override (None = task/optimizer preset)
+    pub lr: Option<f32>,
+    /// perturbation-scale override
+    pub eps: Option<f32>,
+    /// sparsity override
+    pub sparsity: Option<f32>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            name: String::new(),
+            task: "rte".into(),
+            optimizer: "smezo".into(),
+            steps: 100,
+            workers: 1,
+            priority: 0,
+            slice_steps: 0,
+            mask_refresh: 0,
+            seed: 42,
+            lr: None,
+            eps: None,
+            sparsity: None,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Reject specs the scheduler could never run — bad names (the name
+    /// becomes a filename and a registry key), zero steps, optimizers
+    /// outside the DP family.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() || self.name.len() > 64 {
+            bail!("job name must be 1..=64 characters");
+        }
+        if !self
+            .name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'))
+        {
+            bail!("job name '{}' may only contain [A-Za-z0-9_.-]", self.name);
+        }
+        if self.steps == 0 {
+            bail!("job steps must be > 0");
+        }
+        if self.workers == 0 {
+            bail!("job workers must be >= 1");
+        }
+        if !dp_supported(&self.optimizer) {
+            bail!(
+                "optimizer '{}' is not slice-runnable (jobs support the \
+                 mezo/smezo/smezo_large/rmezo/zo_mom/zo_adam/zo_adamu family)",
+                self.optimizer
+            );
+        }
+        Ok(())
+    }
+
+    /// Resolve the fully-validated [`TrainConfig`] this job trains under:
+    /// task/optimizer presets for `model`, then the spec's overrides.
+    /// Deterministic — every slice of a job resolves the identical
+    /// config, which is what keeps resume bit-exact.
+    pub fn train_config(&self, model: &str) -> Result<TrainConfig> {
+        self.validate()?;
+        let mut cfg = TrainConfig::resolve(model, &self.task, &self.optimizer, None)?;
+        cfg.steps = self.steps;
+        cfg.workers = self.workers;
+        cfg.seed = self.seed;
+        cfg.eval_every = 0;
+        cfg.eval_cap = 0;
+        if let Some(lr) = self.lr {
+            cfg.hypers.lr = lr;
+        }
+        if let Some(eps) = self.eps {
+            cfg.hypers.eps = eps;
+        }
+        if let Some(sp) = self.sparsity {
+            cfg.hypers.sparsity = sp;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize for the wire and the queue's state files.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("task", Json::Str(self.task.clone())),
+            ("optimizer", Json::Str(self.optimizer.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("priority", Json::Num(self.priority as f64)),
+            ("slice_steps", Json::Num(self.slice_steps as f64)),
+            ("mask_refresh", Json::Num(self.mask_refresh as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ];
+        if let Some(lr) = self.lr {
+            fields.push(("lr", Json::Num(lr as f64)));
+        }
+        if let Some(eps) = self.eps {
+            fields.push(("eps", Json::Num(eps as f64)));
+        }
+        if let Some(sp) = self.sparsity {
+            fields.push(("sparsity", Json::Num(sp as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a spec from a submit body / state file. Only `name` is
+    /// required; everything else has the [`Default`] values. Unknown
+    /// keys are ignored (forward compatibility for state files).
+    pub fn from_json(doc: &Json) -> Result<JobSpec> {
+        let mut spec = JobSpec {
+            name: doc.req("name")?.as_str()?.to_string(),
+            ..JobSpec::default()
+        };
+        if let Some(v) = doc.get("task") {
+            spec.task = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("optimizer") {
+            spec.optimizer = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.get("steps") {
+            spec.steps = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("workers") {
+            spec.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("priority") {
+            spec.priority = v.as_f64()? as i64;
+        }
+        if let Some(v) = doc.get("slice_steps") {
+            spec.slice_steps = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("mask_refresh") {
+            spec.mask_refresh = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("seed") {
+            spec.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = doc.get("lr") {
+            spec.lr = Some(v.as_f64()? as f32);
+        }
+        if let Some(v) = doc.get("eps") {
+            spec.eps = Some(v.as_f64()? as f32);
+        }
+        if let Some(v) = doc.get("sparsity") {
+            spec.sparsity = Some(v.as_f64()? as f32);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str) -> JobSpec {
+        JobSpec { name: name.into(), steps: 8, ..JobSpec::default() }
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let mut s = spec("tenant-a.v2");
+        s.priority = -3;
+        s.workers = 2;
+        s.slice_steps = 4;
+        s.mask_refresh = 3;
+        s.lr = Some(2.5e-4);
+        s.sparsity = Some(0.6);
+        let back = JobSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.priority, -3);
+        assert_eq!(back.workers, 2);
+        assert_eq!(back.slice_steps, 4);
+        assert_eq!(back.mask_refresh, 3);
+        assert_eq!(back.lr.unwrap().to_bits(), s.lr.unwrap().to_bits());
+        assert_eq!(back.sparsity.unwrap().to_bits(), s.sparsity.unwrap().to_bits());
+        assert!(back.eps.is_none());
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(spec("").validate().is_err());
+        assert!(spec("has space").validate().is_err());
+        assert!(spec("has/slash").validate().is_err());
+        let mut s = spec("ok");
+        s.steps = 0;
+        assert!(s.validate().is_err());
+        let mut s = spec("ok");
+        s.workers = 0;
+        assert!(s.validate().is_err());
+        let mut s = spec("ok");
+        s.optimizer = "smezo_const".into(); // stored-mask: serial only
+        assert!(s.validate().is_err());
+        assert!(spec("fine_name-1.0").validate().is_ok());
+    }
+
+    #[test]
+    fn train_config_applies_overrides() {
+        let mut s = spec("cfg");
+        s.lr = Some(1e-5);
+        s.mask_refresh = 2;
+        s.workers = 2;
+        s.seed = 7;
+        let cfg = s.train_config("llama_tiny").unwrap();
+        assert_eq!(cfg.steps, 8);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.hypers.lr, 1e-5);
+        assert_eq!(cfg.eval_every, 0);
+        // no override: the preset value survives
+        assert!(cfg.hypers.sparsity > 0.0);
+    }
+}

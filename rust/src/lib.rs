@@ -38,6 +38,10 @@
 //!   multi-tenant adapter registry, dynamic micro-batching over the
 //!   worker pool, and the std-only HTTP loopback server behind the
 //!   `serve` subcommand.
+//! * [`jobs`] — train-to-serve orchestration: the persistent async
+//!   fine-tuning job queue, the cooperative slice scheduler over the
+//!   worker pool (checkpoint/resume through the step journal), and
+//!   auto-publication of finished adapters into the serve registry.
 //! * [`bench`] — the timing harness used by `cargo bench` targets.
 
 #![warn(missing_docs)]
@@ -46,6 +50,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod jobs;
 pub mod parallel;
 pub mod runtime;
 pub mod serve;

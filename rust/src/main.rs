@@ -8,6 +8,8 @@
 //!   probe            half-batch generalization probe (Fig-2b/4)
 //!   repro <exp>      regenerate a paper table/figure (or `all`)
 //!   serve            multi-tenant sparse-adapter inference server
+//!   jobs             fine-tuning job queue (submit/list/show/cancel/
+//!                    resume/drain) — the train→serve orchestrator
 //!   memory-table     Table-4 memory model only (fast)
 //!   inspect          print manifest/model/layout information
 //!   check-artifacts  compile every artifact and run ABI smoke checks
@@ -28,6 +30,7 @@ use sparse_mezo::coordinator::trainer::{in_context, zero_shot, Trainer};
 use sparse_mezo::coordinator::report::Table;
 use sparse_mezo::data::tasks;
 use sparse_mezo::info;
+use sparse_mezo::jobs::{JobQueue, JobSpec, Scheduler};
 use sparse_mezo::parallel::{DpTrainer, WorkerPool};
 use sparse_mezo::runtime::Runtime;
 use sparse_mezo::serve::{http, ServeEngine};
@@ -50,17 +53,31 @@ COMMANDS
                   data-parallel engine; bit-identical to --workers 1)
   eval            --model M --task T [--ckpt CKPT --icl-shots K]
   sweep           --model M --task T --optimizer O --axis lr|sparsity
-                  [--grid a,b,c --steps N --workers N]
+                  [--grid a,b,c --steps N --workers N --cell-workers K]
+                  (--workers bounds concurrent cells; --cell-workers > 1
+                  trains each cell through the seed-sync DP engine)
   probe           --model M --task T --optimizer O [--steps N]
   repro           <table1|table2|table3|table4|table5|table10|table11|
                    table13|fig1|fig2a|fig2b|fig2c|fig3|fig4|all>
                   [--model M --out DIR --zo-steps N --seeds a,b --fast]
   serve           --model M [--port P --workers N --max-batch R
                   --flush-ms MS --max-adapters K --adapter-budget BYTES
-                  --seed S --init-from CKPT --config FILE.toml]
+                  --seed S --init-from CKPT --config FILE.toml
+                  --jobs-dir DIR --slice-steps N]
                   (loopback HTTP: GET /healthz, GET|POST /v1/adapters,
                   POST /v1/classify; adapters materialize from step
-                  journals relative to the server's base parameters)
+                  journals relative to the server's base parameters.
+                  With --jobs-dir, /v1/jobs accepts fine-tuning jobs
+                  that train in the background and auto-publish)
+  jobs            <submit|list|show|cancel|resume|drain> --jobs-dir DIR
+                  submit: --name A [--task T --optimizer O --steps N
+                          --workers W --priority P --slice-steps K
+                          --mask-refresh R --seed S --lr X --eps X
+                          --sparsity X]
+                  show|cancel|resume: --id N
+                  drain:  [--model M --workers N --seed S
+                          --init-from CKPT] — run queued jobs to
+                  completion in-process, publishing adapters
   memory-table    [--model M --out DIR]
   inspect         [--model M]
   check-artifacts
@@ -102,6 +119,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "probe" => cmd_probe(&args, &artifacts),
         "repro" => cmd_repro(&args, &artifacts),
         "serve" => cmd_serve(&args, &artifacts),
+        "jobs" => cmd_jobs(&args, &artifacts),
         "memory-table" => cmd_memory(&args, &artifacts),
         "inspect" => cmd_inspect(&args, &artifacts),
         "check-artifacts" => cmd_check(&artifacts),
@@ -274,6 +292,10 @@ fn cmd_sweep(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.eval_every = args.usize_or("eval-every", 150)?;
     cfg.eval_cap = args.usize_or("eval-cap", 200)?;
     cfg.seed = args.u64_or("seed", 17)?;
+    // --cell-workers > 1: every cell trains through the seed-sync DP
+    // engine (bit-identical to serial) instead of the serial trainer
+    cfg.workers = args.usize_or("cell-workers", cfg.workers)?;
+    cfg.validate()?;
     let dataset = tasks::generate(&task, 1234)?;
     // pool sized to the grid by default (the pre-pool behavior: every
     // cell concurrent); --workers caps it
@@ -351,6 +373,21 @@ fn cmd_repro(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
+/// The serve/jobs base parameters: a checkpoint when configured, else
+/// the deterministic init for the config's seed.
+fn resolve_serve_base(rt: &Runtime, cfg: &ServeConfig) -> Result<Vec<f32>> {
+    let model_info = rt.model(&cfg.model)?.clone();
+    match &cfg.init_from {
+        Some(path) => Ok(Checkpoint::load(&PathBuf::from(path), &model_info)
+            .with_context(|| format!("loading base checkpoint {path}"))?
+            .params),
+        None => {
+            let init = sparse_mezo::runtime::exec::InitExec::load(rt, &model_info)?;
+            init.run(rt, (cfg.seed as u32, 0x1717))
+        }
+    }
+}
+
 fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     let rt = Runtime::new(artifacts)?;
     let toml_path = args.get("config").map(PathBuf::from);
@@ -364,20 +401,12 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.adapter_budget = args.usize_or("adapter-budget", cfg.adapter_budget)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.init_from = args.get("init-from").map(String::from).or(cfg.init_from);
+    cfg.jobs_dir = args.get("jobs-dir").map(String::from).or(cfg.jobs_dir);
+    cfg.slice_steps = args.usize_or("slice-steps", cfg.slice_steps)?;
     cfg.validate()?;
 
     let model_info = rt.model(&cfg.model)?.clone();
-    let base = match &cfg.init_from {
-        Some(path) => {
-            Checkpoint::load(&PathBuf::from(path), &model_info)
-                .with_context(|| format!("loading base checkpoint {path}"))?
-                .params
-        }
-        None => {
-            let init = sparse_mezo::runtime::exec::InitExec::load(&rt, &model_info)?;
-            init.run(&rt, (cfg.seed as u32, 0x1717))?
-        }
-    };
+    let base = resolve_serve_base(&rt, &cfg)?;
     info!(
         "serve: {} | {} params | {} pool threads | batch {} rows / {} ms | {} adapters / {} MB",
         cfg.model,
@@ -388,10 +417,113 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         cfg.max_adapters,
         cfg.adapter_budget >> 20
     );
-    let engine = Arc::new(ServeEngine::new(rt, &cfg, base)?);
-    let running = http::serve(engine, cfg.port)?;
+    let mut engine = ServeEngine::new(rt, &cfg, base)?;
+    if let Some(dir) = &cfg.jobs_dir {
+        let queue = Arc::new(JobQueue::open(&PathBuf::from(dir))?);
+        info!("jobs: {} persisted under {dir} ({} active)", queue.list().len(), queue.active());
+        engine = engine.with_jobs(queue, cfg.slice_steps);
+    }
+    let running = http::serve(Arc::new(engine), cfg.port)?;
     info!("listening on http://{} (loopback only)", running.addr);
     running.join();
+    Ok(())
+}
+
+fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let action = args
+        .positionals
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("jobs needs an action: submit|list|show|cancel|resume|drain"))?;
+    let dir = PathBuf::from(args.str_or("jobs-dir", "jobs"));
+    let queue = Arc::new(JobQueue::open(&dir)?);
+    match action {
+        "submit" => {
+            let spec = JobSpec {
+                name: args
+                    .get("name")
+                    .map(String::from)
+                    .ok_or_else(|| anyhow::anyhow!("jobs submit needs --name"))?,
+                task: args.str_or("task", "rte"),
+                optimizer: args.str_or("optimizer", "smezo"),
+                steps: args.usize_or("steps", 100)?,
+                workers: args.workers_or(1)?,
+                priority: args.i64_or("priority", 0)?,
+                slice_steps: args.usize_or("slice-steps", 0)?,
+                mask_refresh: args.usize_or("mask-refresh", 0)?,
+                seed: args.u64_or("seed", 42)?,
+                lr: args.get("lr").map(|_| args.f32_or("lr", 0.0)).transpose()?,
+                eps: args.get("eps").map(|_| args.f32_or("eps", 0.0)).transpose()?,
+                sparsity: args.get("sparsity").map(|_| args.f32_or("sparsity", 0.0)).transpose()?,
+            };
+            let id = queue.submit(spec)?;
+            println!("{}", queue.get(id)?.to_json().to_string());
+        }
+        "list" => {
+            println!("{:>4}  {:<10}  {:<24}  {:>12}  {:>8}", "id", "state", "name", "steps", "prio");
+            for job in queue.list() {
+                println!(
+                    "{:>4}  {:<10}  {:<24}  {:>5}/{:<6}  {:>8}{}",
+                    job.id,
+                    job.state.as_str(),
+                    job.spec.name,
+                    job.steps_done,
+                    job.spec.steps,
+                    job.spec.priority,
+                    job.error.as_ref().map(|e| format!("  ({e})")).unwrap_or_default()
+                );
+            }
+        }
+        "show" => {
+            let id = args.u64_or("id", 0)?;
+            println!("{}", queue.get(id)?.to_json().to_string());
+        }
+        "cancel" => {
+            let id = args.u64_or("id", 0)?;
+            let job = queue.cancel(id)?;
+            info!("job {id} -> {} (cancel_requested {})", job.state.as_str(), job.cancel_requested);
+        }
+        "resume" => {
+            let id = args.u64_or("id", 0)?;
+            let job = queue.resume(id)?;
+            info!("job {id} -> {}", job.state.as_str());
+        }
+        "drain" => {
+            // run every queued job to completion in-process: the same
+            // engine + scheduler the server hosts, minus the HTTP layer
+            let rt = Runtime::new(artifacts)?;
+            let mut cfg = ServeConfig::resolve(None)?;
+            cfg.model = args.str_or("model", &cfg.model);
+            cfg.workers = args.workers_or(cfg.workers)?;
+            cfg.seed = args.u64_or("seed", cfg.seed)?;
+            cfg.init_from = args.get("init-from").map(String::from).or(cfg.init_from);
+            cfg.slice_steps = args.usize_or("slice-steps", cfg.slice_steps)?;
+            cfg.validate()?;
+            let base = resolve_serve_base(&rt, &cfg)?;
+            let engine = Arc::new(
+                ServeEngine::new(rt, &cfg, base)?.with_jobs(Arc::clone(&queue), cfg.slice_steps),
+            );
+            let scheduler = Scheduler::new(engine, Arc::clone(&queue), cfg.slice_steps);
+            let slices = scheduler.run_until_idle();
+            info!("drained {} scheduler slices", slices);
+            for job in queue.list() {
+                println!(
+                    "{:>4}  {:<10}  {:<24}  {:>5}/{:<6}{}",
+                    job.id,
+                    job.state.as_str(),
+                    job.spec.name,
+                    job.steps_done,
+                    job.spec.steps,
+                    if job.published {
+                        format!("  adapter -> {}", queue.adapter_path(&job.spec.name).display())
+                    } else {
+                        job.error.as_ref().map(|e| format!("  ({e})")).unwrap_or_default()
+                    }
+                );
+            }
+        }
+        other => anyhow::bail!("unknown jobs action '{other}' (submit|list|show|cancel|resume|drain)"),
+    }
     Ok(())
 }
 

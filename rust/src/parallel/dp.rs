@@ -55,7 +55,7 @@ use crate::util::stats::Ema;
 
 use super::eval;
 use super::pool::WorkerPool;
-use super::protocol::{params_fingerprint, JournalWriter, StepRecord};
+use super::protocol::{self, params_fingerprint, JournalWriter, StepRecord};
 
 /// Which phase-B update rule the DP engine applies for an optimizer —
 /// each mirrors the corresponding `Rule` arm of the native backend's
@@ -302,6 +302,13 @@ impl<'rt> DpTrainer<'rt> {
 
     /// Run against an explicit dataset (paired-comparison harnesses
     /// share one dataset across methods and worker counts).
+    ///
+    /// NOTE: [`run_slice`](DpTrainer::run_slice) re-implements this
+    /// loop's per-step arithmetic on a single representative replica;
+    /// any change to the step math here (noise chunking, fold order,
+    /// refresh/divergence policy) must be mirrored there — the
+    /// bit-identity between the two is asserted by `tests/jobs.rs`
+    /// against this method directly, so a one-sided edit fails CI.
     pub fn run_on(&mut self, model: &ModelInfo, dataset: &Dataset) -> Result<TrainResult> {
         let cfg = self.cfg.clone();
         cfg.validate()?;
@@ -551,6 +558,312 @@ impl<'rt> DpTrainer<'rt> {
             sec_per_step: step_seconds / steps_run.max(1) as f64,
             params,
             train_losses,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// slice-resumable entry point (the job orchestrator's training primitive)
+// ---------------------------------------------------------------------------
+
+/// The complete state of a paused slice-run between slices: everything
+/// step `t+1` needs to continue **bit-identically** to an uninterrupted
+/// run. Because seed-sync keeps every replica identical at step
+/// boundaries, one `(params, slots)` copy represents all N workers; the
+/// thresholds/mask_epoch pair carries the §8.2 refresh state that is
+/// otherwise implicit in the live trainer's locals.
+#[derive(Debug, Clone)]
+pub struct SliceState {
+    /// optimizer steps completed so far (the next step index)
+    pub step: usize,
+    /// threshold generation in effect (increments at each mask refresh)
+    pub mask_epoch: u32,
+    /// the parameters after `step` steps
+    pub params: Vec<f32>,
+    /// optimizer slots after `step` steps (empty for the SGD family)
+    pub slots: Vec<f32>,
+    /// §8.2 magnitude thresholds in effect for the next step's mask
+    pub thresholds: Vec<f32>,
+}
+
+/// What one [`DpTrainer::run_slice`] call accomplished.
+#[derive(Debug, Clone, Copy)]
+pub struct SliceReport {
+    /// steps executed in this slice
+    pub steps_run: usize,
+    /// the run is finished (all configured steps done, or diverged)
+    pub done: bool,
+    /// divergence detection fired inside this slice
+    pub diverged: bool,
+    /// training loss of the last completed step (NaN if none ran)
+    pub last_loss: f32,
+}
+
+impl<'rt> DpTrainer<'rt> {
+    /// Validate the config for slice running and return the update rule.
+    fn slice_rule(&self, model: &ModelInfo) -> Result<DpRule> {
+        self.cfg.validate()?;
+        let Some(rule) = dp_rule(&self.cfg.optimizer) else {
+            bail!(
+                "slice-run training supports the mezo/smezo/smezo_large/rmezo/\
+                 zo_mom/zo_adam/zo_adamu family, not '{}'",
+                self.cfg.optimizer
+            );
+        };
+        let n = self.cfg.workers.max(1);
+        if model.batch % n != 0 {
+            bail!("workers {n} must divide the model batch size {}", model.batch);
+        }
+        Ok(rule)
+    }
+
+    /// Start a fresh slice-run from `base`: compute initial thresholds
+    /// and create the step journal (header identical to [`run_on`]'s, so
+    /// [`replay_full`](protocol::replay_full) and the serving layer's
+    /// adapter materialization work on job journals unchanged).
+    ///
+    /// [`run_on`]: DpTrainer::run_on
+    pub fn begin_slices(&self, model: &ModelInfo, base: Vec<f32>) -> Result<SliceState> {
+        self.slice_rule(model)?;
+        let cfg = &self.cfg;
+        if base.len() != model.n_params {
+            bail!("begin_slices: base has {} params, model expects {}", base.len(), model.n_params);
+        }
+        let Some(path) = &self.journal_path else {
+            bail!("slice-run training needs a journal path (checkpoint/resume lives there)");
+        };
+        let thresholds = self.rt.backend().thresholds(model, &base, cfg.hypers.sparsity)?;
+        let mut journal = JournalWriter::create(
+            path,
+            vec![
+                ("label", Json::Str(cfg.label())),
+                ("model", Json::Str(cfg.model.clone())),
+                ("task", Json::Str(cfg.task.clone())),
+                ("optimizer", Json::Str(cfg.optimizer.clone())),
+                ("workers", Json::Num(cfg.workers.max(1) as f64)),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("steps", Json::Num(cfg.steps as f64)),
+                ("mask_refresh", Json::Num(self.mask_refresh as f64)),
+                ("init_fnv", Json::Str(params_fingerprint(&base))),
+                ("lr", Json::Num(cfg.hypers.lr as f64)),
+                ("eps", Json::Num(cfg.hypers.eps as f64)),
+                ("sparsity", Json::Num(cfg.hypers.sparsity as f64)),
+                ("beta1", Json::Num(cfg.hypers.beta1 as f64)),
+                ("beta2", Json::Num(cfg.hypers.beta2 as f64)),
+                ("adam_eps", Json::Num(cfg.hypers.adam_eps as f64)),
+            ],
+        )?;
+        journal.flush()?;
+        let slots = vec![0.0f32; dp_slot_len(&cfg.optimizer, model.n_params)];
+        Ok(SliceState { step: 0, mask_epoch: 0, params: base, slots, thresholds })
+    }
+
+    /// Rebuild the slice state of a paused run from its journal: replay
+    /// the `(seed, g)` stream from `base` (no forward passes) and resume
+    /// from the bit-identical parameters, slots, thresholds and epoch the
+    /// live run held when it stopped. `base` must be the vector the run
+    /// started from — the header's `init_fnv` makes a mismatch a hard
+    /// error, not silently wrong training.
+    pub fn resume_slices(&self, model: &ModelInfo, base: &[f32]) -> Result<SliceState> {
+        self.slice_rule(model)?;
+        let Some(path) = &self.journal_path else {
+            bail!("resume_slices needs the journal path the run was recording to");
+        };
+        let (header, records) = protocol::load_journal(path)?;
+        let outcome = protocol::replay_full(self.rt, model, &self.cfg, &header, base, &records)?;
+        Ok(SliceState {
+            step: outcome.steps,
+            mask_epoch: outcome.mask_epoch,
+            params: outcome.params,
+            slots: outcome.slots,
+            thresholds: outcome.thresholds,
+        })
+    }
+
+    /// Advance a slice-run by at most `max_steps` optimizer steps,
+    /// appending each step's record to the journal and flushing at the
+    /// slice boundary. The arithmetic mirrors [`run_on`] expression for
+    /// expression (shared noise from the step seed, mask from the
+    /// unperturbed params, per-row f64 loss fold in canonical order, the
+    /// fused masked update), so a run chopped into arbitrary slices —
+    /// including across `--mask-refresh` epoch boundaries — lands on the
+    /// **bit-identical** final parameters of an uninterrupted run
+    /// (`tests/jobs.rs` locks this).
+    ///
+    /// `stop` is polled at every step boundary: when it returns true the
+    /// slice ends early with a consistent state/journal pair (the
+    /// cooperative mid-slice cancel the job orchestrator uses) — never
+    /// mid-step, so the journal always describes exactly the updates
+    /// that were applied.
+    ///
+    /// [`run_on`]: DpTrainer::run_on
+    pub fn run_slice(
+        &self,
+        model: &ModelInfo,
+        dataset: &Dataset,
+        state: &mut SliceState,
+        max_steps: usize,
+        stop: Option<&dyn Fn() -> bool>,
+    ) -> Result<SliceReport> {
+        let rule = self.slice_rule(model)?;
+        let cfg = &self.cfg;
+        if state.params.len() != model.n_params {
+            bail!(
+                "run_slice: state has {} params, model expects {}",
+                state.params.len(),
+                model.n_params
+            );
+        }
+        let end = cfg.steps.min(state.step + max_steps);
+        if state.step >= end {
+            return Ok(SliceReport {
+                steps_run: 0,
+                done: state.step >= cfg.steps,
+                diverged: false,
+                last_loss: f32::NAN,
+            });
+        }
+        let Some(path) = &self.journal_path else {
+            bail!("run_slice needs the journal path the run records to");
+        };
+        let backend = self.rt.backend();
+        let n = cfg.workers.max(1);
+        let p = model.n_params;
+        let rows_per = model.batch / n;
+        let shard_tok = rows_per * model.seq_len;
+        let eps = cfg.hypers.eps;
+        let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, cfg.seed)?;
+        loader.skip(state.step);
+        let mut journal = JournalWriter::append(path)?;
+        let mut steps_run = 0usize;
+        let mut diverged = false;
+        let mut last_loss = f32::NAN;
+
+        for t in state.step..end {
+            if stop.map(|s| s()).unwrap_or(false) {
+                break;
+            }
+            let batch = loader.next_batch();
+            let seed = (cfg.seed as u32, t as u32);
+
+            if self.mask_refresh > 0 && t > 0 && t % self.mask_refresh == 0 {
+                state.thresholds =
+                    backend.thresholds(model, &state.params, cfg.hypers.sparsity)?;
+                state.mask_epoch += 1;
+            }
+
+            // shared step noise, sharded across the pool exactly like the
+            // live trainer (chunk-invariant by the counter-PRNG contract)
+            let chunks = self.pool.parallelism().min(p).max(1);
+            let chunk_len = (p + chunks - 1) / chunks;
+            let parts = self.pool.scatter(chunks, |c| {
+                let lo = (c * chunk_len).min(p);
+                let hi = ((c + 1) * chunk_len).min(p);
+                if lo >= hi {
+                    Ok(Vec::new())
+                } else {
+                    backend.zo_noise(model, seed, lo, hi)
+                }
+            });
+            let mut z = Vec::with_capacity(p);
+            for part in parts {
+                z.extend(part?);
+            }
+
+            let mask = backend.zo_mask(
+                model,
+                &cfg.optimizer,
+                &cfg.hypers,
+                &state.thresholds,
+                &state.params,
+            )?;
+
+            // phase A on the one representative replica: every live
+            // replica holds these exact bits, so perturbing once and
+            // sharding the row losses over the batch reproduces the
+            // N-replica pass bit-for-bit
+            perturb_in_place(&mut state.params, &z, mask.as_deref(), eps);
+            let params_plus: &[f32] = &state.params;
+            let shard_plus = self.pool.scatter(n, |j| -> Result<Vec<f64>> {
+                let tokens = &batch.tokens[j * shard_tok..(j + 1) * shard_tok];
+                let labels = &batch.labels[j * rows_per..(j + 1) * rows_per];
+                backend.row_losses(model, params_plus, tokens, labels)
+            });
+            perturb_in_place(&mut state.params, &z, mask.as_deref(), -2.0 * eps);
+            let params_minus: &[f32] = &state.params;
+            let shard_minus = self.pool.scatter(n, |j| -> Result<Vec<f64>> {
+                let tokens = &batch.tokens[j * shard_tok..(j + 1) * shard_tok];
+                let labels = &batch.labels[j * rows_per..(j + 1) * rows_per];
+                backend.row_losses(model, params_minus, tokens, labels)
+            });
+
+            // all-reduce: canonical row-order f64 fold, then the same f32
+            // casts the live step performs
+            let mut sum_plus = 0.0f64;
+            let mut sum_minus = 0.0f64;
+            let mut rows = 0usize;
+            for shard in shard_plus {
+                let rp = shard?;
+                for &v in &rp {
+                    sum_plus += v;
+                }
+                rows += rp.len();
+            }
+            for shard in shard_minus {
+                for &v in &shard? {
+                    sum_minus += v;
+                }
+            }
+            let l_plus = (sum_plus / rows.max(1) as f64) as f32;
+            let l_minus = (sum_minus / rows.max(1) as f64) as f32;
+            let g = (l_plus - l_minus) / (2.0 * eps);
+            let train_loss = 0.5 * (l_plus + l_minus);
+
+            if !g.is_finite() {
+                // undo the net -eps offset so the state isn't silently
+                // left at a perturbed point (exactness is moot — the g
+                // is poison and the job fails — but a roughly-restored
+                // state makes post-mortems readable). The step is NOT
+                // journaled and callers must not checkpoint this state:
+                // the journal stays the authoritative resume source.
+                perturb_in_place(&mut state.params, &z, mask.as_deref(), eps);
+                crate::info!("[{}] job DIVERGED at step {t} (non-finite g)", cfg.label());
+                diverged = true;
+                break;
+            }
+            journal.record(&StepRecord {
+                step: t as u32,
+                seed,
+                scalar: g,
+                mask_epoch: state.mask_epoch,
+            })?;
+
+            // phase B: the identical fused masked update
+            apply_update(
+                &mut state.params,
+                &mut state.slots,
+                &z,
+                mask.as_deref(),
+                &cfg.hypers,
+                g,
+                rule,
+            );
+            state.step = t + 1;
+            steps_run += 1;
+            last_loss = train_loss;
+
+            if !train_loss.is_finite() || train_loss > DIVERGENCE_LOSS {
+                crate::info!("[{}] job DIVERGED at step {t} (loss {train_loss})", cfg.label());
+                diverged = true;
+                break;
+            }
+        }
+        journal.flush()?;
+        Ok(SliceReport {
+            steps_run,
+            done: diverged || state.step >= cfg.steps,
+            diverged,
+            last_loss,
         })
     }
 }

@@ -31,5 +31,5 @@ pub mod eval;
 pub mod pool;
 pub mod protocol;
 
-pub use dp::DpTrainer;
+pub use dp::{DpTrainer, SliceReport, SliceState};
 pub use pool::WorkerPool;

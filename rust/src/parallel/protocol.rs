@@ -13,13 +13,13 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::runtime::{ModelInfo, Runtime};
 use crate::util::bitset;
 use crate::util::json::Json;
-use crate::util::log::{read_jsonl, JsonlWriter};
+use crate::util::log::JsonlWriter;
 
 use super::dp::{apply_update, dp_rule, dp_slot_len, perturb_in_place};
 
@@ -89,6 +89,44 @@ impl JournalWriter {
         self.w.write(&rec.to_json())
     }
 
+    /// Reopen an existing journal for appending — the job orchestrator's
+    /// slice-resume path. Only the header line is validated (O(1) in
+    /// the journal's length — a full parse per slice would make
+    /// orchestration cost quadratic in job length); appending to a
+    /// non-journal file is still an error rather than silent corruption.
+    ///
+    /// A torn trailing record (crash mid-flush; records contain no raw
+    /// newlines, so a tear is exactly "the file does not end in `\n`")
+    /// is truncated away first. [`load_journal`] merely *tolerates* the
+    /// tear on read; appending after the fragment would fuse it with
+    /// the next record into one garbled mid-file line that no later
+    /// read could recover from.
+    pub fn append(path: &Path) -> Result<JournalWriter> {
+        use std::io::{Read, Seek, SeekFrom};
+        read_header(path)?;
+        let mut f = std::fs::OpenOptions::new().read(true).write(true).open(path)?;
+        let len = f.seek(SeekFrom::End(0))?;
+        if len > 0 {
+            f.seek(SeekFrom::End(-1))?;
+            let mut last = [0u8; 1];
+            f.read_exact(&mut last)?;
+            if last[0] != b'\n' {
+                let mut bytes = Vec::with_capacity(len as usize);
+                f.seek(SeekFrom::Start(0))?;
+                f.read_to_end(&mut bytes)?;
+                let cut = bytes.iter().rposition(|&b| b == b'\n').map(|p| p + 1).unwrap_or(0);
+                f.set_len(cut as u64)?;
+                crate::info!(
+                    "journal {}: truncated a torn trailing record before appending \
+                     (the step it described was never durable and will be re-run)",
+                    path.display()
+                );
+            }
+        }
+        drop(f);
+        Ok(JournalWriter { w: JsonlWriter::append(path)? })
+    }
+
     /// Flush buffered records to disk (called at eval boundaries and at
     /// the end of the run so a crash loses at most one eval interval).
     pub fn flush(&mut self) -> Result<()> {
@@ -96,12 +134,20 @@ impl JournalWriter {
     }
 }
 
-/// Read a journal back: `(header, records)`.
-pub fn load_journal(path: &Path) -> Result<(Json, Vec<StepRecord>)> {
-    let lines = read_jsonl(path)?;
-    let Some((header, rest)) = lines.split_first() else {
+/// Read and validate only a journal's header line — O(1) in the
+/// journal's length, for per-slice checks that must not re-parse a
+/// journal that grows with its job.
+pub fn read_header(path: &Path) -> Result<Json> {
+    use std::io::BufRead;
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening journal {}", path.display()))?;
+    let mut first = String::new();
+    std::io::BufReader::new(file).read_line(&mut first)?;
+    if first.trim().is_empty() {
         bail!("journal {} is empty", path.display());
-    };
+    }
+    let header = crate::util::json::parse(first.trim())
+        .with_context(|| format!("journal {} header line", path.display()))?;
     let kind_ok = header
         .get("kind")
         .map(|k| k.as_str().ok() == Some(JOURNAL_KIND))
@@ -109,8 +155,62 @@ pub fn load_journal(path: &Path) -> Result<(Json, Vec<StepRecord>)> {
     if !kind_ok {
         bail!("journal {} has no '{JOURNAL_KIND}' header line", path.display());
     }
-    let records = rest.iter().map(StepRecord::from_json).collect::<Result<Vec<_>>>()?;
-    Ok((header.clone(), records))
+    Ok(header)
+}
+
+/// Count a journal's step records without parsing them (non-empty line
+/// count minus the header) — the slice scheduler's cheap
+/// checkpoint-vs-journal consistency check.
+pub fn journal_record_count(path: &Path) -> Result<usize> {
+    read_header(path)?;
+    let text = std::fs::read_to_string(path)?;
+    Ok(text.lines().filter(|l| !l.trim().is_empty()).count().saturating_sub(1))
+}
+
+/// Read a journal back: `(header, records)`.
+///
+/// Crash tolerance: a journal's **final** line may be torn (a crash
+/// mid-flush cut it short). The step it would describe was never
+/// durable, and the live state that had applied it died with the
+/// process — so the torn line is dropped and resume re-runs that step
+/// deterministically, re-appending the identical record. A malformed
+/// line anywhere *else* is real corruption and stays a hard error.
+pub fn load_journal(path: &Path) -> Result<(Json, Vec<StepRecord>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading journal {}", path.display()))?;
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let Some((&first, rest)) = lines.split_first() else {
+        bail!("journal {} is empty", path.display());
+    };
+    let header = crate::util::json::parse(first)
+        .with_context(|| format!("journal {} header line", path.display()))?;
+    let kind_ok = header
+        .get("kind")
+        .map(|k| k.as_str().ok() == Some(JOURNAL_KIND))
+        .unwrap_or(false);
+    if !kind_ok {
+        bail!("journal {} has no '{JOURNAL_KIND}' header line", path.display());
+    }
+    let mut records = Vec::with_capacity(rest.len());
+    for (i, line) in rest.iter().enumerate() {
+        match crate::util::json::parse(line).and_then(|j| StepRecord::from_json(&j)) {
+            Ok(rec) => records.push(rec),
+            Err(_) if i + 1 == rest.len() => {
+                crate::info!(
+                    "journal {}: dropping torn trailing record (crash mid-flush); \
+                     the step will be re-run on resume",
+                    path.display()
+                );
+                break;
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("journal {} record line {}", path.display(), i + 1)
+                })
+            }
+        }
+    }
+    Ok((header, records))
 }
 
 /// Verify a journal `header` was written by a run compatible with
@@ -231,6 +331,12 @@ pub struct ReplayOutcome {
     pub mask_union: Vec<u64>,
     /// steps replayed
     pub steps: usize,
+    /// §8.2 thresholds in effect after the last replayed step — together
+    /// with `params`/`slots`/`mask_epoch` this is the complete resumable
+    /// state a paused job needs to continue bit-identically
+    pub thresholds: Vec<f32>,
+    /// threshold generation after the last replayed step
+    pub mask_epoch: u32,
 }
 
 /// Re-walk a journal from `init` parameters: regenerate each step's mask
@@ -303,7 +409,14 @@ pub fn replay_full(
         perturb_in_place(&mut params, &z, mask.as_deref(), -2.0 * eps);
         apply_update(&mut params, &mut slots, &z, mask.as_deref(), &cfg.hypers, rec.scalar, rule);
     }
-    Ok(ReplayOutcome { params, slots, mask_union: union, steps: records.len() })
+    Ok(ReplayOutcome {
+        params,
+        slots,
+        mask_union: union,
+        steps: records.len(),
+        thresholds,
+        mask_epoch,
+    })
 }
 
 /// [`replay_full`] reduced to the final parameters (the original crash

@@ -26,6 +26,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::ServeConfig;
 use crate::data::batcher::pad_prompt;
+use crate::jobs::JobQueue;
 use crate::parallel::WorkerPool;
 use crate::runtime::{ModelInfo, Runtime};
 
@@ -199,11 +200,7 @@ impl MicroBatcher {
             // the single dispatcher and wedge every future request
             let result = catch_unwind(AssertUnwindSafe(|| exec(&adapter, &rows)))
                 .unwrap_or_else(|payload| {
-                    let msg = payload
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| payload.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "opaque panic payload".into());
+                    let msg = crate::util::panic_message(&*payload);
                     Err(anyhow!("classify panicked: {msg}"))
                 });
             match result {
@@ -226,6 +223,15 @@ impl MicroBatcher {
     }
 }
 
+/// Jobs wiring attached to a serving engine: the queue the HTTP layer
+/// serves (`/v1/jobs`) and the background scheduler drains.
+pub struct JobsHandle {
+    /// the persistent fine-tuning job queue
+    pub queue: Arc<JobQueue>,
+    /// default optimizer steps per scheduler slice (0 = scheduler default)
+    pub slice_steps: usize,
+}
+
 /// The serving engine: runtime + registry + pool + batcher, the shared
 /// state every connection handler and the dispatcher borrow.
 pub struct ServeEngine {
@@ -237,6 +243,8 @@ pub struct ServeEngine {
     pub pool: WorkerPool,
     /// the request queue the HTTP layer submits into
     pub batcher: MicroBatcher,
+    /// job orchestration, when enabled (`--jobs-dir`)
+    jobs: Option<JobsHandle>,
 }
 
 impl ServeEngine {
@@ -252,7 +260,22 @@ impl ServeEngine {
             registry,
             pool: WorkerPool::new(cfg.workers),
             batcher: MicroBatcher::new(cfg.max_batch_rows, cfg.flush_ms),
+            jobs: None,
         })
+    }
+
+    /// Attach a job queue: the HTTP layer exposes `/v1/jobs` and
+    /// [`http::serve`](super::http::serve) runs a background
+    /// [`Scheduler`](crate::jobs::Scheduler) draining it over this
+    /// engine's pool. Call before wrapping the engine in an [`Arc`].
+    pub fn with_jobs(mut self, queue: Arc<JobQueue>, slice_steps: usize) -> ServeEngine {
+        self.jobs = Some(JobsHandle { queue, slice_steps });
+        self
+    }
+
+    /// The jobs wiring, when enabled.
+    pub fn jobs(&self) -> Option<&JobsHandle> {
+        self.jobs.as_ref()
     }
 
     /// The served model's ABI description.

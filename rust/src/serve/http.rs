@@ -1,48 +1,111 @@
 //! Minimal std-only HTTP/1.1 loopback server + client.
 //!
 //! No HTTP crate exists in the vendored dependency set, so this module
-//! hand-rolls exactly the subset the serving API needs: one request per
-//! connection (`Connection: close`), `Content-Length` bodies, JSON in
-//! and out. Endpoints:
+//! hand-rolls exactly the subset the serving API needs: HTTP/1.1
+//! keep-alive connections (one request at a time per connection,
+//! `Content-Length` bodies, JSON in and out), with a bounded concurrent
+//! connection pool. Endpoints:
 //!
-//! | method + path        | action |
-//! |----------------------|--------|
-//! | `GET  /healthz`      | liveness + registry/queue gauges |
-//! | `GET  /v1/adapters`  | list registered adapters (nnz, bytes, hits) |
-//! | `POST /v1/adapters`  | register: `{"name", "journal": path}` replays a step journal against the base and extracts the delta under its mask-union certificate; `{"name", "delta": path}` loads a saved `.adapter` file |
-//! | `POST /v1/classify`  | `{"adapter", "prompts": [[tok,...],...]}` → per-row logits + candidate-free argmax, micro-batched with concurrent same-adapter requests |
+//! | method + path                | action |
+//! |------------------------------|--------|
+//! | `GET  /healthz`              | liveness + registry/queue/jobs gauges |
+//! | `GET  /v1/adapters`          | list registered adapters (nnz, bytes, hits, pins) |
+//! | `POST /v1/adapters`          | register: `{"name", "journal": path}` replays a step journal against the base and extracts the delta under its mask-union certificate; `{"name", "delta": path}` loads a saved `.adapter` file |
+//! | `POST /v1/classify`          | `{"adapter", "prompts": [[tok,...],...]}` → per-row logits + candidate-free argmax, micro-batched with concurrent same-adapter requests; the adapter is pinned against eviction while the request is in flight |
+//! | `POST /v1/jobs`              | submit a fine-tuning job ([`JobSpec`](crate::jobs::JobSpec) JSON) |
+//! | `GET  /v1/jobs`              | list jobs (id, state, progress) |
+//! | `GET  /v1/jobs/{id}`         | one job's full state |
+//! | `POST /v1/jobs/{id}/cancel`  | request cancellation (honored at the next step boundary) |
+//! | `POST /v1/jobs/{id}/resume`  | re-queue a cancelled/failed job (continues bit-identically from its journal) |
+//!
+//! The `/v1/jobs` family answers 400 with an explanatory error when the
+//! server was started without a jobs directory.
 //!
 //! Logits cross the wire losslessly: `f32 → f64` is exact, the JSON
 //! writer emits shortest round-trip decimal for f64, and the client
 //! parses it back to the identical bits — so a served classification is
 //! bit-comparable to offline evaluation (asserted in `tests/serve.rs`).
 //!
-//! Threading: one accept thread, one detached thread per connection
-//! (loopback traffic, bounded by the OS backlog), one dispatcher thread
-//! draining the [`MicroBatcher`](super::batching::MicroBatcher).
+//! Threading: one accept thread admitting at most [`MAX_CONNECTIONS`]
+//! concurrent connection threads (excess accepts wait for a slot — the
+//! bounded pool), one dispatcher thread draining the
+//! [`MicroBatcher`](super::batching::MicroBatcher), and — when jobs are
+//! enabled — one background [`Scheduler`](crate::jobs::Scheduler)
+//! thread slicing fine-tuning jobs over the same worker pool.
+//! Connections are persistent (`Connection: keep-alive` is the HTTP/1.1
+//! default), so job polling and classify traffic reuse one TCP
+//! connection via [`LoopbackClient`] instead of paying a
+//! connect/teardown per request; [`loopback_request`] remains the
+//! one-shot (`Connection: close`) convenience.
 //! [`RunningServer::shutdown`] flips the stop flag, drains the batcher,
-//! pokes the listener with a loopback connect, and joins.
+//! pokes the listener with a loopback connect, and joins all three.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::jobs::{JobQueue, JobSpec, Scheduler};
 use crate::util::json::{self, Json};
 
 use super::batching::ServeEngine;
 use super::delta::SparseDelta;
+
+/// Cap on concurrently-served connections. Accepts beyond the cap wait
+/// for a slot instead of spawning unboundedly — the bounded pool that
+/// keeps a polling storm from exhausting threads.
+pub const MAX_CONNECTIONS: usize = 64;
 
 /// A parsed inbound request.
 struct Request {
     method: String,
     path: String,
     body: String,
+    /// connection persists after this request (HTTP/1.1 default)
+    keep_alive: bool,
+}
+
+/// Counting semaphore for live connections (std has no Semaphore).
+struct ConnSlots {
+    count: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl ConnSlots {
+    fn new() -> Arc<ConnSlots> {
+        Arc::new(ConnSlots { count: Mutex::new(0), freed: Condvar::new() })
+    }
+
+    /// Block until a slot is free, then take it. Returns `false`
+    /// without taking a slot when `stop` flips — a saturated pool must
+    /// never be able to hang shutdown.
+    fn acquire(&self, stop: &AtomicBool) -> bool {
+        let mut count = self.count.lock().unwrap();
+        while *count >= MAX_CONNECTIONS {
+            if stop.load(Ordering::Acquire) {
+                return false;
+            }
+            let (guard, _) =
+                self.freed.wait_timeout(count, Duration::from_millis(100)).unwrap();
+            count = guard;
+        }
+        if stop.load(Ordering::Acquire) {
+            return false;
+        }
+        *count += 1;
+        true
+    }
+
+    fn release(&self) {
+        let mut count = self.count.lock().unwrap();
+        *count = count.saturating_sub(1);
+        self.freed.notify_one();
+    }
 }
 
 /// Handle to a live server; dropping it shuts the server down.
@@ -53,10 +116,13 @@ pub struct RunningServer {
     stop_flag: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
     dispatch: Option<JoinHandle<()>>,
+    scheduler: Option<JoinHandle<()>>,
 }
 
 impl RunningServer {
-    /// Stop accepting, drain in-flight batches, join the server threads.
+    /// Stop accepting, drain in-flight batches, join the server threads
+    /// (including the job scheduler, which stops at its next slice
+    /// boundary).
     pub fn shutdown(mut self) {
         self.stop_impl();
     }
@@ -70,10 +136,13 @@ impl RunningServer {
         if let Some(h) = self.dispatch.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
     }
 
     fn stop_impl(&mut self) {
-        if self.accept.is_none() && self.dispatch.is_none() {
+        if self.accept.is_none() && self.dispatch.is_none() && self.scheduler.is_none() {
             return;
         }
         self.stop_flag.store(true, Ordering::Release);
@@ -86,6 +155,9 @@ impl RunningServer {
         if let Some(h) = self.dispatch.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -96,11 +168,14 @@ impl Drop for RunningServer {
 }
 
 /// Bind `127.0.0.1:port` (0 = ephemeral) and start serving `engine`.
+/// When the engine carries a jobs handle, a background scheduler thread
+/// is started alongside the accept/dispatch pair.
 pub fn serve(engine: Arc<ServeEngine>, port: u16) -> Result<RunningServer> {
     let listener =
         TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding port {port}"))?;
     let addr = listener.local_addr()?;
     let stop_flag = Arc::new(AtomicBool::new(false));
+    let slots = ConnSlots::new();
 
     let dispatch = {
         let engine = Arc::clone(&engine);
@@ -108,20 +183,54 @@ pub fn serve(engine: Arc<ServeEngine>, port: u16) -> Result<RunningServer> {
             .name("smz-serve-batch".into())
             .spawn(move || engine.batcher.run(|adapter, rows| engine.classify(adapter, rows)))?
     };
+    let scheduler = match engine.jobs() {
+        Some(handle) => {
+            let sched = Scheduler::new(
+                Arc::clone(&engine),
+                Arc::clone(&handle.queue),
+                handle.slice_steps,
+            );
+            // a restarted server re-registers the durable adapter
+            // artifacts of already-published jobs before taking traffic
+            let restored = sched.reload_published();
+            if restored > 0 {
+                crate::info!("[jobs] restored {restored} published adapter(s) from artifacts");
+            }
+            let stop = Arc::clone(&stop_flag);
+            Some(
+                thread::Builder::new()
+                    .name("smz-serve-jobs".into())
+                    .spawn(move || sched.run_loop(&stop))?,
+            )
+        }
+        None => None,
+    };
     let accept = {
         let engine = Arc::clone(&engine);
         let stop_flag = Arc::clone(&stop_flag);
+        let slots = Arc::clone(&slots);
         thread::Builder::new().name("smz-serve-accept".into()).spawn(move || {
             for stream in listener.incoming() {
                 if stop_flag.load(Ordering::Acquire) {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
+                // bounded pool: wait for a free slot (stop-aware)
+                if !slots.acquire(&stop_flag) {
+                    break;
+                }
                 let engine = Arc::clone(&engine);
-                // detached per-connection worker; loopback-scale only
-                let _ = thread::Builder::new()
-                    .name("smz-serve-conn".into())
-                    .spawn(move || handle_connection(&engine, stream));
+                let slots_for_conn = Arc::clone(&slots);
+                let stop_for_conn = Arc::clone(&stop_flag);
+                let spawned = thread::Builder::new().name("smz-serve-conn".into()).spawn(
+                    move || {
+                        handle_connection(&engine, stream, &stop_for_conn);
+                        slots_for_conn.release();
+                    },
+                );
+                if spawned.is_err() {
+                    slots.release();
+                }
             }
         })?
     };
@@ -131,17 +240,37 @@ pub fn serve(engine: Arc<ServeEngine>, port: u16) -> Result<RunningServer> {
         stop_flag,
         accept: Some(accept),
         dispatch: Some(dispatch),
+        scheduler,
     })
 }
 
-/// Serve one request on one connection; errors end the connection.
-fn handle_connection(engine: &ServeEngine, mut stream: TcpStream) {
+/// Serve requests on one connection until the peer closes, asks for
+/// `Connection: close`, errors, goes idle past the read timeout, or the
+/// server shuts down. A 400 is only ever written in response to bytes
+/// the peer actually sent — an idle timeout *between* requests closes
+/// silently, so a keep-alive client can never read a stale unsolicited
+/// error as the answer to its next request.
+fn handle_connection(engine: &ServeEngine, mut stream: TcpStream, stop: &AtomicBool) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let response = match read_request(&mut stream) {
-        Ok(req) => route(engine, &req),
-        Err(e) => (400, error_json(&e)),
-    };
-    let _ = write_response(&mut stream, response.0, &response.1);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let req = match read_request(&mut stream, &mut buf) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // clean close (or idle timeout) between requests
+            Err(e) => {
+                let _ = write_response(&mut stream, 400, &error_json(&e), false);
+                break;
+            }
+        };
+        let keep_alive = req.keep_alive;
+        let (status, body) = route(engine, &req);
+        if write_response(&mut stream, status, &body, keep_alive).is_err()
+            || !keep_alive
+            || stop.load(Ordering::Acquire)
+        {
+            break;
+        }
+    }
 }
 
 /// `{"error": "<context chain>"}`.
@@ -163,6 +292,15 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, Json) {
             Err(ClassifyError::UnknownAdapter(e)) => (404, error_json(&e)),
             Err(ClassifyError::Bad(e)) => (400, error_json(&e)),
         },
+        ("POST", "/v1/jobs") => match post_job(engine, &req.body) {
+            Ok(body) => (200, body),
+            Err(e) => (400, error_json(&e)),
+        },
+        ("GET", "/v1/jobs") => match list_jobs(engine) {
+            Ok(body) => (200, body),
+            Err(e) => (400, error_json(&e)),
+        },
+        (method, path) if path.starts_with("/v1/jobs/") => job_item(engine, method, path),
         _ => (
             404,
             Json::obj(vec![(
@@ -174,13 +312,21 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, Json) {
 }
 
 fn healthz(engine: &ServeEngine) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("platform", Json::Str(engine.runtime().backend().platform().to_string())),
         ("model", Json::Str(engine.model().name.clone())),
         ("adapters", Json::Num(engine.registry.len() as f64)),
         ("pending_requests", Json::Num(engine.batcher.pending() as f64)),
-    ])
+        ("max_connections", Json::Num(MAX_CONNECTIONS as f64)),
+    ];
+    if let Some(handle) = engine.jobs() {
+        fields.push(("jobs_enabled", Json::Bool(true)));
+        fields.push(("jobs_active", Json::Num(handle.queue.active() as f64)));
+    } else {
+        fields.push(("jobs_enabled", Json::Bool(false)));
+    }
+    Json::obj(fields)
 }
 
 fn list_adapters(engine: &ServeEngine) -> Json {
@@ -198,6 +344,7 @@ fn list_adapters(engine: &ServeEngine) -> Json {
                             ("bytes", Json::Num(s.bytes as f64)),
                             ("hits", Json::Num(s.hits as f64)),
                             ("in_use", Json::Bool(s.in_use)),
+                            ("pinned", Json::Num(s.pinned as f64)),
                         ])
                     })
                     .collect(),
@@ -238,6 +385,61 @@ fn post_adapter(engine: &ServeEngine, body: &str) -> Result<Json> {
     ]))
 }
 
+/// The jobs queue, or the explanatory error every `/v1/jobs` route
+/// shares when the server runs without one.
+fn jobs_queue(engine: &ServeEngine) -> Result<&Arc<JobQueue>> {
+    engine
+        .jobs()
+        .map(|h| &h.queue)
+        .ok_or_else(|| anyhow!("jobs are not enabled on this server (start with --jobs-dir)"))
+}
+
+/// `POST /v1/jobs`: submit a fine-tuning job.
+fn post_job(engine: &ServeEngine, body: &str) -> Result<Json> {
+    let queue = jobs_queue(engine)?;
+    let spec = JobSpec::from_json(&json::parse(body).context("request body")?)?;
+    let id = queue.submit(spec)?;
+    Ok(queue.get(id)?.to_json())
+}
+
+/// `GET /v1/jobs`: every job, id order.
+fn list_jobs(engine: &ServeEngine) -> Result<Json> {
+    let queue = jobs_queue(engine)?;
+    Ok(Json::obj(vec![
+        ("jobs", Json::Arr(queue.list().iter().map(|j| j.to_json()).collect())),
+        ("active", Json::Num(queue.active() as f64)),
+    ]))
+}
+
+/// `/v1/jobs/{id}` and `/v1/jobs/{id}/{cancel|resume}`.
+fn job_item(engine: &ServeEngine, method: &str, path: &str) -> (u16, Json) {
+    let queue = match jobs_queue(engine) {
+        Ok(q) => q,
+        Err(e) => return (400, error_json(&e)),
+    };
+    let rest = path.strip_prefix("/v1/jobs/").unwrap_or("");
+    let mut segments = rest.split('/');
+    let id: u64 = match segments.next().unwrap_or("").parse() {
+        Ok(id) => id,
+        Err(_) => return (404, error_json(&anyhow!("no route {method} {path}"))),
+    };
+    let action = segments.next();
+    if segments.next().is_some() {
+        return (404, error_json(&anyhow!("no route {method} {path}")));
+    }
+    let result = match (method, action) {
+        ("GET", None) => queue.get(id),
+        ("POST", Some("cancel")) => queue.cancel(id),
+        ("POST", Some("resume")) => queue.resume(id),
+        _ => return (404, error_json(&anyhow!("no route {method} {path}"))),
+    };
+    match result {
+        Ok(job) => (200, job.to_json()),
+        Err(e) if format!("{e:#}").contains("no job") => (404, error_json(&e)),
+        Err(e) => (400, error_json(&e)),
+    }
+}
+
 /// Classify failures that map to distinct HTTP statuses.
 enum ClassifyError {
     /// the named adapter is not registered (404)
@@ -252,16 +454,16 @@ impl From<anyhow::Error> for ClassifyError {
     }
 }
 
-/// Micro-batched classification: parse rows, enqueue, block on the
-/// ticket, render logits + argmax.
+/// Micro-batched classification: pin the adapter (admission = it cannot
+/// be evicted until this request answers), parse rows, enqueue, block
+/// on the ticket, render logits + argmax.
 fn post_classify(engine: &ServeEngine, body: &str) -> Result<Json, ClassifyError> {
     let doc = json::parse(body).context("request body")?;
     let adapter = doc.req("adapter")?.as_str()?.to_string();
-    if !engine.registry.contains(&adapter) {
-        return Err(ClassifyError::UnknownAdapter(anyhow!(
-            "no adapter '{adapter}' registered"
-        )));
-    }
+    let _pin = engine
+        .registry
+        .pin(&adapter)
+        .map_err(ClassifyError::UnknownAdapter)?;
     let prompts = doc.req("prompts")?.as_arr()?;
     if prompts.is_empty() {
         return Err(ClassifyError::Bad(anyhow!("'prompts' is empty")));
@@ -306,23 +508,53 @@ fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
-/// Read one request: request line, headers (only `Content-Length` is
-/// interpreted), body.
-fn read_request(stream: &mut TcpStream) -> Result<Request> {
-    let mut buf: Vec<u8> = Vec::new();
+/// Grow `buf` from `stream` until it holds a `\r\n\r\n`-terminated head;
+/// returns the head end offset, or `None` on a clean close — or a read
+/// error (idle timeout, reset) — with no buffered bytes: either way the
+/// peer sent nothing of a new message, so there is nothing to answer.
+fn read_head(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Option<usize>> {
     let mut tmp = [0u8; 4096];
-    let header_end = loop {
-        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
-            break pos;
+    loop {
+        if let Some(pos) = find_subslice(buf, b"\r\n\r\n") {
+            return Ok(Some(pos));
         }
         if buf.len() > (1 << 20) {
-            bail!("request headers too large");
+            bail!("message headers too large");
         }
-        let n = stream.read(&mut tmp)?;
+        let n = match stream.read(&mut tmp) {
+            Ok(n) => n,
+            Err(_) if buf.is_empty() => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
         if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
             bail!("connection closed mid-headers");
         }
         buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// Grow `buf` from `stream` until it holds at least `total` bytes.
+fn read_until_len(stream: &mut TcpStream, buf: &mut Vec<u8>, total: usize) -> Result<()> {
+    let mut tmp = [0u8; 4096];
+    while buf.len() < total {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    Ok(())
+}
+
+/// Read one request out of the connection buffer (refilling from the
+/// stream as needed), leaving any pipelined bytes for the next call.
+/// `Ok(None)` = the peer closed cleanly between requests.
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Option<Request>> {
+    let Some(header_end) = read_head(stream, buf)? else {
+        return Ok(None);
     };
     let head = std::str::from_utf8(&buf[..header_end]).context("non-utf8 headers")?;
     let mut lines = head.split("\r\n");
@@ -330,27 +562,33 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let mut parts = request_line.split_whitespace();
     let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
     let path = parts.next().ok_or_else(|| anyhow!("request line lacks a path"))?.to_string();
+    // HTTP/1.1 defaults to keep-alive; HTTP/1.0 to close
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
     let mut content_length = 0usize;
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().context("Content-Length")?;
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse().context("Content-Length")?;
+            } else if k.eq_ignore_ascii_case("connection") {
+                if v.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if v.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
         }
     }
     if content_length > (64 << 20) {
         bail!("request body too large ({content_length} bytes)");
     }
-    let mut body = buf[header_end + 4..].to_vec();
-    while body.len() < content_length {
-        let n = stream.read(&mut tmp)?;
-        if n == 0 {
-            bail!("connection closed mid-body");
-        }
-        body.extend_from_slice(&tmp[..n]);
-    }
-    body.truncate(content_length);
-    Ok(Request { method, path, body: String::from_utf8(body).context("non-utf8 body")? })
+    let body_start = header_end + 4;
+    read_until_len(stream, buf, body_start + content_length)?;
+    let body = String::from_utf8(buf[body_start..body_start + content_length].to_vec())
+        .context("non-utf8 body")?;
+    buf.drain(..body_start + content_length);
+    Ok(Some(Request { method, path, body, keep_alive }))
 }
 
 /// Canonical reason phrases for the statuses this server emits.
@@ -363,13 +601,15 @@ fn status_text(status: u16) -> &'static str {
     }
 }
 
-/// Write one JSON response and flush.
-fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
+/// Write one JSON response and flush. The `Connection` header echoes
+/// whether this connection stays open.
+fn write_response(stream: &mut TcpStream, status: u16, body: &Json, keep_alive: bool) -> Result<()> {
     let payload = body.to_string();
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         status_text(status),
-        payload.len()
+        payload.len(),
+        if keep_alive { "keep-alive" } else { "close" }
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(payload.as_bytes())?;
@@ -377,10 +617,74 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()
     Ok(())
 }
 
-/// The curl-free loopback client: one request, parsed JSON back.
-/// `(status, body)`; an empty response body parses as `Json::Null`.
-/// This is the client `tests/serve.rs`, the CI smoke and the README
-/// example all share.
+/// A persistent loopback client: one TCP connection, many requests
+/// (HTTP/1.1 keep-alive). This is what job submit-then-poll loops and
+/// classify traffic should use — no connect/teardown per request.
+pub struct LoopbackClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl LoopbackClient {
+    /// Connect to a running server.
+    pub fn connect(addr: SocketAddr) -> Result<LoopbackClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+        Ok(LoopbackClient { stream, buf: Vec::new() })
+    }
+
+    /// One request/response over the persistent connection:
+    /// `(status, parsed JSON body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<(u16, Json)> {
+        let payload = body.map(|b| b.to_string()).unwrap_or_default();
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: loopback\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            payload.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(payload.as_bytes())?;
+        self.stream.flush()?;
+
+        let header_end = read_head(&mut self.stream, &mut self.buf)?
+            .ok_or_else(|| anyhow!("server closed the connection before responding"))?;
+        let head = std::str::from_utf8(&self.buf[..header_end])?;
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .ok_or_else(|| anyhow!("no status in '{head}'"))?
+            .parse()
+            .context("status code")?;
+        let mut content_length = 0usize;
+        for line in head.split("\r\n").skip(1) {
+            if let Some((k, v)) = line.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().context("Content-Length")?;
+                }
+            }
+        }
+        let body_start = header_end + 4;
+        read_until_len(&mut self.stream, &mut self.buf, body_start + content_length)?;
+        let body_text =
+            std::str::from_utf8(&self.buf[body_start..body_start + content_length])?.to_string();
+        self.buf.drain(..body_start + content_length);
+        let body = if body_text.trim().is_empty() {
+            Json::Null
+        } else {
+            json::parse(&body_text).with_context(|| format!("response body of {method} {path}"))?
+        };
+        Ok((status, body))
+    }
+}
+
+/// The curl-free one-shot client: one request on a fresh connection
+/// (`Connection: close`), parsed JSON back. `(status, body)`; an empty
+/// response body parses as `Json::Null`. Prefer [`LoopbackClient`] for
+/// anything that issues more than one request.
 pub fn loopback_request(
     addr: SocketAddr,
     method: &str,

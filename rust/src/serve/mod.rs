@@ -23,8 +23,14 @@
 //!   [`WorkerPool`](crate::parallel::WorkerPool), folding per-row
 //!   logits back in request order — bit-identical to a serial pass.
 //! * [`http`] — a std-only HTTP/1.1 loopback server (`POST
-//!   /v1/classify`, `GET|POST /v1/adapters`, `GET /healthz`) plus the
-//!   curl-free loopback client, driven by the `serve` CLI subcommand.
+//!   /v1/classify`, `GET|POST /v1/adapters`, the `/v1/jobs` lifecycle,
+//!   `GET /healthz`) with keep-alive connections under a bounded
+//!   connection pool, plus the curl-free clients (persistent
+//!   [`LoopbackClient`](http::LoopbackClient) and one-shot
+//!   [`loopback_request`](http::loopback_request)), driven by the
+//!   `serve` CLI subcommand. With `--jobs-dir` it also hosts the
+//!   [`jobs`](crate::jobs) scheduler, so submitted fine-tuning jobs
+//!   train in the background and publish straight into the registry.
 //!
 //! End-to-end contract (locked by `tests/serve.rs`): train → journal →
 //! materialize adapter by replay → register → classify over HTTP, and
@@ -36,6 +42,7 @@ pub mod delta;
 pub mod http;
 pub mod registry;
 
-pub use batching::{MicroBatcher, ServeEngine};
+pub use batching::{JobsHandle, MicroBatcher, ServeEngine};
 pub use delta::SparseDelta;
+pub use http::LoopbackClient;
 pub use registry::AdapterRegistry;

@@ -13,7 +13,10 @@
 //! Eviction is LRU under two simultaneous caps: an adapter-count cap
 //! and a byte budget (each adapter accounted at
 //! [`memory::sparse_adapter_bytes`](crate::coordinator::memory::sparse_adapter_bytes)).
-//! A checked-out adapter is never evicted.
+//! A checked-out adapter is never evicted, and neither is a *pinned*
+//! one ([`AdapterRegistry::pin`]): the HTTP layer pins an adapter from
+//! request admission until its micro-batch answers, so an orchestrator
+//! insert can never evict an adapter with classify traffic in flight.
 //!
 //! Lock order: `base` **before** `entries`, always. `checkout` takes
 //! base then entries (releasing entries before returning); the guard's
@@ -38,6 +41,14 @@ struct Entry {
     hits: u64,
     last_used: u64,
     in_use: bool,
+    /// outstanding [`PinGuard`]s: requests that have been admitted (the
+    /// HTTP layer checked the adapter exists and enqueued rows) but
+    /// whose batch has not necessarily checked the adapter out yet.
+    /// A pinned adapter is never evicted, replaced or removed — without
+    /// this, an orchestrator `insert` landing between admission and
+    /// checkout could evict the adapter out from under an in-flight
+    /// classify batch.
+    pinned: u64,
 }
 
 /// Mutable registry state behind the `entries` lock.
@@ -61,6 +72,8 @@ pub struct AdapterStat {
     pub hits: u64,
     /// currently checked out
     pub in_use: bool,
+    /// outstanding in-flight pins (see [`AdapterRegistry::pin`])
+    pub pinned: u64,
 }
 
 /// The adapter registry. See the module docs for the locking contract.
@@ -134,8 +147,8 @@ impl AdapterRegistry {
         }
         let mut entries = self.entries.lock().unwrap();
         let replaced_bytes = match entries.map.get(name) {
-            Some(old) if old.in_use => {
-                bail!("adapter '{name}' is checked out; cannot replace it")
+            Some(old) if old.in_use || old.pinned > 0 => {
+                bail!("adapter '{name}' is checked out or pinned by in-flight requests; cannot replace it")
             }
             Some(old) => old.bytes,
             None => 0,
@@ -151,14 +164,16 @@ impl AdapterRegistry {
             let victim = entries
                 .map
                 .iter()
-                .filter(|(n, e)| !e.in_use && n.as_str() != name && !victims.contains(*n))
+                .filter(|(n, e)| {
+                    !e.in_use && e.pinned == 0 && n.as_str() != name && !victims.contains(*n)
+                })
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(n, _)| n.clone());
             let Some(victim) = victim else {
                 bail!(
                     "cannot register adapter '{name}': registry would hold {projected_bytes} \
-                     bytes / {projected_len} adapters with nothing evictable (all checked out); \
-                     '{name}' was NOT registered",
+                     bytes / {projected_len} adapters with nothing evictable (all checked out \
+                     or pinned by in-flight requests); '{name}' was NOT registered",
                 );
             };
             projected_len -= 1;
@@ -179,24 +194,43 @@ impl AdapterRegistry {
         let stamp = entries.clock;
         entries.map.insert(
             name.to_string(),
-            Entry { delta, bytes, hits: 0, last_used: stamp, in_use: false },
+            Entry { delta, bytes, hits: 0, last_used: stamp, in_use: false, pinned: 0 },
         );
         entries.bytes += bytes;
         Ok(victims)
     }
 
-    /// Remove `name` (error if absent or checked out).
+    /// Remove `name` (error if absent, checked out, or pinned).
     pub fn remove(&self, name: &str) -> Result<()> {
         let mut entries = self.entries.lock().unwrap();
         match entries.map.get(name) {
             None => bail!("no adapter '{name}' registered"),
-            Some(e) if e.in_use => bail!("adapter '{name}' is checked out"),
+            Some(e) if e.in_use || e.pinned > 0 => {
+                bail!("adapter '{name}' is checked out or pinned by in-flight requests")
+            }
             Some(_) => {
                 let e = entries.map.remove(name).unwrap();
                 entries.bytes -= e.bytes;
                 Ok(())
             }
         }
+    }
+
+    /// Pin `name` against eviction for the lifetime of the returned
+    /// guard. The HTTP layer pins an adapter the moment a classify
+    /// request is admitted and holds the pin until the batch answers —
+    /// closing the admission→checkout window in which a concurrent
+    /// insert (e.g. the job orchestrator auto-publishing a finished
+    /// adapter) could otherwise evict it and fail the batch spuriously.
+    /// Pins nest; eviction, replacement and removal all refuse while
+    /// any pin is outstanding.
+    pub fn pin(&self, name: &str) -> Result<PinGuard<'_>> {
+        let mut entries = self.entries.lock().unwrap();
+        let Some(entry) = entries.map.get_mut(name) else {
+            bail!("no adapter '{name}' registered");
+        };
+        entry.pinned += 1;
+        Ok(PinGuard { registry: self, name: name.to_string() })
     }
 
     /// Whether `name` is registered.
@@ -236,6 +270,7 @@ impl AdapterRegistry {
                 bytes: e.bytes,
                 hits: e.hits,
                 in_use: e.in_use,
+                pinned: e.pinned,
             })
             .collect()
     }
@@ -260,6 +295,29 @@ impl AdapterRegistry {
         entry.last_used = stamp;
         drop(entries);
         Ok(Checkout { registry: self, name: name.to_string(), params: Some(params) })
+    }
+}
+
+/// RAII pin: while alive, the named adapter cannot be evicted, replaced
+/// or removed. See [`AdapterRegistry::pin`].
+pub struct PinGuard<'a> {
+    registry: &'a AdapterRegistry,
+    name: String,
+}
+
+impl PinGuard<'_> {
+    /// The pinned adapter's name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        let mut entries = self.registry.entries.lock().unwrap();
+        if let Some(entry) = entries.map.get_mut(&self.name) {
+            entry.pinned = entry.pinned.saturating_sub(1);
+        }
     }
 }
 
@@ -410,6 +468,43 @@ mod tests {
         let evicted = reg.insert("b", delta_touching(&m, &base, &[2], 1.0)).unwrap();
         assert_eq!(evicted, vec!["a".to_string()]);
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn pinned_adapter_survives_orchestrator_inserts() {
+        // the train→serve race: a classify request was admitted for "a"
+        // (pinned) but its batch has not checked "a" out yet; a job
+        // completing concurrently publishes "b" into a full registry.
+        // The insert must refuse rather than evict the pinned adapter.
+        let m = toy_model(16);
+        let base = vec![1.0f32; 16];
+        let reg = AdapterRegistry::new(m.clone(), base.clone(), 1, 1 << 20).unwrap();
+        reg.insert("a", delta_touching(&m, &base, &[0, 1], 1.0)).unwrap();
+        let pin = reg.pin("a").unwrap();
+        assert_eq!(pin.name(), "a");
+        let err = reg.insert("b", delta_touching(&m, &base, &[2], 1.0)).unwrap_err();
+        assert!(err.to_string().contains("pinned"), "{err:#}");
+        assert!(reg.contains("a") && !reg.contains("b"));
+        // replacing or removing the pinned adapter is refused too
+        assert!(reg.insert("a", delta_touching(&m, &base, &[3], 1.0)).is_err());
+        assert!(reg.remove("a").is_err());
+        assert_eq!(reg.stats()[0].pinned, 1);
+        // the pin does NOT block checkout — that's the whole point:
+        // the in-flight batch still gets to run
+        {
+            let co = reg.checkout("a").unwrap();
+            assert_eq!(co[0], base[0] + 1.0);
+        }
+        // nested pins: both must drop before eviction is allowed
+        let pin2 = reg.pin("a").unwrap();
+        drop(pin);
+        assert!(reg.insert("b", delta_touching(&m, &base, &[2], 1.0)).is_err());
+        drop(pin2);
+        let evicted = reg.insert("b", delta_touching(&m, &base, &[2], 1.0)).unwrap();
+        assert_eq!(evicted, vec!["a".to_string()]);
+        assert_eq!(reg.stats()[0].pinned, 0);
+        // pinning a missing adapter errors
+        assert!(reg.pin("ghost").is_err());
     }
 
     #[test]

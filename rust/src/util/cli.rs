@@ -87,6 +87,18 @@ impl Args {
         Ok(self.f64_or(name, default as f64)? as f32)
     }
 
+    /// i64 option with default (the jobs `--priority` knob; negatives
+    /// deprioritize, underscores allowed).
+    pub fn i64_or(&self, name: &str, default: i64) -> Result<i64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow!("--{name}: expected integer, got '{v}' ({e})")),
+        }
+    }
+
     /// u64 option with default (underscores allowed).
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
@@ -191,6 +203,14 @@ mod tests {
         assert_eq!(a.workers_or(1).unwrap(), 4);
         assert_eq!(Args::parse(&sv(&[]), &[]).unwrap().workers_or(2).unwrap(), 2);
         assert!(Args::parse(&sv(&["--workers", "0"]), &[]).unwrap().workers_or(1).is_err());
+    }
+
+    #[test]
+    fn i64_accepts_negatives() {
+        let a = Args::parse(&sv(&["--priority", "-5"]), &[]).unwrap();
+        assert_eq!(a.i64_or("priority", 0).unwrap(), -5);
+        assert_eq!(a.i64_or("absent", 3).unwrap(), 3);
+        assert!(Args::parse(&sv(&["--priority", "x"]), &[]).unwrap().i64_or("priority", 0).is_err());
     }
 
     #[test]

@@ -92,6 +92,17 @@ impl JsonlWriter {
         Ok(JsonlWriter { out: BufWriter::new(file) })
     }
 
+    /// Open an existing JSONL file for appending (creating it, and any
+    /// parent dirs, if absent) — the slice-resume path of the job
+    /// orchestrator's step journal.
+    pub fn append(path: &Path) -> anyhow::Result<JsonlWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlWriter { out: BufWriter::new(file) })
+    }
+
     /// Append one JSON record as a line.
     pub fn write(&mut self, record: &Json) -> anyhow::Result<()> {
         writeln!(self.out, "{}", record.to_string())?;

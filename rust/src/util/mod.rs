@@ -12,3 +12,15 @@ pub mod log;
 pub mod prng;
 pub mod stats;
 pub mod toml;
+
+/// Best-effort human-readable message from a `catch_unwind` payload —
+/// the shared dance of every isolation boundary in the crate (the
+/// micro-batch dispatcher, the job scheduler): `&str` and `String`
+/// payloads pass through, anything else becomes a placeholder.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".into())
+}

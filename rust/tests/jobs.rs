@@ -1,0 +1,477 @@
+//! Integration tests for the train-to-serve job orchestrator
+//! (`rust/src/jobs/`).
+//!
+//! The contracts under test are exact, not approximate:
+//!
+//! * A job chopped into arbitrary scheduler slices — killed mid-run,
+//!   resumed from its journal (or its slice checkpoint), interrupted
+//!   mid-slice by a cooperative cancel, across `mask_refresh` threshold
+//!   epochs — lands on parameters **bit-identical** to an uninterrupted
+//!   [`DpTrainer::run_on`] of the same config (the seed-replay
+//!   property, operationalized).
+//! * End to end over HTTP: `POST /v1/jobs` → the background scheduler
+//!   trains in slices over the serving pool → the finished adapter
+//!   auto-publishes → `POST /v1/classify` returns logits bit-identical
+//!   to offline evaluation of the replayed journal's parameters.
+//! * Priorities order slices (and cancellation frees the queue for the
+//!   survivor), the queue survives a restart mid-run, and in-flight
+//!   classify traffic pins its adapter against orchestrator eviction.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use sparse_mezo::config::ServeConfig;
+use sparse_mezo::data::batcher::pad_prompt;
+use sparse_mezo::data::tasks;
+use sparse_mezo::jobs::{JobQueue, JobSpec, JobState, Scheduler};
+use sparse_mezo::parallel::{DpTrainer, WorkerPool};
+use sparse_mezo::runtime::exec::InitExec;
+use sparse_mezo::runtime::{ModelInfo, Runtime};
+use sparse_mezo::serve::http::{self, loopback_request, LoopbackClient};
+use sparse_mezo::serve::ServeEngine;
+use sparse_mezo::util::json::Json;
+
+/// One shared native runtime per test process.
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(Runtime::native)
+}
+
+fn model() -> ModelInfo {
+    rt().model("llama_tiny").unwrap().clone()
+}
+
+/// The servers' base parameters: the deterministic init for seed 11.
+fn base_params(m: &ModelInfo) -> Vec<f32> {
+    InitExec::load(rt(), m).unwrap().run(rt(), (11, 0x1717)).unwrap()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("smz_jobs_{tag}_{}", std::process::id()))
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coord {i} ({x} vs {y})");
+    }
+}
+
+/// Ground truth for a job spec: an uninterrupted DP run of the exact
+/// config the scheduler derives, from the same base.
+fn uninterrupted(spec: &JobSpec, base: &[f32]) -> Vec<f32> {
+    let m = model();
+    let cfg = spec.train_config("llama_tiny").unwrap();
+    let dataset = tasks::generate(&spec.task, cfg.seed).unwrap();
+    let pool = WorkerPool::new(cfg.workers);
+    let mut t = DpTrainer::new(rt(), &pool, cfg);
+    t.eval_test = false;
+    t.mask_refresh = spec.mask_refresh;
+    t.initial_override = Some(base.to_vec());
+    t.run_on(&m, &dataset).unwrap().params
+}
+
+/// Offline reference logits: serial ragged forward over padded prompts.
+fn offline_logits(m: &ModelInfo, params: &[f32], prompts: &[Vec<i32>]) -> Vec<f32> {
+    let mut tokens = Vec::with_capacity(prompts.len() * m.seq_len);
+    for p in prompts {
+        tokens.extend(pad_prompt(p, m.seq_len));
+    }
+    rt().backend().logits_rows(m, params, &tokens).unwrap()
+}
+
+fn logits_from_body(body: &Json) -> Vec<f32> {
+    let mut out = Vec::new();
+    for row in body.req("logits").unwrap().as_arr().unwrap() {
+        for v in row.as_arr().unwrap() {
+            out.push(v.as_f64().unwrap() as f32);
+        }
+    }
+    out
+}
+
+fn classify_body(adapter: &str, prompts: &[Vec<i32>]) -> Json {
+    Json::obj(vec![
+        ("adapter", Json::Str(adapter.into())),
+        (
+            "prompts",
+            Json::Arr(
+                prompts
+                    .iter()
+                    .map(|p| Json::Arr(p.iter().map(|&t| Json::Num(t as f64)).collect()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[test]
+fn sliced_run_bit_identical_across_kills_resumes_and_refresh_epochs() {
+    // 10 steps with threshold refreshes at t=3,6,9; slices of 4 / 2 /
+    // rest, so one resume lands mid-epoch (t=4) and one lands exactly ON
+    // a refresh boundary (t=6) — the hardest alignment. Both resumes go
+    // through the journal replay ("kill": the trainer and its state are
+    // dropped), and the final parameters must equal an uninterrupted
+    // DpTrainer::run_on bit for bit.
+    let m = model();
+    let base = base_params(&m);
+    let dir = tmp_dir("slices");
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("run.journal.jsonl");
+
+    let spec = JobSpec {
+        name: "slices".into(),
+        task: "rte".into(),
+        optimizer: "smezo".into(),
+        steps: 10,
+        workers: 2,
+        mask_refresh: 3,
+        seed: 11,
+        ..JobSpec::default()
+    };
+    let cfg = spec.train_config("llama_tiny").unwrap();
+    let dataset = tasks::generate(&spec.task, cfg.seed).unwrap();
+    let expected = uninterrupted(&spec, &base);
+
+    let pool = WorkerPool::new(2);
+    let mk_trainer = || {
+        let mut t = DpTrainer::new(rt(), &pool, cfg.clone()).with_journal(&journal);
+        t.eval_test = false;
+        t.mask_refresh = spec.mask_refresh;
+        t
+    };
+
+    // slice 1: steps 0..4 (crosses the t=3 refresh)
+    let t1 = mk_trainer();
+    let mut state = t1.begin_slices(&m, base.clone()).unwrap();
+    let r1 = t1.run_slice(&m, &dataset, &mut state, 4, None).unwrap();
+    assert_eq!((r1.steps_run, r1.done, state.step), (4, false, 4));
+    assert_eq!(state.mask_epoch, 1, "refresh at t=3 happened");
+    drop(state); // "kill" the job: nothing survives but the journal
+
+    // resume mid-epoch, run exactly up to the t=6 boundary
+    let t2 = mk_trainer();
+    let mut state = t2.resume_slices(&m, &base).unwrap();
+    assert_eq!((state.step, state.mask_epoch), (4, 1));
+    let r2 = t2.run_slice(&m, &dataset, &mut state, 2, None).unwrap();
+    assert_eq!((r2.steps_run, r2.done, state.step), (2, false, 6));
+    drop(state);
+
+    // resume exactly ON the t=6 refresh boundary; finish the run
+    let t3 = mk_trainer();
+    let mut state = t3.resume_slices(&m, &base).unwrap();
+    assert_eq!((state.step, state.mask_epoch), (6, 1), "refresh at t=6 not yet applied");
+    let r3 = t3.run_slice(&m, &dataset, &mut state, 100, None).unwrap();
+    assert_eq!((r3.steps_run, r3.done), (4, true));
+    assert_eq!(state.mask_epoch, 3, "refreshes at t=6 and t=9 applied on resume");
+    assert_bits_eq(&state.params, &expected, "sliced vs uninterrupted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mid_slice_cooperative_stop_resumes_bit_identically() {
+    // the cancel path: a stop poll that flips true after 3 steps ends
+    // the slice mid-flight at a step boundary; the journal/state pair
+    // stays consistent and a resumed run finishes bit-identically
+    let m = model();
+    let base = base_params(&m);
+    let dir = tmp_dir("stop");
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("run.journal.jsonl");
+
+    let spec = JobSpec {
+        name: "stop".into(),
+        steps: 8,
+        seed: 11,
+        ..JobSpec::default()
+    };
+    let cfg = spec.train_config("llama_tiny").unwrap();
+    let dataset = tasks::generate(&spec.task, cfg.seed).unwrap();
+    let expected = uninterrupted(&spec, &base);
+
+    let pool = WorkerPool::new(1);
+    let mut t = DpTrainer::new(rt(), &pool, cfg.clone()).with_journal(&journal);
+    t.eval_test = false;
+    let mut state = t.begin_slices(&m, base.clone()).unwrap();
+    let polls = std::cell::Cell::new(0usize);
+    let stop = || {
+        polls.set(polls.get() + 1);
+        polls.get() > 3 // allow exactly 3 steps of the requested 8
+    };
+    let r = t.run_slice(&m, &dataset, &mut state, 8, Some(&stop)).unwrap();
+    assert_eq!((r.steps_run, r.done, state.step), (3, false, 3), "stopped mid-slice");
+    drop(state);
+
+    let t2 = DpTrainer::new(rt(), &pool, cfg).with_journal(&journal);
+    let mut state = t2.resume_slices(&m, &base).unwrap();
+    assert_eq!(state.step, 3);
+    let r = t2.run_slice(&m, &dataset, &mut state, 100, None).unwrap();
+    assert!(r.done);
+    assert_bits_eq(&state.params, &expected, "cancel mid-slice then resume");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scheduler_runs_priorities_restarts_and_publishes_exactly() {
+    // two jobs at different priorities multiplex over one engine; the
+    // orchestrator is "restarted" (queue + engine rebuilt) mid-run; on
+    // completion each adapter serves logits bit-identical to offline
+    // eval of its uninterrupted ground truth
+    let m = model();
+    let base = base_params(&m);
+    let dir = tmp_dir("sched");
+
+    let hi = JobSpec {
+        name: "hi".into(),
+        task: "rte".into(),
+        steps: 6,
+        priority: 5,
+        slice_steps: 2,
+        seed: 11,
+        ..JobSpec::default()
+    };
+    let lo = JobSpec {
+        name: "lo".into(),
+        task: "boolq".into(),
+        steps: 4,
+        priority: 0,
+        slice_steps: 2,
+        mask_refresh: 2, // a refresh boundary inside a restarted job
+        seed: 11,
+        ..JobSpec::default()
+    };
+    let expected_hi = uninterrupted(&hi, &base);
+    let expected_lo = uninterrupted(&lo, &base);
+
+    let scfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let (hi_id, lo_id) = {
+        let queue = Arc::new(JobQueue::open(&dir).unwrap());
+        let engine = Arc::new(
+            ServeEngine::new(Runtime::native(), &scfg, base.clone())
+                .unwrap()
+                .with_jobs(Arc::clone(&queue), 2),
+        );
+        let scheduler = Scheduler::new(engine, Arc::clone(&queue), 2);
+        let hi_id = queue.submit(hi.clone()).unwrap();
+        let lo_id = queue.submit(lo.clone()).unwrap();
+        // three slices: priority means they all go to "hi" (6 steps)
+        for _ in 0..3 {
+            assert!(scheduler.run_one_slice());
+        }
+        let jhi = queue.get(hi_id).unwrap();
+        let jlo = queue.get(lo_id).unwrap();
+        assert_eq!(jhi.state, JobState::Completed, "{jhi:?}");
+        assert!(jhi.published);
+        assert_eq!((jlo.state, jlo.steps_done), (JobState::Queued, 0), "{jlo:?}");
+        // run ONE slice of "lo", then "restart" the orchestrator
+        assert!(scheduler.run_one_slice());
+        assert_eq!(queue.get(lo_id).unwrap().steps_done, 2);
+        (hi_id, lo_id)
+    };
+
+    // restart: fresh queue handle, fresh engine, fresh scheduler
+    let queue = Arc::new(JobQueue::open(&dir).unwrap());
+    assert_eq!(queue.get(hi_id).unwrap().state, JobState::Completed);
+    assert_eq!(queue.get(lo_id).unwrap().state, JobState::Queued);
+    let engine = Arc::new(
+        ServeEngine::new(Runtime::native(), &scfg, base.clone())
+            .unwrap()
+            .with_jobs(Arc::clone(&queue), 2),
+    );
+    let scheduler = Scheduler::new(Arc::clone(&engine), Arc::clone(&queue), 2);
+    let slices = scheduler.run_until_idle();
+    assert!(slices >= 1, "the restarted job needed at least one slice");
+    let jlo = queue.get(lo_id).unwrap();
+    assert_eq!(jlo.state, JobState::Completed, "{jlo:?}");
+    assert_eq!(jlo.steps_done, 4);
+
+    // the published adapter (this engine only saw the post-restart
+    // slice) serves the bit-exact uninterrupted parameters
+    let prompts: Vec<Vec<i32>> = tasks::generate_sized("boolq", 11, 8, 4, 4)
+        .unwrap()
+        .dev
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let flat: Vec<f32> =
+        engine.classify("lo", &prompts).unwrap().into_iter().flatten().collect();
+    assert_bits_eq(&flat, &offline_logits(&m, &expected_lo, &prompts), "lo after restart");
+
+    // "hi" completed before the restart; reload_published (what
+    // http::serve runs at startup) restores it from its saved .adapter
+    // artifact — "lo" is already resident, so exactly one restore
+    let apath = queue.adapter_path("hi");
+    assert!(apath.exists(), "published artifact missing: {apath:?}");
+    assert_eq!(scheduler.reload_published(), 1);
+    assert!(engine.registry.contains("hi"));
+    let prompts_hi: Vec<Vec<i32>> = tasks::generate_sized("rte", 11, 8, 4, 4)
+        .unwrap()
+        .dev
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let flat: Vec<f32> =
+        engine.classify("hi", &prompts_hi).unwrap().into_iter().flatten().collect();
+    assert_bits_eq(&flat, &offline_logits(&m, &expected_hi, &prompts_hi), "hi from artifact");
+
+    // the restart above resumed "lo" through the slice-checkpoint fast
+    // path (ckpt.step matched the journal); the artifact must exist
+    assert!(queue.checkpoint_path(lo_id).exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn http_end_to_end_submit_poll_classify_and_cancel() {
+    // the acceptance path, entirely over the wire on ONE keep-alive
+    // connection: submit two jobs at different priorities, cancel the
+    // low one, poll the high one to completion, classify against its
+    // auto-published adapter, and compare bits with the offline replay
+    let m = model();
+    let base = base_params(&m);
+    let dir = tmp_dir("http");
+
+    let queue = Arc::new(JobQueue::open(&dir).unwrap());
+    let scfg = ServeConfig { workers: 2, flush_ms: 1, ..ServeConfig::default() };
+    let engine = Arc::new(
+        ServeEngine::new(Runtime::native(), &scfg, base.clone())
+            .unwrap()
+            .with_jobs(Arc::clone(&queue), 3),
+    );
+    let running = http::serve(engine, 0).unwrap();
+    let addr = running.addr;
+    let mut client = LoopbackClient::connect(addr).unwrap();
+
+    // health reports jobs enabled
+    let (code, body) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    assert_eq!(body.req("jobs_enabled").unwrap(), &Json::Bool(true));
+
+    // submit: winner (high priority) + victim (low priority, cancelled)
+    let winner = JobSpec {
+        name: "winner".into(),
+        task: "rte".into(),
+        steps: 6,
+        priority: 9,
+        slice_steps: 3,
+        seed: 11,
+        ..JobSpec::default()
+    };
+    let (code, body) = client.request("POST", "/v1/jobs", Some(&winner.to_json())).unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    let winner_id = body.req("id").unwrap().as_usize().unwrap();
+    let victim = JobSpec {
+        name: "victim".into(),
+        task: "boolq".into(),
+        steps: 200,
+        priority: -1,
+        seed: 11,
+        ..JobSpec::default()
+    };
+    let (code, body) = client.request("POST", "/v1/jobs", Some(&victim.to_json())).unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    let victim_id = body.req("id").unwrap().as_usize().unwrap();
+
+    // cancel the victim over the wire
+    let (code, body) = client
+        .request("POST", &format!("/v1/jobs/{victim_id}/cancel"), None)
+        .unwrap();
+    assert_eq!(code, 200, "{body:?}");
+
+    // a malformed submit is a 400, an unknown id a 404 — on the same
+    // connection (keep-alive survives error responses)
+    let bad = Json::obj(vec![("name", Json::Str("bad".into())), ("steps", Json::Num(0.0))]);
+    let (code, _) = client.request("POST", "/v1/jobs", Some(&bad)).unwrap();
+    assert_eq!(code, 400);
+    let (code, _) = client.request("GET", "/v1/jobs/99999", None).unwrap();
+    assert_eq!(code, 404);
+
+    // poll the winner to completion (background scheduler thread)
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    loop {
+        let (code, body) =
+            client.request("GET", &format!("/v1/jobs/{winner_id}"), None).unwrap();
+        assert_eq!(code, 200, "{body:?}");
+        match body.req("state").unwrap().as_str().unwrap() {
+            "completed" => {
+                assert_eq!(body.req("published").unwrap(), &Json::Bool(true));
+                assert_eq!(body.req("steps_done").unwrap().as_usize().unwrap(), 6);
+                break;
+            }
+            "failed" => panic!("winner failed: {body:?}"),
+            _ => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+        assert!(std::time::Instant::now() < deadline, "winner never completed");
+    }
+
+    // the victim lands in `cancelled` (if its slice was mid-flight when
+    // the cancel arrived, the cooperative stop ends it at the next step
+    // boundary — poll briefly) and stays unpublished
+    loop {
+        let (code, body) = client.request("GET", "/v1/jobs", None).unwrap();
+        assert_eq!(code, 200);
+        let jobs = body.req("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        let victim_row = jobs
+            .iter()
+            .find(|j| j.req("id").unwrap().as_usize().unwrap() == victim_id)
+            .unwrap();
+        assert_eq!(victim_row.req("published").unwrap(), &Json::Bool(false));
+        if victim_row.req("state").unwrap().as_str().unwrap() == "cancelled" {
+            assert!(
+                victim_row.req("steps_done").unwrap().as_usize().unwrap() < 200,
+                "{victim_row:?}"
+            );
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "victim never cancelled: {victim_row:?}");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // classify against the auto-published adapter: bit-identical to
+    // offline eval of the uninterrupted ground truth — still the same
+    // TCP connection
+    let expected = uninterrupted(&winner, &base);
+    let prompts: Vec<Vec<i32>> = tasks::generate_sized("rte", 11, 8, 4, 4)
+        .unwrap()
+        .dev
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let (code, body) = client
+        .request("POST", "/v1/classify", Some(&classify_body("winner", &prompts)))
+        .unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    assert_bits_eq(
+        &logits_from_body(&body),
+        &offline_logits(&m, &expected, &prompts),
+        "served vs offline",
+    );
+
+    // the adapters listing includes the published artifact's stats, and
+    // a one-shot (Connection: close) client still interoperates
+    let (code, body) = loopback_request(addr, "GET", "/v1/adapters", None).unwrap();
+    assert_eq!(code, 200);
+    let rows = body.req("adapters").unwrap().as_arr().unwrap();
+    assert!(rows.iter().any(|a| a.req("name").unwrap().as_str().unwrap() == "winner"));
+
+    running.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn jobs_api_disabled_without_queue() {
+    // a server started without --jobs-dir answers 400 with a pointer,
+    // never a panic or a hang
+    let base = base_params(&model());
+    let scfg = ServeConfig { flush_ms: 1, ..ServeConfig::default() };
+    let engine = Arc::new(ServeEngine::new(Runtime::native(), &scfg, base).unwrap());
+    let running = http::serve(engine, 0).unwrap();
+    let mut client = LoopbackClient::connect(running.addr).unwrap();
+    let (code, body) = client.request("GET", "/v1/jobs", None).unwrap();
+    assert_eq!(code, 400);
+    assert!(body.req("error").unwrap().as_str().unwrap().contains("jobs-dir"), "{body:?}");
+    let (code, body) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(body.req("jobs_enabled").unwrap(), &Json::Bool(false));
+    running.shutdown();
+}
