@@ -25,6 +25,13 @@ use crate::parallel::WorkerPool;
 use crate::runtime::exec::Hypers;
 use crate::runtime::Runtime;
 
+/// Dataset seed shared by every repro table/figure. This is the single
+/// source for both execution paths: the in-process sweeps generate
+/// their datasets from it, and `--via-queue` grid cells pin it as
+/// their `data_seed` — one constant, so the two paths can never
+/// silently train on different batches.
+pub const DATASET_SEED: u64 = 1234;
+
 /// Shared experiment context: runtime, output dir, scale knobs.
 pub struct Ctx<'rt> {
     /// runtime to execute on
@@ -47,6 +54,14 @@ pub struct Ctx<'rt> {
     pub ckpt_dir: PathBuf,
     /// shared worker pool: sweep cells and sharded evals schedule here
     pub pool: WorkerPool,
+    /// route sweep-driven tables through the persistent job queue in
+    /// this directory (`repro --via-queue DIR`): each grid survives
+    /// kills and resumes from its cells' step journals, bit-identical
+    /// to the in-process sweep. `None` = run in-process.
+    pub via_queue: Option<PathBuf>,
+    /// artifact directory (used to stand up the queue-drain engine's
+    /// runtime in `--via-queue` mode)
+    pub artifacts: PathBuf,
 }
 
 impl<'rt> Ctx<'rt> {
@@ -63,6 +78,41 @@ impl<'rt> Ctx<'rt> {
             pretrain_steps: 3000,
             ckpt_dir: PathBuf::from("checkpoints"),
             pool: WorkerPool::new(WorkerPool::default_size()),
+            via_queue: None,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+
+    /// One axis grid for a repro table: in-process on the shared pool
+    /// by default, or through the persistent job queue when
+    /// `--via-queue` is set — the cells become grid-job children that
+    /// survive kills and resume from their journals, with bit-identical
+    /// per-cell results ([`sweep::sweep_via_queue`]).
+    fn sweep_cells(
+        &self,
+        cfg: &TrainConfig,
+        dataset: &Dataset,
+        axis: SweepAxis,
+        grid: &[f64],
+        init: &[f32],
+        grid_name: &str,
+    ) -> Result<Vec<sweep::SweepCell>> {
+        match &self.via_queue {
+            None => sweep::sweep(self.rt, &self.pool, cfg, dataset, axis, grid, Some(init)),
+            Some(dir) => {
+                let engine_rt = Runtime::new(&self.artifacts)?;
+                sweep::sweep_via_queue(
+                    self.rt,
+                    engine_rt,
+                    cfg,
+                    axis,
+                    grid,
+                    init,
+                    dir,
+                    grid_name,
+                    DATASET_SEED,
+                )
+            }
         }
     }
 
@@ -118,7 +168,7 @@ impl<'rt> Ctx<'rt> {
     }
 
     fn datasets(&self, names: &[&str]) -> Result<Vec<Dataset>> {
-        names.iter().map(|t| tasks::generate(t, 1234)).collect()
+        names.iter().map(|t| tasks::generate(t, DATASET_SEED)).collect()
     }
 }
 
@@ -291,21 +341,20 @@ pub fn table10(ctx: &Ctx, model: &str) -> Result<()> {
         &header_refs,
     );
     for t in task_names {
-        let ds = tasks::generate(t, 1234)?;
+        let ds = tasks::generate(t, DATASET_SEED)?;
         let (mezo_acc, _) = ctx.run_method(model, &ds, "mezo", &base, None)?;
         let mut cfg = TrainConfig::resolve(model, t, "smezo", None)?;
         cfg.steps = ctx.zo_steps;
         cfg.eval_every = ctx.eval_every;
         cfg.eval_cap = ctx.eval_cap;
         cfg.seed = ctx.seeds[0];
-        let cells_res = sweep::sweep(
-            ctx.rt,
-            &ctx.pool,
+        let cells_res = ctx.sweep_cells(
             &cfg,
             &ds,
             SweepAxis::Sparsity,
             &grid.to_vec(),
-            Some(&base),
+            &base,
+            &format!("repro-table10-{model}-{t}"),
         )?;
         let mut cells = vec![t.to_string()];
         cells.push(pct(mezo_acc));
@@ -398,7 +447,7 @@ pub fn fig13(ctx: &Ctx, model: &str, task_names: &[&str], out_name: &str) -> Res
         &["Task", "MeZO best", "S-MeZO best", "target", "MeZO steps", "S-MeZO steps", "speedup"],
     );
     for &t in task_names {
-        let ds = tasks::generate(t, 1234)?;
+        let ds = tasks::generate(t, DATASET_SEED)?;
         let (_, mezo) = ctx.run_method(model, &ds, "mezo", &base, None)?;
         let (_, smezo) = ctx.run_method(model, &ds, "smezo", &base, None)?;
         // CSV of both curves
@@ -443,7 +492,7 @@ pub fn fig13(ctx: &Ctx, model: &str, task_names: &[&str], out_name: &str) -> Res
 /// Fig 2a: LR sensitivity — MeZO vs S-MeZO over the LR grid.
 pub fn fig2a(ctx: &Ctx, model: &str, task: &str) -> Result<()> {
     let base = ctx.base(model)?;
-    let ds = tasks::generate(task, 1234)?;
+    let ds = tasks::generate(task, DATASET_SEED)?;
     let grid: Vec<f64> = presets::ZO_LR_GRID.iter().map(|&x| x as f64).collect();
     let mut rows = Vec::new();
     let mut table = Table::new(
@@ -456,8 +505,14 @@ pub fn fig2a(ctx: &Ctx, model: &str, task: &str) -> Result<()> {
         cfg.eval_every = ctx.eval_every;
         cfg.eval_cap = ctx.eval_cap;
         cfg.seed = ctx.seeds[0];
-        let cells =
-            sweep::sweep(ctx.rt, &ctx.pool, &cfg, &ds, SweepAxis::LearningRate, &grid, Some(&base))?;
+        let cells = ctx.sweep_cells(
+            &cfg,
+            &ds,
+            SweepAxis::LearningRate,
+            &grid,
+            &base,
+            &format!("repro-fig2a-{model}-{task}-{opt}"),
+        )?;
         for (i, c) in cells.iter().enumerate() {
             if rows.len() <= i {
                 rows.push(vec![c.value, f64::NAN, 0.0, f64::NAN, 0.0]);
@@ -488,7 +543,7 @@ pub fn fig2a(ctx: &Ctx, model: &str, task: &str) -> Result<()> {
 /// Fig 2b + Fig 4: half-batch generalization probes (MeZO vs SGD).
 pub fn fig2b4(ctx: &Ctx, model: &str, task: &str, steps: usize) -> Result<()> {
     let base = ctx.base(model)?;
-    let ds = tasks::generate(task, 1234)?;
+    let ds = tasks::generate(task, DATASET_SEED)?;
     let window = (steps / 6).max(1);
     let mut rows = Vec::new();
     let mut table = Table::new(
@@ -540,7 +595,7 @@ pub fn fig2b4(ctx: &Ctx, model: &str, task: &str, steps: usize) -> Result<()> {
 /// dense continuations.
 pub fn fig2c(ctx: &Ctx, model: &str, task: &str) -> Result<()> {
     let base = ctx.base(model)?;
-    let ds = tasks::generate(task, 1234)?;
+    let ds = tasks::generate(task, DATASET_SEED)?;
 
     // phase 1: MeZO at an aggressive LR to manufacture the accuracy drop
     let mut cfg = TrainConfig::resolve(model, task, "mezo", None)?;

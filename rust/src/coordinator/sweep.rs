@@ -17,14 +17,27 @@
 //! ([`DpTrainer`](crate::parallel::DpTrainer)), bit-identical to the
 //! serial trainer — so a sweep can use DP inside cells *and* cell-level
 //! concurrency at once, all on the one shared pool.
+//!
+//! [`sweep_via_queue`] is the crash-durable variant: the same axis grid
+//! routed through the persistent job queue as a sweep-grid job
+//! ([`GridSpec`](crate::jobs::GridSpec)), so a killed table resumes
+//! from its cells' step journals instead of restarting — with per-cell
+//! results **bit-identical** to [`sweep`] (asserted in `tests/jobs.rs`).
 
-use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
 
-use crate::config::TrainConfig;
+use anyhow::{bail, Result};
+
+use crate::config::{ServeConfig, TrainConfig};
+use crate::coordinator::evaluator;
 use crate::coordinator::trainer::Trainer;
-use crate::data::Dataset;
-use crate::parallel::{DpTrainer, WorkerPool};
+use crate::data::{tasks, Dataset};
+use crate::jobs::{GridSpec, JobQueue, JobState, Scheduler};
+use crate::parallel::{protocol, DpTrainer, WorkerPool};
+use crate::runtime::exec::{Hypers, LogitsExec};
 use crate::runtime::Runtime;
+use crate::serve::ServeEngine;
 
 /// Outcome of one grid cell.
 #[derive(Debug, Clone)]
@@ -114,6 +127,186 @@ pub fn sweep(
         run_cell(rt, pool, base, &model, dataset, axis, grid[i], init_params)
     });
     results.into_iter().collect()
+}
+
+/// The training-relevant knobs of two configs, for the parity guard:
+/// every hyper bit plus steps/seed/workers.
+fn hypers_bits(h: &Hypers) -> [u32; 8] {
+    [
+        h.lr.to_bits(),
+        h.eps.to_bits(),
+        h.sparsity.to_bits(),
+        h.mask_seed.to_bits(),
+        h.beta1.to_bits(),
+        h.beta2.to_bits(),
+        h.adam_eps.to_bits(),
+        h.wd.to_bits(),
+    ]
+}
+
+/// Run an axis grid through the persistent job queue instead of
+/// in-process: submit (or, when a grid named `grid_name` already rests
+/// in `queue_dir`, **resume**) a sweep-grid job whose cells train the
+/// exact configs [`sweep`] would, drain it with a scheduler over
+/// `engine_rt`, and rebuild the per-cell results from the cells'
+/// journals. Final losses and parameters are bit-identical to the
+/// serial sweep of the same grid; a cell's test accuracy is evaluated
+/// after training from its replayed parameters (cells skip mid-run dev
+/// evals — jobs disable them — so `best_dev_accuracy` carries the test
+/// accuracy as the model-selection stand-in).
+///
+/// `init` is the shared starting point every cell trains from (what
+/// [`sweep`]'s `init_params` provides; the repro harness passes its
+/// pretrained base). `data_seed` pins the dataset independently of the
+/// run seed, matching the harness convention of a fixed dataset seed.
+///
+/// The point of the detour: the grid survives kills. Rerunning the
+/// same call after a crash finds the grid by name, re-queues its
+/// interrupted cells, and continues from their `(seed, g)` journals —
+/// a killed table resumes instead of restarting.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_via_queue(
+    rt: &Runtime,
+    engine_rt: Runtime,
+    base: &TrainConfig,
+    axis: SweepAxis,
+    grid: &[f64],
+    init: &[f32],
+    queue_dir: &Path,
+    grid_name: &str,
+    data_seed: u64,
+) -> Result<Vec<SweepCell>> {
+    let model = rt.model(&base.model)?.clone();
+    let queue = Arc::new(JobQueue::open(queue_dir)?);
+    let grid_rec = match queue.find_grid(grid_name) {
+        Some(g) => {
+            crate::info!(
+                "[sweep-queue] resuming grid '{grid_name}' (id {}, {} cells)",
+                g.id,
+                g.children.len()
+            );
+            g
+        }
+        None => {
+            let mut spec = GridSpec {
+                name: grid_name.to_string(),
+                tasks: vec![base.task.clone()],
+                optimizers: vec![base.optimizer.clone()],
+                // pin every hyper the spec can carry so each cell
+                // resolves to exactly base + the axis value, even when
+                // base deviates from the presets
+                lrs: vec![base.hypers.lr as f64],
+                epss: vec![base.hypers.eps as f64],
+                sparsities: vec![base.hypers.sparsity as f64],
+                steps: base.steps,
+                workers: base.workers.max(1),
+                seed: base.seed,
+                data_seed: Some(data_seed),
+                ..GridSpec::default()
+            };
+            match axis {
+                SweepAxis::LearningRate => spec.lrs = grid.to_vec(),
+                SweepAxis::Sparsity => spec.sparsities = grid.to_vec(),
+            }
+            queue.submit_grid(spec)?
+        }
+    };
+    if grid_rec.children.len() != grid.len() {
+        bail!(
+            "grid '{grid_name}' in {queue_dir:?} has {} cells but this sweep asks for {} — \
+             stale queue directory? pick a new name or directory",
+            grid_rec.children.len(),
+            grid.len()
+        );
+    }
+
+    // parity guard: every cell must resolve to exactly the config the
+    // serial sweep would train (presets + the spec's lr/eps/sparsity
+    // overrides == base + axis value). Hypers a JobSpec cannot carry
+    // (betas, wd, mask_seed) must therefore already match the presets.
+    for (i, &cid) in grid_rec.children.iter().enumerate() {
+        let child = queue.get(cid)?;
+        let mut want = base.clone();
+        match axis {
+            SweepAxis::LearningRate => want.hypers.lr = grid[i] as f32,
+            SweepAxis::Sparsity => want.hypers.sparsity = grid[i] as f32,
+        }
+        let got = child.spec.train_config(&base.model)?;
+        if hypers_bits(&got.hypers) != hypers_bits(&want.hypers)
+            || got.steps != want.steps
+            || got.seed != want.seed
+            || got.workers != want.workers.max(1)
+            || child.spec.dataset_seed() != data_seed
+        {
+            bail!(
+                "grid '{grid_name}' cell {i} (job {cid}) resolves to a different config than \
+                 the serial sweep would train — the base config must derive its non-axis \
+                 hypers from the task/optimizer presets (or the queue dir holds a stale \
+                 grid under this name)"
+            );
+        }
+    }
+
+    // drain: the same engine + scheduler the server hosts, minus HTTP.
+    // The engine's resident base is `init`, so every cell trains from
+    // the sweep's shared starting point — which is exactly why the
+    // drain is restricted to this grid's cells: unrelated jobs sharing
+    // the queue directory must not be trained against *this* base.
+    let scfg = ServeConfig {
+        model: base.model.clone(),
+        workers: base.workers.max(1),
+        max_adapters: grid_rec.children.len().max(1),
+        ..ServeConfig::default()
+    };
+    let engine = Arc::new(
+        ServeEngine::new(engine_rt, &scfg, init.to_vec())?.with_jobs(Arc::clone(&queue), 0),
+    );
+    let scheduler = Scheduler::new(engine, Arc::clone(&queue), 0);
+    let slices = scheduler.drain_jobs(&grid_rec.children);
+    crate::info!("[sweep-queue] grid '{grid_name}' drained in {slices} slices");
+
+    // rebuild cells in grid order from the terminal job records: the
+    // journal replay is the authoritative parameter source, and test
+    // accuracy is evaluated exactly as the trainers do (full test
+    // split, serial fold)
+    let dataset = tasks::generate(&base.task, data_seed)?;
+    let logits = LogitsExec::load(rt, &model)?;
+    let mut cells = Vec::with_capacity(grid.len());
+    for (i, &cid) in grid_rec.children.iter().enumerate() {
+        let job = queue.get(cid)?;
+        match job.state {
+            JobState::Completed => {}
+            JobState::Failed if job.diverged => {
+                cells.push(SweepCell {
+                    value: grid[i],
+                    test_accuracy: None,
+                    best_dev_accuracy: 0.0,
+                    diverged: true,
+                    final_train_loss: job.last_loss,
+                });
+                continue;
+            }
+            state => bail!(
+                "grid '{grid_name}' cell {i} (job {cid}) ended {}{} — resume the grid or \
+                 inspect its journal",
+                state.as_str(),
+                job.error.as_ref().map(|e| format!(": {e}")).unwrap_or_default()
+            ),
+        }
+        let cfg = job.spec.train_config(&base.model)?;
+        let (header, records) = protocol::load_journal(&queue.journal_path(cid))?;
+        let outcome = protocol::replay_full(rt, &model, &cfg, &header, init, &records)?;
+        let test = evaluator::evaluate(rt, &logits, &outcome.params, &dataset.test, 0)?;
+        let acc = test.accuracy();
+        cells.push(SweepCell {
+            value: grid[i],
+            test_accuracy: Some(acc),
+            best_dev_accuracy: acc,
+            diverged: false,
+            final_train_loss: job.last_loss,
+        });
+    }
+    Ok(cells)
 }
 
 /// Pick the best cell by dev accuracy, treating divergence as -inf

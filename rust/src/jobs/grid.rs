@@ -1,0 +1,525 @@
+//! Sweep-grid jobs: one spec fanning out to N queued cells.
+//!
+//! The paper's experimental workload is *grids* — tasks × optimizers ×
+//! sparsity levels (§4 of Sparse MeZO, and the ZO benchmark matrix of
+//! Zhang et al. 2024 at larger scale) — but a grid run in-process
+//! (`coordinator::sweep`) has no pause, no priority and no crash
+//! recovery. A [`GridSpec`] closes that gap: it [`expand`]s
+//! deterministically into N child [`JobSpec`]s at submit time, each an
+//! ordinary queue citizen (priority pick, round-robin fairness, slice
+//! checkpointing, journal resume), while the parent [`Grid`] record
+//! tracks child completion and aggregates per-cell results into
+//! `grid-<id>.summary.json` — the same rows the serial sweep table
+//! prints, surviving kills because every cell's training state is its
+//! `(seed, g)` journal.
+//!
+//! Determinism contract: `expand` iterates task → optimizer → sparsity
+//! → lr → eps in the order the axes were given, and cell `i` is always
+//! named `<name>.c<i>` — so a resubmitted or reopened grid maps cells
+//! to axis values identically, which is what lets the repro harness
+//! resume a killed table instead of restarting it
+//! ([`sweep_via_queue`](crate::coordinator::sweep::sweep_via_queue)).
+//!
+//! [`expand`]: GridSpec::expand
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+use super::queue::Job;
+use super::spec::JobSpec;
+
+/// Hard cap on cells per grid — a fat-fingered axis list must not fan
+/// out into thousands of queued jobs.
+pub const MAX_GRID_CELLS: usize = 256;
+
+/// One sweep grid as submitted: axis values plus the settings every
+/// cell shares. Empty hyper axes (`lrs`/`epss`/`sparsities`) mean "use
+/// the task/optimizer preset" — one implicit cell on that axis.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// grid name; cell `i` becomes job `<name>.c<i>` (restricted
+    /// charset — the cell name is an adapter/registry key)
+    pub name: String,
+    /// task axis (at least one)
+    pub tasks: Vec<String>,
+    /// optimizer axis (at least one; each must be slice-runnable)
+    pub optimizers: Vec<String>,
+    /// learning-rate axis (empty = preset)
+    pub lrs: Vec<f64>,
+    /// perturbation-scale axis (empty = preset)
+    pub epss: Vec<f64>,
+    /// sparsity axis (empty = preset)
+    pub sparsities: Vec<f64>,
+    /// optimizer steps per cell
+    pub steps: usize,
+    /// data-parallel width per cell
+    pub workers: usize,
+    /// shared scheduling priority — cells interleave round-robin
+    pub priority: i64,
+    /// steps per scheduler slice (0 = scheduler default)
+    pub slice_steps: usize,
+    /// threshold-refresh cadence per cell (0 = fixed at init)
+    pub mask_refresh: usize,
+    /// noise/run seed shared by every cell (paired runs)
+    pub seed: u64,
+    /// dataset seed override (None = `seed`; the repro harness pins
+    /// its tables' dataset seed independently of the run seed)
+    pub data_seed: Option<u64>,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        GridSpec {
+            name: String::new(),
+            tasks: vec!["rte".into()],
+            optimizers: vec!["smezo".into()],
+            lrs: Vec::new(),
+            epss: Vec::new(),
+            sparsities: Vec::new(),
+            steps: 100,
+            workers: 1,
+            priority: 0,
+            slice_steps: 0,
+            mask_refresh: 0,
+            seed: 42,
+            data_seed: None,
+        }
+    }
+}
+
+/// An empty hyper axis is one implicit "use the preset" cell.
+fn hyper_axis(vals: &[f64]) -> Vec<Option<f32>> {
+    if vals.is_empty() {
+        vec![None]
+    } else {
+        vals.iter().map(|&v| Some(v as f32)).collect()
+    }
+}
+
+impl GridSpec {
+    /// Number of cells this grid expands to.
+    pub fn cells(&self) -> usize {
+        self.tasks.len()
+            * self.optimizers.len()
+            * self.lrs.len().max(1)
+            * self.epss.len().max(1)
+            * self.sparsities.len().max(1)
+    }
+
+    /// Reject grids the queue could never run. Child specs are
+    /// re-validated individually by [`expand`](GridSpec::expand) (bad
+    /// optimizers etc. surface there with the cell's context).
+    pub fn validate(&self) -> Result<()> {
+        // ".c255" costs 5 chars of the 64-char job-name budget
+        if self.name.is_empty() || self.name.len() > 58 {
+            bail!("grid name must be 1..=58 characters");
+        }
+        if !self
+            .name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'))
+        {
+            bail!("grid name '{}' may only contain [A-Za-z0-9_.-]", self.name);
+        }
+        if self.tasks.is_empty() || self.optimizers.is_empty() {
+            bail!("a grid needs at least one task and one optimizer");
+        }
+        if self.steps == 0 {
+            bail!("grid steps must be > 0");
+        }
+        if self.workers == 0 {
+            bail!("grid workers must be >= 1");
+        }
+        let cells = self.cells();
+        if cells > MAX_GRID_CELLS {
+            bail!("grid expands to {cells} cells (cap {MAX_GRID_CELLS})");
+        }
+        Ok(())
+    }
+
+    /// Deterministically fan the grid out into its child job specs:
+    /// task → optimizer → sparsity → lr → eps, axes in submission
+    /// order, cell `i` named `<name>.c<i>`. Every child passes
+    /// [`JobSpec::validate`], so a grid either expands whole or not at
+    /// all.
+    pub fn expand(&self) -> Result<Vec<JobSpec>> {
+        self.validate()?;
+        let lrs = hyper_axis(&self.lrs);
+        let epss = hyper_axis(&self.epss);
+        let sparsities = hyper_axis(&self.sparsities);
+        let mut out = Vec::with_capacity(self.cells());
+        for task in &self.tasks {
+            for optimizer in &self.optimizers {
+                for &sparsity in &sparsities {
+                    for &lr in &lrs {
+                        for &eps in &epss {
+                            let spec = JobSpec {
+                                name: format!("{}.c{}", self.name, out.len()),
+                                task: task.clone(),
+                                optimizer: optimizer.clone(),
+                                steps: self.steps,
+                                workers: self.workers,
+                                priority: self.priority,
+                                slice_steps: self.slice_steps,
+                                mask_refresh: self.mask_refresh,
+                                seed: self.seed,
+                                data_seed: self.data_seed,
+                                lr,
+                                eps,
+                                sparsity,
+                            };
+                            spec.validate()?;
+                            out.push(spec);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Serialize for the wire (`POST /v1/jobs/grid`) and the parent
+    /// state file.
+    pub fn to_json(&self) -> Json {
+        let strs = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect());
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("tasks", strs(&self.tasks)),
+            ("optimizers", strs(&self.optimizers)),
+            ("lrs", Json::from_f64s(&self.lrs)),
+            ("epss", Json::from_f64s(&self.epss)),
+            ("sparsities", Json::from_f64s(&self.sparsities)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("priority", Json::Num(self.priority as f64)),
+            ("slice_steps", Json::Num(self.slice_steps as f64)),
+            ("mask_refresh", Json::Num(self.mask_refresh as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ];
+        if let Some(ds) = self.data_seed {
+            fields.push(("data_seed", Json::Num(ds as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a grid spec from a submit body / state file. Only `name`
+    /// is required; everything else has the [`Default`] values.
+    pub fn from_json(doc: &Json) -> Result<GridSpec> {
+        let mut spec = GridSpec {
+            name: doc.req("name")?.as_str()?.to_string(),
+            ..GridSpec::default()
+        };
+        let strs = |v: &Json| -> Result<Vec<String>> {
+            v.as_arr()?.iter().map(|x| Ok(x.as_str()?.to_string())).collect()
+        };
+        let nums = |v: &Json| -> Result<Vec<f64>> {
+            v.as_arr()?.iter().map(|x| x.as_f64()).collect()
+        };
+        if let Some(v) = doc.get("tasks") {
+            spec.tasks = strs(v)?;
+        }
+        if let Some(v) = doc.get("optimizers") {
+            spec.optimizers = strs(v)?;
+        }
+        if let Some(v) = doc.get("lrs") {
+            spec.lrs = nums(v)?;
+        }
+        if let Some(v) = doc.get("epss") {
+            spec.epss = nums(v)?;
+        }
+        if let Some(v) = doc.get("sparsities") {
+            spec.sparsities = nums(v)?;
+        }
+        if let Some(v) = doc.get("steps") {
+            spec.steps = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("workers") {
+            spec.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("priority") {
+            spec.priority = v.as_f64()? as i64;
+        }
+        if let Some(v) = doc.get("slice_steps") {
+            spec.slice_steps = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("mask_refresh") {
+            spec.mask_refresh = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("seed") {
+            spec.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = doc.get("data_seed") {
+            spec.data_seed = Some(v.as_f64()? as u64);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// The parent record of a submitted grid: the spec plus the child job
+/// ids it fanned out to (in expansion order — index `i` is cell `i`).
+/// A grid has no lifecycle state of its own; its state is derived from
+/// its children ([`grid_status_json`]).
+#[derive(Debug, Clone)]
+pub struct Grid {
+    /// queue-assigned id (same id space as jobs)
+    pub id: u64,
+    /// the submitted spec
+    pub spec: GridSpec,
+    /// child job ids, expansion order
+    pub children: Vec<u64>,
+}
+
+impl Grid {
+    /// Serialize the parent state file (`grid-<id>.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("grid", Json::Bool(true)),
+            ("spec", self.spec.to_json()),
+            (
+                "children",
+                Json::Arr(self.children.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a parent state file back.
+    pub fn from_json(doc: &Json) -> Result<Grid> {
+        Ok(Grid {
+            id: doc.req("id")?.as_f64()? as u64,
+            spec: GridSpec::from_json(doc.req("spec")?)?,
+            children: doc
+                .req("children")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|x| x as u64))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Derived parent state: `running` if any child runs, else `queued` if
+/// any child waits, else `completed`/`failed`/`cancelled` by child
+/// outcomes (worst non-success wins over `cancelled`).
+fn derived_state(grid: &Grid, jobs: &BTreeMap<u64, Job>) -> &'static str {
+    use super::queue::JobState;
+    let mut any_running = false;
+    let mut any_queued = false;
+    let mut any_failed = false;
+    let mut any_cancelled = false;
+    for cid in &grid.children {
+        match jobs.get(cid).map(|j| j.state) {
+            Some(JobState::Running) => any_running = true,
+            Some(JobState::Queued) => any_queued = true,
+            Some(JobState::Failed) => any_failed = true,
+            Some(JobState::Cancelled) | None => any_cancelled = true,
+            Some(JobState::Completed) => {}
+        }
+    }
+    if any_running {
+        "running"
+    } else if any_queued {
+        "queued"
+    } else if any_failed {
+        "failed"
+    } else if any_cancelled {
+        "cancelled"
+    } else {
+        "completed"
+    }
+}
+
+/// The parent-status body (`GET /v1/jobs/{id}` for a grid id): derived
+/// state, per-state child counts, aggregate progress, and one row per
+/// child.
+pub(crate) fn grid_status_json(
+    grid: &Grid,
+    jobs: &BTreeMap<u64, Job>,
+    summary_written: bool,
+) -> Json {
+    use super::queue::JobState;
+    let mut counts = [0usize; 5]; // queued/running/completed/failed/cancelled
+    let mut steps_done = 0usize;
+    let mut children = Vec::with_capacity(grid.children.len());
+    for cid in &grid.children {
+        let Some(job) = jobs.get(cid) else { continue };
+        let slot = match job.state {
+            JobState::Queued => 0,
+            JobState::Running => 1,
+            JobState::Completed => 2,
+            JobState::Failed => 3,
+            JobState::Cancelled => 4,
+        };
+        counts[slot] += 1;
+        steps_done += job.steps_done;
+        children.push(Json::obj(vec![
+            ("id", Json::Num(job.id as f64)),
+            ("name", Json::Str(job.spec.name.clone())),
+            ("state", Json::Str(job.state.as_str().into())),
+            ("steps_done", Json::Num(job.steps_done as f64)),
+        ]));
+    }
+    Json::obj(vec![
+        ("id", Json::Num(grid.id as f64)),
+        ("grid", Json::Bool(true)),
+        ("name", Json::Str(grid.spec.name.clone())),
+        ("state", Json::Str(derived_state(grid, jobs).into())),
+        ("cells", Json::Num(grid.children.len() as f64)),
+        ("queued", Json::Num(counts[0] as f64)),
+        ("running", Json::Num(counts[1] as f64)),
+        ("completed", Json::Num(counts[2] as f64)),
+        ("failed", Json::Num(counts[3] as f64)),
+        ("cancelled", Json::Num(counts[4] as f64)),
+        ("steps_done", Json::Num(steps_done as f64)),
+        (
+            "steps_total",
+            Json::Num((grid.spec.steps * grid.children.len()) as f64),
+        ),
+        ("summary_written", Json::Bool(summary_written)),
+        ("children", Json::Arr(children)),
+    ])
+}
+
+/// The aggregated per-cell results written to `grid-<id>.summary.json`
+/// once every child is terminal: the serial sweep table's rows (axis
+/// values, final train loss, divergence) plus each cell's lifecycle
+/// outcome. `final_train_loss` serializes through the f64 JSON writer,
+/// so a cell's loss round-trips bit-exactly (NaN → `null`).
+pub(crate) fn grid_summary_json(grid: &Grid, jobs: &BTreeMap<u64, Job>) -> Json {
+    use super::queue::JobState;
+    let opt_num = |v: Option<f32>| v.map(|x| Json::Num(x as f64)).unwrap_or(Json::Null);
+    let mut cells = Vec::with_capacity(grid.children.len());
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    let mut cancelled = 0usize;
+    for cid in &grid.children {
+        let Some(job) = jobs.get(cid) else { continue };
+        match job.state {
+            JobState::Completed => completed += 1,
+            JobState::Failed => failed += 1,
+            JobState::Cancelled => cancelled += 1,
+            _ => {}
+        }
+        cells.push(Json::obj(vec![
+            ("job", Json::Num(job.id as f64)),
+            ("name", Json::Str(job.spec.name.clone())),
+            ("task", Json::Str(job.spec.task.clone())),
+            ("optimizer", Json::Str(job.spec.optimizer.clone())),
+            ("lr", opt_num(job.spec.lr)),
+            ("eps", opt_num(job.spec.eps)),
+            ("sparsity", opt_num(job.spec.sparsity)),
+            ("state", Json::Str(job.state.as_str().into())),
+            ("steps_done", Json::Num(job.steps_done as f64)),
+            ("final_train_loss", Json::Num(job.last_loss)),
+            ("diverged", Json::Bool(job.diverged)),
+            (
+                "error",
+                job.error.as_ref().map(|e| Json::Str(e.clone())).unwrap_or(Json::Null),
+            ),
+            ("published", Json::Bool(job.published)),
+        ]));
+    }
+    Json::obj(vec![
+        ("grid", Json::Num(grid.id as f64)),
+        ("name", Json::Str(grid.spec.name.clone())),
+        ("completed", Json::Num(completed as f64)),
+        ("failed", Json::Num(failed as f64)),
+        ("cancelled", Json::Num(cancelled as f64)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(name: &str) -> GridSpec {
+        GridSpec { name: name.into(), steps: 8, ..GridSpec::default() }
+    }
+
+    #[test]
+    fn expand_is_deterministic_and_ordered() {
+        let mut g = grid("g");
+        g.tasks = vec!["rte".into(), "boolq".into()];
+        g.lrs = vec![1e-4, 3e-4];
+        g.sparsities = vec![0.6];
+        let a = g.expand().unwrap();
+        let b = g.expand().unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(g.cells(), 4);
+        // task-major, then lr, names indexed in order
+        let keys: Vec<(String, Option<u32>, String)> = a
+            .iter()
+            .map(|s| (s.task.clone(), s.lr.map(f32::to_bits), s.name.clone()))
+            .collect();
+        let key = |t: &str, lr: f32, n: &str| (t.to_string(), Some(lr.to_bits()), n.to_string());
+        assert_eq!(keys[0], key("rte", 1e-4, "g.c0"));
+        assert_eq!(keys[1], key("rte", 3e-4, "g.c1"));
+        assert_eq!(keys[2], key("boolq", 1e-4, "g.c2"));
+        assert_eq!(keys[3], key("boolq", 3e-4, "g.c3"));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.lr.map(f32::to_bits), y.lr.map(f32::to_bits));
+        }
+        // empty hyper axes leave the preset in place (None override)
+        assert!(a[0].eps.is_none());
+        assert_eq!(a[0].sparsity.map(f32::to_bits), Some(0.6f32.to_bits()));
+        // shared knobs propagate
+        assert_eq!(a[3].steps, 8);
+        assert_eq!(a[3].seed, 42);
+    }
+
+    #[test]
+    fn validation_rejects_bad_grids() {
+        assert!(grid("").validate().is_err());
+        assert!(grid("has space").validate().is_err());
+        let mut g = grid("x");
+        g.steps = 0;
+        assert!(g.validate().is_err());
+        let mut g = grid("x");
+        g.tasks = vec![];
+        assert!(g.validate().is_err());
+        let mut g = grid("x");
+        g.lrs = vec![1e-4; MAX_GRID_CELLS + 1];
+        assert!(g.validate().is_err());
+        // a bad optimizer passes the grid check but fails expansion
+        let mut g = grid("x");
+        g.optimizers = vec!["smezo_const".into()];
+        assert!(g.validate().is_ok());
+        assert!(g.expand().is_err());
+    }
+
+    #[test]
+    fn grid_spec_json_round_trip_is_lossless() {
+        let mut g = grid("rt.grid-1");
+        g.tasks = vec!["rte".into(), "wic".into()];
+        g.optimizers = vec!["mezo".into(), "smezo".into()];
+        g.lrs = vec![1e-4, 3e-4];
+        g.sparsities = vec![0.5, 0.75];
+        g.priority = -2;
+        g.workers = 2;
+        g.slice_steps = 4;
+        g.data_seed = Some(1234);
+        let back = GridSpec::from_json(&g.to_json()).unwrap();
+        assert_eq!(back.name, g.name);
+        assert_eq!(back.tasks, g.tasks);
+        assert_eq!(back.optimizers, g.optimizers);
+        assert_eq!(back.lrs, g.lrs);
+        assert!(back.epss.is_empty());
+        assert_eq!(back.sparsities, g.sparsities);
+        assert_eq!(back.priority, -2);
+        assert_eq!(back.workers, 2);
+        assert_eq!(back.slice_steps, 4);
+        assert_eq!(back.data_seed, Some(1234));
+        // and the parent record round-trips with its children
+        let parent = Grid { id: 7, spec: g, children: vec![8, 9, 10, 11] };
+        let back = Grid::from_json(&parent.to_json()).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.children, vec![8, 9, 10, 11]);
+        assert_eq!(back.spec.cells(), 16);
+    }
+}

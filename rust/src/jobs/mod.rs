@@ -14,6 +14,12 @@
 //!   survives restarts (interrupted `Running` jobs re-queue and resume
 //!   from their journals); priority pick with round-robin fairness
 //!   inside a priority level.
+//! * [`grid`] — sweep-grid jobs: a [`GridSpec`](grid::GridSpec) fans
+//!   one spec out into N child jobs at submit time (tasks × optimizers
+//!   × sparsity/lr/eps axes — the paper's §4 experiment shape), a
+//!   parent [`Grid`](grid::Grid) record tracks child completion, and
+//!   the queue aggregates per-cell results into
+//!   `grid-<id>.summary.json` once every cell is terminal.
 //! * [`scheduler`] — the [`Scheduler`](scheduler::Scheduler):
 //!   cooperative time-slicing of runnable jobs over the serve engine's
 //!   [`WorkerPool`](crate::parallel::WorkerPool), per-slice
@@ -34,10 +40,12 @@
 //! /v1/jobs/{id}/cancel`, `POST /v1/jobs/{id}/resume`) and the `jobs`
 //! CLI subcommand.
 
+pub mod grid;
 pub mod queue;
 pub mod scheduler;
 pub mod spec;
 
-pub use queue::{Job, JobQueue, JobState};
+pub use grid::{Grid, GridSpec};
+pub use queue::{Job, JobQueue, JobState, SliceOutcome};
 pub use scheduler::Scheduler;
 pub use spec::JobSpec;

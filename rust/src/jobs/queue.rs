@@ -19,16 +19,36 @@
 //! `Running → Queued` at every slice boundary (cooperative
 //! time-slicing) and `{Failed, Cancelled} → Queued` via
 //! [`resume`](JobQueue::resume).
+//!
+//! Sweep grids ([`GridSpec`](super::grid::GridSpec)) fan out into
+//! ordinary child jobs at submit time plus one parent record
+//! (`grid-<id>.json`, same id space). Children carry `parent` and
+//! interleave under the normal priority/round-robin policy;
+//! [`cancel_grid`](JobQueue::cancel_grid) /
+//! [`resume_grid`](JobQueue::resume_grid) fan out to every
+//! non-terminal (resp. resumable) child; and the moment the last child
+//! goes terminal the queue aggregates per-cell results into
+//! `grid-<id>.summary.json` — the serial sweep table's rows, durable
+//! across restarts.
+//!
+//! Locking: every entry point recovers from a poisoned state mutex
+//! ([`JobQueue::lock_inner`]) — a panic inside one critical section
+//! (a crashing slice thread, a bug poked over HTTP) must not wedge
+//! every subsequent jobs endpoint on a live server. The per-transition
+//! state files are the durable source of truth, so recovery is safe:
+//! the in-memory map holds independent whole records, and anything a
+//! panicking thread left stale is re-established from disk on reopen.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::{self, Json};
 
+use super::grid::{grid_status_json, grid_summary_json, Grid, GridSpec};
 use super::spec::JobSpec;
 
 /// Lifecycle state of one job.
@@ -95,6 +115,14 @@ pub struct Job {
     pub published: bool,
     /// tenant asked for cancellation; honored at the next step boundary
     pub cancel_requested: bool,
+    /// the grid this job is a cell of, if any
+    pub parent: Option<u64>,
+    /// training loss at the last completed step (NaN before any step;
+    /// an f32 loss widened exactly, so the grid summary's
+    /// `final_train_loss` is bit-comparable to the serial sweep's)
+    pub last_loss: f64,
+    /// divergence detection fired during a slice
+    pub diverged: bool,
     /// scheduler clock stamp of the last slice (round-robin fairness)
     last_scheduled: u64,
 }
@@ -113,6 +141,13 @@ impl Job {
             ),
             ("published", Json::Bool(self.published)),
             ("cancel_requested", Json::Bool(self.cancel_requested)),
+            (
+                "parent",
+                self.parent.map(|p| Json::Num(p as f64)).unwrap_or(Json::Null),
+            ),
+            // NaN serializes as null and parses back to NaN
+            ("last_loss", Json::Num(self.last_loss)),
+            ("diverged", Json::Bool(self.diverged)),
             ("last_scheduled", Json::Num(self.last_scheduled as f64)),
             ("spec", self.spec.to_json()),
         ])
@@ -133,6 +168,15 @@ impl Job {
             error,
             published: matches!(doc.get("published"), Some(Json::Bool(true))),
             cancel_requested: matches!(doc.get("cancel_requested"), Some(Json::Bool(true))),
+            parent: match doc.get("parent") {
+                Some(Json::Num(p)) => Some(*p as u64),
+                _ => None,
+            },
+            last_loss: match doc.get("last_loss") {
+                Some(Json::Num(x)) => *x,
+                _ => f64::NAN,
+            },
+            diverged: matches!(doc.get("diverged"), Some(Json::Bool(true))),
             last_scheduled: doc
                 .get("last_scheduled")
                 .map(|v| v.as_f64().map(|x| x as u64))
@@ -142,9 +186,43 @@ impl Job {
     }
 }
 
+/// What one scheduler slice reports back at its boundary: updated
+/// progress plus the next lifecycle state (back to `Queued` mid-run,
+/// or terminal). Passed whole to [`JobQueue::finish_slice`].
+#[derive(Debug, Clone)]
+pub struct SliceOutcome {
+    /// optimizer steps completed across all slices so far
+    pub steps_done: usize,
+    /// next lifecycle state
+    pub state: JobState,
+    /// failure reason (Failed only)
+    pub error: Option<String>,
+    /// the adapter was published during this slice
+    pub published: bool,
+    /// training loss at the last completed step (NaN when no step ran
+    /// this slice — the job's recorded loss is then left untouched)
+    pub last_loss: f64,
+    /// divergence detection fired during this slice
+    pub diverged: bool,
+}
+
+impl Default for SliceOutcome {
+    fn default() -> Self {
+        SliceOutcome {
+            steps_done: 0,
+            state: JobState::Queued,
+            error: None,
+            published: false,
+            last_loss: f64::NAN,
+            diverged: false,
+        }
+    }
+}
+
 /// Queue state behind the lock.
 struct Inner {
     jobs: BTreeMap<u64, Job>,
+    grids: BTreeMap<u64, Grid>,
     next_id: u64,
     clock: u64,
 }
@@ -164,12 +242,44 @@ impl JobQueue {
     pub fn open(dir: &Path) -> Result<JobQueue> {
         std::fs::create_dir_all(dir).with_context(|| format!("creating jobs dir {dir:?}"))?;
         let mut jobs = BTreeMap::new();
+        let mut grids = BTreeMap::new();
         let mut next_id = 1u64;
         let mut clock = 0u64;
+        // never recycle a quarantined record's id: its journal,
+        // checkpoint and children survive, and a new job under the
+        // same id would silently resume from them
+        let reserve_id = |name: &str, prefix: &str, next_id: &mut u64| {
+            if let Some(id) = name
+                .strip_prefix(prefix)
+                .and_then(|s| s.strip_suffix(".json"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                *next_id = (*next_id).max(id + 1);
+            }
+        };
         for entry in std::fs::read_dir(dir)? {
             let path = entry?.path();
             let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
-            if !(name.starts_with("job-") && name.ends_with(".json")) {
+            let is_job = name.starts_with("job-") && name.ends_with(".json");
+            let is_grid = name.starts_with("grid-")
+                && name.ends_with(".json")
+                && !name.ends_with(".summary.json");
+            if is_grid {
+                let text = std::fs::read_to_string(&path)?;
+                match json::parse(&text).and_then(|doc| Grid::from_json(&doc)) {
+                    Ok(grid) => {
+                        next_id = next_id.max(grid.id + 1);
+                        grids.insert(grid.id, grid);
+                    }
+                    Err(e) => {
+                        crate::info!("[jobs] quarantining unreadable grid {path:?}: {e:#}");
+                        let _ = std::fs::rename(&path, path.with_extension("json.corrupt"));
+                        reserve_id(name, "grid-", &mut next_id);
+                    }
+                }
+                continue;
+            }
+            if !is_job {
                 continue;
             }
             let text = std::fs::read_to_string(&path)?;
@@ -182,16 +292,7 @@ impl JobQueue {
                 Err(e) => {
                     crate::info!("[jobs] quarantining unreadable state {path:?}: {e:#}");
                     let _ = std::fs::rename(&path, path.with_extension("json.corrupt"));
-                    // never recycle the quarantined job's id: its journal
-                    // and checkpoint files survive, and a new job under
-                    // the same id would silently resume from them
-                    if let Some(id) = name
-                        .strip_prefix("job-")
-                        .and_then(|s| s.strip_suffix(".json"))
-                        .and_then(|s| s.parse::<u64>().ok())
-                    {
-                        next_id = next_id.max(id + 1);
-                    }
+                    reserve_id(name, "job-", &mut next_id);
                     continue;
                 }
             };
@@ -209,18 +310,36 @@ impl JobQueue {
         }
         let queue = JobQueue {
             dir: dir.to_path_buf(),
-            inner: Mutex::new(Inner { jobs, next_id, clock }),
+            inner: Mutex::new(Inner { jobs, grids, next_id, clock }),
             ready: Condvar::new(),
         };
         // persist the Running->Queued downgrade so a second crash
-        // before any slice still sees consistent state
+        // before any slice still sees consistent state, and write any
+        // grid summary a crash raced past (last child terminal but the
+        // aggregate not yet on disk)
         {
-            let inner = queue.inner.lock().unwrap();
+            let inner = queue.lock_inner();
             for job in inner.jobs.values() {
                 queue.persist(job)?;
             }
+            for &id in inner.grids.keys() {
+                if !queue.summary_path(id).exists() {
+                    queue.maybe_finish_grid(&inner, id)?;
+                }
+            }
         }
         Ok(queue)
+    }
+
+    /// Lock the queue state, recovering from a poisoned mutex. A panic
+    /// inside one critical section must not permanently wedge every
+    /// subsequent jobs endpoint on a live server: the map holds whole,
+    /// independent records (no multi-step invariant a panic can tear),
+    /// and the per-transition state files are the durable source of
+    /// truth that reopen re-establishes — so continuing past the
+    /// poison is strictly better than refusing all future service.
+    fn lock_inner(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
     /// The queue directory.
@@ -244,8 +363,18 @@ impl JobQueue {
         self.dir.join("adapters").join(format!("{name}.adapter"))
     }
 
+    /// Aggregated per-cell results of a finished grid (written once
+    /// every child is terminal; removed when a child is resumed).
+    pub fn summary_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("grid-{id}.summary.json"))
+    }
+
     fn state_path(&self, id: u64) -> PathBuf {
         self.dir.join(format!("job-{id}.json"))
+    }
+
+    fn grid_path(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("grid-{id}.json"))
     }
 
     /// Rewrite one job's state file (called on every transition).
@@ -260,13 +389,20 @@ impl JobQueue {
             .with_context(|| format!("committing job state {path:?}"))
     }
 
-    /// Submit a new job; returns its id. The spec is validated first.
-    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
-        spec.validate()?;
-        let mut inner = self.inner.lock().unwrap();
-        let id = inner.next_id;
-        inner.next_id += 1;
-        let job = Job {
+    /// Rewrite a grid's parent state file (write-to-temp + rename, like
+    /// [`persist`](JobQueue::persist)).
+    fn persist_grid(&self, grid: &Grid) -> Result<()> {
+        let path = self.grid_path(grid.id);
+        let tmp = self.dir.join(format!("grid-{}.json.tmp", grid.id));
+        std::fs::write(&tmp, format!("{}\n", grid.to_json().to_string()))
+            .with_context(|| format!("persisting grid state {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing grid state {path:?}"))
+    }
+
+    /// A freshly-submitted job record.
+    fn fresh_job(id: u64, spec: JobSpec, parent: Option<u64>) -> Job {
+        Job {
             id,
             spec,
             state: JobState::Queued,
@@ -275,8 +411,20 @@ impl JobQueue {
             error: None,
             published: false,
             cancel_requested: false,
+            parent,
+            last_loss: f64::NAN,
+            diverged: false,
             last_scheduled: 0,
-        };
+        }
+    }
+
+    /// Submit a new job; returns its id. The spec is validated first.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        spec.validate()?;
+        let mut inner = self.lock_inner();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let job = Self::fresh_job(id, spec, None);
         self.persist(&job)?;
         inner.jobs.insert(id, job);
         drop(inner);
@@ -284,11 +432,162 @@ impl JobQueue {
         Ok(id)
     }
 
+    /// Submit a sweep grid: expand the spec into its child jobs, assign
+    /// the parent id then one id per cell (expansion order), persist
+    /// everything, and wake the schedulers. Children are ordinary
+    /// queued jobs — they interleave with everything else under the
+    /// priority/round-robin policy.
+    pub fn submit_grid(&self, spec: GridSpec) -> Result<Grid> {
+        let child_specs = spec.expand()?;
+        let mut inner = self.lock_inner();
+        if let Some(g) = inner.grids.values().find(|g| g.spec.name == spec.name) {
+            bail!(
+                "grid '{}' already exists (id {}); resume it or pick a new name",
+                spec.name,
+                g.id
+            );
+        }
+        let parent_id = inner.next_id;
+        inner.next_id += 1;
+        let mut children = Vec::with_capacity(child_specs.len());
+        let mut jobs = Vec::with_capacity(child_specs.len());
+        for cs in child_specs {
+            let id = inner.next_id;
+            inner.next_id += 1;
+            children.push(id);
+            jobs.push(Self::fresh_job(id, cs, Some(parent_id)));
+        }
+        let grid = Grid { id: parent_id, spec, children };
+        // parent first: a crash mid-submit leaves a grid whose missing
+        // children read as terminal, never orphan children whose parent
+        // id resolves to nothing
+        self.persist_grid(&grid)?;
+        for job in &jobs {
+            self.persist(job)?;
+        }
+        for job in jobs {
+            inner.jobs.insert(job.id, job);
+        }
+        inner.grids.insert(parent_id, grid.clone());
+        drop(inner);
+        self.ready.notify_all();
+        Ok(grid)
+    }
+
+    /// Whether `id` names a grid parent (vs. a plain job).
+    pub fn has_grid(&self, id: u64) -> bool {
+        self.lock_inner().grids.contains_key(&id)
+    }
+
+    /// Look a grid up by its spec name (the repro harness's resume
+    /// path: a killed table reopens the queue dir and finds its grid
+    /// instead of resubmitting).
+    pub fn find_grid(&self, name: &str) -> Option<Grid> {
+        self.lock_inner().grids.values().find(|g| g.spec.name == name).cloned()
+    }
+
+    /// Snapshot every grid parent record, id order.
+    pub fn grids(&self) -> Vec<Grid> {
+        self.lock_inner().grids.values().cloned().collect()
+    }
+
+    /// The parent-status body for a grid id: derived state, per-state
+    /// child counts, aggregate progress, one row per child.
+    pub fn grid_status(&self, id: u64) -> Result<Json> {
+        let inner = self.lock_inner();
+        let Some(grid) = inner.grids.get(&id) else { bail!("no grid {id}") };
+        Ok(grid_status_json(grid, &inner.jobs, self.summary_path(id).exists()))
+    }
+
+    /// Cancel a grid: fan out to every non-terminal child (`Queued`
+    /// cells cancel immediately, `Running` cells get the cooperative
+    /// flag). Returns how many children were affected; errors when
+    /// every child is already terminal.
+    pub fn cancel_grid(&self, id: u64) -> Result<usize> {
+        let mut inner = self.lock_inner();
+        let Some(grid) = inner.grids.get(&id).cloned() else { bail!("no grid {id}") };
+        let mut affected = 0usize;
+        for cid in &grid.children {
+            let Some(job) = inner.jobs.get_mut(cid) else { continue };
+            match job.state {
+                JobState::Queued => {
+                    job.state = JobState::Cancelled;
+                    job.cancel_requested = true;
+                }
+                JobState::Running => job.cancel_requested = true,
+                _ => continue,
+            }
+            affected += 1;
+            let snap = job.clone();
+            self.persist(&snap)?;
+        }
+        if affected == 0 {
+            bail!("grid {id} has no cancellable children (all terminal)");
+        }
+        // queued-only grids are now fully terminal; running cells keep
+        // the summary pending until their slices observe the flag
+        self.maybe_finish_grid(&inner, id)?;
+        Ok(affected)
+    }
+
+    /// Resume a grid: fan out to every `Cancelled`/`Failed` child,
+    /// re-queueing them to continue bit-identically from their
+    /// journals. Returns how many children were re-queued; errors when
+    /// none was resumable. The stale summary (if any) is removed — it
+    /// regenerates when the grid finishes again.
+    pub fn resume_grid(&self, id: u64) -> Result<usize> {
+        let mut inner = self.lock_inner();
+        let Some(grid) = inner.grids.get(&id).cloned() else { bail!("no grid {id}") };
+        let mut affected = 0usize;
+        for cid in &grid.children {
+            let Some(job) = inner.jobs.get_mut(cid) else { continue };
+            match job.state {
+                JobState::Cancelled | JobState::Failed => {
+                    job.state = JobState::Queued;
+                    job.cancel_requested = false;
+                    job.error = None;
+                }
+                _ => continue,
+            }
+            affected += 1;
+            let snap = job.clone();
+            self.persist(&snap)?;
+        }
+        if affected == 0 {
+            bail!("grid {id} has no resumable children");
+        }
+        let _ = std::fs::remove_file(self.summary_path(id));
+        drop(inner);
+        self.ready.notify_all();
+        Ok(affected)
+    }
+
+    /// Write `grid-<id>.summary.json` iff every child of `id` is
+    /// terminal (a child whose state file was quarantined counts as
+    /// terminal — nothing will ever run it). Idempotent; called from
+    /// every transition that can terminate a grid's last child.
+    fn maybe_finish_grid(&self, inner: &Inner, id: u64) -> Result<()> {
+        let Some(grid) = inner.grids.get(&id) else { return Ok(()) };
+        let all_terminal = grid
+            .children
+            .iter()
+            .all(|cid| inner.jobs.get(cid).map(|j| j.state.terminal()).unwrap_or(true));
+        if !all_terminal {
+            return Ok(());
+        }
+        let path = self.summary_path(id);
+        let tmp = self.dir.join(format!("grid-{id}.summary.json.tmp"));
+        std::fs::write(&tmp, format!("{}\n", grid_summary_json(grid, &inner.jobs).to_string()))
+            .with_context(|| format!("writing grid summary {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing grid summary {path:?}"))?;
+        crate::info!("[jobs] grid {id} '{}' finished — summary at {path:?}", grid.spec.name);
+        Ok(())
+    }
+
     /// Snapshot one job.
     pub fn get(&self, id: u64) -> Result<Job> {
-        self.inner
-            .lock()
-            .unwrap()
+        self.lock_inner()
             .jobs
             .get(&id)
             .cloned()
@@ -297,14 +596,14 @@ impl JobQueue {
 
     /// Snapshot every job, id order.
     pub fn list(&self) -> Vec<Job> {
-        self.inner.lock().unwrap().jobs.values().cloned().collect()
+        self.lock_inner().jobs.values().cloned().collect()
     }
 
     /// Request cancellation. A `Queued` job cancels immediately; a
     /// `Running` job gets the flag and the scheduler honors it at the
     /// next step boundary (cooperative). Terminal jobs error.
     pub fn cancel(&self, id: u64) -> Result<Job> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock_inner();
         let Some(job) = inner.jobs.get_mut(&id) else { bail!("no job {id}") };
         match job.state {
             JobState::Queued => {
@@ -316,6 +615,12 @@ impl JobQueue {
         }
         let snap = job.clone();
         self.persist(&snap)?;
+        // cancelling the last live cell of a grid finishes the grid
+        if snap.state.terminal() {
+            if let Some(pid) = snap.parent {
+                self.maybe_finish_grid(&inner, pid)?;
+            }
+        }
         Ok(snap)
     }
 
@@ -323,7 +628,7 @@ impl JobQueue {
     /// continues from the exact step it stopped at (bit-identically, by
     /// the seed-replay property).
     pub fn resume(&self, id: u64) -> Result<Job> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock_inner();
         let Some(job) = inner.jobs.get_mut(&id) else { bail!("no job {id}") };
         match job.state {
             JobState::Cancelled | JobState::Failed => {
@@ -335,6 +640,11 @@ impl JobQueue {
         }
         let snap = job.clone();
         self.persist(&snap)?;
+        // a re-queued cell invalidates its grid's aggregate; the
+        // summary regenerates when the grid finishes again
+        if let Some(pid) = snap.parent {
+            let _ = std::fs::remove_file(self.summary_path(pid));
+        }
         drop(inner);
         self.ready.notify_all();
         Ok(snap)
@@ -345,11 +655,23 @@ impl JobQueue {
     /// priority level), then lowest id. The job transitions to
     /// `Running` and gets a fresh fairness stamp.
     pub fn next_runnable(&self) -> Option<Job> {
-        let mut inner = self.inner.lock().unwrap();
+        self.next_runnable_where(|_| true)
+    }
+
+    /// [`next_runnable`](JobQueue::next_runnable) restricted to the
+    /// given job ids — the targeted-drain primitive: a caller draining
+    /// one grid must not claim (and train against its own base)
+    /// unrelated jobs that happen to share the queue directory.
+    pub fn next_runnable_among(&self, ids: &[u64]) -> Option<Job> {
+        self.next_runnable_where(|id| ids.contains(&id))
+    }
+
+    fn next_runnable_where(&self, eligible: impl Fn(u64) -> bool) -> Option<Job> {
+        let mut inner = self.lock_inner();
         let pick = inner
             .jobs
             .values()
-            .filter(|j| j.state == JobState::Queued && !j.cancel_requested)
+            .filter(|j| j.state == JobState::Queued && !j.cancel_requested && eligible(j.id))
             .map(|j| (std::cmp::Reverse(j.spec.priority), j.last_scheduled, j.id))
             .min()?;
         let id = pick.2;
@@ -366,43 +688,41 @@ impl JobQueue {
     /// Whether cancellation was requested for `id` (the scheduler's
     /// per-step cooperative stop poll).
     pub fn cancel_requested(&self, id: u64) -> bool {
-        self.inner
-            .lock()
-            .unwrap()
-            .jobs
-            .get(&id)
-            .map(|j| j.cancel_requested)
-            .unwrap_or(true)
+        self.lock_inner().jobs.get(&id).map(|j| j.cancel_requested).unwrap_or(true)
     }
 
-    /// Record the outcome of one slice: updated progress plus the next
-    /// lifecycle state (back to `Queued` mid-run, or terminal). A
-    /// cancel that raced the end of the slice (requested after the
-    /// scheduler's in-slice check) is honored here instead of leaving
-    /// the job parked as unschedulable-but-unresumable
-    /// `Queued + cancel_requested`.
-    pub fn finish_slice(
-        &self,
-        id: u64,
-        steps_done: usize,
-        state: JobState,
-        error: Option<String>,
-        published: bool,
-    ) -> Result<Job> {
-        let mut inner = self.inner.lock().unwrap();
+    /// Record the outcome of one slice ([`SliceOutcome`]): updated
+    /// progress plus the next lifecycle state (back to `Queued`
+    /// mid-run, or terminal). A cancel that raced the end of the slice
+    /// (requested after the scheduler's in-slice check) is honored here
+    /// instead of leaving the job parked as
+    /// unschedulable-but-unresumable `Queued + cancel_requested`. A
+    /// terminal transition of a grid cell checks the parent: when it
+    /// was the last live cell, the grid summary is written.
+    pub fn finish_slice(&self, id: u64, outcome: SliceOutcome) -> Result<Job> {
+        let mut inner = self.lock_inner();
         let Some(job) = inner.jobs.get_mut(&id) else { bail!("no job {id}") };
-        job.steps_done = steps_done;
+        job.steps_done = outcome.steps_done;
         job.slices_run += 1;
-        job.state = if state == JobState::Queued && job.cancel_requested {
+        job.state = if outcome.state == JobState::Queued && job.cancel_requested {
             JobState::Cancelled
         } else {
-            state
+            outcome.state
         };
-        job.error = error;
-        job.published = published || job.published;
+        job.error = outcome.error;
+        job.published = outcome.published || job.published;
+        if outcome.last_loss.is_finite() {
+            job.last_loss = outcome.last_loss;
+        }
+        job.diverged = job.diverged || outcome.diverged;
         let requeued = job.state == JobState::Queued;
         let snap = job.clone();
         self.persist(&snap)?;
+        if snap.state.terminal() {
+            if let Some(pid) = snap.parent {
+                self.maybe_finish_grid(&inner, pid)?;
+            }
+        }
         drop(inner);
         if requeued {
             self.ready.notify_all();
@@ -412,20 +732,14 @@ impl JobQueue {
 
     /// Number of jobs in non-terminal states (queue depth gauge).
     pub fn active(&self) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .jobs
-            .values()
-            .filter(|j| !j.state.terminal())
-            .count()
+        self.lock_inner().jobs.values().filter(|j| !j.state.terminal()).count()
     }
 
     /// Block up to `timeout` for a runnable job to appear. Returns
     /// whether one exists (spurious wakeups surface as `false` and the
     /// scheduler loop just re-polls).
     pub fn wait_for_work(&self, timeout: Duration) -> bool {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock_inner();
         let has = |i: &Inner| {
             i.jobs
                 .values()
@@ -434,7 +748,10 @@ impl JobQueue {
         if has(&inner) {
             return true;
         }
-        let (inner, _) = self.ready.wait_timeout(inner, timeout).unwrap();
+        let (inner, _) = self
+            .ready
+            .wait_timeout(inner, timeout)
+            .unwrap_or_else(PoisonError::into_inner);
         has(&inner)
     }
 }
@@ -445,6 +762,21 @@ mod tests {
 
     fn spec(name: &str, priority: i64) -> JobSpec {
         JobSpec { name: name.into(), steps: 4, priority, ..JobSpec::default() }
+    }
+
+    /// A mid-run slice outcome: +`steps` done, back to the queue.
+    fn requeue(steps: usize) -> SliceOutcome {
+        SliceOutcome { steps_done: steps, ..SliceOutcome::default() }
+    }
+
+    /// A terminal slice outcome.
+    fn done(steps: usize, state: JobState) -> SliceOutcome {
+        SliceOutcome {
+            steps_done: steps,
+            state,
+            published: state == JobState::Completed,
+            ..SliceOutcome::default()
+        }
     }
 
     fn tmp_dir(tag: &str) -> PathBuf {
@@ -461,14 +793,187 @@ mod tests {
         // both high-priority jobs slice before the low one, round-robin
         let first = q.next_runnable().unwrap();
         assert_eq!(first.id, hi_a);
-        q.finish_slice(hi_a, 1, JobState::Queued, None, false).unwrap();
+        q.finish_slice(hi_a, requeue(1)).unwrap();
         let second = q.next_runnable().unwrap();
         assert_eq!(second.id, hi_b, "round-robin within the priority level");
-        q.finish_slice(hi_b, 1, JobState::Queued, None, false).unwrap();
+        q.finish_slice(hi_b, requeue(1)).unwrap();
         assert_eq!(q.next_runnable().unwrap().id, hi_a, "alternates, no starvation");
-        q.finish_slice(hi_a, 2, JobState::Completed, None, true).unwrap();
-        q.finish_slice(hi_b, 2, JobState::Completed, None, true).unwrap();
+        q.finish_slice(hi_a, done(2, JobState::Completed)).unwrap();
+        q.finish_slice(hi_b, done(2, JobState::Completed)).unwrap();
         assert_eq!(q.next_runnable().unwrap().id, low);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fairness_stamp_survives_reopen_then_alternates() {
+        // the round-robin stamp is a scheduler-clock value; if the
+        // clock restarted at zero on reopen, a restarted server would
+        // hand every slice to the never-scheduled job until its stamp
+        // caught up — or, worse, starve previously-waiting jobs whose
+        // stamps now look far in the future. The reload path restores
+        // the clock to max(last_scheduled), so same-priority jobs keep
+        // alternating across the restart.
+        let dir = tmp_dir("fair");
+        let (a, b) = {
+            let q = JobQueue::open(&dir).unwrap();
+            let a = q.submit(spec("a", 3)).unwrap();
+            let b = q.submit(spec("b", 3)).unwrap();
+            // "a" slices once (stamp 1), then the server dies
+            assert_eq!(q.next_runnable().unwrap().id, a);
+            q.finish_slice(a, requeue(1)).unwrap();
+            (a, b)
+        };
+        let q = JobQueue::open(&dir).unwrap();
+        // the waiting job goes first after the restart...
+        assert_eq!(q.next_runnable().unwrap().id, b, "reopen must not reset fairness");
+        q.finish_slice(b, requeue(1)).unwrap();
+        // ...and the pair keeps alternating (a fresh stamp is issued
+        // past the restored clock, not from zero)
+        assert_eq!(q.next_runnable().unwrap().id, a);
+        q.finish_slice(a, requeue(2)).unwrap();
+        assert_eq!(q.next_runnable().unwrap().id, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn poisoned_lock_still_serves_the_jobs_api() {
+        // one panic while holding the queue lock must not wedge every
+        // subsequent endpoint (the PR-4 guarantee that a panicking
+        // slice can't take the queue down extends to the lock itself)
+        let dir = tmp_dir("poison");
+        let q = JobQueue::open(&dir).unwrap();
+        let id = q.submit(spec("p", 0)).unwrap();
+        let poisoner = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = q.inner.lock().unwrap();
+            panic!("poisoning the queue lock");
+        }));
+        assert!(poisoner.is_err());
+        assert!(q.inner.is_poisoned(), "the panic above must have poisoned the mutex");
+        // every entry point recovers: list, pick, slice, cancel, resume
+        assert_eq!(q.list().len(), 1);
+        assert_eq!(q.next_runnable().unwrap().id, id);
+        q.finish_slice(id, requeue(1)).unwrap();
+        let j = q.cancel(id).unwrap();
+        assert_eq!(j.state, JobState::Cancelled);
+        q.resume(id).unwrap();
+        assert!(q.wait_for_work(Duration::from_millis(1)));
+        assert_eq!(q.active(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_fans_out_children_that_interleave() {
+        let dir = tmp_dir("grid_rr");
+        let q = JobQueue::open(&dir).unwrap();
+        let g = q
+            .submit_grid(GridSpec {
+                name: "g".into(),
+                lrs: vec![1e-4, 3e-4],
+                steps: 4,
+                ..GridSpec::default()
+            })
+            .unwrap();
+        assert_eq!(g.children.len(), 2);
+        assert!(q.has_grid(g.id));
+        assert!(!q.has_grid(g.children[0]));
+        assert_eq!(q.find_grid("g").unwrap().id, g.id);
+        // duplicate grid names are rejected (resume instead)
+        assert!(q
+            .submit_grid(GridSpec { name: "g".into(), steps: 4, ..GridSpec::default() })
+            .is_err());
+        // same-priority cells round-robin slice-by-slice
+        let first = q.next_runnable().unwrap();
+        assert_eq!(first.id, g.children[0]);
+        assert_eq!(first.parent, Some(g.id));
+        q.finish_slice(first.id, requeue(1)).unwrap();
+        assert_eq!(q.next_runnable().unwrap().id, g.children[1]);
+        q.finish_slice(g.children[1], requeue(1)).unwrap();
+        assert_eq!(q.next_runnable().unwrap().id, g.children[0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_cancel_resume_fan_out_and_summary_lands_on_all_terminal() {
+        let dir = tmp_dir("grid_fan");
+        let q = JobQueue::open(&dir).unwrap();
+        let g = q
+            .submit_grid(GridSpec {
+                name: "fan".into(),
+                lrs: vec![1e-4, 3e-4],
+                steps: 4,
+                ..GridSpec::default()
+            })
+            .unwrap();
+        // finish one cell; no summary yet (a cell is still live)
+        let first = q.next_runnable().unwrap();
+        q.finish_slice(
+            first.id,
+            SliceOutcome { last_loss: 0.5, ..done(4, JobState::Completed) },
+        )
+        .unwrap();
+        assert!(!q.summary_path(g.id).exists());
+        // parent cancel fans out to the one non-terminal cell...
+        assert_eq!(q.cancel_grid(g.id).unwrap(), 1);
+        // ...which makes every cell terminal -> the summary is written
+        let text = std::fs::read_to_string(q.summary_path(g.id)).unwrap();
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.req("completed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(doc.req("cancelled").unwrap().as_usize().unwrap(), 1);
+        let cells = doc.req("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].req("final_train_loss").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(
+            cells[1].req("final_train_loss").unwrap(),
+            &Json::Null,
+            "a never-run cell has no loss"
+        );
+        // derived parent state + counts
+        let st = q.grid_status(g.id).unwrap();
+        assert_eq!(st.req("state").unwrap().as_str().unwrap(), "cancelled");
+        assert_eq!(st.req("completed").unwrap().as_usize().unwrap(), 1);
+        assert!(matches!(st.req("summary_written").unwrap(), Json::Bool(true)));
+        // nothing cancellable remains
+        assert!(q.cancel_grid(g.id).is_err());
+        // parent resume re-queues the cancelled cell and drops the
+        // stale summary
+        assert_eq!(q.resume_grid(g.id).unwrap(), 1);
+        assert!(!q.summary_path(g.id).exists());
+        let st = q.grid_status(g.id).unwrap();
+        assert_eq!(st.req("state").unwrap().as_str().unwrap(), "queued");
+        // completed cells are not resumable -> nothing left to resume
+        q.finish_slice(q.next_runnable().unwrap().id, done(4, JobState::Completed)).unwrap();
+        assert!(q.summary_path(g.id).exists(), "summary regenerates on re-completion");
+        assert!(q.resume_grid(g.id).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_survives_reopen() {
+        let dir = tmp_dir("grid_reopen");
+        let (gid, children) = {
+            let q = JobQueue::open(&dir).unwrap();
+            let g = q
+                .submit_grid(GridSpec {
+                    name: "boot".into(),
+                    lrs: vec![1e-4, 3e-4],
+                    steps: 4,
+                    ..GridSpec::default()
+                })
+                .unwrap();
+            // one cell Running on disk at the "crash"
+            q.next_runnable().unwrap();
+            (g.id, g.children)
+        };
+        let q = JobQueue::open(&dir).unwrap();
+        let g = q.find_grid("boot").unwrap();
+        assert_eq!((g.id, g.children.clone()), (gid, children.clone()));
+        // the interrupted cell re-queued; parent state reflects it
+        let st = q.grid_status(gid).unwrap();
+        assert_eq!(st.req("state").unwrap().as_str().unwrap(), "queued");
+        assert_eq!(st.req("queued").unwrap().as_usize().unwrap(), 2);
+        // ids keep increasing past the grid's block
+        let next = q.submit(spec("after", 0)).unwrap();
+        assert!(next > gid && children.iter().all(|&c| next > c));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -516,13 +1021,13 @@ mod tests {
         let j = q.cancel(id).unwrap();
         assert_eq!(j.state, JobState::Running);
         assert!(q.cancel_requested(id));
-        q.finish_slice(id, 2, JobState::Cancelled, None, false).unwrap();
+        q.finish_slice(id, done(2, JobState::Cancelled)).unwrap();
         assert_eq!(q.get(id).unwrap().state, JobState::Cancelled);
         // a completed job cannot be resumed
-        let done = q.submit(spec("done", 0)).unwrap();
+        let finished = q.submit(spec("done", 0)).unwrap();
         q.next_runnable().unwrap();
-        q.finish_slice(done, 4, JobState::Completed, None, true).unwrap();
-        assert!(q.resume(done).is_err());
+        q.finish_slice(finished, done(4, JobState::Completed)).unwrap();
+        assert!(q.resume(finished).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -532,14 +1037,33 @@ mod tests {
         let q = JobQueue::open(&dir).unwrap();
         let id = q.submit(spec("rt", 2)).unwrap();
         q.next_runnable().unwrap();
-        let j =
-            q.finish_slice(id, 3, JobState::Failed, Some("diverged".into()), false).unwrap();
+        let j = q
+            .finish_slice(
+                id,
+                SliceOutcome {
+                    steps_done: 3,
+                    state: JobState::Failed,
+                    error: Some("diverged".into()),
+                    last_loss: 1.25,
+                    diverged: true,
+                    ..SliceOutcome::default()
+                },
+            )
+            .unwrap();
         let back = Job::from_json(&j.to_json()).unwrap();
         assert_eq!(back.id, j.id);
         assert_eq!(back.state, JobState::Failed);
         assert_eq!(back.error.as_deref(), Some("diverged"));
         assert_eq!(back.steps_done, 3);
         assert_eq!(back.slices_run, 1);
+        assert_eq!(back.last_loss.to_bits(), 1.25f64.to_bits());
+        assert!(back.diverged);
+        assert_eq!(back.parent, None);
+        // NaN loss crosses the state file as null and comes back NaN
+        let fresh = JobQueue::fresh_job(9, spec("nan", 0), Some(3));
+        let back = Job::from_json(&fresh.to_json()).unwrap();
+        assert!(back.last_loss.is_nan());
+        assert_eq!(back.parent, Some(3));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

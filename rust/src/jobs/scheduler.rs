@@ -39,7 +39,7 @@ use crate::runtime::ModelInfo;
 use crate::serve::{ServeEngine, SparseDelta};
 use crate::util::json::Json;
 
-use super::queue::{Job, JobQueue, JobState};
+use super::queue::{Job, JobQueue, JobState, SliceOutcome};
 
 /// Default steps per scheduler slice when a spec leaves `slice_steps` 0.
 pub const DEFAULT_SLICE_STEPS: usize = 25;
@@ -112,20 +112,32 @@ impl Scheduler {
         let Some(job) = self.queue.next_runnable() else {
             return false;
         };
-        let outcome = catch_unwind(AssertUnwindSafe(|| self.slice_job(&job, server_stop)));
-        let (steps_done, state, error, published) = match outcome {
-            Ok(Ok(result)) => result,
-            Ok(Err(e)) => (job.steps_done, JobState::Failed, Some(format!("{e:#}")), false),
+        self.run_claimed_slice(job, server_stop);
+        true
+    }
+
+    /// Run one slice of an already-claimed (`Running`) job and record
+    /// its outcome.
+    fn run_claimed_slice(&self, job: Job, server_stop: Option<&AtomicBool>) {
+        let result = catch_unwind(AssertUnwindSafe(|| self.slice_job(&job, server_stop)));
+        let failed = |error: String| SliceOutcome {
+            steps_done: job.steps_done,
+            state: JobState::Failed,
+            error: Some(error),
+            ..SliceOutcome::default()
+        };
+        let outcome = match result {
+            Ok(Ok(outcome)) => outcome,
+            Ok(Err(e)) => failed(format!("{e:#}")),
             Err(payload) => {
                 let msg = crate::util::panic_message(&*payload);
-                (job.steps_done, JobState::Failed, Some(format!("slice panicked: {msg}")), false)
+                failed(format!("slice panicked: {msg}"))
             }
         };
-        if let Some(e) = &error {
+        if let Some(e) = &outcome.error {
             crate::info!("[jobs] job {} '{}' failed: {e}", job.id, job.spec.name);
         }
-        let _ = self.queue.finish_slice(job.id, steps_done, state, error, published);
-        true
+        let _ = self.queue.finish_slice(job.id, outcome);
     }
 
     /// Run slices until the queue has nothing runnable; returns the
@@ -134,6 +146,21 @@ impl Scheduler {
     pub fn run_until_idle(&self) -> usize {
         let mut slices = 0;
         while self.run_one_slice() {
+            slices += 1;
+        }
+        slices
+    }
+
+    /// Run slices of the given jobs only, until none of them is
+    /// runnable; returns the number of slices executed. The targeted
+    /// drain `sweep_via_queue` uses: other jobs sharing the queue
+    /// directory are left untouched — claiming them here would train
+    /// them against *this* scheduler's base, corrupting their
+    /// journals' `init_fnv` and published deltas.
+    pub fn drain_jobs(&self, ids: &[u64]) -> usize {
+        let mut slices = 0;
+        while let Some(job) = self.queue.next_runnable_among(ids) {
+            self.run_claimed_slice(job, None);
             slices += 1;
         }
         slices
@@ -183,16 +210,13 @@ impl Scheduler {
 
     /// The fallible slice body: resolve config, restore state, advance
     /// one slice, checkpoint, and decide the next lifecycle state.
-    /// Returns `(steps_done, next_state, error, published)`.
-    fn slice_job(
-        &self,
-        job: &Job,
-        server_stop: Option<&AtomicBool>,
-    ) -> Result<(usize, JobState, Option<String>, bool)> {
+    fn slice_job(&self, job: &Job, server_stop: Option<&AtomicBool>) -> Result<SliceOutcome> {
         let spec = &job.spec;
         let model: ModelInfo = self.engine.model().clone();
         let cfg = spec.train_config(&model.name)?;
-        let dataset = self.dataset_for(&spec.task, cfg.seed)?;
+        // the dataset seed can differ from the run seed (grid cells
+        // must train on the exact batches the serial sweep saw)
+        let dataset = self.dataset_for(&spec.task, spec.dataset_seed())?;
         let journal = self.queue.journal_path(job.id);
         let mut trainer =
             DpTrainer::new(self.engine.runtime(), &self.engine.pool, cfg.clone())
@@ -237,22 +261,29 @@ impl Scheduler {
             report.last_loss
         );
 
+        let outcome = |st: JobState, error: Option<String>, published: bool| SliceOutcome {
+            steps_done: state.step,
+            state: st,
+            error,
+            published,
+            last_loss: report.last_loss as f64,
+            diverged: report.diverged,
+        };
         if report.diverged {
-            return Ok((
-                state.step,
+            return Ok(outcome(
                 JobState::Failed,
                 Some(format!("diverged at step {}", state.step)),
                 false,
             ));
         }
         if self.queue.cancel_requested(job.id) {
-            return Ok((state.step, JobState::Cancelled, None, false));
+            return Ok(outcome(JobState::Cancelled, None, false));
         }
         if report.done {
             self.publish(job, &model, &self.base, &state, &cfg)?;
-            return Ok((state.step, JobState::Completed, None, true));
+            return Ok(outcome(JobState::Completed, None, true));
         }
-        Ok((state.step, JobState::Queued, None, false))
+        Ok(outcome(JobState::Queued, None, false))
     }
 
     /// Fast resume: the slice checkpoint, accepted only when it matches

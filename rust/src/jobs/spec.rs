@@ -37,6 +37,11 @@ pub struct JobSpec {
     pub mask_refresh: usize,
     /// data + noise seed
     pub seed: u64,
+    /// dataset seed override (None = `seed`). The repro harness pins
+    /// its tables' dataset seed independently of the run seed, and a
+    /// grid cell must train on the exact batches the serial sweep saw
+    /// for its results to be bit-comparable.
+    pub data_seed: Option<u64>,
     /// learning-rate override (None = task/optimizer preset)
     pub lr: Option<f32>,
     /// perturbation-scale override
@@ -57,6 +62,7 @@ impl Default for JobSpec {
             slice_steps: 0,
             mask_refresh: 0,
             seed: 42,
+            data_seed: None,
             lr: None,
             eps: None,
             sparsity: None,
@@ -93,6 +99,12 @@ impl JobSpec {
             );
         }
         Ok(())
+    }
+
+    /// The seed the job's dataset is generated from (`data_seed`
+    /// override, else the run seed).
+    pub fn dataset_seed(&self) -> u64 {
+        self.data_seed.unwrap_or(self.seed)
     }
 
     /// Resolve the fully-validated [`TrainConfig`] this job trains under:
@@ -133,6 +145,9 @@ impl JobSpec {
             ("mask_refresh", Json::Num(self.mask_refresh as f64)),
             ("seed", Json::Num(self.seed as f64)),
         ];
+        if let Some(ds) = self.data_seed {
+            fields.push(("data_seed", Json::Num(ds as f64)));
+        }
         if let Some(lr) = self.lr {
             fields.push(("lr", Json::Num(lr as f64)));
         }
@@ -177,6 +192,9 @@ impl JobSpec {
         if let Some(v) = doc.get("seed") {
             spec.seed = v.as_f64()? as u64;
         }
+        if let Some(v) = doc.get("data_seed") {
+            spec.data_seed = Some(v.as_f64()? as u64);
+        }
         if let Some(v) = doc.get("lr") {
             spec.lr = Some(v.as_f64()? as f32);
         }
@@ -208,6 +226,7 @@ mod tests {
         s.mask_refresh = 3;
         s.lr = Some(2.5e-4);
         s.sparsity = Some(0.6);
+        s.data_seed = Some(1234);
         let back = JobSpec::from_json(&s.to_json()).unwrap();
         assert_eq!(back.name, s.name);
         assert_eq!(back.priority, -3);
@@ -217,6 +236,9 @@ mod tests {
         assert_eq!(back.lr.unwrap().to_bits(), s.lr.unwrap().to_bits());
         assert_eq!(back.sparsity.unwrap().to_bits(), s.sparsity.unwrap().to_bits());
         assert!(back.eps.is_none());
+        assert_eq!(back.data_seed, Some(1234));
+        assert_eq!(back.dataset_seed(), 1234);
+        assert_eq!(spec("d").dataset_seed(), 42, "data_seed defaults to the run seed");
     }
 
     #[test]

@@ -30,7 +30,7 @@ use sparse_mezo::coordinator::trainer::{in_context, zero_shot, Trainer};
 use sparse_mezo::coordinator::report::Table;
 use sparse_mezo::data::tasks;
 use sparse_mezo::info;
-use sparse_mezo::jobs::{JobQueue, JobSpec, Scheduler};
+use sparse_mezo::jobs::{GridSpec, JobQueue, JobSpec, Scheduler};
 use sparse_mezo::parallel::{DpTrainer, WorkerPool};
 use sparse_mezo::runtime::Runtime;
 use sparse_mezo::serve::{http, ServeEngine};
@@ -59,7 +59,11 @@ COMMANDS
   probe           --model M --task T --optimizer O [--steps N]
   repro           <table1|table2|table3|table4|table5|table10|table11|
                    table13|fig1|fig2a|fig2b|fig2c|fig3|fig4|all>
-                  [--model M --out DIR --zo-steps N --seeds a,b --fast]
+                  [--model M --out DIR --zo-steps N --seeds a,b --fast
+                  --via-queue DIR]
+                  (--via-queue routes sweep-driven tables through the
+                  persistent job queue in DIR: a killed table resumes
+                  from its cells' step journals, bit-identical)
   serve           --model M [--port P --workers N --max-batch R
                   --flush-ms MS --max-adapters K --adapter-budget BYTES
                   --seed S --init-from CKPT --config FILE.toml
@@ -69,12 +73,18 @@ COMMANDS
                   journals relative to the server's base parameters.
                   With --jobs-dir, /v1/jobs accepts fine-tuning jobs
                   that train in the background and auto-publish)
-  jobs            <submit|list|show|cancel|resume|drain> --jobs-dir DIR
+  jobs            <submit|submit-grid|list|show|cancel|resume|drain>
+                  --jobs-dir DIR
                   submit: --name A [--task T --optimizer O --steps N
                           --workers W --priority P --slice-steps K
-                          --mask-refresh R --seed S --lr X --eps X
-                          --sparsity X]
-                  show|cancel|resume: --id N
+                          --mask-refresh R --seed S --data-seed D
+                          --lr X --eps X --sparsity X]
+                  submit-grid: --name G [--tasks a,b --optimizers x,y
+                          --lrs a,b --epss a,b --sparsities a,b
+                          + the submit knobs] — fan one spec out to
+                  N queued cells; cancel/resume on the grid id fan out,
+                  and grid-<id>.summary.json aggregates cell results
+                  show|cancel|resume: --id N (job or grid id)
                   drain:  [--model M --workers N --seed S
                           --init-from CKPT] — run queued jobs to
                   completion in-process, publishing adapters
@@ -366,6 +376,8 @@ fn cmd_repro(args: &Args, artifacts: &PathBuf) -> Result<()> {
         ctx.eval_cap = 100;
         ctx.pretrain_steps = 300;
     }
+    ctx.via_queue = args.get("via-queue").map(PathBuf::from);
+    ctx.artifacts = artifacts.clone();
     let model = args.str_or("model", "llama_tiny");
     let t0 = std::time::Instant::now();
     experiments::run(&ctx, what, &model)?;
@@ -434,7 +446,9 @@ fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
         .positionals
         .get(1)
         .map(|s| s.as_str())
-        .ok_or_else(|| anyhow::anyhow!("jobs needs an action: submit|list|show|cancel|resume|drain"))?;
+        .ok_or_else(|| {
+            anyhow::anyhow!("jobs needs an action: submit|submit-grid|list|show|cancel|resume|drain")
+        })?;
     let dir = PathBuf::from(args.str_or("jobs-dir", "jobs"));
     let queue = Arc::new(JobQueue::open(&dir)?);
     match action {
@@ -452,12 +466,41 @@ fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
                 slice_steps: args.usize_or("slice-steps", 0)?,
                 mask_refresh: args.usize_or("mask-refresh", 0)?,
                 seed: args.u64_or("seed", 42)?,
+                data_seed: args.get("data-seed").map(|_| args.u64_or("data-seed", 0)).transpose()?,
                 lr: args.get("lr").map(|_| args.f32_or("lr", 0.0)).transpose()?,
                 eps: args.get("eps").map(|_| args.f32_or("eps", 0.0)).transpose()?,
                 sparsity: args.get("sparsity").map(|_| args.f32_or("sparsity", 0.0)).transpose()?,
             };
             let id = queue.submit(spec)?;
             println!("{}", queue.get(id)?.to_json().to_string());
+        }
+        "submit-grid" => {
+            let axis = |key: &str| -> Result<Vec<f64>> {
+                args.list_or(key, &[])
+                    .iter()
+                    .map(|s| s.parse().with_context(|| format!("parsing --{key}")))
+                    .collect()
+            };
+            let spec = GridSpec {
+                name: args
+                    .get("name")
+                    .map(String::from)
+                    .ok_or_else(|| anyhow::anyhow!("jobs submit-grid needs --name"))?,
+                tasks: args.list_or("tasks", &["rte"]),
+                optimizers: args.list_or("optimizers", &["smezo"]),
+                lrs: axis("lrs")?,
+                epss: axis("epss")?,
+                sparsities: axis("sparsities")?,
+                steps: args.usize_or("steps", 100)?,
+                workers: args.workers_or(1)?,
+                priority: args.i64_or("priority", 0)?,
+                slice_steps: args.usize_or("slice-steps", 0)?,
+                mask_refresh: args.usize_or("mask-refresh", 0)?,
+                seed: args.u64_or("seed", 42)?,
+                data_seed: args.get("data-seed").map(|_| args.u64_or("data-seed", 0)).transpose()?,
+            };
+            let grid = queue.submit_grid(spec)?;
+            println!("{}", queue.grid_status(grid.id)?.to_string());
         }
         "list" => {
             println!("{:>4}  {:<10}  {:<24}  {:>12}  {:>8}", "id", "state", "name", "steps", "prio");
@@ -473,20 +516,49 @@ fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
                     job.error.as_ref().map(|e| format!("  ({e})")).unwrap_or_default()
                 );
             }
+            for grid in queue.grids() {
+                let st = queue.grid_status(grid.id)?;
+                println!(
+                    "{:>4}  {:<10}  {:<24}  {:>5} cells  {:>8}  (grid)",
+                    grid.id,
+                    st.req("state")?.as_str()?,
+                    grid.spec.name,
+                    grid.children.len(),
+                    grid.spec.priority,
+                );
+            }
         }
         "show" => {
             let id = args.u64_or("id", 0)?;
-            println!("{}", queue.get(id)?.to_json().to_string());
+            if queue.has_grid(id) {
+                println!("{}", queue.grid_status(id)?.to_string());
+            } else {
+                println!("{}", queue.get(id)?.to_json().to_string());
+            }
         }
         "cancel" => {
             let id = args.u64_or("id", 0)?;
-            let job = queue.cancel(id)?;
-            info!("job {id} -> {} (cancel_requested {})", job.state.as_str(), job.cancel_requested);
+            if queue.has_grid(id) {
+                let n = queue.cancel_grid(id)?;
+                info!("grid {id}: cancel fanned out to {n} cell(s)");
+            } else {
+                let job = queue.cancel(id)?;
+                info!(
+                    "job {id} -> {} (cancel_requested {})",
+                    job.state.as_str(),
+                    job.cancel_requested
+                );
+            }
         }
         "resume" => {
             let id = args.u64_or("id", 0)?;
-            let job = queue.resume(id)?;
-            info!("job {id} -> {}", job.state.as_str());
+            if queue.has_grid(id) {
+                let n = queue.resume_grid(id)?;
+                info!("grid {id}: resumed {n} cell(s)");
+            } else {
+                let job = queue.resume(id)?;
+                info!("job {id} -> {}", job.state.as_str());
+            }
         }
         "drain" => {
             // run every queued job to completion in-process: the same
@@ -522,7 +594,9 @@ fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
                 );
             }
         }
-        other => anyhow::bail!("unknown jobs action '{other}' (submit|list|show|cancel|resume|drain)"),
+        other => anyhow::bail!(
+            "unknown jobs action '{other}' (submit|submit-grid|list|show|cancel|resume|drain)"
+        ),
     }
     Ok(())
 }

@@ -13,13 +13,16 @@
 //! | `POST /v1/adapters`          | register: `{"name", "journal": path}` replays a step journal against the base and extracts the delta under its mask-union certificate; `{"name", "delta": path}` loads a saved `.adapter` file |
 //! | `POST /v1/classify`          | `{"adapter", "prompts": [[tok,...],...]}` → per-row logits + candidate-free argmax, micro-batched with concurrent same-adapter requests; the adapter is pinned against eviction while the request is in flight |
 //! | `POST /v1/jobs`              | submit a fine-tuning job ([`JobSpec`](crate::jobs::JobSpec) JSON) |
-//! | `GET  /v1/jobs`              | list jobs (id, state, progress) |
-//! | `GET  /v1/jobs/{id}`         | one job's full state |
-//! | `POST /v1/jobs/{id}/cancel`  | request cancellation (honored at the next step boundary) |
-//! | `POST /v1/jobs/{id}/resume`  | re-queue a cancelled/failed job (continues bit-identically from its journal) |
+//! | `POST /v1/jobs/grid`         | submit a sweep grid ([`GridSpec`](crate::jobs::GridSpec) JSON) — fans out to N queued cells, answers the parent status |
+//! | `GET  /v1/jobs`              | list jobs (id, state, progress) and grid parents |
+//! | `GET  /v1/jobs/{id}`         | one job's full state, or a grid parent's derived status |
+//! | `POST /v1/jobs/{id}/cancel`  | request cancellation (honored at the next step boundary); on a grid parent, fans out to every non-terminal cell |
+//! | `POST /v1/jobs/{id}/resume`  | re-queue a cancelled/failed job (continues bit-identically from its journal); on a grid parent, fans out to every resumable cell |
 //!
 //! The `/v1/jobs` family answers 400 with an explanatory error when the
-//! server was started without a jobs directory.
+//! server was started without a jobs directory. A request declaring a
+//! `Content-Length` above [`MAX_BODY_BYTES`] is answered `413` before
+//! any body byte is read or buffered.
 //!
 //! Logits cross the wire losslessly: `f32 → f64` is exact, the JSON
 //! writer emits shortest round-trip decimal for f64, and the client
@@ -50,7 +53,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::jobs::{JobQueue, JobSpec, Scheduler};
+use crate::jobs::{GridSpec, JobQueue, JobSpec, Scheduler};
 use crate::util::json::{self, Json};
 
 use super::batching::ServeEngine;
@@ -61,6 +64,13 @@ use super::delta::SparseDelta;
 /// keeps a polling storm from exhausting threads.
 pub const MAX_CONNECTIONS: usize = 64;
 
+/// Cap on an HTTP message body, both directions. A request declaring
+/// more than this is rejected with `413` *before* any body byte is
+/// read or buffered — a malformed or hostile `Content-Length` must not
+/// be able to park the read loop on a gigabyte promise — and the
+/// clients refuse to buffer responses past the same bound.
+pub const MAX_BODY_BYTES: usize = 64 << 20;
+
 /// A parsed inbound request.
 struct Request {
     method: String,
@@ -68,6 +78,19 @@ struct Request {
     body: String,
     /// connection persists after this request (HTTP/1.1 default)
     keep_alive: bool,
+}
+
+/// A request-read failure carrying the HTTP status it should answer
+/// with (400 for malformed bytes, 413 for an oversized body claim).
+struct HttpError {
+    status: u16,
+    err: anyhow::Error,
+}
+
+impl From<anyhow::Error> for HttpError {
+    fn from(err: anyhow::Error) -> HttpError {
+        HttpError { status: 400, err }
+    }
 }
 
 /// Counting semaphore for live connections (std has no Semaphore).
@@ -258,7 +281,9 @@ fn handle_connection(engine: &ServeEngine, mut stream: TcpStream, stop: &AtomicB
             Ok(Some(req)) => req,
             Ok(None) => break, // clean close (or idle timeout) between requests
             Err(e) => {
-                let _ = write_response(&mut stream, 400, &error_json(&e), false);
+                // 400 or 413; either way the connection closes (an
+                // unread or malformed body cannot be resynchronized)
+                let _ = write_response(&mut stream, e.status, &error_json(&e.err), false);
                 break;
             }
         };
@@ -293,6 +318,10 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, Json) {
             Err(ClassifyError::Bad(e)) => (400, error_json(&e)),
         },
         ("POST", "/v1/jobs") => match post_job(engine, &req.body) {
+            Ok(body) => (200, body),
+            Err(e) => (400, error_json(&e)),
+        },
+        ("POST", "/v1/jobs/grid") => match post_grid(engine, &req.body) {
             Ok(body) => (200, body),
             Err(e) => (400, error_json(&e)),
         },
@@ -402,16 +431,35 @@ fn post_job(engine: &ServeEngine, body: &str) -> Result<Json> {
     Ok(queue.get(id)?.to_json())
 }
 
-/// `GET /v1/jobs`: every job, id order.
+/// `POST /v1/jobs/grid`: submit a sweep grid — one spec fanning out to
+/// N queued cells. Answers the parent status (id, derived state, child
+/// rows).
+fn post_grid(engine: &ServeEngine, body: &str) -> Result<Json> {
+    let queue = jobs_queue(engine)?;
+    let spec = GridSpec::from_json(&json::parse(body).context("request body")?)?;
+    let grid = queue.submit_grid(spec)?;
+    queue.grid_status(grid.id)
+}
+
+/// `GET /v1/jobs`: every job (id order) and every grid parent.
 fn list_jobs(engine: &ServeEngine) -> Result<Json> {
     let queue = jobs_queue(engine)?;
+    let grids = queue
+        .grids()
+        .iter()
+        .map(|g| queue.grid_status(g.id))
+        .collect::<Result<Vec<Json>>>()?;
     Ok(Json::obj(vec![
         ("jobs", Json::Arr(queue.list().iter().map(|j| j.to_json()).collect())),
+        ("grids", Json::Arr(grids)),
         ("active", Json::Num(queue.active() as f64)),
     ]))
 }
 
-/// `/v1/jobs/{id}` and `/v1/jobs/{id}/{cancel|resume}`.
+/// `/v1/jobs/{id}` and `/v1/jobs/{id}/{cancel|resume}` — `id` may name
+/// a plain job or a grid parent; grid cancel/resume fan out to the
+/// non-terminal (resp. resumable) children and answer the parent
+/// status.
 fn job_item(engine: &ServeEngine, method: &str, path: &str) -> (u16, Json) {
     let queue = match jobs_queue(engine) {
         Ok(q) => q,
@@ -427,14 +475,22 @@ fn job_item(engine: &ServeEngine, method: &str, path: &str) -> (u16, Json) {
     if segments.next().is_some() {
         return (404, error_json(&anyhow!("no route {method} {path}")));
     }
-    let result = match (method, action) {
-        ("GET", None) => queue.get(id),
-        ("POST", Some("cancel")) => queue.cancel(id),
-        ("POST", Some("resume")) => queue.resume(id),
+    let is_grid = queue.has_grid(id);
+    let result = match (method, action, is_grid) {
+        ("GET", None, false) => queue.get(id).map(|j| j.to_json()),
+        ("GET", None, true) => queue.grid_status(id),
+        ("POST", Some("cancel"), false) => queue.cancel(id).map(|j| j.to_json()),
+        ("POST", Some("cancel"), true) => {
+            queue.cancel_grid(id).and_then(|_| queue.grid_status(id))
+        }
+        ("POST", Some("resume"), false) => queue.resume(id).map(|j| j.to_json()),
+        ("POST", Some("resume"), true) => {
+            queue.resume_grid(id).and_then(|_| queue.grid_status(id))
+        }
         _ => return (404, error_json(&anyhow!("no route {method} {path}"))),
     };
     match result {
-        Ok(job) => (200, job.to_json()),
+        Ok(body) => (200, body),
         Err(e) if format!("{e:#}").contains("no job") => (404, error_json(&e)),
         Err(e) => (400, error_json(&e)),
     }
@@ -551,8 +607,11 @@ fn read_until_len(stream: &mut TcpStream, buf: &mut Vec<u8>, total: usize) -> Re
 
 /// Read one request out of the connection buffer (refilling from the
 /// stream as needed), leaving any pipelined bytes for the next call.
-/// `Ok(None)` = the peer closed cleanly between requests.
-fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Option<Request>> {
+/// `Ok(None)` = the peer closed cleanly between requests. The error
+/// carries the status to answer with: `413` when the declared body
+/// exceeds [`MAX_BODY_BYTES`] (detected before reading or buffering a
+/// single body byte), `400` for anything malformed.
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Option<Request>, HttpError> {
     let Some(header_end) = read_head(stream, buf)? else {
         return Ok(None);
     };
@@ -580,8 +639,13 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<Option<Requ
             }
         }
     }
-    if content_length > (64 << 20) {
-        bail!("request body too large ({content_length} bytes)");
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError {
+            status: 413,
+            err: anyhow!(
+                "request body too large ({content_length} bytes, cap {MAX_BODY_BYTES})"
+            ),
+        });
     }
     let body_start = header_end + 4;
     read_until_len(stream, buf, body_start + content_length)?;
@@ -597,6 +661,7 @@ fn status_text(status: u16) -> &'static str {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        413 => "Payload Too Large",
         _ => "Internal Server Error",
     }
 }
@@ -667,6 +732,9 @@ impl LoopbackClient {
                 }
             }
         }
+        if content_length > MAX_BODY_BYTES {
+            bail!("response body too large ({content_length} bytes, cap {MAX_BODY_BYTES})");
+        }
         let body_start = header_end + 4;
         read_until_len(&mut self.stream, &mut self.buf, body_start + content_length)?;
         let body_text =
@@ -702,7 +770,8 @@ pub fn loopback_request(
     stream.write_all(payload.as_bytes())?;
     stream.flush()?;
     let mut raw = Vec::new();
-    stream.read_to_end(&mut raw)?;
+    // bounded read: headers + at most MAX_BODY_BYTES of body
+    stream.take((MAX_BODY_BYTES + (1 << 20)) as u64).read_to_end(&mut raw)?;
     let header_end =
         find_subslice(&raw, b"\r\n\r\n").ok_or_else(|| anyhow!("malformed response"))?;
     let head = std::str::from_utf8(&raw[..header_end])?;

@@ -20,11 +20,12 @@
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
-use sparse_mezo::config::ServeConfig;
+use sparse_mezo::config::{ServeConfig, TrainConfig};
+use sparse_mezo::coordinator::sweep::{self, SweepAxis};
 use sparse_mezo::data::batcher::pad_prompt;
 use sparse_mezo::data::tasks;
-use sparse_mezo::jobs::{JobQueue, JobSpec, JobState, Scheduler};
-use sparse_mezo::parallel::{DpTrainer, WorkerPool};
+use sparse_mezo::jobs::{GridSpec, JobQueue, JobSpec, JobState, Scheduler};
+use sparse_mezo::parallel::{protocol, DpTrainer, WorkerPool};
 use sparse_mezo::runtime::exec::InitExec;
 use sparse_mezo::runtime::{ModelInfo, Runtime};
 use sparse_mezo::serve::http::{self, loopback_request, LoopbackClient};
@@ -62,7 +63,7 @@ fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
 fn uninterrupted(spec: &JobSpec, base: &[f32]) -> Vec<f32> {
     let m = model();
     let cfg = spec.train_config("llama_tiny").unwrap();
-    let dataset = tasks::generate(&spec.task, cfg.seed).unwrap();
+    let dataset = tasks::generate(&spec.task, spec.dataset_seed()).unwrap();
     let pool = WorkerPool::new(cfg.workers);
     let mut t = DpTrainer::new(rt(), &pool, cfg);
     t.eval_test = false;
@@ -474,4 +475,260 @@ fn jobs_api_disabled_without_queue() {
     assert_eq!(code, 200);
     assert_eq!(body.req("jobs_enabled").unwrap(), &Json::Bool(false));
     running.shutdown();
+}
+
+#[test]
+fn grid_cells_bit_identical_to_serial_sweep_with_kill_and_resume() {
+    // the tentpole contract: a sweep grid routed through the queue —
+    // including an orchestrator kill between slices — produces per-cell
+    // final losses and parameters bit-identical to the in-process
+    // serial sweep of the same grid
+    let m = model();
+    let base = base_params(&m);
+    let dir = tmp_dir("grid");
+    let ds = tasks::generate("rte", 1234).unwrap();
+
+    let mut cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
+    cfg.steps = 6;
+    cfg.eval_every = 0;
+    cfg.eval_cap = 0;
+    cfg.seed = 11;
+    let grid = [1e-4, 3e-4];
+    let pool = WorkerPool::new(2);
+    let serial =
+        sweep::sweep(rt(), &pool, &cfg, &ds, SweepAxis::LearningRate, &grid, Some(&base))
+            .unwrap();
+
+    let scfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let g = {
+        let queue = Arc::new(JobQueue::open(&dir).unwrap());
+        let g = queue
+            .submit_grid(GridSpec {
+                name: "fig".into(),
+                tasks: vec!["rte".into()],
+                optimizers: vec!["smezo".into()],
+                lrs: grid.to_vec(),
+                epss: vec![cfg.hypers.eps as f64],
+                sparsities: vec![cfg.hypers.sparsity as f64],
+                steps: 6,
+                slice_steps: 2,
+                seed: 11,
+                data_seed: Some(1234),
+                ..GridSpec::default()
+            })
+            .unwrap();
+        let engine = Arc::new(
+            ServeEngine::new(Runtime::native(), &scfg, base.clone())
+                .unwrap()
+                .with_jobs(Arc::clone(&queue), 2),
+        );
+        let scheduler = Scheduler::new(engine, Arc::clone(&queue), 2);
+        // three slices in (cells interleaving round-robin), kill the
+        // orchestrator: nothing survives but the queue directory
+        for _ in 0..3 {
+            assert!(scheduler.run_one_slice());
+        }
+        g
+    };
+
+    // restart and drain to completion
+    let queue = Arc::new(JobQueue::open(&dir).unwrap());
+    let engine = Arc::new(
+        ServeEngine::new(Runtime::native(), &scfg, base.clone())
+            .unwrap()
+            .with_jobs(Arc::clone(&queue), 2),
+    );
+    let scheduler = Scheduler::new(engine, Arc::clone(&queue), 2);
+    scheduler.run_until_idle();
+
+    // the summary rows equal the serial sweep's rows bit for bit
+    let text = std::fs::read_to_string(queue.summary_path(g.id)).unwrap();
+    let doc = sparse_mezo::util::json::parse(&text).unwrap();
+    let rows = doc.req("cells").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), serial.len());
+    for (row, cell) in rows.iter().zip(&serial) {
+        assert_eq!(row.req("state").unwrap().as_str().unwrap(), "completed");
+        assert!(matches!(row.req("diverged").unwrap(), Json::Bool(false)));
+        let loss = row.req("final_train_loss").unwrap().as_f64().unwrap();
+        assert_eq!(
+            loss.to_bits(),
+            cell.final_train_loss.to_bits(),
+            "cell lr {}: grid loss {} vs serial {}",
+            cell.value,
+            loss,
+            cell.final_train_loss
+        );
+    }
+
+    // each cell's journal replays to the bit-exact parameters of an
+    // uninterrupted run of the same spec
+    for (i, &cid) in g.children.iter().enumerate() {
+        let job = queue.get(cid).unwrap();
+        assert_eq!(job.state, JobState::Completed, "{job:?}");
+        let expected = uninterrupted(&job.spec, &base);
+        let child_cfg = job.spec.train_config("llama_tiny").unwrap();
+        let (header, records) = protocol::load_journal(&queue.journal_path(cid)).unwrap();
+        let outcome =
+            protocol::replay_full(rt(), &m, &child_cfg, &header, &base, &records).unwrap();
+        assert_bits_eq(&outcome.params, &expected, &format!("grid cell {i}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_via_queue_matches_serial_sweep_and_resumes_by_name() {
+    // the repro-harness entry point: same cells as the serial sweep
+    // (losses + accuracies bitwise), and a second call finds the grid
+    // by name instead of retraining
+    let m = model();
+    let base = base_params(&m);
+    let dir = tmp_dir("viaq");
+    let ds = tasks::generate("rte", 1234).unwrap();
+
+    let mut cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
+    cfg.steps = 4;
+    cfg.eval_every = 0;
+    cfg.eval_cap = 0;
+    cfg.seed = 11;
+    let grid = [1e-4, 3e-4];
+    let pool = WorkerPool::new(2);
+    let serial =
+        sweep::sweep(rt(), &pool, &cfg, &ds, SweepAxis::LearningRate, &grid, Some(&base))
+            .unwrap();
+    let via = sweep::sweep_via_queue(
+        rt(),
+        Runtime::native(),
+        &cfg,
+        SweepAxis::LearningRate,
+        &grid,
+        &base,
+        &dir,
+        "via",
+        1234,
+    )
+    .unwrap();
+    assert_eq!(serial.len(), via.len());
+    for (s, v) in serial.iter().zip(&via) {
+        assert_eq!(s.value, v.value);
+        assert_eq!(
+            s.final_train_loss.to_bits(),
+            v.final_train_loss.to_bits(),
+            "lr {}",
+            s.value
+        );
+        assert_eq!(s.diverged, v.diverged);
+        assert_eq!(
+            s.test_accuracy.unwrap(),
+            v.test_accuracy.unwrap(),
+            "test accuracy must be identical (identical params, identical eval)"
+        );
+    }
+    // the cells are already terminal: the rerun resumes (0 new slices)
+    // and rebuilds identical rows from the journals
+    let again = sweep::sweep_via_queue(
+        rt(),
+        Runtime::native(),
+        &cfg,
+        SweepAxis::LearningRate,
+        &grid,
+        &base,
+        &dir,
+        "via",
+        1234,
+    )
+    .unwrap();
+    for (a, b) in via.iter().zip(&again) {
+        assert_eq!(a.final_train_loss.to_bits(), b.final_train_loss.to_bits());
+        assert_eq!(a.test_accuracy.unwrap(), b.test_accuracy.unwrap());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn http_grid_submit_poll_cancel_over_the_wire() {
+    // grid lifecycle entirely over HTTP: POST /v1/jobs/grid fans out,
+    // the parent status polls to completion, the summary lands on
+    // disk; a second grid cancels through its parent id
+    let base = base_params(&model());
+    let dir = tmp_dir("http_grid");
+    let queue = Arc::new(JobQueue::open(&dir).unwrap());
+    let scfg = ServeConfig { workers: 2, flush_ms: 1, ..ServeConfig::default() };
+    let engine = Arc::new(
+        ServeEngine::new(Runtime::native(), &scfg, base.clone())
+            .unwrap()
+            .with_jobs(Arc::clone(&queue), 2),
+    );
+    let running = http::serve(engine, 0).unwrap();
+    let mut client = LoopbackClient::connect(running.addr).unwrap();
+
+    let gspec = GridSpec {
+        name: "wire".into(),
+        lrs: vec![1e-4, 3e-4],
+        steps: 4,
+        slice_steps: 2,
+        seed: 11,
+        ..GridSpec::default()
+    };
+    let (code, body) = client.request("POST", "/v1/jobs/grid", Some(&gspec.to_json())).unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    assert_eq!(body.req("grid").unwrap(), &Json::Bool(true));
+    assert_eq!(body.req("cells").unwrap().as_usize().unwrap(), 2);
+    let gid = body.req("id").unwrap().as_usize().unwrap();
+
+    // poll the parent until the background scheduler finishes both cells
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    loop {
+        let (code, st) = client.request("GET", &format!("/v1/jobs/{gid}"), None).unwrap();
+        assert_eq!(code, 200, "{st:?}");
+        match st.req("state").unwrap().as_str().unwrap() {
+            "completed" => {
+                assert_eq!(st.req("completed").unwrap().as_usize().unwrap(), 2);
+                assert_eq!(st.req("summary_written").unwrap(), &Json::Bool(true));
+                break;
+            }
+            "failed" => panic!("grid failed: {st:?}"),
+            _ => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+        assert!(std::time::Instant::now() < deadline, "grid never completed");
+    }
+    assert!(queue.summary_path(gid as u64).exists());
+
+    // a long-running second grid cancels through its parent id
+    let victim = GridSpec {
+        name: "victim".into(),
+        lrs: vec![1e-4, 3e-4],
+        steps: 500,
+        priority: -3,
+        seed: 11,
+        ..GridSpec::default()
+    };
+    let (code, body) = client.request("POST", "/v1/jobs/grid", Some(&victim.to_json())).unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    let vid = body.req("id").unwrap().as_usize().unwrap();
+    let (code, body) = client
+        .request("POST", &format!("/v1/jobs/{vid}/cancel"), None)
+        .unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    // queued cells cancel at once; a running cell honors the flag at
+    // its next step boundary — poll until every cell is terminal
+    loop {
+        let (code, st) = client.request("GET", &format!("/v1/jobs/{vid}"), None).unwrap();
+        assert_eq!(code, 200);
+        if st.req("state").unwrap().as_str().unwrap() == "cancelled" {
+            assert_eq!(st.req("cancelled").unwrap().as_usize().unwrap(), 2);
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "victim never cancelled: {st:?}");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    // nothing cancellable remains -> 400, and the listing shows both grids
+    let (code, _) = client
+        .request("POST", &format!("/v1/jobs/{vid}/cancel"), None)
+        .unwrap();
+    assert_eq!(code, 400);
+    let (code, body) = client.request("GET", "/v1/jobs", None).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(body.req("grids").unwrap().as_arr().unwrap().len(), 2);
+    running.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -393,3 +393,73 @@ fn adapter_file_upload_round_trips_through_the_server() {
     running.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn oversized_content_length_is_rejected_with_413_before_allocation() {
+    // a malformed or hostile Content-Length must be answered 413
+    // immediately — without buffering any body bytes or parking the
+    // read loop waiting for a gigabyte that never arrives
+    use std::io::{Read, Write};
+    let base = base_params(&model());
+    let cfg = ServeConfig { flush_ms: 1, ..ServeConfig::default() };
+    let engine = Arc::new(ServeEngine::new(Runtime::native(), &cfg, base).unwrap());
+    let running = http::serve(engine, 0).unwrap();
+
+    let mut stream = std::net::TcpStream::connect(running.addr).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .unwrap();
+    let claimed = (sparse_mezo::serve::http::MAX_BODY_BYTES as u64) + 1;
+    write!(
+        stream,
+        "POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: {claimed}\r\n\r\n"
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    // the server answers without ever seeing a body byte
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw);
+    assert!(
+        text.starts_with("HTTP/1.1 413"),
+        "expected a 413 status line, got: {text}"
+    );
+    assert!(text.contains("too large"), "{text}");
+
+    // and a reasonable request on a fresh connection still works — the
+    // rejection poisoned nothing
+    let (code, body) = loopback_request(running.addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(code, 200, "{body:?}");
+    running.shutdown();
+}
+
+#[test]
+fn client_refuses_an_oversized_response_body_claim() {
+    // the client side of the same hole: a server (or a desynced peer)
+    // claiming a huge response body must not make LoopbackClient
+    // buffer it — the request errors out instead
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fake = std::thread::spawn(move || {
+        let (mut conn, _) = listener.accept().unwrap();
+        // drain the request head, then promise an absurd body
+        let mut buf = [0u8; 4096];
+        let _ = conn.read(&mut buf).unwrap();
+        let claimed = (sparse_mezo::serve::http::MAX_BODY_BYTES as u64) + 1;
+        write!(
+            conn,
+            "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: {claimed}\r\nConnection: keep-alive\r\n\r\n"
+        )
+        .unwrap();
+        conn.flush().unwrap();
+    });
+    let mut client = sparse_mezo::serve::http::LoopbackClient::connect(addr).unwrap();
+    let err = client.request("GET", "/healthz", None).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("too large"),
+        "expected the response-size guard to fire, got: {err:#}"
+    );
+    fake.join().unwrap();
+}
