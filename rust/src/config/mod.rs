@@ -198,6 +198,11 @@ pub struct ServeConfig {
     /// default optimizer steps per job-scheduler slice
     /// (0 = the scheduler's built-in default)
     pub slice_steps: usize,
+    /// TCP address to park remote `worker` processes on
+    /// (`None` = job slices always run their shards locally)
+    pub listen_workers: Option<String>,
+    /// block a drain until this many remote workers have connected
+    pub min_workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -214,6 +219,8 @@ impl Default for ServeConfig {
             init_from: None,
             jobs_dir: None,
             slice_steps: 0,
+            listen_workers: None,
+            min_workers: 0,
         }
     }
 }
@@ -267,6 +274,12 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get("slice_steps") {
             self.slice_steps = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("listen_workers") {
+            self.listen_workers = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.get("min_workers") {
+            self.min_workers = v.as_usize()?;
         }
         self.validate()
     }

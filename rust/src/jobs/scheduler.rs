@@ -34,7 +34,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::data::{tasks, Dataset};
-use crate::parallel::{protocol, DpTrainer, SliceState};
+use crate::parallel::{is_worker_lost, protocol, DpTrainer, RemoteHandle, SliceState};
 use crate::runtime::ModelInfo;
 use crate::serve::{ServeEngine, SparseDelta};
 use crate::util::json::Json;
@@ -128,6 +128,19 @@ impl Scheduler {
         };
         let outcome = match result {
             Ok(Ok(outcome)) => outcome,
+            Ok(Err(e)) if is_worker_lost(&e) => {
+                // a remote worker died mid-slice: not the job's fault.
+                // Re-queue instead of failing — the journal was flushed
+                // before the error surfaced, so the retry resumes
+                // bit-identically from replay (with the dead session
+                // severed, possibly all-local).
+                crate::info!(
+                    "[jobs] job {} '{}' lost a remote worker ({e:#}); re-queued",
+                    job.id,
+                    job.spec.name
+                );
+                SliceOutcome { steps_done: job.steps_done, ..SliceOutcome::default() }
+            }
             Ok(Err(e)) => failed(format!("{e:#}")),
             Err(payload) => {
                 let msg = crate::util::panic_message(&*payload);
@@ -223,6 +236,15 @@ impl Scheduler {
                 .with_journal(&journal);
         trainer.eval_test = false;
         trainer.mask_refresh = spec.mask_refresh;
+        // multi-shard cells may lease TCP workers parked at the engine's
+        // hub; each slice hands the top shard ranks to whatever remotes
+        // are connected (zero = all-local, bit-identical either way)
+        if cfg.workers.max(1) > 1 {
+            if let Some(hub) = self.engine.worker_hub() {
+                trainer.remote =
+                    Some(RemoteHandle { hub: Arc::clone(hub), data_seed: spec.dataset_seed() });
+            }
+        }
 
         // jobs always train from the server's resident base (snapshotted
         // once at scheduler construction), so the published delta is

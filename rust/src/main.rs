@@ -10,6 +10,8 @@
 //!   serve            multi-tenant sparse-adapter inference server
 //!   jobs             fine-tuning job queue (submit/list/show/cancel/
 //!                    resume/drain) — the train→serve orchestrator
+//!   worker           remote seed-sync replica: connect to a
+//!                    coordinator and serve leased training shards
 //!   memory-table     Table-4 memory model only (fast)
 //!   inspect          print manifest/model/layout information
 //!   check-artifacts  compile every artifact and run ABI smoke checks
@@ -31,7 +33,7 @@ use sparse_mezo::coordinator::report::Table;
 use sparse_mezo::data::tasks;
 use sparse_mezo::info;
 use sparse_mezo::jobs::{GridSpec, JobQueue, JobSpec, Scheduler};
-use sparse_mezo::parallel::{DpTrainer, WorkerPool};
+use sparse_mezo::parallel::{run_worker, DpTrainer, WorkerHub, WorkerOpts, WorkerPool};
 use sparse_mezo::runtime::Runtime;
 use sparse_mezo::serve::{http, ServeEngine};
 use sparse_mezo::util::cli::Args;
@@ -67,12 +69,14 @@ COMMANDS
   serve           --model M [--port P --workers N --max-batch R
                   --flush-ms MS --max-adapters K --adapter-budget BYTES
                   --seed S --init-from CKPT --config FILE.toml
-                  --jobs-dir DIR --slice-steps N]
+                  --jobs-dir DIR --slice-steps N --listen-workers ADDR]
                   (loopback HTTP: GET /healthz, GET|POST /v1/adapters,
                   POST /v1/classify; adapters materialize from step
                   journals relative to the server's base parameters.
                   With --jobs-dir, /v1/jobs accepts fine-tuning jobs
-                  that train in the background and auto-publish)
+                  that train in the background and auto-publish.
+                  With --listen-workers, remote `worker` processes may
+                  connect and serve multi-shard job slices over TCP)
   jobs            <submit|submit-grid|list|show|cancel|resume|drain>
                   --jobs-dir DIR
                   submit: --name A [--task T --optimizer O --steps N
@@ -86,8 +90,17 @@ COMMANDS
                   and grid-<id>.summary.json aggregates cell results
                   show|cancel|resume: --id N (job or grid id)
                   drain:  [--model M --workers N --seed S
-                          --init-from CKPT] — run queued jobs to
-                  completion in-process, publishing adapters
+                          --init-from CKPT --listen-workers ADDR
+                          --min-workers N] — run queued jobs to
+                  completion in-process, publishing adapters;
+                  --listen-workers leases shards to remote workers,
+                  --min-workers waits for that many before draining
+  worker          --coordinator HOST:PORT [--seed S --init-from CKPT
+                  --threads N --connect-timeout SECS]
+                  (remote seed-sync replica: rebuilds the coordinator's
+                  replica state from journal catch-up at every lease and
+                  exchanges per-row losses + (seed, g) step records —
+                  bit-identical to an in-process DP worker)
   memory-table    [--model M --out DIR]
   inspect         [--model M]
   check-artifacts
@@ -130,6 +143,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "repro" => cmd_repro(&args, &artifacts),
         "serve" => cmd_serve(&args, &artifacts),
         "jobs" => cmd_jobs(&args, &artifacts),
+        "worker" => cmd_worker(&args, &artifacts),
         "memory-table" => cmd_memory(&args, &artifacts),
         "inspect" => cmd_inspect(&args, &artifacts),
         "check-artifacts" => cmd_check(&artifacts),
@@ -415,6 +429,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.init_from = args.get("init-from").map(String::from).or(cfg.init_from);
     cfg.jobs_dir = args.get("jobs-dir").map(String::from).or(cfg.jobs_dir);
     cfg.slice_steps = args.usize_or("slice-steps", cfg.slice_steps)?;
+    cfg.listen_workers = args.get("listen-workers").map(String::from).or(cfg.listen_workers);
     cfg.validate()?;
 
     let model_info = rt.model(&cfg.model)?.clone();
@@ -434,6 +449,11 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         let queue = Arc::new(JobQueue::open(&PathBuf::from(dir))?);
         info!("jobs: {} persisted under {dir} ({} active)", queue.list().len(), queue.active());
         engine = engine.with_jobs(queue, cfg.slice_steps);
+    }
+    if let Some(addr) = &cfg.listen_workers {
+        let hub = WorkerHub::listen(addr)?;
+        info!("worker hub listening on {} (TCP seed-sync leases)", hub.addr());
+        engine = engine.with_worker_hub(hub);
     }
     let running = http::serve(Arc::new(engine), cfg.port)?;
     info!("listening on http://{} (loopback only)", running.addr);
@@ -570,12 +590,29 @@ fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
             cfg.seed = args.u64_or("seed", cfg.seed)?;
             cfg.init_from = args.get("init-from").map(String::from).or(cfg.init_from);
             cfg.slice_steps = args.usize_or("slice-steps", cfg.slice_steps)?;
+            cfg.listen_workers = args.get("listen-workers").map(String::from).or(cfg.listen_workers);
+            cfg.min_workers = args.usize_or("min-workers", cfg.min_workers)?;
             cfg.validate()?;
             let base = resolve_serve_base(&rt, &cfg)?;
-            let engine = Arc::new(
-                ServeEngine::new(rt, &cfg, base)?.with_jobs(Arc::clone(&queue), cfg.slice_steps),
-            );
-            let scheduler = Scheduler::new(engine, Arc::clone(&queue), cfg.slice_steps);
+            let mut engine =
+                ServeEngine::new(rt, &cfg, base)?.with_jobs(Arc::clone(&queue), cfg.slice_steps);
+            if let Some(addr) = &cfg.listen_workers {
+                let hub = WorkerHub::listen(addr)?;
+                info!("worker hub listening on {} (TCP seed-sync leases)", hub.addr());
+                if cfg.min_workers > 0 {
+                    let deadline = std::time::Duration::from_secs(60);
+                    if !hub.wait_for_workers(cfg.min_workers, deadline) {
+                        bail!(
+                            "only {}/{} remote workers connected within {deadline:?}",
+                            hub.connected(),
+                            cfg.min_workers
+                        );
+                    }
+                    info!("{} remote worker(s) connected", hub.connected());
+                }
+                engine = engine.with_worker_hub(hub);
+            }
+            let scheduler = Scheduler::new(Arc::new(engine), Arc::clone(&queue), cfg.slice_steps);
             let slices = scheduler.run_until_idle();
             info!("drained {} scheduler slices", slices);
             for job in queue.list() {
@@ -598,6 +635,28 @@ fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
             "unknown jobs action '{other}' (submit|submit-grid|list|show|cancel|resume|drain)"
         ),
     }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let addr = args
+        .get("coordinator")
+        .map(String::from)
+        .ok_or_else(|| anyhow::anyhow!("worker needs --coordinator HOST:PORT"))?;
+    let rt = Runtime::new(artifacts)?;
+    let pool = WorkerPool::new(args.usize_or("threads", 1)?);
+    let opts = WorkerOpts {
+        seed: args.u64_or("seed", 42)?,
+        init_from: args.get("init-from").map(String::from),
+        connect_timeout: std::time::Duration::from_secs(args.u64_or("connect-timeout", 30)?),
+        ..WorkerOpts::default()
+    };
+    info!("worker: connecting to coordinator at {addr}");
+    let stats = run_worker(&rt, &pool, &addr, &opts)?;
+    info!(
+        "worker done: {} session(s) served, {} step(s) applied",
+        stats.sessions, stats.steps
+    );
     Ok(())
 }
 

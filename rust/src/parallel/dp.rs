@@ -56,6 +56,7 @@ use crate::util::stats::Ema;
 use super::eval;
 use super::pool::WorkerPool;
 use super::protocol::{self, params_fingerprint, JournalWriter, StepRecord};
+use super::transport::{is_worker_lost, train_fingerprint, Frame, RemoteHandle, RemoteWorker};
 
 /// Which phase-B update rule the DP engine applies for an optimizer —
 /// each mirrors the corresponding `Rule` arm of the native backend's
@@ -268,6 +269,12 @@ pub struct DpTrainer<'rt> {
     /// (0 = never, matching the serial trainer); each refresh bumps the
     /// journal's `mask_epoch`
     pub mask_refresh: usize,
+    /// lease TCP worker sessions from this hub for each
+    /// [`run_slice`](DpTrainer::run_slice) call — remote replicas take
+    /// the top microbatch shard ranks and the local pool keeps the rest,
+    /// with the canonical loss fold unchanged (bit-identity preserved).
+    /// `None` (the default) keeps every shard local.
+    pub remote: Option<RemoteHandle>,
 }
 
 impl<'rt> DpTrainer<'rt> {
@@ -282,6 +289,7 @@ impl<'rt> DpTrainer<'rt> {
             eval_test: true,
             initial_override: None,
             mask_refresh: 0,
+            remote: None,
         }
     }
 
@@ -735,11 +743,57 @@ impl<'rt> DpTrainer<'rt> {
         let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, cfg.seed)?;
         loader.skip(state.step);
         let mut journal = JournalWriter::append(path)?;
+
+        // lease remote worker sessions for this slice (none parked, or no
+        // hub configured, leaves every shard local — bit-identical either
+        // way). The lease streams the journal's committed records as the
+        // catch-up, so it happens after `append` truncated any torn tail.
+        let mut remotes: Vec<RemoteWorker> = Vec::new();
+        if let Some(handle) = &self.remote {
+            if n > 1 {
+                let (header, records) = protocol::load_journal(path)?;
+                if records.len() == state.step {
+                    remotes = handle.hub.lease(
+                        n - 1,
+                        n,
+                        &header,
+                        handle.data_seed,
+                        &train_fingerprint(&dataset.train),
+                        &records,
+                    );
+                    if !remotes.is_empty() {
+                        crate::info!(
+                            "[{}] slice at step {}: {} remote worker(s) leased",
+                            cfg.label(),
+                            state.step,
+                            remotes.len()
+                        );
+                    }
+                } else {
+                    crate::info!(
+                        "[{}] journal holds {} records but state is at step {} — \
+                         keeping this slice local",
+                        cfg.label(),
+                        records.len(),
+                        state.step
+                    );
+                }
+            }
+        }
+        // remotes own the TOP shard ranks (descending from n-1), so the
+        // local ranks stay the contiguous prefix 0..n_local and the
+        // canonical rank-order fold below is a simple concatenation
+        let n_local = n - remotes.len();
+
         let mut steps_run = 0usize;
         let mut diverged = false;
         let mut last_loss = f32::NAN;
+        // a remote failing mid-step: finish bookkeeping (journal flush),
+        // sever every remote session, and surface the marked error so the
+        // scheduler re-queues — journal replay makes the retry bit-exact
+        let mut hard_err: Option<anyhow::Error> = None;
 
-        for t in state.step..end {
+        'steps: for t in state.step..end {
             if stop.map(|s| s()).unwrap_or(false) {
                 break;
             }
@@ -750,6 +804,25 @@ impl<'rt> DpTrainer<'rt> {
                 state.thresholds =
                     backend.thresholds(model, &state.params, cfg.hypers.sparsity)?;
                 state.mask_epoch += 1;
+                for rw in remotes.iter_mut() {
+                    if let Err(e) = rw.send(&Frame::Refresh { mask_epoch: state.mask_epoch }) {
+                        hard_err = Some(e);
+                        break 'steps;
+                    }
+                }
+            }
+
+            // kick remote phase A off before the local compute so both
+            // sides' forward passes overlap
+            for rw in remotes.iter_mut() {
+                if let Err(e) = rw.send(&Frame::PhaseA {
+                    step: t as u32,
+                    seed,
+                    mask_epoch: state.mask_epoch,
+                }) {
+                    hard_err = Some(e);
+                    break 'steps;
+                }
             }
 
             // shared step noise, sharded across the pool exactly like the
@@ -779,26 +852,43 @@ impl<'rt> DpTrainer<'rt> {
             )?;
 
             // phase A on the one representative replica: every live
-            // replica holds these exact bits, so perturbing once and
-            // sharding the row losses over the batch reproduces the
-            // N-replica pass bit-for-bit
+            // replica (local or across TCP) holds these exact bits, so
+            // perturbing once and sharding the row losses over the local
+            // ranks reproduces the N-replica pass bit-for-bit
             perturb_in_place(&mut state.params, &z, mask.as_deref(), eps);
             let params_plus: &[f32] = &state.params;
-            let shard_plus = self.pool.scatter(n, |j| -> Result<Vec<f64>> {
+            let shard_plus = self.pool.scatter(n_local, |j| -> Result<Vec<f64>> {
                 let tokens = &batch.tokens[j * shard_tok..(j + 1) * shard_tok];
                 let labels = &batch.labels[j * rows_per..(j + 1) * rows_per];
                 backend.row_losses(model, params_plus, tokens, labels)
             });
             perturb_in_place(&mut state.params, &z, mask.as_deref(), -2.0 * eps);
             let params_minus: &[f32] = &state.params;
-            let shard_minus = self.pool.scatter(n, |j| -> Result<Vec<f64>> {
+            let shard_minus = self.pool.scatter(n_local, |j| -> Result<Vec<f64>> {
                 let tokens = &batch.tokens[j * shard_tok..(j + 1) * shard_tok];
                 let labels = &batch.labels[j * rows_per..(j + 1) * rows_per];
                 backend.row_losses(model, params_minus, tokens, labels)
             });
 
-            // all-reduce: canonical row-order f64 fold, then the same f32
-            // casts the live step performs
+            // collect the remote shards' row losses (sessions were leased
+            // in descending rank order; sort back to ascending for the fold)
+            let mut remote_losses: Vec<(usize, Vec<f64>, Vec<f64>)> =
+                Vec::with_capacity(remotes.len());
+            for rw in remotes.iter_mut() {
+                match rw.recv_losses(t as u32, rows_per) {
+                    Ok((plus, minus)) => remote_losses.push((rw.rank, plus, minus)),
+                    Err(e) => {
+                        hard_err = Some(e);
+                        break 'steps;
+                    }
+                }
+            }
+            remote_losses.sort_by_key(|(rank, ..)| *rank);
+
+            // all-reduce: canonical rank-then-row-order f64 fold (local
+            // ranks 0..n_local, then remote ranks ascending — exactly the
+            // all-local rank order), then the same f32 casts the live
+            // step performs
             let mut sum_plus = 0.0f64;
             let mut sum_minus = 0.0f64;
             let mut rows = 0usize;
@@ -809,8 +899,19 @@ impl<'rt> DpTrainer<'rt> {
                 }
                 rows += rp.len();
             }
+            for (_, plus, _) in &remote_losses {
+                for &v in plus {
+                    sum_plus += v;
+                }
+                rows += plus.len();
+            }
             for shard in shard_minus {
                 for &v in &shard? {
+                    sum_minus += v;
+                }
+            }
+            for (_, _, minus) in &remote_losses {
+                for &v in minus {
                     sum_minus += v;
                 }
             }
@@ -829,14 +930,24 @@ impl<'rt> DpTrainer<'rt> {
                 perturb_in_place(&mut state.params, &z, mask.as_deref(), eps);
                 crate::info!("[{}] job DIVERGED at step {t} (non-finite g)", cfg.label());
                 diverged = true;
+                // the remotes are mid-exchange (phase A answered, no
+                // commit): discard their sessions — the sockets may hold
+                // half-read frames, so sever rather than re-park; the
+                // workers reconnect fresh
+                for mut rw in remotes.drain(..) {
+                    let _ = rw.send(&Frame::Abort {
+                        reason: format!("run diverged at step {t} (non-finite g)"),
+                    });
+                }
                 break;
             }
-            journal.record(&StepRecord {
+            let rec = StepRecord {
                 step: t as u32,
                 seed,
                 scalar: g,
                 mask_epoch: state.mask_epoch,
-            })?;
+            };
+            journal.record(&rec)?;
 
             // phase B: the identical fused masked update
             apply_update(
@@ -852,13 +963,63 @@ impl<'rt> DpTrainer<'rt> {
             steps_run += 1;
             last_loss = train_loss;
 
+            // broadcast the committed record; remote replicas apply the
+            // identical update from it. A send failure after the local
+            // commit is fine: journal and state agree at t+1, and the
+            // requeued slice resumes from the journal.
+            for rw in remotes.iter_mut() {
+                if let Err(e) = rw.send(&Frame::Step(rec)) {
+                    hard_err = Some(e);
+                    break 'steps;
+                }
+            }
+
             if !train_loss.is_finite() || train_loss > DIVERGENCE_LOSS {
                 crate::info!("[{}] job DIVERGED at step {t} (loss {train_loss})", cfg.label());
                 diverged = true;
                 break;
             }
         }
-        journal.flush()?;
+
+        // flush before surfacing any transport error: the journal must
+        // durably describe exactly the updates that were applied, or the
+        // re-queued retry would re-run a committed step
+        let flushed = journal.flush();
+        if let Some(e) = hard_err {
+            // sever every remote session (never re-park a socket that may
+            // hold half-exchanged frames); survivors reconnect fresh
+            drop(remotes);
+            return Err(e);
+        }
+        flushed?;
+
+        if diverged {
+            // terminal for the job: discard any remaining remote sessions
+            for mut rw in remotes.drain(..) {
+                let _ = rw.send(&Frame::Abort { reason: "run diverged".into() });
+            }
+        } else {
+            // end-of-slice drift check: every remote must land on the
+            // coordinator's exact parameter bits. A mismatch is a hard
+            // error (the seed-sync invariant broke — retrying cannot
+            // help); a transport failure here is harmless (the slice is
+            // already committed locally) so just sever that session.
+            let final_fnv = params_fingerprint(&state.params);
+            for rw in remotes.drain(..) {
+                let rank = rw.rank;
+                match rw.finish(state.step as u32, &final_fnv) {
+                    Ok(()) => {}
+                    Err(e) if is_worker_lost(&e) => {
+                        crate::info!(
+                            "[{}] remote rank {rank} lost at finish ({e:#}); severed",
+                            cfg.label()
+                        );
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+
         Ok(SliceReport {
             steps_run,
             done: diverged || state.step >= cfg.steps,

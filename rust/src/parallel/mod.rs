@@ -18,18 +18,29 @@
 //!   [`replay`](protocol::replay) used for crash recovery, audit, and
 //!   (via [`replay_full`](protocol::replay_full)'s mask-union
 //!   certificate) sparse-adapter materialization in [`crate::serve`].
+//! * [`transport`] — the same step exchange over TCP: a length-prefixed
+//!   binary frame codec, a coordinator-side [`WorkerHub`](transport::WorkerHub)
+//!   leasing parked `worker` processes per slice, and the
+//!   [`run_worker`](transport::run_worker) remote-replica loop. The
+//!   journal stays authoritative; remote state is rebuilt from catch-up
+//!   replay at every lease.
 //!
 //! Why this shape works: MeZO's update is a rank-one function of a
 //! scalar and a PRNG seed (paper Alg. 1–2), so the classic DP cost —
 //! shipping gradients or averaged parameters — vanishes. The engine
 //! exploits that to keep N workers bit-identical to the 1-worker (and
 //! serial-trainer) trajectory, which `tests/parallel.rs` asserts
-//! bit-for-bit.
+//! bit-for-bit — and [`transport`] extends the same bit-identity across
+//! machine boundaries at a few dozen bytes per step.
 
 pub mod dp;
 pub mod eval;
 pub mod pool;
 pub mod protocol;
+pub mod transport;
 
 pub use dp::{DpTrainer, SliceReport, SliceState};
 pub use pool::WorkerPool;
+pub use transport::{
+    is_worker_lost, run_worker, RemoteHandle, WorkerHub, WorkerOpts, WorkerStats,
+};

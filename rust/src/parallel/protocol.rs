@@ -158,13 +158,36 @@ pub fn read_header(path: &Path) -> Result<Json> {
     Ok(header)
 }
 
-/// Count a journal's step records without parsing them (non-empty line
-/// count minus the header) — the slice scheduler's cheap
-/// checkpoint-vs-journal consistency check.
+/// Split journal text into its durable lines: `(lines, torn)`.
+///
+/// This is the **single** definition of "torn trailing record" every
+/// journal reader shares, and it matches what [`JournalWriter::append`]
+/// truncates: a final line not terminated by `'\n'` was cut mid-flush,
+/// so the step it describes was never durable and is dropped *before*
+/// empties are filtered. The line-terminator test matters — a tear can
+/// land so that the fragment still parses as valid JSON with a wrong
+/// value (e.g. `"g":1.25}` cut to `"g":1.2}`), which a parse-failure
+/// heuristic would load as a corrupt record. `torn` reports whether a
+/// fragment was dropped so callers can log it.
+pub fn journal_lines(text: &str) -> (Vec<&str>, bool) {
+    let mut raw: Vec<&str> = text.lines().collect();
+    let torn = !text.is_empty() && !text.ends_with('\n');
+    if torn {
+        raw.pop();
+    }
+    (raw.into_iter().filter(|l| !l.trim().is_empty()).collect(), torn)
+}
+
+/// Count a journal's step records without parsing them (durable
+/// non-empty line count minus the header) — the slice scheduler's cheap
+/// checkpoint-vs-journal consistency check. A torn trailing record is
+/// *not* counted, so the count always agrees with what [`load_journal`]
+/// returns and what resume will re-run.
 pub fn journal_record_count(path: &Path) -> Result<usize> {
     read_header(path)?;
     let text = std::fs::read_to_string(path)?;
-    Ok(text.lines().filter(|l| !l.trim().is_empty()).count().saturating_sub(1))
+    let (lines, _) = journal_lines(&text);
+    Ok(lines.len().saturating_sub(1))
 }
 
 /// Read a journal back: `(header, records)`.
@@ -172,13 +195,23 @@ pub fn journal_record_count(path: &Path) -> Result<usize> {
 /// Crash tolerance: a journal's **final** line may be torn (a crash
 /// mid-flush cut it short). The step it would describe was never
 /// durable, and the live state that had applied it died with the
-/// process — so the torn line is dropped and resume re-runs that step
-/// deterministically, re-appending the identical record. A malformed
-/// line anywhere *else* is real corruption and stays a hard error.
+/// process — so [`journal_lines`] drops the unterminated fragment
+/// (exactly what [`JournalWriter::append`] would truncate) and resume
+/// re-runs that step deterministically, re-appending the identical
+/// record. A malformed final line that *is* newline-terminated gets the
+/// same tolerance (old journals may predate truncate-before-append); a
+/// malformed line anywhere else is real corruption and a hard error.
 pub fn load_journal(path: &Path) -> Result<(Json, Vec<StepRecord>)> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading journal {}", path.display()))?;
-    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let (lines, torn) = journal_lines(&text);
+    if torn {
+        crate::info!(
+            "journal {}: dropping torn trailing record (crash mid-flush); \
+             the step will be re-run on resume",
+            path.display()
+        );
+    }
     let Some((&first, rest)) = lines.split_first() else {
         bail!("journal {} is empty", path.display());
     };

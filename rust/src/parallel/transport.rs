@@ -1,0 +1,1313 @@
+//! TCP transport for the seed-sync step-exchange protocol.
+//!
+//! A MeZO step crosses a machine boundary as a few dozen bytes: the
+//! coordinator streams `(step, seed)` assignments, each remote worker
+//! answers with its microbatch shard's per-row f64 losses, and the
+//! committed [`StepRecord`] broadcast closes the step — no parameter or
+//! gradient ever rides the wire (the paper's Alg.-2 shared-seed
+//! structure made a network protocol). Placement is invisible to the
+//! arithmetic: the coordinator folds local and remote row losses in
+//! canonical shard order, so a run with any mix of local and TCP
+//! replicas stays bit-identical to the serial trainer.
+//!
+//! Wire format: length-prefixed binary frames, `[u32 LE body_len]
+//! [u8 tag][payload]` where `body_len` counts the tag byte. Scalars
+//! travel as their IEEE-754 bits ([`f32::to_bits`]/[`f64::to_bits`],
+//! little-endian), so `-0.0`, subnormals and extreme magnitudes
+//! round-trip bit-exactly — the same exactness contract the JSON
+//! journal keeps. [`decode_frame`] never panics on arbitrary bytes:
+//! it returns `Ok(None)` when the buffer is a clean prefix (need more
+//! bytes) and a hard error for anything malformed; a length prefix
+//! above [`MAX_FRAME_BYTES`] is refused *before any allocation*,
+//! mirroring the HTTP layer's `MAX_BODY_BYTES` 413 precedent.
+//!
+//! Fault model: the journal stays the single authoritative state. A
+//! worker session carries no durable state — it is rebuilt from the
+//! journal's catch-up stream at every lease — so a worker dying
+//! mid-slice surfaces as a [`worker_lost`]-tagged error, the scheduler
+//! re-queues the job, and the next slice resumes from journal replay
+//! bit-identically (with the dead stream dropped from the hub, so a
+//! shrinking worker set degrades to local compute, never to a wedge).
+//! A mismatched parameter base is a hard error at connect time: the
+//! handshake exchanges the journal header's `init_fnv` fingerprint in
+//! both directions and either side refuses on mismatch.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::batcher::TrainLoader;
+use crate::data::tasks;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+use super::dp::{apply_update, dp_rule, dp_slot_len, perturb_in_place};
+use super::pool::WorkerPool;
+use super::protocol::{self, params_fingerprint, StepRecord};
+
+/// Wire protocol version; bumped on any frame-layout change (the
+/// golden fixture in `tests/golden.rs` makes a silent change impossible).
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Hard cap on one frame's body. The largest legitimate frame is a
+/// `Losses` pair for a full batch (a few KiB) or a `Config` header line;
+/// 1 MiB is orders of magnitude above both. A length prefix beyond this
+/// is refused before any buffer is sized from it — attacker-controlled
+/// bytes must not pick our allocation size (the `MAX_BODY_BYTES`
+/// precedent from `serve/http.rs`).
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Marker every transport-failure error message carries, so the jobs
+/// scheduler can classify "the remote died, re-queue and resume from
+/// the journal" apart from real training errors. String-matched through
+/// the error chain (the vendored `anyhow` has no downcasting).
+pub const WORKER_LOST: &str = "remote worker lost";
+
+/// Marker for worker-side errors that must kill the worker process
+/// (base-fingerprint mismatch, protocol violation, injected kill) —
+/// as opposed to a coordinator-side slice failure, which the worker
+/// survives by reconnecting.
+const WORKER_FATAL: &str = "worker hard error";
+
+/// Read timeout on a leased session: a hung remote must surface as a
+/// re-queueable [`worker_lost`] error, not wedge the scheduler forever.
+const SESSION_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Wrap a transport failure in the [`WORKER_LOST`] marker.
+pub fn worker_lost(detail: impl std::fmt::Display) -> anyhow::Error {
+    anyhow!("{WORKER_LOST}: {detail}")
+}
+
+/// Whether an error (anywhere in its context chain) is a lost-worker
+/// transport failure — the scheduler's re-queue trigger.
+pub fn is_worker_lost(e: &anyhow::Error) -> bool {
+    e.chain().any(|s| s.contains(WORKER_LOST))
+}
+
+fn fatal(detail: impl std::fmt::Display) -> anyhow::Error {
+    anyhow!("{WORKER_FATAL}: {detail}")
+}
+
+fn is_fatal(e: &anyhow::Error) -> bool {
+    e.chain().any(|s| s.contains(WORKER_FATAL))
+}
+
+/// FNV-1a fingerprint of a training split (prompt tokens, label,
+/// candidates — the bytes the loader's batches are built from), matching
+/// [`params_fingerprint`]'s hash and hex shape. Both handshake sides
+/// compute this over their own copy so a worker that regenerated a
+/// different dataset is refused at connect time.
+pub fn train_fingerprint(train: &[crate::data::Example]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |v: i32| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    };
+    for ex in train {
+        eat(ex.prompt.len() as i32);
+        for &t in &ex.prompt {
+            eat(t);
+        }
+        eat(ex.label);
+        eat(ex.candidates.len() as i32);
+        for &c in &ex.candidates {
+            eat(c);
+        }
+    }
+    format!("{h:016x}")
+}
+
+// ---------------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------------
+
+/// One protocol frame. Lifecycle of a session (one journal lease):
+///
+/// ```text
+/// coordinator                                worker
+///   Config{header, data_seed}  ->
+///                              <-  Hello{init_fnv}      (or Abort)
+///   Welcome{rank, n, resume}   ->
+///   Step x resume (catch-up)   ->
+///   [ Refresh{epoch}?          ->
+///     PhaseA{step, seed}       ->
+///                              <-  Losses{plus, minus}
+///     Step{record}             ->                        ] x steps
+///   Finish{steps, final_fnv}   ->
+///                              <-  FinishAck{final_fnv}
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Session start (coordinator → worker): the run's journal header
+    /// (self-describing config + `init_fnv`) plus the dataset seed the
+    /// header does not carry.
+    Config {
+        /// wire protocol version (mismatch aborts the handshake)
+        version: u32,
+        /// the journal header line, verbatim JSON
+        header: String,
+        /// seed the worker regenerates the task dataset from
+        data_seed: u64,
+    },
+    /// Worker's reply: its locally-resolved base and dataset
+    /// fingerprints. The coordinator cross-checks both — the base
+    /// against the header's `init_fnv`, the dataset against its own
+    /// training split. The dataset check matters because a worker on a
+    /// different dataset would *not* drift (every replica applies the
+    /// same committed records): it would silently bend the trajectory
+    /// away from the serial run instead, so it must be refused up front.
+    Hello {
+        /// wire protocol version
+        version: u32,
+        /// FNV-1a fingerprint of the worker's base parameters (hex)
+        init_fnv: String,
+        /// FNV-1a fingerprint of the regenerated training split (hex)
+        ds_fnv: String,
+    },
+    /// Handshake accepted: the worker owns microbatch shard `rank` of
+    /// `workers`, and must first replay `resume` catch-up [`Frame::Step`]s.
+    Welcome {
+        /// this worker's shard index
+        rank: u32,
+        /// total shard count (the run's `workers`)
+        workers: u32,
+        /// catch-up step records that follow immediately
+        resume: u32,
+    },
+    /// Threshold refresh (coordinator → worker): recompute §8.2
+    /// magnitude thresholds from the current (unperturbed) params.
+    Refresh {
+        /// the new threshold generation
+        mask_epoch: u32,
+    },
+    /// Phase A assignment: score microbatch shard `rank` at `+eps` and
+    /// `-eps` for this step's shared seed.
+    PhaseA {
+        /// optimizer step index
+        step: u32,
+        /// the step's shared perturbation seed
+        seed: (u32, u32),
+        /// threshold generation the mask must be computed under
+        /// (sanity-checked against the worker's — a skew here would
+        /// silently compute a wrong mask)
+        mask_epoch: u32,
+    },
+    /// The worker's shard row losses for both phases (worker → coordinator).
+    Losses {
+        /// the step these losses belong to
+        step: u32,
+        /// per-row f64 losses at `+eps`, shard row order
+        plus: Vec<f64>,
+        /// per-row f64 losses at `-eps`, shard row order
+        minus: Vec<f64>,
+    },
+    /// A committed step record: catch-up replay during the handshake,
+    /// phase-B commit during the live loop.
+    Step(StepRecord),
+    /// Session end (coordinator → worker) with the final parameter
+    /// fingerprint — the cross-machine drift check.
+    Finish {
+        /// total steps the session's state now reflects
+        steps: u32,
+        /// coordinator-side fingerprint of the final params
+        final_fnv: String,
+    },
+    /// Worker's drift-check echo.
+    FinishAck {
+        /// worker-side fingerprint of its final params
+        final_fnv: String,
+    },
+    /// Hard protocol error, either direction; the connection closes.
+    Abort {
+        /// human-readable reason
+        reason: String,
+    },
+}
+
+const TAG_CONFIG: u8 = 1;
+const TAG_HELLO: u8 = 2;
+const TAG_WELCOME: u8 = 3;
+const TAG_REFRESH: u8 = 4;
+const TAG_PHASE_A: u8 = 5;
+const TAG_LOSSES: u8 = 6;
+const TAG_STEP: u8 = 7;
+const TAG_FINISH: u8 = 8;
+const TAG_FINISH_ACK: u8 = 9;
+const TAG_ABORT: u8 = 10;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(out, xs.len() as u32);
+    for x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Encode one frame: `[u32 LE body_len][u8 tag][payload]`.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut body = Vec::with_capacity(32);
+    match frame {
+        Frame::Config { version, header, data_seed } => {
+            body.push(TAG_CONFIG);
+            put_u32(&mut body, *version);
+            put_str(&mut body, header);
+            put_u64(&mut body, *data_seed);
+        }
+        Frame::Hello { version, init_fnv, ds_fnv } => {
+            body.push(TAG_HELLO);
+            put_u32(&mut body, *version);
+            put_str(&mut body, init_fnv);
+            put_str(&mut body, ds_fnv);
+        }
+        Frame::Welcome { rank, workers, resume } => {
+            body.push(TAG_WELCOME);
+            put_u32(&mut body, *rank);
+            put_u32(&mut body, *workers);
+            put_u32(&mut body, *resume);
+        }
+        Frame::Refresh { mask_epoch } => {
+            body.push(TAG_REFRESH);
+            put_u32(&mut body, *mask_epoch);
+        }
+        Frame::PhaseA { step, seed, mask_epoch } => {
+            body.push(TAG_PHASE_A);
+            put_u32(&mut body, *step);
+            put_u32(&mut body, seed.0);
+            put_u32(&mut body, seed.1);
+            put_u32(&mut body, *mask_epoch);
+        }
+        Frame::Losses { step, plus, minus } => {
+            body.push(TAG_LOSSES);
+            put_u32(&mut body, *step);
+            put_f64s(&mut body, plus);
+            put_f64s(&mut body, minus);
+        }
+        Frame::Step(rec) => {
+            body.push(TAG_STEP);
+            put_u32(&mut body, rec.step);
+            put_u32(&mut body, rec.seed.0);
+            put_u32(&mut body, rec.seed.1);
+            put_u32(&mut body, rec.scalar.to_bits());
+            put_u32(&mut body, rec.mask_epoch);
+        }
+        Frame::Finish { steps, final_fnv } => {
+            body.push(TAG_FINISH);
+            put_u32(&mut body, *steps);
+            put_str(&mut body, final_fnv);
+        }
+        Frame::FinishAck { final_fnv } => {
+            body.push(TAG_FINISH_ACK);
+            put_str(&mut body, final_fnv);
+        }
+        Frame::Abort { reason } => {
+            body.push(TAG_ABORT);
+            put_str(&mut body, reason);
+        }
+    }
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Bounds-checked reader over a frame body. Every `take_*` is a clean
+/// error past the end — decoding arbitrary bytes must never panic.
+struct BodyReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BodyReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("frame body truncated: need {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn take_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn take_str(&mut self) -> Result<String> {
+        let len = self.take_u32()? as usize;
+        // the frame cap already bounds len transitively, but check
+        // against the remaining body before trusting it
+        let bytes = self.take(len).context("string field")?;
+        Ok(std::str::from_utf8(bytes).context("string field not UTF-8")?.to_string())
+    }
+
+    fn take_f64s(&mut self) -> Result<Vec<f64>> {
+        let count = self.take_u32()? as usize;
+        // refuse a count that cannot fit in the remaining body before
+        // allocating for it
+        if self.buf.len() - self.pos < count.saturating_mul(8) {
+            bail!("f64 array count {count} exceeds frame body");
+        }
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            out.push(f64::from_bits(u64::from_le_bytes(self.take(8)?.try_into().unwrap())));
+        }
+        Ok(out)
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("frame has {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+/// Decode one frame from the front of `buf`.
+///
+/// * `Ok(Some((frame, consumed)))` — a complete frame; the caller drops
+///   `consumed` bytes.
+/// * `Ok(None)` — `buf` is a clean prefix; read more bytes.
+/// * `Err(_)` — malformed or hostile input (oversized length prefix,
+///   unknown tag, truncated or over-long body, bad UTF-8). Never panics.
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let body_len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if body_len > MAX_FRAME_BYTES {
+        // refused before any allocation is sized from it
+        bail!("frame length {body_len} exceeds cap {MAX_FRAME_BYTES}");
+    }
+    if body_len == 0 {
+        bail!("empty frame (no tag byte)");
+    }
+    if buf.len() < 4 + body_len {
+        return Ok(None);
+    }
+    let body = &buf[4..4 + body_len];
+    let tag = body[0];
+    let mut r = BodyReader { buf: &body[1..], pos: 0 };
+    let frame = match tag {
+        TAG_CONFIG => Frame::Config {
+            version: r.take_u32()?,
+            header: r.take_str()?,
+            data_seed: r.take_u64()?,
+        },
+        TAG_HELLO => Frame::Hello {
+            version: r.take_u32()?,
+            init_fnv: r.take_str()?,
+            ds_fnv: r.take_str()?,
+        },
+        TAG_WELCOME => Frame::Welcome {
+            rank: r.take_u32()?,
+            workers: r.take_u32()?,
+            resume: r.take_u32()?,
+        },
+        TAG_REFRESH => Frame::Refresh { mask_epoch: r.take_u32()? },
+        TAG_PHASE_A => Frame::PhaseA {
+            step: r.take_u32()?,
+            seed: (r.take_u32()?, r.take_u32()?),
+            mask_epoch: r.take_u32()?,
+        },
+        TAG_LOSSES => Frame::Losses {
+            step: r.take_u32()?,
+            plus: r.take_f64s()?,
+            minus: r.take_f64s()?,
+        },
+        TAG_STEP => Frame::Step(StepRecord {
+            step: r.take_u32()?,
+            seed: (r.take_u32()?, r.take_u32()?),
+            scalar: f32::from_bits(r.take_u32()?),
+            mask_epoch: r.take_u32()?,
+        }),
+        TAG_FINISH => Frame::Finish { steps: r.take_u32()?, final_fnv: r.take_str()? },
+        TAG_FINISH_ACK => Frame::FinishAck { final_fnv: r.take_str()? },
+        TAG_ABORT => Frame::Abort { reason: r.take_str()? },
+        other => bail!("unknown frame tag {other}"),
+    };
+    r.finish()?;
+    Ok(Some((frame, 4 + body_len)))
+}
+
+// ---------------------------------------------------------------------------
+// framed connection
+// ---------------------------------------------------------------------------
+
+/// A TCP stream with frame-level send/recv and a decode buffer.
+pub struct FrameConn {
+    stream: TcpStream,
+    pending: Vec<u8>,
+}
+
+impl FrameConn {
+    /// Wrap a connected stream (Nagle off: frames are latency-bound).
+    pub fn new(stream: TcpStream) -> FrameConn {
+        let _ = stream.set_nodelay(true);
+        FrameConn { stream, pending: Vec::new() }
+    }
+
+    /// Apply a read timeout (leased coordinator-side sessions; `None`
+    /// blocks forever, the idle worker's default).
+    fn set_timeout(&self, t: Option<Duration>) {
+        let _ = self.stream.set_read_timeout(t);
+    }
+
+    /// Send one frame.
+    pub fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.stream.write_all(&encode_frame(frame)).context("writing frame")
+    }
+
+    /// Receive one frame; `Ok(None)` is a clean EOF *between* frames
+    /// (the peer closed an idle connection).
+    pub fn recv_opt(&mut self) -> Result<Option<Frame>> {
+        loop {
+            if let Some((frame, used)) = decode_frame(&self.pending)? {
+                self.pending.drain(..used);
+                return Ok(Some(frame));
+            }
+            let mut chunk = [0u8; 16 * 1024];
+            let n = self.stream.read(&mut chunk).context("reading frame")?;
+            if n == 0 {
+                if self.pending.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-frame ({} buffered bytes)", self.pending.len());
+            }
+            self.pending.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// Receive one frame; any EOF is an error.
+    pub fn recv(&mut self) -> Result<Frame> {
+        self.recv_opt()?.ok_or_else(|| anyhow!("connection closed"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator side: hub + leased sessions
+// ---------------------------------------------------------------------------
+
+struct HubInner {
+    parked: Mutex<Vec<FrameConn>>,
+    leased: AtomicUsize,
+    sessions_served: AtomicUsize,
+    stop: AtomicBool,
+}
+
+/// The coordinator's worker pool: a TCP listener parking connected
+/// `worker` processes until a slice leases them. Connections carry no
+/// state between leases — every lease re-handshakes and streams journal
+/// catch-up, so the journal stays the only authority.
+pub struct WorkerHub {
+    inner: Arc<HubInner>,
+    addr: SocketAddr,
+    accept: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerHub {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and start parking workers.
+    pub fn listen(addr: &str) -> Result<Arc<WorkerHub>> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding worker listener on {addr}"))?;
+        let local = listener.local_addr()?;
+        let inner = Arc::new(HubInner {
+            parked: Mutex::new(Vec::new()),
+            leased: AtomicUsize::new(0),
+            sessions_served: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let accept = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new().name("smz-worker-accept".into()).spawn(move || {
+                for stream in listener.incoming() {
+                    if inner.stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let peer =
+                                s.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                            crate::info!("[transport] worker connected from {peer}");
+                            inner.parked.lock().unwrap().push(FrameConn::new(s));
+                        }
+                        Err(e) => crate::debug!("[transport] accept error: {e}"),
+                    }
+                }
+            })?
+        };
+        Ok(Arc::new(WorkerHub { inner, addr: local, accept: Mutex::new(Some(accept)) }))
+    }
+
+    /// The bound listener address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Workers currently attached (parked + mid-lease) — the healthz
+    /// `workers_connected` gauge.
+    pub fn connected(&self) -> usize {
+        self.inner.parked.lock().unwrap().len() + self.inner.leased.load(Ordering::Acquire)
+    }
+
+    /// Successful session handshakes served so far (tests assert remote
+    /// participation with this, not by trusting placement).
+    pub fn sessions_served(&self) -> usize {
+        self.inner.sessions_served.load(Ordering::Acquire)
+    }
+
+    /// Block until at least `n` workers are attached (the deterministic
+    /// start for CI smokes and `--min-workers`); false on timeout.
+    pub fn wait_for_workers(&self, n: usize, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.connected() < n {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        true
+    }
+
+    /// Lease up to `want` remote sessions for one slice of the run
+    /// described by `header`: handshake each parked connection, verify
+    /// the base and dataset fingerprints, assign descending shard
+    /// ranks `workers-1, workers-2, ..` and stream the journal catch-up.
+    ///
+    /// Infallible by design: a connection that fails the handshake
+    /// (died while parked, version or fingerprint mismatch) is logged
+    /// and dropped, never fatal — the slice proceeds with fewer (or
+    /// zero) remotes and stays bit-identical either way.
+    pub fn lease(
+        self: &Arc<Self>,
+        want: usize,
+        workers: usize,
+        header: &Json,
+        data_seed: u64,
+        ds_fnv: &str,
+        records: &[StepRecord],
+    ) -> Vec<RemoteWorker> {
+        let header_line = header.to_string();
+        let want_fnv = header.get("init_fnv").and_then(|v| v.as_str().ok()).unwrap_or("");
+        let mut sessions: Vec<RemoteWorker> = Vec::new();
+        while sessions.len() < want.min(workers) {
+            let Some(mut conn) = self.inner.parked.lock().unwrap().pop() else {
+                break;
+            };
+            conn.set_timeout(Some(SESSION_TIMEOUT));
+            let rank = workers - 1 - sessions.len();
+            match handshake(
+                &mut conn, &header_line, want_fnv, data_seed, ds_fnv, rank, workers, records,
+            ) {
+                Ok(()) => {
+                    self.inner.leased.fetch_add(1, Ordering::AcqRel);
+                    self.inner.sessions_served.fetch_add(1, Ordering::AcqRel);
+                    sessions.push(RemoteWorker {
+                        conn: Some(conn),
+                        rank,
+                        hub: Arc::clone(&self.inner),
+                    });
+                }
+                Err(e) => {
+                    // the worker may still be readable enough to see why
+                    let _ = conn.send(&Frame::Abort { reason: format!("{e:#}") });
+                    crate::info!("[transport] dropping worker (handshake failed: {e:#})");
+                }
+            }
+        }
+        sessions
+    }
+
+    /// Stop accepting and drop every parked connection (workers see a
+    /// clean EOF and exit).
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::Release);
+        // poke the blocking accept loop awake
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.inner.parked.lock().unwrap().clear();
+    }
+}
+
+impl Drop for WorkerHub {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Coordinator side of one leased handshake (see [`Frame`] lifecycle).
+#[allow(clippy::too_many_arguments)]
+fn handshake(
+    conn: &mut FrameConn,
+    header_line: &str,
+    want_fnv: &str,
+    data_seed: u64,
+    want_ds: &str,
+    rank: usize,
+    workers: usize,
+    records: &[StepRecord],
+) -> Result<()> {
+    conn.send(&Frame::Config {
+        version: PROTOCOL_VERSION,
+        header: header_line.to_string(),
+        data_seed,
+    })?;
+    match conn.recv()? {
+        Frame::Hello { version, init_fnv, ds_fnv } => {
+            if version != PROTOCOL_VERSION {
+                bail!("worker speaks protocol v{version}, coordinator v{PROTOCOL_VERSION}");
+            }
+            if !want_fnv.is_empty() && init_fnv != want_fnv {
+                bail!(
+                    "worker base fingerprint {init_fnv} does not match the run's \
+                     init_fnv {want_fnv} — its --seed/--init-from resolve a different base"
+                );
+            }
+            if !want_ds.is_empty() && ds_fnv != want_ds {
+                bail!(
+                    "worker dataset fingerprint {ds_fnv} does not match the \
+                     coordinator's training split {want_ds} — the worker would not \
+                     drift, it would silently bend the trajectory, so it is refused"
+                );
+            }
+        }
+        Frame::Abort { reason } => bail!("worker refused the session: {reason}"),
+        other => bail!("expected Hello, got {other:?}"),
+    }
+    conn.send(&Frame::Welcome {
+        rank: rank as u32,
+        workers: workers as u32,
+        resume: records.len() as u32,
+    })?;
+    for rec in records {
+        conn.send(&Frame::Step(*rec))?;
+    }
+    Ok(())
+}
+
+/// One leased remote session: a handshaken worker holding shard `rank`,
+/// caught up to the journal. Dropping it without [`release`] severs the
+/// connection (the failure path); releasing parks it for the next lease.
+///
+/// [`release`]: RemoteWorker::release
+pub struct RemoteWorker {
+    conn: Option<FrameConn>,
+    /// the microbatch shard this session scores
+    pub rank: usize,
+    hub: Arc<HubInner>,
+}
+
+impl RemoteWorker {
+    fn conn(&mut self) -> &mut FrameConn {
+        self.conn.as_mut().expect("RemoteWorker used after release")
+    }
+
+    /// Send one frame (wrapped as a lost-worker error on failure).
+    pub fn send(&mut self, frame: &Frame) -> Result<()> {
+        let rank = self.rank;
+        self.conn().send(frame).map_err(|e| worker_lost(format!("rank {rank}: {e:#}")))
+    }
+
+    /// Await this session's `Losses` for `step`, validating the shard
+    /// row count. Any other frame, a short read, or a timeout is a
+    /// lost-worker error (the journal makes the retry exact, so the
+    /// caller re-queues rather than guessing).
+    pub fn recv_losses(&mut self, step: u32, rows: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+        let rank = self.rank;
+        let lost = |d: String| worker_lost(format!("rank {rank}: {d}"));
+        match self.conn().recv().map_err(|e| lost(format!("{e:#}")))? {
+            Frame::Losses { step: s, plus, minus } => {
+                if s != step {
+                    return Err(lost(format!("losses for step {s}, expected {step}")));
+                }
+                if plus.len() != rows || minus.len() != rows {
+                    return Err(lost(format!(
+                        "losses carry {}+{} rows, expected {rows}",
+                        plus.len(),
+                        minus.len()
+                    )));
+                }
+                Ok((plus, minus))
+            }
+            Frame::Abort { reason } => Err(lost(format!("worker aborted: {reason}"))),
+            other => Err(lost(format!("expected Losses, got {other:?}"))),
+        }
+    }
+
+    /// End the session with the drift check: exchange `Finish` /
+    /// `FinishAck` fingerprints of the final parameters. A mismatch is
+    /// a **hard** error (seed-sync invariant broken — re-running would
+    /// not help); an I/O failure is a plain lost worker (training
+    /// already committed, so the slice result stands).
+    pub fn finish(mut self, steps: u32, final_fnv: &str) -> Result<()> {
+        self.send(&Frame::Finish { steps, final_fnv: final_fnv.to_string() })?;
+        let rank = self.rank;
+        match self.conn().recv().map_err(|e| worker_lost(format!("rank {rank}: {e:#}")))? {
+            Frame::FinishAck { final_fnv: theirs } => {
+                if theirs != final_fnv {
+                    bail!(
+                        "remote replica rank {rank} drifted: final fingerprint {theirs} \
+                         vs coordinator {final_fnv} — seed-sync invariant broken"
+                    );
+                }
+            }
+            Frame::Abort { reason } => {
+                bail!("remote replica rank {rank} refused finish: {reason}")
+            }
+            other => return Err(worker_lost(format!("rank {rank}: expected FinishAck, got {other:?}"))),
+        }
+        self.release();
+        Ok(())
+    }
+
+    /// Park the connection back in the hub for the next lease.
+    pub fn release(mut self) {
+        if let Some(conn) = self.conn.take() {
+            conn.set_timeout(None);
+            self.hub.parked.lock().unwrap().push(conn);
+        }
+        // Drop decrements `leased`
+    }
+}
+
+impl Drop for RemoteWorker {
+    fn drop(&mut self) {
+        self.hub.leased.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// The coordinator-side knobs [`DpTrainer`](super::DpTrainer) needs to
+/// farm shards out: the hub and the dataset seed (the journal header
+/// does not carry it — grid cells may train on a different data seed
+/// than the run seed).
+#[derive(Clone)]
+pub struct RemoteHandle {
+    /// the hub remote workers are parked in
+    pub hub: Arc<WorkerHub>,
+    /// seed the workers regenerate the task dataset from; **must**
+    /// match the dataset the coordinator trains on (the end-of-slice
+    /// fingerprint check catches a mismatch, but loudly and late)
+    pub data_seed: u64,
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// `worker` subcommand policy.
+pub struct WorkerOpts {
+    /// base-init seed — must match the coordinator's serve/drain
+    /// `--seed` (the handshake fingerprint makes a mismatch a hard
+    /// error, not silent divergence)
+    pub seed: u64,
+    /// base checkpoint path (takes precedence over `seed`, mirroring
+    /// the serve layer's `resolve_serve_base`)
+    pub init_from: Option<String>,
+    /// how long to retry the initial connect (the coordinator may not
+    /// be listening yet)
+    pub connect_timeout: Duration,
+    /// fault-injection hook: process at most this many `PhaseA` frames,
+    /// then die without replying — deterministically simulates a worker
+    /// killed mid-slice (tests only; `None` in production)
+    pub max_phase_a: Option<usize>,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            seed: 42,
+            init_from: None,
+            connect_timeout: Duration::from_secs(30),
+            max_phase_a: None,
+        }
+    }
+}
+
+/// What a worker run accomplished (logging + test assertions).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerStats {
+    /// completed (Finish-acked) sessions
+    pub sessions: usize,
+    /// live optimizer steps participated in (catch-up replay excluded)
+    pub steps: usize,
+}
+
+/// How one session ended (worker side).
+enum SessionEnd {
+    /// clean `Finish`/`FinishAck` exchange; the connection is reusable
+    Finished,
+    /// the coordinator discarded the slice (cancel, divergence, or a
+    /// lost sibling worker); the socket may hold half-exchanged frames,
+    /// so the worker reconnects fresh
+    Discarded,
+}
+
+/// Run a remote DP replica against the coordinator at `addr`
+/// (`host:port`): connect (with retry), then serve sessions until the
+/// coordinator closes an idle connection. A discarded session (the
+/// coordinator cancelled the slice or lost a sibling worker) is
+/// survived by reconnecting with a fresh socket — only worker-side hard
+/// errors (mismatched base, protocol violation) kill the process, as
+/// does losing the coordinator entirely.
+pub fn run_worker(
+    rt: &Runtime,
+    pool: &WorkerPool,
+    addr: &str,
+    opts: &WorkerOpts,
+) -> Result<WorkerStats> {
+    let mut bases: BTreeMap<String, Arc<Vec<f32>>> = BTreeMap::new();
+    let mut stats = WorkerStats::default();
+    let mut phase_a_budget = opts.max_phase_a;
+    // a deterministic local failure must not reconnect-loop forever; a
+    // session that finishes (or that the coordinator discards on its own
+    // initiative) resets the strike count
+    let mut strikes = 0usize;
+    'reconnect: loop {
+        let stream = connect_retry(addr, opts.connect_timeout)?;
+        let mut conn = FrameConn::new(stream);
+        crate::info!("[worker] connected to coordinator {addr}");
+        loop {
+            // idle between sessions: a clean close here is the
+            // coordinator shutting down, not a failure
+            let frame = match conn.recv_opt() {
+                Ok(None) => return Ok(stats),
+                Ok(Some(f)) => f,
+                Err(e) => {
+                    crate::info!("[worker] connection lost while idle ({e:#}); reconnecting");
+                    continue 'reconnect;
+                }
+            };
+            match frame {
+                Frame::Config { version, header, data_seed } => {
+                    if version != PROTOCOL_VERSION {
+                        let reason = format!(
+                            "coordinator speaks protocol v{version}, worker v{PROTOCOL_VERSION}"
+                        );
+                        let _ = conn.send(&Frame::Abort { reason: reason.clone() });
+                        return Err(fatal(reason));
+                    }
+                    match run_session(
+                        rt,
+                        pool,
+                        &mut conn,
+                        &header,
+                        data_seed,
+                        opts,
+                        &mut bases,
+                        &mut stats,
+                        &mut phase_a_budget,
+                    ) {
+                        Ok(SessionEnd::Finished) => strikes = 0, // socket clean; stay parked
+                        Ok(SessionEnd::Discarded) => {
+                            strikes = 0;
+                            crate::info!("[worker] session discarded; reconnecting");
+                            continue 'reconnect;
+                        }
+                        Err(e) if is_fatal(&e) => return Err(e),
+                        Err(e) if strikes >= 7 => {
+                            return Err(e.context("8 consecutive failed sessions"));
+                        }
+                        Err(e) => {
+                            // transport failure mid-session: the slice is
+                            // the coordinator's to retry from the journal
+                            strikes += 1;
+                            crate::info!("[worker] session dropped ({e:#}); reconnecting");
+                            continue 'reconnect;
+                        }
+                    }
+                }
+                Frame::Abort { reason } => {
+                    // an idle-time Abort is the handshake rejection path —
+                    // hard by design (e.g. the coordinator refused our base)
+                    return Err(fatal(format!("coordinator rejected worker: {reason}")));
+                }
+                other => {
+                    let reason = format!("expected Config, got {other:?}");
+                    let _ = conn.send(&Frame::Abort { reason: reason.clone() });
+                    return Err(fatal(reason));
+                }
+            }
+        }
+    }
+}
+
+fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) if t0.elapsed() < timeout => {
+                crate::debug!("[worker] connect {addr}: {e}; retrying");
+                std::thread::sleep(Duration::from_millis(200));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("connecting to coordinator {addr} (waited {timeout:?})")
+                })
+            }
+        }
+    }
+}
+
+/// One session: handshake (base fingerprint check), catch-up replay,
+/// then the live PhaseA/Losses/Step loop until `Finish`. The session's
+/// replica state lives only on this stack frame — the journal on the
+/// coordinator side stays the single authority.
+#[allow(clippy::too_many_arguments)]
+fn run_session(
+    rt: &Runtime,
+    pool: &WorkerPool,
+    conn: &mut FrameConn,
+    header_line: &str,
+    data_seed: u64,
+    opts: &WorkerOpts,
+    bases: &mut BTreeMap<String, Arc<Vec<f32>>>,
+    stats: &mut WorkerStats,
+    phase_a_budget: &mut Option<usize>,
+) -> Result<SessionEnd> {
+    // a protocol violation aborts loudly in both directions and is a
+    // hard (process-killing) error on this side
+    macro_rules! abort {
+        ($($arg:tt)*) => {{
+            let reason = format!($($arg)*);
+            let _ = conn.send(&Frame::Abort { reason: reason.clone() });
+            return Err(fatal(reason));
+        }};
+    }
+
+    let header = crate::util::json::parse(header_line).context("parsing Config header")?;
+    let cfg = protocol::config_from_header(&header)?;
+    let Some(rule) = dp_rule(&cfg.optimizer) else {
+        abort!("optimizer '{}' is not DP-capable", cfg.optimizer);
+    };
+    let model = rt.model(&cfg.model)?.clone();
+    let backend = rt.backend();
+
+    // resolve the base exactly like the serve layer (checkpoint or the
+    // deterministic init for the *worker's* seed), cached per model —
+    // only fingerprints cross the wire
+    let base = match bases.get(&cfg.model) {
+        Some(b) => Arc::clone(b),
+        None => {
+            let b = Arc::new(resolve_worker_base(rt, &model, opts)?);
+            bases.insert(cfg.model.clone(), Arc::clone(&b));
+            b
+        }
+    };
+    let my_fnv = params_fingerprint(&base);
+    let want_fnv = header.req("init_fnv")?.as_str()?;
+    if my_fnv != want_fnv {
+        abort!(
+            "base fingerprint mismatch: run wants init_fnv {want_fnv}, this worker's \
+             --seed/--init-from resolve {my_fnv} — start the worker with the \
+             coordinator's base"
+        );
+    }
+    // regenerate the training data deterministically from (task, seed)
+    // before Hello so its fingerprint rides the handshake
+    let dataset = tasks::generate(&cfg.task, data_seed)?;
+    conn.send(&Frame::Hello {
+        version: PROTOCOL_VERSION,
+        init_fnv: my_fnv,
+        ds_fnv: train_fingerprint(&dataset.train),
+    })?;
+
+    let (rank, workers, resume) = match conn.recv()? {
+        Frame::Welcome { rank, workers, resume } => {
+            (rank as usize, workers as usize, resume as usize)
+        }
+        Frame::Abort { reason } => {
+            return Err(fatal(format!("coordinator rejected hello: {reason}")))
+        }
+        other => abort!("expected Welcome, got {other:?}"),
+    };
+    if workers == 0 || rank >= workers || model.batch % workers != 0 {
+        abort!("bad shard assignment rank {rank} of {workers} (batch {})", model.batch);
+    }
+
+    // replica state, rebuilt fresh every session
+    let p = model.n_params;
+    let mut params = base.as_ref().clone();
+    let mut slots = vec![0.0f32; dp_slot_len(&cfg.optimizer, p)];
+    let mut thresholds = backend.thresholds(&model, &params, cfg.hypers.sparsity)?;
+    let mut mask_epoch = 0u32;
+    let eps = cfg.hypers.eps;
+
+    let zo_noise_sharded = |seed: (u32, u32), params_dst: &mut Vec<f32>| -> Result<()> {
+        // identical bits to any other chunking by the counter-PRNG
+        // contract; reuse the caller's buffer to skip an alloc per step
+        let chunks = pool.parallelism().min(p).max(1);
+        let chunk_len = (p + chunks - 1) / chunks;
+        let parts = pool.scatter(chunks, |c| {
+            let lo = (c * chunk_len).min(p);
+            let hi = ((c + 1) * chunk_len).min(p);
+            if lo >= hi {
+                Ok(Vec::new())
+            } else {
+                backend.zo_noise(&model, seed, lo, hi)
+            }
+        });
+        params_dst.clear();
+        for part in parts {
+            params_dst.extend(part?);
+        }
+        Ok(())
+    };
+
+    // catch-up: replay the journal's committed records (the exact
+    // per-record arithmetic of protocol::replay_full — no forward passes)
+    let mut z = Vec::with_capacity(p);
+    for _ in 0..resume {
+        match conn.recv()? {
+            Frame::Step(rec) => {
+                if rec.mask_epoch != mask_epoch {
+                    thresholds = backend.thresholds(&model, &params, cfg.hypers.sparsity)?;
+                    mask_epoch = rec.mask_epoch;
+                }
+                let mask =
+                    backend.zo_mask(&model, &cfg.optimizer, &cfg.hypers, &thresholds, &params)?;
+                zo_noise_sharded(rec.seed, &mut z)?;
+                perturb_in_place(&mut params, &z, mask.as_deref(), eps);
+                perturb_in_place(&mut params, &z, mask.as_deref(), -2.0 * eps);
+                apply_update(
+                    &mut params,
+                    &mut slots,
+                    &z,
+                    mask.as_deref(),
+                    &cfg.hypers,
+                    rec.scalar,
+                    rule,
+                );
+            }
+            other => abort!("expected catch-up Step, got {other:?}"),
+        }
+    }
+
+    // the loader walks the same shuffled order as the coordinator's
+    let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, cfg.seed)?;
+    loader.skip(resume);
+    let rows_per = model.batch / workers;
+    let shard_tok = rows_per * model.seq_len;
+    let mut expected_step = resume as u32;
+    // phase-A context the commit Step consumes: (step, z, mask)
+    let mut pending: Option<(u32, Vec<f32>, Option<Vec<u8>>)> = None;
+
+    crate::info!(
+        "[worker] session: {} rank {rank}/{workers}, resume {resume} ({} live steps max)",
+        cfg.label(),
+        cfg.steps.saturating_sub(resume)
+    );
+
+    loop {
+        match conn.recv()? {
+            Frame::Refresh { mask_epoch: e } => {
+                thresholds = backend.thresholds(&model, &params, cfg.hypers.sparsity)?;
+                mask_epoch = e;
+            }
+            Frame::PhaseA { step, seed, mask_epoch: e } => {
+                if let Some(budget) = phase_a_budget {
+                    if *budget == 0 {
+                        // fault-injection hook: die without replying,
+                        // exactly like a worker killed mid-step (fatal:
+                        // the simulated process must not auto-recover)
+                        return Err(fatal(format!("injected worker kill before step {step}")));
+                    }
+                    *budget -= 1;
+                }
+                if step != expected_step || e != mask_epoch {
+                    abort!(
+                        "lockstep broken: PhaseA step {step} epoch {e}, \
+                         worker at step {expected_step} epoch {mask_epoch}"
+                    );
+                }
+                let batch = loader.next_batch();
+                let mask =
+                    backend.zo_mask(&model, &cfg.optimizer, &cfg.hypers, &thresholds, &params)?;
+                zo_noise_sharded(seed, &mut z)?;
+                let tokens = &batch.tokens[rank * shard_tok..(rank + 1) * shard_tok];
+                let labels = &batch.labels[rank * rows_per..(rank + 1) * rows_per];
+                perturb_in_place(&mut params, &z, mask.as_deref(), eps);
+                let plus = backend.row_losses(&model, &params, tokens, labels)?;
+                perturb_in_place(&mut params, &z, mask.as_deref(), -2.0 * eps);
+                let minus = backend.row_losses(&model, &params, tokens, labels)?;
+                conn.send(&Frame::Losses { step, plus, minus })?;
+                pending = Some((step, std::mem::take(&mut z), mask));
+            }
+            Frame::Step(rec) => {
+                let Some((step, pz, mask)) = pending.take() else {
+                    abort!("Step {} outside a phase-A exchange", rec.step);
+                };
+                if rec.step != step {
+                    abort!("commit for step {}, expected {step}", rec.step);
+                }
+                apply_update(
+                    &mut params,
+                    &mut slots,
+                    &pz,
+                    mask.as_deref(),
+                    &cfg.hypers,
+                    rec.scalar,
+                    rule,
+                );
+                z = pz; // reclaim the buffer
+                expected_step += 1;
+                stats.steps += 1;
+            }
+            Frame::Finish { steps, final_fnv } => {
+                if pending.is_some() || steps != expected_step {
+                    abort!(
+                        "Finish at step {steps} but worker is at {expected_step} \
+                         (mid-exchange: {})",
+                        pending.is_some()
+                    );
+                }
+                let my_final = params_fingerprint(&params);
+                if my_final != final_fnv {
+                    abort!(
+                        "final fingerprint mismatch after {steps} steps: worker {my_final}, \
+                         coordinator {final_fnv} — replica drifted"
+                    );
+                }
+                conn.send(&Frame::FinishAck { final_fnv: my_final })?;
+                stats.sessions += 1;
+                crate::info!(
+                    "[worker] session done: {steps} steps, fingerprint {my_final}"
+                );
+                return Ok(SessionEnd::Finished);
+            }
+            Frame::Abort { reason } => {
+                // coordinator-side cancel/divergence/lost-sibling: the
+                // session's state is discarded
+                crate::info!("[worker] session aborted by coordinator: {reason}");
+                return Ok(SessionEnd::Discarded);
+            }
+            other => abort!("unexpected frame in live loop: {other:?}"),
+        }
+    }
+}
+
+/// The worker's base parameters: a checkpoint when configured, else the
+/// deterministic init stream for `opts.seed` — byte-identical policy to
+/// the serve layer's `resolve_serve_base`.
+fn resolve_worker_base(
+    rt: &Runtime,
+    model: &crate::runtime::ModelInfo,
+    opts: &WorkerOpts,
+) -> Result<Vec<f32>> {
+    use crate::coordinator::checkpoint::Checkpoint;
+    use crate::runtime::exec::InitExec;
+    match &opts.init_from {
+        Some(path) => Ok(Checkpoint::load(std::path::Path::new(path), model)
+            .with_context(|| format!("loading base checkpoint {path}"))?
+            .params),
+        None => InitExec::load(rt, model)?.run(rt, (opts.seed as u32, 0x1717)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Config {
+                version: PROTOCOL_VERSION,
+                header: "{\"kind\":\"dp-journal\"}".into(),
+                data_seed: u64::MAX,
+            },
+            Frame::Hello {
+                version: 1,
+                init_fnv: "00ff00ff00ff00ff".into(),
+                ds_fnv: "123456789abcdef0".into(),
+            },
+            Frame::Welcome { rank: 1, workers: 2, resume: 3 },
+            Frame::Refresh { mask_epoch: u32::MAX },
+            Frame::PhaseA { step: 7, seed: (11, 7), mask_epoch: 1 },
+            Frame::Losses { step: 7, plus: vec![0.5, -0.0, f64::MIN_POSITIVE], minus: vec![] },
+            Frame::Step(StepRecord {
+                step: 7,
+                seed: (u32::MAX, 0),
+                scalar: -0.0,
+                mask_epoch: 2,
+            }),
+            Frame::Finish { steps: 8, final_fnv: "cbf29ce484222325".into() },
+            Frame::FinishAck { final_fnv: "cbf29ce484222325".into() },
+            Frame::Abort { reason: "because".into() },
+        ]
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        for f in sample_frames() {
+            let bytes = encode_frame(&f);
+            let (back, used) = decode_frame(&bytes).unwrap().unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(encode_frame(&back), bytes, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn partial_frames_request_more_bytes() {
+        let bytes = encode_frame(&Frame::Refresh { mask_epoch: 9 });
+        for cut in 0..bytes.len() {
+            assert!(decode_frame(&bytes[..cut]).unwrap().is_none(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn oversized_and_malformed_frames_error_cleanly() {
+        // oversized length prefix: refused with 4 bytes in hand (i.e.
+        // before any allocation could be sized from it)
+        let mut huge = ((MAX_FRAME_BYTES + 1) as u32).to_le_bytes().to_vec();
+        huge.push(TAG_REFRESH);
+        assert!(decode_frame(&huge).unwrap_err().to_string().contains("exceeds cap"));
+        assert!(decode_frame(&u32::MAX.to_le_bytes()).is_err());
+        // zero-length body (no tag)
+        assert!(decode_frame(&0u32.to_le_bytes()).is_err());
+        // unknown tag
+        let unk = [1u32.to_le_bytes().to_vec(), vec![99u8]].concat();
+        assert!(decode_frame(&unk).unwrap_err().to_string().contains("unknown frame tag"));
+        // trailing garbage inside a frame body
+        let mut tr = encode_frame(&Frame::Refresh { mask_epoch: 1 });
+        tr.splice(0..4, ((tr.len() - 4 + 1) as u32).to_le_bytes());
+        tr.push(0xAA);
+        assert!(decode_frame(&tr).unwrap_err().to_string().contains("trailing"));
+        // f64 count larger than the body: refused before allocation
+        let mut body = vec![TAG_LOSSES];
+        put_u32(&mut body, 3);
+        put_u32(&mut body, u32::MAX); // plus-count lies
+        let mut buf = (body.len() as u32).to_le_bytes().to_vec();
+        buf.extend(body);
+        assert!(decode_frame(&buf).unwrap_err().to_string().contains("exceeds frame body"));
+    }
+
+    #[test]
+    fn worker_lost_marker_survives_context() {
+        let e = worker_lost("rank 1: connection reset").context("slice 3");
+        assert!(is_worker_lost(&e));
+        assert!(!is_worker_lost(&anyhow!("some other error")));
+    }
+}

@@ -27,7 +27,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::ServeConfig;
 use crate::data::batcher::pad_prompt;
 use crate::jobs::JobQueue;
-use crate::parallel::WorkerPool;
+use crate::parallel::{WorkerHub, WorkerPool};
 use crate::runtime::{ModelInfo, Runtime};
 
 use super::registry::AdapterRegistry;
@@ -245,6 +245,9 @@ pub struct ServeEngine {
     pub batcher: MicroBatcher,
     /// job orchestration, when enabled (`--jobs-dir`)
     jobs: Option<JobsHandle>,
+    /// TCP hub parking remote `worker` processes for the scheduler to
+    /// lease, when enabled (`--listen-workers`)
+    worker_hub: Option<Arc<WorkerHub>>,
 }
 
 impl ServeEngine {
@@ -261,6 +264,7 @@ impl ServeEngine {
             pool: WorkerPool::new(cfg.workers),
             batcher: MicroBatcher::new(cfg.max_batch_rows, cfg.flush_ms),
             jobs: None,
+            worker_hub: None,
         })
     }
 
@@ -276,6 +280,19 @@ impl ServeEngine {
     /// The jobs wiring, when enabled.
     pub fn jobs(&self) -> Option<&JobsHandle> {
         self.jobs.as_ref()
+    }
+
+    /// Attach a worker hub: multi-shard job slices lease remote replicas
+    /// from it (see [`crate::parallel::transport`]). Call before
+    /// wrapping the engine in an [`Arc`].
+    pub fn with_worker_hub(mut self, hub: Arc<WorkerHub>) -> ServeEngine {
+        self.worker_hub = Some(hub);
+        self
+    }
+
+    /// The TCP worker hub, when enabled.
+    pub fn worker_hub(&self) -> Option<&Arc<WorkerHub>> {
+        self.worker_hub.as_ref()
     }
 
     /// The served model's ABI description.

@@ -8,7 +8,7 @@
 //!
 //! | method + path                | action |
 //! |------------------------------|--------|
-//! | `GET  /healthz`              | liveness + registry/queue/jobs gauges |
+//! | `GET  /healthz`              | liveness + registry/queue/jobs/remote-worker gauges |
 //! | `GET  /v1/adapters`          | list registered adapters (nnz, bytes, hits, pins) |
 //! | `POST /v1/adapters`          | register: `{"name", "journal": path}` replays a step journal against the base and extracts the delta under its mask-union certificate; `{"name", "delta": path}` loads a saved `.adapter` file |
 //! | `POST /v1/classify`          | `{"adapter", "prompts": [[tok,...],...]}` → per-row logits + candidate-free argmax, micro-batched with concurrent same-adapter requests; the adapter is pinned against eviction while the request is in flight |
@@ -354,6 +354,10 @@ fn healthz(engine: &ServeEngine) -> Json {
         fields.push(("jobs_active", Json::Num(handle.queue.active() as f64)));
     } else {
         fields.push(("jobs_enabled", Json::Bool(false)));
+    }
+    if let Some(hub) = engine.worker_hub() {
+        fields.push(("workers_connected", Json::Num(hub.connected() as f64)));
+        fields.push(("worker_sessions_served", Json::Num(hub.sessions_served() as f64)));
     }
     Json::obj(fields)
 }

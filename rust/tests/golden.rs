@@ -48,3 +48,121 @@ fn prng_matches_python_goldens() {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// Golden wire format: the TCP transport's byte layout is a compatibility
+// contract between coordinator and worker builds. This fixture pins the
+// exact bytes of a handshake + 3-step exchange; any diff is a protocol
+// break and must come with a PROTOCOL_VERSION bump and a deliberate
+// fixture regeneration (`cargo test --test golden -- --ignored regen`).
+// ---------------------------------------------------------------------------
+
+use sparse_mezo::parallel::protocol::StepRecord;
+use sparse_mezo::parallel::transport::{decode_frame, encode_frame, Frame, PROTOCOL_VERSION};
+
+const WIRE_FIXTURE: &str = "tests/data/golden_wire.hex";
+
+/// The canonical exchange the fixture records: handshake, three steps with
+/// adversarial scalars (-0.0, f32::MIN_POSITIVE, the smallest subnormal;
+/// -0.0 and f64::MIN_POSITIVE among the per-row losses), clean finish.
+fn golden_exchange() -> Vec<Frame> {
+    let seed = |s: u32| (2 * s + 1, 0x1717);
+    let scalars = [-0.0f32, f32::MIN_POSITIVE, f32::from_bits(1)];
+    let mut frames = vec![
+        Frame::Config {
+            version: PROTOCOL_VERSION,
+            header: r#"{"kind":"dp-journal","v":1}"#.into(),
+            data_seed: 42,
+        },
+        Frame::Hello {
+            version: PROTOCOL_VERSION,
+            init_fnv: "cbf29ce484222325".into(),
+            ds_fnv: "00000100000001b3".into(),
+        },
+        Frame::Welcome { rank: 1, workers: 2, resume: 0 },
+        Frame::Refresh { mask_epoch: 0 },
+    ];
+    for step in 0u32..3 {
+        frames.push(Frame::PhaseA { step, seed: seed(step), mask_epoch: 0 });
+        frames.push(Frame::Losses {
+            step,
+            plus: vec![0.5 + step as f64, -0.0],
+            minus: vec![f64::MIN_POSITIVE, step as f64],
+        });
+        frames.push(Frame::Step(StepRecord {
+            step,
+            seed: seed(step),
+            scalar: scalars[step as usize],
+            mask_epoch: 0,
+        }));
+    }
+    frames.push(Frame::Finish { steps: 3, final_fnv: "00000000deadbeef".into() });
+    frames.push(Frame::FinishAck { final_fnv: "00000000deadbeef".into() });
+    frames
+}
+
+fn to_hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn from_hex(s: &str) -> Vec<u8> {
+    assert!(s.len() % 2 == 0, "odd hex length in fixture: {s}");
+    (0..s.len() / 2)
+        .map(|i| u8::from_str_radix(&s[2 * i..2 * i + 2], 16).expect("bad hex in fixture"))
+        .collect()
+}
+
+fn fixture_lines(text: &str) -> Vec<String> {
+    text.lines()
+        .map(|l| l.split('#').next().unwrap_or("").trim().to_string())
+        .filter(|l| !l.is_empty())
+        .collect()
+}
+
+#[test]
+fn wire_format_matches_committed_fixture() {
+    let frames = golden_exchange();
+    let text = std::fs::read_to_string(WIRE_FIXTURE)
+        .expect("tests/data/golden_wire.hex missing — regenerate with the ignored 'regen' test");
+    let lines = fixture_lines(&text);
+    assert_eq!(lines.len(), frames.len(), "fixture frame count drifted");
+    for (i, (line, frame)) in lines.iter().zip(&frames).enumerate() {
+        assert_eq!(
+            &to_hex(&encode_frame(frame)),
+            line,
+            "frame {i} ({frame:?}) encodes differently than the committed fixture — \
+             this is a wire protocol break; bump PROTOCOL_VERSION and regenerate"
+        );
+    }
+
+    // and the committed bytes decode back to the exact same frames, one
+    // frame per fixture line, consuming every byte
+    let stream: Vec<u8> = lines.iter().flat_map(|l| from_hex(l)).collect();
+    let mut pos = 0;
+    for (i, frame) in frames.iter().enumerate() {
+        let (decoded, used) = decode_frame(&stream[pos..])
+            .expect("fixture bytes must decode")
+            .expect("fixture frame must be complete");
+        assert_eq!(&decoded, frame, "fixture frame {i} decoded differently");
+        pos += used;
+    }
+    assert_eq!(pos, stream.len(), "fixture has trailing bytes");
+}
+
+/// Regenerates the fixture in place. Run deliberately, never in CI:
+/// `cargo test --test golden -- --ignored regen`
+#[test]
+#[ignore]
+fn regen_wire_fixture() {
+    let mut out = String::from(
+        "# Golden wire fixture: handshake + 3-step exchange, one frame per line.\n\
+         # Regenerate ONLY on a deliberate protocol break (bump PROTOCOL_VERSION):\n\
+         #   cargo test --test golden -- --ignored regen  (see tests/golden.rs)\n",
+    );
+    for frame in golden_exchange() {
+        let name = format!("{frame:?}");
+        let name = name.split(['(', ' ', '{']).next().unwrap_or("?");
+        out.push_str(&format!("{}  # {name}\n", to_hex(&encode_frame(&frame))));
+    }
+    std::fs::write(WIRE_FIXTURE, out).unwrap();
+}

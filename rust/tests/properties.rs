@@ -254,3 +254,154 @@ fn prop_dataset_generation_total_order_deterministic() {
         assert_eq!(a.test, b.test);
     });
 }
+
+// ---------------------------------------------------------------------------
+// Wire codec properties (parallel::transport): the TCP frame codec must
+// round-trip every representable frame bit-exactly — including the scalars a
+// fuzzer or a hostile peer would pick — and must never panic on arbitrary
+// bytes, because the decoder runs on attacker-controlled network input.
+// ---------------------------------------------------------------------------
+
+use sparse_mezo::parallel::protocol::StepRecord;
+use sparse_mezo::parallel::transport::{decode_frame, encode_frame, Frame, PROTOCOL_VERSION};
+
+/// IEEE-754 corner cases first, then arbitrary bit patterns (which include
+/// NaN payloads and subnormals anyway).
+fn adversarial_f32(rng: &mut Pcg32) -> f32 {
+    match rng.below(12) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f32::MIN_POSITIVE,
+        3 => f32::from_bits(1), // smallest positive subnormal
+        4 => f32::MAX,
+        5 => -f32::MAX,
+        6 => f32::INFINITY,
+        7 => f32::NEG_INFINITY,
+        8 => f32::NAN,
+        _ => f32::from_bits(rng.next_u32()),
+    }
+}
+
+fn adversarial_f64(rng: &mut Pcg32) -> f64 {
+    match rng.below(12) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f64::MIN_POSITIVE,
+        3 => f64::from_bits(1),
+        4 => f64::MAX,
+        5 => -f64::MAX,
+        6 => f64::INFINITY,
+        7 => f64::NEG_INFINITY,
+        8 => f64::NAN,
+        _ => f64::from_bits(((rng.next_u32() as u64) << 32) | rng.next_u32() as u64),
+    }
+}
+
+fn adversarial_u32(rng: &mut Pcg32) -> u32 {
+    match rng.below(4) {
+        0 => 0,
+        1 => 1,
+        2 => u32::MAX,
+        _ => rng.next_u32(),
+    }
+}
+
+fn adversarial_string(rng: &mut Pcg32) -> String {
+    let n = rng.below(40) as usize;
+    (0..n)
+        .map(|_| char::from_u32(0x20 + rng.below(0x24F0)).unwrap_or('\u{FFFD}'))
+        .collect()
+}
+
+fn random_frame(rng: &mut Pcg32) -> Frame {
+    match rng.below(10) {
+        0 => Frame::Config {
+            version: adversarial_u32(rng),
+            header: adversarial_string(rng),
+            data_seed: ((adversarial_u32(rng) as u64) << 32) | adversarial_u32(rng) as u64,
+        },
+        1 => Frame::Hello {
+            version: PROTOCOL_VERSION,
+            init_fnv: adversarial_string(rng),
+            ds_fnv: adversarial_string(rng),
+        },
+        2 => Frame::Welcome {
+            rank: adversarial_u32(rng),
+            workers: adversarial_u32(rng),
+            resume: adversarial_u32(rng),
+        },
+        3 => Frame::Refresh { mask_epoch: adversarial_u32(rng) },
+        4 => Frame::PhaseA {
+            step: adversarial_u32(rng),
+            seed: (adversarial_u32(rng), adversarial_u32(rng)),
+            mask_epoch: adversarial_u32(rng),
+        },
+        5 => Frame::Losses {
+            step: adversarial_u32(rng),
+            plus: (0..rng.below(9)).map(|_| adversarial_f64(rng)).collect(),
+            minus: (0..rng.below(9)).map(|_| adversarial_f64(rng)).collect(),
+        },
+        6 => Frame::Step(StepRecord {
+            step: adversarial_u32(rng),
+            seed: (adversarial_u32(rng), adversarial_u32(rng)),
+            scalar: adversarial_f32(rng),
+            mask_epoch: adversarial_u32(rng),
+        }),
+        7 => Frame::Finish { steps: adversarial_u32(rng), final_fnv: adversarial_string(rng) },
+        8 => Frame::FinishAck { final_fnv: adversarial_string(rng) },
+        _ => Frame::Abort { reason: adversarial_string(rng) },
+    }
+}
+
+#[test]
+fn prop_wire_codec_round_trips_bit_exactly() {
+    // Compare re-encoded BYTES, not frames: NaN != NaN under PartialEq, but
+    // the wire must still carry the exact bit pattern through.
+    forall("wire codec round-trip", 300, |seed| {
+        let mut rng = Pcg32::new(seed, 0x77AE);
+        let frame = random_frame(&mut rng);
+        let bytes = encode_frame(&frame);
+        let (decoded, used) = decode_frame(&bytes)
+            .expect("well-formed frame must decode")
+            .expect("complete frame must not ask for more bytes");
+        assert_eq!(used, bytes.len(), "decode must consume the whole frame");
+        assert_eq!(encode_frame(&decoded), bytes, "re-encoding changed the bits");
+    });
+}
+
+#[test]
+fn prop_wire_decode_never_panics_on_arbitrary_bytes() {
+    // forall's catch_unwind turns any decoder panic into a test failure with
+    // the offending seed; Err results are fine, panics and over-reads are not.
+    forall("wire decode never panics", 1000, |seed| {
+        let mut rng = Pcg32::new(seed, 0x77AF);
+        let n = rng.below(64) as usize;
+        let mut buf: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        if rng.chance(0.5) && buf.len() >= 4 {
+            // half the cases: a plausible length prefix so the body parsers
+            // (tag dispatch, string/f64 length fields) actually get reached
+            let body_len = 1 + rng.below(24);
+            buf[..4].copy_from_slice(&body_len.to_le_bytes());
+        }
+        if let Ok(Some((_, used))) = decode_frame(&buf) {
+            assert!(used <= buf.len(), "decoder claimed more bytes than it was given");
+        }
+    });
+}
+
+#[test]
+fn prop_wire_torn_prefix_never_errors() {
+    // A clean prefix of a valid frame is "not enough bytes yet" — never an
+    // error and never a bogus decode.
+    forall("torn frame prefix", 200, |seed| {
+        let mut rng = Pcg32::new(seed, 0x77B0);
+        let bytes = encode_frame(&random_frame(&mut rng));
+        for cut in 0..bytes.len() {
+            match decode_frame(&bytes[..cut]) {
+                Ok(None) => {}
+                Ok(Some(_)) => panic!("decoded a frame from a {cut}-byte prefix of {}", bytes.len()),
+                Err(e) => panic!("torn prefix at {cut} errored: {e:#}"),
+            }
+        }
+    });
+}

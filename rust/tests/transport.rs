@@ -1,0 +1,277 @@
+//! Integration tests for multi-node seed-sync training over TCP
+//! (`parallel::transport`).
+//!
+//! The contracts under test are exact, not approximate:
+//!
+//! * A slice run with remote TCP workers is **bit-identical** to the
+//!   serial [`Trainer`] and to in-process DP of the same config — the
+//!   coordinator folds per-row losses in canonical rank order no matter
+//!   where the rows were computed.
+//! * A worker process dying mid-slice surfaces as a re-queueable
+//!   [`is_worker_lost`] error, and the resumed run (journal replay +
+//!   fresh workers) still lands on the uninterrupted parameters bit for
+//!   bit — the journal, not any socket, is the authority.
+//! * The jobs scheduler leases hub workers transparently: a killed
+//!   worker re-queues the job (never fails it), and the drained job's
+//!   published adapter serves the exact uninterrupted logits.
+//!
+//! CI runs this suite with the default harness and `--test-threads=1`.
+
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use sparse_mezo::config::{ServeConfig, TrainConfig};
+use sparse_mezo::coordinator::trainer::Trainer;
+use sparse_mezo::data::batcher::pad_prompt;
+use sparse_mezo::data::{tasks, Dataset};
+use sparse_mezo::jobs::{JobQueue, JobSpec, JobState, Scheduler};
+use sparse_mezo::parallel::{
+    is_worker_lost, run_worker, DpTrainer, RemoteHandle, WorkerHub, WorkerOpts, WorkerPool,
+};
+use sparse_mezo::runtime::exec::InitExec;
+use sparse_mezo::runtime::{ModelInfo, Runtime};
+use sparse_mezo::serve::ServeEngine;
+
+/// One shared native runtime per test process (worker threads included:
+/// a remote worker shares nothing *logically* — every session rebuilds
+/// replica state from the wire — so sharing the compute runtime is fine).
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(Runtime::native)
+}
+
+fn model() -> ModelInfo {
+    rt().model("llama_tiny").unwrap().clone()
+}
+
+/// The deterministic base for seed 11 — what a worker started with
+/// `--seed 11` resolves to, so handshakes agree on `init_fnv`.
+fn base_params(m: &ModelInfo) -> Vec<f32> {
+    InitExec::load(rt(), m).unwrap().run(rt(), (11, 0x1717)).unwrap()
+}
+
+/// Full-size dataset: the worker regenerates `tasks::generate(task,
+/// data_seed)` on its side, so the coordinator must train on exactly
+/// that split for the dataset fingerprints to match.
+fn dataset() -> Dataset {
+    tasks::generate("rte", 11).unwrap()
+}
+
+fn tiny_cfg(steps: usize, workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.eval_cap = 16;
+    cfg.seed = 11;
+    cfg.workers = workers;
+    cfg
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("smz_tcp_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: coord {i} ({x} vs {y})");
+    }
+}
+
+/// Spawn a `run_worker` thread against `hub` (what `sparse_mezo worker
+/// --coordinator <addr> --seed 11` runs in its own process).
+fn spawn_worker(
+    hub: &Arc<WorkerHub>,
+    max_phase_a: Option<usize>,
+) -> std::thread::JoinHandle<anyhow::Result<sparse_mezo::parallel::WorkerStats>> {
+    let addr = hub.addr().to_string();
+    std::thread::spawn(move || {
+        let pool = WorkerPool::new(1);
+        let opts = WorkerOpts { seed: 11, max_phase_a, ..WorkerOpts::default() };
+        run_worker(rt(), &pool, &addr, &opts)
+    })
+}
+
+#[test]
+fn two_tcp_workers_bit_identical_to_serial_and_in_process_dp() {
+    // the acceptance property: coordinator + 2 remote TCP replicas + 2
+    // local shards == in-process 4-way DP == the serial trainer, to the
+    // bit, because placement only changes where rows are computed, never
+    // the canonical fold order
+    let m = model();
+    let ds = dataset();
+    let steps = 6;
+
+    let mut serial = Trainer::new(rt(), tiny_cfg(steps, 1));
+    serial.eval_test = false;
+    let serial = serial.run_on(&m, &ds).unwrap();
+
+    let pool4 = WorkerPool::new(4);
+    let mut inproc = DpTrainer::new(rt(), &pool4, tiny_cfg(steps, 4));
+    inproc.eval_test = false;
+    let inproc = inproc.run_on(&m, &ds).unwrap();
+    assert_bits_eq(&serial.params, &inproc.params, "serial vs in-process dp4");
+
+    let dir = tmp_dir("bitident");
+    let hub = WorkerHub::listen("127.0.0.1:0").unwrap();
+    let workers = [spawn_worker(&hub, None), spawn_worker(&hub, None)];
+    assert!(hub.wait_for_workers(2, Duration::from_secs(30)), "workers never connected");
+
+    let pool = WorkerPool::new(2);
+    let mut t =
+        DpTrainer::new(rt(), &pool, tiny_cfg(steps, 4)).with_journal(&dir.join("j.jsonl"));
+    t.eval_test = false;
+    t.remote = Some(RemoteHandle { hub: Arc::clone(&hub), data_seed: 11 });
+    let mut state = t.begin_slices(&m, base_params(&m)).unwrap();
+    let report = t.run_slice(&m, &ds, &mut state, steps, None).unwrap();
+    assert!(report.done && report.steps_run == steps, "{report:?}");
+    assert_eq!(hub.sessions_served(), 2, "both workers must have taken a shard");
+
+    assert_bits_eq(&serial.params, &state.params, "serial vs 2-remote tcp");
+    assert_bits_eq(&inproc.params, &state.params, "in-process dp4 vs 2-remote tcp");
+
+    // a clean shutdown reads as EOF-between-frames on the worker side
+    hub.shutdown();
+    for w in workers {
+        let stats = w.join().unwrap().expect("worker must exit cleanly on hub shutdown");
+        assert_eq!(stats.sessions, 1, "{stats:?}");
+        assert_eq!(stats.steps, steps, "{stats:?}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn worker_killed_mid_slice_resumes_bit_identically_via_journal() {
+    let m = model();
+    let ds = dataset();
+    let base = base_params(&m);
+    let dir = tmp_dir("kill");
+    let journal = dir.join("j.jsonl");
+    let steps = 6;
+
+    // uninterrupted ground truth (in-process 2-way DP, same base)
+    let pool = WorkerPool::new(2);
+    let mut reference = DpTrainer::new(rt(), &pool, tiny_cfg(steps, 2));
+    reference.eval_test = false;
+    reference.initial_override = Some(base.clone());
+    let expected = reference.run_on(&m, &ds).unwrap().params;
+
+    let hub = WorkerHub::listen("127.0.0.1:0").unwrap();
+    // a worker that answers 2 PhaseA frames and then dies without replying
+    let doomed = spawn_worker(&hub, Some(2));
+    assert!(hub.wait_for_workers(1, Duration::from_secs(30)));
+
+    let mk = || {
+        let mut t = DpTrainer::new(rt(), &pool, tiny_cfg(steps, 2)).with_journal(&journal);
+        t.eval_test = false;
+        t.remote = Some(RemoteHandle { hub: Arc::clone(&hub), data_seed: 11 });
+        t
+    };
+    let t = mk();
+    let mut state = t.begin_slices(&m, base.clone()).unwrap();
+    let err = t.run_slice(&m, &ds, &mut state, steps, None).unwrap_err();
+    assert!(is_worker_lost(&err), "must re-queue, not fail hard: {err:#}");
+    let worker_err = doomed.join().unwrap().unwrap_err();
+    assert!(format!("{worker_err:#}").contains("injected worker kill"), "{worker_err:#}");
+    drop(state); // the "kill": live trainer state is gone
+
+    // resume with a FRESH worker: replay the journal (2 durable steps),
+    // finish the run remotely, land on the uninterrupted bits
+    let fresh = spawn_worker(&hub, None);
+    assert!(hub.wait_for_workers(1, Duration::from_secs(30)));
+    let t = mk();
+    let mut state = t.resume_slices(&m, &base).unwrap();
+    assert_eq!(state.step, 2, "exactly the journaled steps replay");
+    let report = t.run_slice(&m, &ds, &mut state, steps, None).unwrap();
+    assert!(report.done, "{report:?}");
+    assert_bits_eq(&expected, &state.params, "killed+resumed vs uninterrupted");
+    assert_eq!(hub.sessions_served(), 2);
+
+    hub.shutdown();
+    assert!(fresh.join().unwrap().is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scheduler_requeues_killed_worker_slice_and_drains_to_exact_adapter() {
+    let m = model();
+    let base = base_params(&m);
+    let dir = tmp_dir("sched");
+
+    let spec = JobSpec {
+        name: "tcp".into(),
+        task: "rte".into(),
+        steps: 6,
+        workers: 2,
+        slice_steps: 3,
+        seed: 11,
+        ..JobSpec::default()
+    };
+    // uninterrupted ground truth, exactly as tests/jobs.rs derives it
+    let expected = {
+        let cfg = spec.train_config("llama_tiny").unwrap();
+        let ds = tasks::generate(&spec.task, spec.dataset_seed()).unwrap();
+        let pool = WorkerPool::new(cfg.workers);
+        let mut t = DpTrainer::new(rt(), &pool, cfg);
+        t.eval_test = false;
+        t.initial_override = Some(base.clone());
+        t.run_on(&m, &ds).unwrap().params
+    };
+
+    let hub = WorkerHub::listen("127.0.0.1:0").unwrap();
+    // budget 4: survives slice 1 (PhaseA 0..3), dies at step 4 in slice 2
+    let doomed = spawn_worker(&hub, Some(4));
+    assert!(hub.wait_for_workers(1, Duration::from_secs(30)));
+
+    let queue = Arc::new(JobQueue::open(&dir).unwrap());
+    let scfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let engine = Arc::new(
+        ServeEngine::new(Runtime::native(), &scfg, base.clone())
+            .unwrap()
+            .with_jobs(Arc::clone(&queue), 2)
+            .with_worker_hub(Arc::clone(&hub)),
+    );
+    let scheduler = Scheduler::new(Arc::clone(&engine), Arc::clone(&queue), 3);
+    let id = queue.submit(spec).unwrap();
+
+    // slice 1 (steps 0..3) leases the worker and completes
+    assert!(scheduler.run_one_slice());
+    assert_eq!(queue.get(id).unwrap().steps_done, 3);
+    assert_eq!(hub.sessions_served(), 1);
+
+    // slice 2: the worker dies mid-step — the job must RE-QUEUE with its
+    // durable progress intact, not fail
+    assert!(scheduler.run_one_slice());
+    let job = queue.get(id).unwrap();
+    assert_eq!(job.state, JobState::Queued, "{job:?}");
+    assert_eq!(job.steps_done, 3, "{job:?}");
+    assert!(job.error.is_none(), "{job:?}");
+    let worker_err = doomed.join().unwrap().unwrap_err();
+    assert!(format!("{worker_err:#}").contains("injected worker kill"), "{worker_err:#}");
+
+    // no workers left: the drain falls back to local shards and finishes;
+    // journal replay across the requeue keeps the result exact
+    assert!(scheduler.run_until_idle() >= 1);
+    let job = queue.get(id).unwrap();
+    assert_eq!(job.state, JobState::Completed, "{job:?}");
+    assert_eq!(job.steps_done, 6);
+    assert!(job.published);
+
+    // the auto-published adapter serves the uninterrupted bits
+    let prompts: Vec<Vec<i32>> = tasks::generate_sized("rte", 11, 8, 4, 4)
+        .unwrap()
+        .dev
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let flat: Vec<f32> = engine.classify("tcp", &prompts).unwrap().into_iter().flatten().collect();
+    let mut tokens = Vec::with_capacity(prompts.len() * m.seq_len);
+    for p in &prompts {
+        tokens.extend(pad_prompt(p, m.seq_len));
+    }
+    let offline = rt().backend().logits_rows(&m, &expected, &tokens).unwrap();
+    assert_bits_eq(&flat, &offline, "adapter vs offline logits of uninterrupted params");
+    std::fs::remove_dir_all(&dir).ok();
+}
