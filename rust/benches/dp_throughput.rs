@@ -3,10 +3,12 @@
 //! per step, so DP efficiency is bounded by the replicated
 //! perturb/update walk, not by gradient traffic).
 //!
-//! Run: `cargo bench --bench dp_throughput`. Uses the native backend.
-//! Writes a human table to stdout and refreshes the repo-root
-//! `BENCH_dp.json` snapshot that seeds the perf trajectory across PRs.
-//! Headline target (ISSUE 2): >1.5x steps/sec at 4 workers vs 1.
+//! Run: `cargo bench --bench dp_throughput` (append `-- --quick` for
+//! the CI smoke matrix: fewer steps, workers 1-2 only). Uses the
+//! native backend. Writes a human table to stdout and refreshes the
+//! repo-root `BENCH_dp.json` snapshot that seeds the perf trajectory
+//! across PRs. Headline target (ISSUE 2): >1.5x steps/sec at 4
+//! workers vs 1 (full mode only).
 
 use std::path::PathBuf;
 
@@ -55,19 +57,21 @@ fn serial_steps_per_sec(rt: &Runtime, steps: usize) -> anyhow::Result<f64> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (steps, worker_counts): (usize, &[usize]) =
+        if quick { (8, &[1, 2]) } else { (STEPS, &[1, 2, 4]) };
     let rt = Runtime::native();
     // warmup: page-in + allocator + first-touch of the replicas
     let _ = dp_steps_per_sec(&rt, 1, 4)?;
 
-    let serial = serial_steps_per_sec(&rt, STEPS)?;
+    let serial = serial_steps_per_sec(&rt, steps)?;
     println!("{:<26} {serial:9.2} steps/s", "serial trainer");
 
-    let worker_counts = [1usize, 2, 4];
     let mut rows = Vec::new();
     let mut baseline = 0.0f64;
     let mut at4 = 0.0f64;
-    for &w in &worker_counts {
-        let sps = dp_steps_per_sec(&rt, w, STEPS)?;
+    for &w in worker_counts {
+        let sps = dp_steps_per_sec(&rt, w, steps)?;
         if w == 1 {
             baseline = sps;
         }
@@ -83,22 +87,43 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
     let speedup4 = at4 / baseline.max(1e-12);
-    println!(
-        "\n4-worker speedup: x{speedup4:.2} (acceptance target >1.5x; \
-         machine has {} cores)",
-        WorkerPool::default_size()
-    );
+    if !quick {
+        println!(
+            "\n4-worker speedup: x{speedup4:.2} (acceptance target >1.5x; \
+             machine has {} cores)",
+            WorkerPool::default_size()
+        );
+    }
+
+    // obs registry view of the same run: every DP step above recorded
+    // into span_seconds{span="dp.step"} (serial steps into train.step)
+    let obs = Json::obj(vec![
+        (
+            "span_seconds{span=\"dp.step\"}",
+            sparse_mezo::obs::histogram("span_seconds", &[("span", "dp.step")])
+                .snapshot()
+                .json(),
+        ),
+        (
+            "span_seconds{span=\"train.step\"}",
+            sparse_mezo::obs::histogram("span_seconds", &[("span", "train.step")])
+                .snapshot()
+                .json(),
+        ),
+    ]);
 
     let out = Json::obj(vec![
         ("bench", Json::Str("dp_throughput".into())),
         ("status", Json::Str("measured".into())),
+        ("quick", Json::Bool(quick)),
         ("model", Json::Str(MODEL.into())),
         ("optimizer", Json::Str("smezo".into())),
-        ("timed_steps", Json::Num(STEPS as f64)),
+        ("timed_steps", Json::Num(steps as f64)),
         ("cores", Json::Num(WorkerPool::default_size() as f64)),
         ("serial_steps_per_sec", Json::Num(serial)),
         ("speedup_4w", Json::Num(speedup4)),
         ("results", Json::Arr(rows)),
+        ("obs", obs),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_dp.json");
     std::fs::write(&path, format!("{}\n", out.to_string()))?;

@@ -106,6 +106,31 @@ fn main() -> anyhow::Result<()> {
         ("orchestrated_steps_per_sec", Json::Num(total_steps / orchestrated_s.max(1e-12))),
         ("jobs_per_sec", Json::Num(n_jobs as f64 / orchestrated_s.max(1e-12))),
         ("orchestration_overhead_frac", Json::Num(overhead)),
+        // obs registry view of the orchestrated run: slice and
+        // replay-verify wall clock straight from the span histograms
+        (
+            "obs",
+            Json::obj(vec![
+                (
+                    "span_seconds{span=\"jobs.slice\"}",
+                    sparse_mezo::obs::histogram("span_seconds", &[("span", "jobs.slice")])
+                        .snapshot()
+                        .json(),
+                ),
+                (
+                    "span_seconds{span=\"jobs.replay_verify\"}",
+                    sparse_mezo::obs::histogram("span_seconds", &[("span", "jobs.replay_verify")])
+                        .snapshot()
+                        .json(),
+                ),
+                (
+                    "span_seconds{span=\"dp.step\"}",
+                    sparse_mezo::obs::histogram("span_seconds", &[("span", "dp.step")])
+                        .snapshot()
+                        .json(),
+                ),
+            ]),
+        ),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_jobs.json");
     std::fs::write(&path, format!("{}\n", out.to_string()))?;

@@ -84,6 +84,16 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // obs registry view of the same run: every classify above recorded
+    // into span_seconds{span="serve.classify"}, so the snapshot and the
+    // table come from one set of measurements
+    let obs = Json::obj(vec![(
+        "span_seconds{span=\"serve.classify\"}",
+        sparse_mezo::obs::histogram("span_seconds", &[("span", "serve.classify")])
+            .snapshot()
+            .json(),
+    )]);
+
     let out = Json::obj(vec![
         ("bench", Json::Str("serve_throughput".into())),
         ("status", Json::Str("measured".into())),
@@ -92,6 +102,7 @@ fn main() -> anyhow::Result<()> {
         ("rows_per_request", Json::Num(rows_per_request as f64)),
         ("timed_iters", Json::Num(iters as f64)),
         ("results", Json::Arr(results)),
+        ("obs", obs),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serve.json");
     std::fs::write(&path, format!("{}\n", out.to_string()))?;

@@ -99,10 +99,11 @@ impl<'rt> LoraTrainer<'rt> {
         for t in 0..cfg.steps {
             let batch = loader.next_batch();
             let seed = (cfg.seed as u32, t as u32);
-            let t0 = std::time::Instant::now();
+            let sp = crate::obs::span("train.step");
             step_exec.run(self.rt, &mut state, &batch.tokens, &batch.labels, seed)?;
             let mets = StepMetrics::from_tail(&state.metrics(self.rt)?)?;
-            step_seconds += t0.elapsed().as_secs_f64();
+            step_seconds += sp.end();
+            crate::obs::counter("train_steps_total", &[]).inc();
             let loss = mets.train_loss;
             train_losses.push(loss);
             let smoothed = ema.update(loss as f64);

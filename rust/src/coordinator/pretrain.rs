@@ -62,10 +62,10 @@ pub fn pretrain(rt: &Runtime, cfg: &PretrainConfig) -> Result<PretrainResult> {
     let mut step_seconds = 0.0;
     for t in 0..cfg.steps {
         let tokens = corpus.batch(model.batch);
-        let t0 = std::time::Instant::now();
+        let sp = crate::obs::span("pretrain.step");
         exec.run(rt, &mut state, &tokens, (cfg.seed as u32, t as u32))?;
         let mets = StepMetrics::from_tail(&state.metrics(rt)?)?;
-        step_seconds += t0.elapsed().as_secs_f64();
+        step_seconds += sp.end();
         losses.push(mets.train_loss);
         let s = ema.update(mets.train_loss as f64);
         if cfg.log_every > 0 && t % cfg.log_every == 0 {

@@ -155,10 +155,14 @@ impl<'rt> Trainer<'rt> {
         examples: &[Example],
         cap: usize,
     ) -> Result<EvalResult> {
-        match self.pool {
+        let sp = crate::obs::span("train.forward");
+        crate::obs::counter("train_evals_total", &[]).inc();
+        let out = match self.pool {
             Some(pool) => peval::evaluate_sharded(self.rt, pool, logits, params, examples, cap),
             None => evaluator::evaluate(self.rt, logits, params, examples, cap),
-        }
+        };
+        sp.end();
+        out
     }
 
     /// Resolve initial parameters: checkpoint if configured, else `init`.
@@ -191,7 +195,10 @@ impl<'rt> Trainer<'rt> {
         }
         let params = self.initial_params(model)?;
         let thresh = ThreshExec::load(self.rt, model)?;
-        let thresholds = thresh.run(self.rt, &params, cfg.hypers.sparsity)?;
+        let thresholds = {
+            let _sp = crate::obs::span("train.threshold_refresh");
+            thresh.run(self.rt, &params, cfg.hypers.sparsity)?
+        };
         let mut step_exec = StepExec::load(self.rt, model, &cfg.optimizer, cfg.hypers, &thresholds)?;
         let logits = LogitsExec::load(self.rt, model)?;
         let prog = model.step_program(&cfg.optimizer)?;
@@ -216,10 +223,13 @@ impl<'rt> Trainer<'rt> {
             }
             let batch = loader.next_batch();
             let seed = (cfg.seed as u32, t as u32);
-            let t0 = std::time::Instant::now();
+            // the span and `step_seconds` share one measurement, so the
+            // run summary and the metrics registry can never disagree
+            let sp = crate::obs::span("train.step");
             step_exec.run(self.rt, &mut state, &batch.tokens, &batch.labels, seed)?;
             let mets = StepMetrics::from_tail(&state.metrics(self.rt)?)?;
-            step_seconds += t0.elapsed().as_secs_f64();
+            step_seconds += sp.end();
+            crate::obs::counter("train_steps_total", &[]).inc();
 
             let loss = mets.train_loss;
             train_losses.push(loss);

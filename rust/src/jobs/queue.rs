@@ -716,6 +716,11 @@ impl JobQueue {
         }
         job.diverged = job.diverged || outcome.diverged;
         let requeued = job.state == JobState::Queued;
+        match job.state {
+            JobState::Completed => crate::obs::counter("jobs_completed_total", &[]).inc(),
+            JobState::Failed => crate::obs::counter("jobs_failed_total", &[]).inc(),
+            _ => {}
+        }
         let snap = job.clone();
         self.persist(&snap)?;
         if snap.state.terminal() {
@@ -733,6 +738,43 @@ impl JobQueue {
     /// Number of jobs in non-terminal states (queue depth gauge).
     pub fn active(&self) -> usize {
         self.lock_inner().jobs.values().filter(|j| !j.state.terminal()).count()
+    }
+
+    /// Queue depth by `(state, priority class)` — every combination,
+    /// zeros included, so gauge refreshes overwrite stale values. The
+    /// priority axis is classed (`low` < 0 < `high`, else `normal`) to
+    /// keep the metric's label arity statically bounded.
+    pub fn depth_stats(&self) -> Vec<(&'static str, &'static str, usize)> {
+        const STATES: [JobState; 5] = [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Completed,
+            JobState::Failed,
+            JobState::Cancelled,
+        ];
+        const CLASSES: [&str; 3] = ["low", "normal", "high"];
+        let class_of = |p: i64| {
+            if p < 0 {
+                "low"
+            } else if p > 0 {
+                "high"
+            } else {
+                "normal"
+            }
+        };
+        let inner = self.lock_inner();
+        let mut out = Vec::with_capacity(STATES.len() * CLASSES.len());
+        for state in STATES {
+            for class in CLASSES {
+                let n = inner
+                    .jobs
+                    .values()
+                    .filter(|j| j.state == state && class_of(j.spec.priority) == class)
+                    .count();
+                out.push((state.as_str(), class, n));
+            }
+        }
+        out
     }
 
     /// Block up to `timeout` for a runnable job to appear. Returns

@@ -119,7 +119,9 @@ impl Scheduler {
     /// Run one slice of an already-claimed (`Running`) job and record
     /// its outcome.
     fn run_claimed_slice(&self, job: Job, server_stop: Option<&AtomicBool>) {
+        let slice_span = crate::obs::span("jobs.slice");
         let result = catch_unwind(AssertUnwindSafe(|| self.slice_job(&job, server_stop)));
+        slice_span.end();
         let failed = |error: String| SliceOutcome {
             steps_done: job.steps_done,
             state: JobState::Failed,
@@ -139,6 +141,7 @@ impl Scheduler {
                     job.id,
                     job.spec.name
                 );
+                crate::obs::counter("jobs_requeued_total", &[]).inc();
                 SliceOutcome { steps_done: job.steps_done, ..SliceOutcome::default() }
             }
             Ok(Err(e)) => failed(format!("{e:#}")),
@@ -371,6 +374,7 @@ impl Scheduler {
         cfg: &crate::config::TrainConfig,
     ) -> Result<()> {
         let journal = self.queue.journal_path(job.id);
+        let verify_span = crate::obs::span("jobs.replay_verify");
         let (header, records) = protocol::load_journal(&journal)?;
         let outcome =
             protocol::replay_full(self.engine.runtime(), model, cfg, &header, base, &records)?;
@@ -383,6 +387,7 @@ impl Scheduler {
                 );
             }
         }
+        verify_span.end();
         let meta = Json::obj(vec![
             ("source", Json::Str(format!("job:{}", job.id))),
             ("task", Json::Str(job.spec.task.clone())),

@@ -42,6 +42,10 @@
 //!   fine-tuning job queue, the cooperative slice scheduler over the
 //!   worker pool (checkpoint/resume through the step journal), and
 //!   auto-publication of finished adapters into the serve registry.
+//! * [`obs`] — crate-wide observability: the process-wide metrics
+//!   registry (atomic counters/gauges, log-bucket latency histograms),
+//!   the span-timing API, the optional JSONL trace stream, and the
+//!   Prometheus text exposition behind `GET /metrics`.
 //! * [`bench`] — the timing harness used by `cargo bench` targets.
 
 #![warn(missing_docs)]
@@ -51,6 +55,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod jobs;
+pub mod obs;
 pub mod parallel;
 pub mod runtime;
 pub mod serve;

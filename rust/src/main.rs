@@ -10,6 +10,7 @@
 //!   serve            multi-tenant sparse-adapter inference server
 //!   jobs             fine-tuning job queue (submit/list/show/cancel/
 //!                    resume/drain) — the train→serve orchestrator
+//!   stats            pretty-print a running server's metrics snapshot
 //!   worker           remote seed-sync replica: connect to a
 //!                    coordinator and serve leased training shards
 //!   memory-table     Table-4 memory model only (fast)
@@ -95,6 +96,9 @@ COMMANDS
                   completion in-process, publishing adapters;
                   --listen-workers leases shards to remote workers,
                   --min-workers waits for that many before draining
+  stats           [--port P]  fetch GET /statsz from a running serve
+                  process on the loopback and pretty-print counters,
+                  gauges and histogram quantiles (p50/p99)
   worker          --coordinator HOST:PORT [--seed S --init-from CKPT
                   --threads N --connect-timeout SECS]
                   (remote seed-sync replica: rebuilds the coordinator's
@@ -108,6 +112,10 @@ COMMANDS
 COMMON
   --artifacts DIR   artifact directory (default: artifacts)
   --verbose         debug logging
+
+ENVIRONMENT
+  SMEZO_TRACE=FILE  stream every completed span (train.step, jobs.slice,
+                    serve.batch_exec, ...) to FILE as JSONL trace events
 ";
 
 fn main() {
@@ -127,6 +135,14 @@ fn dispatch(raw: &[String]) -> Result<()> {
     if args.flag("verbose") {
         log::set_level(log::DEBUG);
     }
+    // SMEZO_TRACE=FILE streams completed spans as JSONL trace events;
+    // purely additive (spans record whether or not the sink exists)
+    if let Ok(path) = std::env::var("SMEZO_TRACE") {
+        if !path.is_empty() {
+            sparse_mezo::obs::trace_to(std::path::Path::new(&path))
+                .with_context(|| format!("opening SMEZO_TRACE file {path}"))?;
+        }
+    }
     let command = args
         .positionals
         .first()
@@ -142,6 +158,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "probe" => cmd_probe(&args, &artifacts),
         "repro" => cmd_repro(&args, &artifacts),
         "serve" => cmd_serve(&args, &artifacts),
+        "stats" => cmd_stats(&args),
         "jobs" => cmd_jobs(&args, &artifacts),
         "worker" => cmd_worker(&args, &artifacts),
         "memory-table" => cmd_memory(&args, &artifacts),
@@ -458,6 +475,43 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     let running = http::serve(Arc::new(engine), cfg.port)?;
     info!("listening on http://{} (loopback only)", running.addr);
     running.join();
+    Ok(())
+}
+
+/// `stats`: fetch `/statsz` from a running loopback server and render
+/// the registry snapshot — counters and gauges as name/value pairs,
+/// histograms as count/mean/p50/p99 rows.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let default_port = ServeConfig::resolve(None)?.port;
+    let port = args.u16_or("port", default_port)?;
+    let addr: std::net::SocketAddr = format!("127.0.0.1:{port}")
+        .parse()
+        .context("building loopback address")?;
+    let mut client = http::LoopbackClient::connect(addr)
+        .with_context(|| format!("is a server running on port {port}? (serve --port)"))?;
+    let (status, body) = client.request("GET", "/statsz", None)?;
+    if status != 200 {
+        bail!("GET /statsz answered {status}: {body}");
+    }
+    println!("COUNTERS");
+    for (name, v) in body.req("counters")?.as_obj()? {
+        println!("  {name:<52} {}", v.as_f64()? as u64);
+    }
+    println!("GAUGES");
+    for (name, v) in body.req("gauges")?.as_obj()? {
+        println!("  {name:<52} {}", v.as_f64()? as i64);
+    }
+    println!("HISTOGRAMS");
+    println!("  {:<52} {:>8}  {:>12}  {:>12}  {:>12}", "series", "count", "mean", "p50", "p99");
+    for (name, h) in body.req("histograms")?.as_obj()? {
+        println!(
+            "  {name:<52} {:>8}  {:>12.6}  {:>12.6}  {:>12.6}",
+            h.req("count")?.as_f64()? as u64,
+            h.req("mean")?.as_f64()?,
+            h.req("p50")?.as_f64()?,
+            h.req("p99")?.as_f64()?,
+        );
+    }
     Ok(())
 }
 

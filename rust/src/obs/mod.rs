@@ -1,0 +1,817 @@
+//! Crate-wide observability: a process-wide metrics registry plus a
+//! lightweight span-timing API.
+//!
+//! The paper's headline claims are *time-domain* (a 3.5× wall-clock
+//! convergence speedup over dense MeZO, §4 Fig. 2), so the system has to
+//! be able to report what it is doing and how long each stage takes.
+//! This module is that substrate:
+//!
+//! - [`MetricsRegistry`] — lock-free atomic [`Counter`]s and [`Gauge`]s
+//!   plus fixed log-scale-bucket [`Histogram`]s with p50/p99 readout.
+//!   Label support is bounded to a small static arity
+//!   ([`MAX_SERIES_PER_METRIC`]): overflow series collapse into an
+//!   `"other"` label value instead of growing without bound.
+//! - [`span`] — scoped wall-clock timing (`obs::span("train.step")`).
+//!   Dropping (or [`Span::end`]-ing) the guard records the elapsed
+//!   seconds into the `span_seconds{span="..."}` histogram of the global
+//!   registry, so run summaries computed from [`Span::end`]'s return
+//!   value and the registry's histogram can never disagree. Spans nest;
+//!   with [`trace_to`] enabled each finished span also appends one JSONL
+//!   trace record (`{"span","depth","t_s","dur_s"}`) to a per-run trace
+//!   stream.
+//! - [`render_prometheus`] — the Prometheus text exposition of the
+//!   global registry, served by `GET /metrics` on the loopback server
+//!   ([`crate::serve::http`]); [`snapshot_json`] is the same data with
+//!   precomputed quantiles, served by `GET /statsz` and pretty-printed
+//!   by the `stats` CLI arm.
+//!
+//! **The hard invariant:** instrumentation is a pure read-side overlay
+//! on the bit-exact core. It consumes no PRNG state, never writes into
+//! step journals, and an instrumented run stays bit-identical to an
+//! uninstrumented one (asserted by `rust/tests/obs.rs`). Everything
+//! here is built on [`std::time::Instant`] and atomics only.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::log::JsonlWriter;
+
+// ---------------------------------------------------------------------------
+// primitives
+// ---------------------------------------------------------------------------
+
+/// A monotone event counter (lock-free; relaxed ordering — metrics are
+/// advisory, never synchronization).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable instantaneous value (queue depth, resident adapters, ...).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Set the value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add (possibly negative) `d`.
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count of every [`Histogram`]: fixed log-scale (powers of two).
+pub const HISTO_BUCKETS: usize = 40;
+
+/// Upper bound (inclusive, Prometheus `le`) of bucket `i`: `2^(i-20)`.
+/// Bucket 0 tops out at ~9.5e-7 (just under a microsecond when the unit
+/// is seconds), bucket 39 at 2^19 = 524288 — wide enough for latencies
+/// *and* dimensionless distributions like batch sizes.
+pub fn bucket_bound(i: usize) -> f64 {
+    2f64.powi(i as i32 - 20)
+}
+
+/// The bucket a value lands in (smallest bucket whose bound covers it).
+fn bucket_index(v: f64) -> usize {
+    if v.is_nan() || v <= bucket_bound(0) {
+        return 0;
+    }
+    let idx = v.log2().ceil() as i64 + 20;
+    idx.clamp(0, HISTO_BUCKETS as i64 - 1) as usize
+}
+
+/// A fixed log-scale-bucket histogram with lock-free observation and
+/// p50/p99 readout. Quantiles are bucket-upper-bound estimates — exact
+/// enough for operational latency reporting, and immune to allocation
+/// on the hot path.
+pub struct Histogram {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // lock-free f64 sum: CAS on the bit pattern
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket counts (index `i` covers `(bound(i-1), bound(i)]`).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Quantile estimate: the upper bound of the bucket holding the
+    /// `q`-th observation. 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_bound(i);
+            }
+        }
+        bucket_bound(HISTO_BUCKETS - 1)
+    }
+
+    /// Point-in-time summary with precomputed quantiles.
+    pub fn snapshot(&self) -> HistoSnapshot {
+        let count = self.count();
+        let sum = self.sum();
+        HistoSnapshot {
+            count,
+            sum,
+            mean: if count == 0 { 0.0 } else { sum / count as f64 },
+            p50: self.quantile(0.50),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// Summary of a [`Histogram`] at one instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistoSnapshot {
+    /// total observations
+    pub count: u64,
+    /// sum of observed values
+    pub sum: f64,
+    /// arithmetic mean (0 when empty)
+    pub mean: f64,
+    /// median estimate (bucket upper bound)
+    pub p50: f64,
+    /// 99th-percentile estimate (bucket upper bound)
+    pub p99: f64,
+}
+
+impl HistoSnapshot {
+    /// JSON record (`/statsz`, bench snapshots).
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("mean", Json::Num(self.mean)),
+            ("p50", Json::Num(self.p50)),
+            ("p99", Json::Num(self.p99)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+/// Maximum distinct label combinations per metric name. The crate only
+/// uses small static label sets (HTTP routes, frame directions, job
+/// states × priority classes, span names); anything past the cap
+/// collapses into label value `"other"` so a bug can never grow the
+/// registry without bound.
+pub const MAX_SERIES_PER_METRIC: usize = 32;
+
+type LabelPairs = Vec<(String, String)>;
+type FamilyMap<T> = BTreeMap<String, BTreeMap<LabelPairs, Arc<T>>>;
+
+/// A process-wide metrics registry: three namespaces (counters, gauges,
+/// histograms) of labeled series. Series handles are `Arc`s — lookup
+/// takes a short read-lock, but increments on the returned handle are
+/// lock-free, so hot paths can cache the handle and never touch the
+/// lock again.
+pub struct MetricsRegistry {
+    counters: RwLock<FamilyMap<Counter>>,
+    gauges: RwLock<FamilyMap<Gauge>>,
+    histos: RwLock<FamilyMap<Histogram>>,
+}
+
+fn label_key(labels: &[(&str, &str)]) -> LabelPairs {
+    let mut key: LabelPairs =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    key.sort();
+    key
+}
+
+fn series<T: Default>(
+    map: &RwLock<FamilyMap<T>>,
+    name: &str,
+    labels: &[(&str, &str)],
+) -> Arc<T> {
+    let key = label_key(labels);
+    if let Some(fam) = map.read().unwrap().get(name) {
+        if let Some(s) = fam.get(&key) {
+            return s.clone();
+        }
+    }
+    let mut w = map.write().unwrap();
+    let fam = w.entry(name.to_string()).or_default();
+    if let Some(s) = fam.get(&key) {
+        return s.clone();
+    }
+    // bounded label arity: overflow series collapse into "other"
+    let key = if fam.len() >= MAX_SERIES_PER_METRIC {
+        key.into_iter().map(|(k, _)| (k, "other".to_string())).collect()
+    } else {
+        key
+    };
+    fam.entry(key).or_insert_with(|| Arc::new(T::default())).clone()
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new()
+    }
+}
+
+impl MetricsRegistry {
+    /// An empty registry. Production code uses the process-wide
+    /// [`global`] instance; tests build their own for isolation.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            counters: RwLock::new(BTreeMap::new()),
+            gauges: RwLock::new(BTreeMap::new()),
+            histos: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// The counter series `name{labels}` (created on first use).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        series(&self.counters, name, labels)
+    }
+
+    /// The gauge series `name{labels}` (created on first use).
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        series(&self.gauges, name, labels)
+    }
+
+    /// The histogram series `name{labels}` (created on first use).
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        series(&self.histos, name, labels)
+    }
+
+    /// Prometheus text exposition (version 0.0.4): `# HELP` / `# TYPE`
+    /// headers, then one line per series, names and label keys in
+    /// lexicographic order — stable, golden-testable output.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, fam) in self.counters.read().unwrap().iter() {
+            header(&mut out, name, "counter");
+            for (labels, c) in fam {
+                line(&mut out, name, labels, None, &c.get().to_string());
+            }
+        }
+        for (name, fam) in self.gauges.read().unwrap().iter() {
+            header(&mut out, name, "gauge");
+            for (labels, g) in fam {
+                line(&mut out, name, labels, None, &g.get().to_string());
+            }
+        }
+        for (name, fam) in self.histos.read().unwrap().iter() {
+            header(&mut out, name, "histogram");
+            for (labels, h) in fam {
+                let counts = h.bucket_counts();
+                let mut cum = 0u64;
+                for (i, c) in counts.iter().enumerate() {
+                    cum += c;
+                    let le = fmt_f64(bucket_bound(i));
+                    line(
+                        &mut out,
+                        &format!("{name}_bucket"),
+                        labels,
+                        Some(&le),
+                        &cum.to_string(),
+                    );
+                }
+                line(&mut out, &format!("{name}_bucket"), labels, Some("+Inf"), &cum.to_string());
+                line(&mut out, &format!("{name}_sum"), labels, None, &fmt_f64(h.sum()));
+                line(&mut out, &format!("{name}_count"), labels, None, &h.count().to_string());
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot of every series, histogram quantiles precomputed —
+    /// the `/statsz` body the `stats` CLI pretty-prints.
+    pub fn snapshot_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, fam) in self.counters.read().unwrap().iter() {
+            for (labels, c) in fam {
+                counters.insert(series_name(name, labels), Json::Num(c.get() as f64));
+            }
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, fam) in self.gauges.read().unwrap().iter() {
+            for (labels, g) in fam {
+                gauges.insert(series_name(name, labels), Json::Num(g.get() as f64));
+            }
+        }
+        let mut histos = BTreeMap::new();
+        for (name, fam) in self.histos.read().unwrap().iter() {
+            for (labels, h) in fam {
+                histos.insert(series_name(name, labels), h.snapshot().json());
+            }
+        }
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histos)),
+        ])
+    }
+}
+
+/// `name{k="v",...}` (or bare `name` when unlabeled) — the series key in
+/// [`MetricsRegistry::snapshot_json`] and the exposition line prefix.
+fn series_name(name: &str, labels: &LabelPairs) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn header(out: &mut String, name: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {}\n# TYPE {name} {kind}\n", help_for(name)));
+}
+
+fn line(out: &mut String, name: &str, labels: &LabelPairs, le: Option<&str>, value: &str) {
+    let mut pairs: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        pairs.push(format!("le=\"{le}\""));
+    }
+    if pairs.is_empty() {
+        out.push_str(&format!("{name} {value}\n"));
+    } else {
+        out.push_str(&format!("{name}{{{}}} {value}\n", pairs.join(",")));
+    }
+}
+
+/// Shortest-round-trip float formatting, reusing the JSON writer's rules
+/// so `le` bounds and sums render identically everywhere.
+fn fmt_f64(v: f64) -> String {
+    Json::Num(v).to_string()
+}
+
+/// Help strings for the crate's metric catalog (README "Observability"
+/// documents the same set). Unknown names get a generic line rather
+/// than an error — the registry is open.
+fn help_for(name: &str) -> &'static str {
+    match name {
+        "train_steps_total" => "Optimizer steps completed (serial trainer and DP replicas).",
+        "train_evals_total" => "Dev-set evaluations run during training.",
+        "span_seconds" => "Wall-clock seconds per named span (train.step, jobs.slice, ...).",
+        "dp_allreduce_waits_total" => "Remote all-reduce waits (loss scalars awaited from leased workers).",
+        "transport_frames_total" => "Length-prefixed frames moved, by direction.",
+        "transport_bytes_total" => "Frame payload bytes moved (including the 5-byte header), by direction.",
+        "transport_handshakes_total" => "Hello/Welcome handshakes completed.",
+        "transport_leases_total" => "Worker leases granted by the hub.",
+        "transport_reconnects_total" => "Worker reconnect attempts after a lost coordinator link.",
+        "transport_worker_lost_total" => "Worker-lost events (lease died mid-step).",
+        "transport_workers_connected" => "Workers currently attached to the hub (parked + leased).",
+        "transport_worker_sessions_served" => "Training sessions served by remote workers.",
+        "jobs_queue_depth" => "Jobs resident in the queue, by state and priority class.",
+        "jobs_completed_total" => "Jobs finished successfully.",
+        "jobs_failed_total" => "Jobs that ended in failure.",
+        "jobs_requeued_total" => "Slices re-queued after a lost worker.",
+        "jobs_active" => "Jobs currently queued or running.",
+        "http_requests_total" => "HTTP requests served, by route.",
+        "http_request_seconds" => "HTTP request latency (read to write), by route.",
+        "serve_batch_rows" => "Rows per executed micro-batch.",
+        "serve_batch_wait_seconds" => "Per-request wait from admission to batch dispatch.",
+        "serve_pending_requests" => "Classify requests waiting in the micro-batcher.",
+        "serve_registry_adapters" => "Adapters resident in the registry.",
+        "serve_registry_bytes" => "Adapter bytes accounted against the registry budget.",
+        "serve_registry_evictions_total" => "Adapters evicted by LRU pressure.",
+        "serve_registry_pins_total" => "Admission pins taken on adapters.",
+        _ => "(no help registered)",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// global instance + convenience lookups
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-wide registry every instrumented subsystem writes to.
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Global counter series (see [`MetricsRegistry::counter`]).
+pub fn counter(name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+    global().counter(name, labels)
+}
+
+/// Global gauge series (see [`MetricsRegistry::gauge`]).
+pub fn gauge(name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+    global().gauge(name, labels)
+}
+
+/// Global histogram series (see [`MetricsRegistry::histogram`]).
+pub fn histogram(name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+    global().histogram(name, labels)
+}
+
+/// Prometheus exposition of the global registry (the `/metrics` body).
+pub fn render_prometheus() -> String {
+    global().render_prometheus()
+}
+
+/// JSON snapshot of the global registry (the `/statsz` body).
+pub fn snapshot_json() -> Json {
+    global().snapshot_json()
+}
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static SPAN_DEPTH: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+/// A scoped wall-clock timer. Created by [`span`]; records on drop or
+/// explicit [`Span::end`]. Uses only [`Instant`] and atomics — no PRNG,
+/// no journal writes — so instrumented runs stay bit-identical.
+pub struct Span {
+    name: &'static str,
+    start: Instant,
+    depth: u32,
+    done: bool,
+}
+
+/// Start a named span. The elapsed time lands in
+/// `span_seconds{span="<name>"}` when the guard drops (or [`Span::end`]
+/// is called, which also returns the seconds so callers can accumulate
+/// the *same* measurement into run summaries).
+pub fn span(name: &'static str) -> Span {
+    let depth = SPAN_DEPTH.with(|d| {
+        let cur = d.get();
+        d.set(cur + 1);
+        cur
+    });
+    Span { name, start: Instant::now(), depth, done: false }
+}
+
+impl Span {
+    /// Finish now; returns elapsed seconds (the exact value recorded).
+    pub fn end(mut self) -> f64 {
+        self.finish()
+    }
+
+    fn finish(&mut self) -> f64 {
+        if self.done {
+            return 0.0;
+        }
+        self.done = true;
+        let secs = self.start.elapsed().as_secs_f64();
+        SPAN_DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        histogram("span_seconds", &[("span", self.name)]).observe(secs);
+        trace_event(self.name, self.depth, secs);
+        secs
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// optional JSONL trace stream
+// ---------------------------------------------------------------------------
+
+struct TraceSink {
+    writer: JsonlWriter,
+    epoch: Instant,
+}
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static TRACE: OnceLock<Mutex<Option<TraceSink>>> = OnceLock::new();
+
+fn trace_cell() -> &'static Mutex<Option<TraceSink>> {
+    TRACE.get_or_init(|| Mutex::new(None))
+}
+
+/// Stream one JSONL record per finished span to `path` (truncating any
+/// existing file). Each record is `{"span","depth","t_s","dur_s"}` with
+/// `t_s` the span's end offset since tracing was enabled. The trainer
+/// and server enable this into the run directory when `SMEZO_TRACE` is
+/// set; re-targeting mid-process is allowed (tests).
+pub fn trace_to(path: &Path) -> Result<()> {
+    let writer = JsonlWriter::create(path)?;
+    *trace_cell().lock().unwrap() = Some(TraceSink { writer, epoch: Instant::now() });
+    TRACE_ON.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Stop the trace stream (flushes and closes the writer).
+pub fn trace_off() {
+    TRACE_ON.store(false, Ordering::Release);
+    if let Some(mut sink) = trace_cell().lock().unwrap().take() {
+        let _ = sink.writer.flush();
+    }
+}
+
+/// Whether a trace stream is currently attached.
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Acquire)
+}
+
+fn trace_event(name: &str, depth: u32, dur_s: f64) {
+    if !TRACE_ON.load(Ordering::Acquire) {
+        return;
+    }
+    if let Some(sink) = trace_cell().lock().unwrap().as_mut() {
+        let t_s = sink.epoch.elapsed().as_secs_f64();
+        let rec = Json::obj(vec![
+            ("span", Json::Str(name.to_string())),
+            ("depth", Json::Num(depth as f64)),
+            ("t_s", Json::Num(t_s)),
+            ("dur_s", Json::Num(dur_s)),
+        ]);
+        let _ = sink.writer.write(&rec);
+        let _ = sink.writer.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("c_total", &[]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same (name, labels) -> same series
+        assert_eq!(reg.counter("c_total", &[]).get(), 5);
+        let g = reg.gauge("g", &[("k", "v")]);
+        g.set(7);
+        g.add(-3);
+        assert_eq!(reg.gauge("g", &[("k", "v")]).get(), 4);
+        // label order does not matter
+        let a = reg.counter("l_total", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        assert_eq!(reg.counter("l_total", &[("b", "2"), ("a", "1")]).get(), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0.0);
+        for _ in 0..90 {
+            h.observe(0.001); // bucket bound 2^-9 ~ 1.95ms? no: 0.001 -> le 0.001953125
+        }
+        for _ in 0..10 {
+            h.observe(10.0); // le 16
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - (90.0 * 0.001 + 100.0)).abs() < 1e-9);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= 0.002, "p50 {p50}");
+        assert!((8.0..=16.0).contains(&p99), "p99 {p99}");
+        // totals == observations (also the hammer test's invariant)
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
+        // extremes clamp instead of panicking
+        h.observe(0.0);
+        h.observe(-3.0);
+        h.observe(f64::NAN);
+        h.observe(1e30);
+        assert_eq!(h.count(), 104);
+    }
+
+    #[test]
+    fn bucket_bounds_cover_exact_powers() {
+        // v exactly on a bound lands in that bucket (le is inclusive)
+        for i in 0..HISTO_BUCKETS {
+            assert_eq!(bucket_index(bucket_bound(i)), i);
+        }
+        assert_eq!(bucket_index(1.0), 20);
+        assert_eq!(bucket_index(1.5), 21);
+    }
+
+    #[test]
+    fn label_arity_is_bounded() {
+        let reg = MetricsRegistry::new();
+        for i in 0..(MAX_SERIES_PER_METRIC + 10) {
+            let v = format!("v{i}");
+            reg.counter("bounded_total", &[("id", v.as_str())]).inc();
+        }
+        let text = reg.render_prometheus();
+        let series = text.lines().filter(|l| l.starts_with("bounded_total{")).count();
+        assert!(series <= MAX_SERIES_PER_METRIC + 1, "unbounded label growth: {series}");
+        assert!(text.contains("bounded_total{id=\"other\"}"));
+    }
+
+    #[test]
+    fn prometheus_exposition_golden() {
+        // the format contract: names sorted, labels sorted, counters ->
+        // gauges -> histograms, cumulative buckets with +Inf, sum, count
+        let reg = MetricsRegistry::new();
+        reg.counter("requests_total", &[("route", "/b")]).add(2);
+        reg.counter("requests_total", &[("route", "/a")]).inc();
+        reg.gauge("depth", &[]).set(3);
+        let h = reg.histogram("lat_seconds", &[]);
+        h.observe(1.0); // bucket 20
+        h.observe(1.0);
+        h.observe(3.0); // bucket 22 (le 4)
+        let text = reg.render_prometheus();
+
+        let mut expect = String::new();
+        expect.push_str("# HELP requests_total (no help registered)\n");
+        expect.push_str("# TYPE requests_total counter\n");
+        expect.push_str("requests_total{route=\"/a\"} 1\n");
+        expect.push_str("requests_total{route=\"/b\"} 2\n");
+        expect.push_str("# HELP depth (no help registered)\n");
+        expect.push_str("# TYPE depth gauge\n");
+        expect.push_str("depth 3\n");
+        expect.push_str("# HELP lat_seconds (no help registered)\n");
+        expect.push_str("# TYPE lat_seconds histogram\n");
+        let mut cum = 0u64;
+        for i in 0..HISTO_BUCKETS {
+            cum += match i {
+                20 => 2,
+                22 => 1,
+                _ => 0,
+            };
+            expect.push_str(&format!(
+                "lat_seconds_bucket{{le=\"{}\"}} {cum}\n",
+                fmt_f64(bucket_bound(i))
+            ));
+        }
+        expect.push_str("lat_seconds_bucket{le=\"+Inf\"} 3\n");
+        expect.push_str("lat_seconds_sum 5\n");
+        expect.push_str("lat_seconds_count 3\n");
+        assert_eq!(text, expect);
+    }
+
+    #[test]
+    fn registry_hammer_no_lost_counts() {
+        // many threads, one registry: counters exact, histogram
+        // totals == observations
+        let reg = std::sync::Arc::new(MetricsRegistry::new());
+        const THREADS: usize = 8;
+        const PER: usize = 5_000;
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let reg = reg.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = reg.counter("hammer_total", &[]);
+                let h = reg.histogram("hammer_seconds", &[]);
+                for i in 0..PER {
+                    c.inc();
+                    h.observe((1 + (t * PER + i) % 1000) as f64 * 1e-5);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.counter("hammer_total", &[]).get(), (THREADS * PER) as u64);
+        let h = reg.histogram("hammer_seconds", &[]);
+        assert_eq!(h.count(), (THREADS * PER) as u64);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
+        let s = h.snapshot();
+        assert_eq!(s.count, h.count());
+        assert!(s.p50 > 0.0 && s.p99 >= s.p50);
+    }
+
+    #[test]
+    fn spans_record_and_return_identical_seconds() {
+        let before = histogram("span_seconds", &[("span", "obs.test")]).count();
+        let sp = span("obs.test");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let secs = sp.end();
+        assert!(secs >= 0.002 - 1e-4, "span too short: {secs}");
+        let h = histogram("span_seconds", &[("span", "obs.test")]);
+        assert_eq!(h.count(), before + 1);
+        // drop-records too, exactly once
+        {
+            let _sp = span("obs.test");
+        }
+        assert_eq!(h.count(), before + 2);
+    }
+
+    #[test]
+    fn trace_stream_records_nested_spans() {
+        let dir = std::env::temp_dir().join(format!("smz_obs_trace_{}", std::process::id()));
+        let path = dir.join("trace.jsonl");
+        trace_to(&path).unwrap();
+        {
+            let _outer = span("trace.outer");
+            let _inner = span("trace.inner");
+        }
+        trace_off();
+        assert!(!trace_enabled());
+        let all = crate::util::log::read_jsonl(&path).unwrap();
+        // other unit tests may emit spans concurrently; keep ours only
+        let rows: Vec<_> = all
+            .into_iter()
+            .filter(|r| {
+                r.get("span").and_then(|s| s.as_str().ok()).is_some_and(|s| s.starts_with("trace."))
+            })
+            .collect();
+        // inner finishes (and is written) first, at depth 1
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].req("span").unwrap().as_str().unwrap(), "trace.inner");
+        assert_eq!(rows[0].req("depth").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(rows[1].req("span").unwrap().as_str().unwrap(), "trace.outer");
+        assert_eq!(rows[1].req("depth").unwrap().as_usize().unwrap(), 0);
+        assert!(rows[1].req("dur_s").unwrap().as_f64().unwrap() >= 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let reg = MetricsRegistry::new();
+        reg.counter("snap_total", &[("k", "v")]).inc();
+        reg.gauge("snap_gauge", &[]).set(-2);
+        reg.histogram("snap_seconds", &[]).observe(0.5);
+        let j = reg.snapshot_json();
+        assert_eq!(
+            j.req("counters").unwrap().req("snap_total{k=\"v\"}").unwrap().as_f64().unwrap(),
+            1.0
+        );
+        assert_eq!(j.req("gauges").unwrap().req("snap_gauge").unwrap().as_f64().unwrap(), -2.0);
+        let h = j.req("histograms").unwrap().req("snap_seconds").unwrap();
+        assert_eq!(h.req("count").unwrap().as_usize().unwrap(), 1);
+        assert!(h.req("p99").unwrap().as_f64().unwrap() >= 0.5);
+    }
+}

@@ -392,9 +392,10 @@ impl<'rt> DpTrainer<'rt> {
         for t in 0..cfg.steps {
             let batch = loader.next_batch();
             let seed = (cfg.seed as u32, t as u32);
-            let t0 = Instant::now();
+            let sp = crate::obs::span("dp.step");
 
             if self.mask_refresh > 0 && t > 0 && t % self.mask_refresh == 0 {
+                let _rsp = crate::obs::span("train.threshold_refresh");
                 let master = replicas[0].lock().unwrap();
                 thresholds = backend.thresholds(model, &master.0, cfg.hypers.sparsity)?;
                 mask_epoch += 1;
@@ -482,7 +483,8 @@ impl<'rt> DpTrainer<'rt> {
                 apply_update(params, slots, &z, mask.as_deref(), &cfg.hypers, g, rule)
             });
             let update_norm_sq = norms.first().copied().unwrap_or(0.0);
-            step_seconds += t0.elapsed().as_secs_f64();
+            step_seconds += sp.end();
+            crate::obs::counter("train_steps_total", &[]).inc();
 
             train_losses.push(train_loss);
             let smoothed = ema.update(train_loss as f64);
@@ -799,10 +801,14 @@ impl<'rt> DpTrainer<'rt> {
             }
             let batch = loader.next_batch();
             let seed = (cfg.seed as u32, t as u32);
+            let _step_span = crate::obs::span("dp.step");
 
             if self.mask_refresh > 0 && t > 0 && t % self.mask_refresh == 0 {
-                state.thresholds =
-                    backend.thresholds(model, &state.params, cfg.hypers.sparsity)?;
+                {
+                    let _rsp = crate::obs::span("train.threshold_refresh");
+                    state.thresholds =
+                        backend.thresholds(model, &state.params, cfg.hypers.sparsity)?;
+                }
                 state.mask_epoch += 1;
                 for rw in remotes.iter_mut() {
                     if let Err(e) = rw.send(&Frame::Refresh { mask_epoch: state.mask_epoch }) {
@@ -962,6 +968,7 @@ impl<'rt> DpTrainer<'rt> {
             state.step = t + 1;
             steps_run += 1;
             last_loss = train_loss;
+            crate::obs::counter("train_steps_total", &[]).inc();
 
             // broadcast the committed record; remote replicas apply the
             // identical update from it. A send failure after the local

@@ -80,6 +80,7 @@ const SESSION_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Wrap a transport failure in the [`WORKER_LOST`] marker.
 pub fn worker_lost(detail: impl std::fmt::Display) -> anyhow::Error {
+    crate::obs::counter("transport_worker_lost_total", &[]).inc();
     anyhow!("{WORKER_LOST}: {detail}")
 }
 
@@ -456,16 +457,31 @@ pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
 // ---------------------------------------------------------------------------
 
 /// A TCP stream with frame-level send/recv and a decode buffer.
+///
+/// Every conn caches its `transport_frames_total` / `transport_bytes_total`
+/// counter handles at construction so the per-frame accounting touches
+/// only lock-free atomics, never the registry lock.
 pub struct FrameConn {
     stream: TcpStream,
     pending: Vec<u8>,
+    sent_frames: Arc<crate::obs::Counter>,
+    sent_bytes: Arc<crate::obs::Counter>,
+    recv_frames: Arc<crate::obs::Counter>,
+    recv_bytes: Arc<crate::obs::Counter>,
 }
 
 impl FrameConn {
     /// Wrap a connected stream (Nagle off: frames are latency-bound).
     pub fn new(stream: TcpStream) -> FrameConn {
         let _ = stream.set_nodelay(true);
-        FrameConn { stream, pending: Vec::new() }
+        FrameConn {
+            stream,
+            pending: Vec::new(),
+            sent_frames: crate::obs::counter("transport_frames_total", &[("dir", "sent")]),
+            sent_bytes: crate::obs::counter("transport_bytes_total", &[("dir", "sent")]),
+            recv_frames: crate::obs::counter("transport_frames_total", &[("dir", "recv")]),
+            recv_bytes: crate::obs::counter("transport_bytes_total", &[("dir", "recv")]),
+        }
     }
 
     /// Apply a read timeout (leased coordinator-side sessions; `None`
@@ -476,7 +492,11 @@ impl FrameConn {
 
     /// Send one frame.
     pub fn send(&mut self, frame: &Frame) -> Result<()> {
-        self.stream.write_all(&encode_frame(frame)).context("writing frame")
+        let buf = encode_frame(frame);
+        self.stream.write_all(&buf).context("writing frame")?;
+        self.sent_frames.inc();
+        self.sent_bytes.add(buf.len() as u64);
+        Ok(())
     }
 
     /// Receive one frame; `Ok(None)` is a clean EOF *between* frames
@@ -485,6 +505,8 @@ impl FrameConn {
         loop {
             if let Some((frame, used)) = decode_frame(&self.pending)? {
                 self.pending.drain(..used);
+                self.recv_frames.inc();
+                self.recv_bytes.add(used as u64);
                 return Ok(Some(frame));
             }
             let mut chunk = [0u8; 16 * 1024];
@@ -623,6 +645,8 @@ impl WorkerHub {
                 Ok(()) => {
                     self.inner.leased.fetch_add(1, Ordering::AcqRel);
                     self.inner.sessions_served.fetch_add(1, Ordering::AcqRel);
+                    crate::obs::counter("transport_handshakes_total", &[]).inc();
+                    crate::obs::counter("transport_leases_total", &[]).inc();
                     sessions.push(RemoteWorker {
                         conn: Some(conn),
                         rank,
@@ -736,6 +760,10 @@ impl RemoteWorker {
     /// lost-worker error (the journal makes the retry exact, so the
     /// caller re-queues rather than guessing).
     pub fn recv_losses(&mut self, step: u32, rows: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+        // the all-reduce wait: time from asking for shard losses to
+        // having them in hand
+        let _sp = crate::obs::span("dp.allreduce_wait");
+        crate::obs::counter("dp_allreduce_waits_total", &[]).inc();
         let rank = self.rank;
         let lost = |d: String| worker_lost(format!("rank {rank}: {d}"));
         match self.conn().recv().map_err(|e| lost(format!("{e:#}")))? {
@@ -885,7 +913,12 @@ pub fn run_worker(
     // session that finishes (or that the coordinator discards on its own
     // initiative) resets the strike count
     let mut strikes = 0usize;
+    let mut connects = 0usize;
     'reconnect: loop {
+        if connects > 0 {
+            crate::obs::counter("transport_reconnects_total", &[]).inc();
+        }
+        connects += 1;
         let stream = connect_retry(addr, opts.connect_timeout)?;
         let mut conn = FrameConn::new(stream);
         crate::info!("[worker] connected to coordinator {addr}");

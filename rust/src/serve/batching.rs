@@ -192,17 +192,23 @@ impl MicroBatcher {
             };
             let adapter = group[0].adapter.clone();
             let mut rows: Vec<Vec<i32>> = Vec::new();
+            let dispatched = Instant::now();
+            let wait_histo = crate::obs::histogram("serve_batch_wait_seconds", &[]);
             for p in &group {
                 rows.extend(p.rows.iter().cloned());
+                wait_histo.observe(dispatched.duration_since(p.since).as_secs_f64());
             }
+            crate::obs::histogram("serve_batch_rows", &[]).observe(rows.len() as f64);
             // a panicking exec (worker-pool scatter re-throws task panics
             // on this thread) must fail this group's tickets, not kill
             // the single dispatcher and wedge every future request
+            let exec_span = crate::obs::span("serve.batch_exec");
             let result = catch_unwind(AssertUnwindSafe(|| exec(&adapter, &rows)))
                 .unwrap_or_else(|payload| {
                     let msg = crate::util::panic_message(&*payload);
                     Err(anyhow!("classify panicked: {msg}"))
                 });
+            exec_span.end();
             match result {
                 Ok(mut out) => {
                     // fold outputs back per request, submission order
@@ -314,6 +320,7 @@ impl ServeEngine {
         if rows.is_empty() {
             bail!("classify: no rows");
         }
+        let _sp = crate::obs::span("serve.classify");
         let vocab = self.model.vocab as i32;
         for (r, row) in rows.iter().enumerate() {
             if let Some(&t) = row.iter().find(|&&t| t < 0 || t >= vocab) {

@@ -8,7 +8,9 @@
 //!
 //! | method + path                | action |
 //! |------------------------------|--------|
-//! | `GET  /healthz`              | liveness + registry/queue/jobs/remote-worker gauges |
+//! | `GET  /healthz`              | liveness + registry/queue/jobs/remote-worker gauges (every number is read back from the [`crate::obs`] gauge registry, so `/healthz` and `/metrics` can never disagree) |
+//! | `GET  /metrics`              | Prometheus text exposition of the whole [`crate::obs`] registry (the one non-JSON endpoint) |
+//! | `GET  /statsz`               | JSON snapshot of the same registry with precomputed histogram quantiles (what the `stats` CLI renders) |
 //! | `GET  /v1/adapters`          | list registered adapters (nnz, bytes, hits, pins) |
 //! | `POST /v1/adapters`          | register: `{"name", "journal": path}` replays a step journal against the base and extracts the delta under its mask-union certificate; `{"name", "delta": path}` loads a saved `.adapter` file |
 //! | `POST /v1/classify`          | `{"adapter", "prompts": [[tok,...],...]}` → per-row logits + candidate-free argmax, micro-batched with concurrent same-adapter requests; the adapter is pinned against eviction while the request is in flight |
@@ -49,7 +51,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -288,11 +290,22 @@ fn handle_connection(engine: &ServeEngine, mut stream: TcpStream, stop: &AtomicB
             }
         };
         let keep_alive = req.keep_alive;
-        let (status, body) = route(engine, &req);
-        if write_response(&mut stream, status, &body, keep_alive).is_err()
-            || !keep_alive
-            || stop.load(Ordering::Acquire)
-        {
+        let label = route_label(&req.path);
+        let started = Instant::now();
+        // `/metrics` is the one plain-text endpoint; everything else
+        // routes to a JSON body
+        let write_ok = if req.method == "GET" && req.path == "/metrics" {
+            sync_gauges(engine);
+            let text = crate::obs::render_prometheus();
+            write_text_response(&mut stream, 200, &text, keep_alive).is_ok()
+        } else {
+            let (status, body) = route(engine, &req);
+            write_response(&mut stream, status, &body, keep_alive).is_ok()
+        };
+        crate::obs::counter("http_requests_total", &[("route", label)]).inc();
+        crate::obs::histogram("http_request_seconds", &[("route", label)])
+            .observe(started.elapsed().as_secs_f64());
+        if !write_ok || !keep_alive || stop.load(Ordering::Acquire) {
             break;
         }
     }
@@ -303,10 +316,54 @@ fn error_json(e: &anyhow::Error) -> Json {
     Json::obj(vec![("error", Json::Str(format!("{e:#}")))])
 }
 
+/// Collapse a request path onto the fixed route-label set so the
+/// `http_requests_total{route=...}` family stays bounded no matter what
+/// paths peers probe (`/v1/jobs/123/cancel` counts as `/v1/jobs`;
+/// unknown paths count as `other`).
+fn route_label(path: &str) -> &'static str {
+    match path {
+        "/healthz" => "/healthz",
+        "/metrics" => "/metrics",
+        "/statsz" => "/statsz",
+        "/v1/adapters" => "/v1/adapters",
+        "/v1/classify" => "/v1/classify",
+        p if p == "/v1/jobs" || p.starts_with("/v1/jobs/") => "/v1/jobs",
+        _ => "other",
+    }
+}
+
+/// Copy this engine's live occupancy numbers into the process-global
+/// gauge registry. Runs at scrape time (`/healthz`, `/metrics`,
+/// `/statsz`) rather than at mutation sites, so a process hosting
+/// several engines (tests) always reports the engine actually being
+/// scraped, and a series that drops to zero is overwritten instead of
+/// going stale.
+fn sync_gauges(engine: &ServeEngine) {
+    crate::obs::gauge("serve_registry_adapters", &[]).set(engine.registry.len() as i64);
+    crate::obs::gauge("serve_registry_bytes", &[]).set(engine.registry.bytes() as i64);
+    crate::obs::gauge("serve_pending_requests", &[]).set(engine.batcher.pending() as i64);
+    if let Some(handle) = engine.jobs() {
+        crate::obs::gauge("jobs_active", &[]).set(handle.queue.active() as i64);
+        for (state, class, n) in handle.queue.depth_stats() {
+            crate::obs::gauge("jobs_queue_depth", &[("state", state), ("priority", class)])
+                .set(n as i64);
+        }
+    }
+    if let Some(hub) = engine.worker_hub() {
+        crate::obs::gauge("transport_workers_connected", &[]).set(hub.connected() as i64);
+        crate::obs::gauge("transport_worker_sessions_served", &[])
+            .set(hub.sessions_served() as i64);
+    }
+}
+
 /// Dispatch one request to its endpoint.
 fn route(engine: &ServeEngine, req: &Request) -> (u16, Json) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (200, healthz(engine)),
+        ("GET", "/statsz") => {
+            sync_gauges(engine);
+            (200, crate::obs::snapshot_json())
+        }
         ("GET", "/v1/adapters") => (200, list_adapters(engine)),
         ("POST", "/v1/adapters") => match post_adapter(engine, &req.body) {
             Ok(body) => (200, body),
@@ -340,24 +397,30 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, Json) {
     }
 }
 
+/// Every numeric gauge is synced into the [`crate::obs`] registry
+/// first, then *read back from it* — the registry is the single source
+/// of truth, so `/healthz`, `/metrics` and `/statsz` can never disagree
+/// about the same quantity.
 fn healthz(engine: &ServeEngine) -> Json {
+    sync_gauges(engine);
+    let g = |name: &str| Json::Num(crate::obs::gauge(name, &[]).get() as f64);
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("platform", Json::Str(engine.runtime().backend().platform().to_string())),
         ("model", Json::Str(engine.model().name.clone())),
-        ("adapters", Json::Num(engine.registry.len() as f64)),
-        ("pending_requests", Json::Num(engine.batcher.pending() as f64)),
+        ("adapters", g("serve_registry_adapters")),
+        ("pending_requests", g("serve_pending_requests")),
         ("max_connections", Json::Num(MAX_CONNECTIONS as f64)),
     ];
-    if let Some(handle) = engine.jobs() {
+    if engine.jobs().is_some() {
         fields.push(("jobs_enabled", Json::Bool(true)));
-        fields.push(("jobs_active", Json::Num(handle.queue.active() as f64)));
+        fields.push(("jobs_active", g("jobs_active")));
     } else {
         fields.push(("jobs_enabled", Json::Bool(false)));
     }
-    if let Some(hub) = engine.worker_hub() {
-        fields.push(("workers_connected", Json::Num(hub.connected() as f64)));
-        fields.push(("worker_sessions_served", Json::Num(hub.sessions_served() as f64)));
+    if engine.worker_hub().is_some() {
+        fields.push(("workers_connected", g("transport_workers_connected")));
+        fields.push(("worker_sessions_served", g("transport_worker_sessions_served")));
     }
     Json::obj(fields)
 }
@@ -686,6 +749,26 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &Json, keep_alive: 
     Ok(())
 }
 
+/// Write one plain-text response and flush (`/metrics` — Prometheus
+/// exposition format is `text/plain`, not JSON).
+fn write_text_response(
+    stream: &mut TcpStream,
+    status: u16,
+    payload: &str,
+    keep_alive: bool,
+) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status_text(status),
+        payload.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
 /// A persistent loopback client: one TCP connection, many requests
 /// (HTTP/1.1 keep-alive). This is what job submit-then-poll loops and
 /// classify traffic should use — no connect/teardown per request.
@@ -711,6 +794,23 @@ impl LoopbackClient {
         body: Option<&Json>,
     ) -> Result<(u16, Json)> {
         let payload = body.map(|b| b.to_string()).unwrap_or_default();
+        let (status, body_text) = self.raw_request(method, path, &payload)?;
+        let body = if body_text.trim().is_empty() {
+            Json::Null
+        } else {
+            json::parse(&body_text).with_context(|| format!("response body of {method} {path}"))?
+        };
+        Ok((status, body))
+    }
+
+    /// One request/response returning the raw body text: `(status,
+    /// body)`. This is the path for the plain-text `/metrics`
+    /// endpoint, whose Prometheus exposition body is not JSON.
+    pub fn request_text(&mut self, method: &str, path: &str) -> Result<(u16, String)> {
+        self.raw_request(method, path, "")
+    }
+
+    fn raw_request(&mut self, method: &str, path: &str, payload: &str) -> Result<(u16, String)> {
         let head = format!(
             "{method} {path} HTTP/1.1\r\nHost: loopback\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
             payload.len()
@@ -744,12 +844,7 @@ impl LoopbackClient {
         let body_text =
             std::str::from_utf8(&self.buf[body_start..body_start + content_length])?.to_string();
         self.buf.drain(..body_start + content_length);
-        let body = if body_text.trim().is_empty() {
-            Json::Null
-        } else {
-            json::parse(&body_text).with_context(|| format!("response body of {method} {path}"))?
-        };
-        Ok((status, body))
+        Ok((status, body_text))
     }
 }
 

@@ -182,6 +182,9 @@ impl AdapterRegistry {
         }
 
         // commit: evict the plan, replace the old entry, insert the new
+        if !victims.is_empty() {
+            crate::obs::counter("serve_registry_evictions_total", &[]).add(victims.len() as u64);
+        }
         for v in &victims {
             let e = entries.map.remove(v).unwrap();
             entries.bytes -= e.bytes;
@@ -230,6 +233,7 @@ impl AdapterRegistry {
             bail!("no adapter '{name}' registered");
         };
         entry.pinned += 1;
+        crate::obs::counter("serve_registry_pins_total", &[]).inc();
         Ok(PinGuard { registry: self, name: name.to_string() })
     }
 

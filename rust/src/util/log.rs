@@ -4,12 +4,16 @@
 //! machine-readable metric records (one JSON object per line) to files
 //! under the run directory — the format the repro harness and plotting
 //! scripts consume.
+//!
+//! Wall-clock timing lives in [`crate::obs`]: `obs::span("...")` records
+//! scoped timings into the process-wide metrics registry (and the
+//! optional trace stream), replacing the ad-hoc `Timer` this module used
+//! to carry.
 
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::time::Instant;
 
 use crate::util::json::Json;
 
@@ -50,31 +54,6 @@ macro_rules! debug {
             eprintln!("[debug] {}", format!($($arg)*));
         }
     };
-}
-
-/// Wall-clock scope timer for coarse phase timing.
-pub struct Timer {
-    label: String,
-    start: Instant,
-}
-
-impl Timer {
-    /// Start a labeled timer.
-    pub fn start(label: &str) -> Timer {
-        Timer { label: label.to_string(), start: Instant::now() }
-    }
-
-    /// Seconds since start.
-    pub fn elapsed_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    /// Log and return the elapsed seconds.
-    pub fn finish(self) -> f64 {
-        let dt = self.elapsed_s();
-        crate::info!("{} took {:.2}s", self.label, dt);
-        dt
-    }
 }
 
 /// Append-only JSONL metric stream.

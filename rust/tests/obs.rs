@@ -1,0 +1,207 @@
+//! Integration tests for the observability layer (`rust/src/obs/`).
+//!
+//! Two contracts:
+//!
+//! * **Exposition end to end**: a loopback server answers `GET /metrics`
+//!   with valid Prometheus text and `GET /statsz` with a JSON snapshot,
+//!   and `/healthz` reports the same numbers the registry holds —
+//!   counters for the classify traffic just served, gauges for the
+//!   engine being scraped.
+//! * **Instrumentation is invisible to training**: a journaled DP run
+//!   with the trace stream on and the registry hammered from other
+//!   threads produces byte-identical journal bytes and bit-identical
+//!   final parameters versus the same run uninstrumented. Metrics are a
+//!   pure read-side overlay — no PRNG state, no journal writes.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use sparse_mezo::config::{ServeConfig, TrainConfig};
+use sparse_mezo::coordinator::trainer::TrainResult;
+use sparse_mezo::data::tasks;
+use sparse_mezo::parallel::{DpTrainer, WorkerPool};
+use sparse_mezo::runtime::exec::InitExec;
+use sparse_mezo::runtime::{ModelInfo, Runtime};
+use sparse_mezo::serve::http::{self, LoopbackClient};
+use sparse_mezo::serve::{ServeEngine, SparseDelta};
+use sparse_mezo::util::json::{self, Json};
+
+/// One shared native runtime per test process.
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(Runtime::native)
+}
+
+fn model() -> ModelInfo {
+    rt().model("llama_tiny").unwrap().clone()
+}
+
+fn base_params(m: &ModelInfo) -> Vec<f32> {
+    InitExec::load(rt(), m).unwrap().run(rt(), (11, 0x1717)).unwrap()
+}
+
+/// A synthetic sparse adapter so the server has a tenant to classify
+/// against without paying for a training run.
+fn synthetic_delta(m: &ModelInfo, base: &[f32]) -> SparseDelta {
+    let mut tuned = base.to_vec();
+    for (i, v) in tuned.iter_mut().enumerate() {
+        if i % 5 == 0 {
+            *v += 1e-3;
+        }
+    }
+    SparseDelta::extract(m, base, &tuned, None, Json::Null).unwrap()
+}
+
+/// Train `steps` S-MeZO steps journaling to `path`; identical inputs
+/// must produce identical journals and parameters.
+fn train_with_journal(steps: usize, path: &Path, base: Vec<f32>) -> TrainResult {
+    let m = model();
+    let mut cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
+    cfg.steps = steps;
+    cfg.eval_every = 0;
+    cfg.eval_cap = 8;
+    cfg.seed = 11;
+    cfg.workers = 1;
+    let dataset = tasks::generate_sized("rte", 11, 48, 8, 8).unwrap();
+    let pool = WorkerPool::new(1);
+    let mut t = DpTrainer::new(rt(), &pool, cfg).with_journal(path);
+    t.eval_test = false;
+    t.initial_override = Some(base);
+    t.run_on(&m, &dataset).unwrap()
+}
+
+/// The numeric value of the exposition line for `series` (exact match
+/// on the part before the space), if present.
+fn metric_value(text: &str, series: &str) -> Option<f64> {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| l.strip_prefix(series).and_then(|rest| rest.strip_prefix(' ')))
+        .map(|v| v.parse().unwrap())
+}
+
+#[test]
+fn metrics_statsz_and_healthz_agree_over_loopback() {
+    let m = model();
+    let base = base_params(&m);
+    let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let engine = ServeEngine::new(Runtime::native(), &cfg, base.clone()).unwrap();
+    engine.registry.insert("t0", synthetic_delta(&m, &base)).unwrap();
+    let server = http::serve(Arc::new(engine), 0).unwrap();
+    let mut client = LoopbackClient::connect(server.addr).unwrap();
+
+    // drive traffic the scrape must then account for
+    let req = json::parse(r#"{"adapter":"t0","prompts":[[1,2,3],[4,5]]}"#).unwrap();
+    let (status, _) = client.request("POST", "/v1/classify", Some(&req)).unwrap();
+    assert_eq!(status, 200);
+
+    // /healthz numbers come from the registry gauges
+    let (status, health) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.req("adapters").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(health.req("pending_requests").unwrap().as_usize().unwrap(), 0);
+
+    // /statsz: JSON snapshot with precomputed quantiles
+    let (status, stats) = client.request("GET", "/statsz", None).unwrap();
+    assert_eq!(status, 200);
+    let counters = stats.req("counters").unwrap().as_obj().unwrap();
+    let classify = counters
+        .get("http_requests_total{route=\"/v1/classify\"}")
+        .expect("classify route counted")
+        .as_f64()
+        .unwrap();
+    assert!(classify >= 1.0, "classify count {classify}");
+    let gauges = stats.req("gauges").unwrap().as_obj().unwrap();
+    assert_eq!(gauges.get("serve_registry_adapters").unwrap().as_f64().unwrap(), 1.0);
+    let histos = stats.req("histograms").unwrap().as_obj().unwrap();
+    let lat = histos
+        .get("http_request_seconds{route=\"/v1/classify\"}")
+        .expect("classify latency histogram");
+    assert!(lat.req("count").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(lat.req("p99").unwrap().as_f64().unwrap() > 0.0);
+
+    // /metrics: Prometheus text exposition
+    let (status, text) = client.request_text("GET", "/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(metric_value(&text, "http_requests_total{route=\"/v1/classify\"}").unwrap() >= 1.0);
+    assert_eq!(metric_value(&text, "serve_registry_adapters"), Some(1.0));
+    assert!(metric_value(&text, "serve_batch_rows_count").unwrap() >= 1.0);
+    assert!(text.contains("# TYPE http_requests_total counter"), "{text}");
+    assert!(text.contains("# TYPE serve_registry_adapters gauge"), "{text}");
+    assert!(text.contains("# TYPE http_request_seconds histogram"), "{text}");
+    assert!(text.contains("le=\"+Inf\""), "{text}");
+    // every sample line is `name_or_labels SP value` with a parseable
+    // value — the whole body stays machine-readable
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+        assert!(
+            series.chars().next().unwrap().is_ascii_alphabetic(),
+            "bad series name in {line:?}"
+        );
+        value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn instrumentation_is_invisible_to_training() {
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_obs_ident_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let plain = dir.join("plain.journal.jsonl");
+    let noisy = dir.join("instrumented.journal.jsonl");
+
+    let r_plain = train_with_journal(10, &plain, base.clone());
+
+    // second run: trace stream on + the registry hammered from other
+    // threads the whole time
+    let trace = dir.join("trace.jsonl");
+    sparse_mezo::obs::trace_to(&trace).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let hammers: Vec<_> = (0..4)
+        .map(|i| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let c = sparse_mezo::obs::counter("obs_test_hammer_total", &[]);
+                let h = sparse_mezo::obs::histogram("obs_test_hammer_seconds", &[]);
+                while !stop.load(Ordering::Relaxed) {
+                    c.inc();
+                    h.observe(1e-6 * (i + 1) as f64);
+                }
+            })
+        })
+        .collect();
+    let r_noisy = train_with_journal(10, &noisy, base.clone());
+    stop.store(true, Ordering::Relaxed);
+    for h in hammers {
+        h.join().unwrap();
+    }
+    sparse_mezo::obs::trace_off();
+
+    // bit-identity: instrumentation consumed no PRNG state and wrote
+    // nothing into the journal
+    assert_eq!(r_plain.steps_run, r_noisy.steps_run);
+    for (i, (a, b)) in r_plain.params.iter().zip(&r_noisy.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i} differs under instrumentation");
+    }
+    let b_plain = std::fs::read(&plain).unwrap();
+    let b_noisy = std::fs::read(&noisy).unwrap();
+    assert_eq!(b_plain, b_noisy, "journal bytes differ under instrumentation");
+
+    // the trace stream recorded the run (dp.step spans at least), and
+    // every line is a well-formed event
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut saw_step = false;
+    for line in text.lines() {
+        let doc = json::parse(line).unwrap();
+        assert!(doc.req("dur_s").unwrap().as_f64().unwrap() >= 0.0);
+        if doc.req("span").unwrap().as_str().unwrap() == "dp.step" {
+            saw_step = true;
+        }
+    }
+    assert!(saw_step, "no dp.step spans in the trace stream");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Regenerate the repo-root BENCH_*.json snapshots from the --quick
+# bench matrix (dp, serve, jobs). Each bench prints its human table and
+# rewrites its snapshot in place, including the `obs` histogram section
+# recorded by the in-tree metrics registry during the run.
+#
+# Skips gracefully (exit 0) when no Rust toolchain is on PATH so
+# toolchain-free environments can run it as a no-op.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "regen_benches: no cargo on PATH, skipping bench regeneration" >&2
+  exit 0
+fi
+
+for bench in dp_throughput serve_throughput jobs_throughput; do
+  echo "== cargo bench --bench $bench -- --quick"
+  cargo bench --bench "$bench" -- --quick
+done
