@@ -214,6 +214,7 @@ impl<'rt> Trainer<'rt> {
         let mut diverged = false;
         let mut step_seconds = 0.0f64;
         let mut current_lr = cfg.hypers.lr;
+        let mut g_abs_ewma = 0.0f64;
 
         for t in 0..cfg.steps {
             let lr = self.schedule.lr_at(cfg.hypers.lr, t);
@@ -234,6 +235,15 @@ impl<'rt> Trainer<'rt> {
             let loss = mets.train_loss;
             train_losses.push(loss);
             let smoothed = ema.update(loss as f64);
+
+            // scaled-integer telemetry gauges (the registry Gauge is an
+            // AtomicI64, so floats ride in fixed-point units)
+            let g_abs = mets.proj_grad.abs() as f64;
+            g_abs_ewma = if t == 0 { g_abs } else { 0.9 * g_abs_ewma + 0.1 * g_abs };
+            crate::obs::gauge("train_last_loss_milli", &[]).set((loss as f64 * 1e3) as i64);
+            crate::obs::gauge("train_g_abs_ewma_micro", &[]).set((g_abs_ewma * 1e6) as i64);
+            crate::obs::gauge("train_mask_nonzero", &[])
+                .set((mets.masked_frac as f64 * model.n_params as f64).round() as i64);
 
             if let Some(w) = &mut self.jsonl {
                 if cfg.log_every > 0 && t % cfg.log_every == 0 {

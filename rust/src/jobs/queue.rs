@@ -123,8 +123,37 @@ pub struct Job {
     pub last_loss: f64,
     /// divergence detection fired during a slice
     pub diverged: bool,
+    /// trace context for cross-node stitching: minted deterministically
+    /// at submission (FNV-1a over id/name/seed, never 0), rendered as
+    /// 16 hex digits in HTTP bodies and `SMEZO_TRACE` events, and
+    /// carried to remote workers in the `Welcome`/`Step` frames
+    pub trace_id: u64,
+    /// alert rules active after the last slice (the scheduler copies
+    /// [`obs::alerts`](crate::obs::alerts) evaluation results here so
+    /// `jobs show` and `GET /v1/jobs/{id}` carry them)
+    pub alerts: Vec<String>,
     /// scheduler clock stamp of the last slice (round-robin fairness)
     last_scheduled: u64,
+}
+
+/// Deterministic per-job trace id: FNV-1a 64 over the job id, spec name
+/// and seed. No wall clock or PRNG involved — resubmitting the same
+/// queue directory reproduces the same ids, and minting consumes
+/// nothing the training path could observe. Never 0 (0 = "no trace"
+/// on the wire).
+pub fn mint_trace_id(id: u64, spec: &JobSpec) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for chunk in [&id.to_le_bytes()[..], spec.name.as_bytes(), &spec.seed.to_le_bytes()[..]] {
+        for &b in chunk {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    if h == 0 {
+        1
+    } else {
+        h
+    }
 }
 
 impl Job {
@@ -148,6 +177,12 @@ impl Job {
             // NaN serializes as null and parses back to NaN
             ("last_loss", Json::Num(self.last_loss)),
             ("diverged", Json::Bool(self.diverged)),
+            // hex string: 2^53-exact f64 JSON numbers can't hold a u64
+            ("trace_id", Json::Str(format!("{:016x}", self.trace_id))),
+            (
+                "alerts",
+                Json::Arr(self.alerts.iter().map(|a| Json::Str(a.clone())).collect()),
+            ),
             ("last_scheduled", Json::Num(self.last_scheduled as f64)),
             ("spec", self.spec.to_json()),
         ])
@@ -159,9 +194,28 @@ impl Job {
             Some(Json::Str(s)) => Some(s.clone()),
             _ => None,
         };
+        let id = doc.req("id")?.as_f64()? as u64;
+        let spec = JobSpec::from_json(doc.req("spec")?)?;
+        // pre-PR-8 state files carry no trace_id: re-mint it (the mint
+        // is a pure function of id/name/seed, so it lands on the same
+        // id a live submission would have gotten)
+        let trace_id = match doc.get("trace_id") {
+            Some(Json::Str(s)) => u64::from_str_radix(s, 16)
+                .with_context(|| format!("job {id}: bad trace_id {s:?}"))?,
+            _ => mint_trace_id(id, &spec),
+        };
+        let alerts = match doc.get("alerts") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .filter_map(|x| x.as_str().ok().map(str::to_string))
+                .collect(),
+            _ => Vec::new(),
+        };
         Ok(Job {
-            id: doc.req("id")?.as_f64()? as u64,
-            spec: JobSpec::from_json(doc.req("spec")?)?,
+            id,
+            spec,
+            trace_id,
+            alerts,
             state: JobState::parse(doc.req("state")?.as_str()?)?,
             steps_done: doc.req("steps_done")?.as_usize()?,
             slices_run: doc.req("slices_run")?.as_usize()?,
@@ -402,9 +456,12 @@ impl JobQueue {
 
     /// A freshly-submitted job record.
     fn fresh_job(id: u64, spec: JobSpec, parent: Option<u64>) -> Job {
+        let trace_id = mint_trace_id(id, &spec);
         Job {
             id,
             spec,
+            trace_id,
+            alerts: Vec::new(),
             state: JobState::Queued,
             steps_done: 0,
             slices_run: 0,
@@ -733,6 +790,24 @@ impl JobQueue {
             self.ready.notify_all();
         }
         Ok(snap)
+    }
+
+    /// Annotate a job with its currently-active alert rule names (the
+    /// scheduler calls this with [`obs::alerts::evaluate_slice`]
+    /// results at every slice boundary). Persisted, so `jobs show` and
+    /// the HTTP body carry the annotation across restarts. A no-op
+    /// when the annotation is already current (skips the disk write).
+    ///
+    /// [`obs::alerts::evaluate_slice`]: crate::obs::alerts::evaluate_slice
+    pub fn set_alerts(&self, id: u64, rules: &[&str]) -> Result<()> {
+        let mut inner = self.lock_inner();
+        let Some(job) = inner.jobs.get_mut(&id) else { bail!("no job {id}") };
+        if job.alerts.iter().map(String::as_str).eq(rules.iter().copied()) {
+            return Ok(());
+        }
+        job.alerts = rules.iter().map(|r| r.to_string()).collect();
+        let snap = job.clone();
+        self.persist(&snap)
     }
 
     /// Number of jobs in non-terminal states (queue depth gauge).
@@ -1101,6 +1176,22 @@ mod tests {
         assert_eq!(back.last_loss.to_bits(), 1.25f64.to_bits());
         assert!(back.diverged);
         assert_eq!(back.parent, None);
+        assert_ne!(back.trace_id, 0, "trace ids are never 0 (0 = no trace)");
+        assert_eq!(back.trace_id, j.trace_id, "trace_id must survive the hex round-trip");
+        // a pre-PR-8 state file (no trace_id key) re-mints the same id
+        let mut doc = j.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.remove("trace_id");
+            fields.remove("alerts");
+        }
+        let legacy = Job::from_json(&doc).unwrap();
+        assert_eq!(legacy.trace_id, j.trace_id);
+        assert!(legacy.alerts.is_empty());
+        // alert annotations persist through the state file
+        q.set_alerts(id, &["stall", "worker-flap"]).unwrap();
+        let annotated = q.get(id).unwrap();
+        let back = Job::from_json(&annotated.to_json()).unwrap();
+        assert_eq!(back.alerts, vec!["stall".to_string(), "worker-flap".to_string()]);
         // NaN loss crosses the state file as null and comes back NaN
         let fresh = JobQueue::fresh_job(9, spec("nan", 0), Some(3));
         let back = Job::from_json(&fresh.to_json()).unwrap();

@@ -117,9 +117,16 @@ impl Scheduler {
     }
 
     /// Run one slice of an already-claimed (`Running`) job and record
-    /// its outcome.
+    /// its outcome, feed the job's flight recorder, and evaluate the
+    /// alert rule catalog at the slice boundary.
     fn run_claimed_slice(&self, job: Job, server_stop: Option<&AtomicBool>) {
+        // the trace scope outlives the span so the span's JSONL event
+        // (emitted at drop) carries this job's trace id — the coordinator
+        // half of the cross-node stitch (the worker half adopts the same
+        // id from its Welcome frame)
+        let _trace = crate::obs::trace_scope(job.trace_id);
         let slice_span = crate::obs::span("jobs.slice");
+        let recorder = crate::obs::recorder::for_job(job.id);
         let result = catch_unwind(AssertUnwindSafe(|| self.slice_job(&job, server_stop)));
         slice_span.end();
         let failed = |error: String| SliceOutcome {
@@ -142,6 +149,9 @@ impl Scheduler {
                     job.spec.name
                 );
                 crate::obs::counter("jobs_requeued_total", &[]).inc();
+                // remotes own the top shard ranks, so charge the flap to
+                // the highest rank (exact when one remote was leased)
+                recorder.note_worker_lost(job.spec.workers.max(1) as u32 - 1);
                 SliceOutcome { steps_done: job.steps_done, ..SliceOutcome::default() }
             }
             Ok(Err(e)) => failed(format!("{e:#}")),
@@ -153,7 +163,27 @@ impl Scheduler {
         if let Some(e) = &outcome.error {
             crate::info!("[jobs] job {} '{}' failed: {e}", job.id, job.spec.name);
         }
-        let _ = self.queue.finish_slice(job.id, outcome);
+        let slice_diverged = outcome.diverged;
+        let Ok(updated) = self.queue.finish_slice(job.id, outcome) else { return };
+
+        // alert rules at the slice boundary: cheap, O(1) per rule over
+        // the recorder snapshot. Active rule names are copied into the
+        // job record so `jobs show` / `GET /v1/jobs/{id}` carry them.
+        let obs = crate::obs::alerts::SliceObs {
+            job: job.id,
+            committed: updated.steps_done.saturating_sub(job.steps_done) as u64,
+            runnable: updated.state == JobState::Queued,
+            diverged: slice_diverged,
+            mask_refresh: job.spec.mask_refresh,
+        };
+        let rules = crate::obs::alerts::evaluate_slice(&obs, &recorder.snapshot());
+        let _ = self.queue.set_alerts(job.id, &rules);
+        if updated.state.terminal() {
+            // release the active gauges — a dead job must not hold
+            // `/healthz` degraded forever. The persisted annotation
+            // above keeps the record of what was firing.
+            crate::obs::alerts::clear_job(job.id);
+        }
     }
 
     /// Run slices until the queue has nothing runnable; returns the
@@ -239,13 +269,17 @@ impl Scheduler {
                 .with_journal(&journal);
         trainer.eval_test = false;
         trainer.mask_refresh = spec.mask_refresh;
+        trainer.recorder = Some(crate::obs::recorder::for_job(job.id));
         // multi-shard cells may lease TCP workers parked at the engine's
         // hub; each slice hands the top shard ranks to whatever remotes
         // are connected (zero = all-local, bit-identical either way)
         if cfg.workers.max(1) > 1 {
             if let Some(hub) = self.engine.worker_hub() {
-                trainer.remote =
-                    Some(RemoteHandle { hub: Arc::clone(hub), data_seed: spec.dataset_seed() });
+                trainer.remote = Some(RemoteHandle {
+                    hub: Arc::clone(hub),
+                    data_seed: spec.dataset_seed(),
+                    trace_id: job.trace_id,
+                });
             }
         }
 
@@ -257,7 +291,14 @@ impl Scheduler {
         } else {
             match self.restore_from_checkpoint(job.id, &model, &journal) {
                 Some(st) => st,
-                None => trainer.resume_slices(&model, &self.base)?,
+                None => {
+                    let t0 = std::time::Instant::now();
+                    let st = trainer.resume_slices(&model, &self.base)?;
+                    if let Some(rec) = &trainer.recorder {
+                        rec.note_replay(t0.elapsed().as_secs_f64());
+                    }
+                    st
+                }
             }
         };
 
@@ -375,6 +416,7 @@ impl Scheduler {
     ) -> Result<()> {
         let journal = self.queue.journal_path(job.id);
         let verify_span = crate::obs::span("jobs.replay_verify");
+        let verify_t0 = std::time::Instant::now();
         let (header, records) = protocol::load_journal(&journal)?;
         let outcome =
             protocol::replay_full(self.engine.runtime(), model, cfg, &header, base, &records)?;
@@ -388,6 +430,9 @@ impl Scheduler {
             }
         }
         verify_span.end();
+        if let Some(rec) = crate::obs::recorder::get(job.id) {
+            rec.note_replay(verify_t0.elapsed().as_secs_f64());
+        }
         let meta = Json::obj(vec![
             ("source", Json::Str(format!("job:{}", job.id))),
             ("task", Json::Str(job.spec.task.clone())),

@@ -78,7 +78,7 @@ COMMANDS
                   that train in the background and auto-publish.
                   With --listen-workers, remote `worker` processes may
                   connect and serve multi-shard job slices over TCP)
-  jobs            <submit|submit-grid|list|show|cancel|resume|drain>
+  jobs            <submit|submit-grid|list|show|cancel|resume|drain|top>
                   --jobs-dir DIR
                   submit: --name A [--task T --optimizer O --steps N
                           --workers W --priority P --slice-steps K
@@ -96,11 +96,16 @@ COMMANDS
                   completion in-process, publishing adapters;
                   --listen-workers leases shards to remote workers,
                   --min-workers waits for that many before draining
-  stats           [--port P]  fetch GET /statsz from a running serve
-                  process on the loopback and pretty-print counters,
-                  gauges and histogram quantiles (p50/p99)
+                  top:    [--port P --watch SECS] live table of jobs on
+                          a running server — state, step rate, loss,
+                          sparsity, active alerts — joined from
+                          /v1/jobs and /v1/jobs/{id}/timeline
+  stats           [--port P --watch SECS]  fetch GET /statsz from a
+                  running serve process on the loopback and pretty-print
+                  counters, gauges and histogram quantiles (p50/p99);
+                  --watch clears and re-renders every SECS seconds
   worker          --coordinator HOST:PORT [--seed S --init-from CKPT
-                  --threads N --connect-timeout SECS]
+                  --threads N --connect-timeout SECS --max-phase-a N]
                   (remote seed-sync replica: rebuilds the coordinator's
                   replica state from journal catch-up at every lease and
                   exchanges per-row losses + (seed, g) step records —
@@ -478,17 +483,47 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-/// `stats`: fetch `/statsz` from a running loopback server and render
-/// the registry snapshot — counters and gauges as name/value pairs,
-/// histograms as count/mean/p50/p99 rows.
-fn cmd_stats(args: &Args) -> Result<()> {
+/// The loopback address for `--port P` (default: the serve config's).
+fn loopback_addr(args: &Args) -> Result<std::net::SocketAddr> {
     let default_port = ServeConfig::resolve(None)?.port;
     let port = args.u16_or("port", default_port)?;
-    let addr: std::net::SocketAddr = format!("127.0.0.1:{port}")
-        .parse()
-        .context("building loopback address")?;
-    let mut client = http::LoopbackClient::connect(addr)
-        .with_context(|| format!("is a server running on port {port}? (serve --port)"))?;
+    format!("127.0.0.1:{port}").parse().context("building loopback address")
+}
+
+/// Run `render` once, or — when `watch_secs > 0` — forever on a
+/// `watch(1)`-style refresh loop, clearing the terminal before each
+/// frame. Shared by `stats --watch` and `jobs top`. A frame that fails
+/// (server restarting between refreshes) prints the error and keeps
+/// watching rather than exiting.
+fn watch_loop(watch_secs: u64, mut render: impl FnMut() -> Result<()>) -> Result<()> {
+    if watch_secs == 0 {
+        return render();
+    }
+    loop {
+        print!("\x1b[2J\x1b[H");
+        if let Err(e) = render() {
+            println!("error: {e:#}");
+        }
+        std::thread::sleep(std::time::Duration::from_secs(watch_secs));
+    }
+}
+
+/// `stats`: fetch `/statsz` from a running loopback server and render
+/// the registry snapshot — counters and gauges as name/value pairs,
+/// histograms as count/mean/p50/p99 rows. `--watch SECS` re-renders on
+/// a refresh loop.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = loopback_addr(args)?;
+    let port = addr.port();
+    watch_loop(args.u64_or("watch", 0)?, move || {
+        let mut client = http::LoopbackClient::connect(addr)
+            .with_context(|| format!("is a server running on port {port}? (serve --port)"))?;
+        render_stats(&mut client)
+    })
+}
+
+/// One `stats` frame over an established connection.
+fn render_stats(client: &mut http::LoopbackClient) -> Result<()> {
     let (status, body) = client.request("GET", "/statsz", None)?;
     if status != 200 {
         bail!("GET /statsz answered {status}: {body}");
@@ -515,14 +550,94 @@ fn cmd_stats(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One `jobs top` frame: every job from `GET /v1/jobs`, joined with
+/// its flight-recorder timeline for the live rate/loss/sparsity/alert
+/// columns.
+fn render_jobs_top(client: &mut http::LoopbackClient) -> Result<()> {
+    let (status, body) = client.request("GET", "/v1/jobs", None)?;
+    if status != 200 {
+        bail!("GET /v1/jobs answered {status}: {body}");
+    }
+    println!(
+        "{:>4}  {:<10}  {:<20}  {:>12}  {:>8}  {:>9}  {:>8}  alerts",
+        "id", "state", "name", "steps", "steps/s", "loss", "sparsity"
+    );
+    for job in body.req("jobs")?.as_arr()? {
+        let id = job.req("id")?.as_usize()?;
+        let spec = job.req("spec")?;
+        let alerts: Vec<String> = match job.get("alerts") {
+            Some(Json::Arr(xs)) => {
+                xs.iter().filter_map(|x| x.as_str().ok().map(str::to_string)).collect()
+            }
+            _ => Vec::new(),
+        };
+        // per-job timeline: live loss / sparsity / step-rate columns
+        let (ts, tl) = client.request("GET", &format!("/v1/jobs/{id}/timeline"), None)?;
+        let (mut rate, mut loss, mut sparsity) = (String::new(), String::new(), String::new());
+        if ts == 200 {
+            if let Ok(t) = tl.req("timings") {
+                let median = t.req("median_step_seconds")?.as_f64()?;
+                if median > 0.0 {
+                    rate = format!("{:.1}", 1.0 / median);
+                }
+            }
+            if let Some(Json::Obj(latest)) = tl.get("latest") {
+                if let Some(l) = latest.get("loss") {
+                    loss = format!("{:.4}", l.as_f64()?);
+                }
+                let nz = latest.get("nonzero").map(|x| x.as_f64()).transpose()?;
+                let total = latest.get("total").map(|x| x.as_f64()).transpose()?;
+                if let (Some(nz), Some(total)) = (nz, total) {
+                    if total > 0.0 {
+                        sparsity = format!("{:.3}", 1.0 - nz / total);
+                    }
+                }
+            }
+        }
+        println!(
+            "{:>4}  {:<10}  {:<20}  {:>5}/{:<6}  {:>8}  {:>9}  {:>8}  {}",
+            id,
+            job.req("state")?.as_str()?,
+            spec.req("name")?.as_str()?,
+            job.req("steps_done")?.as_usize()?,
+            spec.req("steps")?.as_usize()?,
+            rate,
+            loss,
+            sparsity,
+            alerts.join(","),
+        );
+    }
+    Ok(())
+}
+
+/// `jobs top`: the live-refresh job table, rendered over HTTP against a
+/// running server (no local queue directory needed).
+fn cmd_jobs_top(args: &Args) -> Result<()> {
+    let addr = loopback_addr(args)?;
+    let port = addr.port();
+    watch_loop(args.u64_or("watch", 0)?, move || {
+        let mut client = http::LoopbackClient::connect(addr).with_context(|| {
+            format!("is a server running on port {port}? (serve --port --jobs-dir)")
+        })?;
+        render_jobs_top(&mut client)
+    })
+}
+
 fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
     let action = args
         .positionals
         .get(1)
         .map(|s| s.as_str())
         .ok_or_else(|| {
-            anyhow::anyhow!("jobs needs an action: submit|submit-grid|list|show|cancel|resume|drain")
+            anyhow::anyhow!(
+                "jobs needs an action: submit|submit-grid|list|show|cancel|resume|drain|top"
+            )
         })?;
+    // `top` talks to a running server over HTTP; it neither needs nor
+    // should create a local queue directory
+    if action == "top" {
+        return cmd_jobs_top(args);
+    }
     let dir = PathBuf::from(args.str_or("jobs-dir", "jobs"));
     let queue = Arc::new(JobQueue::open(&dir)?);
     match action {
@@ -686,7 +801,7 @@ fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
             }
         }
         other => anyhow::bail!(
-            "unknown jobs action '{other}' (submit|submit-grid|list|show|cancel|resume|drain)"
+            "unknown jobs action '{other}' (submit|submit-grid|list|show|cancel|resume|drain|top)"
         ),
     }
     Ok(())
@@ -699,11 +814,14 @@ fn cmd_worker(args: &Args, artifacts: &PathBuf) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("worker needs --coordinator HOST:PORT"))?;
     let rt = Runtime::new(artifacts)?;
     let pool = WorkerPool::new(args.usize_or("threads", 1)?);
+    // --max-phase-a N: die after N PhaseA frames without replying — the
+    // deterministic mid-slice kill the CI stall-alert smoke relies on
+    let max_phase_a = args.usize_or("max-phase-a", 0)?;
     let opts = WorkerOpts {
         seed: args.u64_or("seed", 42)?,
         init_from: args.get("init-from").map(String::from),
         connect_timeout: std::time::Duration::from_secs(args.u64_or("connect-timeout", 30)?),
-        ..WorkerOpts::default()
+        max_phase_a: if max_phase_a > 0 { Some(max_phase_a) } else { None },
     };
     info!("worker: connecting to coordinator at {addr}");
     let stats = run_worker(&rt, &pool, &addr, &opts)?;

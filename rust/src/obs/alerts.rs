@@ -1,0 +1,317 @@
+//! Cheap per-job alert rules over flight-recorder telemetry.
+//!
+//! MeZO-style training is exactly the regime where silent pathologies
+//! burn thousands of forward passes before anyone notices: a loss that
+//! quietly diverges under too-aggressive a learning rate (the paper's
+//! Fig. 2a failure mode), a worker lease that dies before committing a
+//! step, a mask that stopped changing across `mask_refresh` epochs. The
+//! [`evaluate_slice`] entry point runs a fixed rule catalog at slice
+//! boundaries — O(1) per rule over a [`Snapshot`], no training-path
+//! cost — and maintains three surfaces at once:
+//!
+//! - `alerts_active{job,rule}` gauge (1 while firing, 0 after clearing)
+//!   plus `alerts_fired_total{rule}` / `alerts_cleared_total{rule}`
+//!   counters on `/metrics`;
+//! - `/healthz` degraded status (`alerts_active` count > 0);
+//! - job-state annotations (the scheduler copies active rule names into
+//!   the queue's job record, so `jobs show` and `GET /v1/jobs/{id}`
+//!   carry them).
+//!
+//! Rule catalog (documented in README "Flight recorder & alerts"):
+//!
+//! | rule              | fires when                                          |
+//! |-------------------|-----------------------------------------------------|
+//! | `loss-divergence` | fast loss EWMA > 2× slow EWMA (≥8 steps warmup), or |
+//! |                   | the trainer's divergence guard tripped              |
+//! | `stall`           | a slice ended with zero committed steps while the   |
+//! |                   | job is still runnable (e.g. its lease died first)   |
+//! | `worker-flap`     | ≥2 lost-worker events charged to the job            |
+//! | `mask-frozen`     | `mask_refresh` is on but the last two refresh       |
+//! |                   | epochs measured zero mask churn                     |
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+use super::recorder::Snapshot;
+
+/// Divergence guard threshold shared with the trainers: a mean loss at
+/// or past this is treated as diverged regardless of EWMA warmup.
+pub const DIVERGENCE_LOSS: f64 = 9.0;
+
+/// Fast-vs-slow loss EWMA ratio that trips `loss-divergence`.
+pub const DIVERGENCE_RATIO: f64 = 2.0;
+
+/// Steps of warmup before the EWMA ratio is trusted.
+pub const DIVERGENCE_WARMUP: u64 = 8;
+
+/// Lost-worker events that trip `worker-flap`.
+pub const FLAP_THRESHOLD: u64 = 2;
+
+/// Consecutive zero-churn refresh epochs that trip `mask-frozen`.
+pub const FROZEN_EPOCHS: usize = 2;
+
+/// One active alert.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Alert {
+    /// the job the alert is charged to
+    pub job: u64,
+    /// rule name (one of the catalog above)
+    pub rule: &'static str,
+    /// human-readable context captured when the rule fired
+    pub detail: String,
+}
+
+static ACTIVE: OnceLock<Mutex<BTreeMap<(u64, &'static str), Alert>>> = OnceLock::new();
+
+fn active_map() -> &'static Mutex<BTreeMap<(u64, &'static str), Alert>> {
+    ACTIVE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Raise `rule` for `job` (idempotent). Returns whether it newly fired.
+pub fn fire(job: u64, rule: &'static str, detail: String) -> bool {
+    let mut map = active_map().lock().unwrap();
+    if map.contains_key(&(job, rule)) {
+        return false;
+    }
+    map.insert((job, rule), Alert { job, rule, detail });
+    crate::obs::counter("alerts_fired_total", &[("rule", rule)]).inc();
+    crate::obs::gauge("alerts_active", &[("job", &job.to_string()), ("rule", rule)]).set(1);
+    crate::info!("[alerts] job {job}: {rule} fired");
+    true
+}
+
+/// Clear `rule` for `job` (idempotent). Returns whether it was active.
+pub fn clear(job: u64, rule: &'static str) -> bool {
+    let mut map = active_map().lock().unwrap();
+    if map.remove(&(job, rule)).is_none() {
+        return false;
+    }
+    crate::obs::counter("alerts_cleared_total", &[("rule", rule)]).inc();
+    crate::obs::gauge("alerts_active", &[("job", &job.to_string()), ("rule", rule)]).set(0);
+    crate::info!("[alerts] job {job}: {rule} cleared");
+    true
+}
+
+/// Clear every rule for `job` (terminal job states). Returns the rules
+/// that were still active.
+pub fn clear_job(job: u64) -> Vec<&'static str> {
+    let rules: Vec<&'static str> = active_map()
+        .lock()
+        .unwrap()
+        .keys()
+        .filter(|(j, _)| *j == job)
+        .map(|(_, r)| *r)
+        .collect();
+    for r in &rules {
+        clear(job, r);
+    }
+    rules
+}
+
+/// Every currently-active alert, ordered by (job, rule).
+pub fn active() -> Vec<Alert> {
+    active_map().lock().unwrap().values().cloned().collect()
+}
+
+/// Active alerts for one job.
+pub fn active_for(job: u64) -> Vec<Alert> {
+    active_map()
+        .lock()
+        .unwrap()
+        .values()
+        .filter(|a| a.job == job)
+        .cloned()
+        .collect()
+}
+
+/// Count of active alerts across all jobs (`/healthz` degraded signal).
+pub fn active_count() -> usize {
+    active_map().lock().unwrap().len()
+}
+
+/// Active alerts for `job` as a JSON array (`/v1/jobs/{id}/timeline`).
+pub fn alerts_json(job: u64) -> Json {
+    Json::Arr(
+        active_for(job)
+            .into_iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("rule", Json::Str(a.rule.to_string())),
+                    ("detail", Json::Str(a.detail)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// What one finished slice looked like, for rule evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct SliceObs {
+    /// the job the slice belonged to
+    pub job: u64,
+    /// steps committed by the slice
+    pub committed: u64,
+    /// whether the job still has steps left to run
+    pub runnable: bool,
+    /// whether the trainer's divergence guard tripped this slice
+    pub diverged: bool,
+    /// the job spec's `mask_refresh` (0 = thresholds fixed at init)
+    pub mask_refresh: usize,
+}
+
+/// Run the rule catalog against one slice's outcome plus the job's
+/// recorder snapshot. Fires/clears rules as side effects; returns the
+/// rule names active for the job afterwards (the scheduler copies these
+/// into the job record as annotations).
+pub fn evaluate_slice(obs: &SliceObs, snap: &Snapshot) -> Vec<&'static str> {
+    let job = obs.job;
+
+    // stall: the slice ended without committing anything while the job
+    // still wants steps — its lease died before phase B, or the slice
+    // never got scheduled work done. Deterministic (no clocks), so CI
+    // can force it with the `--max-phase-a` kill hook. The median step
+    // time rides along as context for the human reading the alert.
+    if obs.committed == 0 && obs.runnable {
+        fire(
+            job,
+            "stall",
+            format!(
+                "slice committed no steps (median step {:.4}s over {} steps seen)",
+                snap.median_step_seconds, snap.seen
+            ),
+        );
+    } else if obs.committed > 0 {
+        clear(job, "stall");
+    }
+
+    // loss-divergence: trainer guard, non-finite loss, or the fast EWMA
+    // running away from the slow one after warmup
+    let last_loss = snap.samples.last().map(|s| s.loss as f64);
+    let ratio_trip = snap.seen >= DIVERGENCE_WARMUP
+        && snap.loss_fast > DIVERGENCE_RATIO * snap.loss_slow.max(1e-12);
+    let loss_trip = last_loss.is_some_and(|l| !l.is_finite() || l >= DIVERGENCE_LOSS);
+    if obs.diverged || ratio_trip || loss_trip {
+        fire(
+            job,
+            "loss-divergence",
+            format!(
+                "loss fast-EWMA {:.4} vs slow {:.4} (last {:?}, guard {})",
+                snap.loss_fast, snap.loss_slow, last_loss, obs.diverged
+            ),
+        );
+    } else if snap.seen >= DIVERGENCE_WARMUP {
+        clear(job, "loss-divergence");
+    }
+
+    // worker-flap: repeated lost-worker events charged to this job
+    if snap.worker_lost >= FLAP_THRESHOLD {
+        fire(
+            job,
+            "worker-flap",
+            format!("{} lost-worker events", snap.worker_lost),
+        );
+    }
+
+    // mask-frozen: refreshes are on but the mask stopped moving
+    if obs.mask_refresh > 0 && snap.churn_history.len() >= FROZEN_EPOCHS {
+        let tail = &snap.churn_history[snap.churn_history.len() - FROZEN_EPOCHS..];
+        if tail.iter().all(|(_, c)| *c == 0.0) {
+            fire(
+                job,
+                "mask-frozen",
+                format!("zero churn across the last {FROZEN_EPOCHS} refresh epochs"),
+            );
+        } else {
+            clear(job, "mask-frozen");
+        }
+    }
+
+    let mut rules: Vec<&'static str> = active_for(job).iter().map(|a| a.rule).collect();
+    rules.sort_unstable();
+    rules
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::FlightRecorder;
+
+    /// Unique job ids per test: the alert map is process-global.
+    fn snap_of(rec: &FlightRecorder) -> Snapshot {
+        rec.snapshot()
+    }
+
+    #[test]
+    fn stall_fires_on_empty_slice_and_clears_on_progress() {
+        let job = 9_001;
+        let rec = FlightRecorder::new(4096);
+        let obs =
+            SliceObs { job, committed: 0, runnable: true, diverged: false, mask_refresh: 0 };
+        let rules = evaluate_slice(&obs, &snap_of(&rec));
+        assert!(rules.contains(&"stall"), "{rules:?}");
+        assert!(active_for(job).iter().any(|a| a.rule == "stall"));
+        let obs = SliceObs { committed: 3, ..obs };
+        let rules = evaluate_slice(&obs, &snap_of(&rec));
+        assert!(!rules.contains(&"stall"), "{rules:?}");
+        assert_eq!(active_for(job), vec![]);
+        // gauge survives as an explicit 0 (fired-then-cleared is visible)
+        assert_eq!(
+            crate::obs::gauge("alerts_active", &[("job", "9001"), ("rule", "stall")]).get(),
+            0
+        );
+    }
+
+    #[test]
+    fn divergence_fires_on_runaway_fast_ewma() {
+        let job = 9_002;
+        let rec = FlightRecorder::new(4096);
+        for step in 0..DIVERGENCE_WARMUP as u32 {
+            rec.record_step(step, 0.7, 0.1, None, 8, 0);
+        }
+        let obs =
+            SliceObs { job, committed: 8, runnable: true, diverged: false, mask_refresh: 0 };
+        assert!(evaluate_slice(&obs, &snap_of(&rec)).is_empty());
+        for step in 8..16 {
+            rec.record_step(step, 6.0, 0.1, None, 8, 0);
+        }
+        let rules = evaluate_slice(&obs, &snap_of(&rec));
+        assert!(rules.contains(&"loss-divergence"), "{rules:?}");
+        clear_job(job);
+    }
+
+    #[test]
+    fn flap_and_frozen_rules() {
+        let job = 9_003;
+        let rec = FlightRecorder::new(4096);
+        rec.note_worker_lost(1);
+        rec.note_worker_lost(1);
+        let m = vec![1u8, 0, 1, 0];
+        rec.record_step(0, 0.5, 0.1, Some(&m), 4, 0);
+        rec.record_step(1, 0.5, 0.1, Some(&m), 4, 1); // zero churn
+        rec.record_step(2, 0.5, 0.1, Some(&m), 4, 2); // zero churn
+        let obs =
+            SliceObs { job, committed: 3, runnable: true, diverged: false, mask_refresh: 1 };
+        let rules = evaluate_slice(&obs, &snap_of(&rec));
+        assert!(rules.contains(&"worker-flap"), "{rules:?}");
+        assert!(rules.contains(&"mask-frozen"), "{rules:?}");
+        assert_eq!(clear_job(job).len(), 2);
+        assert_eq!(active_count_for_test(job), 0);
+    }
+
+    fn active_count_for_test(job: u64) -> usize {
+        active_for(job).len()
+    }
+
+    #[test]
+    fn clear_job_is_idempotent_and_scoped() {
+        let job = 9_004;
+        fire(job, "stall", "test".into());
+        fire(job + 1, "stall", "test".into());
+        assert_eq!(clear_job(job), vec!["stall"]);
+        assert!(clear_job(job).is_empty());
+        assert_eq!(active_for(job + 1).len(), 1);
+        clear_job(job + 1);
+    }
+}

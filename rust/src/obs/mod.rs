@@ -17,8 +17,11 @@
 //!   registry, so run summaries computed from [`Span::end`]'s return
 //!   value and the registry's histogram can never disagree. Spans nest;
 //!   with [`trace_to`] enabled each finished span also appends one JSONL
-//!   trace record (`{"span","depth","t_s","dur_s"}`) to a per-run trace
-//!   stream.
+//!   trace record (`{"span","depth","t_s","dur_s"}`, plus `"trace"` when
+//!   a [`trace_scope`] context is active) to a per-run trace stream.
+//! - [`recorder`] / [`alerts`] — the per-job flight recorder (bounded
+//!   step-telemetry history) and the slice-boundary alert rules built
+//!   on top of this registry.
 //! - [`render_prometheus`] — the Prometheus text exposition of the
 //!   global registry, served by `GET /metrics` on the loopback server
 //!   ([`crate::serve::http`]); [`snapshot_json`] is the same data with
@@ -41,6 +44,9 @@ use anyhow::Result;
 
 use crate::util::json::Json;
 use crate::util::log::JsonlWriter;
+
+pub mod alerts;
+pub mod recorder;
 
 // ---------------------------------------------------------------------------
 // primitives
@@ -454,6 +460,16 @@ fn help_for(name: &str) -> &'static str {
         "serve_registry_bytes" => "Adapter bytes accounted against the registry budget.",
         "serve_registry_evictions_total" => "Adapters evicted by LRU pressure.",
         "serve_registry_pins_total" => "Admission pins taken on adapters.",
+        "alerts_active" => "Whether an alert rule is currently firing, by job and rule (1/0).",
+        "alerts_fired_total" => "Alert rule activations, by rule.",
+        "alerts_cleared_total" => "Alert rule clearances, by rule.",
+        "recorder_steps_total" => "Steps captured by per-job flight recorders.",
+        "recorder_jobs" => "Jobs with a resident flight recorder.",
+        "smezo_build_info" => "Build metadata as labels; value is always 1.",
+        "smezo_uptime_seconds" => "Seconds since this process initialized its registry.",
+        "train_last_loss_milli" => "Most recent training loss, in thousandths (serial trainer).",
+        "train_g_abs_ewma_micro" => "EWMA of |projected gradient|, in millionths (serial trainer).",
+        "train_mask_nonzero" => "Nonzero mask entries at the most recent step (serial trainer).",
         _ => "(no help registered)",
     }
 }
@@ -495,11 +511,69 @@ pub fn snapshot_json() -> Json {
 }
 
 // ---------------------------------------------------------------------------
+// build info + uptime
+// ---------------------------------------------------------------------------
+
+static PROCESS_START: OnceLock<Instant> = OnceLock::new();
+
+/// Refresh the `smezo_build_info{features,version}` and
+/// `smezo_uptime_seconds` gauges. Called on every scrape
+/// (`/metrics`, `/statsz`) so the series exist from the first scrape
+/// and uptime stays current. Build info is a constant-1 gauge whose
+/// labels carry the metadata — the standard Prometheus idiom.
+pub fn sync_build_info() {
+    let start = *PROCESS_START.get_or_init(Instant::now);
+    gauge(
+        "smezo_build_info",
+        &[
+            ("features", if cfg!(feature = "pjrt") { "pjrt" } else { "native" }),
+            ("version", env!("CARGO_PKG_VERSION")),
+        ],
+    )
+    .set(1);
+    gauge("smezo_uptime_seconds", &[]).set(start.elapsed().as_secs() as i64);
+}
+
+// ---------------------------------------------------------------------------
 // spans
 // ---------------------------------------------------------------------------
 
 thread_local! {
     static SPAN_DEPTH: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+    static TRACE_CTX: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// RAII guard restoring the thread's previous trace context on drop.
+/// See [`trace_scope`].
+pub struct TraceScope {
+    prev: u64,
+}
+
+/// Set the thread's trace context to `trace_id` until the guard drops.
+/// While a nonzero context is active, every span finished on this
+/// thread stamps its JSONL trace record with `"trace":"<16-hex>"` —
+/// the cross-process stitching key. The id is minted once per job at
+/// submission and rides the `Welcome`/`Step` frames to remote workers,
+/// so coordinator and worker trace files join on the same value.
+/// Zero means "no context" and stamps nothing.
+pub fn trace_scope(trace_id: u64) -> TraceScope {
+    let prev = TRACE_CTX.with(|c| {
+        let prev = c.get();
+        c.set(trace_id);
+        prev
+    });
+    TraceScope { prev }
+}
+
+/// The thread's current trace context (0 = none).
+pub fn current_trace() -> u64 {
+    TRACE_CTX.with(|c| c.get())
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        TRACE_CTX.with(|c| c.set(self.prev));
+    }
 }
 
 /// A scoped wall-clock timer. Created by [`span`]; records on drop or
@@ -597,12 +671,19 @@ fn trace_event(name: &str, depth: u32, dur_s: f64) {
     }
     if let Some(sink) = trace_cell().lock().unwrap().as_mut() {
         let t_s = sink.epoch.elapsed().as_secs_f64();
-        let rec = Json::obj(vec![
+        let mut fields = vec![
             ("span", Json::Str(name.to_string())),
             ("depth", Json::Num(depth as f64)),
             ("t_s", Json::Num(t_s)),
             ("dur_s", Json::Num(dur_s)),
-        ]);
+        ];
+        // stamp the active trace context so coordinator and worker
+        // streams stitch into one per-job timeline
+        let trace = current_trace();
+        if trace != 0 {
+            fields.push(("trace", Json::Str(format!("{trace:016x}"))));
+        }
+        let rec = Json::obj(fields);
         let _ = sink.writer.write(&rec);
         let _ = sink.writer.flush();
     }
@@ -769,8 +850,13 @@ mod tests {
         assert_eq!(h.count(), before + 2);
     }
 
+    /// The trace sink is process-global; tests that re-target it must
+    /// not run interleaved.
+    static TRACE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
     #[test]
     fn trace_stream_records_nested_spans() {
+        let _serial = TRACE_TEST_LOCK.lock().unwrap();
         let dir = std::env::temp_dir().join(format!("smz_obs_trace_{}", std::process::id()));
         let path = dir.join("trace.jsonl");
         trace_to(&path).unwrap();
@@ -796,6 +882,62 @@ mod tests {
         assert_eq!(rows[1].req("depth").unwrap().as_usize().unwrap(), 0);
         assert!(rows[1].req("dur_s").unwrap().as_f64().unwrap() >= 0.0);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_scope_stamps_and_restores() {
+        let _serial = TRACE_TEST_LOCK.lock().unwrap();
+        assert_eq!(current_trace(), 0);
+        let dir = std::env::temp_dir().join(format!("smz_obs_scope_{}", std::process::id()));
+        let path = dir.join("trace.jsonl");
+        trace_to(&path).unwrap();
+        {
+            let _outer = trace_scope(0xdead_beef);
+            assert_eq!(current_trace(), 0xdead_beef);
+            {
+                let _inner = trace_scope(0x1234);
+                assert_eq!(current_trace(), 0x1234);
+                let _sp = span("scope.stamped");
+            }
+            assert_eq!(current_trace(), 0xdead_beef);
+        }
+        assert_eq!(current_trace(), 0);
+        {
+            let _sp = span("scope.unstamped");
+        }
+        trace_off();
+        let rows = crate::util::log::read_jsonl(&path).unwrap();
+        let find = |name: &str| {
+            rows.iter()
+                .find(|r| {
+                    r.get("span").and_then(|s| s.as_str().ok()).is_some_and(|s| s == name)
+                })
+                .unwrap()
+                .clone()
+        };
+        let stamped = find("scope.stamped");
+        assert_eq!(
+            stamped.req("trace").unwrap().as_str().unwrap(),
+            "0000000000001234",
+            "span must carry the innermost active trace context"
+        );
+        assert!(find("scope.unstamped").get("trace").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn build_info_and_uptime_gauges_exist_after_sync() {
+        sync_build_info();
+        let text = render_prometheus();
+        assert!(
+            text.contains("smezo_build_info{features=") && text.contains("version="),
+            "{text}"
+        );
+        assert!(metric_line_exists(&text, "smezo_uptime_seconds"), "{text}");
+    }
+
+    fn metric_line_exists(text: &str, name: &str) -> bool {
+        text.lines().any(|l| l.starts_with(name) && !l.starts_with('#'))
     }
 
     #[test]

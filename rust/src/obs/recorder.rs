@@ -1,0 +1,519 @@
+//! Per-job flight recorder: bounded, byte-budgeted ZO training telemetry.
+//!
+//! The paper's claims are about *training dynamics* — convergence speed
+//! (§4, 3.5× over dense MeZO on RTE), the instability of dense ZO at
+//! high learning rate (Fig. 2a), the effect of masking small-magnitude
+//! weights — so the operational layer must be able to answer "what has
+//! this job's loss/`g`/sparsity curve looked like" live, without
+//! re-reading journals. A [`FlightRecorder`] captures, per committed
+//! step, exactly the scalars the trainer already computes for free:
+//! loss, the projected-gradient scalar `g`, a running |g| EWMA, the
+//! nonzero-mask count (effective sparsity), the mask epoch, and the mask
+//! churn measured at each `mask_refresh` boundary — plus per-rank worker
+//! attribution and slice/replay timings from the scheduler.
+//!
+//! **Memory contract**: the step history is byte-budgeted. When the
+//! decimated buffer would exceed the budget, the power-of-two `stride`
+//! doubles and older samples thin out (`step % stride == 0` survives,
+//! plus the first step, always), so a 100k-step job costs the same
+//! resident bytes as a 100-step one. The most recent step is tracked
+//! separately and is always exact. `rust/tests/properties.rs` holds the
+//! budget/decimation invariants under adversarial step counts.
+//!
+//! **The PR 7 invariant carries over**: recording consumes no PRNG
+//! state and never writes into step journals — it is [`Instant`],
+//! atomics and a mutex over plain memory. An instrumented run stays
+//! bit-identical to an uninstrumented one (`rust/tests/obs.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Resident bytes one [`Sample`] is accounted as (its in-memory size).
+pub const SAMPLE_BYTES: usize = std::mem::size_of::<Sample>();
+
+/// Default per-job step-history budget. At ~40 bytes per sample this
+/// holds ~1600 exact steps before the first decimation.
+pub const DEFAULT_BUDGET_BYTES: usize = 64 * 1024;
+
+/// Recent slice/replay timings kept (operational context, not history).
+const TIMINGS_CAP: usize = 32;
+
+/// Recent inter-step wall-clock intervals kept for the median step time.
+const INTERVALS_CAP: usize = 64;
+
+/// Mask-churn measurements kept, one per `mask_refresh` boundary.
+const CHURN_CAP: usize = 64;
+
+/// One committed optimizer step's telemetry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// optimizer step index
+    pub step: u32,
+    /// training loss at this step (mean over the batch)
+    pub loss: f32,
+    /// projected-gradient scalar `g = (l+ - l-) / 2eps`
+    pub g: f32,
+    /// running EWMA of |g| (decay 0.9), seeded at the first step
+    pub g_abs_ewma: f32,
+    /// nonzero entries of the step's mask (`total` when dense)
+    pub nonzero: u64,
+    /// total trainable parameters
+    pub total: u64,
+    /// §8.2 threshold generation the step ran under
+    pub mask_epoch: u32,
+    /// mask churn measured at this sample's epoch boundary (fraction of
+    /// coordinates whose mask bit flipped; 0 within epoch 0)
+    pub churn: f32,
+}
+
+impl Sample {
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::Num(self.step as f64)),
+            ("loss", Json::Num(self.loss as f64)),
+            ("g", Json::Num(self.g as f64)),
+            ("g_abs_ewma", Json::Num(self.g_abs_ewma as f64)),
+            ("nonzero", Json::Num(self.nonzero as f64)),
+            ("total", Json::Num(self.total as f64)),
+            ("mask_epoch", Json::Num(self.mask_epoch as f64)),
+            ("churn", Json::Num(self.churn as f64)),
+        ])
+    }
+}
+
+struct Inner {
+    budget: usize,
+    /// decimation stride (power of two; 1 = every step retained)
+    stride: u64,
+    /// decimated history; `samples[0]` is the first step ever recorded
+    samples: Vec<Sample>,
+    /// the most recent step, always exact (outside the decimated buffer)
+    latest: Option<Sample>,
+    /// total steps ever recorded (survives decimation)
+    seen: u64,
+    g_abs_ewma: f64,
+    /// fast/slow loss EWMAs feeding the loss-divergence alert rule
+    loss_fast: f64,
+    loss_slow: f64,
+    /// the mask captured at the current epoch's first recorded step,
+    /// compared against at the next epoch boundary to measure churn
+    epoch_mask: Option<(u32, Option<Vec<u8>>)>,
+    last_churn: f32,
+    churn_history: Vec<(u32, f32)>,
+    /// rank -> live steps attributed (rank 0 is the coordinator)
+    workers: BTreeMap<u32, u64>,
+    worker_lost: u64,
+    slices: u64,
+    slice_seconds: Vec<f64>,
+    replay_seconds: Vec<f64>,
+    step_intervals: Vec<f64>,
+    last_step_at: Option<Instant>,
+}
+
+/// Point-in-time copy of a recorder's state (alert evaluation, tests).
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// current decimation stride (power of two)
+    pub stride: u64,
+    /// the byte budget the history is held under
+    pub budget_bytes: usize,
+    /// decimated history with the exact latest step appended
+    pub samples: Vec<Sample>,
+    /// total steps ever recorded
+    pub seen: u64,
+    /// running EWMA of |g|
+    pub g_abs_ewma: f64,
+    /// fast loss EWMA (decay 0.5)
+    pub loss_fast: f64,
+    /// slow loss EWMA (decay 0.98)
+    pub loss_slow: f64,
+    /// `(epoch, churn)` per mask-refresh boundary, oldest first
+    pub churn_history: Vec<(u32, f32)>,
+    /// rank -> live steps attributed
+    pub workers: BTreeMap<u32, u64>,
+    /// lost-worker events charged to this job
+    pub worker_lost: u64,
+    /// slices run
+    pub slices: u64,
+    /// recent slice wall-clock seconds
+    pub slice_seconds: Vec<f64>,
+    /// recent journal-replay wall-clock seconds
+    pub replay_seconds: Vec<f64>,
+    /// median of recent inter-step intervals (0 with <2 steps)
+    pub median_step_seconds: f64,
+    /// seconds since the last recorded step, if any
+    pub last_step_age_seconds: Option<f64>,
+}
+
+impl Snapshot {
+    /// Resident bytes of the returned step history.
+    pub fn history_bytes(&self) -> usize {
+        self.samples.len() * SAMPLE_BYTES
+    }
+}
+
+/// Per-job telemetry sink. Shared `Arc`-style between the scheduler,
+/// the DP trainer and the HTTP timeline endpoint; every method takes
+/// `&self` behind one mutex (cold path — once per committed step).
+pub struct FlightRecorder {
+    inner: Mutex<Inner>,
+}
+
+/// Mask churn between two epoch-boundary masks: the fraction of
+/// coordinates whose mask bit differs. `None` means dense (all ones).
+fn mask_churn(prev: &Option<Vec<u8>>, next: Option<&[u8]>) -> f32 {
+    match (prev.as_deref(), next) {
+        (None, None) => 0.0,
+        (Some(m), None) | (None, Some(m)) => {
+            if m.is_empty() {
+                return 0.0;
+            }
+            let zeros = m.iter().filter(|&&b| b == 0).count();
+            zeros as f32 / m.len() as f32
+        }
+        (Some(a), Some(b)) => {
+            let n = a.len().min(b.len());
+            if n == 0 {
+                return 0.0;
+            }
+            let diff = a.iter().zip(b).filter(|(x, y)| x != y).count();
+            diff as f32 / n as f32
+        }
+    }
+}
+
+fn push_capped<T>(v: &mut Vec<T>, x: T, cap: usize) {
+    if v.len() >= cap {
+        v.remove(0);
+    }
+    v.push(x);
+}
+
+impl FlightRecorder {
+    /// A recorder holding its step history under `budget_bytes`
+    /// (clamped to at least a handful of samples so decimation always
+    /// terminates).
+    pub fn new(budget_bytes: usize) -> FlightRecorder {
+        FlightRecorder {
+            inner: Mutex::new(Inner {
+                budget: budget_bytes.max(8 * SAMPLE_BYTES),
+                stride: 1,
+                samples: Vec::new(),
+                latest: None,
+                seen: 0,
+                g_abs_ewma: 0.0,
+                loss_fast: 0.0,
+                loss_slow: 0.0,
+                epoch_mask: None,
+                last_churn: 0.0,
+                churn_history: Vec::new(),
+                workers: BTreeMap::new(),
+                worker_lost: 0,
+                slices: 0,
+                slice_seconds: Vec::new(),
+                replay_seconds: Vec::new(),
+                step_intervals: Vec::new(),
+                last_step_at: None,
+            }),
+        }
+    }
+
+    /// Record one committed step. `mask` is the step's sparse mask
+    /// (`None` = dense); churn is measured lazily at `mask_epoch`
+    /// boundaries against the previous epoch's stored mask.
+    pub fn record_step(
+        &self,
+        step: u32,
+        loss: f32,
+        g: f32,
+        mask: Option<&[u8]>,
+        total: u64,
+        mask_epoch: u32,
+    ) {
+        let mut guard = self.inner.lock().unwrap();
+        let i = &mut *guard;
+        // mask churn at epoch boundaries only (one copy per epoch)
+        match i.epoch_mask.take() {
+            None => i.epoch_mask = Some((mask_epoch, mask.map(|m| m.to_vec()))),
+            Some((e, prev)) if e != mask_epoch => {
+                let churn = mask_churn(&prev, mask);
+                i.last_churn = churn;
+                push_capped(&mut i.churn_history, (mask_epoch, churn), CHURN_CAP);
+                i.epoch_mask = Some((mask_epoch, mask.map(|m| m.to_vec())));
+            }
+            kept => i.epoch_mask = kept,
+        }
+        let g_abs = (g as f64).abs();
+        i.g_abs_ewma =
+            if i.seen == 0 { g_abs } else { 0.9 * i.g_abs_ewma + 0.1 * g_abs };
+        let l = loss as f64;
+        if i.seen == 0 {
+            i.loss_fast = l;
+            i.loss_slow = l;
+        } else {
+            i.loss_fast = 0.5 * i.loss_fast + 0.5 * l;
+            i.loss_slow = 0.98 * i.loss_slow + 0.02 * l;
+        }
+        let now = Instant::now();
+        if let Some(prev) = i.last_step_at {
+            push_capped(
+                &mut i.step_intervals,
+                now.duration_since(prev).as_secs_f64(),
+                INTERVALS_CAP,
+            );
+        }
+        i.last_step_at = Some(now);
+        let nonzero = mask.map(|m| m.iter().map(|&b| b as u64).sum()).unwrap_or(total);
+        let sample = Sample {
+            step,
+            loss,
+            g,
+            g_abs_ewma: i.g_abs_ewma as f32,
+            nonzero,
+            total,
+            mask_epoch,
+            churn: i.last_churn,
+        };
+        i.latest = Some(sample);
+        i.seen += 1;
+        if i.samples.is_empty() || step as u64 % i.stride == 0 {
+            i.samples.push(sample);
+        }
+        // enforce the byte budget (+1 accounts for `latest`, which the
+        // snapshot appends): double the stride, thin the history, repeat
+        while (i.samples.len() + 1) * SAMPLE_BYTES > i.budget {
+            i.stride = i.stride.saturating_mul(2);
+            let stride = i.stride;
+            let mut first = true;
+            i.samples.retain(|s| std::mem::take(&mut first) || s.step as u64 % stride == 0);
+            if i.stride == u64::MAX {
+                break;
+            }
+        }
+        crate::obs::counter("recorder_steps_total", &[]).inc();
+    }
+
+    /// Attribute one finished slice: wall-clock seconds, committed step
+    /// count, and the remote shard ranks that participated (rank 0, the
+    /// coordinator, is always credited).
+    pub fn note_slice(&self, seconds: f64, committed: u64, remote_ranks: &[u32]) {
+        let mut i = self.inner.lock().unwrap();
+        i.slices += 1;
+        push_capped(&mut i.slice_seconds, seconds, TIMINGS_CAP);
+        *i.workers.entry(0).or_insert(0) += committed;
+        for &r in remote_ranks {
+            *i.workers.entry(r).or_insert(0) += committed;
+        }
+    }
+
+    /// Attribute a journal-replay pass (resume / publish verification).
+    pub fn note_replay(&self, seconds: f64) {
+        let mut i = self.inner.lock().unwrap();
+        push_capped(&mut i.replay_seconds, seconds, TIMINGS_CAP);
+    }
+
+    /// Charge one lost-worker event (rank attribution via `workers`).
+    pub fn note_worker_lost(&self, rank: u32) {
+        let mut i = self.inner.lock().unwrap();
+        i.worker_lost += 1;
+        i.workers.entry(rank).or_insert(0);
+    }
+
+    /// Point-in-time copy (history + the exact latest step appended).
+    pub fn snapshot(&self) -> Snapshot {
+        let i = self.inner.lock().unwrap();
+        let mut samples = i.samples.clone();
+        if let Some(last) = i.latest {
+            if samples.last().map(|s| s.step) != Some(last.step) {
+                samples.push(last);
+            }
+        }
+        let median = if i.step_intervals.len() < 2 {
+            0.0
+        } else {
+            let mut xs = i.step_intervals.clone();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            xs[xs.len() / 2]
+        };
+        Snapshot {
+            stride: i.stride,
+            budget_bytes: i.budget,
+            samples,
+            seen: i.seen,
+            g_abs_ewma: i.g_abs_ewma,
+            loss_fast: i.loss_fast,
+            loss_slow: i.loss_slow,
+            churn_history: i.churn_history.clone(),
+            workers: i.workers.clone(),
+            worker_lost: i.worker_lost,
+            slices: i.slices,
+            slice_seconds: i.slice_seconds.clone(),
+            replay_seconds: i.replay_seconds.clone(),
+            median_step_seconds: median,
+            last_step_age_seconds: i.last_step_at.map(|t| t.elapsed().as_secs_f64()),
+        }
+    }
+
+    /// The `GET /v1/jobs/{id}/timeline` body (minus job metadata and
+    /// alerts, which the HTTP layer composes in): parallel JSON series
+    /// plus attribution and timing context. Series values round-trip
+    /// bit-exactly (f32 → f64 → shortest-round-trip decimal).
+    pub fn timeline_json(&self) -> Json {
+        let snap = self.snapshot();
+        let nums = |f: &dyn Fn(&Sample) -> f64| {
+            Json::Arr(snap.samples.iter().map(|s| Json::Num(f(s))).collect())
+        };
+        let series = Json::obj(vec![
+            ("step", nums(&|s| s.step as f64)),
+            ("loss", nums(&|s| s.loss as f64)),
+            ("g", nums(&|s| s.g as f64)),
+            ("g_abs_ewma", nums(&|s| s.g_abs_ewma as f64)),
+            ("nonzero", nums(&|s| s.nonzero as f64)),
+            ("sparsity", nums(&|s| {
+                if s.total == 0 {
+                    0.0
+                } else {
+                    1.0 - s.nonzero as f64 / s.total as f64
+                }
+            })),
+            ("mask_epoch", nums(&|s| s.mask_epoch as f64)),
+            ("churn", nums(&|s| s.churn as f64)),
+        ]);
+        let workers = Json::Obj(
+            snap.workers
+                .iter()
+                .map(|(r, n)| (r.to_string(), Json::Num(*n as f64)))
+                .collect(),
+        );
+        let churn = Json::Arr(
+            snap.churn_history
+                .iter()
+                .map(|(e, c)| {
+                    Json::Arr(vec![Json::Num(*e as f64), Json::Num(*c as f64)])
+                })
+                .collect(),
+        );
+        let timings = Json::obj(vec![
+            (
+                "slice_seconds",
+                Json::Arr(snap.slice_seconds.iter().map(|&s| Json::Num(s)).collect()),
+            ),
+            (
+                "replay_seconds",
+                Json::Arr(snap.replay_seconds.iter().map(|&s| Json::Num(s)).collect()),
+            ),
+            ("median_step_seconds", Json::Num(snap.median_step_seconds)),
+        ]);
+        Json::obj(vec![
+            ("stride", Json::Num(snap.stride as f64)),
+            ("budget_bytes", Json::Num(snap.budget_bytes as f64)),
+            ("samples", Json::Num(snap.samples.len() as f64)),
+            ("seen", Json::Num(snap.seen as f64)),
+            ("series", series),
+            (
+                "latest",
+                snap.samples.last().map(|s| s.json()).unwrap_or(Json::Null),
+            ),
+            ("workers", workers),
+            ("worker_lost", Json::Num(snap.worker_lost as f64)),
+            ("slices", Json::Num(snap.slices as f64)),
+            ("churn_by_epoch", churn),
+            ("timings", timings),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-wide recorder registry (job id -> recorder)
+// ---------------------------------------------------------------------------
+
+static RECORDERS: OnceLock<Mutex<BTreeMap<u64, Arc<FlightRecorder>>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<BTreeMap<u64, Arc<FlightRecorder>>> {
+    RECORDERS.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// The recorder for `job`, created (with [`DEFAULT_BUDGET_BYTES`]) on
+/// first use. Each job's history is byte-budgeted, so the map's resident
+/// cost is bounded by the queue's job count.
+pub fn for_job(job: u64) -> Arc<FlightRecorder> {
+    let mut map = registry().lock().unwrap();
+    let rec = map
+        .entry(job)
+        .or_insert_with(|| Arc::new(FlightRecorder::new(DEFAULT_BUDGET_BYTES)));
+    crate::obs::gauge("recorder_jobs", &[]).set(map.len() as i64);
+    rec.clone()
+}
+
+/// The recorder for `job`, if any step of it has been observed.
+pub fn get(job: u64) -> Option<Arc<FlightRecorder>> {
+    registry().lock().unwrap().get(&job).cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decimation_keeps_first_and_last_exact() {
+        let r = FlightRecorder::new(16 * SAMPLE_BYTES);
+        for step in 0..10_000u32 {
+            r.record_step(step, 1.0, 0.5, None, 100, 0);
+        }
+        let snap = r.snapshot();
+        assert!(snap.history_bytes() <= snap.budget_bytes, "over budget");
+        assert_eq!(snap.samples.first().unwrap().step, 0, "first step lost");
+        assert_eq!(snap.samples.last().unwrap().step, 9_999, "last step lost");
+        assert!(snap.stride.is_power_of_two());
+        assert!(snap.stride > 1, "10k steps in 16 slots must decimate");
+        for s in &snap.samples[1..snap.samples.len() - 1] {
+            assert_eq!(s.step as u64 % snap.stride, 0, "non-grid sample survived");
+        }
+        assert_eq!(snap.seen, 10_000);
+    }
+
+    #[test]
+    fn churn_measured_at_epoch_boundaries() {
+        let r = FlightRecorder::new(DEFAULT_BUDGET_BYTES);
+        let m0 = vec![1u8, 1, 0, 0];
+        let m1 = vec![1u8, 0, 1, 0]; // 2 of 4 flipped
+        r.record_step(0, 1.0, 0.1, Some(&m0), 4, 0);
+        r.record_step(1, 1.0, 0.1, Some(&m0), 4, 0);
+        r.record_step(2, 1.0, 0.1, Some(&m1), 4, 1);
+        let snap = r.snapshot();
+        assert_eq!(snap.churn_history, vec![(1, 0.5)]);
+        assert_eq!(snap.samples[2].churn, 0.5);
+        assert_eq!(snap.samples[0].churn, 0.0);
+        assert_eq!(snap.samples[1].nonzero, 2);
+    }
+
+    #[test]
+    fn attribution_and_timings_accumulate() {
+        let r = FlightRecorder::new(DEFAULT_BUDGET_BYTES);
+        r.note_slice(0.25, 3, &[1]);
+        r.note_slice(0.50, 2, &[]);
+        r.note_worker_lost(1);
+        r.note_replay(0.125);
+        let snap = r.snapshot();
+        assert_eq!(snap.slices, 2);
+        assert_eq!(snap.workers.get(&0), Some(&5));
+        assert_eq!(snap.workers.get(&1), Some(&3));
+        assert_eq!(snap.worker_lost, 1);
+        assert_eq!(snap.slice_seconds, vec![0.25, 0.50]);
+        assert_eq!(snap.replay_seconds, vec![0.125]);
+    }
+
+    #[test]
+    fn timeline_json_series_round_trip_bits() {
+        let r = FlightRecorder::new(DEFAULT_BUDGET_BYTES);
+        let g = f32::from_bits(0x3f9d_70a4); // an awkward mantissa
+        r.record_step(0, 0.6931472, g, None, 10, 0);
+        let doc = r.timeline_json();
+        let got = doc.req("series").unwrap().req("g").unwrap();
+        let Json::Arr(items) = got else { panic!("g series not an array") };
+        assert_eq!((items[0].as_f64().unwrap() as f32).to_bits(), g.to_bits());
+    }
+}

@@ -38,7 +38,7 @@
 //! mask lives in slots *and* feeds back into perturbation support).
 
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -48,6 +48,7 @@ use crate::coordinator::evaluator::EvalResult;
 use crate::coordinator::trainer::{self, CurvePoint, TrainResult, DIVERGENCE_LOSS};
 use crate::data::batcher::TrainLoader;
 use crate::data::{tasks, Dataset};
+use crate::obs::recorder::FlightRecorder;
 use crate::runtime::exec::{Hypers, LogitsExec};
 use crate::runtime::{ModelInfo, Runtime};
 use crate::util::json::Json;
@@ -275,6 +276,10 @@ pub struct DpTrainer<'rt> {
     /// with the canonical loss fold unchanged (bit-identity preserved).
     /// `None` (the default) keeps every shard local.
     pub remote: Option<RemoteHandle>,
+    /// stream per-step telemetry (loss, `g`, mask stats) into this
+    /// flight recorder. Read-only taps on values the step already
+    /// computes — consumes no PRNG state, never touches the journal.
+    pub recorder: Option<Arc<FlightRecorder>>,
 }
 
 impl<'rt> DpTrainer<'rt> {
@@ -290,6 +295,7 @@ impl<'rt> DpTrainer<'rt> {
             initial_override: None,
             mask_refresh: 0,
             remote: None,
+            recorder: None,
         }
     }
 
@@ -471,6 +477,9 @@ impl<'rt> DpTrainer<'rt> {
             }
             if let Some(w) = &mut journal {
                 w.record(&StepRecord { step: t as u32, seed, scalar: g, mask_epoch })?;
+            }
+            if let Some(rec) = &self.recorder {
+                rec.record_step(t as u32, train_loss, g, mask.as_deref(), p as u64, mask_epoch);
             }
 
             // phase B: identical masked update on every replica — the
@@ -762,6 +771,7 @@ impl<'rt> DpTrainer<'rt> {
                         handle.data_seed,
                         &train_fingerprint(&dataset.train),
                         &records,
+                        handle.trace_id,
                     );
                     if !remotes.is_empty() {
                         crate::info!(
@@ -786,6 +796,11 @@ impl<'rt> DpTrainer<'rt> {
         // local ranks stay the contiguous prefix 0..n_local and the
         // canonical rank-order fold below is a simple concatenation
         let n_local = n - remotes.len();
+        let trace = self.remote.as_ref().map_or(0, |h| h.trace_id);
+        // attribution data for the flight recorder (captured before any
+        // error path drains the sessions)
+        let slice_t0 = Instant::now();
+        let remote_ranks: Vec<u32> = remotes.iter().map(|rw| rw.rank).collect();
 
         let mut steps_run = 0usize;
         let mut diverged = false;
@@ -969,13 +984,23 @@ impl<'rt> DpTrainer<'rt> {
             steps_run += 1;
             last_loss = train_loss;
             crate::obs::counter("train_steps_total", &[]).inc();
+            if let Some(recorder) = &self.recorder {
+                recorder.record_step(
+                    t as u32,
+                    train_loss,
+                    g,
+                    mask.as_deref(),
+                    p as u64,
+                    state.mask_epoch,
+                );
+            }
 
             // broadcast the committed record; remote replicas apply the
             // identical update from it. A send failure after the local
             // commit is fine: journal and state agree at t+1, and the
             // requeued slice resumes from the journal.
             for rw in remotes.iter_mut() {
-                if let Err(e) = rw.send(&Frame::Step(rec)) {
+                if let Err(e) = rw.send(&Frame::Step(rec, trace)) {
                     hard_err = Some(e);
                     break 'steps;
                 }
@@ -1025,6 +1050,10 @@ impl<'rt> DpTrainer<'rt> {
                     Err(e) => return Err(e),
                 }
             }
+        }
+
+        if let Some(recorder) = &self.recorder {
+            recorder.note_slice(slice_t0.elapsed().as_secs_f64(), steps_run as u64, &remote_ranks);
         }
 
         Ok(SliceReport {

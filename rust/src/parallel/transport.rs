@@ -52,7 +52,12 @@ use super::protocol::{self, params_fingerprint, StepRecord};
 
 /// Wire protocol version; bumped on any frame-layout change (the
 /// golden fixture in `tests/golden.rs` makes a silent change impossible).
-pub const PROTOCOL_VERSION: u32 = 1;
+///
+/// v2 appended a trailing `trace` u64 to `Welcome` and `Step` frames.
+/// The field is version-gated at decode: a body that ends where v1
+/// ended still parses (trace = 0), so pre-v2 fixture bytes stay
+/// decode-clean (`tests/golden.rs::pre_v2_fixture_bytes_still_decode`).
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Hard cap on one frame's body. The largest legitimate frame is a
 /// `Losses` pair for a full batch (a few KiB) or a `Config` header line;
@@ -181,6 +186,11 @@ pub enum Frame {
         workers: u32,
         /// catch-up step records that follow immediately
         resume: u32,
+        /// the job's trace id (0 = none): the worker adopts it as its
+        /// [`crate::obs::trace_scope`] so both processes' `SMEZO_TRACE`
+        /// streams stitch on one value. Version-gated (absent on v1
+        /// bytes, decoded as 0).
+        trace: u64,
     },
     /// Threshold refresh (coordinator → worker): recompute §8.2
     /// magnitude thresholds from the current (unperturbed) params.
@@ -210,8 +220,11 @@ pub enum Frame {
         minus: Vec<f64>,
     },
     /// A committed step record: catch-up replay during the handshake,
-    /// phase-B commit during the live loop.
-    Step(StepRecord),
+    /// phase-B commit during the live loop. The second field is the
+    /// job's trace id (0 = none), version-gated like
+    /// [`Frame::Welcome`]'s — the [`StepRecord`] itself is untouched,
+    /// so journal bytes stay byte-identical to pre-v2 runs.
+    Step(StepRecord, u64),
     /// Session end (coordinator → worker) with the final parameter
     /// fingerprint — the cross-machine drift check.
     Finish {
@@ -279,11 +292,12 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             put_str(&mut body, init_fnv);
             put_str(&mut body, ds_fnv);
         }
-        Frame::Welcome { rank, workers, resume } => {
+        Frame::Welcome { rank, workers, resume, trace } => {
             body.push(TAG_WELCOME);
             put_u32(&mut body, *rank);
             put_u32(&mut body, *workers);
             put_u32(&mut body, *resume);
+            put_u64(&mut body, *trace);
         }
         Frame::Refresh { mask_epoch } => {
             body.push(TAG_REFRESH);
@@ -302,13 +316,14 @@ pub fn encode_frame(frame: &Frame) -> Vec<u8> {
             put_f64s(&mut body, plus);
             put_f64s(&mut body, minus);
         }
-        Frame::Step(rec) => {
+        Frame::Step(rec, trace) => {
             body.push(TAG_STEP);
             put_u32(&mut body, rec.step);
             put_u32(&mut body, rec.seed.0);
             put_u32(&mut body, rec.seed.1);
             put_u32(&mut body, rec.scalar.to_bits());
             put_u32(&mut body, rec.mask_epoch);
+            put_u64(&mut body, *trace);
         }
         Frame::Finish { steps, final_fnv } => {
             body.push(TAG_FINISH);
@@ -377,6 +392,12 @@ impl<'a> BodyReader<'a> {
         Ok(out)
     }
 
+    /// Bytes left in the body — the version gate for trailing fields
+    /// appended after v1 (present: read them; absent: default).
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     fn finish(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!("frame has {} trailing bytes", self.buf.len() - self.pos);
@@ -425,6 +446,9 @@ pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
             rank: r.take_u32()?,
             workers: r.take_u32()?,
             resume: r.take_u32()?,
+            // v2 field: absent on v1 bytes (a body ending here), so old
+            // frames keep decoding — 1..7 trailing bytes still error
+            trace: if r.remaining() > 0 { r.take_u64()? } else { 0 },
         },
         TAG_REFRESH => Frame::Refresh { mask_epoch: r.take_u32()? },
         TAG_PHASE_A => Frame::PhaseA {
@@ -437,12 +461,17 @@ pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
             plus: r.take_f64s()?,
             minus: r.take_f64s()?,
         },
-        TAG_STEP => Frame::Step(StepRecord {
-            step: r.take_u32()?,
-            seed: (r.take_u32()?, r.take_u32()?),
-            scalar: f32::from_bits(r.take_u32()?),
-            mask_epoch: r.take_u32()?,
-        }),
+        TAG_STEP => {
+            let rec = StepRecord {
+                step: r.take_u32()?,
+                seed: (r.take_u32()?, r.take_u32()?),
+                scalar: f32::from_bits(r.take_u32()?),
+                mask_epoch: r.take_u32()?,
+            };
+            // v2 trace id, version-gated exactly like Welcome's
+            let trace = if r.remaining() > 0 { r.take_u64()? } else { 0 };
+            Frame::Step(rec, trace)
+        }
         TAG_FINISH => Frame::Finish { steps: r.take_u32()?, final_fnv: r.take_str()? },
         TAG_FINISH_ACK => Frame::FinishAck { final_fnv: r.take_str()? },
         TAG_ABORT => Frame::Abort { reason: r.take_str()? },
@@ -621,6 +650,7 @@ impl WorkerHub {
     /// (died while parked, version or fingerprint mismatch) is logged
     /// and dropped, never fatal — the slice proceeds with fewer (or
     /// zero) remotes and stays bit-identical either way.
+    #[allow(clippy::too_many_arguments)]
     pub fn lease(
         self: &Arc<Self>,
         want: usize,
@@ -629,6 +659,7 @@ impl WorkerHub {
         data_seed: u64,
         ds_fnv: &str,
         records: &[StepRecord],
+        trace: u64,
     ) -> Vec<RemoteWorker> {
         let header_line = header.to_string();
         let want_fnv = header.get("init_fnv").and_then(|v| v.as_str().ok()).unwrap_or("");
@@ -641,6 +672,7 @@ impl WorkerHub {
             let rank = workers - 1 - sessions.len();
             match handshake(
                 &mut conn, &header_line, want_fnv, data_seed, ds_fnv, rank, workers, records,
+                trace,
             ) {
                 Ok(()) => {
                     self.inner.leased.fetch_add(1, Ordering::AcqRel);
@@ -693,6 +725,7 @@ fn handshake(
     rank: usize,
     workers: usize,
     records: &[StepRecord],
+    trace: u64,
 ) -> Result<()> {
     conn.send(&Frame::Config {
         version: PROTOCOL_VERSION,
@@ -725,9 +758,10 @@ fn handshake(
         rank: rank as u32,
         workers: workers as u32,
         resume: records.len() as u32,
+        trace,
     })?;
     for rec in records {
-        conn.send(&Frame::Step(*rec))?;
+        conn.send(&Frame::Step(*rec, trace))?;
     }
     Ok(())
 }
@@ -839,6 +873,10 @@ pub struct RemoteHandle {
     /// match the dataset the coordinator trains on (the end-of-slice
     /// fingerprint check catches a mismatch, but loudly and late)
     pub data_seed: u64,
+    /// the job's trace id (0 = none), threaded into `Welcome` and
+    /// `Step` frames so the worker's trace stream stitches with the
+    /// coordinator's
+    pub trace_id: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -1068,9 +1106,9 @@ fn run_session(
         ds_fnv: train_fingerprint(&dataset.train),
     })?;
 
-    let (rank, workers, resume) = match conn.recv()? {
-        Frame::Welcome { rank, workers, resume } => {
-            (rank as usize, workers as usize, resume as usize)
+    let (rank, workers, resume, trace) = match conn.recv()? {
+        Frame::Welcome { rank, workers, resume, trace } => {
+            (rank as usize, workers as usize, resume as usize, trace)
         }
         Frame::Abort { reason } => {
             return Err(fatal(format!("coordinator rejected hello: {reason}")))
@@ -1080,6 +1118,12 @@ fn run_session(
     if workers == 0 || rank >= workers || model.batch % workers != 0 {
         abort!("bad shard assignment rank {rank} of {workers} (batch {})", model.batch);
     }
+    // adopt the coordinator's trace context for the whole session: every
+    // span this thread finishes (including worker.session below) lands
+    // in the worker's SMEZO_TRACE stream stamped with the same trace id
+    // the coordinator's slice spans carry — the cross-process join key
+    let _trace_scope = crate::obs::trace_scope(trace);
+    let _session_span = crate::obs::span("worker.session");
 
     // replica state, rebuilt fresh every session
     let p = model.n_params;
@@ -1115,7 +1159,7 @@ fn run_session(
     let mut z = Vec::with_capacity(p);
     for _ in 0..resume {
         match conn.recv()? {
-            Frame::Step(rec) => {
+            Frame::Step(rec, _) => {
                 if rec.mask_epoch != mask_epoch {
                     thresholds = backend.thresholds(&model, &params, cfg.hypers.sparsity)?;
                     mask_epoch = rec.mask_epoch;
@@ -1189,7 +1233,7 @@ fn run_session(
                 conn.send(&Frame::Losses { step, plus, minus })?;
                 pending = Some((step, std::mem::take(&mut z), mask));
             }
-            Frame::Step(rec) => {
+            Frame::Step(rec, _) => {
                 let Some((step, pz, mask)) = pending.take() else {
                     abort!("Step {} outside a phase-A exchange", rec.step);
                 };
@@ -1276,16 +1320,14 @@ mod tests {
                 init_fnv: "00ff00ff00ff00ff".into(),
                 ds_fnv: "123456789abcdef0".into(),
             },
-            Frame::Welcome { rank: 1, workers: 2, resume: 3 },
+            Frame::Welcome { rank: 1, workers: 2, resume: 3, trace: 0xdead_beef_cafe_f00d },
             Frame::Refresh { mask_epoch: u32::MAX },
             Frame::PhaseA { step: 7, seed: (11, 7), mask_epoch: 1 },
             Frame::Losses { step: 7, plus: vec![0.5, -0.0, f64::MIN_POSITIVE], minus: vec![] },
-            Frame::Step(StepRecord {
-                step: 7,
-                seed: (u32::MAX, 0),
-                scalar: -0.0,
-                mask_epoch: 2,
-            }),
+            Frame::Step(
+                StepRecord { step: 7, seed: (u32::MAX, 0), scalar: -0.0, mask_epoch: 2 },
+                u64::MAX,
+            ),
             Frame::Finish { steps: 8, final_fnv: "cbf29ce484222325".into() },
             Frame::FinishAck { final_fnv: "cbf29ce484222325".into() },
             Frame::Abort { reason: "because".into() },
@@ -1335,6 +1377,48 @@ mod tests {
         let mut buf = (body.len() as u32).to_le_bytes().to_vec();
         buf.extend(body);
         assert!(decode_frame(&buf).unwrap_err().to_string().contains("exceeds frame body"));
+    }
+
+    #[test]
+    fn pre_v2_welcome_and_step_bodies_decode_with_zero_trace() {
+        // hand-built v1 bodies: no trailing trace u64. The decoder's
+        // version gate must default the field, not reject the frame.
+        let mut body = vec![TAG_WELCOME];
+        put_u32(&mut body, 1);
+        put_u32(&mut body, 2);
+        put_u32(&mut body, 3);
+        let mut buf = (body.len() as u32).to_le_bytes().to_vec();
+        buf.extend(body);
+        match decode_frame(&buf).unwrap().unwrap().0 {
+            Frame::Welcome { rank: 1, workers: 2, resume: 3, trace: 0 } => {}
+            other => panic!("v1 Welcome decoded as {other:?}"),
+        }
+
+        let mut body = vec![TAG_STEP];
+        for v in [7u32, 11, 0x1717, 0x8000_0000, 2] {
+            put_u32(&mut body, v);
+        }
+        let mut buf = (body.len() as u32).to_le_bytes().to_vec();
+        buf.extend(body);
+        match decode_frame(&buf).unwrap().unwrap().0 {
+            Frame::Step(rec, 0) => {
+                assert_eq!(rec.step, 7);
+                assert_eq!(rec.seed, (11, 0x1717));
+                assert_eq!(rec.scalar.to_bits(), 0x8000_0000);
+                assert_eq!(rec.mask_epoch, 2);
+            }
+            other => panic!("v1 Step decoded as {other:?}"),
+        }
+
+        // a torn trace field (1..7 trailing bytes) is still malformed
+        let mut body = vec![TAG_WELCOME];
+        put_u32(&mut body, 1);
+        put_u32(&mut body, 2);
+        put_u32(&mut body, 3);
+        body.extend_from_slice(&[0xAA, 0xBB, 0xCC]);
+        let mut buf = (body.len() as u32).to_le_bytes().to_vec();
+        buf.extend(body);
+        assert!(decode_frame(&buf).is_err(), "torn trace field must not decode");
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! | `POST /v1/jobs/grid`         | submit a sweep grid ([`GridSpec`](crate::jobs::GridSpec) JSON) — fans out to N queued cells, answers the parent status |
 //! | `GET  /v1/jobs`              | list jobs (id, state, progress) and grid parents |
 //! | `GET  /v1/jobs/{id}`         | one job's full state, or a grid parent's derived status |
+//! | `GET  /v1/jobs/{id}/timeline`| the job's flight-recorder timeline: downsampled per-step series (loss, `g`, sparsity, mask churn), worker attribution, timings, active alerts, `trace_id` |
 //! | `POST /v1/jobs/{id}/cancel`  | request cancellation (honored at the next step boundary); on a grid parent, fans out to every non-terminal cell |
 //! | `POST /v1/jobs/{id}/resume`  | re-queue a cancelled/failed job (continues bit-identically from its journal); on a grid parent, fans out to every resumable cell |
 //!
@@ -339,6 +340,7 @@ fn route_label(path: &str) -> &'static str {
 /// scraped, and a series that drops to zero is overwritten instead of
 /// going stale.
 fn sync_gauges(engine: &ServeEngine) {
+    crate::obs::sync_build_info();
     crate::obs::gauge("serve_registry_adapters", &[]).set(engine.registry.len() as i64);
     crate::obs::gauge("serve_registry_bytes", &[]).set(engine.registry.bytes() as i64);
     crate::obs::gauge("serve_pending_requests", &[]).set(engine.batcher.pending() as i64);
@@ -404,8 +406,17 @@ fn route(engine: &ServeEngine, req: &Request) -> (u16, Json) {
 fn healthz(engine: &ServeEngine) -> Json {
     sync_gauges(engine);
     let g = |name: &str| Json::Num(crate::obs::gauge(name, &[]).get() as f64);
+    // an active alert degrades health without failing liveness: `ok`
+    // stays true (the process serves), `status` flips to "degraded" so
+    // probes that care can distinguish
+    let alerts = crate::obs::alerts::active_count();
     let mut fields = vec![
         ("ok", Json::Bool(true)),
+        (
+            "status",
+            Json::Str(if alerts == 0 { "ok" } else { "degraded" }.to_string()),
+        ),
+        ("alerts_active", Json::Num(alerts as f64)),
         ("platform", Json::Str(engine.runtime().backend().platform().to_string())),
         ("model", Json::Str(engine.model().name.clone())),
         ("adapters", g("serve_registry_adapters")),
@@ -546,6 +557,7 @@ fn job_item(engine: &ServeEngine, method: &str, path: &str) -> (u16, Json) {
     let result = match (method, action, is_grid) {
         ("GET", None, false) => queue.get(id).map(|j| j.to_json()),
         ("GET", None, true) => queue.grid_status(id),
+        ("GET", Some("timeline"), false) => job_timeline(queue, id),
         ("POST", Some("cancel"), false) => queue.cancel(id).map(|j| j.to_json()),
         ("POST", Some("cancel"), true) => {
             queue.cancel_grid(id).and_then(|_| queue.grid_status(id))
@@ -561,6 +573,30 @@ fn job_item(engine: &ServeEngine, method: &str, path: &str) -> (u16, Json) {
         Err(e) if format!("{e:#}").contains("no job") => (404, error_json(&e)),
         Err(e) => (400, error_json(&e)),
     }
+}
+
+/// `GET /v1/jobs/{id}/timeline`: the job's flight-recorder snapshot —
+/// downsampled per-step series, worker attribution, timings — merged
+/// with queue-side identity (state, `trace_id`) and the live alert set.
+/// A job that has not run a step yet (still queued, or the server
+/// restarted and the in-memory recorder is gone) answers an empty
+/// timeline rather than a 404: the job exists, it just has no samples.
+fn job_timeline(queue: &JobQueue, id: u64) -> Result<Json> {
+    let job = queue.get(id)?;
+    let timeline = match crate::obs::recorder::get(id) {
+        Some(rec) => rec.timeline_json(),
+        None => crate::obs::recorder::FlightRecorder::new(
+            crate::obs::recorder::DEFAULT_BUDGET_BYTES,
+        )
+        .timeline_json(),
+    };
+    let Json::Obj(mut fields) = timeline else { bail!("timeline is not an object") };
+    fields.insert("id".into(), Json::Num(job.id as f64));
+    fields.insert("state".into(), Json::Str(job.state.as_str().into()));
+    fields.insert("trace_id".into(), Json::Str(format!("{:016x}", job.trace_id)));
+    fields.insert("alerts".into(), crate::obs::alerts::alerts_json(id));
+    fields.insert("steps_done".into(), Json::Num(job.steps_done as f64));
+    Ok(Json::Obj(fields))
 }
 
 /// Classify failures that map to distinct HTTP statuses.

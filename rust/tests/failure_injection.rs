@@ -226,8 +226,8 @@ fn sample_exchange() -> Vec<Frame> {
             init_fnv: "cbf29ce484222325".into(),
             ds_fnv: "100000001b3".into(),
         },
-        Frame::Welcome { rank: 1, workers: 2, resume: 1 },
-        Frame::Step(StepRecord { step: 0, seed: (1, 0x1717), scalar: -0.5, mask_epoch: 0 }),
+        Frame::Welcome { rank: 1, workers: 2, resume: 1, trace: 0x1234_5678_9abc_def0 },
+        Frame::Step(StepRecord { step: 0, seed: (1, 0x1717), scalar: -0.5, mask_epoch: 0 }, 7),
         Frame::PhaseA { step: 1, seed: (3, 0x1717), mask_epoch: 0 },
         Frame::Losses { step: 1, plus: vec![0.625, 2.5], minus: vec![0.375, -0.0] },
         Frame::Finish { steps: 2, final_fnv: "00000000deadbeef".into() },
@@ -283,7 +283,7 @@ fn hub_survives_connection_dying_mid_handshake() {
     drop(TcpStream::connect(hub.addr()).unwrap());
     assert!(hub.wait_for_workers(1, std::time::Duration::from_secs(10)));
     let header = Json::obj(vec![("init_fnv", Json::Str("aaaa".into()))]);
-    let leased = hub.lease(1, 2, &header, 7, "dddd", &[]);
+    let leased = hub.lease(1, 2, &header, 7, "dddd", &[], 0);
     assert!(leased.is_empty(), "dead connection must not produce a session");
     assert_eq!(hub.sessions_served(), 0);
     assert_eq!(hub.connected(), 0, "dead connection must be dropped, not re-parked");
@@ -311,7 +311,7 @@ fn refused_hello_reason(hello: Frame) -> String {
     });
     assert!(hub.wait_for_workers(1, std::time::Duration::from_secs(10)));
     let header = Json::obj(vec![("init_fnv", Json::Str("aaaa".into()))]);
-    let leased = hub.lease(1, 2, &header, 7, "dddd", &[]);
+    let leased = hub.lease(1, 2, &header, 7, "dddd", &[], 0);
     assert!(leased.is_empty());
     assert_eq!(hub.sessions_served(), 0);
     client.join().unwrap()

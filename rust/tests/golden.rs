@@ -62,6 +62,14 @@ use sparse_mezo::parallel::transport::{decode_frame, encode_frame, Frame, PROTOC
 
 const WIRE_FIXTURE: &str = "tests/data/golden_wire.hex";
 
+/// The pre-PR-8 (protocol v1) fixture, frozen forever: Welcome and Step
+/// bodies without the trailing trace id. Decoding it proves the
+/// version-gated trace field is backward-compatible on real old bytes.
+const WIRE_V1_FIXTURE: &str = "tests/data/golden_wire_v1.hex";
+
+/// The trace id every v2 fixture frame carries (adversarial high bit set).
+const GOLDEN_TRACE: u64 = 0xdead_beef_cafe_f00d;
+
 /// The canonical exchange the fixture records: handshake, three steps with
 /// adversarial scalars (-0.0, f32::MIN_POSITIVE, the smallest subnormal;
 /// -0.0 and f64::MIN_POSITIVE among the per-row losses), clean finish.
@@ -79,7 +87,7 @@ fn golden_exchange() -> Vec<Frame> {
             init_fnv: "cbf29ce484222325".into(),
             ds_fnv: "00000100000001b3".into(),
         },
-        Frame::Welcome { rank: 1, workers: 2, resume: 0 },
+        Frame::Welcome { rank: 1, workers: 2, resume: 0, trace: GOLDEN_TRACE },
         Frame::Refresh { mask_epoch: 0 },
     ];
     for step in 0u32..3 {
@@ -89,12 +97,15 @@ fn golden_exchange() -> Vec<Frame> {
             plus: vec![0.5 + step as f64, -0.0],
             minus: vec![f64::MIN_POSITIVE, step as f64],
         });
-        frames.push(Frame::Step(StepRecord {
-            step,
-            seed: seed(step),
-            scalar: scalars[step as usize],
-            mask_epoch: 0,
-        }));
+        frames.push(Frame::Step(
+            StepRecord {
+                step,
+                seed: seed(step),
+                scalar: scalars[step as usize],
+                mask_epoch: 0,
+            },
+            GOLDEN_TRACE,
+        ));
     }
     frames.push(Frame::Finish { steps: 3, final_fnv: "00000000deadbeef".into() });
     frames.push(Frame::FinishAck { final_fnv: "00000000deadbeef".into() });
@@ -147,6 +158,49 @@ fn wire_format_matches_committed_fixture() {
         pos += used;
     }
     assert_eq!(pos, stream.len(), "fixture has trailing bytes");
+}
+
+/// The frozen v1 fixture (no trace field on Welcome/Step, version byte
+/// 1 in Config/Hello) must keep decoding cleanly: the trace id is
+/// version-gated by body length, so old bytes parse with `trace: 0` and
+/// identical semantic payload. This is the decode-compat contract a
+/// pre-PR-8 worker relies on — never regenerate `golden_wire_v1.hex`.
+#[test]
+fn pre_v2_fixture_bytes_still_decode() {
+    let text = std::fs::read_to_string(WIRE_V1_FIXTURE)
+        .expect("tests/data/golden_wire_v1.hex is frozen and must exist");
+    let stream: Vec<u8> = fixture_lines(&text).iter().flat_map(|l| from_hex(l)).collect();
+    let mut pos = 0;
+    let mut decoded = Vec::new();
+    while pos < stream.len() {
+        let (frame, used) = decode_frame(&stream[pos..])
+            .expect("pre-v2 fixture bytes must decode")
+            .expect("pre-v2 fixture frame must be complete");
+        decoded.push(frame);
+        pos += used;
+    }
+    assert_eq!(pos, stream.len(), "v1 fixture has trailing bytes");
+
+    // same exchange as the v2 fixture, except: version byte 1 where the
+    // frame carries one, and trace 0 everywhere the v2 frames carry
+    // GOLDEN_TRACE
+    let expected: Vec<Frame> = golden_exchange()
+        .into_iter()
+        .map(|f| match f {
+            Frame::Config { header, data_seed, .. } => {
+                Frame::Config { version: 1, header, data_seed }
+            }
+            Frame::Hello { init_fnv, ds_fnv, .. } => {
+                Frame::Hello { version: 1, init_fnv, ds_fnv }
+            }
+            Frame::Welcome { rank, workers, resume, .. } => {
+                Frame::Welcome { rank, workers, resume, trace: 0 }
+            }
+            Frame::Step(rec, _) => Frame::Step(rec, 0),
+            other => other,
+        })
+        .collect();
+    assert_eq!(decoded, expected, "pre-v2 bytes must decode to the same exchange");
 }
 
 /// Regenerates the fixture in place. Run deliberately, never in CI:

@@ -205,3 +205,127 @@ fn instrumentation_is_invisible_to_training() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// The `/v1/jobs/{id}/timeline` body schema is a client contract:
+/// deterministic recorder inputs must produce this exact JSON shape
+/// (BTreeMap rendering = lexicographic key order) and these exact
+/// series bytes.
+#[test]
+fn timeline_json_schema_is_golden() {
+    use sparse_mezo::obs::recorder::FlightRecorder;
+    let rec = FlightRecorder::new(1 << 16);
+    let mask = [1u8, 0, 1, 1];
+    let losses = [1.5f32, 1.25, 1.0, 0.75];
+    for (step, &loss) in losses.iter().enumerate() {
+        rec.record_step(step as u32, loss, 0.5, Some(&mask), 4, 0);
+    }
+    rec.note_slice(0.25, 4, &[1]);
+    rec.note_replay(0.125);
+
+    // round-trip through the JSON text a client actually receives
+    let doc = json::parse(&rec.timeline_json().to_string()).unwrap();
+    let keys: Vec<&str> = doc.as_obj().unwrap().keys().map(String::as_str).collect();
+    assert_eq!(
+        keys,
+        [
+            "budget_bytes",
+            "churn_by_epoch",
+            "latest",
+            "samples",
+            "seen",
+            "series",
+            "slices",
+            "stride",
+            "timings",
+            "worker_lost",
+            "workers",
+        ]
+    );
+    let series = doc.req("series").unwrap();
+    let skeys: Vec<&str> = series.as_obj().unwrap().keys().map(String::as_str).collect();
+    assert_eq!(
+        skeys,
+        ["churn", "g", "g_abs_ewma", "loss", "mask_epoch", "nonzero", "sparsity", "step"]
+    );
+    // exact series bodies: every input above is binary-exact, so the
+    // rendered decimal is pinned
+    assert_eq!(series.req("step").unwrap().to_string(), "[0,1,2,3]");
+    assert_eq!(series.req("loss").unwrap().to_string(), "[1.5,1.25,1,0.75]");
+    assert_eq!(series.req("g").unwrap().to_string(), "[0.5,0.5,0.5,0.5]");
+    assert_eq!(series.req("nonzero").unwrap().to_string(), "[3,3,3,3]");
+    assert_eq!(series.req("sparsity").unwrap().to_string(), "[0.25,0.25,0.25,0.25]");
+    assert_eq!(series.req("mask_epoch").unwrap().to_string(), "[0,0,0,0]");
+    assert_eq!(series.req("churn").unwrap().to_string(), "[0,0,0,0]");
+    // `latest` is the exact newest sample; attribution and timings
+    // reflect the one slice and one replay noted above
+    let latest = doc.req("latest").unwrap();
+    assert_eq!(latest.req("step").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(latest.req("total").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(doc.req("stride").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(doc.req("seen").unwrap().as_usize().unwrap(), 4);
+    assert_eq!(doc.req("slices").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(doc.req("workers").unwrap().to_string(), r#"{"0":4,"1":4}"#);
+    let timings = doc.req("timings").unwrap();
+    assert_eq!(timings.req("slice_seconds").unwrap().to_string(), "[0.25]");
+    assert_eq!(timings.req("replay_seconds").unwrap().to_string(), "[0.125]");
+}
+
+/// ISSUE acceptance: the timeline's loss/g series must bit-match the
+/// run that produced them — g against the step journal's per-step
+/// scalar, loss against the trainer's recorded per-step losses —
+/// surviving the full f32 → f64 → JSON text → f64 → f32 round trip.
+#[test]
+fn timeline_series_bit_match_the_step_journal() {
+    use sparse_mezo::obs::recorder::FlightRecorder;
+    use sparse_mezo::parallel::protocol;
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_obs_timeline_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("rec.journal.jsonl");
+
+    let mut cfg = TrainConfig::resolve("llama_tiny", "rte", "smezo", None).unwrap();
+    cfg.steps = 10;
+    cfg.eval_every = 0;
+    cfg.eval_cap = 8;
+    cfg.seed = 11;
+    cfg.workers = 1;
+    let dataset = tasks::generate_sized("rte", 11, 48, 8, 8).unwrap();
+    let pool = WorkerPool::new(1);
+    let rec = Arc::new(FlightRecorder::new(1 << 16));
+    let mut t = DpTrainer::new(rt(), &pool, cfg).with_journal(&journal);
+    t.eval_test = false;
+    t.initial_override = Some(base);
+    t.recorder = Some(Arc::clone(&rec));
+    let result = t.run_on(&m, &dataset).unwrap();
+
+    // read the timeline the way a client would: through its JSON text
+    let doc = json::parse(&rec.timeline_json().to_string()).unwrap();
+    let series = doc.req("series").unwrap();
+    let column = |key: &str| -> Vec<f64> {
+        series
+            .req(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect()
+    };
+    let steps: Vec<f64> = column("step");
+    assert_eq!(steps, (0..10).map(|s| s as f64).collect::<Vec<_>>(), "stride-1 history");
+
+    let (_, records) = protocol::load_journal(&journal).unwrap();
+    assert_eq!(records.len(), 10);
+    let g = column("g");
+    for (i, r) in records.iter().enumerate() {
+        assert_eq!((g[i] as f32).to_bits(), r.scalar.to_bits(), "g[{i}] drifted vs journal");
+    }
+    let loss = column("loss");
+    assert_eq!(result.train_losses.len(), 10);
+    for (i, &l) in result.train_losses.iter().enumerate() {
+        assert_eq!((loss[i] as f32).to_bits(), l.to_bits(), "loss[{i}] drifted vs run");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}

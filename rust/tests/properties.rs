@@ -306,6 +306,10 @@ fn adversarial_u32(rng: &mut Pcg32) -> u32 {
     }
 }
 
+fn adversarial_u64(rng: &mut Pcg32) -> u64 {
+    ((adversarial_u32(rng) as u64) << 32) | adversarial_u32(rng) as u64
+}
+
 fn adversarial_string(rng: &mut Pcg32) -> String {
     let n = rng.below(40) as usize;
     (0..n)
@@ -329,6 +333,7 @@ fn random_frame(rng: &mut Pcg32) -> Frame {
             rank: adversarial_u32(rng),
             workers: adversarial_u32(rng),
             resume: adversarial_u32(rng),
+            trace: adversarial_u64(rng),
         },
         3 => Frame::Refresh { mask_epoch: adversarial_u32(rng) },
         4 => Frame::PhaseA {
@@ -341,12 +346,15 @@ fn random_frame(rng: &mut Pcg32) -> Frame {
             plus: (0..rng.below(9)).map(|_| adversarial_f64(rng)).collect(),
             minus: (0..rng.below(9)).map(|_| adversarial_f64(rng)).collect(),
         },
-        6 => Frame::Step(StepRecord {
-            step: adversarial_u32(rng),
-            seed: (adversarial_u32(rng), adversarial_u32(rng)),
-            scalar: adversarial_f32(rng),
-            mask_epoch: adversarial_u32(rng),
-        }),
+        6 => Frame::Step(
+            StepRecord {
+                step: adversarial_u32(rng),
+                seed: (adversarial_u32(rng), adversarial_u32(rng)),
+                scalar: adversarial_f32(rng),
+                mask_epoch: adversarial_u32(rng),
+            },
+            adversarial_u64(rng),
+        ),
         7 => Frame::Finish { steps: adversarial_u32(rng), final_fnv: adversarial_string(rng) },
         8 => Frame::FinishAck { final_fnv: adversarial_string(rng) },
         _ => Frame::Abort { reason: adversarial_string(rng) },
@@ -385,6 +393,71 @@ fn prop_wire_decode_never_panics_on_arbitrary_bytes() {
         }
         if let Ok(Some((_, used))) = decode_frame(&buf) {
             assert!(used <= buf.len(), "decoder claimed more bytes than it was given");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Flight-recorder properties (obs::recorder): the per-job step history is
+// byte-budgeted — the invariant must hold at EVERY step under adversarial
+// budget/step-count combinations, and power-of-two decimation must keep the
+// first and last steps exact while thinning only onto the stride grid.
+// ---------------------------------------------------------------------------
+
+use sparse_mezo::obs::recorder::{FlightRecorder, SAMPLE_BYTES};
+
+#[test]
+fn prop_recorder_history_never_exceeds_byte_budget() {
+    forall("recorder byte budget", 40, |seed| {
+        let mut rng = Pcg32::new(seed, 0x77C0);
+        let slots = 8 + rng.below(48) as usize;
+        let budget = slots * SAMPLE_BYTES;
+        let steps = 1 + rng.below(4000);
+        let r = FlightRecorder::new(budget);
+        for step in 0..steps {
+            r.record_step(step, rng.unit_f32(), rng.normal_f32(), None, 64, 0);
+            let snap = r.snapshot();
+            assert!(
+                snap.history_bytes() <= snap.budget_bytes,
+                "step {step}: {} bytes > budget {}",
+                snap.history_bytes(),
+                snap.budget_bytes
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_recorder_decimation_keeps_first_and_last_exact() {
+    forall("recorder decimation endpoints", 40, |seed| {
+        let mut rng = Pcg32::new(seed, 0x77C1);
+        let slots = 8 + rng.below(24) as usize;
+        let steps = 1 + rng.below(5000);
+        let r = FlightRecorder::new(slots * SAMPLE_BYTES);
+        for step in 0..steps {
+            // loss encodes the step so "exact" is checkable, not just present
+            r.record_step(step, step as f32, 0.5, None, 64, 0);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.seen, steps as u64);
+        assert!(snap.stride.is_power_of_two(), "stride {}", snap.stride);
+        let first = snap.samples.first().unwrap();
+        assert_eq!((first.step, first.loss), (0, 0.0), "first step not exact");
+        let last = snap.samples.last().unwrap();
+        assert_eq!(
+            (last.step, last.loss),
+            (steps - 1, (steps - 1) as f32),
+            "last step not exact"
+        );
+        // everything between the endpoints sits on the decimation grid,
+        // strictly ordered (no duplicates, no reordering)
+        if snap.samples.len() > 2 {
+            for s in &snap.samples[1..snap.samples.len() - 1] {
+                assert_eq!(s.step as u64 % snap.stride, 0, "off-grid sample {}", s.step);
+            }
+        }
+        for w in snap.samples.windows(2) {
+            assert!(w[0].step < w[1].step, "history not strictly ordered");
         }
     });
 }

@@ -123,7 +123,7 @@ fn two_tcp_workers_bit_identical_to_serial_and_in_process_dp() {
     let mut t =
         DpTrainer::new(rt(), &pool, tiny_cfg(steps, 4)).with_journal(&dir.join("j.jsonl"));
     t.eval_test = false;
-    t.remote = Some(RemoteHandle { hub: Arc::clone(&hub), data_seed: 11 });
+    t.remote = Some(RemoteHandle { hub: Arc::clone(&hub), data_seed: 11, trace_id: 0xfeed });
     let mut state = t.begin_slices(&m, base_params(&m)).unwrap();
     let report = t.run_slice(&m, &ds, &mut state, steps, None).unwrap();
     assert!(report.done && report.steps_run == steps, "{report:?}");
@@ -166,7 +166,7 @@ fn worker_killed_mid_slice_resumes_bit_identically_via_journal() {
     let mk = || {
         let mut t = DpTrainer::new(rt(), &pool, tiny_cfg(steps, 2)).with_journal(&journal);
         t.eval_test = false;
-        t.remote = Some(RemoteHandle { hub: Arc::clone(&hub), data_seed: 11 });
+        t.remote = Some(RemoteHandle { hub: Arc::clone(&hub), data_seed: 11, trace_id: 0xfeed });
         t
     };
     let t = mk();
