@@ -19,6 +19,11 @@ use sparse_mezo::parallel::{DpTrainer, WorkerPool};
 use sparse_mezo::runtime::Runtime;
 use sparse_mezo::util::json::Json;
 
+/// Tracking allocator so the snapshot's `mem` section carries real
+/// heap watermarks for the DP phases (train.step, dp.allreduce).
+#[global_allocator]
+static ALLOC: sparse_mezo::obs::mem::TrackingAlloc = sparse_mezo::obs::mem::TrackingAlloc;
+
 /// Timed steps per configuration (excludes eval pauses by design).
 const STEPS: usize = 30;
 /// llama_med: the heaviest native model — forward cost dominates the
@@ -57,6 +62,7 @@ fn serial_steps_per_sec(rt: &Runtime, steps: usize) -> anyhow::Result<f64> {
 }
 
 fn main() -> anyhow::Result<()> {
+    sparse_mezo::obs::mem::enable();
     let quick = std::env::args().any(|a| a == "--quick");
     let (steps, worker_counts): (usize, &[usize]) =
         if quick { (8, &[1, 2]) } else { (STEPS, &[1, 2, 4]) };
@@ -124,6 +130,7 @@ fn main() -> anyhow::Result<()> {
         ("speedup_4w", Json::Num(speedup4)),
         ("results", Json::Arr(rows)),
         ("obs", obs),
+        ("mem", sparse_mezo::obs::mem::snapshot_json()),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_dp.json");
     std::fs::write(&path, format!("{}\n", out.to_string()))?;

@@ -21,9 +21,16 @@ use sparse_mezo::runtime::Runtime;
 use sparse_mezo::serve::ServeEngine;
 use sparse_mezo::util::json::Json;
 
+/// Tracking allocator so the snapshot's `mem` section carries real
+/// heap watermarks for the orchestration phases (jobs.slice,
+/// jobs.replay_verify, train.step).
+#[global_allocator]
+static ALLOC: sparse_mezo::obs::mem::TrackingAlloc = sparse_mezo::obs::mem::TrackingAlloc;
+
 const MODEL: &str = "llama_tiny";
 
 fn main() -> anyhow::Result<()> {
+    sparse_mezo::obs::mem::enable();
     let quick = std::env::args().any(|a| a == "--quick");
     let (n_jobs, steps, slice) = if quick { (2usize, 6usize, 3usize) } else { (6, 24, 6) };
 
@@ -131,6 +138,7 @@ fn main() -> anyhow::Result<()> {
                 ),
             ]),
         ),
+        ("mem", sparse_mezo::obs::mem::snapshot_json()),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_jobs.json");
     std::fs::write(&path, format!("{}\n", out.to_string()))?;

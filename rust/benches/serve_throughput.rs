@@ -16,6 +16,11 @@ use sparse_mezo::serve::{ServeEngine, SparseDelta};
 use sparse_mezo::util::json::Json;
 use sparse_mezo::util::prng::Pcg32;
 
+/// Tracking allocator so the snapshot's `mem` section carries real
+/// heap watermarks for the serve.batch phase.
+#[global_allocator]
+static ALLOC: sparse_mezo::obs::mem::TrackingAlloc = sparse_mezo::obs::mem::TrackingAlloc;
+
 const MODEL: &str = "llama_tiny";
 
 /// A synthetic ~25%-density adapter (the sparsity-0.75 serving regime)
@@ -41,6 +46,7 @@ fn prompt_rows(n_rows: usize, len: usize, vocab: usize) -> Vec<Vec<i32>> {
 }
 
 fn main() -> anyhow::Result<()> {
+    sparse_mezo::obs::mem::enable();
     let quick = std::env::args().any(|a| a == "--quick");
     let (rows_per_request, iters, worker_counts): (usize, usize, &[usize]) =
         if quick { (16, 5, &[1, 2]) } else { (64, 20, &[1, 2, 4]) };
@@ -103,6 +109,7 @@ fn main() -> anyhow::Result<()> {
         ("timed_iters", Json::Num(iters as f64)),
         ("results", Json::Arr(results)),
         ("obs", obs),
+        ("mem", sparse_mezo::obs::mem::snapshot_json()),
     ]);
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serve.json");
     std::fs::write(&path, format!("{}\n", out.to_string()))?;

@@ -191,6 +191,179 @@ pub fn table4_rows_7b() -> Vec<(&'static str, MemBreakdown)> {
     ]
 }
 
+// ---------------------------------------------------------------------------
+// measured micro-arms (`mem-report`)
+// ---------------------------------------------------------------------------
+
+/// One `mem-report` row: a measured optimizer micro-arm next to its
+/// analytic [`breakdown`] prediction for the same shapes.
+#[derive(Debug, Clone, Copy)]
+pub struct MeasuredRow {
+    /// method label (matches the Table-4 row names)
+    pub name: &'static str,
+    /// the [`crate::obs::mem::PHASES`] entry the arm accounted under
+    pub phase: &'static str,
+    /// heap high-water mark over the arm, bytes
+    /// ([`crate::obs::mem::window_peak`]; 0 if the tracking allocator
+    /// is not installed in this binary)
+    pub measured_peak: u64,
+    /// the analytic model's prediction at the same `n_params`
+    pub analytic: MemBreakdown,
+}
+
+/// Streaming quadratic loss `0.5 * mean(p^2)` — deliberately
+/// allocation-free, so an arm's heap watermark is its *optimizer state*,
+/// not forward-pass scratch (the testbed analogue of the paper running
+/// all methods through one identical forward).
+fn probe_loss(params: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for &p in params {
+        acc += p as f64 * p as f64;
+    }
+    (0.5 * acc / params.len().max(1) as f64) as f32
+}
+
+/// The shared step noise: the same counter-PRNG stream the real
+/// trainers replay, regenerated per coordinate — never materialized.
+fn probe_z(seed: (u32, u32), i: usize) -> f32 {
+    crate::util::prng::normal(crate::util::prng::layer_key(seed.0, seed.1, 0), i as u32)
+}
+
+const PROBE_EPS: f32 = 1e-3;
+const PROBE_LR: f32 = 1e-4;
+const PROBE_SEED: u32 = 7;
+
+fn probe_params(n: usize) -> Vec<f32> {
+    // deterministic mixed-magnitude init so a fixed threshold splits the
+    // coordinates into masked and unmasked on every run
+    (0..n).map(|i| ((i % 17) as f32 - 8.0) / 16.0).collect()
+}
+
+/// One in-place ZO arm (MeZO when `threshold` is `None`, the S-MeZO
+/// efficient implementation when `Some`): perturb via seed replay,
+/// score, revert, update — the mask is recomputed per coordinate on the
+/// fly, so the arm holds exactly the parameter vector (§3.4's
+/// inference-level claim, minus activations). These are *memory probes*:
+/// deterministic and measurement-shaped, not convergence benchmarks.
+fn run_arm_in_place(n: usize, steps: usize, threshold: Option<f32>) -> f32 {
+    let mut params = probe_params(n);
+    let on = |p: f32| threshold.map(|th| p.abs() >= th).unwrap_or(true);
+    for t in 0..steps {
+        let seed = (PROBE_SEED, t as u32);
+        for (i, p) in params.iter_mut().enumerate() {
+            if on(*p) {
+                *p += PROBE_EPS * probe_z(seed, i);
+            }
+        }
+        let l_plus = probe_loss(&params);
+        for (i, p) in params.iter_mut().enumerate() {
+            if on(*p) {
+                *p -= 2.0 * PROBE_EPS * probe_z(seed, i);
+            }
+        }
+        let l_minus = probe_loss(&params);
+        let g = (l_plus - l_minus) / (2.0 * PROBE_EPS);
+        for (i, p) in params.iter_mut().enumerate() {
+            if on(*p) {
+                let z = probe_z(seed, i);
+                *p += PROBE_EPS * z - PROBE_LR * g * z;
+            }
+        }
+    }
+    probe_loss(&params)
+}
+
+/// The vanilla S-MeZO arm: genuinely stores the 1-bit mask (`n/8`
+/// bytes) and clones a perturbed parameter copy every step (§3.3's two
+/// costs the efficient implementation eliminates) — its heap watermark
+/// exceeds the in-place arms' by exactly that storage.
+fn run_arm_vanilla(n: usize, steps: usize, threshold: f32) -> f32 {
+    let mut params = probe_params(n);
+    let mut mask = vec![0u8; n.div_ceil(8)];
+    for (i, p) in params.iter().enumerate() {
+        if p.abs() >= threshold {
+            mask[i / 8] |= 1 << (i % 8);
+        }
+    }
+    let on = |mask: &[u8], i: usize| mask[i / 8] >> (i % 8) & 1 == 1;
+    for t in 0..steps {
+        let seed = (PROBE_SEED, t as u32);
+        let mut perturbed = params.clone();
+        for (i, p) in perturbed.iter_mut().enumerate() {
+            if on(&mask, i) {
+                *p += PROBE_EPS * probe_z(seed, i);
+            }
+        }
+        let l_plus = probe_loss(&perturbed);
+        for (i, p) in perturbed.iter_mut().enumerate() {
+            if on(&mask, i) {
+                *p = params[i] - PROBE_EPS * probe_z(seed, i);
+            }
+        }
+        let l_minus = probe_loss(&perturbed);
+        drop(perturbed);
+        let g = (l_plus - l_minus) / (2.0 * PROBE_EPS);
+        for (i, p) in params.iter_mut().enumerate() {
+            if on(&mask, i) {
+                *p -= PROBE_LR * g * probe_z(seed, i);
+            }
+        }
+    }
+    probe_loss(&params)
+}
+
+/// Run the three matched micro-arms (MeZO, S-MeZO-EI, vanilla S-MeZO)
+/// at `model`'s parameter count and measure each one's heap watermark
+/// against the analytic [`breakdown`] at the same shapes — the measured
+/// side of the paper's memory table. Each arm is bracketed by
+/// [`crate::obs::mem::reset_watermarks`] + a fresh window so its peak is
+/// its own; arms run serially on the calling thread. With the tracking
+/// allocator not installed (lib unit tests), `measured_peak` is 0.
+pub fn measured_rows(model: &ModelInfo, steps: usize) -> Vec<MeasuredRow> {
+    use crate::obs::mem;
+    let n = model.n_params;
+    let sc = MemScenario { batch: model.batch, seq_len: model.seq_len, dtype_bytes: 4 };
+    let mk = |m| breakdown(n, model.n_layers, model.d_model, model.d_ff, m, &sc);
+    let threshold = 0.25f32;
+    let mut sink = 0.0f32;
+    let mut measure = |phase: &'static str, f: &mut dyn FnMut() -> f32| -> u64 {
+        mem::reset_watermarks();
+        let scope = mem::mem_scope(phase);
+        mem::reset_window();
+        sink += f();
+        scope.end();
+        mem::window_peak()
+    };
+    let rows = vec![
+        MeasuredRow {
+            name: "MeZO",
+            phase: "report.mezo",
+            measured_peak: measure("report.mezo", &mut || run_arm_in_place(n, steps, None)),
+            analytic: mk(Method::Mezo),
+        },
+        MeasuredRow {
+            name: "S-MeZO-EI",
+            phase: "report.smezo",
+            measured_peak: measure("report.smezo", &mut || {
+                run_arm_in_place(n, steps, Some(threshold))
+            }),
+            analytic: mk(Method::SMezoEi),
+        },
+        MeasuredRow {
+            name: "S-MeZO (vanilla)",
+            phase: "report.smezo_vanilla",
+            measured_peak: measure("report.smezo_vanilla", &mut || {
+                run_arm_vanilla(n, steps, threshold)
+            }),
+            analytic: mk(Method::SMezoVanilla),
+        },
+    ];
+    // keep the arms' arithmetic observable so the optimizer can't elide
+    // the allocations under measurement
+    assert!(sink.is_finite(), "probe arms produced a non-finite loss");
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +420,42 @@ mod tests {
         // and the per-adapter figure is dominated by the value pairs
         let one = sparse_adapter_bytes(p, nnz);
         assert!(one >= nnz * 8 && one < nnz * 8 + p / 4, "{one}");
+    }
+
+    #[test]
+    fn measured_rows_run_without_installed_allocator() {
+        // the lib test binary has no tracking allocator, so peaks are 0
+        // here — this exercises the arms' arithmetic and the analytic
+        // pairing; the measured inequality is asserted in tests/obs.rs
+        // where the allocator IS installed
+        let model = ModelInfo {
+            name: "toy".into(),
+            family: "llama".into(),
+            size: "tiny".into(),
+            n_layers: 2,
+            d_model: 32,
+            n_heads: 2,
+            d_ff: 64,
+            vocab: 16,
+            seq_len: 16,
+            batch: 4,
+            window: 0,
+            n_params: 4_096,
+            n_lora_params: 0,
+            lora_rank: 0,
+            n_entries: 0,
+            n_hypers: 8,
+            n_metrics: 8,
+            layout: vec![],
+            lora_layout: vec![],
+            programs: std::collections::BTreeMap::new(),
+        };
+        let rows = measured_rows(&model, 2);
+        assert_eq!(rows.len(), 3);
+        let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        assert_eq!(get("MeZO").analytic.total(), get("S-MeZO-EI").analytic.total());
+        assert!(get("S-MeZO (vanilla)").analytic.total() > get("S-MeZO-EI").analytic.total());
+        assert_eq!(get("S-MeZO-EI").phase, "report.smezo");
     }
 
     #[test]

@@ -197,6 +197,7 @@ impl<'rt> Trainer<'rt> {
         let thresh = ThreshExec::load(self.rt, model)?;
         let thresholds = {
             let _sp = crate::obs::span("train.threshold_refresh");
+            let _mem = crate::obs::mem_scope("train.threshold_refresh");
             thresh.run(self.rt, &params, cfg.hypers.sparsity)?
         };
         let mut step_exec = StepExec::load(self.rt, model, &cfg.optimizer, cfg.hypers, &thresholds)?;
@@ -227,8 +228,10 @@ impl<'rt> Trainer<'rt> {
             // the span and `step_seconds` share one measurement, so the
             // run summary and the metrics registry can never disagree
             let sp = crate::obs::span("train.step");
+            let step_mem = crate::obs::mem_scope("train.step");
             step_exec.run(self.rt, &mut state, &batch.tokens, &batch.labels, seed)?;
             let mets = StepMetrics::from_tail(&state.metrics(self.rt)?)?;
+            step_mem.end();
             step_seconds += sp.end();
             crate::obs::counter("train_steps_total", &[]).inc();
 

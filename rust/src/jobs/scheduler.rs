@@ -126,8 +126,17 @@ impl Scheduler {
         // id from its Welcome frame)
         let _trace = crate::obs::trace_scope(job.trace_id);
         let slice_span = crate::obs::span("jobs.slice");
+        // bracket the slice with the global heap window: its high-water
+        // mark feeds the job timeline and the mem-budget alert rule
+        // (slices are serialized per scheduler, so last-reset-wins is
+        // exact here)
+        crate::obs::mem::reset_window();
+        let mem = crate::obs::mem_scope("jobs.slice");
         let recorder = crate::obs::recorder::for_job(job.id);
         let result = catch_unwind(AssertUnwindSafe(|| self.slice_job(&job, server_stop)));
+        mem.end();
+        let slice_mem_peak = crate::obs::mem::window_peak();
+        recorder.note_mem_peak(slice_mem_peak);
         slice_span.end();
         let failed = |error: String| SliceOutcome {
             steps_done: job.steps_done,
@@ -175,6 +184,7 @@ impl Scheduler {
             runnable: updated.state == JobState::Queued,
             diverged: slice_diverged,
             mask_refresh: job.spec.mask_refresh,
+            mem_peak_bytes: slice_mem_peak,
         };
         let rules = crate::obs::alerts::evaluate_slice(&obs, &recorder.snapshot());
         let _ = self.queue.set_alerts(job.id, &rules);
@@ -416,6 +426,7 @@ impl Scheduler {
     ) -> Result<()> {
         let journal = self.queue.journal_path(job.id);
         let verify_span = crate::obs::span("jobs.replay_verify");
+        let verify_mem = crate::obs::mem_scope("jobs.replay_verify");
         let verify_t0 = std::time::Instant::now();
         let (header, records) = protocol::load_journal(&journal)?;
         let outcome =
@@ -430,6 +441,7 @@ impl Scheduler {
             }
         }
         verify_span.end();
+        verify_mem.end();
         if let Some(rec) = crate::obs::recorder::get(job.id) {
             rec.note_replay(verify_t0.elapsed().as_secs_f64());
         }

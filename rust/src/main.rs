@@ -14,6 +14,7 @@
 //!   worker           remote seed-sync replica: connect to a
 //!                    coordinator and serve leased training shards
 //!   memory-table     Table-4 memory model only (fast)
+//!   mem-report       measured heap watermarks vs the analytic model
 //!   inspect          print manifest/model/layout information
 //!   check-artifacts  compile every artifact and run ABI smoke checks
 
@@ -41,6 +42,13 @@ use sparse_mezo::util::cli::Args;
 use sparse_mezo::util::json::Json;
 use sparse_mezo::util::log;
 
+/// The tracking allocator (PR: measured memory observability). Inert —
+/// one relaxed load per hook — until `obs::mem::enable()` flips it on
+/// in `main`, and only this binary installs it: the library and its
+/// unit tests run on the system allocator untouched.
+#[global_allocator]
+static ALLOC: sparse_mezo::obs::mem::TrackingAlloc = sparse_mezo::obs::mem::TrackingAlloc;
+
 const USAGE: &str = "\
 sparse-mezo — Sparse MeZO reproduction (rust coordinator)
 
@@ -51,7 +59,8 @@ COMMANDS
   train           --model M --task T --optimizer O [--steps N --lr X
                   --eps X --sparsity X --seed S --eval-every N
                   --init-from CKPT --save CKPT --config FILE.toml
-                  --workers N --journal FILE --mask-refresh N]
+                  --workers N --journal FILE --mask-refresh N
+                  --mem-budget BYTES]
                   (--workers > 1 routes ZO runs through the seed-sync
                   data-parallel engine; bit-identical to --workers 1)
   eval            --model M --task T [--ckpt CKPT --icl-shots K]
@@ -70,7 +79,8 @@ COMMANDS
   serve           --model M [--port P --workers N --max-batch R
                   --flush-ms MS --max-adapters K --adapter-budget BYTES
                   --seed S --init-from CKPT --config FILE.toml
-                  --jobs-dir DIR --slice-steps N --listen-workers ADDR]
+                  --jobs-dir DIR --slice-steps N --listen-workers ADDR
+                  --mem-budget BYTES]
                   (loopback HTTP: GET /healthz, GET|POST /v1/adapters,
                   POST /v1/classify; adapters materialize from step
                   journals relative to the server's base parameters.
@@ -98,8 +108,8 @@ COMMANDS
                   --min-workers waits for that many before draining
                   top:    [--port P --watch SECS] live table of jobs on
                           a running server — state, step rate, loss,
-                          sparsity, active alerts — joined from
-                          /v1/jobs and /v1/jobs/{id}/timeline
+                          sparsity, peak heap bytes, active alerts —
+                          joined from /v1/jobs and /v1/jobs/{id}/timeline
   stats           [--port P --watch SECS]  fetch GET /statsz from a
                   running serve process on the loopback and pretty-print
                   counters, gauges and histogram quantiles (p50/p99);
@@ -111,8 +121,18 @@ COMMANDS
                   exchanges per-row losses + (seed, g) step records —
                   bit-identical to an in-process DP worker)
   memory-table    [--model M --out DIR]
+  mem-report      [--model M --steps N --quick]  run matched
+                  mezo/smezo/vanilla-smezo optimizer micro-arms under
+                  the tracking allocator and print each arm's measured
+                  heap peak next to the analytic Table-4 prediction;
+                  exits nonzero unless measured S-MeZO-EI < vanilla
   inspect         [--model M]
   check-artifacts
+
+  --mem-budget BYTES (train/serve): process heap budget measured by the
+                  tracking allocator; a job slice whose watermark
+                  exceeds it fires the mem-budget-exceeded alert
+                  (degraded /healthz until it clears)
 
 COMMON
   --artifacts DIR   artifact directory (default: artifacts)
@@ -124,6 +144,7 @@ ENVIRONMENT
 ";
 
 fn main() {
+    sparse_mezo::obs::mem::enable();
     let raw: Vec<String> = std::env::args().skip(1).collect();
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
         print!("{USAGE}");
@@ -136,7 +157,7 @@ fn main() {
 }
 
 fn dispatch(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["verbose", "fast", "no-test-eval"])?;
+    let args = Args::parse(raw, &["verbose", "fast", "no-test-eval", "quick"])?;
     if args.flag("verbose") {
         log::set_level(log::DEBUG);
     }
@@ -167,6 +188,7 @@ fn dispatch(raw: &[String]) -> Result<()> {
         "jobs" => cmd_jobs(&args, &artifacts),
         "worker" => cmd_worker(&args, &artifacts),
         "memory-table" => cmd_memory(&args, &artifacts),
+        "mem-report" => cmd_mem_report(&args, &artifacts),
         "inspect" => cmd_inspect(&args, &artifacts),
         "check-artifacts" => cmd_check(&artifacts),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -230,6 +252,8 @@ fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.workers = args.workers_or(cfg.workers)?;
     cfg.init_from = args.get("init-from").map(|s| s.to_string()).or(cfg.init_from);
     cfg.validate()?;
+    let mem_budget = args.u64_or("mem-budget", 0)?;
+    sparse_mezo::obs::mem::set_budget(mem_budget);
 
     let model_info = rt.model(&cfg.model)?.clone();
     let dataset = tasks::generate(&cfg.task, cfg.seed)?;
@@ -287,6 +311,19 @@ fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
         result.test.map(|t| format!("{:.3}", t.accuracy())).unwrap_or_else(|| "—".into()),
         result.sec_per_step
     );
+    if mem_budget > 0 {
+        let peak = sparse_mezo::obs::mem::peak_bytes();
+        if peak > mem_budget {
+            sparse_mezo::obs::alerts::fire(
+                0,
+                "mem-budget-exceeded",
+                format!("train heap peak {peak} bytes > budget {mem_budget} bytes"),
+            );
+            info!("mem-budget-exceeded: heap peak {peak} bytes > budget {mem_budget} bytes");
+        } else {
+            info!("heap peak {peak} bytes within --mem-budget {mem_budget}");
+        }
+    }
     Ok(())
 }
 
@@ -453,6 +490,11 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.slice_steps = args.usize_or("slice-steps", cfg.slice_steps)?;
     cfg.listen_workers = args.get("listen-workers").map(String::from).or(cfg.listen_workers);
     cfg.validate()?;
+    let mem_budget = args.u64_or("mem-budget", 0)?;
+    sparse_mezo::obs::mem::set_budget(mem_budget);
+    if mem_budget > 0 {
+        info!("mem budget: {mem_budget} bytes per job slice (alert rule mem-budget-exceeded)");
+    }
 
     let model_info = rt.model(&cfg.model)?.clone();
     let base = resolve_serve_base(&rt, &cfg)?;
@@ -559,8 +601,8 @@ fn render_jobs_top(client: &mut http::LoopbackClient) -> Result<()> {
         bail!("GET /v1/jobs answered {status}: {body}");
     }
     println!(
-        "{:>4}  {:<10}  {:<20}  {:>12}  {:>8}  {:>9}  {:>8}  alerts",
-        "id", "state", "name", "steps", "steps/s", "loss", "sparsity"
+        "{:>4}  {:<10}  {:<20}  {:>12}  {:>8}  {:>9}  {:>8}  {:>10}  alerts",
+        "id", "state", "name", "steps", "steps/s", "loss", "sparsity", "peak MiB"
     );
     for job in body.req("jobs")?.as_arr()? {
         let id = job.req("id")?.as_usize()?;
@@ -574,11 +616,20 @@ fn render_jobs_top(client: &mut http::LoopbackClient) -> Result<()> {
         // per-job timeline: live loss / sparsity / step-rate columns
         let (ts, tl) = client.request("GET", &format!("/v1/jobs/{id}/timeline"), None)?;
         let (mut rate, mut loss, mut sparsity) = (String::new(), String::new(), String::new());
+        let mut peak = String::new();
         if ts == 200 {
             if let Ok(t) = tl.req("timings") {
                 let median = t.req("median_step_seconds")?.as_f64()?;
                 if median > 0.0 {
                     rate = format!("{:.1}", 1.0 / median);
+                }
+            }
+            // per-job heap watermark (0 until a slice ran under the
+            // tracking allocator — leave the column blank then)
+            if let Some(m) = tl.get("mem") {
+                let bytes = m.req("peak_bytes")?.as_f64()?;
+                if bytes > 0.0 {
+                    peak = format!("{:.1}", bytes / (1024.0 * 1024.0));
                 }
             }
             if let Some(Json::Obj(latest)) = tl.get("latest") {
@@ -595,7 +646,7 @@ fn render_jobs_top(client: &mut http::LoopbackClient) -> Result<()> {
             }
         }
         println!(
-            "{:>4}  {:<10}  {:<20}  {:>5}/{:<6}  {:>8}  {:>9}  {:>8}  {}",
+            "{:>4}  {:<10}  {:<20}  {:>5}/{:<6}  {:>8}  {:>9}  {:>8}  {:>10}  {}",
             id,
             job.req("state")?.as_str()?,
             spec.req("name")?.as_str()?,
@@ -604,6 +655,7 @@ fn render_jobs_top(client: &mut http::LoopbackClient) -> Result<()> {
             rate,
             loss,
             sparsity,
+            peak,
             alerts.join(","),
         );
     }
@@ -841,6 +893,60 @@ fn cmd_memory(args: &Args, artifacts: &PathBuf) -> Result<()> {
     for (name, b) in rows {
         println!("{name:<22} {:>8.1} GB", b.gb());
     }
+    Ok(())
+}
+
+/// `mem-report`: the measured side of the paper's memory table. Runs
+/// the three matched optimizer micro-arms (MeZO, S-MeZO-EI, vanilla
+/// S-MeZO) at the model's parameter count under this binary's tracking
+/// allocator and prints each arm's heap watermark next to the analytic
+/// `MemBreakdown` prediction; fails unless the efficient implementation
+/// measures below vanilla (the §3.4 inference-level-memory claim).
+fn cmd_mem_report(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let model = rt.model(&args.str_or("model", "llama_tiny"))?.clone();
+    let steps = if args.flag("quick") { 2 } else { args.usize_or("steps", 6)? };
+    info!(
+        "mem-report: {} | {} params | {} probe steps per arm",
+        model.name, model.n_params, steps
+    );
+    let rows = sparse_mezo::coordinator::memory::measured_rows(&model, steps);
+    println!(
+        "{:<18} {:>16} {:>18} {:>20}",
+        "method", "measured peak B", "analytic total B", "analytic mask+copy B"
+    );
+    for r in &rows {
+        println!(
+            "{:<18} {:>16} {:>18} {:>20}",
+            r.name,
+            r.measured_peak,
+            r.analytic.total(),
+            r.analytic.mask + r.analytic.perturbed_copy
+        );
+    }
+    let peak = |name: &str| -> Result<u64> {
+        rows.iter()
+            .find(|r| r.name == name)
+            .map(|r| r.measured_peak)
+            .ok_or_else(|| anyhow::anyhow!("missing row {name}"))
+    };
+    let ei = peak("S-MeZO-EI")?;
+    let vanilla = peak("S-MeZO (vanilla)")?;
+    if ei == 0 || vanilla == 0 {
+        bail!("tracking allocator reported a zero watermark — is it installed and enabled?");
+    }
+    if ei >= vanilla {
+        bail!(
+            "check FAILED: measured S-MeZO-EI peak {ei} B >= vanilla {vanilla} B \
+             (the stored-mask + perturbed-copy overhead should separate them)"
+        );
+    }
+    println!(
+        "check: measured S-MeZO-EI peak {ei} B < vanilla S-MeZO peak {vanilla} B \
+         (saves {} B; analytic prediction {} B) OK",
+        vanilla - ei,
+        model.n_params / 8 + model.n_params * 4
+    );
     Ok(())
 }
 

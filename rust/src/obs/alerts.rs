@@ -28,6 +28,8 @@
 //! | `worker-flap`     | ≥2 lost-worker events charged to the job            |
 //! | `mask-frozen`     | `mask_refresh` is on but the last two refresh       |
 //! |                   | epochs measured zero mask churn                     |
+//! | `mem-budget-exceeded` | a `--mem-budget BYTES` is set and the slice's   |
+//! |                   | heap watermark ([`crate::obs::mem`]) went past it   |
 
 use std::collections::BTreeMap;
 use std::sync::{Mutex, OnceLock};
@@ -159,6 +161,8 @@ pub struct SliceObs {
     pub diverged: bool,
     /// the job spec's `mask_refresh` (0 = thresholds fixed at init)
     pub mask_refresh: usize,
+    /// the slice's heap watermark in bytes (0 = tracking allocator off)
+    pub mem_peak_bytes: u64,
 }
 
 /// Run the rule catalog against one slice's outcome plus the job's
@@ -214,6 +218,25 @@ pub fn evaluate_slice(obs: &SliceObs, snap: &Snapshot) -> Vec<&'static str> {
         );
     }
 
+    // mem-budget-exceeded: an operator-supplied heap budget is in force
+    // and the slice's measured watermark went past it. Only meaningful
+    // with the tracking allocator installed (watermark 0 never fires).
+    let budget = crate::obs::mem::budget();
+    if budget > 0 {
+        if obs.mem_peak_bytes > budget {
+            fire(
+                job,
+                "mem-budget-exceeded",
+                format!(
+                    "slice heap peak {} bytes > budget {} bytes",
+                    obs.mem_peak_bytes, budget
+                ),
+            );
+        } else if obs.mem_peak_bytes > 0 {
+            clear(job, "mem-budget-exceeded");
+        }
+    }
+
     // mask-frozen: refreshes are on but the mask stopped moving
     if obs.mask_refresh > 0 && snap.churn_history.len() >= FROZEN_EPOCHS {
         let tail = &snap.churn_history[snap.churn_history.len() - FROZEN_EPOCHS..];
@@ -247,8 +270,14 @@ mod tests {
     fn stall_fires_on_empty_slice_and_clears_on_progress() {
         let job = 9_001;
         let rec = FlightRecorder::new(4096);
-        let obs =
-            SliceObs { job, committed: 0, runnable: true, diverged: false, mask_refresh: 0 };
+        let obs = SliceObs {
+            job,
+            committed: 0,
+            runnable: true,
+            diverged: false,
+            mask_refresh: 0,
+            mem_peak_bytes: 0,
+        };
         let rules = evaluate_slice(&obs, &snap_of(&rec));
         assert!(rules.contains(&"stall"), "{rules:?}");
         assert!(active_for(job).iter().any(|a| a.rule == "stall"));
@@ -270,8 +299,14 @@ mod tests {
         for step in 0..DIVERGENCE_WARMUP as u32 {
             rec.record_step(step, 0.7, 0.1, None, 8, 0);
         }
-        let obs =
-            SliceObs { job, committed: 8, runnable: true, diverged: false, mask_refresh: 0 };
+        let obs = SliceObs {
+            job,
+            committed: 8,
+            runnable: true,
+            diverged: false,
+            mask_refresh: 0,
+            mem_peak_bytes: 0,
+        };
         assert!(evaluate_slice(&obs, &snap_of(&rec)).is_empty());
         for step in 8..16 {
             rec.record_step(step, 6.0, 0.1, None, 8, 0);
@@ -291,8 +326,14 @@ mod tests {
         rec.record_step(0, 0.5, 0.1, Some(&m), 4, 0);
         rec.record_step(1, 0.5, 0.1, Some(&m), 4, 1); // zero churn
         rec.record_step(2, 0.5, 0.1, Some(&m), 4, 2); // zero churn
-        let obs =
-            SliceObs { job, committed: 3, runnable: true, diverged: false, mask_refresh: 1 };
+        let obs = SliceObs {
+            job,
+            committed: 3,
+            runnable: true,
+            diverged: false,
+            mask_refresh: 1,
+            mem_peak_bytes: 0,
+        };
         let rules = evaluate_slice(&obs, &snap_of(&rec));
         assert!(rules.contains(&"worker-flap"), "{rules:?}");
         assert!(rules.contains(&"mask-frozen"), "{rules:?}");
@@ -302,6 +343,38 @@ mod tests {
 
     fn active_count_for_test(job: u64) -> usize {
         active_for(job).len()
+    }
+
+    #[test]
+    fn mem_budget_rule_fires_and_clears() {
+        let _serial = crate::obs::mem::BUDGET_TEST_LOCK.lock().unwrap();
+        let job = 9_005;
+        let rec = FlightRecorder::new(4096);
+        let base = SliceObs {
+            job,
+            committed: 3,
+            runnable: true,
+            diverged: false,
+            mask_refresh: 0,
+            mem_peak_bytes: 0,
+        };
+        // no budget set: watermark past anything still never fires
+        crate::obs::mem::set_budget(0);
+        let obs = SliceObs { mem_peak_bytes: u64::MAX, ..base };
+        assert!(evaluate_slice(&obs, &snap_of(&rec)).is_empty());
+        // budget in force: over fires, back under clears to explicit 0
+        crate::obs::mem::set_budget(1_000);
+        let obs = SliceObs { mem_peak_bytes: 2_000, ..base };
+        let rules = evaluate_slice(&obs, &snap_of(&rec));
+        assert!(rules.contains(&"mem-budget-exceeded"), "{rules:?}");
+        let obs = SliceObs { mem_peak_bytes: 500, ..base };
+        let rules = evaluate_slice(&obs, &snap_of(&rec));
+        assert!(!rules.contains(&"mem-budget-exceeded"), "{rules:?}");
+        // a 0 watermark (allocator off) neither fires nor clears
+        let obs = SliceObs { mem_peak_bytes: 0, ..base };
+        assert!(evaluate_slice(&obs, &snap_of(&rec)).is_empty());
+        crate::obs::mem::set_budget(0);
+        clear_job(job);
     }
 
     #[test]

@@ -1,0 +1,584 @@
+//! Measured memory observability: a tracking allocator with per-phase
+//! peak watermarks.
+//!
+//! The paper's headline *systems* claim is §3.4: the memory-optimized
+//! sparse-masking implementation needs only **inference-level memory**
+//! (vanilla S-MeZO additionally stores a 1-bit mask and a perturbed
+//! parameter copy; the efficient implementation recomputes the mask and
+//! perturbs in place via seed replay). The analytic side of that claim
+//! lives in [`crate::coordinator::memory`]; this module is the
+//! *measured* side:
+//!
+//! - [`TrackingAlloc`] — a std-only `#[global_allocator]` wrapper around
+//!   [`System`] maintaining live-bytes, a monotone peak watermark and
+//!   alloc/dealloc counters on relaxed atomics. It is installed by
+//!   `main.rs` (and the bench/integration-test binaries that opt in);
+//!   library unit tests never see it, and even when installed every
+//!   hook is a no-op until [`enable`] flips one relaxed flag.
+//! - [`mem_scope`] — thread-scoped *phase attribution* mirroring
+//!   [`crate::obs::span`]: while a scope is active, this thread's
+//!   allocations account against a named phase (`train.step`,
+//!   `jobs.slice`, `serve.batch`, ...) out of the fixed [`PHASES`]
+//!   catalog, so `/metrics` can answer *which stage* of a run owns the
+//!   high-water mark. The allocation path must not allocate, so the
+//!   per-phase table is a fixed static array of atomics — never the
+//!   registry's locked maps.
+//! - [`reset_window`] / [`window_peak`] — a resettable global high-water
+//!   window: the job scheduler brackets each slice with it to feed
+//!   per-job peaks into the flight-recorder timeline and the
+//!   `mem-budget-exceeded` alert rule; `mem-report` brackets each
+//!   measured optimizer arm with it.
+//! - [`process_rss_bytes`] — `VmRSS`/`VmHWM` from `/proc/self/status`
+//!   (graceful zeros off-Linux), the OS cross-check on the allocator's
+//!   own accounting.
+//! - [`sync_registry`] — copies everything above into the global
+//!   metrics registry (`mem_live_bytes`, `mem_peak_bytes{phase}`,
+//!   `mem_allocs_total`, `process_resident_bytes`, ...) at scrape time.
+//!
+//! **The hard invariant holds here too:** tracking is a pure read-side
+//! overlay — atomics and a thread-local integer only. It consumes no
+//! PRNG state, never writes into journals, and an instrumented run is
+//! bit-identical to an uninstrumented one (asserted in
+//! `rust/tests/obs.rs`).
+//!
+//! Accounting caveats, by design: frees are attributed to the *current*
+//! phase of the freeing thread (a cross-thread or cross-phase free
+//! decrements that phase's live floor-clamped at zero, so watermarks
+//! never underflow), and the global window is last-reset-wins. Both
+//! approximations are irrelevant to peaks, which only monotone-increase
+//! between resets.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64};
+
+/// The phase catalog. Fixed at compile time because the allocation path
+/// may not allocate (or lock) to look a phase up; [`mem_scope`] with a
+/// name outside this list attributes to `"other"` (index 0).
+pub const PHASES: [&str; 11] = [
+    "other",
+    "train.step",
+    "train.threshold_refresh",
+    "dp.allreduce",
+    "jobs.slice",
+    "jobs.replay_verify",
+    "serve.batch",
+    "transport.session",
+    "report.mezo",
+    "report.smezo",
+    "report.smezo_vanilla",
+];
+
+const N_PHASES: usize = PHASES.len();
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static LIVE: AtomicI64 = AtomicI64::new(0);
+static PEAK: AtomicI64 = AtomicI64::new(0);
+static WINDOW: AtomicI64 = AtomicI64::new(0);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+static BUDGET: AtomicU64 = AtomicU64::new(0);
+static PHASE_LIVE: [AtomicI64; N_PHASES] = [const { AtomicI64::new(0) }; N_PHASES];
+static PHASE_PEAK: [AtomicI64; N_PHASES] = [const { AtomicI64::new(0) }; N_PHASES];
+
+thread_local! {
+    static CUR_PHASE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Turn tracking on for this process. Before this, every allocator hook
+/// is one relaxed load; there is deliberately no `disable` — watermarks
+/// are only meaningful over an uninterrupted window.
+pub fn enable() {
+    ENABLED.store(true, Relaxed);
+}
+
+/// Whether [`enable`] has been called.
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Decrement clamped at zero: a free racing a phase switch (or arriving
+/// from a thread that never allocated) must never wrap a watermark.
+fn sub_floor(a: &AtomicI64, sz: i64) {
+    let mut cur = a.load(Relaxed);
+    loop {
+        let next = (cur - sz).max(0);
+        match a.compare_exchange_weak(cur, next, Relaxed, Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn current_phase_index() -> usize {
+    // try_with: the TLS slot may already be torn down during thread
+    // exit while the final frees still route through the allocator
+    CUR_PHASE.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Account `size` freshly-allocated bytes. Called by [`TrackingAlloc`];
+/// public so tests without an installed allocator can simulate traffic.
+/// Must never allocate: atomics and one thread-local integer only.
+pub fn record_alloc(size: usize) {
+    if !ENABLED.load(Relaxed) {
+        return;
+    }
+    let sz = size as i64;
+    ALLOCS.fetch_add(1, Relaxed);
+    let live = LIVE.fetch_add(sz, Relaxed) + sz;
+    PEAK.fetch_max(live, Relaxed);
+    WINDOW.fetch_max(live, Relaxed);
+    let i = current_phase_index();
+    let pl = PHASE_LIVE[i].fetch_add(sz, Relaxed) + sz;
+    PHASE_PEAK[i].fetch_max(pl, Relaxed);
+}
+
+/// Account `size` freed bytes (floor-clamped; see module docs). Public
+/// for the same simulation purposes as [`record_alloc`].
+pub fn record_dealloc(size: usize) {
+    if !ENABLED.load(Relaxed) {
+        return;
+    }
+    let sz = size as i64;
+    DEALLOCS.fetch_add(1, Relaxed);
+    sub_floor(&LIVE, sz);
+    sub_floor(&PHASE_LIVE[current_phase_index()], sz);
+}
+
+/// Bytes currently live (allocated minus freed since [`enable`]).
+pub fn live_bytes() -> u64 {
+    LIVE.load(Relaxed).max(0) as u64
+}
+
+/// The process-lifetime high-water mark of [`live_bytes`].
+pub fn peak_bytes() -> u64 {
+    PEAK.load(Relaxed).max(0) as u64
+}
+
+/// Allocations observed since [`enable`].
+pub fn allocs() -> u64 {
+    ALLOCS.load(Relaxed)
+}
+
+/// Deallocations observed since [`enable`].
+pub fn deallocs() -> u64 {
+    DEALLOCS.load(Relaxed)
+}
+
+fn phase_index(name: &str) -> usize {
+    PHASES.iter().position(|p| *p == name).unwrap_or(0)
+}
+
+/// The live bytes currently attributed to `name` (0 for unknown names —
+/// they alias `"other"`).
+pub fn phase_live(name: &str) -> u64 {
+    PHASE_LIVE[phase_index(name)].load(Relaxed).max(0) as u64
+}
+
+/// The high-water mark of [`phase_live`] for `name`.
+pub fn phase_peak(name: &str) -> u64 {
+    PHASE_PEAK[phase_index(name)].load(Relaxed).max(0) as u64
+}
+
+/// The phase this thread's allocations currently account against.
+pub fn current_phase() -> &'static str {
+    PHASES[current_phase_index()]
+}
+
+/// Reset the global measurement window to the current live footprint.
+/// [`window_peak`] then reports the high-water mark since this call.
+/// Last-reset-wins across threads; callers that need isolation (the job
+/// scheduler, `mem-report`) serialize their measured sections anyway.
+pub fn reset_window() {
+    WINDOW.store(LIVE.load(Relaxed).max(0), Relaxed);
+}
+
+/// The high-water mark of [`live_bytes`] since the last [`reset_window`]
+/// (or since [`enable`], if never reset).
+pub fn window_peak() -> u64 {
+    WINDOW.load(Relaxed).max(0) as u64
+}
+
+/// Reset every watermark (global peak, window, per-phase peaks) to the
+/// corresponding *current* live value. `mem-report` calls this between
+/// measured optimizer arms so each arm's peak is its own.
+pub fn reset_watermarks() {
+    let live = LIVE.load(Relaxed).max(0);
+    PEAK.store(live, Relaxed);
+    WINDOW.store(live, Relaxed);
+    for i in 0..N_PHASES {
+        PHASE_PEAK[i].store(PHASE_LIVE[i].load(Relaxed).max(0), Relaxed);
+    }
+}
+
+/// Set the process memory budget in bytes (0 disables). Wired from
+/// `--mem-budget` on `serve`/`train`; the scheduler compares each job
+/// slice's [`window_peak`] against it and fires the
+/// `mem-budget-exceeded` alert rule on breach.
+pub fn set_budget(bytes: u64) {
+    BUDGET.store(bytes, Relaxed);
+}
+
+/// The configured memory budget (0 = none).
+pub fn budget() -> u64 {
+    BUDGET.load(Relaxed)
+}
+
+/// Serializes tests — across modules — that set the global [`budget`]
+/// (the alerts rule-catalog test and [`tests::budget_roundtrip`]).
+#[cfg(test)]
+pub(crate) static BUDGET_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+// ---------------------------------------------------------------------------
+// phase scopes
+// ---------------------------------------------------------------------------
+
+/// RAII guard from [`mem_scope`]: restores the thread's previous phase
+/// on drop (or explicit [`MemScope::end`]).
+pub struct MemScope {
+    idx: usize,
+    prev: usize,
+    done: bool,
+}
+
+/// Attribute this thread's allocations to phase `name` until the guard
+/// drops. Mirrors [`crate::obs::span`] and nests the same way: the
+/// innermost active scope wins, and dropping restores the enclosing
+/// phase. Names outside [`PHASES`] attribute to `"other"`.
+pub fn mem_scope(name: &'static str) -> MemScope {
+    let idx = phase_index(name);
+    let prev = CUR_PHASE.with(|c| {
+        let prev = c.get();
+        c.set(idx);
+        prev
+    });
+    MemScope { idx, prev, done: false }
+}
+
+impl MemScope {
+    /// Finish now; returns the phase's high-water mark (bytes) as of
+    /// scope exit — the same value `mem_peak_bytes{phase="<name>"}`
+    /// exports.
+    pub fn end(mut self) -> u64 {
+        self.finish()
+    }
+
+    fn finish(&mut self) -> u64 {
+        if self.done {
+            return 0;
+        }
+        self.done = true;
+        CUR_PHASE.with(|c| c.set(self.prev));
+        PHASE_PEAK[self.idx].load(Relaxed).max(0) as u64
+    }
+}
+
+impl Drop for MemScope {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the allocator
+// ---------------------------------------------------------------------------
+
+/// The tracking `#[global_allocator]`: [`System`] plus the accounting
+/// hooks above. Declared (not here — in `main.rs` and the opt-in bench
+/// and integration-test binaries) as:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: sparse_mezo::obs::mem::TrackingAlloc =
+///     sparse_mezo::obs::mem::TrackingAlloc;
+/// ```
+pub struct TrackingAlloc;
+
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            record_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            record_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        record_dealloc(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                record_alloc(new_size - layout.size());
+            } else {
+                record_dealloc(layout.size() - new_size);
+            }
+        }
+        p
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OS cross-check + registry sync
+// ---------------------------------------------------------------------------
+
+/// Parse a `Vm*: <n> kB` line out of `/proc/self/status` text; 0 when
+/// the key is absent or malformed.
+fn parse_vm_kib(status: &str, key: &str) -> u64 {
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let rest = rest.trim_start_matches(':').trim();
+            let num = rest.split_whitespace().next().unwrap_or("0");
+            return num.parse::<u64>().unwrap_or(0) * 1024;
+        }
+    }
+    0
+}
+
+/// `(VmRSS, VmHWM)` in bytes from `/proc/self/status` — the OS view of
+/// resident and peak-resident memory, cross-checking the allocator's
+/// own accounting. Graceful `(0, 0)` off-Linux or on any read error.
+pub fn process_rss_bytes() -> (u64, u64) {
+    match std::fs::read_to_string("/proc/self/status") {
+        Ok(s) => (parse_vm_kib(&s, "VmRSS"), parse_vm_kib(&s, "VmHWM")),
+        Err(_) => (0, 0),
+    }
+}
+
+/// Sync an externally-maintained monotone total into a registry counter
+/// (counters only expose `add`, so bridge by the difference).
+fn sync_total(name: &str, total: u64) {
+    let c = super::counter(name, &[]);
+    let cur = c.get();
+    c.add(total.saturating_sub(cur));
+}
+
+/// Copy the allocator stats and the `/proc` cross-check into the global
+/// metrics registry. Called at scrape time (`/metrics`, `/statsz`,
+/// `/healthz` all route through `sync_gauges`) — the allocation path
+/// itself never touches the registry's locks.
+pub fn sync_registry() {
+    super::gauge("mem_live_bytes", &[]).set(live_bytes() as i64);
+    super::gauge("mem_peak_bytes", &[("phase", "total")]).set(peak_bytes() as i64);
+    for (i, name) in PHASES.iter().enumerate() {
+        let peak = PHASE_PEAK[i].load(Relaxed);
+        if peak > 0 {
+            super::gauge("mem_peak_bytes", &[("phase", name)]).set(peak);
+        }
+    }
+    sync_total("mem_allocs_total", allocs());
+    sync_total("mem_deallocs_total", deallocs());
+    let (rss, hwm) = process_rss_bytes();
+    super::gauge("process_resident_bytes", &[]).set(rss as i64);
+    super::gauge("process_peak_rss_bytes", &[]).set(hwm as i64);
+}
+
+/// The allocator stats as one JSON object — the `mem` section the
+/// `BENCH_*.json` snapshots embed next to their `obs` section: live and
+/// peak totals, alloc/dealloc counts, and every nonzero per-phase peak.
+pub fn snapshot_json() -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let phases = Json::Obj(
+        PHASES
+            .iter()
+            .enumerate()
+            .filter_map(|(i, name)| {
+                let peak = PHASE_PEAK[i].load(Relaxed);
+                (peak > 0).then(|| (name.to_string(), Json::Num(peak as f64)))
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("live_bytes", Json::Num(live_bytes() as f64)),
+        ("peak_bytes", Json::Num(peak_bytes() as f64)),
+        ("allocs_total", Json::Num(allocs() as f64)),
+        ("deallocs_total", Json::Num(deallocs() as f64)),
+        ("peak_bytes_by_phase", phases),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// The accounting statics are process-global; tests that assert on
+    /// them must not interleave. (No allocator is installed in the lib
+    /// test binary, so *only* these tests move the counters.)
+    static MEM_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn scopes_attribute_allocs_and_frees_to_phases() {
+        let _serial = MEM_TEST_LOCK.lock().unwrap();
+        enable();
+        let live0 = live_bytes();
+        let mezo0 = phase_live("report.mezo");
+        let smezo0 = phase_live("report.smezo");
+        {
+            let outer = mem_scope("report.mezo");
+            assert_eq!(current_phase(), "report.mezo");
+            record_alloc(1_000);
+            {
+                let inner = mem_scope("report.smezo");
+                assert_eq!(current_phase(), "report.smezo");
+                record_alloc(500);
+                // end() reports the phase's (cumulative) high-water mark
+                assert!(inner.end() >= smezo0 + 500);
+            }
+            // nested scope ended -> attribution returns to the outer phase
+            assert_eq!(current_phase(), "report.mezo");
+            record_alloc(200);
+            record_dealloc(300);
+            assert!(outer.end() >= mezo0 + 1_200);
+        }
+        assert_eq!(current_phase(), "other");
+        assert_eq!(phase_live("report.mezo"), mezo0 + 900);
+        assert_eq!(phase_live("report.smezo"), smezo0 + 500);
+        assert_eq!(live_bytes(), live0 + 1_400);
+        assert!(peak_bytes() >= live0 + 1_500);
+        // clean up the live counters for the other tests
+        let m = mem_scope("report.mezo");
+        record_dealloc(900);
+        drop(m);
+        let s = mem_scope("report.smezo");
+        record_dealloc(500);
+        drop(s);
+    }
+
+    #[test]
+    fn cross_thread_frees_never_underflow() {
+        let _serial = MEM_TEST_LOCK.lock().unwrap();
+        enable();
+        let live0 = live_bytes();
+        // a thread that frees more than its phase ever allocated (the
+        // cross-thread-free pattern: allocated under one phase, freed
+        // under another)
+        std::thread::spawn(|| {
+            let _scope = mem_scope("report.smezo_vanilla");
+            record_dealloc(1 << 40);
+            record_dealloc(1 << 40);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(phase_live("report.smezo_vanilla"), 0, "phase live wrapped");
+        // the global floor clamps too (live0 may already be 0)
+        assert!(live_bytes() <= live0);
+        assert_eq!(live_bytes(), 0);
+    }
+
+    #[test]
+    fn window_measures_between_resets() {
+        let _serial = MEM_TEST_LOCK.lock().unwrap();
+        enable();
+        reset_window();
+        let base = live_bytes();
+        record_alloc(10_000);
+        record_dealloc(10_000);
+        record_alloc(4_000);
+        assert_eq!(window_peak(), base + 10_000);
+        reset_window();
+        assert_eq!(window_peak(), base + 4_000);
+        record_dealloc(4_000);
+        assert_eq!(window_peak(), base + 4_000, "window is a high-water mark");
+    }
+
+    #[test]
+    fn reset_watermarks_rebases_peaks_on_live() {
+        let _serial = MEM_TEST_LOCK.lock().unwrap();
+        enable();
+        {
+            let _scope = mem_scope("report.mezo");
+            record_alloc(2_000);
+            record_dealloc(2_000);
+        }
+        assert!(phase_peak("report.mezo") >= 2_000);
+        reset_watermarks();
+        assert_eq!(phase_peak("report.mezo"), phase_live("report.mezo"));
+        assert_eq!(peak_bytes(), live_bytes());
+        assert_eq!(window_peak(), live_bytes());
+    }
+
+    #[test]
+    fn unknown_phase_aliases_other() {
+        let _serial = MEM_TEST_LOCK.lock().unwrap();
+        enable();
+        let other0 = phase_live("other");
+        {
+            let _scope = mem_scope("no.such.phase");
+            assert_eq!(current_phase(), "other");
+            record_alloc(64);
+        }
+        assert_eq!(phase_live("other"), other0 + 64);
+        let m = mem_scope("no.such.phase");
+        record_dealloc(64);
+        drop(m);
+    }
+
+    #[test]
+    fn budget_roundtrip() {
+        let _serial = BUDGET_TEST_LOCK.lock().unwrap();
+        assert_eq!(budget(), 0);
+        set_budget(123_456_789);
+        assert_eq!(budget(), 123_456_789);
+        set_budget(0);
+        assert_eq!(budget(), 0);
+    }
+
+    #[test]
+    fn proc_status_fixture_parses() {
+        let fixture = "Name:\tsparse-mezo\nVmPeak:\t  202404 kB\nVmRSS:\t   51200 kB\nVmHWM:\t   61440 kB\n";
+        assert_eq!(parse_vm_kib(fixture, "VmRSS"), 51_200 * 1024);
+        assert_eq!(parse_vm_kib(fixture, "VmHWM"), 61_440 * 1024);
+        assert_eq!(parse_vm_kib(fixture, "VmSwap"), 0);
+        assert_eq!(parse_vm_kib("", "VmRSS"), 0);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn proc_status_reads_nonzero_rss_on_linux() {
+        let (rss, hwm) = process_rss_bytes();
+        assert!(rss > 0, "VmRSS should be nonzero on Linux");
+        assert!(hwm >= rss / 2, "VmHWM {hwm} implausible vs VmRSS {rss}");
+    }
+
+    #[test]
+    fn sync_registry_populates_gauges_and_counters() {
+        let _serial = MEM_TEST_LOCK.lock().unwrap();
+        enable();
+        {
+            let _scope = mem_scope("report.smezo");
+            record_alloc(4_096);
+            record_dealloc(4_096);
+        }
+        sync_registry();
+        let text = crate::obs::render_prometheus();
+        assert!(text.lines().any(|l| l.starts_with("mem_live_bytes ")), "{text}");
+        assert!(
+            text.contains("mem_peak_bytes{phase=\"total\"}"),
+            "missing total peak series"
+        );
+        assert!(
+            text.contains("mem_peak_bytes{phase=\"report.smezo\"}"),
+            "missing per-phase peak series"
+        );
+        assert!(text.lines().any(|l| l.starts_with("mem_allocs_total ")), "{text}");
+        assert!(text.lines().any(|l| l.starts_with("process_resident_bytes ")), "{text}");
+        assert!(text.lines().any(|l| l.starts_with("process_peak_rss_bytes ")), "{text}");
+        // the counter bridge is monotone: syncing twice never regresses
+        let allocs_before = crate::obs::counter("mem_allocs_total", &[]).get();
+        sync_registry();
+        assert!(crate::obs::counter("mem_allocs_total", &[]).get() >= allocs_before);
+    }
+}

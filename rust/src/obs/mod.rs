@@ -22,6 +22,12 @@
 //! - [`recorder`] / [`alerts`] — the per-job flight recorder (bounded
 //!   step-telemetry history) and the slice-boundary alert rules built
 //!   on top of this registry.
+//! - [`mem`] — measured memory: the tracking `#[global_allocator]`
+//!   (live-bytes, peak watermark, alloc/dealloc counters) with
+//!   [`mem_scope`] phase attribution mirroring [`span`], the
+//!   `/proc/self/status` RSS cross-check, and the `--mem-budget` alert
+//!   input — the measured side of the paper's §3.4 inference-level-
+//!   memory claim.
 //! - [`render_prometheus`] — the Prometheus text exposition of the
 //!   global registry, served by `GET /metrics` on the loopback server
 //!   ([`crate::serve::http`]); [`snapshot_json`] is the same data with
@@ -46,7 +52,10 @@ use crate::util::json::Json;
 use crate::util::log::JsonlWriter;
 
 pub mod alerts;
+pub mod mem;
 pub mod recorder;
+
+pub use mem::{mem_scope, MemScope};
 
 // ---------------------------------------------------------------------------
 // primitives
@@ -465,6 +474,12 @@ fn help_for(name: &str) -> &'static str {
         "alerts_cleared_total" => "Alert rule clearances, by rule.",
         "recorder_steps_total" => "Steps captured by per-job flight recorders.",
         "recorder_jobs" => "Jobs with a resident flight recorder.",
+        "mem_live_bytes" => "Heap bytes currently live per the tracking allocator.",
+        "mem_peak_bytes" => "High-water mark of live heap bytes, by phase (total = process-wide).",
+        "mem_allocs_total" => "Heap allocations observed by the tracking allocator.",
+        "mem_deallocs_total" => "Heap deallocations observed by the tracking allocator.",
+        "process_resident_bytes" => "Resident set size (VmRSS) from /proc/self/status; 0 off-Linux.",
+        "process_peak_rss_bytes" => "Peak resident set size (VmHWM) from /proc/self/status; 0 off-Linux.",
         "smezo_build_info" => "Build metadata as labels; value is always 1.",
         "smezo_uptime_seconds" => "Seconds since this process initialized its registry.",
         "train_last_loss_milli" => "Most recent training loss, in thousandths (serial trainer).",

@@ -111,6 +111,9 @@ struct Inner {
     replay_seconds: Vec<f64>,
     step_intervals: Vec<f64>,
     last_step_at: Option<Instant>,
+    /// highest per-slice heap watermark observed for this job (bytes,
+    /// from [`crate::obs::mem::window_peak`]; 0 when tracking is off)
+    mem_peak_bytes: u64,
 }
 
 /// Point-in-time copy of a recorder's state (alert evaluation, tests).
@@ -146,6 +149,9 @@ pub struct Snapshot {
     pub median_step_seconds: f64,
     /// seconds since the last recorded step, if any
     pub last_step_age_seconds: Option<f64>,
+    /// highest per-slice heap watermark observed for this job (bytes;
+    /// 0 when the tracking allocator is not installed)
+    pub mem_peak_bytes: u64,
 }
 
 impl Snapshot {
@@ -217,6 +223,7 @@ impl FlightRecorder {
                 replay_seconds: Vec::new(),
                 step_intervals: Vec::new(),
                 last_step_at: None,
+                mem_peak_bytes: 0,
             }),
         }
     }
@@ -322,6 +329,14 @@ impl FlightRecorder {
         i.workers.entry(rank).or_insert(0);
     }
 
+    /// Fold one slice's heap watermark into the job's running peak
+    /// (bytes; typically [`crate::obs::mem::window_peak`] measured over
+    /// the slice). A 0 — tracking allocator not installed — is a no-op.
+    pub fn note_mem_peak(&self, bytes: u64) {
+        let mut i = self.inner.lock().unwrap();
+        i.mem_peak_bytes = i.mem_peak_bytes.max(bytes);
+    }
+
     /// Point-in-time copy (history + the exact latest step appended).
     pub fn snapshot(&self) -> Snapshot {
         let i = self.inner.lock().unwrap();
@@ -354,6 +369,7 @@ impl FlightRecorder {
             replay_seconds: i.replay_seconds.clone(),
             median_step_seconds: median,
             last_step_age_seconds: i.last_step_at.map(|t| t.elapsed().as_secs_f64()),
+            mem_peak_bytes: i.mem_peak_bytes,
         }
     }
 
@@ -422,6 +438,13 @@ impl FlightRecorder {
             ("slices", Json::Num(snap.slices as f64)),
             ("churn_by_epoch", churn),
             ("timings", timings),
+            (
+                "mem",
+                Json::obj(vec![(
+                    "peak_bytes",
+                    Json::Num(snap.mem_peak_bytes as f64),
+                )]),
+            ),
         ])
     }
 }

@@ -399,9 +399,11 @@ impl<'rt> DpTrainer<'rt> {
             let batch = loader.next_batch();
             let seed = (cfg.seed as u32, t as u32);
             let sp = crate::obs::span("dp.step");
+            let _mem = crate::obs::mem_scope("train.step");
 
             if self.mask_refresh > 0 && t > 0 && t % self.mask_refresh == 0 {
                 let _rsp = crate::obs::span("train.threshold_refresh");
+                let _rmem = crate::obs::mem_scope("train.threshold_refresh");
                 let master = replicas[0].lock().unwrap();
                 thresholds = backend.thresholds(model, &master.0, cfg.hypers.sparsity)?;
                 mask_epoch += 1;
@@ -450,6 +452,7 @@ impl<'rt> DpTrainer<'rt> {
 
             // all-reduce: canonical row-order f64 fold, then the same f32
             // casts a serial step performs — worker-count-invariant bits
+            let ar_mem = crate::obs::mem_scope("dp.allreduce");
             let mut sum_plus = 0.0f64;
             let mut sum_minus = 0.0f64;
             let mut rows = 0usize;
@@ -467,6 +470,7 @@ impl<'rt> DpTrainer<'rt> {
             let l_minus = (sum_minus / rows.max(1) as f64) as f32;
             let g = (l_plus - l_minus) / (2.0 * eps);
             let train_loss = 0.5 * (l_plus + l_minus);
+            ar_mem.end();
 
             if !g.is_finite() {
                 // a NaN scalar would both poison every replica and break
@@ -817,10 +821,12 @@ impl<'rt> DpTrainer<'rt> {
             let batch = loader.next_batch();
             let seed = (cfg.seed as u32, t as u32);
             let _step_span = crate::obs::span("dp.step");
+            let _step_mem = crate::obs::mem_scope("train.step");
 
             if self.mask_refresh > 0 && t > 0 && t % self.mask_refresh == 0 {
                 {
                     let _rsp = crate::obs::span("train.threshold_refresh");
+                    let _rmem = crate::obs::mem_scope("train.threshold_refresh");
                     state.thresholds =
                         backend.thresholds(model, &state.params, cfg.hypers.sparsity)?;
                 }
@@ -910,6 +916,7 @@ impl<'rt> DpTrainer<'rt> {
             // ranks 0..n_local, then remote ranks ascending — exactly the
             // all-local rank order), then the same f32 casts the live
             // step performs
+            let ar_mem = crate::obs::mem_scope("dp.allreduce");
             let mut sum_plus = 0.0f64;
             let mut sum_minus = 0.0f64;
             let mut rows = 0usize;
@@ -940,6 +947,7 @@ impl<'rt> DpTrainer<'rt> {
             let l_minus = (sum_minus / rows.max(1) as f64) as f32;
             let g = (l_plus - l_minus) / (2.0 * eps);
             let train_loss = 0.5 * (l_plus + l_minus);
+            ar_mem.end();
 
             if !g.is_finite() {
                 // undo the net -eps offset so the state isn't silently

@@ -1124,6 +1124,7 @@ fn run_session(
     // the coordinator's slice spans carry — the cross-process join key
     let _trace_scope = crate::obs::trace_scope(trace);
     let _session_span = crate::obs::span("worker.session");
+    let _session_mem = crate::obs::mem_scope("transport.session");
 
     // replica state, rebuilt fresh every session
     let p = model.n_params;

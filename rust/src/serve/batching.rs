@@ -321,6 +321,7 @@ impl ServeEngine {
             bail!("classify: no rows");
         }
         let _sp = crate::obs::span("serve.classify");
+        let _mem = crate::obs::mem_scope("serve.batch");
         let vocab = self.model.vocab as i32;
         for (r, row) in rows.iter().enumerate() {
             if let Some(&t) = row.iter().find(|&&t| t < 0 || t >= vocab) {

@@ -341,6 +341,7 @@ fn route_label(path: &str) -> &'static str {
 /// going stale.
 fn sync_gauges(engine: &ServeEngine) {
     crate::obs::sync_build_info();
+    crate::obs::mem::sync_registry();
     crate::obs::gauge("serve_registry_adapters", &[]).set(engine.registry.len() as i64);
     crate::obs::gauge("serve_registry_bytes", &[]).set(engine.registry.bytes() as i64);
     crate::obs::gauge("serve_pending_requests", &[]).set(engine.batcher.pending() as i64);

@@ -2,7 +2,9 @@
 # Regenerate the repo-root BENCH_*.json snapshots from the --quick
 # bench matrix (dp, serve, jobs). Each bench prints its human table and
 # rewrites its snapshot in place, including the `obs` histogram section
-# recorded by the in-tree metrics registry during the run.
+# recorded by the in-tree metrics registry during the run and the `mem`
+# section (live/peak heap bytes + per-phase peak watermarks) from the
+# tracking allocator each bench binary installs.
 #
 # Skips gracefully (exit 0) when no Rust toolchain is on PATH so
 # toolchain-free environments can run it as a no-op.
