@@ -39,6 +39,10 @@ pub struct TrainConfig {
     /// data-parallel worker count (1 = serial trainer; >1 routes ZO
     /// runs through the seed-sync DP engine, `crate::parallel::dp`)
     pub workers: usize,
+    /// page-cache budget in bytes for the tiered parameter store
+    /// (0 = fully resident; >0 pages the parameter prefix out to a
+    /// scratch file, stateless ZO family only — see `runtime::store`)
+    pub page_cache_bytes: usize,
 }
 
 impl Default for TrainConfig {
@@ -55,6 +59,7 @@ impl Default for TrainConfig {
             init_from: None,
             eval_cap: 0,
             workers: 1,
+            page_cache_bytes: 0,
         }
     }
 }
@@ -111,6 +116,9 @@ impl TrainConfig {
         }
         if let Some(v) = doc.get("workers") {
             self.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("page_cache_bytes") {
+            self.page_cache_bytes = v.as_usize()?;
         }
         if let Some(v) = doc.get("init_from") {
             self.init_from = Some(v.as_str()?.to_string());
@@ -203,6 +211,10 @@ pub struct ServeConfig {
     pub listen_workers: Option<String>,
     /// block a drain until this many remote workers have connected
     pub min_workers: usize,
+    /// page-cache budget in bytes for the base parameter store
+    /// (0 = fully resident; >0 serves tenants as overlay views over a
+    /// file-backed paged base — see `runtime::store`)
+    pub page_cache_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -221,6 +233,7 @@ impl Default for ServeConfig {
             slice_steps: 0,
             listen_workers: None,
             min_workers: 0,
+            page_cache_bytes: 0,
         }
     }
 }
@@ -280,6 +293,9 @@ impl ServeConfig {
         }
         if let Some(v) = doc.get("min_workers") {
             self.min_workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.get("page_cache_bytes") {
+            self.page_cache_bytes = v.as_usize()?;
         }
         self.validate()
     }

@@ -364,6 +364,175 @@ pub fn measured_rows(model: &ModelInfo, steps: usize) -> Vec<MeasuredRow> {
     rows
 }
 
+// ---------------------------------------------------------------------------
+// resident-vs-paged matched pairs (`mem-report` paged arm)
+// ---------------------------------------------------------------------------
+
+/// One resident-vs-paged matched pair from the `mem-report` paged arm:
+/// the same probe arithmetic run once over an in-scope resident `Vec`
+/// and once over an in-scope file-backed [`ParamStore`](crate::runtime::store::ParamStore)
+/// bounded by the page-cache budget, each under the named live phase so
+/// the run also lands in `mem_peak_bytes{phase}`.
+#[derive(Debug, Clone, Copy)]
+pub struct PagedPair {
+    /// the live [`crate::obs::mem::PHASES`] entry both twins ran under
+    pub phase: &'static str,
+    /// heap high-water mark of the resident twin, bytes
+    pub resident_peak: u64,
+    /// heap high-water mark of the paged twin, bytes
+    pub paged_peak: u64,
+    /// final probe loss of the resident twin
+    pub resident_loss: f32,
+    /// final probe loss of the paged twin — must equal
+    /// `resident_loss` bit-for-bit (the tiering correctness invariant)
+    pub paged_loss: f32,
+    /// page faults the paged twin took (0 would mean the cache silently
+    /// held everything and the comparison proved nothing)
+    pub faults: u64,
+    /// page evictions the paged twin took
+    pub evictions: u64,
+}
+
+/// [`probe_loss`] over a store, page run by page run — the runs arrive
+/// in coordinate order, so the f64 accumulation order (and thus the
+/// result's bits) is identical to the flat version.
+fn probe_loss_store(store: &crate::runtime::store::ParamStore) -> f32 {
+    let mut acc = 0.0f64;
+    store.for_runs(0, store.len(), |_, run| {
+        for &p in run {
+            acc += p as f64 * p as f64;
+        }
+    });
+    (0.5 * acc / store.len().max(1) as f64) as f32
+}
+
+/// The paged twin of [`run_arm_in_place`] with a threshold: the same
+/// per-coordinate expressions in the same order, expressed over page
+/// runs of a file-backed store created *inside* the measurement scope,
+/// so the arm's watermark is the page cache, not a parameter copy.
+fn run_train_arm_paged(
+    n: usize,
+    steps: usize,
+    threshold: f32,
+    cache_bytes: usize,
+) -> crate::Result<(f32, u64, u64)> {
+    let mut k = 0usize;
+    let store = crate::runtime::store::ParamStore::file_backed_streaming(n, cache_bytes, || {
+        let v = ((k % 17) as f32 - 8.0) / 16.0; // == probe_params, streamed
+        k += 1;
+        v
+    })?;
+    let on = |p: f32| p.abs() >= threshold;
+    for t in 0..steps {
+        let seed = (PROBE_SEED, t as u32);
+        store.update_runs(0, n, |goff, run| {
+            for (j, p) in run.iter_mut().enumerate() {
+                if on(*p) {
+                    *p += PROBE_EPS * probe_z(seed, goff + j);
+                }
+            }
+        });
+        let l_plus = probe_loss_store(&store);
+        store.update_runs(0, n, |goff, run| {
+            for (j, p) in run.iter_mut().enumerate() {
+                if on(*p) {
+                    *p -= 2.0 * PROBE_EPS * probe_z(seed, goff + j);
+                }
+            }
+        });
+        let l_minus = probe_loss_store(&store);
+        let g = (l_plus - l_minus) / (2.0 * PROBE_EPS);
+        store.update_runs(0, n, |goff, run| {
+            for (j, p) in run.iter_mut().enumerate() {
+                if on(*p) {
+                    let z = probe_z(seed, goff + j);
+                    *p += PROBE_EPS * z - PROBE_LR * g * z;
+                }
+            }
+        });
+    }
+    Ok((probe_loss_store(&store), store.faults(), store.evictions()))
+}
+
+/// Run the resident-vs-paged matched pairs at `model`'s parameter count
+/// under the two live phases the serving and training hot paths account
+/// to — `train.step` (a thresholded ZO probe arm) and `serve.batch`
+/// (repeated full read passes, the forward-pass access pattern). Each
+/// twin allocates its parameter storage inside its own measurement
+/// scope; the paged twin streams init straight to the scratch file so
+/// no resident copy ever exists. `cache_bytes` is the paged twin's LRU
+/// page-cache budget.
+pub fn paged_pairs(
+    model: &ModelInfo,
+    steps: usize,
+    cache_bytes: usize,
+) -> crate::Result<Vec<PagedPair>> {
+    use crate::obs::mem;
+    use crate::runtime::store::ParamStore;
+    let n = model.n_params;
+    let threshold = 0.25f32;
+    let mut measure = |phase: &'static str,
+                       f: &mut dyn FnMut() -> crate::Result<(f32, u64, u64)>|
+     -> crate::Result<(u64, f32, u64, u64)> {
+        mem::reset_watermarks();
+        let scope = mem::mem_scope(phase);
+        mem::reset_window();
+        let (loss, faults, evictions) = f()?;
+        scope.end();
+        Ok((mem::window_peak(), loss, faults, evictions))
+    };
+
+    // train.step: the S-MeZO-EI probe arm, resident vs paged
+    let (res_peak, res_loss, _, _) = measure("train.step", &mut || {
+        Ok((run_arm_in_place(n, steps, Some(threshold)), 0, 0))
+    })?;
+    let (pag_peak, pag_loss, faults, evictions) =
+        measure("train.step", &mut || run_train_arm_paged(n, steps, threshold, cache_bytes))?;
+    let train = PagedPair {
+        phase: "train.step",
+        resident_peak: res_peak,
+        paged_peak: pag_peak,
+        resident_loss: res_loss,
+        paged_loss: pag_loss,
+        faults,
+        evictions,
+    };
+
+    // serve.batch: read-only forward-style passes, resident vs paged
+    let passes = steps.max(1);
+    let (res_peak, res_loss, _, _) = measure("serve.batch", &mut || {
+        let params = probe_params(n);
+        let mut loss = 0.0f32;
+        for _ in 0..passes {
+            loss = probe_loss(&params);
+        }
+        Ok((loss, 0, 0))
+    })?;
+    let (pag_peak, pag_loss, faults, evictions) = measure("serve.batch", &mut || {
+        let mut k = 0usize;
+        let store = ParamStore::file_backed_streaming(n, cache_bytes, || {
+            let v = ((k % 17) as f32 - 8.0) / 16.0;
+            k += 1;
+            v
+        })?;
+        let mut loss = 0.0f32;
+        for _ in 0..passes {
+            loss = probe_loss_store(&store);
+        }
+        Ok((loss, store.faults(), store.evictions()))
+    })?;
+    let serve = PagedPair {
+        phase: "serve.batch",
+        resident_peak: res_peak,
+        paged_peak: pag_peak,
+        resident_loss: res_loss,
+        paged_loss: pag_loss,
+        faults,
+        evictions,
+    };
+    Ok(vec![train, serve])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,13 +591,8 @@ mod tests {
         assert!(one >= nnz * 8 && one < nnz * 8 + p / 4, "{one}");
     }
 
-    #[test]
-    fn measured_rows_run_without_installed_allocator() {
-        // the lib test binary has no tracking allocator, so peaks are 0
-        // here — this exercises the arms' arithmetic and the analytic
-        // pairing; the measured inequality is asserted in tests/obs.rs
-        // where the allocator IS installed
-        let model = ModelInfo {
+    fn toy_model() -> ModelInfo {
+        ModelInfo {
             name: "toy".into(),
             family: "llama".into(),
             size: "tiny".into(),
@@ -449,13 +613,43 @@ mod tests {
             layout: vec![],
             lora_layout: vec![],
             programs: std::collections::BTreeMap::new(),
-        };
-        let rows = measured_rows(&model, 2);
+        }
+    }
+
+    #[test]
+    fn measured_rows_run_without_installed_allocator() {
+        // the lib test binary has no tracking allocator, so peaks are 0
+        // here — this exercises the arms' arithmetic and the analytic
+        // pairing; the measured inequality is asserted in tests/obs.rs
+        // where the allocator IS installed
+        let rows = measured_rows(&toy_model(), 2);
         assert_eq!(rows.len(), 3);
         let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
         assert_eq!(get("MeZO").analytic.total(), get("S-MeZO-EI").analytic.total());
         assert!(get("S-MeZO (vanilla)").analytic.total() > get("S-MeZO-EI").analytic.total());
         assert_eq!(get("S-MeZO-EI").phase, "report.smezo");
+    }
+
+    #[test]
+    fn paged_pairs_bit_identical_and_faulting() {
+        // a 1-byte budget rounds up to a single cached page, so every
+        // run the probe touches beyond it faults; the losses must still
+        // equal the resident twins' bit-for-bit
+        let pairs = paged_pairs(&toy_model(), 2, 1).unwrap();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[0].phase, "train.step");
+        assert_eq!(pairs[1].phase, "serve.batch");
+        for p in &pairs {
+            assert_eq!(
+                p.resident_loss.to_bits(),
+                p.paged_loss.to_bits(),
+                "{}: resident {} vs paged {}",
+                p.phase,
+                p.resident_loss,
+                p.paged_loss
+            );
+            assert!(p.faults >= 1, "{}: faults {}", p.phase, p.faults);
+        }
     }
 
     #[test]

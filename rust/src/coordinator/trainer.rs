@@ -204,7 +204,25 @@ impl<'rt> Trainer<'rt> {
         let logits = LogitsExec::load(self.rt, model)?;
         let prog = model.step_program(&cfg.optimizer)?;
         let slots = prog.slots.unwrap_or(0);
-        let mut state = TrainState::from_params(self.rt, &params, slots, model.n_metrics)?;
+        let mut state = if cfg.page_cache_bytes > 0 {
+            // paged tier: the parameter prefix lives in a file-backed
+            // store bounded by the cache budget; the stateless ZO family
+            // executes against page runs (runtime/native.rs::step_paged),
+            // bit-identical to the resident path
+            if slots > 0 {
+                bail!(
+                    "--page-cache-bytes requires a stateless optimizer \
+                     (mezo/smezo/smezo_large/rmezo); '{}' keeps {slots} slot floats",
+                    cfg.optimizer
+                );
+            }
+            if self.rt.backend().platform() != "native" {
+                bail!("--page-cache-bytes requires the native backend");
+            }
+            TrainState::from_params_paged(&params, slots, model.n_metrics, cfg.page_cache_bytes)?
+        } else {
+            TrainState::from_params(self.rt, &params, slots, model.n_metrics)?
+        };
 
         let mut loader = TrainLoader::new(&dataset.train, model.batch, model.seq_len, cfg.seed)?;
 

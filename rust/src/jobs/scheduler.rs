@@ -35,6 +35,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::data::{tasks, Dataset};
 use crate::parallel::{is_worker_lost, protocol, DpTrainer, RemoteHandle, SliceState};
+use crate::runtime::store::ParamStore;
 use crate::runtime::ModelInfo;
 use crate::serve::{ServeEngine, SparseDelta};
 use crate::util::json::Json;
@@ -49,11 +50,12 @@ pub struct Scheduler {
     engine: Arc<ServeEngine>,
     queue: Arc<JobQueue>,
     default_slice: usize,
-    /// the engine's resident base, snapshotted once at construction —
-    /// it is immutable for the engine's lifetime, and re-snapshotting
-    /// per slice would both copy O(P) floats and convoy on the base
-    /// mutex behind in-flight classify checkouts
-    base: Vec<f32>,
+    /// the engine's base as a shared store handle — no O(P) snapshot at
+    /// construction. A slice materializes a flat copy only at the points
+    /// that genuinely need one (begin/resume/publish), each a short
+    /// `to_vec` rather than holding the resident base mutex across a
+    /// long replay behind in-flight classify checkouts
+    base: Arc<ParamStore>,
     /// datasets are deterministic in `(task, seed)`; caching them keeps
     /// per-slice bookkeeping from regenerating the same data every slice
     datasets: Mutex<BTreeMap<(String, u64), Arc<Dataset>>>,
@@ -65,7 +67,7 @@ impl Scheduler {
     /// specs that don't set their own.
     pub fn new(engine: Arc<ServeEngine>, queue: Arc<JobQueue>, default_slice: usize) -> Scheduler {
         let default_slice = if default_slice == 0 { DEFAULT_SLICE_STEPS } else { default_slice };
-        let base = engine.registry.base_snapshot();
+        let base = engine.registry.base_store();
         Scheduler { engine, queue, default_slice, base, datasets: Mutex::new(BTreeMap::new()) }
     }
 
@@ -293,17 +295,17 @@ impl Scheduler {
             }
         }
 
-        // jobs always train from the server's resident base (snapshotted
-        // once at scheduler construction), so the published delta is
-        // valid against the vector classify serves
+        // jobs always train from the server's base (borrowed through the
+        // shared store handle), so the published delta is valid against
+        // the parameters classify serves
         let mut state = if !journal.exists() {
-            trainer.begin_slices(&model, self.base.clone())?
+            trainer.begin_slices_store(&model, &self.base)?
         } else {
             match self.restore_from_checkpoint(job.id, &model, &journal) {
                 Some(st) => st,
                 None => {
                     let t0 = std::time::Instant::now();
-                    let st = trainer.resume_slices(&model, &self.base)?;
+                    let st = trainer.resume_slices_store(&model, &self.base)?;
                     if let Some(rec) = &trainer.recorder {
                         rec.note_replay(t0.elapsed().as_secs_f64());
                     }
@@ -356,7 +358,8 @@ impl Scheduler {
             return Ok(outcome(JobState::Cancelled, None, false));
         }
         if report.done {
-            self.publish(job, &model, &self.base, &state, &cfg)?;
+            let base = self.base.to_vec();
+            self.publish(job, &model, &base, &state, &cfg)?;
             return Ok(outcome(JobState::Completed, None, true));
         }
         Ok(outcome(JobState::Queued, None, false))

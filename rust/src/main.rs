@@ -60,7 +60,7 @@ COMMANDS
                   --eps X --sparsity X --seed S --eval-every N
                   --init-from CKPT --save CKPT --config FILE.toml
                   --workers N --journal FILE --mask-refresh N
-                  --mem-budget BYTES]
+                  --mem-budget BYTES --page-cache-bytes BYTES]
                   (--workers > 1 routes ZO runs through the seed-sync
                   data-parallel engine; bit-identical to --workers 1)
   eval            --model M --task T [--ckpt CKPT --icl-shots K]
@@ -80,7 +80,7 @@ COMMANDS
                   --flush-ms MS --max-adapters K --adapter-budget BYTES
                   --seed S --init-from CKPT --config FILE.toml
                   --jobs-dir DIR --slice-steps N --listen-workers ADDR
-                  --mem-budget BYTES]
+                  --mem-budget BYTES --page-cache-bytes BYTES]
                   (loopback HTTP: GET /healthz, GET|POST /v1/adapters,
                   POST /v1/classify; adapters materialize from step
                   journals relative to the server's base parameters.
@@ -102,8 +102,9 @@ COMMANDS
                   show|cancel|resume: --id N (job or grid id)
                   drain:  [--model M --workers N --seed S
                           --init-from CKPT --listen-workers ADDR
-                          --min-workers N] — run queued jobs to
-                  completion in-process, publishing adapters;
+                          --min-workers N --page-cache-bytes BYTES]
+                  — run queued jobs to completion in-process,
+                  publishing adapters;
                   --listen-workers leases shards to remote workers,
                   --min-workers waits for that many before draining
                   top:    [--port P --watch SECS] live table of jobs on
@@ -121,11 +122,17 @@ COMMANDS
                   exchanges per-row losses + (seed, g) step records —
                   bit-identical to an in-process DP worker)
   memory-table    [--model M --out DIR]
-  mem-report      [--model M --steps N --quick]  run matched
+  mem-report      [--model M --steps N --quick
+                  --page-cache-bytes BYTES]  run matched
                   mezo/smezo/vanilla-smezo optimizer micro-arms under
                   the tracking allocator and print each arm's measured
                   heap peak next to the analytic Table-4 prediction;
-                  exits nonzero unless measured S-MeZO-EI < vanilla
+                  exits nonzero unless measured S-MeZO-EI < vanilla.
+                  Also runs matched resident-vs-paged arms (train.step
+                  and serve.batch phases) at the page-cache budget
+                  (default: a quarter of one parameter copy) and exits
+                  nonzero unless every paged peak measures below its
+                  resident twin with bit-identical results
   inspect         [--model M]
   check-artifacts
 
@@ -133,6 +140,11 @@ COMMANDS
                   tracking allocator; a job slice whose watermark
                   exceeds it fires the mem-budget-exceeded alert
                   (degraded /healthz until it clears)
+  --page-cache-bytes BYTES (train/serve/jobs drain): page the parameter
+                  base out to an unlinked scratch file behind an LRU
+                  page cache of at most BYTES, instead of keeping one
+                  resident f32 copy; bit-identical to resident. Train
+                  side requires the stateless ZO family and --workers 1
 
 COMMON
   --artifacts DIR   artifact directory (default: artifacts)
@@ -251,6 +263,11 @@ fn cmd_train(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.eval_cap = args.usize_or("eval-cap", 200)?;
     cfg.workers = args.workers_or(cfg.workers)?;
     cfg.init_from = args.get("init-from").map(|s| s.to_string()).or(cfg.init_from);
+    cfg.page_cache_bytes = args.usize_or("page-cache-bytes", cfg.page_cache_bytes)?;
+    if cfg.page_cache_bytes > 0 && (cfg.workers > 1 || optimizer == "mezo_lora" || optimizer == "lora_fo")
+    {
+        bail!("--page-cache-bytes pages the serial ZO trainer only (use --workers 1 and a ZO optimizer)");
+    }
     cfg.validate()?;
     let mem_budget = args.u64_or("mem-budget", 0)?;
     sparse_mezo::obs::mem::set_budget(mem_budget);
@@ -473,6 +490,23 @@ fn resolve_serve_base(rt: &Runtime, cfg: &ServeConfig) -> Result<Vec<f32>> {
     }
 }
 
+/// Build the serve engine for `cfg`: resident base by default, or —
+/// with `--page-cache-bytes` — a file-backed paged base whose resident
+/// footprint is the bounded LRU page cache rather than a full f32 copy.
+fn build_engine(rt: Runtime, cfg: &ServeConfig, base: Vec<f32>) -> Result<ServeEngine> {
+    if cfg.page_cache_bytes == 0 {
+        return ServeEngine::new(rt, cfg, base);
+    }
+    let store = sparse_mezo::runtime::store::ParamStore::file_backed(&base, cfg.page_cache_bytes)?;
+    drop(base);
+    info!(
+        "paged base: {} pages on scratch file, cache budget {} bytes",
+        store.len().div_ceil(sparse_mezo::runtime::store::PAGE_FLOATS),
+        cfg.page_cache_bytes
+    );
+    ServeEngine::with_store(rt, cfg, Arc::new(store))
+}
+
 fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     let rt = Runtime::new(artifacts)?;
     let toml_path = args.get("config").map(PathBuf::from);
@@ -489,6 +523,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
     cfg.jobs_dir = args.get("jobs-dir").map(String::from).or(cfg.jobs_dir);
     cfg.slice_steps = args.usize_or("slice-steps", cfg.slice_steps)?;
     cfg.listen_workers = args.get("listen-workers").map(String::from).or(cfg.listen_workers);
+    cfg.page_cache_bytes = args.usize_or("page-cache-bytes", cfg.page_cache_bytes)?;
     cfg.validate()?;
     let mem_budget = args.u64_or("mem-budget", 0)?;
     sparse_mezo::obs::mem::set_budget(mem_budget);
@@ -508,7 +543,7 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
         cfg.max_adapters,
         cfg.adapter_budget >> 20
     );
-    let mut engine = ServeEngine::new(rt, &cfg, base)?;
+    let mut engine = build_engine(rt, &cfg, base)?;
     if let Some(dir) = &cfg.jobs_dir {
         let queue = Arc::new(JobQueue::open(&PathBuf::from(dir))?);
         info!("jobs: {} persisted under {dir} ({} active)", queue.list().len(), queue.active());
@@ -813,10 +848,11 @@ fn cmd_jobs(args: &Args, artifacts: &PathBuf) -> Result<()> {
             cfg.slice_steps = args.usize_or("slice-steps", cfg.slice_steps)?;
             cfg.listen_workers = args.get("listen-workers").map(String::from).or(cfg.listen_workers);
             cfg.min_workers = args.usize_or("min-workers", cfg.min_workers)?;
+            cfg.page_cache_bytes = args.usize_or("page-cache-bytes", cfg.page_cache_bytes)?;
             cfg.validate()?;
             let base = resolve_serve_base(&rt, &cfg)?;
             let mut engine =
-                ServeEngine::new(rt, &cfg, base)?.with_jobs(Arc::clone(&queue), cfg.slice_steps);
+                build_engine(rt, &cfg, base)?.with_jobs(Arc::clone(&queue), cfg.slice_steps);
             if let Some(addr) = &cfg.listen_workers {
                 let hub = WorkerHub::listen(addr)?;
                 info!("worker hub listening on {} (TCP seed-sync leases)", hub.addr());
@@ -946,6 +982,57 @@ fn cmd_mem_report(args: &Args, artifacts: &PathBuf) -> Result<()> {
          (saves {} B; analytic prediction {} B) OK",
         vanilla - ei,
         model.n_params / 8 + model.n_params * 4
+    );
+
+    // paged parameter tiering: matched resident-vs-paged twins under the
+    // live train.step / serve.batch phases. Default cache budget is a
+    // quarter of one full parameter copy so the paged twin must fault.
+    let param_bytes = model.n_params * 4;
+    let cache = args.usize_or("page-cache-bytes", (param_bytes / 4).max(1))?;
+    let pairs = sparse_mezo::coordinator::memory::paged_pairs(&model, steps, cache)?;
+    println!(
+        "\npaged tiering (cache budget {cache} B, one param copy {param_bytes} B)\n\
+         {:<12} {:>16} {:>14} {:>8} {:>10}",
+        "phase", "resident peak B", "paged peak B", "faults", "evictions"
+    );
+    for p in &pairs {
+        println!(
+            "{:<12} {:>16} {:>14} {:>8} {:>10}",
+            p.phase, p.resident_peak, p.paged_peak, p.faults, p.evictions
+        );
+    }
+    for p in &pairs {
+        if p.resident_loss.to_bits() != p.paged_loss.to_bits() {
+            bail!(
+                "check FAILED: {} paged probe loss {} != resident {} (tiering must be bit-identical)",
+                p.phase,
+                p.paged_loss,
+                p.resident_loss
+            );
+        }
+        if p.resident_peak == 0 || p.paged_peak == 0 {
+            bail!("tracking allocator reported a zero watermark for {}", p.phase);
+        }
+        if p.faults == 0 {
+            bail!(
+                "check FAILED: {} paged twin took no page faults — the cache budget \
+                 {cache} B held the whole store, proving nothing",
+                p.phase
+            );
+        }
+        if p.paged_peak >= p.resident_peak {
+            bail!(
+                "check FAILED: {} paged peak {} B >= resident peak {} B at cache budget {cache} B",
+                p.phase,
+                p.paged_peak,
+                p.resident_peak
+            );
+        }
+    }
+    println!(
+        "check: paged peaks below resident twins with bit-identical losses \
+         (train.step {} < {} B, serve.batch {} < {} B) OK",
+        pairs[0].paged_peak, pairs[0].resident_peak, pairs[1].paged_peak, pairs[1].resident_peak
     );
     Ok(())
 }

@@ -468,12 +468,17 @@ fn help_for(name: &str) -> &'static str {
         "serve_registry_adapters" => "Adapters resident in the registry.",
         "serve_registry_bytes" => "Adapter bytes accounted against the registry budget.",
         "serve_registry_evictions_total" => "Adapters evicted by LRU pressure.",
+        "serve_working_set_bytes" => "Serving bytes resident now: base store working set plus adapter bytes.",
         "serve_registry_pins_total" => "Admission pins taken on adapters.",
         "alerts_active" => "Whether an alert rule is currently firing, by job and rule (1/0).",
         "alerts_fired_total" => "Alert rule activations, by rule.",
         "alerts_cleared_total" => "Alert rule clearances, by rule.",
         "recorder_steps_total" => "Steps captured by per-job flight recorders.",
         "recorder_jobs" => "Jobs with a resident flight recorder.",
+        "store_page_faults_total" => "Pages read from the backing file into a ParamStore cache.",
+        "store_page_evictions_total" => "Pages evicted from ParamStore caches (dirty pages write back).",
+        "store_working_set_bytes" => "Cached-page bytes currently resident across file-backed ParamStores.",
+        "store_params_bytes" => "Total parameter bytes of the largest file-backed ParamStore (the one-full-copy baseline).",
         "mem_live_bytes" => "Heap bytes currently live per the tracking allocator.",
         "mem_peak_bytes" => "High-water mark of live heap bytes, by phase (total = process-wide).",
         "mem_allocs_total" => "Heap allocations observed by the tracking allocator.",

@@ -681,6 +681,31 @@ impl<'rt> DpTrainer<'rt> {
         Ok(SliceState { step: 0, mask_epoch: 0, params: base, slots, thresholds })
     }
 
+    /// [`begin_slices`](DpTrainer::begin_slices) from a shared
+    /// [`ParamStore`](crate::runtime::store::ParamStore) handle: the one
+    /// flat copy made is the vector the returned state owns.
+    pub fn begin_slices_store(
+        &self,
+        model: &ModelInfo,
+        base: &crate::runtime::store::ParamStore,
+    ) -> Result<SliceState> {
+        self.begin_slices(model, base.to_vec())
+    }
+
+    /// [`resume_slices`](DpTrainer::resume_slices) from a shared
+    /// [`ParamStore`](crate::runtime::store::ParamStore) handle.
+    /// Materializes a transient flat copy for the replay rather than
+    /// holding a resident base lock across the whole journal replay
+    /// (which would convoy in-flight classify checkouts behind it).
+    pub fn resume_slices_store(
+        &self,
+        model: &ModelInfo,
+        base: &crate::runtime::store::ParamStore,
+    ) -> Result<SliceState> {
+        let flat = base.to_vec();
+        self.resume_slices(model, &flat)
+    }
+
     /// Rebuild the slice state of a paused run from its journal: replay
     /// the `(seed, g)` stream from `base` (no forward passes) and resume
     /// from the bit-identical parameters, slots, thresholds and epoch the

@@ -14,6 +14,9 @@
 //!   native backend).
 //! * [`state`] — the backend-resident packed `[params | slots | metrics]`
 //!   training state.
+//! * [`store`] — the paged, tiered parameter store (resident /
+//!   file-backed LRU page cache) plus the sparse [`store::Overlay`]
+//!   view used by paged serving.
 //! * [`exec`] — typed program wrappers that enforce shapes at call sites.
 
 pub mod backend;
@@ -23,6 +26,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod state;
+pub mod store;
 
 use std::path::Path;
 

@@ -42,6 +42,7 @@ use super::backend::Backend;
 use super::exec::Hypers;
 use super::manifest::{LayoutEntry, Manifest, ModelInfo, ProgramInfo};
 use super::state::{StateBuf, TrainState};
+use super::store::{Overlay, ParamStore};
 
 /// Metric-tail layout (mirrors `Manifest::metric_names` order).
 const M_L_PLUS: usize = 0;
@@ -304,6 +305,73 @@ fn geometry(model: &ModelInfo) -> Result<Geo> {
 }
 
 // ---------------------------------------------------------------------------
+// parameter sources
+// ---------------------------------------------------------------------------
+
+/// A read-only view of the flat parameter vector the forward pass can
+/// pull contiguous runs from. The flat-slice impl hands back the
+/// subslice directly (zero cost — the pre-paging code path, expression
+/// for expression); the [`ParamStore`] / [`Overlay`] impls gather the
+/// run into a caller-owned scratch buffer. Because every impl yields
+/// exactly the same f32 bits for the same run, the generic forward pass
+/// is bit-identical across sources.
+pub(crate) trait ParamsSrc {
+    /// Run `f` over params `[off, off + len)`.
+    fn with_run<R>(
+        &self,
+        off: usize,
+        len: usize,
+        scratch: &mut Vec<f32>,
+        f: impl FnOnce(&[f32]) -> R,
+    ) -> R;
+}
+
+impl ParamsSrc for [f32] {
+    #[inline]
+    fn with_run<R>(
+        &self,
+        off: usize,
+        len: usize,
+        _scratch: &mut Vec<f32>,
+        f: impl FnOnce(&[f32]) -> R,
+    ) -> R {
+        f(&self[off..off + len])
+    }
+}
+
+impl ParamsSrc for ParamStore {
+    fn with_run<R>(
+        &self,
+        off: usize,
+        len: usize,
+        scratch: &mut Vec<f32>,
+        f: impl FnOnce(&[f32]) -> R,
+    ) -> R {
+        if scratch.len() < len {
+            scratch.resize(len, 0.0);
+        }
+        self.read_into(off, &mut scratch[..len]);
+        f(&scratch[..len])
+    }
+}
+
+impl ParamsSrc for Overlay<'_> {
+    fn with_run<R>(
+        &self,
+        off: usize,
+        len: usize,
+        scratch: &mut Vec<f32>,
+        f: impl FnOnce(&[f32]) -> R,
+    ) -> R {
+        if scratch.len() < len {
+            scratch.resize(len, 0.0);
+        }
+        self.read_run(off, &mut scratch[..len]);
+        f(&scratch[..len])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // forward pass
 // ---------------------------------------------------------------------------
 
@@ -324,8 +392,18 @@ struct Fwd {
 }
 
 /// One forward pass. `lora = Some(adapters)` adds the rank-r update
-/// `(1/r) A·B` to `W1` (the logits_lora program).
-fn forward_row(geo: &Geo, params: &[f32], lora: Option<&[f32]>, row: &[i32]) -> Fwd {
+/// `(1/r) A·B` to `W1` (the logits_lora program). Generic over the
+/// parameter source: every access is a row-granular run (an embedding
+/// row, one W1/W2 row, a gain vector), so a paged source gathers at
+/// most a few KiB at a time instead of materializing the full vector.
+/// `scratch` is the reusable gather buffer (untouched for flat slices).
+fn forward_row<S: ParamsSrc + ?Sized>(
+    geo: &Geo,
+    params: &S,
+    lora: Option<&[f32]>,
+    row: &[i32],
+    scratch: &mut Vec<f32>,
+) -> Fwd {
     let (d, h, v) = (geo.d, geo.h, geo.v);
     // raw pooled features (pre-norm), then normalize
     let mut raw = vec![0.0f32; d];
@@ -336,10 +414,11 @@ fn forward_row(geo: &Geo, params: &[f32], lora: Option<&[f32]>, row: &[i32]) -> 
         }
         let w = 1.0 + (p + 1) as f32 / row.len() as f32;
         wsum += w;
-        let e = &params[geo.e_tok + tok as usize * d..geo.e_tok + (tok as usize + 1) * d];
-        for i in 0..d {
-            raw[i] += w * e[i];
-        }
+        params.with_run(geo.e_tok + tok as usize * d, d, scratch, |e| {
+            for i in 0..d {
+                raw[i] += w * e[i];
+            }
+        });
     }
     if wsum > 0.0 {
         for ri in raw.iter_mut() {
@@ -350,21 +429,17 @@ fn forward_row(geo: &Geo, params: &[f32], lora: Option<&[f32]>, row: &[i32]) -> 
     let sigma = (ms + RMS_EPS).sqrt();
     let x: Vec<f32> = raw.iter().map(|&ri| ri / sigma).collect();
 
-    let w1 = &params[geo.w1..geo.w1 + d * h];
-    let g1 = &params[geo.g1..geo.g1 + h];
-    let w2 = &params[geo.w2..geo.w2 + h * v];
-    let g2 = &params[geo.g2..geo.g2 + v];
-
     // s1 = x · W1 (+ LoRA), hid = tanh(g1 ⊙ s1)
     let mut s1 = vec![0.0f32; h];
     for (i, &xi) in x.iter().enumerate() {
         if xi == 0.0 {
             continue;
         }
-        let wrow = &w1[i * h..(i + 1) * h];
-        for j in 0..h {
-            s1[j] += xi * wrow[j];
-        }
+        params.with_run(geo.w1 + i * h, h, scratch, |wrow| {
+            for j in 0..h {
+                s1[j] += xi * wrow[j];
+            }
+        });
     }
     if let Some(ad) = lora {
         let r = geo.r;
@@ -385,7 +460,8 @@ fn forward_row(geo: &Geo, params: &[f32], lora: Option<&[f32]>, row: &[i32]) -> 
             }
         }
     }
-    let hid: Vec<f32> = (0..h).map(|j| (g1[j] * s1[j]).tanh()).collect();
+    let hid: Vec<f32> =
+        params.with_run(geo.g1, h, scratch, |g1| (0..h).map(|j| (g1[j] * s1[j]).tanh()).collect());
 
     // s2 = hid · W2, logits = g2 ⊙ s2
     let mut s2 = vec![0.0f32; v];
@@ -393,20 +469,28 @@ fn forward_row(geo: &Geo, params: &[f32], lora: Option<&[f32]>, row: &[i32]) -> 
         if hj == 0.0 {
             continue;
         }
-        let wrow = &w2[j * v..(j + 1) * v];
-        for c in 0..v {
-            s2[c] += hj * wrow[c];
-        }
+        params.with_run(geo.w2 + j * v, v, scratch, |wrow| {
+            for c in 0..v {
+                s2[c] += hj * wrow[c];
+            }
+        });
     }
-    let logits: Vec<f32> = (0..v).map(|c| g2[c] * s2[c]).collect();
+    let logits: Vec<f32> =
+        params.with_run(geo.g2, v, scratch, |g2| (0..v).map(|c| g2[c] * s2[c]).collect());
     Fwd { x, sigma, s1, hid, s2, logits }
 }
 
 /// Row-major `[B, V]` last-position logits for a token batch.
-fn logits_batch(geo: &Geo, params: &[f32], lora: Option<&[f32]>, tokens: &[i32]) -> Vec<f32> {
+fn logits_batch<S: ParamsSrc + ?Sized>(
+    geo: &Geo,
+    params: &S,
+    lora: Option<&[f32]>,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let mut scratch = Vec::new();
     let mut out = Vec::with_capacity(geo.b * geo.v);
     for row in tokens.chunks(geo.t) {
-        out.extend(forward_row(geo, params, lora, row).logits);
+        out.extend(forward_row(geo, params, lora, row, &mut scratch).logits);
     }
     out
 }
@@ -419,10 +503,17 @@ fn row_ce(logits: &[f32], label: i32) -> f64 {
 }
 
 /// Mean batch cross-entropy (the training loss of every step program).
-fn batch_ce(geo: &Geo, params: &[f32], lora: Option<&[f32]>, tokens: &[i32], labels: &[i32]) -> f32 {
+fn batch_ce<S: ParamsSrc + ?Sized>(
+    geo: &Geo,
+    params: &S,
+    lora: Option<&[f32]>,
+    tokens: &[i32],
+    labels: &[i32],
+) -> f32 {
+    let mut scratch = Vec::new();
     let mut total = 0.0f64;
     for (row, &label) in tokens.chunks(geo.t).zip(labels) {
-        let fwd = forward_row(geo, params, lora, row);
+        let fwd = forward_row(geo, params, lora, row, &mut scratch);
         total += row_ce(&fwd.logits, label);
     }
     (total / labels.len().max(1) as f64) as f32
@@ -446,9 +537,10 @@ fn grad_batch(geo: &Geo, params: &[f32], tokens: &[i32], labels: &[i32]) -> (Vec
     let g1 = &params[geo.g1..geo.g1 + h];
     let w2 = &params[geo.w2..geo.w2 + h * v];
     let g2 = &params[geo.g2..geo.g2 + v];
+    let mut scratch = Vec::new();
 
     for (row, &label) in tokens.chunks(geo.t).zip(labels) {
-        let fwd = forward_row(geo, params, None, row);
+        let fwd = forward_row(geo, params, None, row, &mut scratch);
         total += row_ce(&fwd.logits, label);
 
         // dL/dlogit_c = softmax_c - 1[c == label]
@@ -537,9 +629,10 @@ fn grad_lora(
     let w2 = &params[geo.w2..geo.w2 + h * v];
     let a = &adapters[..d * r];
     let b = &adapters[d * r..d * r + r * h];
+    let mut scratch = Vec::new();
 
     for (row, &label) in tokens.chunks(geo.t).zip(labels) {
-        let fwd = forward_row(geo, params, Some(adapters), row);
+        let fwd = forward_row(geo, params, Some(adapters), row, &mut scratch);
         total += row_ce(&fwd.logits, label);
         let max = fwd.logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let exps: Vec<f32> = fwd.logits.iter().map(|l| (l - max).exp()).collect();
@@ -889,6 +982,135 @@ fn write_metrics(state: &mut [f32], k_off: usize, info: &WalkInfo, masked_frac: 
 }
 
 // ---------------------------------------------------------------------------
+// paged ZO step
+// ---------------------------------------------------------------------------
+
+/// [`perturb`] against a paged store: the same per-coordinate walk in
+/// the same ascending order, applied through mutable page runs. Touched
+/// pages dirty in place; nothing beyond the cache budget goes resident.
+fn perturb_store(store: &ParamStore, streams: &[Stream], mask: Option<&[u8]>, scale: f32) {
+    for st in streams {
+        store.update_runs(st.offset, st.len, |goff, buf| {
+            for (t, x) in buf.iter_mut().enumerate() {
+                let idx = goff + t;
+                if let Some(m) = mask {
+                    if m[idx] == 0 {
+                        continue;
+                    }
+                }
+                *x += scale * prng::normal(st.key, (idx - st.offset) as u32);
+            }
+        });
+    }
+}
+
+/// [`magnitude_mask`] read through page runs — same per-coordinate test,
+/// same result bytes.
+fn magnitude_mask_store(
+    model: &ModelInfo,
+    store: &ParamStore,
+    thresholds: &[f32],
+    large: bool,
+) -> Vec<u8> {
+    let mut m = vec![1u8; store.len()];
+    for (i, e) in model.layout.iter().enumerate() {
+        if e.kind != "matrix" {
+            continue;
+        }
+        let h = thresholds[i];
+        store.for_runs(e.offset, e.size, |goff, buf| {
+            for (t, &x) in buf.iter().enumerate() {
+                let small = x.abs() <= h;
+                m[goff + t] = u8::from(small != large);
+            }
+        });
+    }
+    m
+}
+
+/// One ZO step against a [`StateBuf::Paged`] state: the fused Alg.-1
+/// walk of the stateless family (`mezo`/`smezo`/`smezo_large`/`rmezo`,
+/// the `Rule::Sgd` arm) replayed through page runs. Every coordinate is
+/// visited in the same order with the same expressions as the resident
+/// walk, so params, metrics and the journal scalars come out
+/// bit-identical; the resident footprint stays at the page-cache budget
+/// because dirty pages write back on eviction. Slot-stateful optimizers
+/// are rejected — their slot blocks are host-resident by design.
+#[allow(clippy::too_many_arguments)]
+fn step_paged(
+    model: &ModelInfo,
+    geo: &Geo,
+    optimizer: &str,
+    hypers: &Hypers,
+    thresholds: &[f32],
+    state: &mut TrainState,
+    tokens: &[i32],
+    labels: &[i32],
+    seed: (u32, u32),
+) -> Result<()> {
+    let (p, s) = (state.p, state.s);
+    let StateBuf::Paged { store, tail } = &mut state.buf else {
+        bail!("step_paged on a non-paged state")
+    };
+    let store = store.clone();
+    // mask from the UNPERTURBED parameters, once per step (§3.3 EI
+    // semantics) — identical bytes to the resident mask.
+    let mask: Option<Vec<u8>> = match optimizer {
+        "mezo" => None,
+        "smezo" => Some(magnitude_mask_store(model, &store, thresholds, false)),
+        "smezo_large" => Some(magnitude_mask_store(model, &store, thresholds, true)),
+        "rmezo" => Some(random_mask(
+            model,
+            p,
+            (1.0 - hypers.sparsity).clamp(0.0, 1.0),
+            hypers.mask_seed as u32,
+        )),
+        other => bail!(
+            "paged training (--page-cache-bytes) supports the stateless \
+             mezo/smezo/smezo_large/rmezo family, not '{other}'"
+        ),
+    };
+    let masked_frac = match &mask {
+        Some(m) => m.iter().map(|&x| x as usize).sum::<usize>() as f32 / p as f32,
+        None => 1.0,
+    };
+
+    let eps = hypers.eps;
+    let lr = hypers.lr;
+    let streams = base_streams(model, seed);
+    perturb_store(&store, &streams, mask.as_deref(), eps);
+    let l_plus = batch_ce(geo, &*store, None, tokens, labels);
+    perturb_store(&store, &streams, mask.as_deref(), -2.0 * eps);
+    let l_minus = batch_ce(geo, &*store, None, tokens, labels);
+    let g = (l_plus - l_minus) / (2.0 * eps);
+
+    // fused restore + SGD update, in stream/coordinate order so the
+    // update-norm accumulation folds in the resident sequence
+    let mut norm = 0.0f32;
+    for st in &streams {
+        store.update_runs(st.offset, st.len, |goff, buf| {
+            for (t, x) in buf.iter_mut().enumerate() {
+                let idx = goff + t;
+                if let Some(m) = &mask {
+                    if m[idx] == 0 {
+                        continue;
+                    }
+                }
+                let z = prng::normal(st.key, (idx - st.offset) as u32);
+                let u = lr * g * z;
+                *x += eps * z - u;
+                norm += u * u;
+            }
+        });
+    }
+    let info = WalkInfo { l_plus, l_minus, g, update_norm_sq: norm, accept: 1.0 };
+    let train_loss = 0.5 * (l_plus + l_minus);
+    // the metric tail lives host-side: tail = [slots(S) | metrics(K)]
+    write_metrics(tail, s, &info, masked_frac, train_loss);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Backend impl
 // ---------------------------------------------------------------------------
 
@@ -968,6 +1190,23 @@ impl Backend for NativeBackend {
     }
 
     fn read_state(&self, state: &TrainState, offset: usize, len: usize) -> Result<Vec<f32>> {
+        if let StateBuf::Paged { store, tail } = &state.buf {
+            let total = state.p + state.s + state.k;
+            if offset + len > total {
+                bail!("read_state [{offset}, +{len}) out of state len {total}");
+            }
+            // params prefix comes from the store; [slots | metrics] from
+            // the host tail
+            let mut out = vec![0.0f32; len];
+            let from_store = len.min(state.p.saturating_sub(offset));
+            if from_store > 0 {
+                store.read_into(offset, &mut out[..from_store]);
+            }
+            for (i, o) in out.iter_mut().enumerate().skip(from_store) {
+                *o = tail[offset + i - state.p];
+            }
+            return Ok(out);
+        }
         let host = state.host()?;
         if offset + len > host.len() {
             bail!("read_state [{offset}, +{len}) out of state len {}", host.len());
@@ -993,6 +1232,11 @@ impl Backend for NativeBackend {
         let (p, s, k) = (state.p, state.s, state.k);
         if p != model.n_params || k != N_METRICS {
             bail!("step: state geometry [{p}|{s}|{k}] does not match model '{}'", model.name);
+        }
+        if matches!(state.buf, StateBuf::Paged { .. }) {
+            return step_paged(
+                model, &geo, optimizer, hypers, thresholds, state, tokens, labels, seed,
+            );
         }
         let k_off = p + s;
         let vec = state.host_mut()?;
@@ -1208,10 +1452,13 @@ impl Backend for NativeBackend {
         }
         // Per-row values of exactly what batch_ce folds — the DP reducer
         // re-folds them in row order, reproducing a serial step bit-for-bit.
+        let mut scratch = Vec::new();
         Ok(tokens
             .chunks(geo.t)
             .zip(labels)
-            .map(|(row, &label)| row_ce(&forward_row(&geo, params, None, row).logits, label))
+            .map(|(row, &label)| {
+                row_ce(&forward_row(&geo, params, None, row, &mut scratch).logits, label)
+            })
             .collect())
     }
 
@@ -1285,12 +1532,39 @@ impl Backend for NativeBackend {
         // Row-independent forward passes: each output row is bit-identical
         // to the same row of `logits` on any batch carrying these tokens,
         // which is what lets the serving layer shard one batch freely.
+        let mut scratch = Vec::new();
         let mut out = Vec::with_capacity((tokens.len() / geo.t) * geo.v);
         for row in tokens.chunks(geo.t) {
-            out.extend(forward_row(&geo, params, None, row).logits);
+            out.extend(forward_row(&geo, params, None, row, &mut scratch).logits);
         }
         Ok(out)
     }
+}
+
+/// `logits_rows` over any [`ParamsSrc`] — the paged serving entry point.
+/// The native backend is the only one that serves paged tenants, so this
+/// is a free function rather than a `Backend` method (the trait stays
+/// object-safe). Row outputs are bit-identical to
+/// [`Backend::logits_rows`] over the flat equivalent of `src`.
+pub(crate) fn logits_rows_src<S: ParamsSrc + ?Sized>(
+    model: &ModelInfo,
+    src: &S,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let geo = geometry(model)?;
+    if tokens.is_empty() || tokens.len() % geo.t != 0 {
+        bail!(
+            "logits_rows: tokens len {} is not a positive multiple of seq_len {}",
+            tokens.len(),
+            geo.t
+        );
+    }
+    let mut scratch = Vec::new();
+    let mut out = Vec::with_capacity((tokens.len() / geo.t) * geo.v);
+    for row in tokens.chunks(geo.t) {
+        out.extend(forward_row(&geo, src, None, row, &mut scratch).logits);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1513,5 +1787,106 @@ mod tests {
                 params[i]
             );
         }
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: coord {i} ({x} vs {y})");
+        }
+    }
+
+    #[test]
+    fn paged_logits_match_flat_bitwise() {
+        use super::super::store::PAGE_BYTES;
+        let b = backend();
+        let m = tiny(&b);
+        let p = b.init(&m, (6, 6)).unwrap();
+        let mut tokens = vec![0i32; 4 * m.seq_len];
+        for (i, t) in tokens.iter_mut().enumerate() {
+            *t = (i % 97) as i32 % m.vocab as i32;
+        }
+        let flat = b.logits_rows(&m, &p, &tokens).unwrap();
+        // 1-page cache: every row faults/evicts its way through the file
+        let store = ParamStore::file_backed(&p, PAGE_BYTES).unwrap();
+        let paged = logits_rows_src(&m, &store, &tokens).unwrap();
+        bits_eq(&paged, &flat, "paged store logits");
+        assert!(store.faults() > 0 && store.evictions() > 0);
+
+        // overlay reads == swap-then-read, end to end through the forward
+        let idx: Vec<u32> = vec![0, 5, (m.n_params / 2) as u32, (m.n_params - 1) as u32];
+        let val: Vec<f32> = vec![0.5, -0.25, 2.0, -1.5];
+        let mut patched = p.clone();
+        for (i, v) in idx.iter().zip(&val) {
+            patched[*i as usize] = *v;
+        }
+        let flat_patched = b.logits_rows(&m, &patched, &tokens).unwrap();
+        let ov = Overlay::new(&store, &idx, &val);
+        let paged_patched = logits_rows_src(&m, &ov, &tokens).unwrap();
+        bits_eq(&paged_patched, &flat_patched, "overlay logits");
+    }
+
+    #[test]
+    fn paged_step_bit_identical_to_resident() {
+        use super::super::store::PAGE_BYTES;
+        let b = backend();
+        let m = tiny(&b);
+        let params = b.init(&m, (11, 0x1717)).unwrap();
+        let hypers = Hypers::default();
+        let thresholds = b.thresholds(&m, &params, hypers.sparsity).unwrap();
+        let tokens: Vec<i32> =
+            (0..m.batch * m.seq_len).map(|i| (i % 89) as i32 % m.vocab as i32).collect();
+        let labels: Vec<i32> = (0..m.batch).map(|i| (i % m.vocab) as i32).collect();
+        for opt in ["mezo", "smezo", "smezo_large", "rmezo"] {
+            let mut res = b
+                .new_state(
+                    {
+                        let mut v = params.clone();
+                        v.resize(params.len() + N_METRICS, 0.0);
+                        v
+                    },
+                    params.len(),
+                    0,
+                    N_METRICS,
+                )
+                .unwrap();
+            // cache budget of 2 pages << one full copy: the walk pages
+            // its way through the scratch file every step
+            let mut pag =
+                TrainState::from_params_paged(&params, 0, N_METRICS, 2 * PAGE_BYTES).unwrap();
+            for step_i in 0..3u32 {
+                b.step(&m, opt, &hypers, &thresholds, &mut res, &tokens, &labels, (9, step_i))
+                    .unwrap();
+                b.step(&m, opt, &hypers, &thresholds, &mut pag, &tokens, &labels, (9, step_i))
+                    .unwrap();
+            }
+            bits_eq(
+                &pag.params_host(&crate::runtime::Runtime::native()).unwrap(),
+                &b.read_state(&res, 0, params.len()).unwrap(),
+                &format!("{opt} params"),
+            );
+            bits_eq(
+                &b.read_state(&pag, params.len(), N_METRICS).unwrap(),
+                &b.read_state(&res, params.len(), N_METRICS).unwrap(),
+                &format!("{opt} metrics"),
+            );
+        }
+    }
+
+    #[test]
+    fn paged_step_rejects_slot_stateful_family() {
+        let b = backend();
+        let m = tiny(&b);
+        let params = b.init(&m, (3, 3)).unwrap();
+        let hypers = Hypers::default();
+        let thresholds = b.thresholds(&m, &params, hypers.sparsity).unwrap();
+        let mut pag =
+            TrainState::from_params_paged(&params, params.len(), N_METRICS, 1 << 16).unwrap();
+        let tokens = vec![1i32; m.batch * m.seq_len];
+        let labels = vec![0i32; m.batch];
+        let err = b
+            .step(&m, "zo_mom", &hypers, &thresholds, &mut pag, &tokens, &labels, (1, 1))
+            .unwrap_err();
+        assert!(err.to_string().contains("stateless"), "{err}");
     }
 }

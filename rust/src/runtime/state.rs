@@ -8,14 +8,27 @@
 //! is the K-element metric tail, which is the design that keeps
 //! coordinator overhead negligible (see `benches/coordinator_overhead.rs`).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
+use super::store::ParamStore;
 use super::Runtime;
 
 /// Where the packed state actually lives.
 pub enum StateBuf {
     /// Host memory (native backend): the packed vector itself.
     Host(Vec<f32>),
+    /// Paged tier (native backend, `--page-cache-bytes > 0`): the
+    /// parameter prefix lives in a file-backed [`ParamStore`] whose
+    /// resident footprint is the page-cache budget; the short
+    /// `[slots | metrics]` tail stays host-resident.
+    Paged {
+        /// paged parameter prefix (`P` floats)
+        store: Arc<ParamStore>,
+        /// host-resident `[slots | metrics]` tail (`S + K` floats)
+        tail: Vec<f32>,
+    },
     /// Device-resident PJRT buffer (pjrt backend).
     #[cfg(feature = "pjrt")]
     Pjrt(xla::PjRtBuffer),
@@ -46,6 +59,26 @@ impl TrainState {
         host.extend_from_slice(params);
         host.resize(params.len() + s + k, 0.0);
         rt.backend().new_state(host, params.len(), s, k)
+    }
+
+    /// Assemble a fresh *paged* state: the parameter prefix is tiered
+    /// out to a file-backed [`ParamStore`] bounded by `cache_bytes` of
+    /// resident pages; slots and metrics are zeroed host-side. Only the
+    /// native backend's stateless ZO family executes against this
+    /// representation (`runtime/native.rs::step_paged`).
+    pub fn from_params_paged(
+        params: &[f32],
+        s: usize,
+        k: usize,
+        cache_bytes: usize,
+    ) -> Result<TrainState> {
+        let store = Arc::new(ParamStore::file_backed(params, cache_bytes)?);
+        Ok(TrainState {
+            buf: StateBuf::Paged { store, tail: vec![0.0; s + k] },
+            p: params.len(),
+            s,
+            k,
+        })
     }
 
     /// Assemble with pre-filled slots (checkpoint restore, LoRA adapters).
@@ -93,19 +126,22 @@ impl TrainState {
         self.state_len() * 4
     }
 
-    /// Host view of the packed state (native backend only).
+    /// Host view of the packed state (native backend, resident only).
     pub(crate) fn host(&self) -> Result<&[f32]> {
         match &self.buf {
             StateBuf::Host(v) => Ok(v),
+            StateBuf::Paged { .. } => bail!("state is paged, no contiguous host buffer"),
             #[cfg(feature = "pjrt")]
             StateBuf::Pjrt(_) => bail!("state is device-resident, not host"),
         }
     }
 
-    /// Mutable host view of the packed state (native backend only).
+    /// Mutable host view of the packed state (native backend, resident
+    /// only).
     pub(crate) fn host_mut(&mut self) -> Result<&mut Vec<f32>> {
         match &mut self.buf {
             StateBuf::Host(v) => Ok(v),
+            StateBuf::Paged { .. } => bail!("state is paged, no contiguous host buffer"),
             #[cfg(feature = "pjrt")]
             StateBuf::Pjrt(_) => bail!("state is device-resident, not host"),
         }

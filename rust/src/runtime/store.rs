@@ -1,0 +1,600 @@
+//! Paged, tiered parameter storage — the §3.4 / ZO2-style offloading rung.
+//!
+//! The crate historically assumed "one resident `Vec<f32>` everywhere".
+//! [`ParamStore`] replaces that with fixed-size pages over two backings:
+//!
+//! * **Resident** — the whole vector in memory behind a mutex. Same cost
+//!   as before; exists so every layer can hold one store handle type and
+//!   so [`AdapterRegistry`](crate::serve::registry::AdapterRegistry) can
+//!   hand out cheap `Arc` snapshots instead of O(P) clones.
+//! * **File-backed** — parameters live in an unlinked scratch file and
+//!   only a bounded LRU page cache is resident. `mmap` is not reachable
+//!   from std without libc, so this is the documented std-only fallback:
+//!   positioned reads into the cache, dirty pages written back on
+//!   eviction. Because dirty cached pages *are* the copy-on-write
+//!   overlay, even a dense optimizer's working set stays at the cache
+//!   budget — a ZO step only keeps resident the pages its mask recently
+//!   touched.
+//!
+//! Bit-identity is the contract: reads return exactly the f32 bits that
+//! were written, runs are iterated in ascending coordinate order, and
+//! [`Overlay`] patches reproduce `SparseDelta::swap`-then-read bitwise.
+//! The paged trainer/server paths therefore produce byte-identical
+//! journals and bit-identical params/logits versus the resident paths
+//! (asserted in `tests/jobs.rs` and `tests/serve.rs`).
+//!
+//! Observability: page faults / evictions / live working-set bytes are
+//! tracked both per store and in module-wide atomics that
+//! [`sync_registry`] bridges into the metrics registry at every
+//! `/metrics` scrape (`store_page_faults_total`,
+//! `store_page_evictions_total`, `store_params_bytes`,
+//! `store_working_set_bytes`).
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::Result;
+
+/// f32 elements per page: 64 KiB pages, the mmap-friendly granularity
+/// the tiered layout is designed around.
+pub const PAGE_FLOATS: usize = 16_384;
+/// Bytes per full page.
+pub const PAGE_BYTES: usize = PAGE_FLOATS * 4;
+
+// Module-wide totals across every store in the process (scrape-time
+// gauges/counters; per-store copies exist for deterministic tests).
+static FAULTS: AtomicU64 = AtomicU64::new(0);
+static EVICTIONS: AtomicU64 = AtomicU64::new(0);
+static WORKING_SET: AtomicU64 = AtomicU64::new(0);
+static PARAMS_BYTES: AtomicU64 = AtomicU64::new(0);
+static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative page faults (file reads into cache) across all stores.
+pub fn page_faults_total() -> u64 {
+    FAULTS.load(Ordering::Relaxed)
+}
+
+/// Cumulative page evictions (incl. dirty write-backs) across all stores.
+pub fn page_evictions_total() -> u64 {
+    EVICTIONS.load(Ordering::Relaxed)
+}
+
+/// Live cached-page bytes across all file-backed stores.
+pub fn working_set_total() -> u64 {
+    WORKING_SET.load(Ordering::Relaxed)
+}
+
+/// Total parameter bytes of the largest file-backed store ever created
+/// in this process — the "one full resident copy" baseline that paged
+/// working-set peaks are compared against.
+pub fn params_bytes_gauge() -> u64 {
+    PARAMS_BYTES.load(Ordering::Relaxed)
+}
+
+/// Publish the store totals into the metrics registry. Called from the
+/// `/metrics` scrape path next to the other gauge syncs. Counters are
+/// monotone, so the sync adds the delta since the last publish.
+pub fn sync_registry() {
+    static PUB_FAULTS: AtomicU64 = AtomicU64::new(0);
+    static PUB_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+    let f = page_faults_total();
+    let prev = PUB_FAULTS.swap(f, Ordering::Relaxed);
+    crate::obs::counter("store_page_faults_total", &[]).add(f.saturating_sub(prev));
+    let e = page_evictions_total();
+    let prev = PUB_EVICTIONS.swap(e, Ordering::Relaxed);
+    crate::obs::counter("store_page_evictions_total", &[]).add(e.saturating_sub(prev));
+    crate::obs::gauge("store_working_set_bytes", &[]).set(working_set_total() as i64);
+    crate::obs::gauge("store_params_bytes", &[]).set(params_bytes_gauge() as i64);
+}
+
+struct Page {
+    data: Vec<f32>,
+    dirty: bool,
+    stamp: u64,
+}
+
+struct Cache {
+    map: HashMap<usize, Page>,
+    clock: u64,
+}
+
+enum Inner {
+    Resident(Mutex<Vec<f32>>),
+    File {
+        file: File,
+        cache: Mutex<Cache>,
+        cache_pages: usize,
+        faults: AtomicU64,
+        evictions: AtomicU64,
+    },
+}
+
+/// A parameter vector behind a paged storage tier. All methods take
+/// `&self`; the store is shared via `Arc` across trainer, scheduler and
+/// serve registry.
+pub struct ParamStore {
+    n: usize,
+    inner: Inner,
+}
+
+impl ParamStore {
+    /// Wrap a fully resident vector (the classic representation).
+    pub fn resident(params: Vec<f32>) -> ParamStore {
+        ParamStore { n: params.len(), inner: Inner::Resident(Mutex::new(params)) }
+    }
+
+    /// Tier `init` out to an unlinked scratch file, keeping at most
+    /// `cache_bytes` of pages resident (minimum one page).
+    pub fn file_backed(init: &[f32], cache_bytes: usize) -> Result<ParamStore> {
+        let mut k = 0usize;
+        Self::file_backed_streaming(init.len(), cache_bytes, || {
+            let v = init[k];
+            k += 1;
+            v
+        })
+    }
+
+    /// Build a file-backed store of `n` params by streaming `gen` page
+    /// by page — never materializing the full vector (the `mem-report`
+    /// paged arm depends on this: its in-scope peak is the cache budget
+    /// plus one page of write buffer, not 4·P).
+    pub fn file_backed_streaming(
+        n: usize,
+        cache_bytes: usize,
+        mut gen: impl FnMut() -> f32,
+    ) -> Result<ParamStore> {
+        let file = scratch_file()?;
+        let mut buf: Vec<u8> = Vec::with_capacity(PAGE_BYTES);
+        let mut written = 0usize;
+        while written < n {
+            let len = PAGE_FLOATS.min(n - written);
+            buf.clear();
+            for _ in 0..len {
+                buf.extend_from_slice(&gen().to_le_bytes());
+            }
+            (&file).write_all(&buf)?;
+            written += len;
+        }
+        (&file).flush()?;
+        PARAMS_BYTES.fetch_max((n * 4) as u64, Ordering::Relaxed);
+        let cache_pages = (cache_bytes / PAGE_BYTES).max(1);
+        Ok(ParamStore {
+            n,
+            inner: Inner::File {
+                file,
+                cache: Mutex::new(Cache { map: HashMap::new(), clock: 0 }),
+                cache_pages,
+                faults: AtomicU64::new(0),
+                evictions: AtomicU64::new(0),
+            },
+        })
+    }
+
+    /// Number of parameters.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when empty (clippy's `len`-without-`is_empty` convention).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// True for the file-backed (paged) tier.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.inner, Inner::File { .. })
+    }
+
+    /// Page faults charged to this store.
+    pub fn faults(&self) -> u64 {
+        match &self.inner {
+            Inner::Resident(_) => 0,
+            Inner::File { faults, .. } => faults.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Page evictions charged to this store.
+    pub fn evictions(&self) -> u64 {
+        match &self.inner {
+            Inner::Resident(_) => 0,
+            Inner::File { evictions, .. } => evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Bytes resident right now: the full vector for the resident tier,
+    /// the cached pages for the file tier.
+    pub fn working_set_bytes(&self) -> usize {
+        match &self.inner {
+            Inner::Resident(_) => self.n * 4,
+            Inner::File { cache, .. } => {
+                let c = cache.lock().unwrap();
+                c.map.values().map(|p| p.data.len() * 4).sum()
+            }
+        }
+    }
+
+    /// Copy `out.len()` params starting at `offset` into `out`.
+    pub fn read_into(&self, offset: usize, out: &mut [f32]) {
+        assert!(offset + out.len() <= self.n, "store read out of range");
+        match &self.inner {
+            Inner::Resident(v) => {
+                let v = v.lock().unwrap();
+                out.copy_from_slice(&v[offset..offset + out.len()]);
+            }
+            Inner::File { .. } => {
+                let mut done = 0usize;
+                while done < out.len() {
+                    let goff = offset + done;
+                    let pidx = goff / PAGE_FLOATS;
+                    let poff = goff % PAGE_FLOATS;
+                    let take = (PAGE_FLOATS - poff).min(out.len() - done);
+                    self.with_page(pidx, false, |data| {
+                        out[done..done + take].copy_from_slice(&data[poff..poff + take]);
+                    });
+                    done += take;
+                }
+            }
+        }
+    }
+
+    /// Materialize the whole vector (O(P) — used where a flat copy is
+    /// genuinely required, e.g. seeding a journal replay).
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n];
+        self.read_into(0, &mut out);
+        out
+    }
+
+    /// Run `f` over the full vector as one flat slice. Resident: borrows
+    /// in place (no copy, blocks while a serve checkout holds the base).
+    /// File-backed: materializes a temporary copy for the duration.
+    pub fn read_all_with<R>(&self, f: impl FnOnce(&[f32]) -> R) -> R {
+        match &self.inner {
+            Inner::Resident(v) => f(&v.lock().unwrap()),
+            Inner::File { .. } => f(&self.to_vec()),
+        }
+    }
+
+    /// Overwrite `src.len()` params starting at `offset`.
+    pub fn write_range(&self, offset: usize, src: &[f32]) {
+        assert!(offset + src.len() <= self.n, "store write out of range");
+        match &self.inner {
+            Inner::Resident(v) => {
+                let mut v = v.lock().unwrap();
+                v[offset..offset + src.len()].copy_from_slice(src);
+            }
+            Inner::File { .. } => {
+                let mut done = 0usize;
+                while done < src.len() {
+                    let goff = offset + done;
+                    let pidx = goff / PAGE_FLOATS;
+                    let poff = goff % PAGE_FLOATS;
+                    let take = (PAGE_FLOATS - poff).min(src.len() - done);
+                    self.with_page(pidx, true, |data| {
+                        data[poff..poff + take].copy_from_slice(&src[done..done + take]);
+                    });
+                    done += take;
+                }
+            }
+        }
+    }
+
+    /// Iterate `[offset, offset+len)` as read-only page runs in
+    /// ascending coordinate order: `f(run_global_offset, run_slice)`.
+    /// Per-coordinate arithmetic folded over these runs is bit-identical
+    /// to folding over one contiguous slice.
+    pub fn for_runs(&self, offset: usize, len: usize, mut f: impl FnMut(usize, &[f32])) {
+        assert!(offset + len <= self.n, "store run out of range");
+        match &self.inner {
+            Inner::Resident(v) => {
+                let v = v.lock().unwrap();
+                f(offset, &v[offset..offset + len]);
+            }
+            Inner::File { .. } => {
+                let mut done = 0usize;
+                while done < len {
+                    let goff = offset + done;
+                    let pidx = goff / PAGE_FLOATS;
+                    let poff = goff % PAGE_FLOATS;
+                    let take = (PAGE_FLOATS - poff).min(len - done);
+                    self.with_page(pidx, false, |data| f(goff, &data[poff..poff + take]));
+                    done += take;
+                }
+            }
+        }
+    }
+
+    /// Read-modify-write `[offset, offset+len)` as mutable page runs in
+    /// ascending coordinate order; touched file pages become dirty
+    /// overlay pages (written back only on eviction).
+    pub fn update_runs(&self, offset: usize, len: usize, mut f: impl FnMut(usize, &mut [f32])) {
+        assert!(offset + len <= self.n, "store update out of range");
+        match &self.inner {
+            Inner::Resident(v) => {
+                let mut v = v.lock().unwrap();
+                f(offset, &mut v[offset..offset + len]);
+            }
+            Inner::File { .. } => {
+                let mut done = 0usize;
+                while done < len {
+                    let goff = offset + done;
+                    let pidx = goff / PAGE_FLOATS;
+                    let poff = goff % PAGE_FLOATS;
+                    let take = (PAGE_FLOATS - poff).min(len - done);
+                    self.with_page(pidx, true, |data| f(goff, &mut data[poff..poff + take]));
+                    done += take;
+                }
+            }
+        }
+    }
+
+    /// Borrow the resident vector for in-place mutation (the serve
+    /// registry's copy-free `SparseDelta::swap` checkout). Panics on a
+    /// file-backed store — paged serving goes through [`Overlay`].
+    pub(crate) fn lock_resident(&self) -> MutexGuard<'_, Vec<f32>> {
+        match &self.inner {
+            Inner::Resident(v) => v.lock().unwrap(),
+            Inner::File { .. } => panic!("lock_resident on a paged store"),
+        }
+    }
+
+    /// Load page `pidx` into the cache (faulting + evicting as needed)
+    /// and run `f` on its data under the cache lock.
+    fn with_page<R>(&self, pidx: usize, dirty: bool, f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+        let Inner::File { file, cache, cache_pages, faults, evictions } = &self.inner else {
+            unreachable!("with_page on resident store")
+        };
+        let mut c = cache.lock().unwrap();
+        c.clock += 1;
+        let stamp = c.clock;
+        if !c.map.contains_key(&pidx) {
+            // evict LRU pages down to budget, writing dirty ones back
+            while c.map.len() >= *cache_pages {
+                let victim = *c
+                    .map
+                    .iter()
+                    .min_by_key(|(_, p)| p.stamp)
+                    .map(|(k, _)| k)
+                    .expect("non-empty cache");
+                let page = c.map.remove(&victim).expect("victim present");
+                if page.dirty {
+                    write_page(file, victim, &page.data);
+                }
+                WORKING_SET.fetch_sub((page.data.len() * 4) as u64, Ordering::Relaxed);
+                evictions.fetch_add(1, Ordering::Relaxed);
+                EVICTIONS.fetch_add(1, Ordering::Relaxed);
+            }
+            let plen = PAGE_FLOATS.min(self.n - pidx * PAGE_FLOATS);
+            let data = read_page(file, pidx, plen);
+            WORKING_SET.fetch_add((plen * 4) as u64, Ordering::Relaxed);
+            faults.fetch_add(1, Ordering::Relaxed);
+            FAULTS.fetch_add(1, Ordering::Relaxed);
+            c.map.insert(pidx, Page { data, dirty: false, stamp });
+        }
+        let page = c.map.get_mut(&pidx).expect("page just ensured");
+        page.stamp = stamp;
+        page.dirty |= dirty;
+        f(&mut page.data)
+    }
+}
+
+impl Drop for ParamStore {
+    fn drop(&mut self) {
+        if let Inner::File { cache, .. } = &self.inner {
+            if let Ok(c) = cache.lock() {
+                let live: u64 = c.map.values().map(|p| (p.data.len() * 4) as u64).sum();
+                WORKING_SET.fetch_sub(live, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// A sparse patch viewed over a base store: reads return the base page
+/// run with the adapter's `(idx, val)` coordinates substituted — exactly
+/// the bits `SparseDelta::swap` would have installed, without mutating
+/// the shared base or materializing a full tenant copy. `idx` must be
+/// ascending (the `SparseDelta` invariant).
+pub struct Overlay<'a> {
+    store: &'a ParamStore,
+    idx: &'a [u32],
+    val: &'a [f32],
+}
+
+impl<'a> Overlay<'a> {
+    /// View `(idx, val)` over `store`.
+    pub fn new(store: &'a ParamStore, idx: &'a [u32], val: &'a [f32]) -> Overlay<'a> {
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "overlay idx must be ascending");
+        Overlay { store, idx, val }
+    }
+
+    /// Total parameter count of the underlying store.
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// True when the underlying store is empty.
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// Read `[offset, offset+out.len())` with the patch applied.
+    pub fn read_run(&self, offset: usize, out: &mut [f32]) {
+        self.store.read_into(offset, out);
+        let end = offset + out.len();
+        let lo = self.idx.partition_point(|&i| (i as usize) < offset);
+        let hi = self.idx.partition_point(|&i| (i as usize) < end);
+        for k in lo..hi {
+            out[self.idx[k] as usize - offset] = self.val[k];
+        }
+    }
+}
+
+fn scratch_file() -> Result<File> {
+    let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir()
+        .join(format!("smezo-store-{}-{}.page", std::process::id(), seq));
+    let file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(&path)?;
+    // unlink immediately: the fd keeps the backing alive, nothing leaks
+    // on crash (best-effort — on platforms without POSIX unlink-while-
+    // open semantics the scratch file simply stays until process exit)
+    let _ = std::fs::remove_file(&path);
+    Ok(file)
+}
+
+fn write_page(file: &File, pidx: usize, data: &[f32]) {
+    let mut buf: Vec<u8> = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    (&mut &*file)
+        .seek(SeekFrom::Start((pidx * PAGE_BYTES) as u64))
+        .and_then(|_| (&mut &*file).write_all(&buf))
+        .expect("param store scratch write");
+}
+
+fn read_page(file: &File, pidx: usize, plen: usize) -> Vec<f32> {
+    let mut buf = vec![0u8; plen * 4];
+    (&mut &*file)
+        .seek(SeekFrom::Start((pidx * PAGE_BYTES) as u64))
+        .and_then(|_| (&mut &*file).read_exact(&mut buf))
+        .expect("param store scratch read");
+    buf.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i % 251) as f32 - 125.0) / 17.0).collect()
+    }
+
+    #[test]
+    fn file_backed_reads_match_resident_bitwise() {
+        let n = 2 * PAGE_FLOATS + 777; // partial last page
+        let v = probe(n);
+        let st = ParamStore::file_backed(&v, PAGE_BYTES).unwrap(); // 1-page cache
+        assert!(st.is_paged());
+        assert_eq!(st.len(), n);
+        assert_eq!(st.to_vec(), v);
+        // unaligned cross-page range
+        let mut out = vec![0.0f32; 5000];
+        st.read_into(PAGE_FLOATS - 100, &mut out);
+        assert_eq!(out, v[PAGE_FLOATS - 100..PAGE_FLOATS - 100 + 5000]);
+        // run iteration covers everything exactly once, ascending
+        let mut got = Vec::new();
+        st.for_runs(0, n, |off, run| {
+            assert_eq!(off, got.len());
+            got.extend_from_slice(run);
+        });
+        assert_eq!(got, v);
+    }
+
+    #[test]
+    fn dirty_pages_write_back_on_eviction_and_cache_stays_bounded() {
+        let n = 4 * PAGE_FLOATS;
+        let v = probe(n);
+        let st = ParamStore::file_backed(&v, 2 * PAGE_BYTES).unwrap();
+        // mutate every coordinate through a 2-page cache
+        st.update_runs(0, n, |off, run| {
+            for (t, x) in run.iter_mut().enumerate() {
+                *x += (off + t) as f32;
+            }
+        });
+        assert!(st.working_set_bytes() <= 2 * PAGE_BYTES, "ws {}", st.working_set_bytes());
+        assert!(st.faults() >= 4);
+        assert!(st.evictions() >= 2, "evictions {}", st.evictions());
+        // every write survived eviction round-trips through the file
+        let got = st.to_vec();
+        for (i, (g, orig)) in got.iter().zip(v.iter()).enumerate() {
+            assert_eq!(g.to_bits(), (orig + i as f32).to_bits(), "coord {i}");
+        }
+    }
+
+    #[test]
+    fn write_range_round_trips_across_page_boundary() {
+        let n = PAGE_FLOATS + 50;
+        let st = ParamStore::file_backed(&vec![0.0; n], PAGE_BYTES).unwrap();
+        let patch: Vec<f32> = (0..120).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let off = PAGE_FLOATS - 60;
+        st.write_range(off, &patch);
+        let mut out = vec![0.0f32; 120];
+        st.read_into(off, &mut out);
+        assert_eq!(out, patch);
+        assert_eq!(st.to_vec()[off - 1], 0.0);
+    }
+
+    #[test]
+    fn streaming_init_equals_eager_init() {
+        let n = PAGE_FLOATS + 123;
+        let v = probe(n);
+        let eager = ParamStore::file_backed(&v, PAGE_BYTES).unwrap();
+        let mut k = 0usize;
+        let streamed = ParamStore::file_backed_streaming(n, PAGE_BYTES, || {
+            let x = v[k];
+            k += 1;
+            x
+        })
+        .unwrap();
+        assert_eq!(eager.to_vec(), streamed.to_vec());
+    }
+
+    #[test]
+    fn resident_store_has_full_working_set_and_no_faults() {
+        let v = probe(1000);
+        let st = ParamStore::resident(v.clone());
+        assert!(!st.is_paged());
+        assert_eq!(st.working_set_bytes(), 4000);
+        assert_eq!(st.to_vec(), v);
+        assert_eq!((st.faults(), st.evictions()), (0, 0));
+        st.read_all_with(|s| assert_eq!(s, &v[..]));
+    }
+
+    #[test]
+    fn overlay_read_matches_swap_then_read_bitwise() {
+        let n = PAGE_FLOATS + 400;
+        let base = probe(n);
+        let idx: Vec<u32> =
+            vec![0, 3, (PAGE_FLOATS - 1) as u32, PAGE_FLOATS as u32, (n - 1) as u32];
+        let val: Vec<f32> = vec![9.25, -3.5, 0.015625, 1e-20, -0.0];
+        // reference: install into a flat copy
+        let mut swapped = base.clone();
+        for (i, v) in idx.iter().zip(val.iter()) {
+            swapped[*i as usize] = *v;
+        }
+        let st = ParamStore::file_backed(&base, PAGE_BYTES).unwrap();
+        let ov = Overlay::new(&st, &idx, &val);
+        assert_eq!(ov.len(), n);
+        for (off, len) in [(0usize, 10usize), (PAGE_FLOATS - 5, 10), (n - 3, 3), (0, n)] {
+            let mut out = vec![0.0f32; len];
+            ov.read_run(off, &mut out);
+            for (t, x) in out.iter().enumerate() {
+                assert_eq!(x.to_bits(), swapped[off + t].to_bits(), "off {off} t {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn module_totals_accumulate() {
+        let before = (page_faults_total(), page_evictions_total());
+        let n = 3 * PAGE_FLOATS;
+        let st = ParamStore::file_backed(&probe(n), PAGE_BYTES).unwrap();
+        let mut sink = 0.0f32;
+        st.for_runs(0, n, |_, run| sink += run[0]);
+        assert!(sink.is_finite());
+        assert!(page_faults_total() >= before.0 + 3);
+        assert!(page_evictions_total() >= before.1 + 2);
+        assert!(params_bytes_gauge() >= (n * 4) as u64);
+        drop(st);
+    }
+}

@@ -28,9 +28,10 @@ use crate::config::ServeConfig;
 use crate::data::batcher::pad_prompt;
 use crate::jobs::JobQueue;
 use crate::parallel::{WorkerHub, WorkerPool};
+use crate::runtime::store::ParamStore;
 use crate::runtime::{ModelInfo, Runtime};
 
-use super::registry::AdapterRegistry;
+use super::registry::{AdapterRegistry, TenantParams};
 
 /// One-shot response slot a submitter blocks on.
 pub struct Ticket {
@@ -257,12 +258,24 @@ pub struct ServeEngine {
 }
 
 impl ServeEngine {
-    /// Assemble an engine for `cfg.model` serving from `base`.
+    /// Assemble an engine for `cfg.model` serving from a resident `base`
+    /// vector.
     pub fn new(rt: Runtime, cfg: &ServeConfig, base: Vec<f32>) -> Result<ServeEngine> {
+        Self::with_store(rt, cfg, Arc::new(ParamStore::resident(base)))
+    }
+
+    /// Assemble an engine serving from a shared [`ParamStore`] handle —
+    /// paged when the store is file-backed (`--page-cache-bytes`).
+    /// Paged tenants are served as overlay views on the native row
+    /// path, so only the native backend supports a paged base.
+    pub fn with_store(rt: Runtime, cfg: &ServeConfig, base: Arc<ParamStore>) -> Result<ServeEngine> {
         cfg.validate()?;
         let model = rt.model(&cfg.model)?.clone();
+        if base.is_paged() && rt.backend().platform() != "native" {
+            bail!("paged serving (--page-cache-bytes) requires the native backend");
+        }
         let registry =
-            AdapterRegistry::new(model.clone(), base, cfg.max_adapters, cfg.adapter_budget)?;
+            AdapterRegistry::with_store(model.clone(), base, cfg.max_adapters, cfg.adapter_budget)?;
         Ok(ServeEngine {
             rt,
             model,
@@ -331,7 +344,7 @@ impl ServeEngine {
         let seq = self.model.seq_len;
         let n = rows.len();
         let co = self.registry.checkout(adapter)?;
-        let params: &[f32] = &co;
+        let tenant = co.tenant();
         let chunks = self.pool.parallelism().min(n).max(1);
         let per = (n + chunks - 1) / chunks;
         let parts = self.pool.scatter(chunks, |c| -> Result<Vec<f32>> {
@@ -344,7 +357,16 @@ impl ServeEngine {
             for row in &rows[lo..hi] {
                 tokens.extend(pad_prompt(row, seq));
             }
-            self.rt.backend().logits_rows(&self.model, params, &tokens)
+            // both arms feed the forward identical f32 values in
+            // identical order, so logits are bitwise equal across tiers
+            match &tenant {
+                TenantParams::Flat(params) => {
+                    self.rt.backend().logits_rows(&self.model, params, &tokens)
+                }
+                TenantParams::Paged(ov) => {
+                    crate::runtime::native::logits_rows_src(&self.model, ov, &tokens)
+                }
+            }
         });
         let mut out = Vec::with_capacity(n);
         for part in parts {

@@ -23,6 +23,13 @@
 //!   values in ascending coordinate order, with an FNV-1a payload
 //!   checksum. Exact by construction — the served logits are
 //!   bit-identical to evaluating the tuned parameters directly.
+//! * **save_paged** — the version-2 chunked layout (`SMZA2\n`): a
+//!   per-page offset table over explicit `(idx, val)` arrays, aligned
+//!   to the [`ParamStore`] page size so a paged server can locate one
+//!   page's patch without scanning the whole support. [`load`]
+//!   auto-detects either version by magic.
+//!
+//! [`load`]: SparseDelta::load
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -31,12 +38,15 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::memory;
 use crate::parallel::protocol;
+use crate::runtime::store::{ParamStore, PAGE_FLOATS};
 use crate::runtime::{ModelInfo, Runtime};
 use crate::util::bitset;
 use crate::util::json::{self, Json};
 
-/// On-disk magic for the adapter format (version 1).
+/// On-disk magic for the adapter format (version 1, bitset payload).
 const MAGIC: &[u8] = b"SMZA1\n";
+/// On-disk magic for the chunked adapter format (version 2, paged).
+const MAGIC2: &[u8] = b"SMZA2\n";
 
 /// A compact sparse adapter: the coordinates a fine-tuning run touched
 /// and their values. At rest `val[k]` holds the *tuned* value of
@@ -179,6 +189,33 @@ impl SparseDelta {
         }
     }
 
+    /// [`swap`](SparseDelta::swap) against a [`ParamStore`] instead of a
+    /// flat slice — the same copy-free involution, expressed as
+    /// page-granular read-modify-writes so a file-backed store only
+    /// faults the pages the support actually touches. Bit-identical to
+    /// `swap` on the equivalent flat vector.
+    pub fn swap_store(&mut self, store: &ParamStore) {
+        debug_assert_eq!(store.len(), self.n_params);
+        let mut k = 0usize;
+        while k < self.idx.len() {
+            let page = self.idx[k] as usize / PAGE_FLOATS;
+            let mut end = k + 1;
+            while end < self.idx.len() && self.idx[end] as usize / PAGE_FLOATS == page {
+                end += 1;
+            }
+            let lo = self.idx[k] as usize;
+            let hi = self.idx[end - 1] as usize;
+            let idxs = &self.idx[k..end];
+            let vals = &mut self.val[k..end];
+            store.update_runs(lo, hi - lo + 1, |goff, run| {
+                for (i, v) in idxs.iter().zip(vals.iter_mut()) {
+                    std::mem::swap(&mut run[*i as usize - goff], v);
+                }
+            });
+            k = end;
+        }
+    }
+
     /// Write the compact on-disk form (creating parent dirs); returns
     /// bytes written. Layout: magic, one JSON header line, the support
     /// bitset (LE u64 words), the values (LE f32, ascending coordinate
@@ -213,18 +250,69 @@ impl SparseDelta {
         Ok(MAGIC.len() + head.len() + 1 + payload.len())
     }
 
-    /// Read an adapter back, validating magic, model ABI, payload length,
-    /// support/nnz consistency and the checksum. Values round-trip
-    /// bit-for-bit.
+    /// Write the version-2 chunked form (creating parent dirs); returns
+    /// bytes written. Layout: magic `SMZA2\n`, one JSON header line,
+    /// then a chunk table of `(page u32, start u32)` LE pairs — one per
+    /// [`PAGE_FLOATS`]-sized page with support, `start` indexing into
+    /// the arrays that follow — then the `idx` u32s and `val` f32s (LE,
+    /// ascending coordinate order). Same at-rest-only caveat as
+    /// [`save`](SparseDelta::save).
+    pub fn save_paged(&self, path: &Path) -> Result<usize> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut chunks: Vec<(u32, u32)> = Vec::new();
+        for (k, &i) in self.idx.iter().enumerate() {
+            let page = (i as usize / PAGE_FLOATS) as u32;
+            if chunks.last().map(|c| c.0) != Some(page) {
+                chunks.push((page, k as u32));
+            }
+        }
+        let mut payload = Vec::with_capacity(chunks.len() * 8 + self.idx.len() * 8);
+        for (p, s) in &chunks {
+            payload.extend_from_slice(&p.to_le_bytes());
+            payload.extend_from_slice(&s.to_le_bytes());
+        }
+        for i in &self.idx {
+            payload.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in &self.val {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let header = Json::obj(vec![
+            ("kind", Json::Str("sparse-adapter".into())),
+            ("model", Json::Str(self.model.clone())),
+            ("n_params", Json::Num(self.n_params as f64)),
+            ("nnz", Json::Num(self.nnz() as f64)),
+            ("n_chunks", Json::Num(chunks.len() as f64)),
+            ("page_floats", Json::Num(PAGE_FLOATS as f64)),
+            ("checksum", Json::Str(format!("{:016x}", fnv64(&payload)))),
+            ("meta", self.meta.clone()),
+        ]);
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let head = header.to_string();
+        f.write_all(MAGIC2)?;
+        f.write_all(head.as_bytes())?;
+        f.write_all(b"\n")?;
+        f.write_all(&payload)?;
+        Ok(MAGIC2.len() + head.len() + 1 + payload.len())
+    }
+
+    /// Read an adapter back — either on-disk version, auto-detected by
+    /// magic — validating model ABI, payload length, support/nnz/chunk
+    /// consistency and the checksum before decoding anything. Values
+    /// round-trip bit-for-bit; a failed load is a clean error, never a
+    /// panic or a partially constructed delta.
     pub fn load(path: &Path, expect: &ModelInfo) -> Result<SparseDelta> {
         let mut bytes = Vec::new();
         std::fs::File::open(path)
             .with_context(|| format!("open adapter {path:?}"))?
             .read_to_end(&mut bytes)?;
-        if !bytes.starts_with(MAGIC) {
+        let v2 = bytes.starts_with(MAGIC2);
+        if !v2 && !bytes.starts_with(MAGIC) {
             bail!("{path:?} is not a sparse-adapter file (bad magic)");
         }
-        let rest = &bytes[MAGIC.len()..];
+        let rest = &bytes[MAGIC.len()..]; // both magics are 6 bytes
         let nl = rest
             .iter()
             .position(|&b| b == b'\n')
@@ -244,8 +332,19 @@ impl SparseDelta {
             );
         }
         let payload = &rest[nl + 1..];
-        let words = bitset::words(n_params);
-        let want = words * 8 + nnz * 4;
+        let (n_chunks, page_floats) = if v2 {
+            let c = header.req("n_chunks")?.as_usize()?;
+            let pf = header.req("page_floats")?.as_usize()?;
+            if pf == 0 {
+                bail!("{path:?}: page_floats must be positive");
+            }
+            (c, pf)
+        } else {
+            (0, 0)
+        };
+        // length before checksum, so truncation reports as truncation
+        let want =
+            if v2 { n_chunks * 8 + nnz * 8 } else { bitset::words(n_params) * 8 + nnz * 4 };
         if payload.len() != want {
             bail!("{path:?}: payload {} bytes, expected {want}", payload.len());
         }
@@ -254,18 +353,11 @@ impl SparseDelta {
         if got != checksum {
             bail!("{path:?}: checksum mismatch ({got} != {checksum})");
         }
-        let mut bits = Vec::with_capacity(words);
-        for chunk in payload[..words * 8].chunks_exact(8) {
-            bits.push(u64::from_le_bytes(chunk.try_into().unwrap()));
-        }
-        if bitset::count(&bits) != nnz {
-            bail!("{path:?}: support popcount {} != nnz {nnz}", bitset::count(&bits));
-        }
-        let idx = bitset::indices(&bits, n_params);
-        let mut val = Vec::with_capacity(nnz);
-        for chunk in payload[words * 8..].chunks_exact(4) {
-            val.push(f32::from_le_bytes(chunk.try_into().unwrap()));
-        }
+        let (idx, val) = if v2 {
+            decode_chunked(path, payload, n_params, nnz, n_chunks, page_floats)?
+        } else {
+            decode_bitset(path, payload, n_params, nnz)?
+        };
         Ok(SparseDelta {
             model,
             n_params,
@@ -274,6 +366,91 @@ impl SparseDelta {
             meta: header.get("meta").cloned().unwrap_or(Json::Null),
         })
     }
+}
+
+/// Decode the version-1 payload: support bitset words then values.
+fn decode_bitset(
+    path: &Path,
+    payload: &[u8],
+    n_params: usize,
+    nnz: usize,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    let words = bitset::words(n_params);
+    let mut bits = Vec::with_capacity(words);
+    for chunk in payload[..words * 8].chunks_exact(8) {
+        bits.push(u64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    if bitset::count(&bits) != nnz {
+        bail!("{path:?}: support popcount {} != nnz {nnz}", bitset::count(&bits));
+    }
+    let idx = bitset::indices(&bits, n_params);
+    let mut val = Vec::with_capacity(nnz);
+    for chunk in payload[words * 8..].chunks_exact(4) {
+        val.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok((idx, val))
+}
+
+/// Decode the version-2 payload: chunk table, coordinates, values —
+/// rejecting chunk pages past the parameter space, starts past `nnz`,
+/// non-ascending tables/coordinates, and page/chunk disagreement.
+fn decode_chunked(
+    path: &Path,
+    payload: &[u8],
+    n_params: usize,
+    nnz: usize,
+    n_chunks: usize,
+    page_floats: usize,
+) -> Result<(Vec<u32>, Vec<f32>)> {
+    if (nnz == 0) != (n_chunks == 0) {
+        bail!("{path:?}: {n_chunks} chunks for nnz {nnz}");
+    }
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for e in payload[..n_chunks * 8].chunks_exact(8) {
+        let page = u32::from_le_bytes(e[..4].try_into().unwrap()) as usize;
+        let start = u32::from_le_bytes(e[4..].try_into().unwrap()) as usize;
+        chunks.push((page, start));
+    }
+    for (c, &(page, start)) in chunks.iter().enumerate() {
+        if page * page_floats >= n_params {
+            bail!("{path:?}: chunk {c} page {page} is past the {n_params}-param space");
+        }
+        if start >= nnz {
+            bail!("{path:?}: chunk {c} start {start} is past nnz {nnz}");
+        }
+        if c == 0 && start != 0 {
+            bail!("{path:?}: first chunk must start at 0, got {start}");
+        }
+        if c > 0 && (page <= chunks[c - 1].0 || start <= chunks[c - 1].1) {
+            bail!("{path:?}: chunk table not strictly ascending at entry {c}");
+        }
+    }
+    let mut idx = Vec::with_capacity(nnz);
+    for e in payload[n_chunks * 8..n_chunks * 8 + nnz * 4].chunks_exact(4) {
+        idx.push(u32::from_le_bytes(e.try_into().unwrap()));
+    }
+    for (k, &i) in idx.iter().enumerate() {
+        if i as usize >= n_params {
+            bail!("{path:?}: coordinate {i} out of range {n_params}");
+        }
+        if k > 0 && idx[k - 1] >= i {
+            bail!("{path:?}: coordinates not strictly ascending at slot {k}");
+        }
+        // the chunk whose range covers slot k must name this page
+        let c = chunks.partition_point(|&(_, s)| s <= k) - 1;
+        if chunks[c].0 != i as usize / page_floats {
+            bail!(
+                "{path:?}: coordinate {i} (slot {k}) lies on page {}, chunk table says {}",
+                i as usize / page_floats,
+                chunks[c].0
+            );
+        }
+    }
+    let mut val = Vec::with_capacity(nnz);
+    for e in payload[n_chunks * 8 + nnz * 4..].chunks_exact(4) {
+        val.push(f32::from_le_bytes(e.try_into().unwrap()));
+    }
+    Ok((idx, val))
 }
 
 /// FNV-1a over a byte slice (the checkpoint/prng family's hash choice).
@@ -397,6 +574,42 @@ mod tests {
         bytes[last] ^= 0x40;
         std::fs::write(&path, &bytes).unwrap();
         assert!(SparseDelta::load(&path, &m).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn paged_save_load_round_trips_and_swap_store_is_involution() {
+        use crate::runtime::store::{ParamStore, PAGE_BYTES};
+        let n = PAGE_FLOATS + 300; // support spans two pages
+        let m = toy_model(n);
+        let base: Vec<f32> = (0..n).map(|i| ((i % 113) as f32) * 0.03 - 1.5).collect();
+        let mut tuned = base.clone();
+        for i in (0..n).step_by(977) {
+            tuned[i] = base[i] + 0.75;
+        }
+        let d = SparseDelta::extract(&m, &base, &tuned, None, Json::Null).unwrap();
+        let dir = std::env::temp_dir().join(format!("smz_delta2_{}", std::process::id()));
+        let path = dir.join("toy.adapter2");
+        let written = d.save_paged(&path).unwrap();
+        assert_eq!(written, std::fs::metadata(&path).unwrap().len() as usize);
+        let mut back = SparseDelta::load(&path, &m).unwrap();
+        assert_eq!(back.indices(), d.indices());
+        for (a, b) in back.values().iter().zip(d.values()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // swap_store: install / restore against a 1-page-cache store
+        let st = ParamStore::file_backed(&base, PAGE_BYTES).unwrap();
+        back.swap_store(&st);
+        let got = st.to_vec();
+        for i in 0..n {
+            assert_eq!(got[i].to_bits(), tuned[i].to_bits(), "install coord {i}");
+        }
+        back.swap_store(&st);
+        let got = st.to_vec();
+        for i in 0..n {
+            assert_eq!(got[i].to_bits(), base[i].to_bits(), "restore coord {i}");
+        }
+        assert_eq!(back.values()[0].to_bits(), d.values()[0].to_bits());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -342,8 +342,11 @@ fn route_label(path: &str) -> &'static str {
 fn sync_gauges(engine: &ServeEngine) {
     crate::obs::sync_build_info();
     crate::obs::mem::sync_registry();
+    crate::runtime::store::sync_registry();
     crate::obs::gauge("serve_registry_adapters", &[]).set(engine.registry.len() as i64);
     crate::obs::gauge("serve_registry_bytes", &[]).set(engine.registry.bytes() as i64);
+    crate::obs::gauge("serve_working_set_bytes", &[])
+        .set(engine.registry.working_set_bytes() as i64);
     crate::obs::gauge("serve_pending_requests", &[]).set(engine.batcher.pending() as i64);
     if let Some(handle) = engine.jobs() {
         crate::obs::gauge("jobs_active", &[]).set(handle.queue.active() as i64);

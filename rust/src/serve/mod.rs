@@ -12,10 +12,14 @@
 //!   ⊆ the run's mask union, certified by the PR-2 journal replay), and
 //!   `swap` installs or reverts an adapter in place, bit-for-bit, with
 //!   zero parameter copies.
-//! * [`registry`] — one resident base vector + N named adapters with
-//!   checkout/release guards, LRU eviction under a count cap and a byte
-//!   budget accounted via
+//! * [`registry`] — one base (resident vector *or* a paged
+//!   [`ParamStore`](crate::runtime::store::ParamStore) bounded by
+//!   `--page-cache-bytes`) + N named adapters with checkout/release
+//!   guards, LRU eviction under a count cap and a byte budget accounted
+//!   via
 //!   [`memory::sparse_adapter_bytes`](crate::coordinator::memory::sparse_adapter_bytes).
+//!   Paged checkouts are overlay views: the base is never mutated and
+//!   serving's resident footprint stays at the page-cache budget.
 //! * [`batching`] — the dynamic micro-batching queue (size- and
 //!   deadline-triggered flush, same-adapter grouping) and the
 //!   [`ServeEngine`](batching::ServeEngine) that shards fused forward
@@ -45,4 +49,4 @@ pub mod registry;
 pub use batching::{JobsHandle, MicroBatcher, ServeEngine};
 pub use delta::SparseDelta;
 pub use http::LoopbackClient;
-pub use registry::AdapterRegistry;
+pub use registry::{AdapterRegistry, TenantParams};

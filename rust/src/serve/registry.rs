@@ -18,18 +18,30 @@
 //! request admission until its micro-batch answers, so an orchestrator
 //! insert can never evict an adapter with classify traffic in flight.
 //!
-//! Lock order: `base` **before** `entries`, always. `checkout` takes
-//! base then entries (releasing entries before returning); the guard's
-//! drop takes entries while still holding base. No path takes entries
-//! and then waits on base, so the order is acyclic.
+//! The base itself lives behind a [`ParamStore`] handle, so the
+//! registry serves either tier. **Resident** keeps the historical
+//! behaviour: checkout locks the vector and swaps the adapter in place.
+//! **Paged** ([`AdapterRegistry::with_store`]) never mutates the shared
+//! base at all: checkout copies the adapter's O(nnz) patch out of the
+//! entry and hands back an [`Overlay`] view
+//! ([`TenantParams::Paged`]), so N tenants serve off one page cache
+//! whose resident footprint is the `--page-cache-bytes` budget — see
+//! [`AdapterRegistry::working_set_bytes`].
+//!
+//! Lock order: `base` **before** `entries`, always. Resident `checkout`
+//! takes base then entries (releasing entries before returning); the
+//! guard's drop takes entries while still holding base. The paged path
+//! only ever takes entries. No path takes entries and then waits on
+//! base, so the order is acyclic.
 
 use std::collections::BTreeMap;
 use std::ops::Deref;
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{bail, Result};
 
 use crate::coordinator::memory;
+use crate::runtime::store::{Overlay, ParamStore};
 use crate::runtime::ModelInfo;
 
 use super::delta::SparseDelta;
@@ -79,18 +91,32 @@ pub struct AdapterStat {
 /// The adapter registry. See the module docs for the locking contract.
 pub struct AdapterRegistry {
     model: ModelInfo,
-    base: Mutex<Vec<f32>>,
+    base: Arc<ParamStore>,
     entries: Mutex<Entries>,
     max_adapters: usize,
     byte_budget: usize,
 }
 
 impl AdapterRegistry {
-    /// A registry serving `model` from `base`, holding at most
-    /// `max_adapters` adapters within `byte_budget` accounted bytes.
+    /// A registry serving `model` from a resident `base` vector, holding
+    /// at most `max_adapters` adapters within `byte_budget` accounted
+    /// bytes (the historical constructor — wraps the vector in a
+    /// resident [`ParamStore`]).
     pub fn new(
         model: ModelInfo,
         base: Vec<f32>,
+        max_adapters: usize,
+        byte_budget: usize,
+    ) -> Result<AdapterRegistry> {
+        Self::with_store(model, Arc::new(ParamStore::resident(base)), max_adapters, byte_budget)
+    }
+
+    /// A registry serving `model` from an existing [`ParamStore`] handle
+    /// — resident or paged. With a paged store, checkouts are
+    /// [`Overlay`] views and the base is never mutated.
+    pub fn with_store(
+        model: ModelInfo,
+        base: Arc<ParamStore>,
         max_adapters: usize,
         byte_budget: usize,
     ) -> Result<AdapterRegistry> {
@@ -102,7 +128,7 @@ impl AdapterRegistry {
         }
         Ok(AdapterRegistry {
             model,
-            base: Mutex::new(base),
+            base,
             entries: Mutex::new(Entries { map: BTreeMap::new(), bytes: 0, clock: 0 }),
             max_adapters,
             byte_budget,
@@ -114,12 +140,29 @@ impl AdapterRegistry {
         &self.model
     }
 
-    /// A copy of the resident base parameters. Blocks until no adapter
-    /// is checked out, so the snapshot is always the *base*, never a
-    /// tenant's tuned vector — the invariant adapter materialization
-    /// relies on.
+    /// A copy of the base parameters (O(P) — prefer [`base_store`] where
+    /// a handle suffices). Resident: blocks until no adapter is checked
+    /// out, so the snapshot is always the *base*, never a tenant's tuned
+    /// vector — the invariant adapter materialization relies on. Paged:
+    /// checkouts never mutate the base, so no blocking is needed.
+    ///
+    /// [`base_store`]: AdapterRegistry::base_store
     pub fn base_snapshot(&self) -> Vec<f32> {
-        self.base.lock().unwrap().clone()
+        self.base.read_all_with(|s| s.to_vec())
+    }
+
+    /// A cheap shared handle to the base store (no parameter copy).
+    pub fn base_store(&self) -> Arc<ParamStore> {
+        self.base.clone()
+    }
+
+    /// Bytes resident right now on behalf of serving: the base store's
+    /// working set (full vector when resident, cached pages when paged)
+    /// plus every registered adapter's accounted bytes. The byte budget
+    /// itself stays adapter-bytes-only — this is observability, not a
+    /// cap.
+    pub fn working_set_bytes(&self) -> usize {
+        self.base.working_set_bytes() + self.bytes()
     }
 
     /// Register (or replace) `name`. Evicts least-recently-used
@@ -279,27 +322,63 @@ impl AdapterRegistry {
             .collect()
     }
 
-    /// Check `name` out: swap its values into the base and return a
-    /// guard dereferencing to the tuned parameter vector. Exclusive —
+    /// Check `name` out and return a guard over the tenant's parameters.
+    ///
+    /// Resident base: the adapter's values are swapped into the base in
+    /// place and the guard dereferences to the tuned vector; exclusive —
     /// a second checkout blocks until the guard drops (the micro-batcher
-    /// serializes same-server forward passes anyway). Dropping the guard
+    /// serializes same-server forward passes anyway); dropping the guard
     /// swaps the base back bit-for-bit.
+    ///
+    /// Paged base: the adapter's O(nnz) patch is copied out of the entry
+    /// and [`Checkout::tenant`] yields an [`Overlay`] view over the
+    /// shared store — the base is never mutated and no parameter-sized
+    /// allocation happens. The guard does *not* deref in this mode.
     pub fn checkout(&self, name: &str) -> Result<Checkout<'_>> {
-        // lock order: base first, then entries (see module docs)
-        let mut params = self.base.lock().unwrap();
+        if !self.base.is_paged() {
+            // lock order: base first, then entries (see module docs)
+            let mut params = self.base.lock_resident();
+            let mut entries = self.entries.lock().unwrap();
+            entries.clock += 1;
+            let stamp = entries.clock;
+            let Some(entry) = entries.map.get_mut(name) else {
+                bail!("no adapter '{name}' registered");
+            };
+            entry.delta.swap(&mut params);
+            entry.in_use = true;
+            entry.hits += 1;
+            entry.last_used = stamp;
+            drop(entries);
+            return Ok(Checkout {
+                registry: self,
+                name: name.to_string(),
+                inner: CheckoutInner::Resident(Some(params)),
+            });
+        }
         let mut entries = self.entries.lock().unwrap();
         entries.clock += 1;
         let stamp = entries.clock;
         let Some(entry) = entries.map.get_mut(name) else {
             bail!("no adapter '{name}' registered");
         };
-        entry.delta.swap(&mut params);
+        let idx = entry.delta.indices().to_vec();
+        let val = entry.delta.values().to_vec();
         entry.in_use = true;
         entry.hits += 1;
         entry.last_used = stamp;
         drop(entries);
-        Ok(Checkout { registry: self, name: name.to_string(), params: Some(params) })
+        Ok(Checkout { registry: self, name: name.to_string(), inner: CheckoutInner::Paged { idx, val } })
     }
+}
+
+/// How a [`Checkout`] exposes the tenant's parameters to the forward
+/// pass.
+pub enum TenantParams<'a> {
+    /// Resident base with the adapter swapped in: one flat tuned slice.
+    Flat(&'a [f32]),
+    /// Paged base: the adapter's sparse patch viewed over the shared
+    /// page-cached store (bit-identical reads to the flat case).
+    Paged(Overlay<'a>),
 }
 
 /// RAII pin: while alive, the named adapter cannot be evicted, replaced
@@ -325,32 +404,68 @@ impl Drop for PinGuard<'_> {
     }
 }
 
-/// RAII checkout guard: derefs to the tuned parameter slice; dropping it
-/// reverts the base (release). See [`AdapterRegistry::checkout`].
+/// RAII checkout guard. Over a resident base it derefs to the tuned
+/// parameter slice and dropping it reverts the base (release); over a
+/// paged base use [`Checkout::tenant`]. See
+/// [`AdapterRegistry::checkout`].
 pub struct Checkout<'a> {
     registry: &'a AdapterRegistry,
     name: String,
-    params: Option<MutexGuard<'a, Vec<f32>>>,
+    inner: CheckoutInner<'a>,
+}
+
+enum CheckoutInner<'a> {
+    Resident(Option<MutexGuard<'a, Vec<f32>>>),
+    Paged { idx: Vec<u32>, val: Vec<f32> },
+}
+
+impl Checkout<'_> {
+    /// The tenant's parameters in whichever representation this
+    /// checkout carries.
+    pub fn tenant(&self) -> TenantParams<'_> {
+        match &self.inner {
+            CheckoutInner::Resident(params) => {
+                TenantParams::Flat(params.as_ref().expect("checkout guard intact"))
+            }
+            CheckoutInner::Paged { idx, val } => {
+                TenantParams::Paged(Overlay::new(&self.registry.base, idx, val))
+            }
+        }
+    }
 }
 
 impl Deref for Checkout<'_> {
     type Target = [f32];
 
     fn deref(&self) -> &[f32] {
-        self.params.as_ref().expect("checkout guard intact")
+        match &self.inner {
+            CheckoutInner::Resident(params) => params.as_ref().expect("checkout guard intact"),
+            CheckoutInner::Paged { .. } => {
+                panic!("paged checkout has no flat view; use Checkout::tenant()")
+            }
+        }
     }
 }
 
 impl Drop for Checkout<'_> {
     fn drop(&mut self) {
-        // still holding the base lock — entries after base is the
-        // registry's one legal order
+        // resident: still holding the base lock — entries after base is
+        // the registry's one legal order. paged: entries only.
         let mut entries = self.registry.entries.lock().unwrap();
-        if let (Some(entry), Some(params)) =
-            (entries.map.get_mut(&self.name), self.params.as_mut())
-        {
-            entry.delta.swap(params);
-            entry.in_use = false;
+        match &mut self.inner {
+            CheckoutInner::Resident(params) => {
+                if let (Some(entry), Some(params)) =
+                    (entries.map.get_mut(&self.name), params.as_mut())
+                {
+                    entry.delta.swap(params);
+                    entry.in_use = false;
+                }
+            }
+            CheckoutInner::Paged { .. } => {
+                if let Some(entry) = entries.map.get_mut(&self.name) {
+                    entry.in_use = false;
+                }
+            }
         }
     }
 }
@@ -529,5 +644,34 @@ mod tests {
         reg.remove("a").unwrap();
         assert!(reg.is_empty());
         assert!(reg.remove("a").is_err());
+    }
+
+    #[test]
+    fn paged_checkout_overlays_without_touching_base() {
+        let m = toy_model(32);
+        let base: Vec<f32> = (0..32).map(|i| i as f32 * 0.25).collect();
+        let store = Arc::new(ParamStore::file_backed(&base, 1 << 16).unwrap());
+        let reg = AdapterRegistry::with_store(m.clone(), store, 4, 1 << 20).unwrap();
+        reg.insert("a", delta_touching(&m, &base, &[1, 5], 10.0)).unwrap();
+        let co = reg.checkout("a").unwrap();
+        let TenantParams::Paged(ov) = co.tenant() else { panic!("expected paged tenant") };
+        let mut out = vec![0.0f32; 32];
+        ov.read_run(0, &mut out);
+        assert_eq!(out[1].to_bits(), (base[1] + 10.0).to_bits());
+        assert_eq!(out[5].to_bits(), (base[5] + 10.0).to_bits());
+        assert_eq!(out[0].to_bits(), base[0].to_bits());
+        // the shared base is untouched even mid-checkout, and snapshot
+        // does not block on the outstanding paged checkout
+        assert_eq!(reg.base_snapshot(), base);
+        assert!(reg.stats()[0].in_use);
+        drop(co);
+        assert!(!reg.stats()[0].in_use);
+        assert!(reg.working_set_bytes() >= reg.bytes());
+        // resident registries still hand out flat tenants
+        let flat = AdapterRegistry::new(m.clone(), base.clone(), 4, 1 << 20).unwrap();
+        flat.insert("a", delta_touching(&m, &base, &[1, 5], 10.0)).unwrap();
+        let co = flat.checkout("a").unwrap();
+        assert!(matches!(co.tenant(), TenantParams::Flat(_)));
+        assert_eq!(co[1].to_bits(), (base[1] + 10.0).to_bits());
     }
 }

@@ -349,6 +349,207 @@ fn hub_refuses_protocol_version_mismatch() {
 }
 
 // ---------------------------------------------------------------------------
+// Adapter files (serve::delta): both on-disk versions — v1 bitset and the
+// v2 chunked/paged layout — must reject truncation at every byte (so every
+// section boundary), corrupted checksums, and forged chunk tables with a
+// clean error: never a panic, never a partially constructed delta.
+// ---------------------------------------------------------------------------
+
+use sparse_mezo::runtime::store::PAGE_FLOATS;
+use sparse_mezo::runtime::ModelInfo;
+use sparse_mezo::serve::SparseDelta;
+
+/// FNV-1a, the adapter checksum function, reimplemented here so forged
+/// payloads can carry a *valid* checksum and exercise the structural
+/// validation behind it.
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// A synthetic model big enough that the delta's support spans two
+/// 64 KiB pages (so the v2 chunk table has multiple entries).
+fn adapter_model() -> ModelInfo {
+    ModelInfo {
+        name: "toy_adapter".into(),
+        family: "llama".into(),
+        size: "tiny".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        d_ff: 64,
+        vocab: 16,
+        seq_len: 16,
+        batch: 4,
+        window: 0,
+        n_params: PAGE_FLOATS + 512,
+        n_lora_params: 0,
+        lora_rank: 0,
+        n_entries: 0,
+        n_hypers: 8,
+        n_metrics: 8,
+        layout: vec![],
+        lora_layout: vec![],
+        programs: std::collections::BTreeMap::new(),
+    }
+}
+
+fn sample_delta(model: &ModelInfo) -> SparseDelta {
+    let base: Vec<f32> = (0..model.n_params).map(|i| (i % 13) as f32 / 13.0).collect();
+    let mut tuned = base.clone();
+    let mut i = 3usize;
+    while i < model.n_params {
+        tuned[i] += 0.5;
+        i += 701;
+    }
+    SparseDelta::extract(model, &base, &tuned, None, Json::Null).unwrap()
+}
+
+/// Byte offset where the payload starts (after magic + header line).
+fn payload_start(bytes: &[u8]) -> usize {
+    6 + bytes[6..].iter().position(|&b| b == b'\n').unwrap() + 1
+}
+
+/// Patch the 16-hex checksum inside the header line to match `payload`,
+/// producing a structurally-hostile file that *passes* the checksum.
+fn reforge(bytes: &[u8], mutate: impl FnOnce(&mut Vec<u8>)) -> Vec<u8> {
+    let start = payload_start(bytes);
+    let mut payload = bytes[start..].to_vec();
+    mutate(&mut payload);
+    let mut header = String::from_utf8(bytes[..start].to_vec()).unwrap();
+    let k = header.find("\"checksum\"").unwrap();
+    let open = k + 10 + header[k + 10..].find('"').unwrap() + 1;
+    header.replace_range(open..open + 16, &format!("{:016x}", fnv64(&payload)));
+    let mut out = header.into_bytes();
+    out.extend_from_slice(&payload);
+    out
+}
+
+#[test]
+fn adapter_truncation_at_every_byte_fails_cleanly_both_versions() {
+    let dir = tmpdir("adapter_trunc");
+    let model = adapter_model();
+    let delta = sample_delta(&model);
+    for tag in ["v1", "v2"] {
+        let path = dir.join(format!("a_{tag}.smza"));
+        if tag == "v1" { delta.save(&path).unwrap() } else { delta.save_paged(&path).unwrap() };
+        let full = std::fs::read(&path).unwrap();
+        // the intact file round-trips...
+        let loaded = SparseDelta::load(&path, &model).unwrap();
+        assert_eq!(loaded.nnz(), delta.nnz(), "{tag}");
+        // ...and EVERY proper prefix (so every section boundary: mid-magic,
+        // mid-header, each payload section edge) is a clean error
+        let cut_path = dir.join(format!("cut_{tag}.smza"));
+        for cut in 0..full.len() {
+            std::fs::write(&cut_path, &full[..cut]).unwrap();
+            assert!(
+                SparseDelta::load(&cut_path, &model).is_err(),
+                "{tag}: {cut}-byte prefix of a {}-byte adapter loaded",
+                full.len()
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn adapter_corrupted_checksum_detected_both_versions() {
+    let dir = tmpdir("adapter_sum");
+    let model = adapter_model();
+    let delta = sample_delta(&model);
+    for tag in ["v1", "v2"] {
+        let path = dir.join(format!("b_{tag}.smza"));
+        if tag == "v1" { delta.save(&path).unwrap() } else { delta.save_paged(&path).unwrap() };
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40; // flip one payload bit
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SparseDelta::load(&path, &model).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{tag}: {err:#}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn adapter_forged_chunk_table_rejected_with_valid_checksum() {
+    let dir = tmpdir("adapter_forge");
+    let model = adapter_model();
+    let delta = sample_delta(&model);
+    let path = dir.join("c.smza");
+    delta.save_paged(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // sanity: the support spans two pages, so the chunk table has two
+    // entries at payload[0..8] and payload[8..16]
+    let pages = (PAGE_FLOATS + 512).div_ceil(PAGE_FLOATS) as u32;
+    assert_eq!(pages, 2);
+
+    let forged_path = dir.join("forged.smza");
+    let cases: Vec<(&str, Box<dyn FnOnce(&mut Vec<u8>)>, &str)> = vec![
+        (
+            "chunk page past the parameter space",
+            Box::new(|p: &mut Vec<u8>| p[8..12].copy_from_slice(&99u32.to_le_bytes())),
+            "past the",
+        ),
+        (
+            "chunk start past nnz",
+            Box::new(|p: &mut Vec<u8>| p[12..16].copy_from_slice(&1_000_000u32.to_le_bytes())),
+            "past nnz",
+        ),
+        (
+            "first chunk start nonzero",
+            Box::new(|p: &mut Vec<u8>| p[4..8].copy_from_slice(&1u32.to_le_bytes())),
+            "start at 0",
+        ),
+        (
+            "chunk table not ascending",
+            Box::new(|p: &mut Vec<u8>| p[8..12].copy_from_slice(&0u32.to_le_bytes())),
+            "ascending",
+        ),
+        (
+            "coordinate on a different page than its chunk claims",
+            Box::new(|p: &mut Vec<u8>| {
+                // pull chunk 1's start back from slot 24 to 20: slots
+                // 20..24 still hold page-0 coordinates, but the table
+                // now claims they live on page 1
+                p[12..16].copy_from_slice(&20u32.to_le_bytes());
+            }),
+            "lies on page",
+        ),
+    ];
+    for (what, mutate, needle) in cases {
+        std::fs::write(&forged_path, reforge(&bytes, mutate)).unwrap();
+        let err = SparseDelta::load(&forged_path, &model).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            !msg.contains("checksum"),
+            "{what}: failed on checksum, so the forge helper is broken: {msg}"
+        );
+        assert!(msg.contains(needle), "{what}: {msg}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn adapter_forged_bitset_popcount_rejected_with_valid_checksum() {
+    let dir = tmpdir("adapter_pop");
+    let model = adapter_model();
+    let delta = sample_delta(&model);
+    let path = dir.join("d.smza");
+    delta.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // set one extra support bit (word 0 bit 0 is free: support starts at 3)
+    std::fs::write(&path, reforge(&bytes, |p| p[0] |= 1)).unwrap();
+    let err = SparseDelta::load(&path, &model).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("popcount"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
 // Journal torn-tail: every reader and the appender must agree that an
 // unterminated final line is undurable — even when the fragment still parses
 // as valid JSON — so a crash mid-flush re-runs exactly the torn step.

@@ -322,6 +322,81 @@ fn scheduler_runs_priorities_restarts_and_publishes_exactly() {
 }
 
 #[test]
+fn paged_scheduler_kill_resume_bit_identical_to_resident_uninterrupted() {
+    // the paged-tiering contract on the jobs path: an engine whose base
+    // is a file-backed ParamStore (one cached page) schedules, kills,
+    // resumes and publishes a job to parameters bit-identical to an
+    // uninterrupted resident DpTrainer::run_on — and then serves the
+    // published adapter's logits bit-identical to offline eval
+    use sparse_mezo::runtime::store::ParamStore;
+    let m = model();
+    let base = base_params(&m);
+    let dir = tmp_dir("paged_sched");
+
+    let spec = JobSpec {
+        name: "pg".into(),
+        task: "rte".into(),
+        optimizer: "smezo".into(),
+        steps: 6,
+        workers: 2,
+        slice_steps: 2,
+        mask_refresh: 3, // a refresh boundary inside the killed window
+        seed: 11,
+        ..JobSpec::default()
+    };
+    let expected = uninterrupted(&spec, &base);
+
+    let scfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let paged_engine = |queue: &Arc<JobQueue>| {
+        let store = Arc::new(ParamStore::file_backed(&base, 1 << 16).unwrap());
+        Arc::new(
+            ServeEngine::with_store(Runtime::native(), &scfg, store)
+                .unwrap()
+                .with_jobs(Arc::clone(queue), 2),
+        )
+    };
+
+    let id = {
+        let queue = Arc::new(JobQueue::open(&dir).unwrap());
+        let id = queue.submit(spec.clone()).unwrap();
+        let scheduler = Scheduler::new(paged_engine(&queue), Arc::clone(&queue), 2);
+        // 2 of 6 steps, then kill: only the queue directory survives
+        assert!(scheduler.run_one_slice());
+        assert_eq!(queue.get(id).unwrap().steps_done, 2);
+        id
+    };
+
+    // restart paged and drain to completion
+    let queue = Arc::new(JobQueue::open(&dir).unwrap());
+    let engine = paged_engine(&queue);
+    let scheduler = Scheduler::new(Arc::clone(&engine), Arc::clone(&queue), 2);
+    scheduler.run_until_idle();
+    let job = queue.get(id).unwrap();
+    assert_eq!(job.state, JobState::Completed, "{job:?}");
+    assert!(job.published);
+
+    // the journal replays to the resident ground truth bit for bit
+    let cfg = spec.train_config("llama_tiny").unwrap();
+    let (header, records) = protocol::load_journal(&queue.journal_path(id)).unwrap();
+    let outcome = protocol::replay_full(rt(), &m, &cfg, &header, &base, &records).unwrap();
+    assert_bits_eq(&outcome.params, &expected, "paged sliced vs resident uninterrupted");
+
+    // and the paged engine serves the published adapter bit-identically
+    // to offline eval of those parameters — having genuinely paged
+    let prompts: Vec<Vec<i32>> = tasks::generate_sized("rte", 11, 8, 4, 4)
+        .unwrap()
+        .dev
+        .iter()
+        .map(|e| e.prompt.clone())
+        .collect();
+    let flat: Vec<f32> = engine.classify("pg", &prompts).unwrap().into_iter().flatten().collect();
+    assert_bits_eq(&flat, &offline_logits(&m, &expected, &prompts), "paged served vs offline");
+    let store = engine.registry.base_store();
+    assert!(store.is_paged() && store.faults() > 0, "the paged base never faulted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn http_end_to_end_submit_poll_classify_and_cancel() {
     // the acceptance path, entirely over the wire on ONE keep-alive
     // connection: submit two jobs at different priorities, cancel the

@@ -387,6 +387,59 @@ fn mem_scopes_attribute_real_allocations() {
     assert!(mem::phase_peak("report.smezo") >= peak_before_free, "peak regressed on free");
 }
 
+/// Paged-tiering regression, measured: the serve hot path (checkout +
+/// overlay classify) must never materialize a flat parameter copy. The
+/// checkout runs on the calling thread inside the engine's
+/// `serve.batch` mem scope, so a reintroduced O(P) base clone would
+/// push that phase's watermark past one full parameter vector; a
+/// healthy paged checkout costs O(nnz). Monotone upper bound with a 2x
+/// margin, so concurrent tests' small classify allocations can't flake
+/// it.
+#[test]
+fn paged_serve_hot_path_allocates_no_full_parameter_vector() {
+    use sparse_mezo::runtime::store::ParamStore;
+    sparse_mezo::obs::mem::enable();
+    let m = model();
+    let base = base_params(&m);
+    let param_bytes = (m.n_params * 4) as u64;
+    // a sparse tenant (nnz ~ P/97), so the O(nnz) checkout clone is
+    // far below the O(P) ceiling this test polices
+    let delta = {
+        let mut tuned = base.clone();
+        for (i, v) in tuned.iter_mut().enumerate() {
+            if i % 97 == 0 {
+                *v += 1e-3;
+            }
+        }
+        SparseDelta::extract(&m, &base, &tuned, None, Json::Null).unwrap()
+    };
+    let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
+    let resident = ServeEngine::new(Runtime::native(), &cfg, base.clone()).unwrap();
+    resident.registry.insert("t0", delta.clone()).unwrap();
+    // one cached page: far below the ~6-page parameter space
+    let store = Arc::new(ParamStore::file_backed(&base, 1 << 16).unwrap());
+    let paged = ServeEngine::with_store(Runtime::native(), &cfg, Arc::clone(&store)).unwrap();
+    paged.registry.insert("t0", delta).unwrap();
+
+    let rows: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4, 5], vec![6]];
+    let want = resident.classify("t0", &rows).unwrap();
+    let got = paged.classify("t0", &rows).unwrap();
+    assert_eq!(want.len(), got.len());
+    for (r, (a, b)) in want.iter().zip(&got).enumerate() {
+        for (c, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "logit [{r}][{c}] differs across tiers");
+        }
+    }
+    assert!(store.faults() > 0, "paged classify never faulted — the store did not page");
+    let peak = sparse_mezo::obs::mem::phase_peak("serve.batch");
+    assert!(peak > 0, "serve.batch scope measured nothing");
+    assert!(
+        peak < param_bytes / 2,
+        "serve.batch phase peak {peak} B approaches a full parameter copy \
+         ({param_bytes} B) — did the paged hot path regrow an O(P) clone?"
+    );
+}
+
 /// ISSUE acceptance, measured half: under the real tracking allocator
 /// the vanilla S-MeZO micro-arm's heap watermark exceeds the efficient
 /// implementation's by roughly the stored mask + perturbed copy. The

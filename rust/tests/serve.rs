@@ -313,6 +313,104 @@ fn end_to_end_two_adapter_serving_bit_identical_under_concurrency() {
 }
 
 #[test]
+fn paged_two_tenant_classify_bit_identical_to_resident_under_concurrency() {
+    // The tiering invariant end to end: a server whose base lives on the
+    // file-backed page store (cache budget = ONE page, far under the six
+    // pages llama_tiny spans) serves `/v1/classify` logits bitwise equal
+    // to a fully resident server, under concurrent traffic to two
+    // tenants — while actually faulting pages in and out.
+    use sparse_mezo::runtime::store::ParamStore;
+    let m = model();
+    let base = base_params(&m);
+    let dir = std::env::temp_dir().join(format!("smz_serve_paged_{}", std::process::id()));
+    let path_a = dir.join("rte.journal.jsonl");
+    let path_b = dir.join("boolq.journal.jsonl");
+    let live_a = train_with_journal("rte", 10, &path_a, base.clone());
+    let live_b = train_with_journal("boolq", 10, &path_b, base.clone());
+
+    let cfg =
+        ServeConfig { workers: 2, max_batch_rows: 8, flush_ms: 2, ..ServeConfig::default() };
+    let resident = ServeEngine::new(Runtime::native(), &cfg, base.clone()).unwrap();
+    let store = Arc::new(ParamStore::file_backed(&base, 1 << 16).unwrap());
+    let paged =
+        Arc::new(ServeEngine::with_store(Runtime::native(), &cfg, Arc::clone(&store)).unwrap());
+    for (name, path) in [("rte", &path_a), ("boolq", &path_b)] {
+        let delta = SparseDelta::from_journal(rt(), &m, &base, path, vec![]).unwrap();
+        resident.registry.insert(name, delta.clone()).unwrap();
+        paged.registry.insert(name, delta).unwrap();
+    }
+
+    let prompts_a: Vec<Vec<i32>> =
+        serve_dataset("rte").dev.iter().map(|e| e.prompt.clone()).collect();
+    let prompts_b: Vec<Vec<i32>> =
+        serve_dataset("boolq").dev.iter().map(|e| e.prompt.clone()).collect();
+    // the resident engine is the reference; it in turn must match the
+    // offline serial evaluation of the tuned parameters
+    let expected_a: Vec<f32> =
+        resident.classify("rte", &prompts_a).unwrap().into_iter().flatten().collect();
+    let expected_b: Vec<f32> =
+        resident.classify("boolq", &prompts_b).unwrap().into_iter().flatten().collect();
+    assert_bits_eq(&expected_a, &offline_logits(&m, &live_a.params, &prompts_a), "resident rte");
+    assert_bits_eq(
+        &expected_b,
+        &offline_logits(&m, &live_b.params, &prompts_b),
+        "resident boolq",
+    );
+
+    // concurrent paged traffic over HTTP against both tenants
+    let running = http::serve(Arc::clone(&paged), 0).unwrap();
+    let addr = running.addr;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (name, prompts, expected) in [
+            ("rte", &prompts_a, &expected_a),
+            ("boolq", &prompts_b, &expected_b),
+        ] {
+            handles.push(scope.spawn(move || {
+                let req = Json::obj(vec![
+                    ("adapter", Json::Str(name.into())),
+                    (
+                        "prompts",
+                        Json::Arr(
+                            prompts
+                                .iter()
+                                .map(|p| {
+                                    Json::Arr(p.iter().map(|&t| Json::Num(t as f64)).collect())
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]);
+                for round in 0..3 {
+                    let (code, body) =
+                        loopback_request(addr, "POST", "/v1/classify", Some(&req)).unwrap();
+                    assert_eq!(code, 200, "{name} round {round}: {body:?}");
+                    let got = logits_from_body(&body);
+                    assert_bits_eq(&got, expected, &format!("paged {name} round {round}"));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    running.shutdown();
+
+    // the store really tiered: pages faulted in and were evicted under
+    // the one-page budget, and the working set stayed bounded by it
+    assert!(store.is_paged());
+    assert!(store.faults() > 0, "paged base never faulted a page in");
+    assert!(store.evictions() > 0, "one-page cache never evicted");
+    assert!(
+        store.working_set_bytes() < 4 * m.n_params,
+        "working set {} B should stay under a full copy ({} B)",
+        store.working_set_bytes(),
+        4 * m.n_params
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn registry_eviction_over_http_keeps_serving_survivors() {
     let m = model();
     let base = base_params(&m);
